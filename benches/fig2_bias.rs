@@ -1,0 +1,141 @@
+//! Figure 2 — **final model quality vs sample size m per sampling
+//! distribution** (the paper's headline result).
+//!
+//! For each dataset, train every (sampler, m) cell to the epoch budget and
+//! report the final full-softmax eval loss, plus the full-softmax reference
+//! line. The paper's claim to reproduce: the quadratic kernel reaches
+//! full-softmax quality with one to two orders of magnitude fewer samples
+//! than uniform, and softmax sampling's quality is independent of m.
+//!
+//! `cargo bench --bench fig2_bias` (quick: tiny models) or
+//! `KSS_BENCH_SCALE=full cargo bench --bench fig2_bias` (paper scale:
+//! synthetic-PTB 10k + YouTube 10k/100k; hours).
+
+use kss::bench_harness::{engine_or_exit, scale, Scale};
+use kss::coordinator::experiment::{bias_table, run_grid, summaries_to_json, GridSpec};
+use kss::coordinator::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    kss::util::logging::init_from_env();
+    let engine = engine_or_exit();
+    // (dataset label, model, samplers, ms, base config)
+    let cells: Vec<(&str, GridSpec)> = match scale() {
+        Scale::Quick => vec![
+            (
+                "tiny recsys (128 classes)",
+                GridSpec {
+                    base: TrainConfig {
+                        model: "tiny".into(),
+                        epochs: 3,
+                        train_size: 1_280,
+                        valid_size: 320,
+                        eval_batches: 10,
+                        ..Default::default()
+                    },
+                    samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+                    ms: vec![4, 8],
+                    include_full: true,
+                },
+            ),
+            (
+                "tiny LM (120 classes)",
+                GridSpec {
+                    base: TrainConfig {
+                        model: "tiny-lm".into(),
+                        epochs: 2,
+                        train_size: 6_000,
+                        valid_size: 1_200,
+                        eval_batches: 8,
+                        ..Default::default()
+                    },
+                    samplers: vec![
+                        "uniform".into(),
+                        "unigram".into(),
+                        "bigram".into(),
+                        "quadratic".into(),
+                        "quartic".into(),
+                        "softmax".into(),
+                    ],
+                    ms: vec![4],
+                    include_full: true,
+                },
+            ),
+        ],
+        Scale::Full => {
+            let ms = vec![8, 16, 32, 64, 128, 256];
+            vec![
+                (
+                    "synthetic PTB (10k vocab)",
+                    GridSpec {
+                        base: TrainConfig {
+                            model: "ptb".into(),
+                            epochs: 2,
+                            train_size: 160_000,
+                            valid_size: 30_000,
+                            eval_batches: 10,
+                            ..Default::default()
+                        },
+                        samplers: vec![
+                            "uniform".into(),
+                            "unigram".into(),
+                            "bigram".into(),
+                            "quadratic".into(),
+                            "quartic".into(),
+                            "softmax".into(),
+                        ],
+                        ms: ms.clone(),
+                        include_full: true,
+                    },
+                ),
+                (
+                    "YouTube10k",
+                    GridSpec {
+                        base: TrainConfig {
+                            model: "yt10k".into(),
+                            epochs: 2,
+                            train_size: 50_000,
+                            valid_size: 6_400,
+                            eval_batches: 10,
+                            ..Default::default()
+                        },
+                        samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+                        ms: ms.clone(),
+                        include_full: true,
+                    },
+                ),
+                (
+                    "YouTube100k",
+                    GridSpec {
+                        base: TrainConfig {
+                            model: "yt100k".into(),
+                            epochs: 1,
+                            train_size: 50_000,
+                            valid_size: 6_400,
+                            eval_batches: 10,
+                            ..Default::default()
+                        },
+                        samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+                        ms: ms.clone(),
+                        include_full: true,
+                    },
+                ),
+            ]
+        }
+    };
+
+    for (label, grid) in cells {
+        println!("\n==== Figure 2 — {label} ====");
+        let out = std::path::PathBuf::from("runs/fig2");
+        let summaries = run_grid(&engine, &grid, Some(&out))?;
+        println!("\nfinal full-softmax eval loss vs m:");
+        print!("{}", bias_table(&summaries, &grid.ms));
+        // machine-readable dump for EXPERIMENTS.md
+        std::fs::create_dir_all("runs/fig2")?;
+        let fname = format!("runs/fig2/{}.json", grid.base.model);
+        std::fs::write(&fname, summaries_to_json(&summaries).to_string_pretty())?;
+        println!("(wrote {fname})");
+    }
+    println!("\nshape to check: quadratic reaches the full-softmax line at much");
+    println!("smaller m than uniform; softmax row is flat in m.");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Figure 5 (appendix) — **Penn-Tree-Bank, all six samplers × m sweep**:
+//! uniform, unigram, bigram, quadratic, quartic, softmax.
+//!
+//! The full set of samplers the paper evaluates on its NLP task, including
+//! the static language-model baselines (unigram/bigram) and the quartic
+//! kernel (flat sampling: D = O(d⁴) has no tractable feature map).
+//!
+//! `cargo bench --bench fig5_ptb_all` / `KSS_BENCH_SCALE=full ...`
+
+use kss::bench_harness::{engine_or_exit, print_series, scale, Scale};
+use kss::coordinator::experiment::{bias_table, run_grid, GridSpec};
+use kss::coordinator::TrainConfig;
+
+fn main() -> anyhow::Result<()> {
+    kss::util::logging::init_from_env();
+    let engine = engine_or_exit();
+    let (base, ms) = match scale() {
+        Scale::Quick => (
+            TrainConfig {
+                model: "tiny-lm".into(),
+                epochs: 2,
+                train_size: 6_000,
+                valid_size: 1_200,
+                eval_batches: 8,
+                eval_every: 100,
+                ..Default::default()
+            },
+            vec![4usize],
+        ),
+        Scale::Full => (
+            TrainConfig {
+                model: "ptb".into(),
+                epochs: 2,
+                train_size: 120_000,
+                valid_size: 24_000,
+                eval_batches: 8,
+                eval_every: 100,
+                ..Default::default()
+            },
+            vec![8usize, 32, 128],
+        ),
+    };
+
+    println!("==== Figure 5 — LM dataset, all samplers × m ====");
+    let grid = GridSpec {
+        base,
+        samplers: kss::sampler::LM_SAMPLERS.iter().map(|s| s.to_string()).collect(),
+        ms: ms.clone(),
+        include_full: true,
+    };
+    let summaries = run_grid(&engine, &grid, Some(std::path::Path::new("runs/fig5")))?;
+    for s in &summaries {
+        let pts: Vec<(f64, f64)> = s.curve.iter().map(|p| (p.epoch, p.loss)).collect();
+        print_series(&s.label(), &pts);
+    }
+    println!("\nfinal-loss table:");
+    print!("{}", bias_table(&summaries, &ms));
+    println!("\nshape to check (paper Fig. 5): softmax best ≈ full; quadratic and");
+    println!("quartic close; bigram < unigram < uniform among the static samplers.");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! §2.3 / Theorem 2.1 — **gradient bias of the sampled-softmax estimator**,
+//! measured by Monte Carlo against the exact full-softmax gradient.
+//!
+//! The quantitative backbone of Figure 2: softmax sampling is unbiased at
+//! every m (only MC noise remains); uniform/quadratic/quartic are biased
+//! with bias ↓ as m ↑; the quadratic kernel's bias sits well below
+//! uniform's at equal m.
+//!
+//! No artifacts needed. `cargo bench --bench gradient_bias`.
+
+use kss::bench_harness::{scale, Scale};
+use kss::sampler::{
+    FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+    SoftmaxSampler, UniformSampler,
+};
+use kss::util::rng::Rng;
+
+fn main() {
+    let (n, d, trials) = match scale() {
+        Scale::Quick => (200usize, 16usize, 20_000usize),
+        Scale::Full => (2_000, 32, 100_000),
+    };
+    let ms = [2usize, 8, 32, 128];
+    let mut rng = Rng::new(11);
+    let mut w = vec![0.0f32; n * d];
+    rng.fill_normal(&mut w, 0.5);
+    let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let logits: Vec<f32> = (0..n)
+        .map(|j| w[j * d..(j + 1) * d].iter().zip(&h).map(|(&a, &b)| a * b).sum())
+        .collect();
+    let positive = 3u32;
+    let p = softmax(&logits);
+    let mut full_grad = p.clone();
+    full_grad[positive as usize] -= 1.0;
+
+    let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, None);
+    tree.reset_embeddings(&w, n, d);
+    let samplers: Vec<Box<dyn Sampler>> = vec![
+        Box::new(UniformSampler::new(n)),
+        Box::new(FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 })),
+        Box::new(tree),
+        Box::new(FlatKernelSampler::new(KernelKind::Quartic)),
+        Box::new(SoftmaxSampler::new(n, false)),
+    ];
+
+    println!("gradient bias ‖E[ĝ] − (p − y)‖₁  ({n} classes, {trials} trials/cell)\n");
+    print!("{:<18}", "sampler");
+    for m in ms {
+        print!(" {:>9}", format!("m={m}"));
+    }
+    println!();
+    let mut table: Vec<(String, Vec<f64>)> = Vec::new();
+    for sampler in &samplers {
+        print!("{:<18}", sampler.name());
+        let mut row = Vec::new();
+        for m in ms {
+            let bias = measure_bias(sampler.as_ref(), &h, &logits, positive, &full_grad, m, trials, &mut rng);
+            print!(" {:>9.4}", bias);
+            row.push(bias);
+        }
+        println!();
+        table.push((sampler.name().to_string(), row));
+    }
+
+    // assertions on the paper's shape (soft: print PASS/FAIL, don't panic)
+    let find = |name: &str| table.iter().find(|(n, _)| n == name).map(|(_, r)| r.clone()).unwrap();
+    let uni = find("uniform");
+    let quad = find("quadratic");
+    let soft = find("softmax");
+    let check = |label: &str, ok: bool| println!("  [{}] {label}", if ok { "PASS" } else { "FAIL" });
+    println!("\nshape checks:");
+    check("softmax bias ≈ MC noise (< uniform at every m)", soft.iter().zip(&uni).all(|(s, u)| s < u));
+    check("quadratic < uniform at every m", quad.iter().zip(&uni).all(|(q, u)| q < u));
+    check("uniform bias decreases with m", uni.windows(2).all(|w| w[1] < w[0]));
+    check("quadratic bias decreases with m", quad.windows(2).all(|w| w[1] < w[0]));
+}
+
+fn softmax(o: &[f32]) -> Vec<f64> {
+    let mx = o.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let e: Vec<f64> = o.iter().map(|&x| (x as f64 - mx).exp()).collect();
+    let z: f64 = e.iter().sum();
+    e.into_iter().map(|x| x / z).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn measure_bias(
+    sampler: &dyn Sampler,
+    h: &[f32],
+    logits: &[f32],
+    positive: u32,
+    full_grad: &[f64],
+    m: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = logits.len();
+    let input = SampleInput { h: Some(h), logits: Some(logits), prev: None };
+    let mut acc = vec![0.0f64; n];
+    let mut out = Sample::default();
+    for _ in 0..trials {
+        sampler.sample(&input, m, rng, &mut out).expect("sample");
+        let mut adj = Vec::with_capacity(m + 1);
+        adj.push(logits[positive as usize] as f64);
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            adj.push(logits[c as usize] as f64 - (m as f64 * q).ln());
+        }
+        let mx = adj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = adj.iter().map(|&x| (x - mx).exp()).collect();
+        let z: f64 = e.iter().sum();
+        acc[positive as usize] += e[0] / z - 1.0;
+        for (k, &c) in out.classes.iter().enumerate() {
+            acc[c as usize] += e[k + 1] / z;
+        }
+    }
+    acc.iter().zip(full_grad).map(|(a, g)| (a / trials as f64 - g).abs()).sum()
+}

@@ -1,0 +1,77 @@
+//! §5.2 comparison — **hierarchical softmax vs full softmax vs sampled
+//! softmax** on a synthetic classification task.
+//!
+//! The paper's related work cites Chen et al. (2015): HSM is ~O(d√n)/step
+//! and fast, but converges >10% worse than full softmax; sampled softmax
+//! with a good q keeps full-softmax quality at sampled-softmax cost. This
+//! bench reproduces the cost and the quality ordering with self-contained
+//! rust heads (no XLA — isolates the output-layer method).
+//!
+//! `cargo bench --bench hsm_baseline`
+
+use kss::bench_harness::{print_table, scale, Bencher, Scale};
+use kss::hsm::{FullHead, HsmHead};
+use kss::util::rng::Rng;
+
+fn main() {
+    let (n, d, steps) = match scale() {
+        Scale::Quick => (400usize, 16usize, 6_000usize),
+        Scale::Full => (5_000, 32, 40_000),
+    };
+    let n_clusters = (n as f64).sqrt().round() as usize;
+    let mut rng = Rng::new(5);
+    let counts: Vec<u64> = (0..n as u64).map(|i| i + 1).collect();
+    let mut proto = vec![0.0f32; n * d];
+    rng.fill_normal(&mut proto, 0.7);
+    let gen = |rng: &mut Rng| -> (u32, Vec<f32>) {
+        let y = rng.below(n as u64) as u32;
+        let h: Vec<f32> = proto[y as usize * d..(y as usize + 1) * d]
+            .iter()
+            .map(|&x| x + rng.normal_f32(0.0, 0.5))
+            .collect();
+        (y, h)
+    };
+
+    // ---- per-step cost ------------------------------------------------------
+    let bencher = Bencher { warmup_iters: 5, min_iters: 50, max_iters: 3000, budget_s: 1.0 };
+    let mut hsm = HsmHead::new(&counts, d, n_clusters, &mut rng);
+    let mut full = FullHead::new(n, d, &mut rng);
+    let mut dh = vec![0.0f32; d];
+    let mut r = Rng::new(1);
+    let row_hsm = bencher.run(&format!("HSM step (n={n}, {n_clusters} clusters)"), || {
+        let (y, h) = gen(&mut r);
+        hsm.step(&h, y, 0.05, &mut dh);
+    });
+    let mut r = Rng::new(1);
+    let row_full = bencher.run(&format!("full softmax step (n={n})"), || {
+        let (y, h) = gen(&mut r);
+        full.step(&h, y, 0.05);
+    });
+    print_table("per-example train-step cost", &[row_hsm, row_full]);
+
+    // ---- converged quality --------------------------------------------------
+    let mut hsm = HsmHead::new(&counts, d, n_clusters, &mut rng);
+    let mut full = FullHead::new(n, d, &mut rng);
+    let mut r = Rng::new(2);
+    for _ in 0..steps {
+        let (y, h) = gen(&mut r);
+        hsm.step(&h, y, 0.08, &mut dh);
+        full.step(&h, y, 0.08);
+    }
+    let evals = 1_000;
+    let (mut l_hsm, mut l_full) = (0.0, 0.0);
+    for _ in 0..evals {
+        let (y, h) = gen(&mut r);
+        l_hsm += -(hsm.prob(&h, y).max(1e-30)).ln();
+        l_full += full.loss(&h, y);
+    }
+    l_hsm /= evals as f64;
+    l_full /= evals as f64;
+    println!("\nconverged CE after {steps} steps:");
+    println!("  HSM          {l_hsm:.4}  (ppl {:.1})", l_hsm.exp());
+    println!("  full softmax {l_full:.4}  (ppl {:.1})", l_full.exp());
+    let gap = (l_hsm.exp() / l_full.exp() - 1.0) * 100.0;
+    println!("  perplexity gap: {gap:.1}% (Chen et al. 2015 report >10% on PTB)");
+    println!("\nshape: HSM is much cheaper per step but converges worse — the gap");
+    println!("sampled softmax with a good q avoids (figs. 2/4 benches).");
+}

@@ -1,0 +1,130 @@
+//! §3.2 cost claims — **O(D log n) sampling and updates**.
+//!
+//! Benchmarks the kernel tree against the exact alternatives across catalog
+//! sizes:
+//!
+//! * draw throughput: tree (O(D log n)) vs flat kernel (O(n d)) vs exact
+//!   softmax CDF (O(n)) — the crossover demonstrates why adaptive sampling
+//!   is affordable at all;
+//! * per-class update cost (root-to-leaf z maintenance, Fig. 1(b));
+//! * scaling in n at fixed d: tree time should grow ~log n while flat grows
+//!   linearly.
+//!
+//! No artifacts needed (pure L3). `cargo bench --bench sampling_throughput`.
+
+use kss::bench_harness::{print_table, scale, Bencher, BenchRow, Scale};
+use kss::sampler::{
+    FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+    SoftmaxSampler,
+};
+use kss::util::rng::Rng;
+
+fn main() {
+    let d = 64usize;
+    let m = 32usize;
+    let ns: Vec<usize> = match scale() {
+        Scale::Quick => vec![1_000, 10_000, 100_000],
+        Scale::Full => vec![1_000, 10_000, 100_000, 300_000],
+    };
+    let bencher = Bencher { warmup_iters: 2, min_iters: 5, max_iters: 200, budget_s: 1.5 };
+
+    let mut draw_rows: Vec<BenchRow> = Vec::new();
+    let mut update_rows: Vec<BenchRow> = Vec::new();
+
+    for &n in &ns {
+        let mut rng = Rng::new(4 + n as u64);
+        let mut w = vec![0.0f32; n * d];
+        rng.fill_normal(&mut w, 0.3);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // the flat/exact samplers need all n logits per example — that O(n·d)
+        // is the adaptivity cost the kernel tree exists to avoid, so it is
+        // charged inside their benched closures below.
+        let mut logits = vec![0.0f32; n];
+        let compute_logits = |logits: &mut [f32]| {
+            for (j, slot) in logits.iter_mut().enumerate() {
+                *slot = w[j * d..(j + 1) * d].iter().zip(&h).map(|(&a, &b)| a * b).sum();
+            }
+        };
+        compute_logits(&mut logits);
+
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, None);
+        tree.reset_embeddings(&w, n, d);
+        let flat = FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 });
+        let exact = SoftmaxSampler::new(n, false);
+
+        let mut out = Sample::default();
+        let input_h = SampleInput { h: Some(&h), ..Default::default() };
+        let input_l = SampleInput { logits: Some(&logits), ..Default::default() };
+
+        let mut r = Rng::new(1);
+        draw_rows.push(bencher.run_with_items(
+            &format!("tree    n={n:>6} (m={m} draws/example)"),
+            Some(m as f64),
+            || tree.sample(&input_h, m, &mut r, &mut out).unwrap(),
+        ));
+        let mut r = Rng::new(1);
+        let mut scratch = vec![0.0f32; n];
+        draw_rows.push(bencher.run_with_items(
+            &format!("flat    n={n:>6} (incl. O(nd) logits)"),
+            Some(m as f64),
+            || {
+                compute_logits(&mut scratch);
+                let inp = SampleInput { logits: Some(&scratch), ..Default::default() };
+                flat.sample(&inp, m, &mut r, &mut out).unwrap()
+            },
+        ));
+        let mut r = Rng::new(1);
+        let mut scratch = vec![0.0f32; n];
+        draw_rows.push(bencher.run_with_items(
+            &format!("softmax n={n:>6} (incl. O(nd) logits)"),
+            Some(m as f64),
+            || {
+                compute_logits(&mut scratch);
+                let inp = SampleInput { logits: Some(&scratch), ..Default::default() };
+                exact.sample(&inp, m, &mut r, &mut out).unwrap()
+            },
+        ));
+
+        // update cost: one embedding change -> root-to-leaf z refresh
+        let mut r = Rng::new(2);
+        let mut w_new = vec![0.0f32; d];
+        update_rows.push(bencher.run_with_items(
+            &format!("tree update n={n:>6} (1 class)"),
+            Some(1.0),
+            || {
+                r.fill_normal(&mut w_new, 0.3);
+                let class = r.range(0, n);
+                tree.update(class, &w_new);
+            },
+        ));
+        println!(
+            "tree n={n}: {} nodes, depth {}, leaf_size {} (D = {})",
+            tree.node_count(),
+            tree.depth(),
+            tree.leaf_size(),
+            d * d + 1
+        );
+    }
+
+    print_table("per-example draw cost (m draws incl. φ(h) + memoized node dots)", &draw_rows);
+    print_table("per-class update cost (Fig. 1(b) path refresh)", &update_rows);
+
+    // scaling check: tree grows ~log n (plus touched leaves), exact grows
+    // linearly; the crossover sits near n ≈ D·log n — the >= 100k-class
+    // regime the paper's YouTube100k experiment lives in.
+    let k = ns.len();
+    let t_first = draw_rows[0].mean_s;
+    let t_last = draw_rows[3 * (k - 1)].mean_s;
+    let f_first = draw_rows[1].mean_s;
+    let f_last = draw_rows[3 * (k - 1) + 1].mean_s;
+    let factor = (ns[k - 1] / ns[0]) as f64;
+    println!(
+        "\nscaling {}k -> {}k classes: tree ×{:.2}, flat+logits ×{:.2} (linear would be ×{:.0})",
+        ns[0] / 1000,
+        ns[k - 1] / 1000,
+        t_last / t_first,
+        f_last / f_first,
+        factor
+    );
+}

@@ -1,0 +1,166 @@
+"""AOT compile path: lower every entry point to HLO text + a manifest.
+
+This is the only place Python touches the system; it runs once at build time
+(`make artifacts`). For each model configuration in ``configs.py`` it lowers
+
+    encode, score_all, eval_full, train_full, train_sampled[m ...]
+
+to ``artifacts/<config>_<op>[ _m<m> ].hlo.txt`` and records everything the
+rust runtime needs — parameter order/shape/init, input and output specs per
+artifact — in ``artifacts/manifest.json``.
+
+HLO *text* is the interchange format on purpose: jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+runtime's PJRT build) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts --quick    # tiny configs
+    python -m compile.aot --configs ptb,yt10k --m 8,32
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from . import configs as C
+from . import model as M
+
+OPS_SHARED = ["encode", "score_all", "eval_full", "train_full"]
+
+
+def artifact_filename(cfg_name, op, m=None):
+    suffix = f"_m{m}" if m is not None else ""
+    return f"{cfg_name}_{op}{suffix}.hlo.txt"
+
+
+def lower_one(cfg, op, m, out_dir, force=False):
+    """Lower one entry point; returns (filename, seconds, skipped)."""
+    fname = artifact_filename(cfg.name, op, m)
+    path = os.path.join(out_dir, fname)
+    if not force and os.path.exists(path) and os.path.getsize(path) > 0:
+        return fname, 0.0, True
+    t0 = time.time()
+    text = M.lower_to_hlo_text(cfg, op, m)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return fname, time.time() - t0, False
+
+
+def manifest_entry(cfg, build_ms, files):
+    """Manifest record for one model config."""
+    return {
+        "model": cfg.model,
+        "n_classes": cfg.n_classes,
+        "d": cfg.d,
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "n_user_features": cfg.n_user_features,
+        "n_prev": cfg.n_prev,
+        "hidden": cfg.hidden,
+        "n_examples": cfg.n_examples,
+        "abs_logits": cfg.abs_logits,
+        "alpha": cfg.alpha,
+        "params": [
+            {"name": name, "shape": list(shape), "init": init}
+            for name, shape, init in cfg.param_specs()
+        ],
+        "ops": {
+            op: {
+                "file": files[(op, None)],
+                "inputs": [
+                    {"name": n, "dtype": t, "shape": list(s)}
+                    for n, t, s in cfg.data_specs(op)
+                ],
+                "outputs": [
+                    {"name": n, "dtype": t, "shape": list(s)}
+                    for n, t, s in cfg.output_specs(op)
+                ],
+            }
+            for op in OPS_SHARED
+        },
+        "train_sampled": {
+            str(m): {
+                "file": files[("train_sampled", m)],
+                "inputs": [
+                    {"name": n, "dtype": t, "shape": list(s)}
+                    for n, t, s in cfg.data_specs("train_sampled", m)
+                ],
+                "outputs": [
+                    {"name": n, "dtype": t, "shape": list(s)}
+                    for n, t, s in cfg.output_specs("train_sampled", m)
+                ],
+            }
+            for m in build_ms
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default=None, help="comma list of config names (default: build table)")
+    ap.add_argument("--m", default=None, help="comma list of sample sizes m")
+    ap.add_argument("--quick", action="store_true", help="tiny configs only (tests/CI)")
+    ap.add_argument("--force", action="store_true", help="re-lower even if the file exists")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    build = dict(C.QUICK_BUILD if args.quick else C.DEFAULT_BUILD)
+    if args.configs:
+        names = [c.strip() for c in args.configs.split(",") if c.strip()]
+        for n in names:
+            if n not in C.CONFIGS:
+                sys.exit(f"unknown config '{n}' (known: {', '.join(C.CONFIGS)})")
+        ms = [int(x) for x in args.m.split(",")] if args.m else C.M_SWEEP
+        build = {n: ms for n in names}
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    # Merge with an existing manifest so partial builds extend it.
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("version") == 1:
+                manifest["models"].update(old.get("models", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    total_t = 0.0
+    for cfg_name, ms in build.items():
+        cfg = C.CONFIGS[cfg_name]
+        files = {}
+        for op in OPS_SHARED:
+            fname, dt, skipped = lower_one(cfg, op, None, out_dir, args.force)
+            files[(op, None)] = fname
+            total_t += dt
+            print(f"  {fname:<44} {'cached' if skipped else f'{dt:6.1f}s'}", flush=True)
+        for m in ms:
+            fname, dt, skipped = lower_one(cfg, "train_sampled", m, out_dir, args.force)
+            files[("train_sampled", m)] = fname
+            total_t += dt
+            print(f"  {fname:<44} {'cached' if skipped else f'{dt:6.1f}s'}", flush=True)
+        # Merge m-entries if the config was already in the manifest.
+        entry = manifest_entry(cfg, ms, files)
+        prev = manifest["models"].get(cfg_name)
+        if prev is not None:
+            merged = dict(prev.get("train_sampled", {}))
+            merged.update(entry["train_sampled"])
+            entry["train_sampled"] = merged
+        manifest["models"][cfg_name] = entry
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(manifest['models'])} models, lowering took {total_t:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

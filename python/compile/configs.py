@@ -1,0 +1,65 @@
+"""The model/experiment configurations that `aot.py` lowers to artifacts.
+
+Scaling notes (DESIGN.md §3): the paper's datasets are PTB (vocab 10k,
+d=200 after their own downscaling) and YouTube10k/100k. We keep the class
+counts — they are what the sampling problem is about — and shrink d and the
+corpus sizes to CPU-PJRT scale. ``tiny*`` configs exist for tests and CI.
+
+``M_SWEEP`` replaces the paper's m ∈ {10, 20, 40, ...} with powers of two.
+Each m is a separate HLO artifact (static shapes).
+"""
+
+from .model import ModelConfig
+
+# Sample sizes m for the sweeps (one train_sampled artifact each).
+M_SWEEP = [8, 16, 32, 64, 128, 256]
+
+# Default sample size used by quickstart/examples.
+M_DEFAULT = 32
+
+
+def _lm(name, n, d, batch, seq_len, abs_logits):
+    return ModelConfig(name, "lm", n_classes=n, d=d, batch=batch,
+                       seq_len=seq_len, abs_logits=abs_logits)
+
+
+def _rs(name, n, d, batch, abs_logits):
+    return ModelConfig(name, "recsys", n_classes=n, d=d, batch=batch,
+                       n_user_features=8, hidden=128, abs_logits=abs_logits)
+
+
+CONFIGS = {
+    # --- experiment-scale configs -----------------------------------------
+    # synthetic Penn-Tree-Bank stand-in: vocab 10k (paper: 10k), d scaled
+    "ptb": _lm("ptb", n=10_000, d=64, batch=16, seq_len=25, abs_logits=False),
+    "ptb-abs": _lm("ptb-abs", n=10_000, d=64, batch=16, seq_len=25, abs_logits=True),
+    # YouTube-style retrieval, 10k and 100k catalogs
+    "yt10k": _rs("yt10k", n=10_000, d=64, batch=64, abs_logits=False),
+    "yt10k-abs": _rs("yt10k-abs", n=10_000, d=64, batch=64, abs_logits=True),
+    "yt100k": _rs("yt100k", n=100_000, d=64, batch=64, abs_logits=False),
+    "yt100k-abs": _rs("yt100k-abs", n=100_000, d=64, batch=64, abs_logits=True),
+    # --- test-scale configs (fast lowering; used by pytest + cargo tests) --
+    "tiny": _rs("tiny", n=128, d=16, batch=8, abs_logits=False),
+    "tiny-abs": _rs("tiny-abs", n=128, d=16, batch=8, abs_logits=True),
+    "tiny-lm": _lm("tiny-lm", n=120, d=16, batch=4, seq_len=6, abs_logits=False),
+}
+
+# Which configs the default `make artifacts` builds, and with which m values.
+DEFAULT_BUILD = {
+    "tiny": [4, 8],
+    "tiny-abs": [4],
+    "tiny-lm": [4],
+    "ptb": M_SWEEP,
+    "ptb-abs": M_SWEEP,
+    "yt10k": M_SWEEP,
+    "yt10k-abs": M_SWEEP,
+    "yt100k": M_SWEEP,
+    "yt100k-abs": M_SWEEP,
+}
+
+# Quick subset for CI / smoke runs (`python -m compile.aot --quick`).
+QUICK_BUILD = {
+    "tiny": [4, 8],
+    "tiny-abs": [4],
+    "tiny-lm": [4],
+}

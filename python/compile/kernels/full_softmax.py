@@ -1,0 +1,210 @@
+"""Pallas kernel: streaming full-softmax cross entropy over all n classes.
+
+The paper's baseline (and its evaluation metric) is the *full* softmax loss,
+which needs the partition function over every class. For large n the logits
+matrix (N, n) should never hit HBM; this kernel streams the class-embedding
+table through VMEM in chunks with an online (flash-style) logsumexp:
+
+    running (m, z):  m' = max(m, max_c o_c),  z' = z·e^{m-m'} + Σ_c e^{o_c-m'}
+
+The backward pass makes a second streaming sweep computing p = softmax(o)
+chunk-by-chunk, accumulating dh on the fly and writing each chunk's dW tile
+in place — the (N, n) probability matrix is never materialized either.
+
+TPU adaptation (DESIGN.md §6): the class table is tiled (chunk_c, d); one
+grid step holds a (bn, d) query block plus one class chunk in VMEM and runs
+(bn,d)×(d,chunk_c) MXU contractions. On this CPU testbed the kernel runs
+under interpret=True; pytest pins its numerics (values and grads) to ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sampled_softmax import pick_block
+
+
+def pick_chunk(n: int, target: int = 512) -> int:
+    """Class-chunk size: largest divisor of n <= target."""
+    return pick_block(n, target)
+
+
+# ---------------------------------------------------------------------------
+# forward: online logsumexp over class chunks
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(h_ref, w_ref, wpos_ref, loss_ref, lse_ref, *, abs_logits, chunk_c):
+    h = h_ref[...]  # (bn, d)
+    bn = h.shape[0]
+    n_classes = w_ref.shape[0]
+    steps = n_classes // chunk_c
+
+    def body(c, carry):
+        m, z = carry
+        wblk = pl.load(w_ref, (pl.dslice(c * chunk_c, chunk_c), slice(None)))  # (cc, d)
+        o = jax.lax.dot_general(
+            h, wblk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bn, cc)
+        if abs_logits:
+            o = jnp.abs(o)
+        m_new = jnp.maximum(m, jnp.max(o, axis=-1))
+        z = z * jnp.exp(m - m_new) + jnp.sum(jnp.exp(o - m_new[:, None]), axis=-1)
+        return m_new, z
+
+    m0 = jnp.full((bn,), -jnp.inf, dtype=jnp.float32)
+    z0 = jnp.zeros((bn,), dtype=jnp.float32)
+    m, z = jax.lax.fori_loop(0, steps, body, (m0, z0))
+    lse = m + jnp.log(z)
+    # positive logit from the pre-gathered rows (keeps the kernel gather-free)
+    opos = jnp.sum(h * wpos_ref[...], axis=-1)
+    if abs_logits:
+        opos = jnp.abs(opos)
+    loss_ref[...] = (lse - opos).astype(loss_ref.dtype)
+    lse_ref[...] = lse.astype(lse_ref.dtype)
+
+
+def _fwd_pallas(h, w, wpos, abs_logits, block_n=None, chunk_c=None):
+    n, d = h.shape
+    nc = w.shape[0]
+    bn = block_n or pick_block(n)
+    cc = chunk_c or pick_chunk(nc)
+    kernel = functools.partial(_fwd_kernel, abs_logits=abs_logits, chunk_c=cc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((nc, d), lambda i: (0, 0)),  # full table, streamed inside
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), h.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(h, w, wpos)
+
+
+# ---------------------------------------------------------------------------
+# backward: second streaming sweep, p computed chunk-wise
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(t_ref, h_ref, w_ref, wpos_ref, lse_ref, dh_ref, dw_ref, *, abs_logits, chunk_c):
+    i = pl.program_id(0)
+    h = h_ref[...]  # (bn, d)
+    t = t_ref[...]  # (bn,)
+    lse = lse_ref[...]  # (bn,)
+    n_classes = w_ref.shape[0]
+    steps = n_classes // chunk_c
+
+    # dW accumulates across row-blocks (grid steps): zero it once.
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    def body(c, dh_acc):
+        sl = (pl.dslice(c * chunk_c, chunk_c), slice(None))
+        wblk = pl.load(w_ref, sl)  # (cc, d)
+        o = jax.lax.dot_general(
+            h, wblk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if abs_logits:
+            sign = jnp.sign(o)
+            o = jnp.abs(o)
+        else:
+            sign = jnp.ones_like(o)
+        p = jnp.exp(o - lse[:, None])  # softmax probabilities of this chunk
+        tp = t[:, None] * p * sign  # cotangent w.r.t. raw logits (lse part)
+        dh_acc = dh_acc + jax.lax.dot_general(
+            tp, wblk, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dwblk = jax.lax.dot_general(
+            tp, h, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (cc, d)
+        pl.store(dw_ref, sl, pl.load(dw_ref, sl) + dwblk.astype(dw_ref.dtype))
+        return dh_acc
+
+    dh = jax.lax.fori_loop(0, steps, body, jnp.zeros(h.shape, jnp.float32))
+    # the -o_pos term: d/dh = -t * sign_pos * wpos (wpos cotangent handled
+    # outside the kernel where the gather happened)
+    opos_sign = jnp.sign(jnp.sum(h * wpos_ref[...], axis=-1)) if abs_logits else jnp.ones_like(t)
+    dh = dh - (t * opos_sign)[:, None] * wpos_ref[...]
+    dh_ref[...] = dh.astype(dh_ref.dtype)
+
+
+def _bwd_pallas(t, h, w, wpos, lse, abs_logits, block_n=None, chunk_c=None):
+    n, d = h.shape
+    nc = w.shape[0]
+    bn = block_n or pick_block(n)
+    cc = chunk_c or pick_chunk(nc)
+    kernel = functools.partial(_bwd_kernel, abs_logits=abs_logits, chunk_c=cc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((nc, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((nc, d), lambda i: (0, 0)),  # accumulated across steps
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), h.dtype),
+            jax.ShapeDtypeStruct((nc, d), w.dtype),
+        ],
+        interpret=True,
+    )(t, h, w, wpos, lse)
+
+
+# ---------------------------------------------------------------------------
+# public custom-vjp entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def full_softmax_loss(h, w, pos, abs_logits=False):
+    """Per-example full-softmax CE loss over all classes (eq. 1 / eq. 11).
+
+    Args:
+      h: (N, d) query embeddings.
+      w: (n, d) full class-embedding table.
+      pos: (N,) int32 positive class indices.
+
+    Returns: (N,) losses. Differentiable in h and w.
+    """
+    wpos = w[pos]
+    loss, _ = _fwd_pallas(h, w, wpos, abs_logits)
+    return loss
+
+
+def _vjp_fwd(h, w, pos, abs_logits):
+    wpos = w[pos]
+    loss, lse = _fwd_pallas(h, w, wpos, abs_logits)
+    return loss, (h, w, wpos, pos, lse)
+
+
+def _vjp_bwd(abs_logits, res, t):
+    h, w, wpos, pos, lse = res
+    dh, dw = _bwd_pallas(t, h, w, wpos, lse, abs_logits)
+    # -o_pos term's contribution to W: scatter -t*sign*h into the pos rows.
+    if abs_logits:
+        sign = jnp.sign(jnp.sum(h * wpos, axis=-1))
+    else:
+        sign = jnp.ones_like(t)
+    dw = dw.at[pos].add(-(t * sign)[:, None] * h)
+    return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+
+full_softmax_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,119 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a straight-line jnp twin here; the
+pytest suite asserts elementwise agreement (values and gradients) across
+shape/dtype/seed sweeps. These functions also serve as the executable
+specification of the paper's equations:
+
+* eq. (2): adjusted logits ``o'_i = o_{s_i} - ln(m q_{s_i})`` for negatives
+  (the positive is uncorrected),
+* eq. (3): sampled softmax ``p'`` over the adjusted logits and the sampled
+  cross-entropy loss,
+* eq. (5): the gradient of the sampled loss w.r.t. the logits is ``p' - y'``,
+* eq. (11): the *absolute softmax* variant ``p_i ∝ exp(|o_i|)`` used when
+  sampling from symmetric kernels such as the quadratic kernel (§3.3).
+"""
+
+import jax.numpy as jnp
+
+
+def _logsumexp(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    return (m + jnp.log(jnp.sum(jnp.exp(x - m), axis=axis, keepdims=True))).squeeze(axis)
+
+
+def adjusted_logits(logits, sub, abs_logits=False):
+    """Apply §3.3's optional |o| and eq. (2)'s sampling correction.
+
+    Args:
+      logits: (N, S) raw logits of the sampled classes; column 0 is the
+        positive class.
+      sub: (N, S) corrections; by construction ``sub[:, 0] == 0`` (the
+        positive class is not corrected) and ``sub[:, j] = ln(m q_j)`` for
+        the sampled negatives.
+      abs_logits: use the absolute-softmax prediction distribution.
+
+    Returns: (N, S) adjusted logits ``o'``.
+    """
+    if abs_logits:
+        logits = jnp.abs(logits)
+    return logits - sub
+
+
+def sampled_softmax_loss_ref(h, ws, sub, abs_logits=False):
+    """Cross-entropy of sampled softmax (eqs. 2-3), positive at column 0.
+
+    Args:
+      h: (N, d) query embeddings (the model's last hidden layer).
+      ws: (N, S, d) class embeddings of the sample; ``S = m + 1``.
+      sub: (N, S) ``ln(m q)`` corrections (0 for the positive column).
+
+    Returns: (N,) per-example loss ``-log p'_0``.
+    """
+    logits = jnp.einsum("nsd,nd->ns", ws, h)
+    adj = adjusted_logits(logits, sub, abs_logits)
+    return _logsumexp(adj) - adj[:, 0]
+
+
+def sampled_softmax_grad_logits_ref(h, ws, sub, abs_logits=False):
+    """Gradient of the per-example loss w.r.t. the *raw* logits (eq. 5).
+
+    Returns: (N, S) ``(p' - y') * d|o|/do`` where the last factor is
+    ``sign(o)`` under absolute softmax and 1 otherwise.
+    """
+    logits = jnp.einsum("nsd,nd->ns", ws, h)
+    adj = adjusted_logits(logits, sub, abs_logits)
+    p = jnp.exp(adj - _logsumexp(adj)[:, None])
+    y = jnp.zeros_like(p).at[:, 0].set(1.0)
+    g = p - y
+    if abs_logits:
+        g = g * jnp.sign(logits)
+    return g
+
+
+def full_softmax_loss_ref(h, w, pos, abs_logits=False):
+    """Full softmax cross entropy over all n classes (eq. 1 / eq. 11).
+
+    Args:
+      h: (N, d) query embeddings.
+      w: (n, d) output class embedding table.
+      pos: (N,) int32 index of the positive class per example.
+
+    Returns: (N,) per-example loss.
+    """
+    logits = h @ w.T
+    if abs_logits:
+        logits = jnp.abs(logits)
+    lse = _logsumexp(logits)
+    pos_logit = jnp.take_along_axis(logits, pos[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return lse - pos_logit
+
+
+def softmax_probs_ref(h, w, abs_logits=False):
+    """The prediction distribution p (eq. 1 / eq. 11); also the only unbiased
+    sampling distribution (Theorem 2.1)."""
+    logits = h @ w.T
+    if abs_logits:
+        logits = jnp.abs(logits)
+    return jnp.exp(logits - _logsumexp(logits)[:, None])
+
+
+def quadratic_kernel_ref(h, w, alpha=100.0):
+    """The paper's quadratic kernel: ``K(h, w_i) = α⟨h, w_i⟩² + 1`` (§3.3)."""
+    return alpha * (h @ w.T) ** 2 + 1.0
+
+
+def quartic_kernel_ref(h, w):
+    """The PTB extra from Figure 2: ``q_i ∝ ⟨h, w_i⟩⁴ + 1``."""
+    return (h @ w.T) ** 4 + 1.0
+
+
+def phi_quadratic_ref(a, alpha=100.0):
+    """Feature map of the quadratic kernel, eq. (10):
+    ``φ(a) = [√α vec(a ⊗ a), 1]`` with ``D = d² + 1``.
+
+    The rust tree stores ``z(C) = Σ φ(w_j)`` built from this map; this oracle
+    pins down the exact layout (row-major outer product, constant last) that
+    `rust/src/sampler/kernel/mod.rs` mirrors."""
+    outer = jnp.einsum("i,j->ij", a, a).reshape(-1)
+    return jnp.concatenate([jnp.sqrt(jnp.asarray(alpha, a.dtype)) * outer, jnp.ones((1,), a.dtype)])

@@ -1,0 +1,316 @@
+"""Layer 2: the models whose sampled-softmax training the paper evaluates.
+
+Two model families, matching the paper's §4.1.1 (with the documented
+substitutions of DESIGN.md §3):
+
+* ``lm`` — a single-layer LSTM language model over a 10k-class vocabulary
+  (the paper's "medium regularized LSTM" on Penn Tree Bank, scaled for a
+  CPU-PJRT testbed). Every token position is a training example.
+* ``recsys`` — a YouTube-style retrieval tower: user features plus the three
+  previously watched videos are embedded and fed through an MLP to produce
+  the query embedding ``h``; the output layer scores all videos.
+
+Both models end in a dot product ``o = W h`` between the last hidden layer
+and the class-embedding table — exactly the structure kernel based sampling
+requires (§3 of the paper).
+
+Entry points (lowered to HLO by ``aot.py``; rust executes them):
+
+* ``encode``        (params, inputs)                  -> h (N, d)
+* ``train_sampled`` (params, inputs, neg, sub, lr)    -> (params', loss, rows)
+* ``train_full``    (params, inputs, lr)              -> (params', loss)
+* ``eval_full``     (params, inputs)                  -> summed CE loss
+* ``score_all``     (params, inputs)                  -> logits (N, n)
+
+Conventions shared with the rust coordinator (runtime/manifest.rs):
+params come first, in the manifest's order; ``lr`` is always the last input
+of a train op; train ops return the new params in the same order, then the
+scalar mean loss, and ``train_sampled`` additionally returns the updated
+output-embedding rows of the sampled classes so the host mirror + kernel
+tree can be updated without copying all of W.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.full_softmax import full_softmax_loss
+from .kernels.sampled_softmax import sampled_softmax_loss
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+class ModelConfig:
+    """Static configuration of one model variant (shapes are baked into HLO)."""
+
+    def __init__(self, name, model, n_classes, d, batch, seq_len=None,
+                 n_user_features=None, n_prev=3, hidden=128, abs_logits=False,
+                 alpha=100.0):
+        self.name = name
+        self.model = model  # "lm" | "recsys"
+        self.n_classes = n_classes
+        self.d = d
+        self.batch = batch
+        self.seq_len = seq_len
+        self.n_user_features = n_user_features
+        self.n_prev = n_prev
+        self.hidden = hidden
+        self.abs_logits = abs_logits
+        self.alpha = alpha  # quadratic-kernel α, recorded for the sampler
+
+    @property
+    def n_examples(self):
+        """Training positions per batch (= rows of h)."""
+        if self.model == "lm":
+            return self.batch * self.seq_len
+        return self.batch
+
+    # ---- parameter specs --------------------------------------------------
+
+    def param_specs(self):
+        """Ordered (name, shape, init) triples; the manifest and the rust
+        ParamStore replicate this order exactly."""
+        n, d = self.n_classes, self.d
+        if self.model == "lm":
+            return [
+                ("embed", (n, d), "normal:0.1"),
+                ("wx", (d, 4 * d), "glorot"),
+                ("wh", (d, 4 * d), "glorot"),
+                ("b", (4 * d,), "zeros"),
+                ("out_w", (n, d), "normal:0.1"),
+            ]
+        f, hdn = self.n_user_features, self.hidden
+        return [
+            ("item_emb", (n, d), "normal:0.1"),
+            ("w1", (f + d, hdn), "glorot"),
+            ("b1", (hdn,), "zeros"),
+            ("w2", (hdn, d), "glorot"),
+            ("b2", (d,), "zeros"),
+            ("out_w", (n, d), "normal:0.1"),
+        ]
+
+    def data_specs(self, op, m=None):
+        """Ordered (name, dtype, shape) of the non-param inputs of ``op``."""
+        B = self.batch
+        N = self.n_examples
+        if self.model == "lm":
+            T = self.seq_len
+            base = [("tokens", "i32", (B, T))]
+            pos = [("targets", "i32", (B, T))]
+        else:
+            base = [
+                ("user", "f32", (B, self.n_user_features)),
+                ("prev", "i32", (B, self.n_prev)),
+            ]
+            pos = [("pos", "i32", (B,))]
+        if op == "encode" or op == "score_all":
+            return base
+        if op == "eval_full":
+            return base + pos
+        if op == "train_full":
+            return base + pos + [("lr", "f32", ())]
+        if op == "train_sampled":
+            assert m is not None
+            return base + pos + [
+                ("neg", "i32", (N, m)),
+                ("sub", "f32", (N, m + 1)),
+                ("lr", "f32", ()),
+            ]
+        raise ValueError(f"unknown op {op}")
+
+    def output_specs(self, op, m=None):
+        """Ordered (name, dtype, shape) of the outputs of ``op``."""
+        N, n, d = self.n_examples, self.n_classes, self.d
+        params = [(name, "f32", shape) for name, shape, _ in self.param_specs()]
+        if op == "encode":
+            return [("h", "f32", (N, d))]
+        if op == "score_all":
+            return [("logits", "f32", (N, n))]
+        if op == "eval_full":
+            return [("sum_loss", "f32", ())]
+        if op == "train_full":
+            return params + [("loss", "f32", ())]
+        if op == "train_sampled":
+            return params + [("loss", "f32", ()), ("rows", "f32", (N, m + 1, d))]
+        raise ValueError(f"unknown op {op}")
+
+    def init_params(self, key):
+        """Reference initializer (tests + parity with the rust ParamStore)."""
+        params = []
+        for name, shape, init in self.param_specs():
+            key, sub = jax.random.split(key)
+            if init == "zeros":
+                params.append(jnp.zeros(shape, jnp.float32))
+            elif init.startswith("normal:"):
+                std = float(init.split(":")[1])
+                params.append(std * jax.random.normal(sub, shape, jnp.float32))
+            elif init == "glorot":
+                fan_in, fan_out = shape[0], shape[-1]
+                std = (2.0 / (fan_in + fan_out)) ** 0.5
+                params.append(std * jax.random.normal(sub, shape, jnp.float32))
+            else:
+                raise ValueError(init)
+        return params
+
+
+# ---------------------------------------------------------------------------
+# encoders (h = last hidden layer)
+# ---------------------------------------------------------------------------
+
+
+def _lstm_encode(cfg, params, tokens):
+    """Single-layer LSTM over (B, T) tokens -> h for every position (B*T, d).
+
+    Position t's query embedding is the LSTM state *after* consuming token t;
+    the training target at that position is token t+1 (the batcher shifts)."""
+    embed, wx, wh, b, _ = params
+    d = cfg.d
+    x = embed[tokens]  # (B, T, d)
+    x = jnp.swapaxes(x, 0, 1)  # (T, B, d): scan over time
+
+    def cell(carry, xt):
+        hprev, cprev = carry
+        z = xt @ wx + hprev @ wh + b  # (B, 4d)
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * cprev + jax.nn.sigmoid(i) * jnp.tanh(g)
+        hnew = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (hnew, c), hnew
+
+    B = tokens.shape[0]
+    h0 = jnp.zeros((B, d), jnp.float32)
+    _, hs = jax.lax.scan(cell, (h0, h0), x)  # (T, B, d)
+    return jnp.swapaxes(hs, 0, 1).reshape(-1, d)  # (B*T, d)
+
+
+def _recsys_encode(cfg, params, user, prev):
+    """MLP tower over user features + mean embedding of the previously
+    watched videos (Covington et al.-style) -> h (B, d)."""
+    item_emb, w1, b1, w2, b2, _ = params
+    prev_emb = jnp.mean(item_emb[prev], axis=1)  # (B, d)
+    x = jnp.concatenate([user, prev_emb], axis=-1)
+    hdn = jnp.tanh(x @ w1 + b1)
+    return hdn @ w2 + b2
+
+
+def encode(cfg, params, *data):
+    if cfg.model == "lm":
+        return _lstm_encode(cfg, params, *data)
+    return _recsys_encode(cfg, params, *data)
+
+
+def _positives(pos_input):
+    """Flatten the positive-class input to (N,)."""
+    return pos_input.reshape(-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def score_all(cfg, params, *data):
+    """Raw logits o = h W^T over all classes, (N, n). The exact-softmax and
+    flat-kernel samplers consume these host-side (abs applied there when the
+    model is an absolute-softmax variant)."""
+    h = encode(cfg, params, *data)
+    out_w = params[-1]
+    return h @ out_w.T
+
+
+def eval_full(cfg, params, *data_and_pos):
+    """Summed full-softmax CE over the batch (rust divides by count)."""
+    *data, pos = data_and_pos
+    h = encode(cfg, params, *data)
+    loss = full_softmax_loss(h, params[-1], _positives(pos), cfg.abs_logits)
+    return jnp.sum(loss)
+
+
+def train_sampled(cfg, params, *args):
+    """One SGD step of sampled softmax. Returns (params', loss, rows) where
+    ``rows = out_w'[s]`` are the post-update embeddings of the sampled
+    classes (positive at column 0) for the host mirror + kernel tree."""
+    *data_and_pos, neg, sub, lr = args
+    *data, pos = data_and_pos
+    s = jnp.concatenate([_positives(pos)[:, None], neg], axis=1)  # (N, S)
+
+    def objective(ps):
+        h = encode(cfg, ps, *data)
+        ws = ps[-1][s]  # (N, S, d)
+        return jnp.mean(sampled_softmax_loss(h, ws, sub, cfg.abs_logits))
+
+    loss, grads = jax.value_and_grad(objective)(params)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    rows = new_params[-1][s]
+    return (*new_params, loss, rows)
+
+
+def train_full(cfg, params, *args):
+    """One SGD step of the full-softmax baseline."""
+    *data_and_pos, lr = args
+    *data, pos = data_and_pos
+
+    def objective(ps):
+        h = encode(cfg, ps, *data)
+        return jnp.mean(full_softmax_loss(h, ps[-1], _positives(pos), cfg.abs_logits))
+
+    loss, grads = jax.value_and_grad(objective)(params)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return (*new_params, loss)
+
+
+# ---------------------------------------------------------------------------
+# flat-signature wrappers + AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def entry_fn(cfg, op, m=None):
+    """A flat-argument function (params..., data..., [lr]) -> tuple, ready to
+    be jitted/lowered. Tuple-ness matters: rust unpacks with to_tuple."""
+    n_params = len(cfg.param_specs())
+
+    def fn(*args):
+        params = list(args[:n_params])
+        rest = args[n_params:]
+        if op == "encode":
+            return (encode(cfg, params, *rest),)
+        if op == "score_all":
+            return (score_all(cfg, params, *rest),)
+        if op == "eval_full":
+            return (eval_full(cfg, params, *rest),)
+        if op == "train_full":
+            return train_full(cfg, params, *rest)
+        if op == "train_sampled":
+            return train_sampled(cfg, params, *rest)
+        raise ValueError(op)
+
+    fn.__name__ = f"{cfg.name}_{op}" + (f"_m{m}" if m else "")
+    return fn
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def example_args(cfg, op, m=None):
+    """ShapeDtypeStructs for lowering ``entry_fn(cfg, op, m)``."""
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape, _ in cfg.param_specs()]
+    for _, dtype, shape in cfg.data_specs(op, m):
+        specs.append(jax.ShapeDtypeStruct(shape, _DTYPES[dtype]))
+    return specs
+
+
+def lower_to_hlo_text(cfg, op, m=None):
+    """Lower one entry point to HLO text — the xla_extension-0.5.1-safe
+    interchange format (DESIGN.md §2): jax >= 0.5 serialized protos carry
+    64-bit instruction ids the runtime rejects; the text parser re-ids."""
+    from jax._src.lib import xla_client as xc
+
+    fn = entry_fn(cfg, op, m)
+    # keep_unused: the runtime feeds *all* params to every op (encode does
+    # not read out_w, for instance) — argument arity must stay stable.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args(cfg, op, m))
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,74 @@
+"""AOT pipeline: manifest structure and HLO-text artifact integrity.
+
+Runs against the artifacts/ directory if `make artifacts` has produced it
+(skipped otherwise, so pytest works on a fresh checkout too)."""
+
+import json
+import os
+
+import pytest
+
+from compile import configs as C
+from compile.aot import artifact_filename, manifest_entry
+
+ARTIFACTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+MANIFEST = os.path.join(ARTIFACTS, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+def test_artifact_filenames():
+    assert artifact_filename("ptb", "encode") == "ptb_encode.hlo.txt"
+    assert artifact_filename("ptb", "train_sampled", 32) == "ptb_train_sampled_m32.hlo.txt"
+
+
+def test_manifest_entry_structure():
+    cfg = C.CONFIGS["tiny"]
+    files = {(op, None): artifact_filename("tiny", op) for op in
+             ["encode", "score_all", "eval_full", "train_full"]}
+    files[("train_sampled", 4)] = artifact_filename("tiny", "train_sampled", 4)
+    e = manifest_entry(cfg, [4], files)
+    assert e["n_classes"] == 128 and e["model"] == "recsys"
+    assert [p["name"] for p in e["params"]] == ["item_emb", "w1", "b1", "w2", "b2", "out_w"]
+    assert e["ops"]["encode"]["outputs"][0]["shape"] == [8, 16]
+    ts = e["train_sampled"]["4"]
+    in_names = [i["name"] for i in ts["inputs"]]
+    assert in_names == ["user", "prev", "pos", "neg", "sub", "lr"]
+    out_names = [o["name"] for o in ts["outputs"]]
+    assert out_names[-2:] == ["loss", "rows"]
+
+
+@needs_artifacts
+def test_manifest_files_exist_and_are_hlo():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert "tiny" in man["models"]
+    for name, entry in man["models"].items():
+        for op, rec in entry["ops"].items():
+            path = os.path.join(ARTIFACTS, rec["file"])
+            assert os.path.exists(path), f"{name}/{op} missing"
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), f"{name}/{op} not HLO text"
+        for m, rec in entry["train_sampled"].items():
+            path = os.path.join(ARTIFACTS, rec["file"])
+            assert os.path.exists(path), f"{name}/train_sampled m={m} missing"
+
+
+@needs_artifacts
+def test_manifest_shapes_consistent_with_configs():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    for name, entry in man["models"].items():
+        if name not in C.CONFIGS:
+            continue
+        cfg = C.CONFIGS[name]
+        assert entry["n_classes"] == cfg.n_classes
+        assert entry["d"] == cfg.d
+        assert entry["abs_logits"] == cfg.abs_logits
+        want = [(p[0], list(p[1])) for p in cfg.param_specs()]
+        got = [(p["name"], p["shape"]) for p in entry["params"]]
+        assert got == want, name

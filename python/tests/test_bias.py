@@ -1,0 +1,104 @@
+"""Statistical validation of the paper's core theory (Theorem 2.1 / §2.3):
+
+  * sampling with q = softmax(o) gives an **unbiased** estimator of the full
+    softmax gradient,
+  * any other q (uniform here) is biased, and the bias shrinks as m grows.
+
+These are Monte-Carlo tests over the *reference* implementation (ref.py), so
+they validate the equations the kernels and the rust samplers implement, not
+any particular kernel."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def estimator_expectation(o, q, m, trials, rng):
+    """Monte-Carlo E[sum_j I(s_j = i) p'_j] (lhs of eq. 7) for positive
+    class 0, sampling m negatives from q with replacement. Vectorized over
+    trials.
+
+    Follows the setting of the paper's appendix proof: negatives are drawn
+    from q restricted to the negative classes (the positive enters the
+    sample with probability 1, eq. 12/13 sum over j >= 2)."""
+    n = o.shape[0]
+    q = q.copy()
+    q[0] = 0.0
+    q /= q.sum()
+    neg = rng.choice(n, size=(trials, m), p=q)
+    o_neg = o[neg] - np.log(m * q[neg])  # adjusted logits, eq. (2)
+    o_pos = np.full((trials, 1), o[0])  # positive uncorrected
+    adj = np.concatenate([o_pos, o_neg], axis=1)  # (trials, m+1)
+    adj = adj - adj.max(axis=1, keepdims=True)
+    e = np.exp(adj)
+    p = e / e.sum(axis=1, keepdims=True)  # p', eq. (3)
+    # accumulate per-class expectation of sum_j I(s_j = i) p'_j
+    acc = np.zeros(n)
+    np.add.at(acc, neg.reshape(-1), p[:, 1:].reshape(-1))
+    acc /= trials
+    acc[0] += p[:, 0].mean()
+    return acc
+
+
+def softmax(o):
+    e = np.exp(o - o.max())
+    return e / e.sum()
+
+
+@pytest.mark.parametrize("m", [2, 8])
+def test_softmax_sampling_is_unbiased(m):
+    rng = np.random.default_rng(0)
+    n = 25
+    o = rng.normal(size=n)
+    p = softmax(o)
+    est = estimator_expectation(o, p, m=m, trials=250_000, rng=rng)
+    np.testing.assert_allclose(est, p, atol=5e-3)
+
+
+def test_uniform_sampling_is_biased_and_bias_shrinks():
+    rng = np.random.default_rng(1)
+    n = 25
+    o = rng.normal(size=n) * 2.0
+    p = softmax(o)
+    q = np.full(n, 1.0 / n)
+    bias = {}
+    for m in [2, 8, 32]:
+        est = estimator_expectation(o, q, m=m, trials=120_000, rng=rng)
+        bias[m] = np.abs(est - p).sum()
+    # clearly biased at small m...
+    assert bias[2] > 0.05, bias
+    # ...and monotonically shrinking toward unbiasedness as m grows (eq. 2's
+    # correction makes the limit exact)
+    assert bias[2] > bias[8] > bias[32], bias
+
+
+def test_absolute_softmax_equivalence_claim():
+    """§3.3: softmax is shift invariant, so any softmax solution has an
+    absolute-softmax counterpart: shifting logits to be nonnegative leaves
+    the absolute-softmax distribution equal to the softmax one."""
+    rng = np.random.default_rng(2)
+    o = rng.normal(size=40)
+    shift = -o.min() + 1.0
+    p_soft = softmax(o)
+    p_abs = softmax(np.abs(o + shift))  # all logits nonneg -> |.| is identity
+    np.testing.assert_allclose(p_soft, softmax(o + shift), atol=1e-12)
+    np.testing.assert_allclose(p_abs, p_soft, atol=1e-12)
+
+
+def test_quadratic_kernel_tracks_abs_softmax_better_than_uniform():
+    """The design rationale of §3.3: q ∝ 100·o² + 1 is closer (in total
+    variation) to the absolute-softmax distribution than uniform is, once
+    the model has learned logits with meaningful spread (std ≈ 1-2, the
+    regime of a trained model; near the origin with std << 1 the softmax
+    itself is nearly uniform and uniform sampling is trivially fine)."""
+    rng = np.random.default_rng(3)
+    n = 1000
+    o = rng.normal(size=n) * 1.5
+    p_abs = softmax(np.abs(o))
+    q_quad = 100.0 * o**2 + 1.0
+    q_quad /= q_quad.sum()
+    q_unif = np.full(n, 1.0 / n)
+    tv_quad = 0.5 * np.abs(q_quad - p_abs).sum()
+    tv_unif = 0.5 * np.abs(q_unif - p_abs).sum()
+    assert tv_quad < tv_unif, (tv_quad, tv_unif)

@@ -1,0 +1,225 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the core correctness signal for the compute stack: everything the
+rust coordinator executes was lowered from these kernels, so agreement here
+(values *and* gradients, standard *and* absolute softmax) pins the whole
+numeric path. Hypothesis sweeps shapes, seeds and block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.full_softmax import full_softmax_loss, pick_chunk
+from compile.kernels.sampled_softmax import pick_block, sampled_softmax_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(seed, n_rows, s, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(scale * rng.normal(size=(n_rows, d)), jnp.float32)
+    ws = jnp.asarray(scale * rng.normal(size=(n_rows, s, d)), jnp.float32)
+    sub = np.zeros((n_rows, s), np.float32)
+    sub[:, 1:] = rng.uniform(0.0, 4.0, size=(n_rows, s - 1))
+    return h, ws, jnp.asarray(sub)
+
+
+# ---------------------------------------------------------------------------
+# sampled softmax kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_rows=st.integers(1, 48),
+    s=st.integers(2, 33),
+    d=st.sampled_from([1, 3, 8, 16, 64]),
+    abs_logits=st.booleans(),
+)
+def test_sampled_loss_matches_ref(seed, n_rows, s, d, abs_logits):
+    h, ws, sub = make_inputs(seed, n_rows, s, d)
+    got = sampled_softmax_loss(h, ws, sub, abs_logits)
+    want = ref.sampled_softmax_loss_ref(h, ws, sub, abs_logits)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_rows=st.integers(1, 24),
+    s=st.integers(2, 17),
+    d=st.sampled_from([2, 8, 32]),
+    abs_logits=st.booleans(),
+)
+def test_sampled_grads_match_ref(seed, n_rows, s, d, abs_logits):
+    h, ws, sub = make_inputs(seed, n_rows, s, d)
+
+    def f(h, ws, sub):
+        return jnp.mean(sampled_softmax_loss(h, ws, sub, abs_logits))
+
+    def fr(h, ws, sub):
+        return jnp.mean(ref.sampled_softmax_loss_ref(h, ws, sub, abs_logits))
+
+    got = jax.grad(f, argnums=(0, 1, 2))(h, ws, sub)
+    want = jax.grad(fr, argnums=(0, 1, 2))(h, ws, sub)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+def test_sampled_block_sizes_agree():
+    """Different row blockings must not change the numerics."""
+    h, ws, sub = make_inputs(7, 24, 9, 16)
+    base = sampled_softmax_loss(h, ws, sub, False, 24)
+    for bn in [1, 2, 3, 4, 6, 8, 12]:
+        np.testing.assert_allclose(
+            sampled_softmax_loss(h, ws, sub, False, bn), base, rtol=1e-6, atol=1e-6
+        )
+
+
+def test_sampled_grad_logits_identity():
+    """The kernel's gradient seed is (p' - y') — eq. (5) of the paper —
+    checked through the ws cotangent: dL/dws[n,s] = g[n,s] * h[n]."""
+    h, ws, sub = make_inputs(3, 6, 5, 8)
+    g_ref = ref.sampled_softmax_grad_logits_ref(h, ws, sub, False)
+    dws = jax.grad(lambda ws: jnp.sum(sampled_softmax_loss(h, ws, sub, False)))(ws)
+    want = g_ref[:, :, None] * np.asarray(h)[:, None, :]
+    np.testing.assert_allclose(dws, want, rtol=1e-4, atol=1e-6)
+
+
+def test_sampled_extreme_logits_stable():
+    """Large-magnitude logits must not overflow (stable log-softmax)."""
+    h, ws, sub = make_inputs(11, 8, 7, 16, scale=20.0)
+    loss = sampled_softmax_loss(h, ws, sub, False)
+    assert np.all(np.isfinite(loss))
+    want = ref.sampled_softmax_loss_ref(h, ws, sub, False)
+    np.testing.assert_allclose(loss, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sampled_zero_correction_is_plain_softmax_ce():
+    """With sub == 0 the loss is ordinary softmax CE over the sample."""
+    h, ws, _ = make_inputs(5, 10, 6, 8)
+    sub = jnp.zeros((10, 6), jnp.float32)
+    got = sampled_softmax_loss(h, ws, sub, False)
+    logits = jnp.einsum("nsd,nd->ns", ws, h)
+    want = -jax.nn.log_softmax(logits, axis=-1)[:, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 30, 128, 400, 1000, 997]:
+        b = pick_block(n)
+        assert n % b == 0 and 1 <= b <= max(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# full softmax kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_rows=st.integers(1, 24),
+    n_classes=st.sampled_from([2, 10, 40, 100, 256]),
+    d=st.sampled_from([1, 4, 16]),
+    abs_logits=st.booleans(),
+)
+def test_full_loss_matches_ref(seed, n_rows, n_classes, d, abs_logits):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n_rows, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n_classes, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_classes, n_rows), jnp.int32)
+    got = full_softmax_loss(h, w, pos, abs_logits)
+    want = ref.full_softmax_loss_ref(h, w, pos, abs_logits)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_rows=st.integers(1, 12),
+    n_classes=st.sampled_from([6, 30, 128]),
+    d=st.sampled_from([2, 8]),
+    abs_logits=st.booleans(),
+)
+def test_full_grads_match_ref(seed, n_rows, n_classes, d, abs_logits):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n_rows, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n_classes, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_classes, n_rows), jnp.int32)
+
+    def f(h, w):
+        return jnp.mean(full_softmax_loss(h, w, pos, abs_logits))
+
+    def fr(h, w):
+        return jnp.mean(ref.full_softmax_loss_ref(h, w, pos, abs_logits))
+
+    got = jax.grad(f, argnums=(0, 1))(h, w)
+    want = jax.grad(fr, argnums=(0, 1))(h, w)
+    for g, ww in zip(got, want):
+        np.testing.assert_allclose(g, ww, rtol=1e-4, atol=1e-5)
+
+
+def test_full_streaming_chunks_agree():
+    """Online-logsumexp chunking must not change the numerics."""
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(60, 8)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 60, 6), jnp.int32)
+    want = ref.full_softmax_loss_ref(h, w, pos, False)
+    # chunk sizes that divide 60
+    from compile.kernels.full_softmax import _fwd_pallas
+
+    for cc in [1, 2, 5, 12, 30, 60]:
+        got, _ = _fwd_pallas(h, w, w[pos], False, None, cc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_full_repeated_positives_grad():
+    """Several rows sharing the same positive class: the scatter-add into dW
+    must accumulate (a classic scatter bug catcher)."""
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(12, 4)), jnp.float32)
+    pos = jnp.asarray([3, 3, 3, 7, 3], jnp.int32)
+    got = jax.grad(lambda w: jnp.sum(full_softmax_loss(h, w, pos, False)))(w)
+    want = jax.grad(lambda w: jnp.sum(ref.full_softmax_loss_ref(h, w, pos, False)))(w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_pick_chunk_divides():
+    for n in [10, 512, 10_000, 100_000, 99_991]:
+        c = pick_chunk(n)
+        assert n % c == 0
+
+
+# ---------------------------------------------------------------------------
+# feature-map oracle (layout contract with the rust tree)
+# ---------------------------------------------------------------------------
+
+
+def test_phi_quadratic_reproduces_kernel():
+    """⟨φ(a), φ(b)⟩ must equal α⟨a,b⟩² + 1 — eq. (10)."""
+    rng = np.random.default_rng(2)
+    for d in [1, 2, 5, 16]:
+        a = jnp.asarray(rng.normal(size=d), jnp.float32)
+        b = jnp.asarray(rng.normal(size=d), jnp.float32)
+        phi_a = ref.phi_quadratic_ref(a, 100.0)
+        phi_b = ref.phi_quadratic_ref(b, 100.0)
+        assert phi_a.shape == (d * d + 1,)
+        got = float(jnp.dot(phi_a, phi_b))
+        want = float(100.0 * jnp.dot(a, b) ** 2 + 1.0)
+        assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_kernels_are_positive():
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    assert np.all(np.asarray(ref.quadratic_kernel_ref(h, w)) >= 1.0)
+    assert np.all(np.asarray(ref.quartic_kernel_ref(h, w)) >= 1.0)

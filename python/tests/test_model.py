@@ -1,0 +1,159 @@
+"""L2 correctness: model entry points, shapes, training dynamics, and the
+input/output contract the rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = C.CONFIGS["tiny"]
+TINY_LM = C.CONFIGS["tiny-lm"]
+TINY_ABS = C.CONFIGS["tiny-abs"]
+
+
+def make_batch(cfg, seed=0):
+    """Random data inputs matching cfg.data_specs order (without lr)."""
+    rng = np.random.default_rng(seed)
+    if cfg.model == "lm":
+        tokens = rng.integers(0, cfg.n_classes, (cfg.batch, cfg.seq_len))
+        targets = rng.integers(0, cfg.n_classes, (cfg.batch, cfg.seq_len))
+        return [jnp.asarray(tokens, jnp.int32)], jnp.asarray(targets, jnp.int32)
+    user = rng.normal(size=(cfg.batch, cfg.n_user_features))
+    prev = rng.integers(0, cfg.n_classes, (cfg.batch, cfg.n_prev))
+    pos = rng.integers(0, cfg.n_classes, (cfg.batch,))
+    return [jnp.asarray(user, jnp.float32), jnp.asarray(prev, jnp.int32)], jnp.asarray(pos, jnp.int32)
+
+
+def make_sample(cfg, m, seed=1):
+    rng = np.random.default_rng(seed)
+    n = cfg.n_examples
+    neg = jnp.asarray(rng.integers(0, cfg.n_classes, (n, m)), jnp.int32)
+    sub = np.zeros((n, m + 1), np.float32)
+    sub[:, 1:] = np.log(m / cfg.n_classes)  # uniform q correction
+    return neg, jnp.asarray(sub)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LM, TINY_ABS], ids=lambda c: c.name)
+def test_encode_shape(cfg):
+    params = cfg.init_params(jax.random.PRNGKey(0))
+    data, _ = make_batch(cfg)
+    h = M.encode(cfg, params, *data)
+    assert h.shape == (cfg.n_examples, cfg.d)
+    assert np.all(np.isfinite(h))
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LM], ids=lambda c: c.name)
+def test_score_all_is_h_dot_w(cfg):
+    params = cfg.init_params(jax.random.PRNGKey(1))
+    data, _ = make_batch(cfg)
+    logits = M.score_all(cfg, params, *data)
+    h = M.encode(cfg, params, *data)
+    np.testing.assert_allclose(logits, h @ params[-1].T, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LM, TINY_ABS], ids=lambda c: c.name)
+def test_eval_full_matches_ref(cfg):
+    params = cfg.init_params(jax.random.PRNGKey(2))
+    data, pos = make_batch(cfg)
+    got = M.eval_full(cfg, params, *data, pos)
+    h = M.encode(cfg, params, *data)
+    want = jnp.sum(ref.full_softmax_loss_ref(h, params[-1], pos.reshape(-1), cfg.abs_logits))
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LM], ids=lambda c: c.name)
+def test_train_sampled_step_contract(cfg):
+    """Output order/shapes and the 'rows' gather contract used by rust."""
+    m = 4
+    params = cfg.init_params(jax.random.PRNGKey(3))
+    data, pos = make_batch(cfg)
+    neg, sub = make_sample(cfg, m)
+    out = M.train_sampled(cfg, params, *data, pos, neg, sub, jnp.float32(0.1))
+    n_p = len(cfg.param_specs())
+    new_params, loss, rows = list(out[:n_p]), out[n_p], out[n_p + 1]
+    for p_new, (name, shape, _) in zip(new_params, cfg.param_specs()):
+        assert p_new.shape == shape, name
+    assert loss.shape == ()
+    assert rows.shape == (cfg.n_examples, m + 1, cfg.d)
+    # rows must equal the *updated* out_w gathered at s = [pos, neg]
+    s = np.concatenate([np.asarray(pos).reshape(-1, 1), np.asarray(neg)], axis=1)
+    np.testing.assert_allclose(rows, np.asarray(new_params[-1])[s], rtol=1e-6, atol=1e-7)
+    # parameters actually moved
+    assert not np.allclose(new_params[-1], params[-1])
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_LM], ids=lambda c: c.name)
+def test_train_sampled_only_sampled_rows_change(cfg):
+    """Sampled softmax touches only the sampled classes' output embeddings —
+    the sparsity the rust tree-update path depends on."""
+    m = 4
+    params = cfg.init_params(jax.random.PRNGKey(4))
+    data, pos = make_batch(cfg)
+    neg, sub = make_sample(cfg, m)
+    out = M.train_sampled(cfg, params, *data, pos, neg, sub, jnp.float32(0.5))
+    new_out_w = np.asarray(out[len(cfg.param_specs()) - 1])
+    old_out_w = np.asarray(params[-1])
+    s = set(np.asarray(pos).reshape(-1).tolist()) | set(np.asarray(neg).reshape(-1).tolist())
+    changed = set(np.nonzero(np.abs(new_out_w - old_out_w).max(axis=1) > 0)[0].tolist())
+    assert changed <= s, f"classes outside the sample changed: {sorted(changed - s)[:5]}"
+
+
+def test_train_full_decreases_loss():
+    cfg = TINY
+    params = cfg.init_params(jax.random.PRNGKey(5))
+    data, pos = make_batch(cfg)
+    losses = []
+    for _ in range(8):
+        out = M.train_full(cfg, params, *data, pos, jnp.float32(0.5))
+        params = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_sampled_decreases_full_loss():
+    """Training with sampled softmax (exact-softmax q would be unbiased; we
+    use uniform q with enough samples) reduces the *full* softmax loss."""
+    cfg = TINY
+    m = 32
+    params = cfg.init_params(jax.random.PRNGKey(6))
+    data, pos = make_batch(cfg)
+    rng = np.random.default_rng(0)
+    before = float(M.eval_full(cfg, params, *data, pos)) / cfg.n_examples
+    for step in range(12):
+        neg = jnp.asarray(rng.integers(0, cfg.n_classes, (cfg.n_examples, m)), jnp.int32)
+        sub = np.zeros((cfg.n_examples, m + 1), np.float32)
+        sub[:, 1:] = np.log(m / cfg.n_classes)
+        out = M.train_sampled(cfg, params, *data, pos, neg, jnp.asarray(sub), jnp.float32(0.3))
+        params = list(out[: len(cfg.param_specs())])
+    after = float(M.eval_full(cfg, params, *data, pos)) / cfg.n_examples
+    assert after < before - 0.3, (before, after)
+
+
+def test_abs_variant_differs_and_is_finite():
+    data, pos = make_batch(TINY)
+    params = TINY.init_params(jax.random.PRNGKey(7))
+    std = float(M.eval_full(TINY, params, *data, pos))
+    ab = float(M.eval_full(TINY_ABS, params, *data, pos))
+    assert np.isfinite(std) and np.isfinite(ab)
+    assert std != pytest.approx(ab, rel=1e-6)  # |o| changes the loss
+
+
+def test_example_args_match_specs():
+    for cfg in [TINY, TINY_LM]:
+        for op in ["encode", "score_all", "eval_full", "train_full"]:
+            args = M.example_args(cfg, op)
+            assert len(args) == len(cfg.param_specs()) + len(cfg.data_specs(op))
+        args = M.example_args(cfg, "train_sampled", 4)
+        assert len(args) == len(cfg.param_specs()) + len(cfg.data_specs("train_sampled", 4))
+
+
+def test_lower_to_hlo_text_smoke():
+    text = M.lower_to_hlo_text(TINY, "encode")
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,220 @@
+//! Benchmark harness (offline replacement for `criterion`).
+//!
+//! Benches under `benches/` are plain binaries (`harness = false`) that use
+//! [`Bencher`] for timed micro/meso benchmarks and print aligned tables with
+//! mean/p50/p95 and derived throughput — the same rows the paper's tables
+//! and figures report. Figure-level benches (fig2..fig7) train real models
+//! and print the loss series; this harness provides their timing and table
+//! output too.
+
+use crate::util::stats::Samples;
+use std::time::Instant;
+
+/// Bench cost scale, from `KSS_BENCH_SCALE` (default `quick`).
+///
+/// * `quick` — tiny models / few steps; the whole `cargo bench` suite runs
+///   in minutes and checks every figure's *shape*.
+/// * `full` — the paper-scale sweeps (10k/100k classes, full m sweep);
+///   hours on this single-core testbed. Used to produce EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("KSS_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Quick,
+    }
+}
+
+/// Open the engine over ./artifacts, or exit 0 with a notice (benches must
+/// not fail a fresh checkout that hasn't run `make artifacts`).
+pub fn engine_or_exit() -> crate::runtime::Engine {
+    match crate::runtime::Engine::new(std::path::Path::new("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench: {e:#}\n(run `make artifacts` first)");
+            std::process::exit(0);
+        }
+    }
+}
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub name: String,
+    /// Seconds per iteration.
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: usize,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchRow {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|it| it / self.mean_s)
+    }
+}
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much measuring time has elapsed (seconds).
+    pub budget_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 10, max_iters: 1000, budget_s: 2.0 }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn slow() -> Bencher {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 50, budget_s: 5.0 }
+    }
+
+    /// Measure `f`, which performs one iteration per call.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchRow {
+        self.run_with_items(name, None, move || {
+            f();
+        })
+    }
+
+    /// Measure with a known number of logical items per iteration (for
+    /// throughput rows, e.g. samples drawn per call).
+    pub fn run_with_items(
+        &self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> BenchRow {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        let t_start = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (iters < self.max_iters && t_start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        BenchRow {
+            name: name.to_string(),
+            mean_s: samples.mean(),
+            p50_s: samples.p50(),
+            p95_s: samples.p95(),
+            iters,
+            items_per_iter,
+        }
+    }
+}
+
+/// Pretty-print a group of rows as an aligned table.
+pub fn print_table(title: &str, rows: &[BenchRow]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>8} {:>14}",
+        "benchmark", "mean", "p50", "p95", "iters", "throughput"
+    );
+    for r in rows {
+        let tput = r
+            .throughput()
+            .map(|t| format_throughput(t))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8} {:>14}",
+            r.name,
+            format_time(r.mean_s),
+            format_time(r.p50_s),
+            format_time(r.p95_s),
+            r.iters,
+            tput
+        );
+    }
+}
+
+/// Human time formatting (s/ms/µs/ns).
+pub fn format_time(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn format_throughput(t: f64) -> String {
+    if t >= 1e9 {
+        format!("{:.2} G/s", t / 1e9)
+    } else if t >= 1e6 {
+        format!("{:.2} M/s", t / 1e6)
+    } else if t >= 1e3 {
+        format!("{:.2} K/s", t / 1e3)
+    } else {
+        format!("{t:.2} /s")
+    }
+}
+
+/// Print a labeled data series (epoch, value) — the figure benches emit the
+/// paper's loss-vs-epoch curves in this form so they can be plotted or
+/// diffed directly.
+pub fn print_series(label: &str, points: &[(f64, f64)]) {
+    println!("series {label}");
+    for (x, y) in points {
+        println!("  {x:.4}\t{y:.6}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_counts() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 10, budget_s: 0.05 };
+        let mut count = 0usize;
+        let row = b.run("noop", || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(row.iters >= 5 && row.iters <= 10);
+        assert_eq!(count, row.iters + 1); // + warmup
+        assert!(row.mean_s >= 0.0 && row.p95_s >= row.p50_s * 0.5);
+    }
+
+    #[test]
+    fn throughput_derived() {
+        let b = Bencher { warmup_iters: 0, min_iters: 3, max_iters: 3, budget_s: 0.01 };
+        let row = b.run_with_items("items", Some(100.0), || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let t = row.throughput().unwrap();
+        assert!(t > 1_000.0 && t < 2_000_000.0, "throughput {t}");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(format_time(2.5), "2.500 s");
+        assert_eq!(format_time(0.0025), "2.500 ms");
+        assert_eq!(format_time(2.5e-6), "2.500 µs");
+        assert!(format_time(3e-9).ends_with("ns"));
+    }
+}

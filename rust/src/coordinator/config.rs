@@ -1,0 +1,152 @@
+//! Experiment configuration and dataset construction.
+//!
+//! A [`TrainConfig`] fully determines a run: model (manifest entry), sampler,
+//! sample size m, schedule, corpus scale and seeds. Configs can be built
+//! from CLI flags (`main.rs`) or programmatically (benches); either way the
+//! run is reproducible byte-for-byte from the config alone.
+
+use crate::data::{synptb::SynPtb, youtube::YouTube, Dataset};
+use crate::runtime::{ModelKind, ModelSpec};
+use crate::util::json::Value;
+use anyhow::Result;
+
+/// Everything one training run needs.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest model name (e.g. "ptb", "yt10k", "tiny").
+    pub model: String,
+    /// Sampler name (see sampler::build_sampler) or "full" for the
+    /// full-softmax baseline.
+    pub sampler: String,
+    /// Negatives per example.
+    pub m: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    pub epochs: usize,
+    /// Train-set scale: tokens (lm) or events (recsys).
+    pub train_size: usize,
+    /// Validation-set scale.
+    pub valid_size: usize,
+    /// Cap on steps per epoch (0 = no cap) — keeps figure sweeps tractable.
+    pub max_steps_per_epoch: usize,
+    /// Evaluate every k steps (0 = once per epoch).
+    pub eval_every: usize,
+    /// Cap on eval batches per evaluation (0 = all).
+    pub eval_batches: usize,
+    /// Sampling threads (0 = auto).
+    pub threads: usize,
+    /// Master seed: data, init and sampling streams derive from it.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tiny".into(),
+            sampler: "uniform".into(),
+            m: 8,
+            lr: 0.2,
+            epochs: 1,
+            train_size: 8_000,
+            valid_size: 1_000,
+            max_steps_per_epoch: 0,
+            eval_every: 0,
+            eval_batches: 20,
+            threads: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Identifier used in logs/metrics files.
+    pub fn run_id(&self) -> String {
+        if self.sampler == "full" {
+            format!("{}_full_lr{}_s{}", self.model, self.lr, self.seed)
+        } else {
+            format!("{}_{}_m{}_lr{}_s{}", self.model, self.sampler, self.m, self.lr, self.seed)
+        }
+    }
+
+    /// JSON form (written at the head of every metrics file).
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("model", Value::str(&self.model)),
+            ("sampler", Value::str(&self.sampler)),
+            ("m", Value::num(self.m as f64)),
+            ("lr", Value::num(self.lr as f64)),
+            ("epochs", Value::num(self.epochs as f64)),
+            ("train_size", Value::num(self.train_size as f64)),
+            ("valid_size", Value::num(self.valid_size as f64)),
+            ("max_steps_per_epoch", Value::num(self.max_steps_per_epoch as f64)),
+            ("eval_every", Value::num(self.eval_every as f64)),
+            ("eval_batches", Value::num(self.eval_batches as f64)),
+            ("threads", Value::num(self.threads as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+
+    /// Reasonable per-model defaults for lr and corpus scale (overridable).
+    pub fn with_model_defaults(mut self, spec: &ModelSpec) -> TrainConfig {
+        match spec.kind {
+            ModelKind::Lm => {
+                if self.lr == 0.0 {
+                    self.lr = 0.5;
+                }
+            }
+            ModelKind::Recsys => {
+                if self.lr == 0.0 {
+                    self.lr = 0.25;
+                }
+            }
+        }
+        self
+    }
+}
+
+/// Build the dataset a model spec calls for.
+pub fn build_dataset(spec: &ModelSpec, cfg: &TrainConfig) -> Result<Box<dyn Dataset>> {
+    let seed = cfg.seed ^ 0xDA7A_5EED;
+    Ok(match spec.kind {
+        ModelKind::Lm => Box::new(SynPtb::generate(
+            spec.n_classes,
+            spec.batch,
+            spec.seq_len.ok_or_else(|| anyhow::anyhow!("lm spec missing seq_len"))?,
+            cfg.train_size,
+            cfg.valid_size,
+            seed,
+        )),
+        ModelKind::Recsys => Box::new(YouTube::generate(
+            spec.n_classes,
+            spec.n_user_features
+                .ok_or_else(|| anyhow::anyhow!("recsys spec missing n_user_features"))?,
+            cfg.train_size,
+            cfg.valid_size,
+            spec.batch,
+            seed,
+        )),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_id_distinguishes_configs() {
+        let a = TrainConfig { sampler: "quadratic".into(), m: 32, ..Default::default() };
+        let b = TrainConfig { sampler: "quadratic".into(), m: 64, ..Default::default() };
+        let c = TrainConfig { sampler: "full".into(), ..Default::default() };
+        assert_ne!(a.run_id(), b.run_id());
+        assert!(c.run_id().contains("full") && !c.run_id().contains("_m"));
+    }
+
+    #[test]
+    fn json_roundtrip_has_all_fields() {
+        let cfg = TrainConfig::default();
+        let v = cfg.to_json();
+        for key in ["model", "sampler", "m", "lr", "epochs", "seed"] {
+            assert!(v.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Experiment grid runner — the machinery behind every figure.
+//!
+//! A [`GridSpec`] names a model, a list of samplers and a list of sample
+//! sizes m; [`run_grid`] trains every (sampler, m) cell from the same seed
+//! (identical init + data) and collects the eval-loss curves. The figure
+//! benches and the `kss experiment` subcommand are thin layers over this.
+
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::metrics::{EvalPoint, MetricsSink};
+use crate::coordinator::trainer::Trainer;
+use crate::runtime::Engine;
+use crate::util::json::Value;
+use anyhow::Result;
+use std::path::Path;
+
+/// A (sampler × m) sweep over one model.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    /// Base config: model, lr, schedule, seed (sampler/m are overridden).
+    pub base: TrainConfig,
+    pub samplers: Vec<String>,
+    pub ms: Vec<usize>,
+    /// Also run the full-softmax reference line.
+    pub include_full: bool,
+}
+
+/// One cell's outcome.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub sampler: String,
+    /// 0 for the full-softmax baseline.
+    pub m: usize,
+    pub final_loss: f64,
+    pub best_loss: f64,
+    pub curve: Vec<EvalPoint>,
+    pub wall_s: f64,
+}
+
+impl RunSummary {
+    pub fn label(&self) -> String {
+        if self.sampler == "full" {
+            "full".to_string()
+        } else {
+            format!("{} m={}", self.sampler, self.m)
+        }
+    }
+}
+
+/// Run every cell of the grid. `out_dir` (if given) receives one JSONL per
+/// run plus a `summary.json`.
+pub fn run_grid(engine: &Engine, grid: &GridSpec, out_dir: Option<&Path>) -> Result<Vec<RunSummary>> {
+    let mut summaries = Vec::new();
+    let mut cells: Vec<(String, usize)> = Vec::new();
+    if grid.include_full {
+        cells.push(("full".to_string(), 0));
+    }
+    for s in &grid.samplers {
+        for &m in &grid.ms {
+            cells.push((s.clone(), m));
+        }
+    }
+    for (sampler, m) in cells {
+        let mut cfg = grid.base.clone();
+        cfg.sampler = sampler.clone();
+        cfg.m = m;
+        let run_id = cfg.run_id();
+        let mut sink = match out_dir {
+            Some(dir) => MetricsSink::to_dir(dir, &run_id)?,
+            None => MetricsSink::memory(&run_id),
+        };
+        let t0 = std::time::Instant::now();
+        let mut trainer = Trainer::new(engine, cfg)?;
+        let res = trainer.train(&mut sink)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        crate::info!(
+            "grid cell {:<28} final {:.4} best {:.4} ({:.1}s)",
+            format!("{sampler} m={m}"),
+            res.final_loss,
+            res.best_loss,
+            wall_s
+        );
+        summaries.push(RunSummary {
+            sampler,
+            m,
+            final_loss: res.final_loss,
+            best_loss: res.best_loss,
+            curve: res.curve,
+            wall_s,
+        });
+    }
+    if let Some(dir) = out_dir {
+        let summary = summaries_to_json(&summaries);
+        std::fs::write(dir.join("summary.json"), summary.to_string_pretty())?;
+    }
+    Ok(summaries)
+}
+
+/// JSON dump of grid results (consumed by plotting / EXPERIMENTS.md).
+pub fn summaries_to_json(summaries: &[RunSummary]) -> Value {
+    Value::Array(
+        summaries
+            .iter()
+            .map(|s| {
+                Value::object(vec![
+                    ("sampler", Value::str(&s.sampler)),
+                    ("m", Value::num(s.m as f64)),
+                    ("final_loss", Value::num(s.final_loss)),
+                    ("best_loss", Value::num(s.best_loss)),
+                    ("wall_s", Value::num(s.wall_s)),
+                    (
+                        "curve",
+                        Value::Array(
+                            s.curve
+                                .iter()
+                                .map(|p| {
+                                    Value::object(vec![
+                                        ("epoch", Value::num(p.epoch)),
+                                        ("loss", Value::num(p.loss)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render a "final loss vs m" table (the paper's Figure-2 content) as text.
+pub fn bias_table(summaries: &[RunSummary], ms: &[usize]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<16}", "sampler"));
+    for &m in ms {
+        out.push_str(&format!(" {:>10}", format!("m={m}")));
+    }
+    out.push('\n');
+    let mut samplers: Vec<&str> = Vec::new();
+    for s in summaries {
+        if s.sampler != "full" && !samplers.contains(&s.sampler.as_str()) {
+            samplers.push(&s.sampler);
+        }
+    }
+    for sampler in samplers {
+        out.push_str(&format!("{sampler:<16}"));
+        for &m in ms {
+            match summaries.iter().find(|s| s.sampler == sampler && s.m == m) {
+                Some(s) => out.push_str(&format!(" {:>10.4}", s.final_loss)),
+                None => out.push_str(&format!(" {:>10}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    if let Some(full) = summaries.iter().find(|s| s.sampler == "full") {
+        out.push_str(&format!("{:<16} {:>10.4} (reference)\n", "full softmax", full.final_loss));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_summary(sampler: &str, m: usize, loss: f64) -> RunSummary {
+        RunSummary {
+            sampler: sampler.into(),
+            m,
+            final_loss: loss,
+            best_loss: loss,
+            curve: vec![EvalPoint { epoch: 1.0, step: 1, loss }],
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn bias_table_renders_rows_and_reference() {
+        let summaries = vec![
+            fake_summary("uniform", 8, 5.0),
+            fake_summary("uniform", 32, 4.5),
+            fake_summary("quadratic", 8, 4.2),
+            fake_summary("full", 0, 4.0),
+        ];
+        let table = bias_table(&summaries, &[8, 32]);
+        assert!(table.contains("uniform") && table.contains("quadratic"));
+        assert!(table.contains("5.0000") && table.contains("4.5000"));
+        assert!(table.contains("(reference)"));
+        assert!(table.contains('-'), "missing cells rendered as '-'");
+    }
+
+    #[test]
+    fn summaries_json_shape() {
+        let v = summaries_to_json(&[fake_summary("uniform", 8, 5.0)]);
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr[0].get("sampler").unwrap().as_str(), Some("uniform"));
+        assert_eq!(arr[0].get("curve").unwrap().as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(fake_summary("full", 0, 1.0).label(), "full");
+        assert_eq!(fake_summary("uniform", 8, 1.0).label(), "uniform m=8");
+    }
+}

@@ -1,0 +1,146 @@
+//! Metric sink: JSONL on disk + in-memory curves for the figure benches.
+//!
+//! Every record is one JSON object per line with a `kind` field:
+//! `config` (run header), `eval` (the full-softmax loss curve the paper
+//! plots), `epoch` (timing summary). Files live under `runs/<run_id>.jsonl`.
+
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// One evaluation point on a loss curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalPoint {
+    /// Fractional epoch (step / steps_per_epoch).
+    pub epoch: f64,
+    pub step: usize,
+    /// Mean full-softmax cross entropy on held-out data.
+    pub loss: f64,
+}
+
+impl EvalPoint {
+    /// Perplexity (the paper's PTB metric).
+    pub fn ppl(&self) -> f64 {
+        self.loss.exp()
+    }
+}
+
+/// Collects eval points; optionally streams them to a JSONL file.
+pub struct MetricsSink {
+    run_id: String,
+    writer: Option<BufWriter<File>>,
+    points: Vec<EvalPoint>,
+}
+
+impl MetricsSink {
+    /// In-memory only (benches that aggregate themselves).
+    pub fn memory(run_id: &str) -> MetricsSink {
+        MetricsSink { run_id: run_id.to_string(), writer: None, points: Vec::new() }
+    }
+
+    /// Stream to `<dir>/<run_id>.jsonl` as well.
+    pub fn to_dir(dir: &Path, run_id: &str) -> Result<MetricsSink> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let path = dir.join(format!("{run_id}.jsonl"));
+        let file = File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        Ok(MetricsSink {
+            run_id: run_id.to_string(),
+            writer: Some(BufWriter::new(file)),
+            points: Vec::new(),
+        })
+    }
+
+    pub fn run_id(&self) -> &str {
+        &self.run_id
+    }
+
+    fn write(&mut self, v: &Value) {
+        if let Some(w) = self.writer.as_mut() {
+            let _ = writeln!(w, "{}", v.to_string_compact());
+            let _ = w.flush();
+        }
+    }
+
+    /// Run header (config dump).
+    pub fn log_config(&mut self, cfg: &Value) {
+        let rec = Value::object(vec![
+            ("kind", Value::str("config")),
+            ("run_id", Value::str(&self.run_id)),
+            ("config", cfg.clone()),
+        ]);
+        self.write(&rec);
+    }
+
+    /// One eval point on the loss curve.
+    pub fn log_eval(&mut self, p: EvalPoint) {
+        self.points.push(p);
+        let rec = Value::object(vec![
+            ("kind", Value::str("eval")),
+            ("run_id", Value::str(&self.run_id)),
+            ("epoch", Value::num(p.epoch)),
+            ("step", Value::num(p.step as f64)),
+            ("loss", Value::num(p.loss)),
+            ("ppl", Value::num(p.ppl())),
+        ]);
+        self.write(&rec);
+    }
+
+    /// Free-form structured record (phase timings, sampler stats, ...).
+    pub fn log_record(&mut self, kind: &str, fields: Vec<(&str, Value)>) {
+        let mut all = vec![("kind", Value::str(kind)), ("run_id", Value::str(&self.run_id))];
+        all.extend(fields);
+        let rec = Value::object(all);
+        self.write(&rec);
+    }
+
+    /// The collected loss curve.
+    pub fn curve(&self) -> &[EvalPoint] {
+        &self.points
+    }
+
+    /// Final (last) eval loss.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    /// Best eval loss over the run.
+    pub fn best_loss(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.loss).min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn memory_sink_collects_curve() {
+        let mut sink = MetricsSink::memory("test");
+        sink.log_eval(EvalPoint { epoch: 0.5, step: 10, loss: 5.0 });
+        sink.log_eval(EvalPoint { epoch: 1.0, step: 20, loss: 4.0 });
+        assert_eq!(sink.curve().len(), 2);
+        assert_eq!(sink.final_loss(), Some(4.0));
+        assert_eq!(sink.best_loss(), Some(4.0));
+        assert!((sink.curve()[0].ppl() - 5.0f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let dir = std::env::temp_dir().join(format!("kss-metrics-{}", std::process::id()));
+        let mut sink = MetricsSink::to_dir(&dir, "run1").unwrap();
+        sink.log_config(&Value::object(vec![("m", Value::num(8.0))]));
+        sink.log_eval(EvalPoint { epoch: 1.0, step: 5, loss: 3.0 });
+        sink.log_record("phase", vec![("encode_s", Value::num(0.1))]);
+        drop(sink);
+        let text = std::fs::read_to_string(dir.join("run1.jsonl")).unwrap();
+        let recs = json::parse_jsonl(&text).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].get("kind").unwrap().as_str(), Some("config"));
+        assert_eq!(recs[1].get("loss").unwrap().as_f64(), Some(3.0));
+        assert_eq!(recs[2].get("encode_s").unwrap().as_f64(), Some(0.1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

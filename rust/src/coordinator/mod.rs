@@ -1,0 +1,20 @@
+//! The coordinator: everything between the datasets and the PJRT runtime.
+//!
+//! * [`config`] — experiment configuration (model, sampler, m, schedule) and
+//!   dataset construction.
+//! * [`trainer`] — the training loop implementing the paper's procedure:
+//!   encode → per-example negative sampling (threadpool) → sampled-softmax
+//!   step → host-mirror/kernel-tree update; plus the full-softmax baseline
+//!   and the full-softmax evaluation the figures report.
+//! * [`metrics`] — JSONL metric sink + in-memory loss curves.
+//! * [`experiment`] — the (sampler × m) grid runner behind every figure.
+
+pub mod config;
+pub mod experiment;
+pub mod metrics;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use experiment::{run_grid, GridSpec, RunSummary};
+pub use metrics::MetricsSink;
+pub use trainer::{TrainResult, Trainer};

@@ -1,0 +1,417 @@
+//! The training loop — the paper's procedure, end to end:
+//!
+//! 1. `encode` (AOT artifact) produces the query embeddings `h` for the
+//!    batch (only when the sampler is adaptive; static samplers skip it);
+//!    `score_all` produces full logit rows for the exact/oracle samplers.
+//! 2. every example's `m` negatives are drawn in parallel (threadpool) from
+//!    the configured sampler, together with the eq. (2) corrections
+//!    `ln(m q)`;
+//! 3. the `train_sampled` artifact performs the fused sampled-softmax
+//!    forward/backward (Pallas kernel) + SGD update on-device;
+//! 4. the updated output-embedding rows (returned by the artifact for
+//!    exactly the sampled classes) patch the host mirror, and the kernel
+//!    tree updates its `z(C)` path statistics (Fig. 1(b)).
+//!
+//! The full-softmax baseline (`sampler = "full"`) replaces 1-4 with the
+//! `train_full` artifact. Evaluation is always the *full* softmax loss on
+//! held-out data — the quantity every figure in the paper plots.
+
+use crate::coordinator::config::{build_dataset, TrainConfig};
+use crate::coordinator::metrics::{EvalPoint, MetricsSink};
+use crate::data::{Batch, Dataset};
+use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
+use crate::sampler::{build_sampler, Sample, SampleInput, Sampler};
+use crate::util::rng::{splitmix64, Rng};
+use crate::util::stats::{PhaseTimes, Stopwatch};
+use crate::util::threadpool::{default_threads, par_for_each_mut};
+use anyhow::{Context, Result};
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub final_loss: f64,
+    pub best_loss: f64,
+    pub curve: Vec<EvalPoint>,
+    pub steps: usize,
+    /// Mean training loss of the last epoch (sampled objective, *not*
+    /// comparable across samplers — the eval curve is).
+    pub last_train_loss: f64,
+}
+
+/// Drives one run. Owns the parameters, sampler and dataset; borrows the
+/// engine (executable caches are shared across runs of the same model).
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    spec: ModelSpec,
+    cfg: TrainConfig,
+    pub store: ParamStore,
+    sampler: Option<Box<dyn Sampler>>,
+    dataset: Box<dyn Dataset>,
+    rng: Rng,
+    /// Per-phase wall-clock accounting (encode/sample/step/update/eval).
+    pub phases: PhaseTimes,
+    threads: usize,
+    step_count: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
+        let spec = engine.manifest().model(&cfg.model)?.clone();
+        let cfg = cfg.with_model_defaults(&spec);
+        let dataset = build_dataset(&spec, &cfg)?;
+        let store = ParamStore::init(&spec.params, splitmix64(&mut (cfg.seed ^ 0x1417)))?;
+        let sampler: Option<Box<dyn Sampler>> = if cfg.sampler == "full" {
+            None
+        } else {
+            let stats = dataset.stats();
+            Some(build_sampler(
+                &cfg.sampler,
+                spec.n_classes,
+                spec.d,
+                spec.alpha,
+                spec.abs_logits,
+                Some(&stats),
+                Some(store.out_w().as_f32()?),
+            )?)
+        };
+        let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+        let rng = Rng::new(cfg.seed ^ 0x7141_1e5);
+        Ok(Trainer {
+            engine,
+            spec,
+            cfg,
+            store,
+            sampler,
+            dataset,
+            rng,
+            phases: PhaseTimes::default(),
+            threads,
+            step_count: 0,
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn dataset(&self) -> &dyn Dataset {
+        self.dataset.as_ref()
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.step_count
+    }
+
+    /// Mean full-softmax CE on held-out data (capped at cfg.eval_batches).
+    pub fn eval(&mut self) -> Result<f64> {
+        let mut sw = Stopwatch::new();
+        let op = self.spec.op("eval_full")?.clone();
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let batches = self.dataset.eval_batches();
+        let cap = if self.cfg.eval_batches == 0 { batches.len() } else { self.cfg.eval_batches };
+        anyhow::ensure!(!batches.is_empty(), "no eval batches (valid_size too small)");
+        for batch in batches.iter().take(cap) {
+            let args = self.args_with(&batch.data, &[]);
+            let out = self.engine.execute(&op, self.store.len(), &args)?;
+            total += out[0].scalar()? as f64;
+            count += batch.n_examples();
+        }
+        self.phases.add("eval", sw.lap());
+        Ok(total / count as f64)
+    }
+
+    /// One sampled-softmax (or full-softmax) training step.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let loss = if self.sampler.is_none() {
+            self.step_full(batch)?
+        } else {
+            self.step_sampled(batch)?
+        };
+        self.step_count += 1;
+        Ok(loss)
+    }
+
+    fn step_full(&mut self, batch: &Batch) -> Result<f32> {
+        let mut sw = Stopwatch::new();
+        let op = self.spec.op("train_full")?.clone();
+        let lr = Tensor::scalar_f32(self.cfg.lr);
+        let args = self.args_with(&batch.data, &[&lr]);
+        let out = self.engine.execute(&op, self.store.len(), &args)?;
+        let n_p = self.store.len();
+        self.store.set_all(&out[..n_p])?;
+        self.phases.add("step", sw.lap());
+        out[n_p].scalar()
+    }
+
+    fn step_sampled(&mut self, batch: &Batch) -> Result<f32> {
+        let mut sw = Stopwatch::new();
+        let sampler = self.sampler.as_deref().expect("sampled step without sampler");
+        let needs = sampler.needs();
+        let n = batch.n_examples();
+        let m = self.cfg.m;
+        let s_dim = m + 1;
+        let d = self.spec.d;
+        let n_classes = self.spec.n_classes;
+
+        // 1. model-dependent inputs for the sampler
+        let h_tensor = if needs.h {
+            let op = self.spec.op("encode")?.clone();
+            let data = &batch.data[..op.inputs.len()];
+            let args = self.args_with(data, &[]);
+            let out = self.engine.execute(&op, self.store.len(), &args)?;
+            Some(out.into_iter().next().unwrap())
+        } else {
+            None
+        };
+        let logits_tensor = if needs.logits {
+            let op = self.spec.op("score_all")?.clone();
+            let data = &batch.data[..op.inputs.len()];
+            let args = self.args_with(data, &[]);
+            let out = self.engine.execute(&op, self.store.len(), &args)?;
+            Some(out.into_iter().next().unwrap())
+        } else {
+            None
+        };
+        self.phases.add("encode", sw.lap());
+
+        // 2. parallel negative sampling (deterministic per-row streams)
+        let h = h_tensor.as_ref().map(|t| t.as_f32()).transpose()?;
+        let logits = logits_tensor.as_ref().map(|t| t.as_f32()).transpose()?;
+        let step_seed = self.rng.next_u64();
+        let mut rows: Vec<Sample> = (0..n).map(|_| Sample::with_capacity(m)).collect();
+        {
+            let batch_prev = batch.prev.as_deref();
+            par_for_each_mut(&mut rows, self.threads, |i, out| {
+                let input = SampleInput {
+                    h: h.map(|hh| &hh[i * d..(i + 1) * d]),
+                    logits: logits.map(|ll| &ll[i * n_classes..(i + 1) * n_classes]),
+                    prev: batch_prev.map(|p| p[i]),
+                };
+                let mut rng = Rng::new(step_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                sampler
+                    .sample(&input, m, &mut rng, out)
+                    .expect("sampler failed (inputs were validated)");
+            });
+        }
+        // assemble neg (N, m), sub (N, m+1) and s (N, S) host-side
+        let mut neg = Vec::with_capacity(n * m);
+        let mut sub = Vec::with_capacity(n * s_dim);
+        let mut s_idx = Vec::with_capacity(n * s_dim);
+        for (i, row) in rows.iter().enumerate() {
+            debug_assert_eq!(row.classes.len(), m);
+            sub.push(0.0f32); // positive: uncorrected (eq. 2)
+            s_idx.push(batch.pos[i]);
+            for (&c, &q) in row.classes.iter().zip(&row.q) {
+                neg.push(c as i32);
+                sub.push(((m as f64) * q).ln() as f32);
+                s_idx.push(c as i32);
+            }
+        }
+        self.phases.add("sample", sw.lap());
+
+        // 3. fused sampled-softmax step on-device
+        let op = self.spec.train_sampled_op(m)?.clone();
+        let neg_t = Tensor::i32s(&[n, m], neg);
+        let sub_t = Tensor::f32s(&[n, s_dim], sub);
+        let lr = Tensor::scalar_f32(self.cfg.lr);
+        let args = self.args_with(&batch.data, &[&neg_t, &sub_t, &lr]);
+        let out = self.engine.execute(&op, self.store.len(), &args)?;
+        let n_p = self.store.len();
+        self.store.set_all(&out[..n_p])?;
+        let loss = out[n_p].scalar()?;
+        self.phases.add("step", sw.lap());
+
+        // 4. host mirror + adaptive-sampler update (Fig. 1(b))
+        let changed = self
+            .store
+            .apply_sampled_rows(&s_idx, &out[n_p + 1])
+            .context("applying updated rows")?;
+        if needs.h {
+            // flat copy of the changed rows (sorted + deduped by
+            // apply_sampled_rows), then one batched tree sweep
+            let mut rows_flat = Vec::with_capacity(changed.len() * d);
+            for &class in &changed {
+                rows_flat.extend_from_slice(self.store.out_row(class));
+            }
+            self.sampler.as_mut().unwrap().update_many(&changed, &rows_flat);
+        }
+        self.phases.add("update", sw.lap());
+        Ok(loss)
+    }
+
+    /// params + data (+ extras) in artifact order.
+    fn args_with<'a>(&'a self, data: &'a [Tensor], extra: &[&'a Tensor]) -> Vec<&'a Tensor> {
+        let mut args: Vec<&Tensor> = self.store.values().iter().collect();
+        args.extend(data.iter());
+        args.extend(extra.iter().copied());
+        args
+    }
+
+    /// Run the full schedule, logging eval points to the sink.
+    pub fn train(&mut self, metrics: &mut MetricsSink) -> Result<TrainResult> {
+        metrics.log_config(&self.cfg.to_json());
+        let initial = self.eval()?;
+        metrics.log_eval(EvalPoint { epoch: 0.0, step: 0, loss: initial });
+
+        let mut last_train_loss = f32::NAN;
+        for epoch in 0..self.cfg.epochs {
+            let mut batches = self.dataset.train_batches(epoch);
+            if self.cfg.max_steps_per_epoch > 0 {
+                batches.truncate(self.cfg.max_steps_per_epoch);
+            }
+            anyhow::ensure!(!batches.is_empty(), "no train batches (train_size too small)");
+            let steps_per_epoch = batches.len();
+            let mut train_loss_sum = 0.0f64;
+            for (bi, batch) in batches.iter().enumerate() {
+                let loss = self.step(batch)?;
+                train_loss_sum += loss as f64;
+                let step = epoch * steps_per_epoch + bi + 1;
+                if self.cfg.eval_every > 0 && step % self.cfg.eval_every == 0 {
+                    let loss = self.eval()?;
+                    let epoch_f = step as f64 / steps_per_epoch as f64;
+                    metrics.log_eval(EvalPoint { epoch: epoch_f, step, loss });
+                }
+            }
+            last_train_loss = (train_loss_sum / steps_per_epoch as f64) as f32;
+            let loss = self.eval()?;
+            let step = (epoch + 1) * steps_per_epoch;
+            metrics.log_eval(EvalPoint { epoch: (epoch + 1) as f64, step, loss });
+            crate::info!(
+                "[{}] epoch {}/{} eval_loss {:.4} (train {:.4})",
+                metrics.run_id(),
+                epoch + 1,
+                self.cfg.epochs,
+                loss,
+                last_train_loss
+            );
+        }
+        Ok(TrainResult {
+            final_loss: metrics.final_loss().unwrap_or(f64::NAN),
+            best_loss: metrics.best_loss().unwrap_or(f64::NAN),
+            curve: metrics.curve().to_vec(),
+            steps: self.step_count,
+            last_train_loss: last_train_loss as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Engine::new(&dir).unwrap())
+    }
+
+    fn tiny_cfg(sampler: &str, m: usize) -> TrainConfig {
+        TrainConfig {
+            model: "tiny".into(),
+            sampler: sampler.into(),
+            m,
+            lr: 0.3,
+            epochs: 1,
+            train_size: 640,
+            valid_size: 160,
+            eval_batches: 5,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_softmax_baseline_learns() {
+        let Some(engine) = engine() else { return };
+        let mut t = Trainer::new(&engine, tiny_cfg("full", 0)).unwrap();
+        let mut sink = MetricsSink::memory("t");
+        let res = t.train(&mut sink).unwrap();
+        assert!(res.steps > 10);
+        assert!(
+            res.final_loss < res.curve[0].loss - 0.1,
+            "full softmax must reduce eval loss: {:?}",
+            res.curve
+        );
+    }
+
+    #[test]
+    fn sampled_training_sampler_quality_ordering() {
+        // The paper's core claim at tiny scale: adaptive samplers (softmax =
+        // unbiased oracle, quadratic kernel) learn; uniform at small m
+        // (8 of 128 classes) is visibly biased and ends up worse.
+        let Some(engine) = engine() else { return };
+        let mut finals = std::collections::BTreeMap::new();
+        for sampler in ["uniform", "unigram", "softmax", "quadratic", "quadratic-flat", "quartic"] {
+            let mut t = Trainer::new(&engine, tiny_cfg(sampler, 8)).unwrap();
+            let mut sink = MetricsSink::memory(sampler);
+            let res = t.train(&mut sink).unwrap();
+            finals.insert(sampler, (res.curve[0].loss, res.final_loss));
+        }
+        for sampler in ["softmax", "quadratic", "quadratic-flat", "quartic"] {
+            let (initial, fin) = finals[sampler];
+            assert!(fin < initial - 0.05, "{sampler} failed to learn: {initial} -> {fin}");
+        }
+        // bias ordering (Figure 2's shape): model-adaptive < static
+        assert!(finals["softmax"].1 < finals["uniform"].1, "{finals:?}");
+        assert!(finals["quadratic"].1 < finals["uniform"].1, "{finals:?}");
+        // the tree sampler and its flat oracle must land close together
+        let diff = (finals["quadratic"].1 - finals["quadratic-flat"].1).abs();
+        assert!(diff < 0.25, "tree vs flat quadratic diverged: {finals:?}");
+    }
+
+    #[test]
+    fn bigram_on_lm_dataset_learns() {
+        let Some(engine) = engine() else { return };
+        let cfg = TrainConfig {
+            model: "tiny-lm".into(),
+            sampler: "bigram".into(),
+            m: 4,
+            lr: 0.5,
+            epochs: 1,
+            train_size: 3_000,
+            valid_size: 600,
+            eval_batches: 4,
+            max_steps_per_epoch: 60,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        let mut sink = MetricsSink::memory("bigram-lm");
+        let res = t.train(&mut sink).unwrap();
+        assert!(res.final_loss < res.curve[0].loss, "{:?}", res.curve);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let Some(engine) = engine() else { return };
+        let run = |seed: u64| {
+            let mut cfg = tiny_cfg("quadratic", 4);
+            cfg.seed = seed;
+            cfg.epochs = 1;
+            cfg.max_steps_per_epoch = 10;
+            let mut t = Trainer::new(&engine, cfg).unwrap();
+            let mut sink = MetricsSink::memory("det");
+            t.train(&mut sink).unwrap().final_loss
+        };
+        let a = run(9);
+        let b = run(9);
+        let c = run(10);
+        assert_eq!(a, b, "same seed must reproduce exactly");
+        assert_ne!(a, c, "different seed should differ");
+    }
+
+    #[test]
+    fn m_must_have_artifact() {
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg("uniform", 5); // no m=5 artifact for tiny
+        cfg.max_steps_per_epoch = 1;
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        let mut sink = MetricsSink::memory("bad-m");
+        let err = t.train(&mut sink).unwrap_err();
+        assert!(err.to_string().contains("m=5"), "{err}");
+    }
+}

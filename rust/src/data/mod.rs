@@ -1,0 +1,77 @@
+//! Synthetic datasets standing in for the paper's corpora (DESIGN.md §3).
+//!
+//! * [`synptb`] — a Penn-Tree-Bank-style token stream from a ground-truth
+//!   Markov (bigram) language with Zipf marginals: 10k-class vocabulary,
+//!   skewed frequencies, context-dependent successors (so unigram < bigram <
+//!   adaptive samplers, as in the paper's Figure 2 left).
+//! * [`youtube`] — a latent-factor next-watch generator: users with
+//!   preference clusters, Zipf item popularity, observable user features +
+//!   the three previously watched videos (the paper's YouTube10k/100k shape).
+//!
+//! Both are deterministic functions of a seed. A [`Dataset`] yields
+//! [`Batch`]es whose `data` tensors are already in the artifact input order,
+//! plus the per-example metadata the samplers need (positives, LM context).
+
+pub mod synptb;
+pub mod youtube;
+
+use crate::runtime::Tensor;
+use crate::sampler::CorpusStats;
+
+/// One training/eval batch, ready for the runtime.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Model data inputs in artifact order (lm: tokens, targets;
+    /// recsys: user, prev, pos) — exactly what train/eval ops expect after
+    /// the params.
+    pub data: Vec<Tensor>,
+    /// Positive class per example (N = batch positions).
+    pub pos: Vec<i32>,
+    /// Previous-token context per example (LM only; the bigram sampler's
+    /// conditioning variable).
+    pub prev: Option<Vec<u32>>,
+}
+
+impl Batch {
+    /// Number of training examples (softmax rows) in the batch.
+    pub fn n_examples(&self) -> usize {
+        self.pos.len()
+    }
+}
+
+/// A dataset: batches + the corpus statistics frequency samplers train on.
+pub trait Dataset: Send + Sync {
+    fn name(&self) -> &str;
+    fn n_classes(&self) -> usize;
+    /// Batches for one epoch (deterministic given the epoch index).
+    fn train_batches(&self, epoch: usize) -> Vec<Batch>;
+    /// Held-out batches for full-softmax evaluation.
+    fn eval_batches(&self) -> Vec<Batch>;
+    /// Corpus statistics (unigram counts; bigram pair counts for LM).
+    fn stats(&self) -> CorpusStats;
+    /// True for language-model datasets (prev context available).
+    fn is_lm(&self) -> bool;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::synptb::SynPtb;
+    use super::youtube::YouTube;
+    use super::*;
+
+    #[test]
+    fn batches_have_consistent_shapes() {
+        let ds = SynPtb::generate(200, 4, 5, 2_000, 400, 7);
+        for b in ds.train_batches(0).iter().take(3).chain(ds.eval_batches().iter().take(2)) {
+            assert_eq!(b.data.len(), 2);
+            assert_eq!(b.pos.len(), 20);
+            assert_eq!(b.prev.as_ref().unwrap().len(), 20);
+        }
+        let ds = YouTube::generate(300, 6, 1_000, 200, 16, 11);
+        for b in ds.train_batches(0).iter().take(3) {
+            assert_eq!(b.data.len(), 3);
+            assert_eq!(b.pos.len(), 16);
+            assert!(b.prev.is_none());
+        }
+    }
+}

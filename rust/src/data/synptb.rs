@@ -1,0 +1,247 @@
+//! Synthetic Penn-Tree-Bank stand-in (DESIGN.md §3).
+//!
+//! A ground-truth first-order Markov language over `n` word types:
+//!
+//! * marginals follow Zipf(1.05) — natural-language-like skew (this is what
+//!   makes the unigram sampler meaningful and uniform sampling bad);
+//! * each word type has a sparse successor table (`succ_k` successors with
+//!   geometric weights) blended with the global Zipf unigram:
+//!   `P(next | prev) = λ · sparse(prev) + (1 − λ) · zipf` — context carries
+//!   real signal (what the bigram sampler and the LSTM can exploit), with
+//!   enough entropy that sampling distributions matter.
+//!
+//! The corpus is one long walk of this chain, split into train/valid, and
+//! batched Zaremba-style: B parallel streams, length-T windows, targets
+//! shifted by one.
+
+use super::{Batch, Dataset};
+use crate::runtime::Tensor;
+use crate::sampler::CorpusStats;
+use crate::util::rng::{AliasTable, Rng, Zipf};
+use std::collections::BTreeMap;
+
+/// Generated corpus + ground truth.
+pub struct SynPtb {
+    n_vocab: usize,
+    batch: usize,
+    seq_len: usize,
+    train: Vec<u32>,
+    valid: Vec<u32>,
+}
+
+impl SynPtb {
+    /// Generate a corpus. `train_tokens`/`valid_tokens` are stream lengths.
+    ///
+    /// The default experiment scale (see coordinator::config) is 10k vocab /
+    /// ~200k train tokens — the paper's PTB has 10k / ~1M; the ratio of
+    /// steps to classes is preserved well enough for the bias phenomena.
+    pub fn generate(
+        n_vocab: usize,
+        batch: usize,
+        seq_len: usize,
+        train_tokens: usize,
+        valid_tokens: usize,
+        seed: u64,
+    ) -> SynPtb {
+        assert!(n_vocab >= 4);
+        let mut rng = Rng::new(seed ^ 0x5955_7eb1);
+        let zipf = Zipf::new(n_vocab, 1.05);
+        // map Zipf ranks to word ids with a fixed permutation so frequent
+        // ids are scattered (catches id-vs-rank confusions downstream)
+        let mut perm: Vec<u32> = (0..n_vocab as u32).collect();
+        rng.shuffle(&mut perm);
+
+        // sparse successor tables: succ_k successors, geometric weights
+        let succ_k = 24.min(n_vocab);
+        let lambda = 0.6;
+        let mut succ: Vec<(Vec<u32>, AliasTable)> = Vec::with_capacity(n_vocab);
+        for _ in 0..n_vocab {
+            let mut set: Vec<u32> = Vec::with_capacity(succ_k);
+            let mut weights: Vec<f64> = Vec::with_capacity(succ_k);
+            let mut w = 1.0f64;
+            for _ in 0..succ_k {
+                set.push(perm[zipf.sample(&mut rng)]);
+                weights.push(w);
+                w *= 0.8;
+            }
+            let alias = AliasTable::new(&weights).expect("geometric weights valid");
+            succ.push((set, alias));
+        }
+
+        let mut gen_stream = |len: usize, rng: &mut Rng| -> Vec<u32> {
+            let mut out = Vec::with_capacity(len);
+            let mut prev = perm[zipf.sample(rng)];
+            for _ in 0..len {
+                let next = if rng.bool(lambda) {
+                    let (set, alias) = &succ[prev as usize];
+                    set[alias.sample(rng)]
+                } else {
+                    perm[zipf.sample(rng)]
+                };
+                out.push(next);
+                prev = next;
+            }
+            out
+        };
+
+        let train = gen_stream(train_tokens, &mut rng);
+        let valid = gen_stream(valid_tokens, &mut rng);
+        SynPtb { n_vocab, batch, seq_len, train, valid }
+    }
+
+    /// Zaremba-style batching of a stream: B parallel substreams, windows of
+    /// T tokens, targets shifted by one.
+    fn batches_of(&self, stream: &[u32]) -> Vec<Batch> {
+        let (b, t) = (self.batch, self.seq_len);
+        let per_stream = stream.len() / b;
+        let windows = per_stream.saturating_sub(1) / t;
+        let mut out = Vec::with_capacity(windows);
+        for w in 0..windows {
+            let mut tokens = Vec::with_capacity(b * t);
+            let mut targets = Vec::with_capacity(b * t);
+            let mut prev = Vec::with_capacity(b * t);
+            for stream_i in 0..b {
+                let base = stream_i * per_stream + w * t;
+                for k in 0..t {
+                    let tok = stream[base + k];
+                    tokens.push(tok as i32);
+                    targets.push(stream[base + k + 1] as i32);
+                    // context preceding the *target* = current token
+                    prev.push(tok);
+                }
+            }
+            out.push(Batch {
+                data: vec![Tensor::i32s(&[b, t], tokens), Tensor::i32s(&[b, t], targets.clone())],
+                pos: targets,
+                prev: Some(prev),
+            });
+        }
+        out
+    }
+
+    pub fn train_tokens(&self) -> &[u32] {
+        &self.train
+    }
+}
+
+impl Dataset for SynPtb {
+    fn name(&self) -> &str {
+        "synptb"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_vocab
+    }
+
+    fn train_batches(&self, _epoch: usize) -> Vec<Batch> {
+        // the stream is fixed; epochs revisit it (classic LM training)
+        self.batches_of(&self.train)
+    }
+
+    fn eval_batches(&self) -> Vec<Batch> {
+        self.batches_of(&self.valid)
+    }
+
+    fn stats(&self) -> CorpusStats {
+        let mut counts = vec![0u64; self.n_vocab];
+        for &t in &self.train {
+            counts[t as usize] += 1;
+        }
+        // sparse bigram pair counts
+        let mut maps: Vec<BTreeMap<u32, u64>> = vec![BTreeMap::new(); self.n_vocab];
+        for pair in self.train.windows(2) {
+            *maps[pair[0] as usize].entry(pair[1]).or_insert(0) += 1;
+        }
+        let bigram = maps
+            .into_iter()
+            .map(|m| m.into_iter().collect::<Vec<(u32, u64)>>())
+            .collect();
+        CorpusStats { class_counts: counts, bigram_counts: Some(bigram) }
+    }
+
+    fn is_lm(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SynPtb {
+        SynPtb::generate(500, 4, 10, 20_000, 2_000, 42)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SynPtb::generate(100, 2, 5, 1000, 100, 1);
+        let b = SynPtb::generate(100, 2, 5, 1000, 100, 1);
+        let c = SynPtb::generate(100, 2, 5, 1000, 100, 2);
+        assert_eq!(a.train, b.train);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn zipf_skew_in_counts() {
+        let ds = small();
+        let stats = ds.stats();
+        let mut counts = stats.class_counts.clone();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: u64 = counts.iter().take(10).sum();
+        let total: u64 = counts.iter().sum();
+        assert_eq!(total as usize, ds.train.len());
+        assert!(
+            top10 as f64 > 0.15 * total as f64,
+            "top-10 words should carry substantial mass: {top10}/{total}"
+        );
+    }
+
+    #[test]
+    fn bigram_structure_present() {
+        // context must be predictive: average max successor prob >> unigram max
+        let ds = small();
+        let stats = ds.stats();
+        let bigram = stats.bigram_counts.as_ref().unwrap();
+        let mut predictive = 0.0;
+        let mut rows = 0.0;
+        for row in bigram.iter().filter(|r| r.iter().map(|&(_, c)| c).sum::<u64>() >= 20) {
+            let total: u64 = row.iter().map(|&(_, c)| c).sum();
+            let max: u64 = row.iter().map(|&(_, c)| c).max().unwrap();
+            predictive += max as f64 / total as f64;
+            rows += 1.0;
+        }
+        assert!(rows > 10.0, "need enough frequent contexts");
+        let avg = predictive / rows;
+        assert!(avg > 0.15, "successors should be predictable, got {avg}");
+    }
+
+    #[test]
+    fn batch_targets_are_shifted_tokens() {
+        let ds = small();
+        let batches = ds.train_batches(0);
+        assert!(!batches.is_empty());
+        let b0 = &batches[0];
+        let tokens = b0.data[0].as_i32().unwrap();
+        let targets = b0.data[1].as_i32().unwrap();
+        assert_eq!(tokens.len(), 40);
+        // stream 0, window 0: tokens are train[0..10], targets train[1..11]
+        for k in 0..10 {
+            assert_eq!(tokens[k], ds.train[k] as i32);
+            assert_eq!(targets[k], ds.train[k + 1] as i32);
+        }
+        // prev context equals the input token at each position
+        assert_eq!(b0.prev.as_ref().unwrap()[3], ds.train[3]);
+        // pos == flattened targets
+        assert_eq!(b0.pos, targets.to_vec());
+    }
+
+    #[test]
+    fn windows_cover_stream_without_overlap() {
+        let ds = SynPtb::generate(50, 2, 5, 200, 50, 3);
+        let batches = ds.train_batches(0);
+        // per_stream = 100, windows = 99/5 = 19
+        assert_eq!(batches.len(), 19);
+        let t1 = batches[1].data[0].as_i32().unwrap()[0];
+        assert_eq!(t1, ds.train[5] as i32, "window 1 starts at offset 5");
+    }
+}

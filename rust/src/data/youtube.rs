@@ -1,0 +1,276 @@
+//! YouTube-style next-watch generator (DESIGN.md §3).
+//!
+//! The paper's YouTube datasets are private; what the experiments need from
+//! them is (a) 10k/100k classes with skewed popularity and (b) an
+//! input-dependent output distribution a model can learn. This generator
+//! provides both with a known ground truth:
+//!
+//! * items get Zipf(1.1) global popularity;
+//! * users belong to one of `n_clusters` taste clusters; each cluster has
+//!   its own alias table over a cluster-specific Zipf reordering of a
+//!   catalog slice;
+//! * a user's next watch mixes taste (with their cluster's table) and
+//!   global popularity: `P(i | u) = μ · cluster_u(i) + (1 − μ) · pop(i)`;
+//! * the observable features are a noisy cluster one-hot (so the MLP can
+//!   infer the cluster) and the previous three watches.
+//!
+//! Watches are generated as short per-user sessions so `prev` is a real
+//! history, like the paper's "three previously watched videos".
+
+use super::{Batch, Dataset};
+use crate::runtime::Tensor;
+use crate::sampler::CorpusStats;
+use crate::util::rng::{AliasTable, Rng, Zipf};
+
+/// One training example.
+#[derive(Clone, Debug)]
+struct Event {
+    user_feat: Vec<f32>,
+    prev: [u32; 3],
+    pos: u32,
+}
+
+/// Generated dataset.
+pub struct YouTube {
+    n_items: usize,
+    n_features: usize,
+    batch: usize,
+    train: Vec<Event>,
+    valid: Vec<Event>,
+}
+
+impl YouTube {
+    /// Generate `train_events` + `train_events/10` validation events over an
+    /// `n_items` catalog. `n_features` is the user-feature width (must match
+    /// the model config's `n_user_features`).
+    pub fn generate(
+        n_items: usize,
+        n_features: usize,
+        train_events: usize,
+        valid_events: usize,
+        batch: usize,
+        seed: u64,
+    ) -> YouTube {
+        assert!(n_items >= 8 && n_features >= 2);
+        let mut rng = Rng::new(seed ^ 0x07be_11aa);
+        let n_clusters = n_features; // one taste dimension per feature
+        let pop = Zipf::new(n_items, 1.1);
+        let mut perm: Vec<u32> = (0..n_items as u32).collect();
+        rng.shuffle(&mut perm);
+
+        // per-cluster taste: a Zipf over a rotated slice of the catalog
+        let slice = (n_items / n_clusters).max(4);
+        let taste_zipf = Zipf::new(slice, 1.2);
+        let cluster_base: Vec<usize> = (0..n_clusters).map(|c| c * slice % n_items).collect();
+
+        let mu = 0.65;
+        let gen_events = |count: usize, rng: &mut Rng| -> Vec<Event> {
+            let mut events = Vec::with_capacity(count);
+            'outer: loop {
+                // one user session of 8 watches
+                let cluster = rng.range(0, n_clusters);
+                let mut feat = vec![0.0f32; n_features];
+                for (i, f) in feat.iter_mut().enumerate() {
+                    *f = if i == cluster { 1.0 } else { 0.0 } + rng.normal_f32(0.0, 0.25);
+                }
+                let mut draw = |rng: &mut Rng| -> u32 {
+                    if rng.bool(mu) {
+                        let off = taste_zipf.sample(rng);
+                        perm[(cluster_base[cluster] + off) % n_items]
+                    } else {
+                        perm[pop.sample(rng)]
+                    }
+                };
+                let mut hist = [draw(rng), draw(rng), draw(rng)];
+                for _ in 0..8 {
+                    let next = draw(rng);
+                    events.push(Event { user_feat: feat.clone(), prev: hist, pos: next });
+                    hist = [hist[1], hist[2], next];
+                    if events.len() >= count {
+                        break 'outer;
+                    }
+                }
+            }
+            events
+        };
+
+        let train = gen_events(train_events, &mut rng);
+        let valid = gen_events(valid_events, &mut rng);
+        YouTube { n_items, n_features, batch, train, valid }
+    }
+
+    fn batches_of(&self, events: &[Event]) -> Vec<Batch> {
+        let b = self.batch;
+        let n_batches = events.len() / b;
+        let mut out = Vec::with_capacity(n_batches);
+        for i in 0..n_batches {
+            let chunk = &events[i * b..(i + 1) * b];
+            let mut user = Vec::with_capacity(b * self.n_features);
+            let mut prev = Vec::with_capacity(b * 3);
+            let mut pos = Vec::with_capacity(b);
+            for e in chunk {
+                user.extend_from_slice(&e.user_feat);
+                prev.extend(e.prev.iter().map(|&x| x as i32));
+                pos.push(e.pos as i32);
+            }
+            out.push(Batch {
+                data: vec![
+                    Tensor::f32s(&[b, self.n_features], user),
+                    Tensor::i32s(&[b, 3], prev),
+                    Tensor::i32s(&[b], pos.clone()),
+                ],
+                pos,
+                prev: None,
+            });
+        }
+        out
+    }
+}
+
+impl Dataset for YouTube {
+    fn name(&self) -> &str {
+        "youtube"
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_items
+    }
+
+    fn train_batches(&self, _epoch: usize) -> Vec<Batch> {
+        self.batches_of(&self.train)
+    }
+
+    fn eval_batches(&self) -> Vec<Batch> {
+        self.batches_of(&self.valid)
+    }
+
+    fn stats(&self) -> CorpusStats {
+        let mut counts = vec![0u64; self.n_items];
+        for e in &self.train {
+            counts[e.pos as usize] += 1;
+        }
+        CorpusStats { class_counts: counts, bigram_counts: None }
+    }
+
+    fn is_lm(&self) -> bool {
+        false
+    }
+}
+
+/// Expose an alias-table check used by tests & the quickstart example:
+/// popularity sampling must roughly match empirical watch counts.
+pub fn popularity_alias(stats: &CorpusStats) -> Option<AliasTable> {
+    let w: Vec<f64> = stats.class_counts.iter().map(|&c| c as f64 + 1.0).collect();
+    AliasTable::new(&w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> YouTube {
+        YouTube::generate(512, 8, 8_000, 800, 16, 5)
+    }
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.train.len(), 8_000);
+        assert_eq!(a.valid.len(), 800);
+        assert_eq!(a.train[17].pos, b.train[17].pos);
+        assert_eq!(a.train[17].user_feat, b.train[17].user_feat);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let ds = small();
+        let stats = ds.stats();
+        let mut counts = stats.class_counts.clone();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top20: u64 = counts.iter().take(20).sum();
+        let total: u64 = counts.iter().sum();
+        assert!(top20 as f64 > 0.1 * total as f64, "top items should dominate: {top20}/{total}");
+        assert!(stats.bigram_counts.is_none());
+    }
+
+    #[test]
+    fn features_identify_clusters() {
+        // the argmax of the user features must correlate with which slice of
+        // the catalog the user watches (i.e. features carry signal)
+        let ds = small();
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for e in ds.train.iter().take(2000) {
+            let cluster = e
+                .user_feat
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            // crude: count it as agreement if another user with the same
+            // argmax watches the same item more often than chance would
+            total += 1;
+            agree += usize::from(cluster < 8); // placeholder always true
+        }
+        assert_eq!(agree, total); // structural sanity (features exist, bounded)
+        // real signal check: events from the same cluster share items more
+        // than events from different clusters
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let (mut same_n, mut diff_n) = (0.0f64, 0.0f64);
+        let events: Vec<_> = ds.train.iter().take(1500).collect();
+        for pair in events.chunks(2) {
+            if pair.len() < 2 {
+                break;
+            }
+            let c0 = argmax(&pair[0].user_feat);
+            let c1 = argmax(&pair[1].user_feat);
+            let overlap = f64::from(pair[0].pos == pair[1].pos);
+            if c0 == c1 {
+                same += overlap;
+                same_n += 1.0;
+            } else {
+                diff += overlap;
+                diff_n += 1.0;
+            }
+        }
+        let p_same = same / same_n.max(1.0);
+        let p_diff = diff / diff_n.max(1.0);
+        assert!(
+            p_same > p_diff,
+            "same-cluster users should collide on items more: {p_same} vs {p_diff}"
+        );
+    }
+
+    fn argmax(xs: &[f32]) -> usize {
+        xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    }
+
+    #[test]
+    fn history_rolls_forward() {
+        let ds = small();
+        // within a session, the previous event's pos enters the next prev
+        let mut found = false;
+        for w in ds.train.windows(2).take(500) {
+            if w[0].user_feat == w[1].user_feat {
+                assert_eq!(w[1].prev[2], w[0].pos, "history must roll");
+                found = true;
+            }
+        }
+        assert!(found, "sessions should span consecutive events");
+    }
+
+    #[test]
+    fn batch_layout() {
+        let ds = small();
+        let batches = ds.train_batches(0);
+        assert_eq!(batches.len(), 8_000 / 16);
+        let b0 = &batches[0];
+        assert_eq!(b0.data[0].shape(), &[16, 8]);
+        assert_eq!(b0.data[1].shape(), &[16, 3]);
+        assert_eq!(b0.data[2].shape(), &[16]);
+        assert_eq!(b0.data[2].as_i32().unwrap(), b0.pos.as_slice());
+    }
+}

@@ -1,0 +1,307 @@
+//! Hierarchical softmax baseline (paper §5.2, Goodman 2001).
+//!
+//! The main alternative family to sampled softmax: factor
+//! `p(y|x) = p(c_y|x) · p(y | c_y, x)` over `√n`-sized clusters so one
+//! training step costs `O(d·√n)` instead of `O(d·n)`. The paper's related
+//! work quotes Chen et al. (2015): HSM trains fast but converges to a
+//! *worse* model than full softmax (>10% perplexity gap), while sampled
+//! softmax with a good q approaches full softmax — that comparison is
+//! exactly what `benches/hsm_baseline.rs` measures on a synthetic task.
+//!
+//! Self-contained: its own two-level head, exact gradients (both softmaxes
+//! are small), SGD — no XLA involvement, so the comparison isolates the
+//! output-layer method.
+
+use crate::util::rng::Rng;
+
+/// Cluster assignment: contiguous frequency bins (Mikolov et al. 2011 style
+/// "frequency binning": sort classes by frequency, cut into equal-mass
+/// bins). Returns (assignment per class, members per cluster).
+pub fn frequency_binning(counts: &[u64], n_clusters: usize) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let n = counts.len();
+    let n_clusters = n_clusters.clamp(1, n);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&c| std::cmp::Reverse(counts[c as usize]));
+    let total: u64 = counts.iter().sum::<u64>() + n as u64; // +1 smoothing
+    let per_bin = total as f64 / n_clusters as f64;
+    let mut assign = vec![0u32; n];
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); n_clusters];
+    let mut acc = 0.0f64;
+    let mut bin = 0usize;
+    for &class in &order {
+        if acc >= per_bin * (bin + 1) as f64 && bin + 1 < n_clusters {
+            bin += 1;
+        }
+        assign[class as usize] = bin as u32;
+        members[bin].push(class);
+        acc += (counts[class as usize] + 1) as f64;
+    }
+    // make sure no cluster is empty (move one member if needed)
+    for b in 0..n_clusters {
+        if members[b].is_empty() {
+            let donor = (0..n_clusters).max_by_key(|&i| members[i].len()).unwrap();
+            let class = members[donor].pop().unwrap();
+            assign[class as usize] = b as u32;
+            members[b].push(class);
+        }
+    }
+    (assign, members)
+}
+
+/// Two-level hierarchical softmax output head with SGD training.
+pub struct HsmHead {
+    d: usize,
+    assign: Vec<u32>,
+    members: Vec<Vec<u32>>,
+    /// (n_clusters, d) cluster logit vectors.
+    cluster_w: Vec<f32>,
+    /// (n, d) within-cluster class vectors.
+    class_w: Vec<f32>,
+}
+
+impl HsmHead {
+    pub fn new(counts: &[u64], d: usize, n_clusters: usize, rng: &mut Rng) -> HsmHead {
+        let n = counts.len();
+        let (assign, members) = frequency_binning(counts, n_clusters);
+        let mut cluster_w = vec![0.0f32; members.len() * d];
+        let mut class_w = vec![0.0f32; n * d];
+        rng.fill_normal(&mut cluster_w, 0.1);
+        rng.fill_normal(&mut class_w, 0.1);
+        HsmHead { d, assign, members, cluster_w, class_w }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.members.len()
+    }
+
+    /// -log p(y|h) under the factorization; O(d(√n + |cluster|)).
+    pub fn loss(&self, h: &[f32], y: u32) -> f64 {
+        let c = self.assign[y as usize] as usize;
+        let (lc, _) = self.softmax_over(h, None, c, y);
+        lc
+    }
+
+    /// One SGD step on example (h, y); returns the loss. Updates both levels
+    /// and returns d loss / d h in `dh` (so an encoder could backprop).
+    pub fn step(&mut self, h: &[f32], y: u32, lr: f32, dh: &mut [f32]) -> f64 {
+        let d = self.d;
+        let c = self.assign[y as usize] as usize;
+        dh.iter_mut().for_each(|x| *x = 0.0);
+
+        // level 1: cluster softmax over all clusters
+        let k = self.members.len();
+        let mut logits = vec![0.0f32; k];
+        for (j, slot) in logits.iter_mut().enumerate() {
+            *slot = dotf(&self.cluster_w[j * d..(j + 1) * d], h);
+        }
+        let p1 = softmax(&logits);
+        let loss1 = -(p1[c].max(1e-30)).ln();
+        for j in 0..k {
+            let g = (p1[j] - f64::from(j == c) as f64) as f32;
+            for t in 0..d {
+                dh[t] += g * self.cluster_w[j * d + t];
+                self.cluster_w[j * d + t] -= lr * g * h[t];
+            }
+        }
+
+        // level 2: class softmax within y's cluster
+        let members = self.members[c].clone();
+        let mut logits = vec![0.0f32; members.len()];
+        let mut y_pos = 0;
+        for (j, &class) in members.iter().enumerate() {
+            logits[j] = dotf(&self.class_w[class as usize * d..(class as usize + 1) * d], h);
+            if class == y {
+                y_pos = j;
+            }
+        }
+        let p2 = softmax(&logits);
+        let loss2 = -(p2[y_pos].max(1e-30)).ln();
+        for (j, &class) in members.iter().enumerate() {
+            let g = (p2[j] - f64::from(j == y_pos) as f64) as f32;
+            let row = &mut self.class_w[class as usize * d..(class as usize + 1) * d];
+            for t in 0..d {
+                dh[t] += g * row[t];
+                row[t] -= lr * g * h[t];
+            }
+        }
+        loss1 + loss2
+    }
+
+    /// Exact p(y|h) for evaluation (sums to 1 over all classes by
+    /// construction — verified in tests).
+    pub fn prob(&self, h: &[f32], y: u32) -> f64 {
+        let c = self.assign[y as usize] as usize;
+        let k = self.members.len();
+        let d = self.d;
+        let mut logits = vec![0.0f32; k];
+        for (j, slot) in logits.iter_mut().enumerate() {
+            *slot = dotf(&self.cluster_w[j * d..(j + 1) * d], h);
+        }
+        let p1 = softmax(&logits)[c];
+        let members = &self.members[c];
+        let mut logits = vec![0.0f32; members.len()];
+        let mut y_pos = 0;
+        for (j, &class) in members.iter().enumerate() {
+            logits[j] = dotf(&self.class_w[class as usize * d..(class as usize + 1) * d], h);
+            if class == y {
+                y_pos = j;
+            }
+        }
+        p1 * softmax(&logits)[y_pos]
+    }
+
+    fn softmax_over(&self, h: &[f32], _unused: Option<()>, c: usize, y: u32) -> (f64, usize) {
+        (-(self.prob(h, y).max(1e-300)).ln(), c)
+    }
+}
+
+/// Plain full-softmax head with SGD — the comparison baseline.
+pub struct FullHead {
+    d: usize,
+    w: Vec<f32>,
+}
+
+impl FullHead {
+    pub fn new(n: usize, d: usize, rng: &mut Rng) -> FullHead {
+        let mut w = vec![0.0f32; n * d];
+        rng.fill_normal(&mut w, 0.1);
+        FullHead { d, w }
+    }
+
+    pub fn loss(&self, h: &[f32], y: u32) -> f64 {
+        let n = self.w.len() / self.d;
+        let logits: Vec<f32> =
+            (0..n).map(|j| dotf(&self.w[j * self.d..(j + 1) * self.d], h)).collect();
+        -(softmax(&logits)[y as usize].max(1e-30)).ln()
+    }
+
+    pub fn step(&mut self, h: &[f32], y: u32, lr: f32) -> f64 {
+        let d = self.d;
+        let n = self.w.len() / d;
+        let logits: Vec<f32> = (0..n).map(|j| dotf(&self.w[j * d..(j + 1) * d], h)).collect();
+        let p = softmax(&logits);
+        let loss = -(p[y as usize].max(1e-30)).ln();
+        for j in 0..n {
+            let g = (p[j] - f64::from(j == y as usize) as f64) as f32;
+            let row = &mut self.w[j * d..(j + 1) * d];
+            for t in 0..d {
+                row[t] -= lr * g * h[t];
+            }
+        }
+        loss
+    }
+}
+
+fn dotf(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+fn softmax(o: &[f32]) -> Vec<f64> {
+    let mx = o.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let e: Vec<f64> = o.iter().map(|&x| (x as f64 - mx).exp()).collect();
+    let z: f64 = e.iter().sum();
+    e.into_iter().map(|x| x / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_binning_partitions_classes() {
+        let counts: Vec<u64> = (0..100).map(|i| (100 - i) * 10).collect();
+        let (assign, members) = frequency_binning(&counts, 10);
+        assert_eq!(members.len(), 10);
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 100);
+        for (b, m) in members.iter().enumerate() {
+            assert!(!m.is_empty(), "cluster {b} empty");
+            for &class in m {
+                assert_eq!(assign[class as usize], b as u32);
+            }
+        }
+        // frequent classes land in earlier (smaller) bins: bin 0 should have
+        // far fewer members than the last bin
+        assert!(members[0].len() < members[9].len());
+    }
+
+    #[test]
+    fn hsm_probabilities_sum_to_one() {
+        let mut rng = Rng::new(3);
+        let counts = vec![5u64; 30];
+        let head = HsmHead::new(&counts, 8, 6, &mut rng);
+        let h: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let total: f64 = (0..30).map(|y| head.prob(&h, y)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn hsm_learns_a_simple_mapping() {
+        // h is a noisy one-hot of the target's "concept"; HSM should learn it
+        let mut rng = Rng::new(7);
+        let (n, d) = (40usize, 16usize);
+        let counts = vec![1u64; n];
+        let mut head = HsmHead::new(&counts, d, 6, &mut rng);
+        let mut proto = vec![0.0f32; n * d];
+        rng.fill_normal(&mut proto, 1.0);
+        let mut dh = vec![0.0f32; d];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..4000 {
+            let y = rng.below(n as u64) as u32;
+            let h: Vec<f32> = proto[y as usize * d..(y as usize + 1) * d]
+                .iter()
+                .map(|&x| x + rng.normal_f32(0.0, 0.2))
+                .collect();
+            let loss = head.step(&h, y, 0.1, &mut dh);
+            if it < 100 {
+                first += loss / 100.0;
+            }
+            if it >= 3900 {
+                last += loss / 100.0;
+            }
+        }
+        assert!(last < first * 0.5, "HSM failed to learn: {first} -> {last}");
+    }
+
+    #[test]
+    fn full_head_learns_better_than_hsm_on_hard_task() {
+        // the §5.2 claim (Chen et al.): same budget, HSM converges worse.
+        // "hard" = class identity cuts across the frequency-binned clusters.
+        let mut rng = Rng::new(11);
+        let (n, d) = (60usize, 12usize);
+        let counts: Vec<u64> = (0..n as u64).map(|i| i * 3 + 1).collect();
+        let mut hsm = HsmHead::new(&counts, d, 8, &mut rng);
+        let mut full = FullHead::new(n, d, &mut rng);
+        let mut proto = vec![0.0f32; n * d];
+        rng.fill_normal(&mut proto, 0.7);
+        let mut dh = vec![0.0f32; d];
+        let gen = |rng: &mut Rng, proto: &[f32]| {
+            let y = rng.below(n as u64) as u32;
+            let h: Vec<f32> = proto[y as usize * d..(y as usize + 1) * d]
+                .iter()
+                .map(|&x| x + rng.normal_f32(0.0, 0.5))
+                .collect();
+            (y, h)
+        };
+        for _ in 0..6000 {
+            let (y, h) = gen(&mut rng, &proto);
+            hsm.step(&h, y, 0.08, &mut dh);
+            full.step(&h, y, 0.08);
+        }
+        // evaluate both with the *true* model-agnostic CE
+        let mut l_hsm = 0.0;
+        let mut l_full = 0.0;
+        for _ in 0..500 {
+            let (y, h) = gen(&mut rng, &proto);
+            l_hsm += -(hsm.prob(&h, y).max(1e-30)).ln();
+            l_full += full.loss(&h, y);
+        }
+        l_hsm /= 500.0;
+        l_full /= 500.0;
+        assert!(
+            l_full < l_hsm,
+            "full softmax should converge below HSM: full {l_full} vs hsm {l_hsm}"
+        );
+    }
+}

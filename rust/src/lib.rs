@@ -1,0 +1,48 @@
+//! # kernel-sampled-softmax (`kss`)
+//!
+//! A production-style reproduction of **"Adaptive Sampled Softmax with Kernel
+//! Based Sampling" (Blanc & Rendle, ICML 2018)** as a three-layer system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: kernel based
+//!   negative sampling with a divide-and-conquer tree over per-subset feature
+//!   summaries `z(C) = Σ φ(w_j)` (O(D log n) draws and updates), every
+//!   baseline sampler from the paper's evaluation, and the training
+//!   coordinator that drives AOT-compiled XLA train steps through PJRT.
+//! * **L2 (JAX, build time)** — the LSTM language model and retrieval MLP
+//!   whose sampled-softmax train/eval steps are lowered to HLO text by
+//!   `python/compile/aot.py`.
+//! * **L1 (Pallas, build time)** — the fused sampled-softmax loss/gradient
+//!   kernel called by L2 (`python/compile/kernels/sampled_softmax.py`).
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! compute graphs once, and the rust binary loads and executes them.
+//!
+//! Module layout:
+//!
+//! * [`util`] — in-tree substrates (PRNG, JSON, CLI, threadpool, stats,
+//!   property-test harness); the offline build has no external crates for
+//!   these.
+//! * [`sampler`] — the `Sampler` trait, the paper's kernel samplers
+//!   (quadratic/quartic; flat and tree-based) and the baselines (uniform,
+//!   unigram, bigram, exact softmax).
+//! * [`data`] — synthetic Penn-Tree-Bank-style corpus and YouTube-style
+//!   next-watch generators (substitutes for the paper's private datasets;
+//!   see DESIGN.md §3).
+//! * [`runtime`] — PJRT engine: artifact manifest, executables, literals,
+//!   parameter store.
+//! * [`coordinator`] — training loop, metrics, experiment grid runner,
+//!   config system.
+//! * [`hsm`] — hierarchical softmax baseline (related-work comparison).
+//! * [`bench_harness`] — timing/stats harness used by `benches/` (criterion
+//!   is unavailable offline).
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod hsm;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

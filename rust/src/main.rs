@@ -1,0 +1,172 @@
+//! `kss` — launcher for the kernel-sampled-softmax system.
+//!
+//! Subcommands:
+//!
+//! * `kss info` — list the models/artifacts in the manifest.
+//! * `kss train` — one training run (model × sampler × m), metrics to JSONL.
+//! * `kss experiment` — a (samplers × m) grid, the engine behind the paper's
+//!   figures; writes per-run JSONL + summary.json and prints the Figure-2
+//!   style bias table.
+//! * `kss demo` — 30-second tiny-model walkthrough of the whole stack.
+//!
+//! Artifacts must exist (`make artifacts`). Logging level: `KSS_LOG`.
+
+use anyhow::Result;
+use kss::coordinator::{run_grid, GridSpec, MetricsSink, TrainConfig, Trainer};
+use kss::runtime::Engine;
+use kss::util::cli::{Args, OptSpec};
+use kss::{error, info};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    kss::util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            error!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts".into()) },
+        OptSpec { name: "model", help: "manifest model name", default: Some("tiny".into()) },
+        OptSpec { name: "sampler", help: "sampler name or 'full'", default: Some("quadratic".into()) },
+        OptSpec { name: "samplers", help: "comma list (experiment)", default: None },
+        OptSpec { name: "m", help: "sample size(s), comma list", default: Some("8".into()) },
+        OptSpec { name: "lr", help: "SGD learning rate (0 = model default)", default: Some("0".into()) },
+        OptSpec { name: "epochs", help: "training epochs", default: Some("1".into()) },
+        OptSpec { name: "train-size", help: "train tokens/events", default: Some("8000".into()) },
+        OptSpec { name: "valid-size", help: "validation tokens/events", default: Some("1000".into()) },
+        OptSpec { name: "max-steps", help: "cap steps per epoch (0 = all)", default: Some("0".into()) },
+        OptSpec { name: "eval-every", help: "eval every k steps (0 = per epoch)", default: Some("0".into()) },
+        OptSpec { name: "eval-batches", help: "eval batch cap (0 = all)", default: Some("20".into()) },
+        OptSpec { name: "threads", help: "sampling threads (0 = auto)", default: Some("0".into()) },
+        OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
+        OptSpec { name: "out", help: "metrics output directory", default: Some("runs".into()) },
+        OptSpec { name: "full", help: "include full-softmax reference (experiment)", default: Some("true".into()) },
+    ]
+}
+
+fn parse_config(args: &Args) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        model: args.get_string_or("model", "tiny"),
+        sampler: args.get_string_or("sampler", "quadratic"),
+        m: args.get_usize_list("m", &[8])?[0],
+        lr: args.get_f64("lr", 0.0)? as f32,
+        epochs: args.get_usize("epochs", 1)?,
+        train_size: args.get_usize("train-size", 8_000)?,
+        valid_size: args.get_usize("valid-size", 1_000)?,
+        max_steps_per_epoch: args.get_usize("max-steps", 0)?,
+        eval_every: args.get_usize("eval-every", 0)?,
+        eval_batches: args.get_usize("eval-batches", 20)?,
+        threads: args.get_usize("threads", 0)?,
+        seed: args.get_u64("seed", 42)?,
+    })
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) if !c.starts_with("--") => (c.clone(), rest.to_vec()),
+        _ => ("help".to_string(), argv),
+    };
+    let args = Args::parse("kss <info|train|experiment|demo>", &rest, &specs(), &["help"])?;
+    if args.wants_help() || cmd == "help" {
+        println!("{}", args.usage());
+        println!("subcommands: info, train, experiment, demo");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get_string_or("artifacts", "artifacts"));
+    match cmd.as_str() {
+        "info" => info_cmd(&artifacts),
+        "train" => train_cmd(&artifacts, &args),
+        "experiment" => experiment_cmd(&artifacts, &args),
+        "demo" => demo_cmd(&artifacts),
+        other => anyhow::bail!("unknown subcommand '{other}' (info, train, experiment, demo)"),
+    }
+}
+
+fn info_cmd(artifacts: &Path) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    println!("platform: {}", engine.platform());
+    println!(
+        "{:<12} {:>8} {:>5} {:>6} {:>5} {:>8}  m values",
+        "model", "classes", "d", "batch", "abs", "kind"
+    );
+    for (name, spec) in &engine.manifest().models {
+        println!(
+            "{:<12} {:>8} {:>5} {:>6} {:>5} {:>8}  {:?}",
+            name,
+            spec.n_classes,
+            spec.d,
+            spec.batch,
+            spec.abs_logits,
+            format!("{:?}", spec.kind).to_lowercase(),
+            spec.available_m()
+        );
+    }
+    Ok(())
+}
+
+fn train_cmd(artifacts: &Path, args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    let cfg = parse_config(args)?;
+    let out = PathBuf::from(args.get_string_or("out", "runs"));
+    let run_id = cfg.run_id();
+    info!("training {run_id}");
+    let mut sink = MetricsSink::to_dir(&out, &run_id)?;
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let res = trainer.train(&mut sink)?;
+    println!("run {run_id}");
+    println!("  final eval loss {:.4} (ppl {:.2})", res.final_loss, res.final_loss.exp());
+    println!("  best  eval loss {:.4}", res.best_loss);
+    println!("  steps {}", res.steps);
+    println!("phase breakdown:\n{}", trainer.phases.report());
+    Ok(())
+}
+
+fn experiment_cmd(artifacts: &Path, args: &Args) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    let base = parse_config(args)?;
+    let samplers = match args.get_str("samplers") {
+        Some(_) => args.get_str_list("samplers", &[]),
+        None => vec![base.sampler.clone()],
+    };
+    let ms = args.get_usize_list("m", &[8])?;
+    let include_full = args.get_bool("full", true)?;
+    let out = PathBuf::from(args.get_string_or("out", "runs"));
+    let grid = GridSpec { base, samplers, ms: ms.clone(), include_full };
+    let summaries = run_grid(&engine, &grid, Some(&out))?;
+    println!("\nfinal full-softmax eval loss (bias table, Figure-2 style):");
+    print!("{}", kss::coordinator::experiment::bias_table(&summaries, &ms));
+    Ok(())
+}
+
+fn demo_cmd(artifacts: &Path) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    println!("kernel-sampled-softmax demo (tiny model, ~30s)\n");
+    let grid = GridSpec {
+        base: TrainConfig {
+            model: "tiny".into(),
+            epochs: 2,
+            train_size: 640,
+            valid_size: 160,
+            eval_batches: 5,
+            ..Default::default()
+        },
+        samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+        ms: vec![8],
+        include_full: true,
+    };
+    let summaries = run_grid(&engine, &grid, None)?;
+    println!("\nfinal eval loss after 2 epochs (m = 8 of 128 classes):");
+    for s in &summaries {
+        println!("  {:<16} {:.4}", s.label(), s.final_loss);
+    }
+    println!("\nExpected shape (paper Fig. 2): softmax ≈ full < quadratic << uniform.");
+    Ok(())
+}

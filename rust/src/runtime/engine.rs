@@ -1,0 +1,161 @@
+//! PJRT engine: compile HLO-text artifacts (lazily, cached) and execute.
+//!
+//! One [`Engine`] owns the CPU PJRT client and a cache of compiled
+//! executables keyed by artifact file. Executables are compiled the first
+//! time an op is needed — figure sweeps only pay for the m values they use.
+//!
+//! The interchange is HLO *text* (`HloModuleProto::from_text_file`): jax's
+//! serialized protos carry 64-bit instruction ids that this XLA build
+//! rejects, while the text parser reassigns ids (see DESIGN.md §2).
+
+use crate::runtime::manifest::{Manifest, OpSpec};
+use crate::runtime::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Compiled-executable cache + PJRT client. Not `Sync`: the coordinator owns
+/// it on one thread (sampling, not execution, is what we parallelize).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative number of execute() calls (metrics).
+    executions: RefCell<u64>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (loads the manifest).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            executions: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn executions(&self) -> u64 {
+        *self.executions.borrow()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables currently compiled.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an op with host tensors; returns the output tuple as host
+    /// tensors. Validates input arity against the op spec (params + data).
+    /// Takes references so callers can mix the param store's tensors with
+    /// batch tensors without cloning either.
+    pub fn execute(&self, op: &OpSpec, n_params: usize, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let expect = n_params + op.inputs.len();
+        if args.len() != expect {
+            bail!(
+                "op {}: expected {} inputs ({} params + {} data), got {}",
+                op.file,
+                expect,
+                n_params,
+                op.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(&op.file)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.execute_literals(&exe, &literals)
+    }
+
+    /// Low-level execute on literals (used by tests and the perf path).
+    pub fn execute_literals(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        *self.executions.borrow_mut() += 1;
+        let result = exe.execute::<xla::Literal>(args).context("PJRT execute")?;
+        let buffer = &result[0][0];
+        let tuple = buffer.to_literal_sync().context("fetching result")?;
+        // aot.py lowers with return_tuple=True: decompose into elements.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_compiles_and_executes_tiny_encode() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        let model = engine.manifest().model("tiny").unwrap().clone();
+        let op = model.op("encode").unwrap().clone();
+
+        // zero params + zero inputs => h must be b2 broadcast (all zeros here)
+        let mut owned: Vec<Tensor> =
+            model.params.iter().map(|p| Tensor::zeros_f32(&p.shape)).collect();
+        owned.push(Tensor::zeros_f32(&[model.batch, model.n_user_features.unwrap()]));
+        owned.push(Tensor::i32s(
+            &[model.batch, model.n_prev],
+            vec![0; model.batch * model.n_prev],
+        ));
+        let args: Vec<&Tensor> = owned.iter().collect();
+        let out = engine.execute(&op, model.params.len(), &args).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[model.n_examples, model.d]);
+        assert!(out[0].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert_eq!(engine.compiled_count(), 1);
+        assert_eq!(engine.executions(), 1);
+    }
+
+    #[test]
+    fn engine_rejects_wrong_arity() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        let model = engine.manifest().model("tiny").unwrap().clone();
+        let op = model.op("encode").unwrap().clone();
+        let err = engine.execute(&op, model.params.len(), &[]).unwrap_err();
+        assert!(err.to_string().contains("expected"));
+    }
+}

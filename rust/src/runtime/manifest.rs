@@ -1,0 +1,287 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single source of truth for the rust side: parameter
+//! order/shape/init, per-op artifact files, and input/output specs. The
+//! contract is documented in python/compile/model.py — params first, `lr`
+//! last for train ops; train ops return new params, loss, and (sampled only)
+//! the updated output-embedding rows.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which model family an entry describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Lm,
+    Recsys,
+}
+
+/// One parameter: name, shape and the initializer the ParamStore applies.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+/// One input or output of an op.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model configuration with all its artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub kind: ModelKind,
+    pub n_classes: usize,
+    pub d: usize,
+    pub batch: usize,
+    pub seq_len: Option<usize>,
+    pub n_user_features: Option<usize>,
+    pub n_prev: usize,
+    pub hidden: usize,
+    pub n_examples: usize,
+    pub abs_logits: bool,
+    /// Quadratic-kernel α recorded at lowering time (sampler must match).
+    pub alpha: f32,
+    pub params: Vec<ParamSpec>,
+    /// encode / score_all / eval_full / train_full.
+    pub ops: BTreeMap<String, OpSpec>,
+    /// train_sampled keyed by sample size m.
+    pub train_sampled: BTreeMap<usize, OpSpec>,
+}
+
+impl ModelSpec {
+    /// Available m values (sorted).
+    pub fn available_m(&self) -> Vec<usize> {
+        self.train_sampled.keys().copied().collect()
+    }
+
+    pub fn op(&self, name: &str) -> Result<&OpSpec> {
+        self.ops.get(name).ok_or_else(|| anyhow!("model {} has no op '{name}'", self.name))
+    }
+
+    pub fn train_sampled_op(&self, m: usize) -> Result<&OpSpec> {
+        self.train_sampled.get(&m).ok_or_else(|| {
+            anyhow!(
+                "model {} has no train_sampled artifact for m={m} (available: {:?}); \
+                 re-run `make artifacts` or `python -m compile.aot --configs {} --m {m}`",
+                self.name,
+                self.available_m(),
+                self.name
+            )
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated for testing).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut models = BTreeMap::new();
+        for (name, entry) in root.req("models")?.as_object().unwrap_or(&[]) {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("no model '{name}' in manifest (available: {:?})", self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelSpec> {
+    let kind = match v.req("model")?.as_str() {
+        Some("lm") => ModelKind::Lm,
+        Some("recsys") => ModelKind::Recsys,
+        other => bail!("model {name}: unknown kind {other:?}"),
+    };
+    let usize_of = |key: &str| -> Result<usize> {
+        v.req(key)?.as_usize().ok_or_else(|| anyhow!("model {name}: bad {key}"))
+    };
+    let opt_usize = |key: &str| v.get(key).and_then(|x| x.as_usize());
+
+    let params = v
+        .req("params")?
+        .as_array()
+        .ok_or_else(|| anyhow!("model {name}: params not a list"))?
+        .iter()
+        .map(|p| parse_param(name, p))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut ops = BTreeMap::new();
+    for (op_name, op) in v.req("ops")?.as_object().unwrap_or(&[]) {
+        ops.insert(op_name.clone(), parse_op(name, op)?);
+    }
+    let mut train_sampled = BTreeMap::new();
+    for (m_str, op) in v.req("train_sampled")?.as_object().unwrap_or(&[]) {
+        let m: usize = m_str.parse().map_err(|_| anyhow!("model {name}: bad m '{m_str}'"))?;
+        train_sampled.insert(m, parse_op(name, op)?);
+    }
+
+    Ok(ModelSpec {
+        name: name.to_string(),
+        kind,
+        n_classes: usize_of("n_classes")?,
+        d: usize_of("d")?,
+        batch: usize_of("batch")?,
+        seq_len: opt_usize("seq_len"),
+        n_user_features: opt_usize("n_user_features"),
+        n_prev: opt_usize("n_prev").unwrap_or(3),
+        hidden: opt_usize("hidden").unwrap_or(0),
+        n_examples: usize_of("n_examples")?,
+        abs_logits: v.req("abs_logits")?.as_bool().unwrap_or(false),
+        alpha: v.get("alpha").and_then(|x| x.as_f64()).unwrap_or(100.0) as f32,
+        params,
+        ops,
+        train_sampled,
+    })
+}
+
+fn parse_param(model: &str, v: &Value) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: v.req("name")?.as_str().ok_or_else(|| anyhow!("{model}: param name"))?.to_string(),
+        shape: parse_shape(v.req("shape")?)?,
+        init: v.req("init")?.as_str().unwrap_or("zeros").to_string(),
+    })
+}
+
+fn parse_op(model: &str, v: &Value) -> Result<OpSpec> {
+    let io = |key: &str| -> Result<Vec<IoSpec>> {
+        v.req(key)?
+            .as_array()
+            .ok_or_else(|| anyhow!("{model}: {key} not a list"))?
+            .iter()
+            .map(|x| {
+                Ok(IoSpec {
+                    name: x.req("name")?.as_str().unwrap_or("").to_string(),
+                    dtype: x.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+                    shape: parse_shape(x.req("shape")?)?,
+                })
+            })
+            .collect()
+    };
+    Ok(OpSpec {
+        file: v.req("file")?.as_str().ok_or_else(|| anyhow!("{model}: op file"))?.to_string(),
+        inputs: io("inputs")?,
+        outputs: io("outputs")?,
+    })
+}
+
+fn parse_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("shape not a list"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "tiny": {
+          "model": "recsys", "n_classes": 128, "d": 16, "batch": 8,
+          "seq_len": null, "n_user_features": 4, "n_prev": 3, "hidden": 32,
+          "n_examples": 8, "abs_logits": false, "alpha": 100.0,
+          "params": [
+            {"name": "item_emb", "shape": [128, 16], "init": "normal:0.1"},
+            {"name": "out_w", "shape": [128, 16], "init": "normal:0.1"}
+          ],
+          "ops": {
+            "encode": {"file": "tiny_encode.hlo.txt",
+              "inputs": [{"name": "user", "dtype": "f32", "shape": [8, 4]}],
+              "outputs": [{"name": "h", "dtype": "f32", "shape": [8, 16]}]}
+          },
+          "train_sampled": {
+            "4": {"file": "tiny_train_sampled_m4.hlo.txt",
+              "inputs": [{"name": "neg", "dtype": "i32", "shape": [8, 4]}],
+              "outputs": [{"name": "loss", "dtype": "f32", "shape": []}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let man = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let m = man.model("tiny").unwrap();
+        assert_eq!(m.kind, ModelKind::Recsys);
+        assert_eq!(m.n_classes, 128);
+        assert_eq!(m.params[0].name, "item_emb");
+        assert_eq!(m.params[0].shape, vec![128, 16]);
+        assert_eq!(m.op("encode").unwrap().file, "tiny_encode.hlo.txt");
+        assert_eq!(m.available_m(), vec![4]);
+        assert_eq!(m.train_sampled_op(4).unwrap().outputs[0].name, "loss");
+        assert!(m.train_sampled_op(8).is_err());
+        assert!(man.model("nope").is_err());
+        assert_eq!(man.artifact_path("x.hlo.txt"), PathBuf::from("/tmp/a/x.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "models": {}}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 1, "models": {}}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let tiny = man.model("tiny").unwrap();
+        assert_eq!(tiny.params.last().unwrap().name, "out_w");
+        for (_, op) in &tiny.ops {
+            assert!(man.artifact_path(&op.file).exists(), "{}", op.file);
+        }
+    }
+}

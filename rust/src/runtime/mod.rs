@@ -1,0 +1,23 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the bridge between the rust coordinator (L3) and the JAX/Pallas
+//! compute graphs (L2/L1). `python/compile/aot.py` lowers every entry point
+//! to `artifacts/*.hlo.txt` plus `artifacts/manifest.json`; at startup the
+//! coordinator builds an [`Engine`] which compiles artifacts lazily on a
+//! `PjRtClient::cpu()` and keeps them cached. Python never runs here.
+//!
+//! * [`manifest`] — typed view of manifest.json (models, params, op specs).
+//! * [`tensor`] — host-side tensors and Literal conversion.
+//! * [`engine`] — executable cache + execute.
+//! * [`params`] — parameter initialization (per manifest init specs) and the
+//!   host mirror of the output-embedding table the samplers read.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{IoSpec, Manifest, ModelKind, ModelSpec, OpSpec, ParamSpec};
+pub use params::ParamStore;
+pub use tensor::Tensor;

@@ -1,0 +1,212 @@
+//! Parameter store: host-side model parameters + the output-embedding mirror.
+//!
+//! Parameters are initialized in rust (deterministically, from the manifest's
+//! init specs — matching `ModelConfig.init_params` in spirit; exact RNG
+//! parity with jax is not required, only distributional parity) and round-trip
+//! through every train step: fed in as literals, replaced by the returned
+//! updated params.
+//!
+//! The samplers need host access to the *output* embedding table `out_w`
+//! (the kernel tree computes φ(w_i), the exact samplers compute logits): the
+//! store exposes it and applies the sparse row updates `train_sampled`
+//! returns, reporting which classes changed so the tree can update its
+//! `z(C)` path statistics (paper Fig. 1(b)).
+
+use crate::runtime::manifest::ParamSpec;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Host-side parameters in manifest order.
+pub struct ParamStore {
+    specs: Vec<ParamSpec>,
+    values: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize from specs with a seeded RNG.
+    pub fn init(specs: &[ParamSpec], seed: u64) -> Result<ParamStore> {
+        let mut rng = Rng::new(seed);
+        let mut values = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let len: usize = spec.shape.iter().product();
+            let mut data = vec![0.0f32; len];
+            if spec.init == "zeros" {
+                // leave zeros
+            } else if let Some(std) = spec.init.strip_prefix("normal:") {
+                let std: f32 = std.parse().map_err(|_| {
+                    anyhow::anyhow!("param {}: bad init '{}'", spec.name, spec.init)
+                })?;
+                rng.fill_normal(&mut data, std);
+            } else if spec.init == "glorot" {
+                let fan_in = *spec.shape.first().unwrap_or(&1) as f32;
+                let fan_out = *spec.shape.last().unwrap_or(&1) as f32;
+                let std = (2.0 / (fan_in + fan_out)).sqrt();
+                rng.fill_normal(&mut data, std);
+            } else {
+                bail!("param {}: unknown init '{}'", spec.name, spec.init);
+            }
+            values.push(Tensor::f32s(&spec.shape, data));
+        }
+        Ok(ParamStore { specs: specs.to_vec(), values })
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    pub fn values(&self) -> &[Tensor] {
+        &self.values
+    }
+
+    /// Total number of scalar parameters (model size).
+    pub fn n_scalars(&self) -> usize {
+        self.values.iter().map(|t| t.len()).sum()
+    }
+
+    /// Replace all parameters (the leading outputs of a train step).
+    pub fn set_all(&mut self, new_values: &[Tensor]) -> Result<()> {
+        if new_values.len() != self.values.len() {
+            bail!("expected {} params, got {}", self.values.len(), new_values.len());
+        }
+        for (cur, new) in self.values.iter_mut().zip(new_values) {
+            if cur.shape() != new.shape() {
+                bail!("param shape changed: {:?} -> {:?}", cur.shape(), new.shape());
+            }
+            *cur = new.clone();
+        }
+        Ok(())
+    }
+
+    /// The output-embedding table (last param by convention), as (n, d) rows.
+    pub fn out_w(&self) -> &Tensor {
+        self.values.last().expect("no params")
+    }
+
+    /// One row of the output embedding table.
+    pub fn out_row(&self, class: usize) -> &[f32] {
+        let t = self.out_w();
+        let d = t.shape()[1];
+        &t.as_f32().unwrap()[class * d..(class + 1) * d]
+    }
+
+    /// Apply the `rows` output of train_sampled: for each example the
+    /// (S = m+1) sampled classes' *post-update* embeddings. Writes them into
+    /// the host mirror and returns the sorted, deduplicated list of classes
+    /// that changed (the tree-update work list).
+    ///
+    /// `s` is (N, S) class indices (positive at column 0), `rows` is
+    /// (N, S, d) — both exactly as the artifact produced them.
+    pub fn apply_sampled_rows(&mut self, s: &[i32], rows: &Tensor) -> Result<Vec<usize>> {
+        let dims = rows.shape().to_vec();
+        if dims.len() != 3 {
+            bail!("rows must be (N, S, d), got {dims:?}");
+        }
+        let (n, sdim, d) = (dims[0], dims[1], dims[2]);
+        if s.len() != n * sdim {
+            bail!("s has {} entries, expected {}", s.len(), n * sdim);
+        }
+        let out_t = self.values.last_mut().expect("no params");
+        let out_shape = out_t.shape().to_vec();
+        if out_shape[1] != d {
+            bail!("row width {} != out_w width {}", d, out_shape[1]);
+        }
+        let out = out_t.as_f32_mut()?;
+        let data = rows.as_f32()?.to_vec();
+        let mut changed: Vec<usize> = Vec::with_capacity(s.len());
+        for i in 0..n * sdim {
+            let class = s[i] as usize;
+            if class >= out_shape[0] {
+                bail!("class index {class} out of range {}", out_shape[0]);
+            }
+            out[class * d..(class + 1) * d].copy_from_slice(&data[i * d..(i + 1) * d]);
+            changed.push(class);
+        }
+        changed.sort_unstable();
+        changed.dedup();
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "emb".into(), shape: vec![10, 4], init: "normal:0.1".into() },
+            ParamSpec { name: "w".into(), shape: vec![4, 8], init: "glorot".into() },
+            ParamSpec { name: "b".into(), shape: vec![8], init: "zeros".into() },
+            ParamSpec { name: "out_w".into(), shape: vec![10, 4], init: "normal:0.1".into() },
+        ]
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let store = ParamStore::init(&specs(), 1).unwrap();
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.n_scalars(), 40 + 32 + 8 + 40);
+        assert!(store.values()[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        let emb = store.values()[0].as_f32().unwrap();
+        assert!(emb.iter().any(|&x| x != 0.0));
+        // std ≈ 0.1
+        let var: f32 = emb.iter().map(|x| x * x).sum::<f32>() / emb.len() as f32;
+        assert!(var.sqrt() < 0.2, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let a = ParamStore::init(&specs(), 7).unwrap();
+        let b = ParamStore::init(&specs(), 7).unwrap();
+        let c = ParamStore::init(&specs(), 8).unwrap();
+        assert_eq!(a.values()[0], b.values()[0]);
+        assert_ne!(a.values()[0], c.values()[0]);
+    }
+
+    #[test]
+    fn apply_sampled_rows_updates_mirror() {
+        let mut store = ParamStore::init(&specs(), 3).unwrap();
+        let before = store.out_row(5).to_vec();
+        // N=2 examples, S=2 (pos + 1 neg), d=4
+        let s = vec![5i32, 2, 7, 2];
+        let rows = Tensor::f32s(&[2, 2, 4], (0..16).map(|x| x as f32).collect());
+        let changed = store.apply_sampled_rows(&s, &rows).unwrap();
+        assert_eq!(changed, vec![2, 5, 7]);
+        assert_eq!(store.out_row(5), &[0.0, 1.0, 2.0, 3.0]);
+        // class 2 appears twice; the LAST write wins (values identical in
+        // real steps since both gathers read the same updated table)
+        assert_eq!(store.out_row(2), &[12.0, 13.0, 14.0, 15.0]);
+        assert_eq!(store.out_row(7), &[8.0, 9.0, 10.0, 11.0]);
+        assert_ne!(store.out_row(5), before.as_slice());
+    }
+
+    #[test]
+    fn apply_sampled_rows_validates() {
+        let mut store = ParamStore::init(&specs(), 3).unwrap();
+        let rows = Tensor::f32s(&[1, 1, 4], vec![0.0; 4]);
+        assert!(store.apply_sampled_rows(&[99], &rows).is_err()); // class oob
+        assert!(store.apply_sampled_rows(&[0, 1], &rows).is_err()); // s len
+        let bad = Tensor::f32s(&[1, 4], vec![0.0; 4]);
+        assert!(store.apply_sampled_rows(&[0], &bad).is_err()); // rank
+    }
+
+    #[test]
+    fn set_all_validates_shapes() {
+        let mut store = ParamStore::init(&specs(), 1).unwrap();
+        let mut vals: Vec<Tensor> = store.values().to_vec();
+        vals[0] = Tensor::zeros_f32(&[10, 4]);
+        store.set_all(&vals).unwrap();
+        assert!(store.values()[0].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(store.set_all(&vals[..2]).is_err());
+        vals[1] = Tensor::zeros_f32(&[1]);
+        assert!(store.set_all(&vals).is_err());
+    }
+}

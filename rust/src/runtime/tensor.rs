@@ -1,0 +1,157 @@
+//! Host-side tensors and conversion to/from XLA literals.
+//!
+//! The coordinator keeps parameters and batch data as [`Tensor`]s and
+//! converts them to `xla::Literal`s at the execute boundary. Only the two
+//! dtypes the models use (f32, i32) are supported; everything is row-major.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A host tensor: shape + row-major data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32s(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32s(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {} not f32", self.dtype_name())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is {} not i32", self.dtype_name())),
+        }
+    }
+
+    /// First element as f32 (scalar outputs like the loss).
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.as_f32()?.first().copied().ok_or_else(|| anyhow!("empty tensor"))?)
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+                    .context("creating f32 literal")?
+            }
+            Tensor::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+                    .context("creating i32 literal")?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert an XLA literal back to a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32s(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_and_scalar() {
+        let t = Tensor::i32s(&[4], vec![7, -1, 0, 3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = Tensor::scalar_f32(2.5);
+        let back = Tensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(back.scalar().unwrap(), 2.5);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::f32s(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_errors() {
+        let t = Tensor::i32s(&[1], vec![1]);
+        assert!(t.as_f32().is_err());
+        assert!(t.scalar().is_err());
+        let f = Tensor::zeros_f32(&[3]);
+        assert!(f.as_i32().is_err());
+        assert_eq!(f.len(), 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bigram sampling, `q(i | prev) ∝ count(prev, i)` with unigram back-off —
+//! the strongest static NLP baseline in the paper's Penn-Tree-Bank figures
+//! (and exactly the kind of *context-dependent but model-independent*
+//! distribution §2.4 argues is still not good enough: it cannot follow the
+//! model's parameters as they move).
+//!
+//! q(i | prev) = λ · bigram(i | prev) + (1 − λ) · unigram(i)
+//!
+//! Sampling is O(1): flip λ, then draw from the per-context alias table (or
+//! the unigram table). The reported q is the exact mixture probability, so
+//! the eq. (2) correction stays unbiased in the m → ∞ limit.
+
+use super::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{AliasTable, Rng};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+struct ContextTable {
+    alias: AliasTable,
+    /// class -> index in the alias table (sparse successor set).
+    classes: Vec<u32>,
+    prob_by_class: HashMap<u32, f64>,
+}
+
+/// Mixture-of-bigram-and-unigram sampler.
+pub struct BigramSampler {
+    unigram: AliasTable,
+    contexts: Vec<Option<ContextTable>>,
+    lambda: f64,
+}
+
+impl BigramSampler {
+    /// `pair_counts[prev]` lists (next, count) pairs observed in the corpus.
+    pub fn new(class_counts: &[u64], pair_counts: &[Vec<(u32, u64)>], lambda: f64) -> Result<BigramSampler> {
+        assert!((0.0..=1.0).contains(&lambda));
+        let weights: Vec<f64> = class_counts.iter().map(|&c| c as f64 + 1.0).collect();
+        let unigram = AliasTable::new(&weights).context("degenerate unigram counts")?;
+        let mut contexts = Vec::with_capacity(pair_counts.len());
+        for pairs in pair_counts {
+            if pairs.is_empty() {
+                contexts.push(None);
+                continue;
+            }
+            let ws: Vec<f64> = pairs.iter().map(|&(_, c)| c as f64).collect();
+            let alias = AliasTable::new(&ws).context("degenerate bigram row")?;
+            let classes: Vec<u32> = pairs.iter().map(|&(c, _)| c).collect();
+            let prob_by_class =
+                classes.iter().enumerate().map(|(j, &c)| (c, alias.prob_of(j))).collect();
+            contexts.push(Some(ContextTable { alias, classes, prob_by_class }));
+        }
+        Ok(BigramSampler { unigram, contexts, lambda })
+    }
+
+    fn mixture_prob(&self, prev: u32, class: u32) -> f64 {
+        let uni = self.unigram.prob_of(class as usize);
+        match self.contexts.get(prev as usize).and_then(|c| c.as_ref()) {
+            None => uni, // no bigram row: pure unigram
+            Some(ctx) => {
+                let bi = ctx.prob_by_class.get(&class).copied().unwrap_or(0.0);
+                self.lambda * bi + (1.0 - self.lambda) * uni
+            }
+        }
+    }
+}
+
+impl Sampler for BigramSampler {
+    fn name(&self) -> &str {
+        "bigram"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { prev: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let prev = input.prev.ok_or_else(|| anyhow::anyhow!("bigram sampler needs prev token"))?;
+        out.clear();
+        let ctx = self.contexts.get(prev as usize).and_then(|c| c.as_ref());
+        for _ in 0..m {
+            let class = match ctx {
+                Some(ctx) if rng.bool(self.lambda) => ctx.classes[ctx.alias.sample(rng)],
+                _ => self.unigram.sample(rng) as u32,
+            };
+            out.push(class, self.mixture_prob(prev, class));
+        }
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        input.prev.map(|p| self.mixture_prob(p, class))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::test_util::empirical_tv;
+
+    fn sampler() -> BigramSampler {
+        // 4 classes; context 0 strongly prefers class 2; context 1 unseen.
+        let class_counts = vec![9u64, 19, 4, 3]; // +1 => 10,20,5,4
+        let pairs = vec![vec![(2u32, 8u64), (0, 2)], vec![]];
+        BigramSampler::new(&class_counts, &pairs, 0.8).unwrap()
+    }
+
+    #[test]
+    fn mixture_probabilities_sum_to_one() {
+        let s = sampler();
+        for prev in [0u32, 1] {
+            let total: f64 = (0..4)
+                .map(|c| s.prob(&SampleInput { prev: Some(prev), ..Default::default() }, c).unwrap())
+                .sum();
+            assert!((total - 1.0).abs() < 1e-12, "prev={prev}: {total}");
+        }
+    }
+
+    #[test]
+    fn context_shifts_distribution() {
+        let s = sampler();
+        let in0 = SampleInput { prev: Some(0), ..Default::default() };
+        let in1 = SampleInput { prev: Some(1), ..Default::default() };
+        // class 2 boosted after context 0: λ·0.8 + (1-λ)·5/39
+        let q2_ctx0 = s.prob(&in0, 2).unwrap();
+        let q2_ctx1 = s.prob(&in1, 2).unwrap();
+        assert!(q2_ctx0 > 4.0 * q2_ctx1, "{q2_ctx0} vs {q2_ctx1}");
+        // unseen context falls back to unigram exactly
+        assert!((q2_ctx1 - 5.0 / 39.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_matches_mixture() {
+        let s = sampler();
+        let in0 = SampleInput { prev: Some(0), ..Default::default() };
+        let expected: Vec<f64> = (0..4).map(|c| s.prob(&in0, c).unwrap()).collect();
+        let tv = empirical_tv(&s, &in0, &expected, 200_000, 11);
+        assert!(tv < 0.02, "tv {tv}");
+    }
+
+    #[test]
+    fn missing_prev_is_error() {
+        let s = sampler();
+        let mut rng = Rng::new(0);
+        let mut out = Sample::default();
+        assert!(s.sample(&SampleInput::default(), 4, &mut rng, &mut out).is_err());
+    }
+}

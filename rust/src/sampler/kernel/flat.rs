@@ -1,0 +1,99 @@
+//! Flat (exact, O(n)) kernel sampling — the oracle the tree is tested
+//! against, and the only implementation for kernels whose feature map is
+//! intractable (quartic: D = O(d⁴)).
+//!
+//! Consumes the logits row `o = W h` (from the score_all artifact, the same
+//! input the exact-softmax sampler uses) since both of the paper's kernels
+//! are functions of the dot product: `K = f(⟨h, w_i⟩)`.
+
+use super::KernelKind;
+use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{Cdf, Rng};
+use anyhow::Result;
+
+/// Exact sampler for `q_i ∝ f(o_i)`.
+pub struct FlatKernelSampler {
+    kind: KernelKind,
+}
+
+impl FlatKernelSampler {
+    pub fn new(kind: KernelKind) -> FlatKernelSampler {
+        FlatKernelSampler { kind }
+    }
+
+    fn weights(&self, logits: &[f32]) -> Vec<f32> {
+        logits.iter().map(|&o| self.kind.weight(o) as f32).collect()
+    }
+}
+
+impl Sampler for FlatKernelSampler {
+    fn name(&self) -> &str {
+        self.kind.name()
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { logits: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let logits =
+            input.logits.ok_or_else(|| anyhow::anyhow!("flat kernel sampler needs logits"))?;
+        out.clear();
+        let w = self.weights(logits);
+        let cdf = Cdf::new(&w).ok_or_else(|| anyhow::anyhow!("degenerate kernel weights"))?;
+        for _ in 0..m {
+            let c = cdf.sample(rng);
+            out.push(c as u32, cdf.prob(c));
+        }
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let logits = input.logits?;
+        let total: f64 = logits.iter().map(|&o| self.kind.weight(o)).sum();
+        Some(self.kind.weight(logits[class as usize]) / total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::test_util::empirical_tv;
+
+    #[test]
+    fn quadratic_flat_matches_kernel_distribution() {
+        let logits = vec![0.0f32, 1.0, -1.0, 2.0, 0.5];
+        let s = FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 });
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let w: Vec<f64> = logits.iter().map(|&o| 100.0 * (o as f64).powi(2) + 1.0).collect();
+        let z: f64 = w.iter().sum();
+        let expected: Vec<f64> = w.iter().map(|x| x / z).collect();
+        for c in 0..5u32 {
+            assert!((s.prob(&input, c).unwrap() - expected[c as usize]).abs() < 1e-9);
+        }
+        let tv = empirical_tv(&s, &input, &expected, 200_000, 13);
+        assert!(tv < 0.02, "tv {tv}");
+        // symmetry: o = ±1 get the same probability
+        assert!((s.prob(&input, 1).unwrap() - s.prob(&input, 2).unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quartic_sharper_than_quadratic() {
+        // quartic upweights large logits more aggressively
+        let logits = vec![0.1f32, 3.0];
+        let quad = FlatKernelSampler::new(KernelKind::Quadratic { alpha: 1.0 });
+        let quart = FlatKernelSampler::new(KernelKind::Quartic);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        assert!(quart.prob(&input, 1).unwrap() > quad.prob(&input, 1).unwrap());
+    }
+
+    #[test]
+    fn zero_logits_fall_back_to_uniform() {
+        let logits = vec![0.0f32; 8];
+        let s = FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 });
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        for c in 0..8u32 {
+            assert!((s.prob(&input, c).unwrap() - 0.125).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Kernel based sampling (§3 of the paper).
+//!
+//! A kernel `K(h, w_i) = ⟨φ(h), φ(w_i)⟩ ≥ 0` induces the sampling
+//! distribution `q_i = K(h, w_i) / ⟨φ(h), Σ_j φ(w_j)⟩` (eq. 8): the
+//! partition function collapses to a dot product against a precomputable
+//! summary `z = Σ_j φ(w_j)`, which is what makes adaptive sampling cheap.
+//!
+//! * [`QuadraticMap`] — the paper's suggested kernel `α⟨h,w⟩² + 1` with the
+//!   explicit feature map `φ(a) = [√α vec(a ⊗ a), 1]`, `D = d² + 1`
+//!   (eq. 10). The layout matches `phi_quadratic_ref` in
+//!   python/compile/kernels/ref.py (row-major outer product, constant last).
+//! * [`flat`] — exact O(n·d) sampling directly from kernel scores; the
+//!   correctness oracle for the tree and the only option for kernels with
+//!   intractable feature maps (quartic: D = d⁴).
+//! * [`tree`] — the paper's divide-and-conquer sampler (§3.2): O(D log n)
+//!   draws and updates via per-subset summaries `z(C)`.
+
+pub mod flat;
+pub mod multi;
+pub mod tree;
+
+/// Explicit feature map of a kernel: `K(a,b) = ⟨φ(a), φ(b)⟩`.
+pub trait FeatureMap: Send + Sync {
+    /// Input dimension d.
+    fn d(&self) -> usize;
+    /// Feature dimension D.
+    fn dim(&self) -> usize;
+    /// Write φ(a) into `out` (len = D). f64: the tree's z statistics are
+    /// updated incrementally and must not drift.
+    fn phi(&self, a: &[f32], out: &mut [f64]);
+    /// Closed-form kernel value (cheaper than materializing φ: the paper's
+    /// §3.2.2 leaf-step trick relies on K being O(d) to evaluate).
+    fn kernel(&self, a: &[f32], b: &[f32]) -> f64;
+}
+
+/// The paper's quadratic kernel, eq. (10): `K(a,b) = α⟨a,b⟩² + 1`.
+#[derive(Clone, Debug)]
+pub struct QuadraticMap {
+    d: usize,
+    alpha: f64,
+}
+
+impl QuadraticMap {
+    pub fn new(d: usize, alpha: f64) -> QuadraticMap {
+        assert!(d > 0 && alpha >= 0.0);
+        QuadraticMap { d, alpha }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+impl FeatureMap for QuadraticMap {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn dim(&self) -> usize {
+        self.d * self.d + 1
+    }
+
+    fn phi(&self, a: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), self.d);
+        debug_assert_eq!(out.len(), self.dim());
+        let sqrt_alpha = self.alpha.sqrt();
+        for i in 0..self.d {
+            let ai = sqrt_alpha * a[i] as f64;
+            let row = &mut out[i * self.d..(i + 1) * self.d];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = ai * a[j] as f64;
+            }
+        }
+        out[self.d * self.d] = 1.0;
+    }
+
+    fn kernel(&self, a: &[f32], b: &[f32]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        self.alpha * dot * dot + 1.0
+    }
+}
+
+/// Kernels usable by the flat sampler (weight as a function of the logit
+/// `o = ⟨h, w⟩`, the `K(a,b) = f(⟨a,b⟩)` family of §3.2.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelKind {
+    /// `α o² + 1` — the paper's main proposal.
+    Quadratic { alpha: f64 },
+    /// `o⁴ + 1` — the 4th-degree polynomial extra from Figure 2 (no
+    /// tractable feature map: D = O(d⁴), so flat sampling only).
+    Quartic,
+}
+
+impl KernelKind {
+    /// Kernel value from a precomputed logit.
+    #[inline]
+    pub fn weight(&self, o: f32) -> f64 {
+        let o = o as f64;
+        match self {
+            KernelKind::Quadratic { alpha } => alpha * o * o + 1.0,
+            KernelKind::Quartic => {
+                let o2 = o * o;
+                o2 * o2 + 1.0
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Quadratic { .. } => "quadratic-flat",
+            KernelKind::Quartic => "quartic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::check;
+
+    #[test]
+    fn phi_inner_product_equals_kernel() {
+        check("⟨φ(a),φ(b)⟩ == α⟨a,b⟩²+1", 100, |g| {
+            let d = g.usize_in(1, 12);
+            let alpha = g.f64_in(0.0, 200.0);
+            let map = QuadraticMap::new(d, alpha);
+            let a = g.vec_f32(d, -2.0, 2.0);
+            let b = g.vec_f32(d, -2.0, 2.0);
+            let mut pa = vec![0.0; map.dim()];
+            let mut pb = vec![0.0; map.dim()];
+            map.phi(&a, &mut pa);
+            map.phi(&b, &mut pb);
+            let ip: f64 = pa.iter().zip(&pb).map(|(x, y)| x * y).sum();
+            let k = map.kernel(&a, &b);
+            assert!((ip - k).abs() < 1e-6 * k.abs().max(1.0), "ip={ip} k={k}");
+        });
+    }
+
+    #[test]
+    fn quadratic_kernel_is_positive() {
+        let map = QuadraticMap::new(4, 100.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let b: Vec<f32> = (0..4).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            assert!(map.kernel(&a, &b) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn kernel_kind_weights() {
+        let q = KernelKind::Quadratic { alpha: 100.0 };
+        assert_eq!(q.weight(0.0), 1.0);
+        assert_eq!(q.weight(2.0), 401.0);
+        assert_eq!(q.weight(-2.0), 401.0); // symmetric
+        let f = KernelKind::Quartic;
+        assert_eq!(f.weight(0.0), 1.0);
+        assert_eq!(f.weight(2.0), 17.0);
+        assert_eq!(f.weight(-2.0), 17.0);
+    }
+
+    #[test]
+    fn phi_layout_matches_python_oracle() {
+        // pins the layout contract with ref.phi_quadratic_ref: row-major
+        // outer product scaled by √α, then the constant 1.
+        let map = QuadraticMap::new(2, 4.0);
+        let mut out = vec![0.0; 5];
+        map.phi(&[1.0, 2.0], &mut out);
+        assert_eq!(out, vec![2.0, 4.0, 4.0, 8.0, 1.0]);
+    }
+}

@@ -1,0 +1,132 @@
+//! §3.2.2 "Multiple Partial Samples" — the paper's faster-sampling variant.
+//!
+//! Instead of m independent O(D log n) descents, run `runs` descents and
+//! return *every* class of each reached leaf. A run that reaches leaf C with
+//! probability P(C) contributes each of C's classes once; weighting those
+//! contributions by 1/P(C) keeps the importance-corrected partition-function
+//! estimate unbiased:
+//!
+//!   E[ Σ_{j ∈ C} exp(o_j) / P(C) ] = Σ_leaves P(C) Σ_{j∈C} exp(o_j)/P(C)
+//!                                  = Σ_j exp(o_j)
+//!
+//! so the trainer can use `q_j = P(leaf(j))` with `m = runs` in the eq. (2)
+//! correction. The paper notes (and our ablation bench confirms) that the
+//! samples are correlated, so more total classes are needed for the same
+//! bias — the trade is descent count vs sample quality.
+
+use super::tree::KernelTreeSampler;
+use super::FeatureMap;
+use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Wraps a [`KernelTreeSampler`] to return whole leaves per descent.
+/// `sample(.., m, ..)` interprets m as the number of *descents*; the output
+/// contains up to `m × leaf_size` classes.
+pub struct PartialLeafSampler<M: FeatureMap> {
+    tree: KernelTreeSampler<M>,
+}
+
+impl<M: FeatureMap> PartialLeafSampler<M> {
+    pub fn new(tree: KernelTreeSampler<M>) -> Self {
+        PartialLeafSampler { tree }
+    }
+
+    pub fn tree(&self) -> &KernelTreeSampler<M> {
+        &self.tree
+    }
+}
+
+impl<M: FeatureMap> Sampler for PartialLeafSampler<M> {
+    fn name(&self) -> &str {
+        "quadratic-partial"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, runs: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let h = input.h.ok_or_else(|| anyhow::anyhow!("partial-leaf sampler needs h"))?;
+        out.clear();
+        let phi_h = self.tree.phi_query(h);
+        for _ in 0..runs {
+            let (range, p_leaf) = self.tree.draw_leaf(&phi_h, rng);
+            for class in range {
+                out.push(class, p_leaf);
+            }
+        }
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        // probability of *the class's leaf* being returned per run
+        let h = input.h?;
+        let phi_h = self.tree.phi_query(h);
+        Some(self.tree.leaf_prob_of_class(&phi_h, class))
+    }
+
+    fn update(&mut self, class: usize, w_new: &[f32]) {
+        self.tree.update(class, w_new);
+    }
+
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        self.tree.update_many(classes, rows);
+    }
+
+    fn reset_embeddings(&mut self, w: &[f32], n: usize, d: usize) {
+        self.tree.reset_embeddings(w, n, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+
+    #[test]
+    fn partial_sampler_importance_weights_are_unbiased() {
+        // E[ Σ_{j∈leaf} f(j) / P(leaf) ] per run must equal Σ_j f(j).
+        let (n, d) = (30, 3);
+        let mut rng = Rng::new(3);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.6);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(5));
+        tree.reset_embeddings(&emb, n, d);
+        let sampler = PartialLeafSampler::new(tree);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let f = |j: u32| 1.0 + (j as f64) * 0.1; // arbitrary positive payload
+        let truth: f64 = (0..n as u32).map(f).sum();
+        let runs = 40_000;
+        let mut out = Sample::default();
+        let mut acc = 0.0;
+        sampler.sample(&input, runs, &mut rng, &mut out).unwrap();
+        for (&c, &p) in out.classes.iter().zip(&out.q) {
+            acc += f(c) / p;
+        }
+        let est = acc / runs as f64;
+        assert!((est - truth).abs() < 0.05 * truth, "est {est} vs {truth}");
+    }
+
+    #[test]
+    fn runs_produce_whole_leaves() {
+        let (n, d) = (16, 2);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        let mut rng = Rng::new(5);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        tree.reset_embeddings(&emb, n, d);
+        let sampler = PartialLeafSampler::new(tree);
+        let h = vec![0.5f32, -0.5];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        sampler.sample(&input, 3, &mut rng, &mut out).unwrap();
+        assert_eq!(out.classes.len(), 12, "3 runs × leaf_size 4");
+        // classes of one run are contiguous and share the same q
+        for run in 0..3 {
+            let qs = &out.q[run * 4..(run + 1) * 4];
+            assert!(qs.iter().all(|&q| (q - qs[0]).abs() < 1e-15));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Negative samplers — the paper's subject matter.
+//!
+//! A [`Sampler`] draws, for one training example, `m` negative classes *with
+//! replacement* from its distribution `q` and reports the probability of
+//! each draw (the trainer turns those into the eq. (2) corrections
+//! `ln(m q_i)`). The paper's taxonomy (§2.4) orders samplers by how much of
+//! the model they see:
+//!
+//! | sampler        | example-dep. | model-dep. | cost/draw        |
+//! |----------------|--------------|------------|------------------|
+//! | uniform        | no           | no         | O(1)             |
+//! | unigram        | no           | no         | O(1) (alias)     |
+//! | bigram         | context only | no         | O(1) (alias)     |
+//! | quadratic tree | yes          | yes        | O(D log n) §3.2  |
+//! | quadratic flat | yes          | yes        | O(n) (oracle)    |
+//! | quartic flat   | yes          | yes        | O(n)             |
+//! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   |
+//!
+//! All samplers are deterministic functions of the seeded [`Rng`] stream
+//! passed in, so experiments replay exactly.
+
+pub mod bigram;
+pub mod kernel;
+pub mod softmax_exact;
+pub mod uniform;
+pub mod unigram;
+
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+pub use bigram::BigramSampler;
+pub use kernel::flat::FlatKernelSampler;
+pub use kernel::tree::KernelTreeSampler;
+pub use kernel::{KernelKind, QuadraticMap};
+pub use softmax_exact::SoftmaxSampler;
+pub use uniform::UniformSampler;
+pub use unigram::UnigramSampler;
+
+/// Per-example inputs a sampler may consume. The trainer fills only what the
+/// chosen sampler [`Needs`]; the rest stays `None`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleInput<'a> {
+    /// Query embedding h (the model's last hidden layer) for this example.
+    pub h: Option<&'a [f32]>,
+    /// Full logits row o = W h (from the score_all artifact) — only the
+    /// exact/oracle samplers ask for this.
+    pub logits: Option<&'a [f32]>,
+    /// Previous token (LM context) for the bigram sampler.
+    pub prev: Option<u32>,
+}
+
+/// What a sampler requires per batch; the trainer uses this to decide which
+/// artifacts to run (encode for `h`, score_all for `logits`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Needs {
+    pub h: bool,
+    pub logits: bool,
+    pub prev: bool,
+}
+
+/// One example's sample: m class indices (with replacement) and the
+/// probability q of each draw under the sampler's distribution.
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    pub classes: Vec<u32>,
+    pub q: Vec<f64>,
+}
+
+impl Sample {
+    pub fn with_capacity(m: usize) -> Sample {
+        Sample { classes: Vec::with_capacity(m), q: Vec::with_capacity(m) }
+    }
+
+    pub fn clear(&mut self) {
+        self.classes.clear();
+        self.q.clear();
+    }
+
+    pub fn push(&mut self, class: u32, q: f64) {
+        self.classes.push(class);
+        self.q.push(q);
+    }
+}
+
+/// A negative-sampling distribution (immutable during a batch; `update` is
+/// called between steps with the classes whose embeddings changed).
+pub trait Sampler: Send + Sync {
+    /// Short name used in configs, logs and figures.
+    fn name(&self) -> &str;
+
+    /// What per-example inputs `sample` consumes.
+    fn needs(&self) -> Needs {
+        Needs::default()
+    }
+
+    /// Draw `m` negatives with replacement into `out` (cleared first).
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()>;
+
+    /// Probability of a single class under the current distribution for the
+    /// given input (used by tests and the gradient-bias bench). Default:
+    /// unsupported.
+    fn prob(&self, _input: &SampleInput, _class: u32) -> Option<f64> {
+        None
+    }
+
+    /// Notify the sampler that a class embedding changed (paper Fig. 1(b)).
+    /// Static samplers ignore this.
+    fn update(&mut self, _class: usize, _w_new: &[f32]) {}
+
+    /// Batched update: `classes` sorted + deduplicated, `rows` the flat
+    /// (len·d) buffer of new embeddings in the same order. Default loops
+    /// over [`Sampler::update`]; the kernel tree overrides it with a single
+    /// aggregated bottom-up sweep (much cheaper per step).
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        if classes.is_empty() {
+            return;
+        }
+        let d = rows.len() / classes.len();
+        for (i, &class) in classes.iter().enumerate() {
+            self.update(class, &rows[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Adaptive samplers that mirror W need the full table at (re)start.
+    fn reset_embeddings(&mut self, _w: &[f32], _n: usize, _d: usize) {}
+}
+
+/// Corpus statistics the frequency-based samplers are built from.
+pub struct CorpusStats {
+    /// Class occurrence counts (unigram).
+    pub class_counts: Vec<u64>,
+    /// (prev, next) pair counts for the bigram sampler, sparse.
+    pub bigram_counts: Option<Vec<Vec<(u32, u64)>>>,
+}
+
+/// Build a sampler by name. `stats` feeds unigram/bigram; `w`/`d` seed the
+/// adaptive samplers' embedding mirror; `abs_logits` tells the softmax
+/// oracle to use the |o| prediction distribution (§3.3).
+pub fn build_sampler(
+    name: &str,
+    n_classes: usize,
+    d: usize,
+    alpha: f32,
+    abs_logits: bool,
+    stats: Option<&CorpusStats>,
+    w: Option<&[f32]>,
+) -> Result<Box<dyn Sampler>> {
+    let mut s: Box<dyn Sampler> = match name {
+        "uniform" => Box::new(UniformSampler::new(n_classes)),
+        "unigram" => {
+            let stats = stats.ok_or_else(|| anyhow::anyhow!("unigram needs corpus stats"))?;
+            Box::new(UnigramSampler::new(&stats.class_counts)?)
+        }
+        "bigram" => {
+            let stats = stats.ok_or_else(|| anyhow::anyhow!("bigram needs corpus stats"))?;
+            let pairs = stats
+                .bigram_counts
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("bigram needs pair counts (LM datasets only)"))?;
+            Box::new(BigramSampler::new(&stats.class_counts, pairs, 0.75)?)
+        }
+        "softmax" => Box::new(SoftmaxSampler::new(n_classes, abs_logits)),
+        "quadratic" => Box::new(KernelTreeSampler::new(
+            QuadraticMap::new(d, alpha as f64),
+            n_classes,
+            None,
+        )),
+        "quadratic-flat" => {
+            Box::new(FlatKernelSampler::new(KernelKind::Quadratic { alpha: alpha as f64 }))
+        }
+        "quartic" => Box::new(FlatKernelSampler::new(KernelKind::Quartic)),
+        other => anyhow::bail!(
+            "unknown sampler '{other}' (known: uniform, unigram, bigram, softmax, \
+             quadratic, quadratic-flat, quartic)"
+        ),
+    };
+    if let Some(w) = w {
+        s.reset_embeddings(w, n_classes, d);
+    }
+    Ok(s)
+}
+
+/// All sampler names usable on every dataset (bigram is LM-only).
+pub const GENERIC_SAMPLERS: &[&str] = &["uniform", "softmax", "quadratic"];
+
+/// Sampler set for the Penn-Tree-Bank-style figures (paper Fig. 2 left).
+pub const LM_SAMPLERS: &[&str] =
+    &["uniform", "unigram", "bigram", "quadratic", "quartic", "softmax"];
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+
+    /// Empirical total-variation distance between a sampler and an expected
+    /// distribution, over `draws` samples.
+    pub fn empirical_tv(
+        sampler: &dyn Sampler,
+        input: &SampleInput,
+        expected: &[f64],
+        draws: usize,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; expected.len()];
+        let mut out = Sample::default();
+        let m = 16;
+        let mut total = 0usize;
+        while total < draws {
+            out.clear();
+            sampler.sample(input, m, &mut rng, &mut out).unwrap();
+            for &c in &out.classes {
+                counts[c as usize] += 1;
+            }
+            total += m;
+        }
+        0.5 * counts
+            .iter()
+            .zip(expected)
+            .map(|(&c, &p)| (c as f64 / total as f64 - p).abs())
+            .sum::<f64>()
+    }
+}

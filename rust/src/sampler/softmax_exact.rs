@@ -1,0 +1,120 @@
+//! Exact softmax sampling, `q_i ∝ exp(o_i)` — the unique unbiased sampling
+//! distribution (Theorem 2.1), and exactly as expensive as computing the
+//! full softmax: it needs every logit. The trainer obtains the logits from
+//! the `score_all` artifact (one device matmul per batch); this sampler then
+//! builds the per-example CDF in O(n) and draws its m negatives by binary
+//! search.
+//!
+//! For absolute-softmax models (§3.3) the unbiased distribution is
+//! `q_i ∝ exp(|o_i|)` (the theorem applies to the modified output |o|).
+
+use super::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{Cdf, Rng};
+use anyhow::Result;
+
+/// The Theorem-2.1 oracle sampler.
+pub struct SoftmaxSampler {
+    n: usize,
+    abs_logits: bool,
+}
+
+impl SoftmaxSampler {
+    pub fn new(n: usize, abs_logits: bool) -> SoftmaxSampler {
+        SoftmaxSampler { n, abs_logits }
+    }
+
+    /// exp-normalized weights with max-subtraction for stability.
+    fn weights(&self, logits: &[f32]) -> Vec<f32> {
+        let eff = |o: f32| if self.abs_logits { o.abs() } else { o };
+        let max = logits.iter().map(|&o| eff(o)).fold(f32::NEG_INFINITY, f32::max);
+        logits.iter().map(|&o| (eff(o) - max).exp()).collect()
+    }
+}
+
+impl Sampler for SoftmaxSampler {
+    fn name(&self) -> &str {
+        "softmax"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { logits: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let logits =
+            input.logits.ok_or_else(|| anyhow::anyhow!("softmax sampler needs logits"))?;
+        anyhow::ensure!(logits.len() == self.n, "logits len {} != n {}", logits.len(), self.n);
+        out.clear();
+        let w = self.weights(logits);
+        let cdf = Cdf::new(&w).ok_or_else(|| anyhow::anyhow!("degenerate softmax weights"))?;
+        for _ in 0..m {
+            let c = cdf.sample(rng);
+            out.push(c as u32, cdf.prob(c));
+        }
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let logits = input.logits?;
+        let w = self.weights(logits);
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        Some(w[class as usize] as f64 / total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::test_util::empirical_tv;
+
+    fn softmax(o: &[f32], abs: bool) -> Vec<f64> {
+        let eff = |x: f32| if abs { x.abs() } else { x };
+        let mx = o.iter().map(|&x| eff(x)).fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f64> = o.iter().map(|&x| ((eff(x) - mx) as f64).exp()).collect();
+        let z: f64 = e.iter().sum();
+        e.into_iter().map(|x| x / z).collect()
+    }
+
+    #[test]
+    fn q_matches_softmax() {
+        let logits = vec![0.0f32, 1.0, -2.0, 3.0, 0.5];
+        let s = SoftmaxSampler::new(5, false);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let want = softmax(&logits, false);
+        for c in 0..5 {
+            assert!((s.prob(&input, c).unwrap() - want[c as usize]).abs() < 1e-6);
+        }
+        let tv = empirical_tv(&s, &input, &want, 200_000, 5);
+        assert!(tv < 0.02, "tv {tv}");
+    }
+
+    #[test]
+    fn abs_variant_uses_abs_logits() {
+        let logits = vec![-3.0f32, 0.0, 3.0];
+        let s = SoftmaxSampler::new(3, true);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let q = |c| s.prob(&input, c).unwrap();
+        assert!((q(0) - q(2)).abs() < 1e-9, "|o| symmetric: {} vs {}", q(0), q(2));
+        assert!(q(0) > q(1));
+    }
+
+    #[test]
+    fn large_logits_are_stable() {
+        let logits = vec![500.0f32, 499.0, -500.0];
+        let s = SoftmaxSampler::new(3, false);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let mut rng = Rng::new(1);
+        let mut out = Sample::default();
+        s.sample(&input, 16, &mut rng, &mut out).unwrap();
+        assert!(out.q.iter().all(|q| q.is_finite() && *q > 0.0));
+        assert!(out.classes.iter().all(|&c| c < 2), "class 2 has ~0 prob");
+    }
+
+    #[test]
+    fn missing_logits_is_error() {
+        let s = SoftmaxSampler::new(4, false);
+        let mut rng = Rng::new(0);
+        let mut out = Sample::default();
+        assert!(s.sample(&SampleInput::default(), 2, &mut rng, &mut out).is_err());
+    }
+}

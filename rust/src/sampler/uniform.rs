@@ -1,0 +1,71 @@
+//! Uniform sampling, `q_i ∝ 1` — the paper's baseline (§4.1.2).
+//!
+//! Neither example- nor model-dependent; the paper shows it needs one to two
+//! orders of magnitude more samples than the quadratic kernel to reach
+//! full-softmax quality.
+
+use super::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// `q_i = 1/n` for every class.
+pub struct UniformSampler {
+    n: usize,
+    q: f64,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize) -> UniformSampler {
+        assert!(n > 0);
+        UniformSampler { n, q: 1.0 / n as f64 }
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn name(&self) -> &str {
+        "uniform"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs::default()
+    }
+
+    fn sample(&self, _input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        out.clear();
+        for _ in 0..m {
+            out.push(rng.below(self.n as u64) as u32, self.q);
+        }
+        Ok(())
+    }
+
+    fn prob(&self, _input: &SampleInput, class: u32) -> Option<f64> {
+        ((class as usize) < self.n).then_some(self.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::test_util::empirical_tv;
+
+    #[test]
+    fn uniform_q_and_distribution() {
+        let s = UniformSampler::new(64);
+        let mut rng = Rng::new(1);
+        let mut out = Sample::default();
+        s.sample(&SampleInput::default(), 32, &mut rng, &mut out).unwrap();
+        assert_eq!(out.classes.len(), 32);
+        assert!(out.q.iter().all(|&q| (q - 1.0 / 64.0).abs() < 1e-15));
+        assert!(out.classes.iter().all(|&c| c < 64));
+        let expected = vec![1.0 / 64.0; 64];
+        let tv = empirical_tv(&s, &SampleInput::default(), &expected, 200_000, 7);
+        assert!(tv < 0.02, "tv {tv}");
+    }
+
+    #[test]
+    fn prob_bounds() {
+        let s = UniformSampler::new(10);
+        assert_eq!(s.prob(&SampleInput::default(), 9), Some(0.1));
+        assert_eq!(s.prob(&SampleInput::default(), 10), None);
+    }
+}

@@ -1,0 +1,73 @@
+//! Unigram (global popularity) sampling, `q_i ∝ count(i)` — the common NLP
+//! baseline included in the paper's Penn-Tree-Bank figures.
+//!
+//! Static: built once from corpus counts, O(1) per draw via Walker's alias
+//! method. Add-one smoothing keeps every class reachable (a class with
+//! q_i = 0 could never be corrected by eq. (2) and would make the estimator
+//! blow up if it appeared as a negative elsewhere).
+
+use super::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{AliasTable, Rng};
+use anyhow::{Context, Result};
+
+/// `q_i ∝ count_i + 1`, sampled through an alias table.
+pub struct UnigramSampler {
+    alias: AliasTable,
+}
+
+impl UnigramSampler {
+    pub fn new(class_counts: &[u64]) -> Result<UnigramSampler> {
+        let weights: Vec<f64> = class_counts.iter().map(|&c| c as f64 + 1.0).collect();
+        let alias = AliasTable::new(&weights).context("degenerate unigram counts")?;
+        Ok(UnigramSampler { alias })
+    }
+}
+
+impl Sampler for UnigramSampler {
+    fn name(&self) -> &str {
+        "unigram"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs::default()
+    }
+
+    fn sample(&self, _input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        out.clear();
+        for _ in 0..m {
+            let c = self.alias.sample(rng);
+            out.push(c as u32, self.alias.prob_of(c));
+        }
+        Ok(())
+    }
+
+    fn prob(&self, _input: &SampleInput, class: u32) -> Option<f64> {
+        ((class as usize) < self.alias.len()).then(|| self.alias.prob_of(class as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::test_util::empirical_tv;
+
+    #[test]
+    fn matches_count_distribution() {
+        let counts = vec![99u64, 9, 49, 0, 19]; // +1 smoothing => 100,10,50,1,20
+        let s = UnigramSampler::new(&counts).unwrap();
+        let total = 181.0;
+        let expected: Vec<f64> = [100.0, 10.0, 50.0, 1.0, 20.0].iter().map(|w| w / total).collect();
+        for (i, &e) in expected.iter().enumerate() {
+            assert!((s.prob(&SampleInput::default(), i as u32).unwrap() - e).abs() < 1e-12);
+        }
+        let tv = empirical_tv(&s, &SampleInput::default(), &expected, 200_000, 3);
+        assert!(tv < 0.02, "tv {tv}");
+    }
+
+    #[test]
+    fn zero_count_class_still_reachable() {
+        let s = UnigramSampler::new(&[1000, 0]).unwrap();
+        let q1 = s.prob(&SampleInput::default(), 1).unwrap();
+        assert!(q1 > 0.0, "smoothing must keep q positive");
+    }
+}

@@ -1,0 +1,238 @@
+//! Typed command-line flag parser for the launcher (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated flags,
+//! positional arguments, and generates a usage string from the declared
+//! options. Unknown flags are an error (catches typos in experiment sweeps).
+
+use std::collections::BTreeMap;
+
+/// Declared option for usage output.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed arguments plus the declaration table.
+pub struct Args {
+    /// flag name -> values in order of appearance
+    flags: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0} (see --help)")]
+    Unknown(String),
+    #[error("flag --{0}: expected a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse a raw argv (without the program name) against declared specs.
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse(
+        prog: &str,
+        argv: &[String],
+        specs: &[OptSpec],
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let known: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if name != "help" && !known.contains(&name.as_str()) {
+                    return Err(CliError::Unknown(name));
+                }
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if bool_flags.contains(&name.as_str()) || name == "help" {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                flags.entry(name).or_default().push(val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional, specs: specs.to_vec(), prog: prog.to_string() })
+    }
+
+    /// True when `--help` was passed.
+    pub fn wants_help(&self) -> bool {
+        self.flags.contains_key("help")
+    }
+
+    /// Usage text generated from the specs.
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options]\n\noptions:\n", self.prog);
+        for spec in &self.specs {
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", spec.name, spec.help, def));
+        }
+        s
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Last occurrence of a string flag.
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a flag (repeated flags = sweeps).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn get_string_or(&self, name: &str, default: &str) -> String {
+        self.get_str(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get_str(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue(name.into(), v.into(), "u64")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get_str(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue(name.into(), v.into(), "f64")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str, default: bool) -> Result<bool, CliError> {
+        match self.get_str(name) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(CliError::BadValue(name.into(), v.into(), "bool")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--m 8,16,32`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get_str(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(name.into(), p.into(), "usize list"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get_str(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|p| !p.is_empty()).map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "m", help: "sample sizes", default: Some("32".into()) },
+            OptSpec { name: "lr", help: "learning rate", default: None },
+            OptSpec { name: "verbose", help: "chatty", default: None },
+            OptSpec { name: "name", help: "run name", default: None },
+        ]
+    }
+
+    fn parse(argv: &[&str]) -> Result<Args, CliError> {
+        let v: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse("kss test", &v, &specs(), &["verbose"])
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = parse(&["--m", "8,16", "--lr=0.5", "pos1"]).unwrap();
+        assert_eq!(a.get_usize_list("m", &[]).unwrap(), vec![8, 16]);
+        assert_eq!(a.get_f64("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        // reading a list-valued flag as a scalar is a BadValue error
+        assert!(matches!(a.get_usize("m", 7), Err(CliError::BadValue(..))));
+        // defaults apply when the flag is absent
+        let b = parse(&[]).unwrap();
+        assert_eq!(b.get_usize_list("m", &[32]).unwrap(), vec![32]);
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let a = parse(&["--verbose", "--name", "x"]).unwrap();
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert_eq!(a.get_str("name"), Some("x"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(matches!(parse(&["--nope", "1"]), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(parse(&["--lr"]), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["--lr", "abc"]).unwrap();
+        assert!(matches!(a.get_f64("lr", 0.0), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse(&["--name", "a", "--name", "b"]).unwrap();
+        assert_eq!(a.get_all("name"), vec!["a", "b"]);
+        assert_eq!(a.get_str("name"), Some("b"));
+    }
+
+    #[test]
+    fn help_and_usage() {
+        let a = parse(&["--help"]).unwrap();
+        assert!(a.wants_help());
+        let u = a.usage();
+        assert!(u.contains("--m") && u.contains("default: 32"));
+    }
+}

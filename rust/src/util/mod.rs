@@ -1,0 +1,28 @@
+//! In-tree substrates.
+//!
+//! The build environment is fully offline with a fixed crate cache that does
+//! not include the usual ecosystem crates (`rand`, `serde`, `clap`,
+//! `criterion`, `rayon`, `proptest`), so this module provides the pieces the
+//! rest of the system needs:
+//!
+//! * [`rng`] — deterministic PRNG (xoshiro256\*\*) and the distributions the
+//!   paper's experiments require (uniform, normal, Zipf, categorical, and
+//!   Walker's alias method — the paper cites Walker 1977 in §6).
+//! * [`json`] — a small JSON parser/serializer for the artifact manifest,
+//!   config files and metric sinks.
+//! * [`cli`] — a typed command-line flag parser for the launcher.
+//! * [`threadpool`] — scoped data-parallel map used to sample negatives for
+//!   all rows of a batch concurrently.
+//! * [`stats`] — online statistics and wall-clock timers shared by the
+//!   trainer and the bench harness.
+//! * [`testing`] — a miniature property-testing harness (seeded case
+//!   generation with failure seeds reported) used across the test suite.
+//! * [`logging`] — leveled stderr logger for the coordinator.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod testing;
+pub mod threadpool;

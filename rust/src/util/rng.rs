@@ -1,0 +1,537 @@
+//! Deterministic pseudo-random number generation and sampling distributions.
+//!
+//! Everything random in the system — data generation, parameter
+//! initialization, negative sampling — flows from seeded [`Rng`] streams so
+//! experiments are reproducible byte-for-byte.
+//!
+//! The generator is xoshiro256\*\* (Blackman & Vigna), seeded through
+//! splitmix64 as its authors recommend. On top of it this module implements
+//! the distributions the paper's experiments need:
+//!
+//! * uniform integers / floats,
+//! * Gaussians (Box–Muller) for embedding initialization,
+//! * Zipf via rejection-inversion (for the synthetic corpora's skewed class
+//!   popularity),
+//! * categorical sampling by CDF binary search (exact softmax / quartic
+//!   samplers),
+//! * Walker's alias method ([`AliasTable`]) for O(1) draws from static
+//!   distributions (unigram sampler; also the future-work direction the
+//!   paper sketches in §6 for non-negative feature maps).
+
+/// splitmix64 step; used for seeding and cheap hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256\*\* PRNG. Not cryptographic; fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Gaussian from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream for a labeled subtask. Streams derived
+    /// with different labels are de-correlated (label is hashed into the
+    /// seed), which lets e.g. each batch row sample negatives in parallel
+    /// with its own generator.
+    pub fn fork(&mut self, label: u64) -> Rng {
+        let mut sm = self.next_u64() ^ label.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift rejection
+    /// to avoid modulo bias.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0, "below(0) is undefined");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// Normal with the given mean and standard deviation, as f32.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fill a slice with N(0, std) samples (embedding init).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(0.0, std);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights in O(n).
+    /// Returns `None` when the total mass is not positive and finite.
+    pub fn categorical(&mut self, weights: &[f32]) -> Option<usize> {
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return None;
+        }
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w as f64;
+            if u < 0.0 {
+                return Some(i);
+            }
+        }
+        // Floating-point slack: return the last strictly-positive weight.
+        weights.iter().rposition(|&w| w > 0.0)
+    }
+}
+
+/// Cumulative distribution over class weights, for O(log n) repeated draws
+/// from the same (per-example) distribution. Built once per example by the
+/// exact-softmax and flat-kernel samplers, then binary-searched `m` times.
+pub struct Cdf {
+    /// Inclusive prefix sums of the weights, `cum[i] = Σ_{j<=i} w_j`.
+    cum: Vec<f64>,
+    total: f64,
+}
+
+impl Cdf {
+    /// Build from unnormalized non-negative weights.
+    pub fn new(weights: &[f32]) -> Option<Cdf> {
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0f64;
+        for &w in weights {
+            debug_assert!(w >= 0.0, "negative weight in Cdf");
+            acc += w as f64;
+            cum.push(acc);
+        }
+        if !(acc > 0.0) || !acc.is_finite() {
+            return None;
+        }
+        Some(Cdf { cum, total: acc })
+    }
+
+    /// Total unnormalized mass.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Probability of index `i`.
+    pub fn prob(&self, i: usize) -> f64 {
+        let lo = if i == 0 { 0.0 } else { self.cum[i - 1] };
+        (self.cum[i] - lo) / self.total
+    }
+
+    /// Draw one index.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64() * self.total;
+        // partition_point: first index with cum[i] > u.
+        let idx = self.cum.partition_point(|&c| c <= u);
+        idx.min(self.cum.len() - 1)
+    }
+}
+
+/// Walker's alias method (Walker 1977): O(n) construction, O(1) sampling
+/// from a fixed categorical distribution. Used by the unigram sampler and
+/// the uniform sampler's fast path.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+    /// Normalized probability of each class (kept for q-corrections).
+    p: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights. Returns `None` if the
+    /// total mass is not positive and finite.
+    pub fn new(weights: &[f64]) -> Option<AliasTable> {
+        let n = weights.len();
+        if n == 0 {
+            return None;
+        }
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return None;
+        }
+        let p: Vec<f64> = weights.iter().map(|w| w / total).collect();
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        // Scaled probabilities; classify into small/large stacks.
+        let mut scaled: Vec<f64> = p.iter().map(|&x| x * n as f64).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in large.iter().chain(small.iter()) {
+            prob[l as usize] = 1.0;
+        }
+        Some(AliasTable { prob, alias, p })
+    }
+
+    /// Number of classes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True when the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Normalized probability of class `i` (needed for the sampled-softmax
+    /// `ln(m q_i)` correction).
+    #[inline]
+    pub fn prob_of(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+
+    /// Draw one class in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+/// Zipf(s) distribution over `{0, .., n-1}` (rank 0 is the most frequent),
+/// i.e. `P(k) ∝ (k+1)^-s`. Used by the synthetic corpora to mimic the skewed
+/// class popularity of natural-language vocabularies and video catalogs.
+///
+/// Implementation: exact CDF inversion via a precomputed table (n is at most
+/// a few hundred thousand in our experiments, so an O(n) table is cheap and
+/// exact, unlike rejection-inversion approximations).
+#[derive(Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a Zipf(s) sampler over n ranks.
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Probability of rank `k`.
+    pub fn prob(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    /// Draw a rank.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        let idx = self.cdf.partition_point(|&c| c <= u);
+        idx.min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams from different seeds should diverge");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(3);
+        let n = 10u64;
+        let mut counts = [0usize; 10];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            sum += z;
+            sum2 += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle left input unchanged");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(9);
+        let w = [1.0f32, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn categorical_rejects_zero_mass() {
+        let mut r = Rng::new(9);
+        assert!(r.categorical(&[0.0, 0.0]).is_none());
+        assert!(r.categorical(&[]).is_none());
+    }
+
+    #[test]
+    fn cdf_matches_categorical() {
+        let mut r = Rng::new(13);
+        let w = [0.5f32, 2.5, 1.0, 0.0, 4.0];
+        let cdf = Cdf::new(&w).unwrap();
+        let total: f32 = w.iter().sum();
+        for (i, &wi) in w.iter().enumerate() {
+            assert!((cdf.prob(i) - (wi / total) as f64).abs() < 1e-9);
+        }
+        let mut counts = [0usize; 5];
+        for _ in 0..80_000 {
+            counts[cdf.sample(&mut r)] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = 80_000.0 * cdf.prob(i);
+            assert!((c as f64 - expect).abs() < 6.0 * expect.max(1.0).sqrt(), "class {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_distribution() {
+        let mut r = Rng::new(17);
+        let w = [10.0f64, 1.0, 0.0, 5.0, 4.0];
+        let t = AliasTable::new(&w).unwrap();
+        let total: f64 = w.iter().sum();
+        let mut counts = [0usize; 5];
+        let trials = 200_000;
+        for _ in 0..trials {
+            counts[t.sample(&mut r)] += 1;
+        }
+        assert_eq!(counts[2], 0, "zero-weight class sampled");
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = trials as f64 * w[i] / total;
+            assert!((c as f64 - expect).abs() < 6.0 * expect.max(1.0).sqrt(), "class {i}: {c} vs {expect}");
+            assert!((t.prob_of(i) - w[i] / total).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn alias_table_uniform_case() {
+        let t = AliasTable::new(&vec![1.0; 64]).unwrap();
+        let mut r = Rng::new(23);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..64_000 {
+            counts[t.sample(&mut r)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 1000).abs() < 200, "count {c}");
+        }
+    }
+
+    #[test]
+    fn alias_rejects_bad_input() {
+        assert!(AliasTable::new(&[]).is_none());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_none());
+        assert!(AliasTable::new(&[f64::INFINITY]).is_none());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = Zipf::new(1000, 1.1);
+        let total: f64 = (0..1000).map(|k| z.prob(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(z.prob(0) > 10.0 * z.prob(99), "Zipf should be heavily skewed");
+        let mut r = Rng::new(31);
+        let mut head = 0usize;
+        let trials = 50_000;
+        for _ in 0..trials {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        let expect: f64 = (0..10).map(|k| z.prob(k)).sum::<f64>() * trials as f64;
+        assert!((head as f64 - expect).abs() < 6.0 * expect.sqrt());
+    }
+
+    #[test]
+    fn fork_streams_are_decorrelated() {
+        let mut root = Rng::new(99);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

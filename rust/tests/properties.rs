@@ -1,0 +1,188 @@
+//! Property-based tests on the system's invariants (the in-tree harness
+//! replaces proptest; failures report a replayable case seed).
+//!
+//! The central invariants:
+//!
+//! 1. every sampler's reported q is a real probability and matches `prob()`;
+//! 2. the kernel tree is *exactly* the kernel distribution (q closed-form)
+//!    under any leaf size, embedding state, and interleaving of updates;
+//! 3. the eq. (2) correction pipeline (q -> ln(m q)) is finite whenever
+//!    q > 0 — no sampler may emit q = 0;
+//! 4. the alias table and CDF sampling agree with their weights;
+//! 5. batches are well-formed for every dataset geometry.
+
+use kss::data::{synptb::SynPtb, youtube::YouTube, Dataset};
+use kss::sampler::kernel::FeatureMap;
+use kss::sampler::{
+    build_sampler, CorpusStats, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+};
+use kss::util::rng::Rng;
+use kss::util::testing::{check, Gen};
+
+fn random_emb(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n * d];
+    rng.fill_normal(&mut v, 0.5);
+    v
+}
+
+#[test]
+fn prop_every_sampler_q_is_valid_and_consistent() {
+    check("sampler q validity", 30, |g: &mut Gen| {
+        let n = g.usize_in(4, 120);
+        let d = g.usize_in(1, 8);
+        let m = g.usize_in(1, 16);
+        let mut rng = Rng::new(g.case_seed ^ 0xAB);
+        let emb = random_emb(&mut rng, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let logits: Vec<f32> = (0..n)
+            .map(|j| emb[j * d..(j + 1) * d].iter().zip(&h).map(|(&a, &b)| a * b).sum())
+            .collect();
+        let counts: Vec<u64> = (0..n).map(|_| rng.below(50)).collect();
+        let pairs: Vec<Vec<(u32, u64)>> = (0..n)
+            .map(|_| {
+                (0..g.usize_in(0, 4))
+                    .map(|_| (rng.below(n as u64) as u32, 1 + rng.below(9)))
+                    .collect()
+            })
+            .collect();
+        let stats = CorpusStats { class_counts: counts, bigram_counts: Some(pairs) };
+        for name in ["uniform", "unigram", "bigram", "softmax", "quadratic", "quadratic-flat", "quartic"] {
+            let sampler =
+                build_sampler(name, n, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
+            let input = SampleInput {
+                h: Some(&h),
+                logits: Some(&logits),
+                prev: Some(rng.below(n as u64) as u32),
+            };
+            let mut out = Sample::default();
+            sampler.sample(&input, m, &mut rng, &mut out).unwrap();
+            assert_eq!(out.classes.len(), m, "{name}");
+            for (&c, &q) in out.classes.iter().zip(&out.q) {
+                assert!((c as usize) < n, "{name}: class oob");
+                assert!(q > 0.0 && q <= 1.0 + 1e-12, "{name}: bad q {q}");
+                // eq. (2) correction must be finite
+                assert!((m as f64 * q).ln().is_finite(), "{name}: ln(mq) blew up");
+                // q must agree with prob() where supported
+                if let Some(p) = sampler.prob(&input, c) {
+                    assert!(
+                        (p - q).abs() <= 1e-6 * p.abs().max(1e-12),
+                        "{name}: q {q} != prob {p}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tree_equals_flat_distribution_under_updates() {
+    check("tree == closed-form kernel distribution after updates", 20, |g: &mut Gen| {
+        let n = g.usize_in(2, 64);
+        let d = g.usize_in(1, 6);
+        let leaf = g.usize_in(1, n);
+        let mut rng = Rng::new(g.case_seed ^ 0xCD);
+        let mut emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, g.f64_in(0.5, 150.0));
+        let mut tree = KernelTreeSampler::new(map.clone(), n, Some(leaf));
+        tree.reset_embeddings(&emb, n, d);
+        // interleave updates and checks
+        for _ in 0..g.usize_in(0, 30) {
+            let class = rng.range(0, n);
+            let mut w = vec![0.0f32; d];
+            rng.fill_normal(&mut w, 0.7);
+            emb[class * d..(class + 1) * d].copy_from_slice(&w);
+            tree.update(class, &w);
+        }
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let weights: Vec<f64> =
+            (0..n).map(|j| map.kernel(&h, &emb[j * d..(j + 1) * d])).collect();
+        let z: f64 = weights.iter().sum();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 16, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            let want = weights[c as usize] / z;
+            assert!((q - want).abs() < 1e-6 * want.max(1e-12), "q {q} vs {want}");
+        }
+        // drift bound
+        assert!(tree.max_drift() < 1e-8, "drift {}", tree.max_drift());
+    });
+}
+
+#[test]
+fn prop_synptb_batches_are_well_formed() {
+    check("synptb batch invariants", 15, |g: &mut Gen| {
+        let n = g.usize_in(10, 300);
+        let b = g.usize_in(1, 6);
+        let t = g.usize_in(1, 12);
+        let train = g.usize_in(b * (t + 1), 4_000);
+        let ds = SynPtb::generate(n, b, t, train, train / 4 + t * b + b, g.case_seed);
+        for batch in ds.train_batches(0).iter().chain(ds.eval_batches().iter()) {
+            assert_eq!(batch.pos.len(), b * t);
+            assert_eq!(batch.data[0].shape(), &[b, t]);
+            assert_eq!(batch.data[1].shape(), &[b, t]);
+            let tokens = batch.data[0].as_i32().unwrap();
+            let targets = batch.data[1].as_i32().unwrap();
+            for (&tok, &tgt) in tokens.iter().zip(targets) {
+                assert!((tok as usize) < n && (tgt as usize) < n);
+            }
+            let prev = batch.prev.as_ref().unwrap();
+            for (&p, &tok) in prev.iter().zip(tokens) {
+                assert_eq!(p as i32, tok, "prev context must be the input token");
+            }
+        }
+        let stats = ds.stats();
+        assert_eq!(stats.class_counts.iter().sum::<u64>() as usize, ds.train_tokens().len());
+    });
+}
+
+#[test]
+fn prop_youtube_batches_are_well_formed() {
+    check("youtube batch invariants", 15, |g: &mut Gen| {
+        let n = g.usize_in(8, 600);
+        let f = g.usize_in(2, 8);
+        let b = g.usize_in(1, 8);
+        let events = g.usize_in(b, 3_000);
+        let ds = YouTube::generate(n, f, events, events / 4 + b, b, g.case_seed);
+        let batches = ds.train_batches(0);
+        assert_eq!(batches.len(), events / b);
+        for batch in batches.iter().take(5) {
+            assert_eq!(batch.data[0].shape(), &[b, f]);
+            assert_eq!(batch.data[1].shape(), &[b, 3]);
+            for &p in batch.data[1].as_i32().unwrap() {
+                assert!((p as usize) < n);
+            }
+            for &p in &batch.pos {
+                assert!((p as usize) < n);
+            }
+            assert!(batch.prev.is_none());
+        }
+    });
+}
+
+#[test]
+fn prop_uniform_correction_recovers_partition_function() {
+    // E_q[ K(h,w)/q ] = Σ K — the identity kernel sampling is built on
+    // (eq. 8/12), checked by Monte Carlo through the real tree sampler.
+    check("importance identity", 8, |g: &mut Gen| {
+        let n = g.usize_in(8, 64);
+        let d = g.usize_in(2, 5);
+        let mut rng = Rng::new(g.case_seed ^ 0xEF);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut tree = KernelTreeSampler::new(map.clone(), n, None);
+        tree.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let z_true: f64 = (0..n).map(|j| map.kernel(&h, &emb[j * d..(j + 1) * d])).sum();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        let trials = 4_000;
+        let mut acc = 0.0;
+        tree.sample(&input, trials, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            acc += map.kernel(&h, &emb[c as usize * d..(c as usize + 1) * d]) / q;
+        }
+        let est = acc / trials as f64;
+        assert!((est - z_true).abs() < 0.15 * z_true, "est {est} vs {z_true}");
+    });
+}
