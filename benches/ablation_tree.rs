@@ -10,10 +10,13 @@
 //!
 //! No artifacts needed. `cargo bench --bench ablation_tree`.
 
-use kss::bench_harness::{print_table, scale, Bencher, BenchRow, Scale};
+use kss::bench_harness::{print_speedup, print_table, scale, Bencher, BenchRow, Scale};
 use kss::sampler::kernel::multi::PartialLeafSampler;
-use kss::sampler::{KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler};
+use kss::sampler::{
+    row_rng, BatchSampleInput, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+};
 use kss::util::rng::Rng;
+use kss::util::threadpool::default_threads;
 
 fn main() {
     let (n, d) = match scale() {
@@ -95,7 +98,7 @@ fn main() {
     };
     let truth: f64 = (0..n as u32).map(score).sum();
     let trials = 1_000;
-    let mut var_of = |use_partial: bool| -> f64 {
+    let var_of = |use_partial: bool| -> f64 {
         let mut r = Rng::new(77);
         let mut s = Sample::default();
         let mut acc = 0.0;
@@ -121,4 +124,47 @@ fn main() {
     println!("\nboth are unbiased (eq. 12); partial sampling is cheaper per class");
     println!("but correlated, so it needs more classes for the same variance —");
     println!("the §3.2.2 trade-off. The trainer defaults to independent draws.");
+
+    // ---- batched engine vs per-example loop --------------------------------
+    println!("\n==== batch engine: sample_batch vs per-example loop ====");
+    let batch_examples = 32usize;
+    let threads = default_threads();
+    let mut hs = vec![0.0f32; batch_examples * d];
+    rng.fill_normal(&mut hs, 1.0);
+    let base_input = BatchSampleInput {
+        n: batch_examples,
+        d,
+        n_classes: n,
+        h: Some(&hs),
+        ..Default::default()
+    };
+    let batched_input = BatchSampleInput { threads, ..base_input };
+    let mut outs: Vec<Sample> = (0..batch_examples).map(|_| Sample::with_capacity(m)).collect();
+    let mut step = 0u64;
+    let row_batched = bencher.run_with_items(
+        &format!("batched ({batch_examples} ex × m={m}, {threads} thr)"),
+        Some((batch_examples * m) as f64),
+        || {
+            step += 1;
+            tree2.sample_batch(&batched_input, m, step, &mut outs).unwrap();
+        },
+    );
+    let mut step = 0u64;
+    let row_per_ex = bencher.run_with_items(
+        &format!("per-example ({batch_examples} ex × m={m}, 1 thr)"),
+        Some((batch_examples * m) as f64),
+        || {
+            step += 1;
+            for (i, slot) in outs.iter_mut().enumerate() {
+                let input = base_input.row(i);
+                let mut r = row_rng(step, i);
+                tree2.sample(&input, m, &mut r, slot).unwrap();
+            }
+        },
+    );
+    print_table(
+        "batch engine (same per-row RNG streams, identical output)",
+        &[row_batched.clone(), row_per_ex.clone()],
+    );
+    print_speedup("batched vs per-example", &row_per_ex, &row_batched);
 }

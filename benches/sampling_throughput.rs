@@ -12,12 +12,13 @@
 //!
 //! No artifacts needed (pure L3). `cargo bench --bench sampling_throughput`.
 
-use kss::bench_harness::{print_table, scale, Bencher, BenchRow, Scale};
+use kss::bench_harness::{print_speedup, print_table, scale, Bencher, BenchRow, Scale};
 use kss::sampler::{
-    FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
-    SoftmaxSampler,
+    row_rng, BatchSampleInput, FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap,
+    Sample, SampleInput, Sampler, SoftmaxSampler,
 };
 use kss::util::rng::Rng;
+use kss::util::threadpool::default_threads;
 
 fn main() {
     let d = 64usize;
@@ -30,6 +31,8 @@ fn main() {
 
     let mut draw_rows: Vec<BenchRow> = Vec::new();
     let mut update_rows: Vec<BenchRow> = Vec::new();
+    let mut batch_rows: Vec<BenchRow> = Vec::new();
+    let mut batch_speedups: Vec<(usize, BenchRow, BenchRow)> = Vec::new();
 
     for &n in &ns {
         let mut rng = Rng::new(4 + n as u64);
@@ -40,13 +43,11 @@ fn main() {
         // the flat/exact samplers need all n logits per example — that O(n·d)
         // is the adaptivity cost the kernel tree exists to avoid, so it is
         // charged inside their benched closures below.
-        let mut logits = vec![0.0f32; n];
         let compute_logits = |logits: &mut [f32]| {
             for (j, slot) in logits.iter_mut().enumerate() {
                 *slot = w[j * d..(j + 1) * d].iter().zip(&h).map(|(&a, &b)| a * b).sum();
             }
         };
-        compute_logits(&mut logits);
 
         let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, None);
         tree.reset_embeddings(&w, n, d);
@@ -55,7 +56,6 @@ fn main() {
 
         let mut out = Sample::default();
         let input_h = SampleInput { h: Some(&h), ..Default::default() };
-        let input_l = SampleInput { logits: Some(&logits), ..Default::default() };
 
         let mut r = Rng::new(1);
         draw_rows.push(bencher.run_with_items(
@@ -86,6 +86,50 @@ fn main() {
             },
         ));
 
+        // batched engine vs per-example draws over one training step's
+        // batch: same per-row RNG streams, same results — the batched path
+        // reuses one arena scratch pool per worker (zero per-example
+        // allocation) and owns the thread fan-out.
+        let batch_examples = 64usize;
+        let threads = default_threads();
+        let mut hs = vec![0.0f32; batch_examples * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let base_input = BatchSampleInput {
+            n: batch_examples,
+            d,
+            n_classes: n,
+            h: Some(&hs),
+            ..Default::default()
+        };
+        let mut outs: Vec<Sample> = (0..batch_examples).map(|_| Sample::with_capacity(m)).collect();
+
+        let mut step = 0u64;
+        let batched_input = BatchSampleInput { threads, ..base_input };
+        let row_batched = bencher.run_with_items(
+            &format!("batched   n={n:>6} ({batch_examples} ex × m={m}, {threads} thr)"),
+            Some((batch_examples * m) as f64),
+            || {
+                step += 1;
+                tree.sample_batch(&batched_input, m, step, &mut outs).unwrap();
+            },
+        );
+        let mut step = 0u64;
+        let row_per_ex = bencher.run_with_items(
+            &format!("per-ex    n={n:>6} ({batch_examples} ex × m={m}, 1 thr)"),
+            Some((batch_examples * m) as f64),
+            || {
+                step += 1;
+                for (i, slot) in outs.iter_mut().enumerate() {
+                    let input = base_input.row(i);
+                    let mut r = row_rng(step, i);
+                    tree.sample(&input, m, &mut r, slot).unwrap();
+                }
+            },
+        );
+        batch_rows.push(row_batched.clone());
+        batch_rows.push(row_per_ex.clone());
+        batch_speedups.push((n, row_per_ex, row_batched));
+
         // update cost: one embedding change -> root-to-leaf z refresh
         let mut r = Rng::new(2);
         let mut w_new = vec![0.0f32; d];
@@ -108,6 +152,14 @@ fn main() {
     }
 
     print_table("per-example draw cost (m draws incl. φ(h) + memoized node dots)", &draw_rows);
+    print_table(
+        "batch engine: sample_batch (arena scratch reuse + fan-out) vs per-example loop",
+        &batch_rows,
+    );
+    for (n, per_ex, batched) in &batch_speedups {
+        print_speedup(&format!("batched vs per-example @ n={n}"), per_ex, batched);
+    }
+    println!("(acceptance target: batched ≥ 1.3x the per-example arena baseline at n ≥ 10^4)");
     print_table("per-class update cost (Fig. 1(b) path refresh)", &update_rows);
 
     // scaling check: tree grows ~log n (plus touched leaves), exact grows

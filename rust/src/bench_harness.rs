@@ -173,6 +173,19 @@ fn format_throughput(t: f64) -> String {
     }
 }
 
+/// Print a speedup line comparing a contender row against a baseline
+/// (used by the batched-vs-per-example sampling series).
+pub fn print_speedup(label: &str, baseline: &BenchRow, contender: &BenchRow) {
+    if contender.mean_s > 0.0 && baseline.mean_s.is_finite() {
+        println!(
+            "speedup {label}: {:.2}x  ({} -> {})",
+            baseline.mean_s / contender.mean_s,
+            format_time(baseline.mean_s),
+            format_time(contender.mean_s)
+        );
+    }
+}
+
 /// Print a labeled data series (epoch, value) — the figure benches emit the
 /// paper's loss-vs-epoch curves in this form so they can be plotted or
 /// diffed directly.

@@ -20,10 +20,10 @@ use crate::coordinator::config::{build_dataset, TrainConfig};
 use crate::coordinator::metrics::{EvalPoint, MetricsSink};
 use crate::data::{Batch, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
-use crate::sampler::{build_sampler, Sample, SampleInput, Sampler};
+use crate::sampler::{build_sampler, BatchSampleInput, Sample, Sampler};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
-use crate::util::threadpool::{default_threads, par_for_each_mut};
+use crate::util::threadpool::default_threads;
 use anyhow::{Context, Result};
 
 /// Result of a training run.
@@ -179,25 +179,21 @@ impl<'e> Trainer<'e> {
         };
         self.phases.add("encode", sw.lap());
 
-        // 2. parallel negative sampling (deterministic per-row streams)
-        let h = h_tensor.as_ref().map(|t| t.as_f32()).transpose()?;
-        let logits = logits_tensor.as_ref().map(|t| t.as_f32()).transpose()?;
+        // 2. batch-level negative sampling. The sampler layer owns the
+        // parallel fan-out; the per-row RNG streams (sampler::row_rng) keep
+        // results deterministic for a fixed seed and any thread count.
         let step_seed = self.rng.next_u64();
+        let inputs = BatchSampleInput {
+            n,
+            d,
+            n_classes,
+            h: h_tensor.as_ref().map(|t| t.as_f32()).transpose()?,
+            logits: logits_tensor.as_ref().map(|t| t.as_f32()).transpose()?,
+            prev: batch.prev.as_deref(),
+            threads: self.threads,
+        };
         let mut rows: Vec<Sample> = (0..n).map(|_| Sample::with_capacity(m)).collect();
-        {
-            let batch_prev = batch.prev.as_deref();
-            par_for_each_mut(&mut rows, self.threads, |i, out| {
-                let input = SampleInput {
-                    h: h.map(|hh| &hh[i * d..(i + 1) * d]),
-                    logits: logits.map(|ll| &ll[i * n_classes..(i + 1) * n_classes]),
-                    prev: batch_prev.map(|p| p[i]),
-                };
-                let mut rng = Rng::new(step_seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
-                sampler
-                    .sample(&input, m, &mut rng, out)
-                    .expect("sampler failed (inputs were validated)");
-            });
-        }
+        sampler.sample_batch(&inputs, m, step_seed, &mut rows)?;
         // assemble neg (N, m), sub (N, m+1) and s (N, S) host-side
         let mut neg = Vec::with_capacity(n * m);
         let mut sub = Vec::with_capacity(n * s_dim);
@@ -207,6 +203,9 @@ impl<'e> Trainer<'e> {
             sub.push(0.0f32); // positive: uncorrected (eq. 2)
             s_idx.push(batch.pos[i]);
             for (&c, &q) in row.classes.iter().zip(&row.q) {
+                // the sampler layer guarantees q > 0 (see sampler/mod.rs);
+                // a violation here would send ln(m·q) = -inf on-device.
+                debug_assert!(q > 0.0 && q.is_finite(), "sampler reported q = {q}");
                 neg.push(c as i32);
                 sub.push(((m as f64) * q).ln() as f32);
                 s_idx.push(c as i32);

@@ -9,6 +9,11 @@
 //! Sampling is O(1): flip λ, then draw from the per-context alias table (or
 //! the unigram table). The reported q is the exact mixture probability, so
 //! the eq. (2) correction stays unbiased in the m → ∞ limit.
+//!
+//! q-positivity: a class drawn through the bigram arm has a positive bigram
+//! probability, and a class drawn through the unigram arm has a positive
+//! (add-one smoothed) unigram probability with weight (1 − λ) — either way
+//! the reported mixture q is strictly positive for every drawable class.
 
 use super::{Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::{AliasTable, Rng};

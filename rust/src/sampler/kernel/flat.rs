@@ -43,7 +43,9 @@ impl Sampler for FlatKernelSampler {
         let cdf = Cdf::new(&w).ok_or_else(|| anyhow::anyhow!("degenerate kernel weights"))?;
         for _ in 0..m {
             let c = cdf.sample(rng);
-            out.push(c as u32, cdf.prob(c));
+            // Cdf::sample only returns positive-weight indices; the clamp
+            // keeps q > 0 even if the ratio to a huge total underflows.
+            out.push(c as u32, cdf.prob(c).max(f64::MIN_POSITIVE));
         }
         Ok(())
     }

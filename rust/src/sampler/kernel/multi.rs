@@ -51,6 +51,9 @@ impl<M: FeatureMap> Sampler for PartialLeafSampler<M> {
         out.clear();
         let phi_h = self.tree.phi_query(h);
         for _ in 0..runs {
+            // draw_leaf shares the tree's guarded branch step, so p_leaf is
+            // strictly positive even when subset masses underflow to zero
+            // (the eq. 2 correction ln(runs·q) stays finite).
             let (range, p_leaf) = self.tree.draw_leaf(&phi_h, rng);
             for class in range {
                 out.push(class, p_leaf);

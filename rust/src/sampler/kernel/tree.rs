@@ -6,44 +6,66 @@
 //! factor of O(D/d) at the leaves cuts memory from O(nD) to O(nd)). Every
 //! node stores `z(C) = Σ_{j∈C} φ(w_j)`.
 //!
+//! # Arena layout
+//!
+//! The tree is a struct-of-arrays arena, not a pointer structure:
+//!
+//! ```text
+//! meta : [NodeMeta; #nodes]   breadth-first (level) order; children of
+//!                             node i are meta[i].left and meta[i].left+1,
+//!                             so sibling subsets are always adjacent
+//! z    : [f64; #nodes × D]    node i owns z[i·D .. (i+1)·D]  (master)
+//! z32  : [f32; #nodes × D]    same layout, f32 shadow for descent dots
+//! ```
+//!
+//! A descent therefore reads two *adjacent* D-sized slices per level
+//! (`left`, `left+1`) from one flat allocation — no pointer chasing and no
+//! per-node `Vec` headers — and `update_many` sweeps contiguous arena
+//! slices bottom-up. Per-example memo state lives in a reusable
+//! [`DrawScratch`] pool (generation counters, no hashing, no allocation
+//! after warm-up), which the batched [`Sampler::sample_batch`] engine keeps
+//! per worker across the whole batch.
+//!
 //! * **draw** (Fig. 1(a)): descend from the root; at each internal node go
 //!   left with probability `⟨φ(h), z(left)⟩ / ⟨φ(h), z(left)⟩+⟨φ(h), z(right)⟩`
 //!   (eq. 9); inside the leaf, score its ≤ leaf_size classes directly with
 //!   the closed-form kernel (O(d) each — the §3.2.2 trick) and draw one.
 //!   Cost: O(D log(n·d/D) + D) = O(D log n). The reported probability is
 //!   computed in closed form, `q_i = K(h, w_i) / ⟨φ(h), z(root)⟩` (eq. 8),
-//!   which the descent provably equals (§3.2.1).
+//!   which the descent provably equals (§3.2.1). Zero/denormal subset
+//!   masses fall back to uniform choices with a guarded descent
+//!   probability, so the reported q is always strictly positive.
 //! * **update** (Fig. 1(b)): when class i's embedding changes, add
 //!   `Δφ = φ(w_new) − φ(w_old)` to every node on the root→leaf path:
 //!   O(D log n).
 //!
 //! `z` is kept in f64: it is maintained *incrementally* over millions of
 //! updates and must not drift (tests bound the drift against a from-scratch
-//! rebuild).
+//! rebuild). The f32 shadow is refreshed from the master and clamped to
+//! finite values, so overflow at large α degrades to an exact f64 fallback
+//! instead of poisoning descent probabilities.
 
 use super::FeatureMap;
-use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_chunks_mut;
 use anyhow::Result;
 
 const NO_CHILD: u32 = u32::MAX;
 
-struct Node {
+/// Node metadata (struct-of-arrays arena; the z summaries live in the flat
+/// `z`/`z32` arenas indexed by node id).
+#[derive(Clone, Copy, Debug)]
+struct NodeMeta {
     /// Class range [lo, hi) this node covers.
     lo: u32,
     hi: u32,
+    /// Left child node id, or `NO_CHILD` for leaves. Nodes are allocated in
+    /// breadth-first order, so the right child is always `left + 1`.
     left: u32,
-    right: u32,
-    /// z(C) = Σ_{j ∈ [lo, hi)} φ(w_j). f64 master copy: maintained
-    /// incrementally across millions of updates, must not drift.
-    z: Vec<f64>,
-    /// f32 shadow of `z` used by the descent dot products (twice the SIMD
-    /// width, half the memory traffic; q values are still computed in
-    /// closed form so sampling corrections stay exact).
-    z32: Vec<f32>,
 }
 
-impl Node {
+impl NodeMeta {
     #[inline]
     fn is_leaf(&self) -> bool {
         self.left == NO_CHILD
@@ -55,13 +77,37 @@ pub struct KernelTreeSampler<M: FeatureMap> {
     map: M,
     n: usize,
     d: usize,
+    /// Feature dimension D (cached `map.dim()`).
+    dim: usize,
     leaf_size: usize,
-    nodes: Vec<Node>,
+    /// Tree depth (root = 1), fixed at build time — update_many sizes its
+    /// delta pool from this without re-walking the tree.
+    tree_depth: usize,
+    /// Node metadata in breadth-first (level) order; node 0 is the root.
+    meta: Vec<NodeMeta>,
+    /// Flat z(C) arena: node i owns `z[i·D .. (i+1)·D]`. f64 master copy:
+    /// maintained incrementally across millions of updates, must not drift.
+    z: Vec<f64>,
+    /// f32 shadow of `z` (same layout) used by the descent dot products
+    /// (twice the SIMD width, half the memory traffic; q values are still
+    /// computed in closed form so sampling corrections stay exact).
+    /// Refreshed from the master on every update, clamped to finite values.
+    z32: Vec<f32>,
     /// Host mirror of the output-embedding table (n × d).
     emb: Vec<f32>,
     /// Scratch buffers for updates (avoid per-update allocation).
     scratch_old: Vec<f64>,
     scratch_new: Vec<f64>,
+    /// Depth-indexed Δz buffers for `update_many`'s bottom-up sweep
+    /// (allocated lazily to the tree depth, then reused forever).
+    delta_pool: Vec<Vec<f64>>,
+    /// Freelist of [`DrawScratch`] pools: `sample`/`sample_batch` check one
+    /// out per example-sequence and return it, so the O(#nodes + n) scratch
+    /// is allocated a bounded number of times (≈ max concurrent workers)
+    /// per sampler lifetime instead of per call. Scratch contents never
+    /// affect results (generation counters invalidate them per example),
+    /// so pooling preserves stream determinism.
+    scratch_pool: std::sync::Mutex<Vec<DrawScratch>>,
     /// Draws + updates performed (ops accounting for the benches).
     pub stats: TreeStats,
 }
@@ -72,6 +118,63 @@ pub struct TreeStats {
     pub draws: u64,
     pub updates: u64,
     pub node_visits: u64,
+}
+
+/// Clamp an f64 to a finite f32 (overflow saturates instead of producing
+/// inf/NaN in the shadow arena — a NaN there used to defeat the draw memo).
+#[inline]
+fn to_f32_clamped(v: f64) -> f32 {
+    let x = v as f32;
+    if x.is_finite() {
+        x
+    } else if x.is_nan() {
+        0.0
+    } else {
+        f32::MAX.copysign(x)
+    }
+}
+
+/// Coerce a kernel/subset mass to a usable value: NaN → 0, negative → 0,
+/// +inf → f64::MAX.
+#[inline]
+fn sanitize_mass(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x.clamp(0.0, f64::MAX)
+    }
+}
+
+/// Guarded eq. (9) branch step, shared by `draw` and `draw_leaf`: go left
+/// with probability `sl / (sl + sr)`. When the combined subset mass
+/// underflows to zero (or is non-finite) it falls back to a fair coin —
+/// the unguarded version always descended right on zero mass, a
+/// deterministic bias, and could report q = 0. Returns the side taken and
+/// its probability, which is always strictly positive.
+#[inline]
+fn choose_branch(sl: f64, sr: f64, rng: &mut Rng) -> (bool, f64) {
+    let sum = sl + sr;
+    if sum > 0.0 && sum.is_finite() {
+        let u = rng.f64() * sum;
+        if u < sl {
+            (true, sl / sum)
+        } else {
+            (false, sr / sum)
+        }
+    } else {
+        (rng.bool(0.5), 0.5)
+    }
+}
+
+/// `partition_point`'s floating-point slack can clamp a draw onto a
+/// zero-mass tail slot of the CDF; walk down to the nearest strictly
+/// positive increment (one exists whenever the total mass is positive).
+#[inline]
+fn step_down_to_positive(cum: &[f64], mut off: usize) -> usize {
+    while off > 0 && cum[off] - cum[off - 1] <= 0.0 {
+        off -= 1;
+    }
+    off
 }
 
 impl<M: FeatureMap> KernelTreeSampler<M> {
@@ -87,11 +190,17 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             map,
             n,
             d,
+            dim,
             leaf_size,
-            nodes: Vec::new(),
+            tree_depth: 1,
+            meta: Vec::new(),
+            z: Vec::new(),
+            z32: Vec::new(),
             emb: vec![0.0; n * d],
             scratch_old: vec![0.0; dim],
             scratch_new: vec![0.0; dim],
+            delta_pool: Vec::new(),
+            scratch_pool: std::sync::Mutex::new(Vec::new()),
             stats: TreeStats::default(),
         };
         sampler.build();
@@ -100,131 +209,205 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
 
     /// Number of tree nodes.
     pub fn node_count(&self) -> usize {
-        self.nodes.len()
+        self.meta.len()
     }
 
-    /// Depth of the tree (root = 1).
+    /// Depth of the tree (root = 1). Cached at build time.
     pub fn depth(&self) -> usize {
-        fn go(nodes: &[Node], i: u32) -> usize {
-            let n = &nodes[i as usize];
-            if n.is_leaf() {
-                1
-            } else {
-                1 + go(nodes, n.left).max(go(nodes, n.right))
-            }
-        }
-        go(&self.nodes, 0)
+        self.tree_depth
     }
 
     pub fn leaf_size(&self) -> usize {
         self.leaf_size
     }
 
+    /// Node i's z(C) slice in the arena.
+    #[inline]
+    fn z_of(&self, idx: u32) -> &[f64] {
+        &self.z[idx as usize * self.dim..(idx as usize + 1) * self.dim]
+    }
+
+    /// Node i's f32 shadow slice in the arena.
+    #[inline]
+    fn z32_of(&self, idx: u32) -> &[f32] {
+        &self.z32[idx as usize * self.dim..(idx as usize + 1) * self.dim]
+    }
+
     /// Total kernel mass `⟨φ(h), z(root)⟩ = Σ_j K(h, w_j)` — the eq. (8)
     /// partition function, computed in O(D).
     pub fn partition(&self, phi_h: &[f64]) -> f64 {
-        dot(phi_h, &self.nodes[0].z)
+        dot(phi_h, self.z_of(0))
     }
 
     /// Materialize φ(h) (callers that draw many samples per example should
-    /// reuse this across draws — the trainer does).
+    /// reuse this across draws — the trainer does, via [`DrawScratch`]).
     pub fn phi_query(&self, h: &[f32]) -> Vec<f64> {
-        let mut phi = vec![0.0; self.map.dim()];
+        let mut phi = vec![0.0; self.dim];
         self.map.phi(h, &mut phi);
         phi
     }
 
-    /// Fresh per-example draw cache (see [`DrawCache`]).
-    pub fn new_cache(&self, phi_h: &[f64]) -> DrawCache {
-        DrawCache {
-            phi32: phi_h.iter().map(|&x| x as f32).collect(),
-            // eq. (8) partition function in f64: q values stay exact even
-            // though the descent decisions use the f32 shadow.
-            total: self.partition(phi_h),
-            node_dot: vec![f64::NAN; self.nodes.len()],
-            leaf_cdf: std::collections::HashMap::new(),
+    /// Allocate a reusable draw scratch pool sized for this tree (see
+    /// [`DrawScratch`]). One pool serves any number of examples in
+    /// sequence; the batched engine keeps one per worker thread.
+    pub fn new_scratch(&self) -> DrawScratch {
+        DrawScratch {
+            phi_h: vec![0.0; self.dim],
+            phi32: vec![0.0; self.dim],
+            total: 0.0,
+            node_dot: vec![0.0; self.meta.len()],
+            node_gen: vec![0; self.meta.len()],
+            leaf_cum: vec![0.0; self.n],
+            leaf_gen: vec![0; self.meta.len()],
+            gen: 0,
         }
     }
 
+    /// Check a scratch pool out of the freelist, allocating only when the
+    /// freelist is empty — so steady-state `sample`/`sample_batch` traffic
+    /// allocates nothing, and total allocations are bounded by the maximum
+    /// number of concurrent users rather than the call count.
+    pub fn take_scratch(&self) -> DrawScratch {
+        self.scratch_pool
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_else(|| self.new_scratch())
+    }
+
+    /// Return a scratch pool to the freelist for reuse by later calls.
+    pub fn put_scratch(&self, scratch: DrawScratch) {
+        self.scratch_pool.lock().expect("scratch pool poisoned").push(scratch);
+    }
+
+    /// Start a new example: materialize φ(h), compute the eq. (8) partition
+    /// function in f64 (q values stay exact even though descent decisions
+    /// use the f32 shadow), and invalidate all memos by bumping the
+    /// generation counter — O(#nodes) state is reused, not reallocated.
+    pub fn begin_example(&self, h: &[f32], s: &mut DrawScratch) {
+        debug_assert_eq!(h.len(), self.d);
+        self.map.phi(h, &mut s.phi_h);
+        for (dst, &x) in s.phi32.iter_mut().zip(s.phi_h.iter()) {
+            *dst = to_f32_clamped(x);
+        }
+        s.total = self.partition(&s.phi_h);
+        s.advance_gen();
+    }
+
+    /// Memoized `⟨φ(h), z(node)⟩`. Validity is a generation counter, *not*
+    /// a NaN sentinel: a legitimately-NaN f32 dot (z32 overflow at large α)
+    /// used to defeat the memo — recomputing forever and poisoning descent
+    /// probabilities. Now a non-finite fast dot triggers one exact f64
+    /// fallback, and the sanitized value is cached like any other.
     #[inline]
-    fn node_dot(&self, cache: &mut DrawCache, idx: u32) -> f64 {
-        let slot = &mut cache.node_dot[idx as usize];
-        if slot.is_nan() {
-            *slot = (dot32(&cache.phi32, &self.nodes[idx as usize].z32) as f64).max(0.0);
+    fn node_mass(&self, s: &mut DrawScratch, idx: u32) -> f64 {
+        let i = idx as usize;
+        if s.node_gen[i] == s.gen {
+            return s.node_dot[i];
         }
-        *slot
+        let fast = dot32(&s.phi32, self.z32_of(idx)) as f64;
+        let v = if fast.is_finite() {
+            fast.max(0.0)
+        } else {
+            sanitize_mass(dot(&s.phi_h, self.z_of(idx)))
+        };
+        s.node_dot[i] = v;
+        s.node_gen[i] = s.gen;
+        v
     }
 
-    fn leaf_cdf<'c>(&self, cache: &'c mut DrawCache, h: &[f32], idx: u32) -> &'c LeafCdf {
-        let node = &self.nodes[idx as usize];
-        cache.leaf_cdf.entry(idx).or_insert_with(|| {
-            let lo = node.lo as usize;
-            let hi = node.hi as usize;
-            let mut cum = Vec::with_capacity(hi - lo);
-            let mut acc = 0.0;
+    /// Fill (at most once per example per leaf) and return the leaf's
+    /// inclusive kernel-mass prefix sums plus its first class id. The CDF
+    /// arena is indexed by class id, so leaf `[lo, hi)` owns
+    /// `leaf_cum[lo..hi]` — flat, no hashing.
+    fn leaf_cdf<'s>(&self, s: &'s mut DrawScratch, h: &[f32], idx: u32) -> (&'s [f64], u32) {
+        let m = self.meta[idx as usize];
+        let (lo, hi) = (m.lo as usize, m.hi as usize);
+        if s.leaf_gen[idx as usize] != s.gen {
+            // §3.2.2: score the O(D/d) leaf classes in the original space —
+            // O(d) per class with the closed-form kernel.
+            let mut acc = 0.0f64;
             for j in lo..hi {
-                acc += self.map.kernel(h, &self.emb[j * self.d..(j + 1) * self.d]);
-                cum.push(acc);
+                acc += sanitize_mass(self.map.kernel(h, &self.emb[j * self.d..(j + 1) * self.d]));
+                s.leaf_cum[j] = acc;
             }
-            LeafCdf { lo: node.lo, cum }
-        })
+            s.leaf_gen[idx as usize] = s.gen;
+        }
+        (&s.leaf_cum[lo..hi], m.lo)
     }
 
-    /// One draw given a precomputed φ(h) and a per-example [`DrawCache`].
-    /// Returns (class, q). The m draws of one example share the cache, so
+    /// One draw given a [`DrawScratch`] primed by [`Self::begin_example`].
+    /// Returns (class, q). The m draws of one example share the scratch, so
     /// each tree node's `⟨φ(h), z⟩` and each leaf's CDF is computed at most
     /// once per example regardless of m.
-    pub fn draw(&self, h: &[f32], cache: &mut DrawCache, rng: &mut Rng) -> (u32, f64) {
-        let total = cache.total;
+    ///
+    /// q is strictly positive in every case: zero-mass subsets fall back to
+    /// uniform choices whose probability is the guarded descent product.
+    pub fn draw(&self, h: &[f32], s: &mut DrawScratch, rng: &mut Rng) -> (u32, f64) {
+        let total = s.total;
         let mut idx = 0u32;
+        // Guarded descent product — the draw's actual probability when the
+        // closed form degenerates.
+        let mut p_path = 1.0f64;
         loop {
-            let node = &self.nodes[idx as usize];
-            if node.is_leaf() {
-                // §3.2.2: score the O(D/d) leaf classes in the original
-                // space — O(d) per class with the closed-form kernel
-                // (memoized per example).
-                let leaf = self.leaf_cdf(cache, h, idx);
-                let mass = *leaf.cum.last().expect("leaf not empty");
+            let meta = self.meta[idx as usize];
+            if meta.is_leaf() {
+                let len = (meta.hi - meta.lo) as usize;
+                let (cum, lo) = self.leaf_cdf(s, h, idx);
+                let mass = *cum.last().expect("leaf not empty");
+                if !(mass > 0.0) {
+                    // Every kernel mass in the subset underflowed to zero
+                    // (or was non-finite): uniform within the subset, with
+                    // the descent probability as q — never ≤ 0. Unguarded,
+                    // this clamped to the last class and reported q = 0,
+                    // sending ln(m·q) = -inf into the training kernel.
+                    let off = rng.below(len as u64) as usize;
+                    let q = (p_path / len as f64).max(f64::MIN_POSITIVE);
+                    return (lo + off as u32, q);
+                }
                 let u = rng.f64() * mass;
-                let off = leaf.cum.partition_point(|&c| c <= u).min(leaf.cum.len() - 1);
-                let chosen = leaf.lo as usize + off;
+                let off = cum.partition_point(|&c| c <= u).min(len - 1);
+                let off = step_down_to_positive(cum, off);
                 // closed-form q (provably equals the descent product,
                 // §3.2.1); the kernel value is the CDF increment.
-                let k = if off == 0 { leaf.cum[0] } else { leaf.cum[off] - leaf.cum[off - 1] };
-                return (chosen as u32, k / total);
+                let k = if off == 0 { cum[0] } else { cum[off] - cum[off - 1] };
+                let q = k / total;
+                let q = if q > 0.0 && q.is_finite() {
+                    q
+                } else {
+                    // degenerate partition function: report the actual draw
+                    // probability under the guarded descent instead
+                    (p_path * k / mass).max(f64::MIN_POSITIVE)
+                };
+                return (lo + off as u32, q);
             }
-            // eq. (9): branch proportionally to the subset masses.
-            let (left, right) = (node.left, node.right);
-            let sl = self.node_dot(cache, left);
-            let sr = self.node_dot(cache, right);
-            let u = rng.f64() * (sl + sr);
-            idx = if u < sl { left } else { right };
+            // eq. (9): branch proportionally to the subset masses (guarded).
+            let sl = self.node_mass(s, meta.left);
+            let sr = self.node_mass(s, meta.left + 1);
+            let (go_left, p) = choose_branch(sl, sr, rng);
+            p_path *= p;
+            idx = if go_left { meta.left } else { meta.left + 1 };
         }
     }
 
     /// §3.2.2 "multiple partial samples": one descent, return the whole leaf.
     /// Each returned class carries `q = P(reaching its leaf)`; correcting
     /// with `ln(runs · q)` keeps `E[Σ exp(o')] = Σ exp(o)` (the classes of a
-    /// leaf are returned with weight 1/P(leaf) in expectation).
+    /// leaf are returned with weight 1/P(leaf) in expectation). Shares the
+    /// guarded branch step with [`Self::draw`], so P(leaf) > 0 always.
     pub fn draw_leaf(&self, phi_h: &[f64], rng: &mut Rng) -> (std::ops::Range<u32>, f64) {
         let mut idx = 0u32;
         let mut p_leaf = 1.0f64;
         loop {
-            let node = &self.nodes[idx as usize];
-            if node.is_leaf() {
-                return (node.lo..node.hi, p_leaf);
+            let meta = self.meta[idx as usize];
+            if meta.is_leaf() {
+                return (meta.lo..meta.hi, p_leaf.max(f64::MIN_POSITIVE));
             }
-            let sl = dot(phi_h, &self.nodes[node.left as usize].z).max(0.0);
-            let sr = dot(phi_h, &self.nodes[node.right as usize].z).max(0.0);
-            let u = rng.f64() * (sl + sr);
-            let denom = (sl + sr).max(f64::MIN_POSITIVE);
-            if u < sl {
-                p_leaf *= sl / denom;
-                idx = node.left;
-            } else {
-                p_leaf *= sr / denom;
-                idx = node.right;
-            }
+            let sl = sanitize_mass(dot(phi_h, self.z_of(meta.left)));
+            let sr = sanitize_mass(dot(phi_h, self.z_of(meta.left + 1)));
+            let (go_left, p) = choose_branch(sl, sr, rng);
+            p_leaf *= p;
+            idx = if go_left { meta.left } else { meta.left + 1 };
         }
     }
 
@@ -233,221 +416,247 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
     pub fn leaf_prob_of_class(&self, phi_h: &[f64], class: u32) -> f64 {
         let mut idx = 0u32;
         loop {
-            let node = &self.nodes[idx as usize];
-            if node.is_leaf() {
-                return dot(phi_h, &node.z).max(0.0) / self.partition(phi_h);
+            let meta = self.meta[idx as usize];
+            if meta.is_leaf() {
+                return dot(phi_h, self.z_of(idx)).max(0.0) / self.partition(phi_h);
             }
-            let mid = self.nodes[node.left as usize].hi;
-            idx = if class < mid { node.left } else { node.right };
+            let mid = self.meta[meta.left as usize].hi;
+            idx = if class < mid { meta.left } else { meta.left + 1 };
         }
     }
 
     /// Exact probability of one class (closed form; O(d + D)).
     pub fn class_prob(&self, h: &[f32], class: u32) -> f64 {
         let phi_h = self.phi_query(h);
-        let k = self.map.kernel(h, &self.emb[class as usize * self.d..(class as usize + 1) * self.d]);
+        let k = self
+            .map
+            .kernel(h, &self.emb[class as usize * self.d..(class as usize + 1) * self.d]);
         k / self.partition(&phi_h)
     }
 
     /// Batched Fig. 1(b): apply many embedding updates in one bottom-up
-    /// sweep. Each touched node receives its *aggregated* Δz once, so the
-    /// path-add cost drops from O(#updates · D · log n) to
+    /// sweep over arena slices. Each touched node receives its *aggregated*
+    /// Δz once, so the path-add cost drops from O(#updates · D · log n) to
     /// O(#updates · d² + #touched_nodes · D) — the dominant term becomes the
     /// unavoidable φ evaluations. Equivalent to calling `update` per class
-    /// (up to f64 summation order).
+    /// (up to f64 summation order; the property tests bound the difference).
     ///
-    /// `updates` must be sorted by class id with at most one entry per class
-    /// (the trainer's dedup guarantees this); `rows` is the flat (len·d)
-    /// buffer of new embeddings in the same order.
+    /// `classes` must be sorted with at most one entry per class (the
+    /// trainer's dedup guarantees this); `rows` is the flat (len·d) buffer
+    /// of new embeddings in the same order.
     pub fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
         debug_assert_eq!(rows.len(), classes.len() * self.d);
         debug_assert!(classes.windows(2).all(|w| w[0] < w[1]), "classes must be sorted+dedup");
         if classes.is_empty() {
             return;
         }
-        let delta = self.apply_updates_rec(0, classes, rows);
-        // root already applied inside the recursion; delta returned for parent
-        let _ = delta;
+        let depth = self.depth();
+        while self.delta_pool.len() < depth {
+            self.delta_pool.push(vec![0.0; self.dim]);
+        }
+        self.apply_updates_rec(0, classes, rows, 0);
         self.stats.updates += classes.len() as u64;
     }
 
-    /// Recursive helper: applies all updates under `node`, adds the
-    /// aggregated Δz to the node, and returns that Δz for the parent.
-    fn apply_updates_rec(&mut self, idx: u32, classes: &[usize], rows: &[f32]) -> Vec<f64> {
-        let dim = self.map.dim();
-        let (lo, hi, left, right) = {
-            let n = &self.nodes[idx as usize];
-            (n.lo, n.hi, n.left, n.right)
-        };
-        debug_assert!(classes.iter().all(|&c| (c as u32) >= lo && (c as u32) < hi));
-        let mut delta = vec![0.0f64; dim];
-        if left == NO_CHILD {
-            // leaf: Δφ per class, accumulated; mirror updated here
+    /// Recursive helper: aggregates the Δφ of every update under `idx` into
+    /// `delta_pool[level]`, applies it to the node's arena slice, and
+    /// leaves it in the pool for the parent to accumulate — one O(D) add
+    /// per touched node, no allocation after the pool is warm.
+    fn apply_updates_rec(&mut self, idx: u32, classes: &[usize], rows: &[f32], level: usize) {
+        let meta = self.meta[idx as usize];
+        debug_assert!(classes.iter().all(|&c| (c as u32) >= meta.lo && (c as u32) < meta.hi));
+        self.delta_pool[level].fill(0.0);
+        if meta.is_leaf() {
+            // leaf: Δφ per class, accumulated; embedding mirror updated here
             for (i, &class) in classes.iter().enumerate() {
                 let w_new = &rows[i * self.d..(i + 1) * self.d];
-                let row = &self.emb[class * self.d..(class + 1) * self.d];
-                let (old_buf, new_buf) = (&mut self.scratch_old, &mut self.scratch_new);
-                self.map.phi(row, old_buf);
-                self.map.phi(w_new, new_buf);
-                for k in 0..dim {
-                    delta[k] += new_buf[k] - old_buf[k];
+                self.map
+                    .phi(&self.emb[class * self.d..(class + 1) * self.d], &mut self.scratch_old);
+                self.map.phi(w_new, &mut self.scratch_new);
+                let dst = &mut self.delta_pool[level];
+                for k in 0..self.dim {
+                    dst[k] += self.scratch_new[k] - self.scratch_old[k];
                 }
                 self.emb[class * self.d..(class + 1) * self.d].copy_from_slice(w_new);
             }
         } else {
-            let mid = self.nodes[left as usize].hi as usize;
+            let mid = self.meta[meta.left as usize].hi as usize;
             let split = classes.partition_point(|&c| c < mid);
             if split > 0 {
-                let dl = self.apply_updates_rec(left, &classes[..split], &rows[..split * self.d]);
-                for (a, b) in delta.iter_mut().zip(&dl) {
+                self.apply_updates_rec(meta.left, &classes[..split], &rows[..split * self.d], level + 1);
+                let (head, tail) = self.delta_pool.split_at_mut(level + 1);
+                for (a, b) in head[level].iter_mut().zip(tail[0].iter()) {
                     *a += *b;
                 }
             }
             if split < classes.len() {
-                let dr =
-                    self.apply_updates_rec(right, &classes[split..], &rows[split * self.d..]);
-                for (a, b) in delta.iter_mut().zip(&dr) {
+                self.apply_updates_rec(
+                    meta.left + 1,
+                    &classes[split..],
+                    &rows[split * self.d..],
+                    level + 1,
+                );
+                let (head, tail) = self.delta_pool.split_at_mut(level + 1);
+                for (a, b) in head[level].iter_mut().zip(tail[0].iter()) {
                     *a += *b;
                 }
             }
         }
-        let node = &mut self.nodes[idx as usize];
-        for ((zi, z32i), di) in node.z.iter_mut().zip(node.z32.iter_mut()).zip(delta.iter()) {
+        // apply the aggregated Δz to this node's arena slices
+        let base = idx as usize * self.dim;
+        let zs = &mut self.z[base..base + self.dim];
+        let z32s = &mut self.z32[base..base + self.dim];
+        let delta = &self.delta_pool[level];
+        for ((zi, z32i), di) in zs.iter_mut().zip(z32s.iter_mut()).zip(delta.iter()) {
             *zi += *di;
-            *z32i = *zi as f32;
+            *z32i = to_f32_clamped(*zi);
         }
         self.stats.node_visits += 1;
-        delta
     }
 
-    /// Rebuild every z from the embedding mirror (O(n·D)).
+    /// (Re)build the arena: breadth-first node layout, then every z from
+    /// the embedding mirror (O(n·D)).
     fn build(&mut self) {
-        self.nodes.clear();
-        self.build_range(0, self.n as u32);
-        self.recompute_node(0);
-    }
-
-    /// Allocate nodes for [lo, hi); returns node index.
-    fn build_range(&mut self, lo: u32, hi: u32) -> u32 {
-        let idx = self.nodes.len() as u32;
-        self.nodes.push(Node { lo, hi, left: NO_CHILD, right: NO_CHILD, z: Vec::new(), z32: Vec::new() });
-        if (hi - lo) as usize > self.leaf_size {
-            let mid = lo + (hi - lo) / 2;
-            let left = self.build_range(lo, mid);
-            let right = self.build_range(mid, hi);
-            self.nodes[idx as usize].left = left;
-            self.nodes[idx as usize].right = right;
+        self.meta.clear();
+        self.meta.push(NodeMeta { lo: 0, hi: self.n as u32, left: NO_CHILD });
+        let mut head = 0usize;
+        while head < self.meta.len() {
+            let m = self.meta[head];
+            if (m.hi - m.lo) as usize > self.leaf_size {
+                let mid = m.lo + (m.hi - m.lo) / 2;
+                self.meta[head].left = self.meta.len() as u32;
+                self.meta.push(NodeMeta { lo: m.lo, hi: mid, left: NO_CHILD });
+                self.meta.push(NodeMeta { lo: mid, hi: m.hi, left: NO_CHILD });
+            }
+            head += 1;
         }
-        idx
-    }
-
-    /// Recompute z for node `idx` (post-order) from the embedding mirror.
-    fn recompute_node(&mut self, idx: u32) {
-        let (lo, hi, left, right) = {
-            let n = &self.nodes[idx as usize];
-            (n.lo, n.hi, n.left, n.right)
-        };
-        let dim = self.map.dim();
-        if left == NO_CHILD {
-            let mut z = vec![0.0f64; dim];
-            let mut phi = vec![0.0f64; dim];
-            for j in lo..hi {
-                let j = j as usize;
-                self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
-                for (zi, pi) in z.iter_mut().zip(&phi) {
-                    *zi += *pi;
+        self.tree_depth = {
+            fn go(meta: &[NodeMeta], i: u32) -> usize {
+                let m = meta[i as usize];
+                if m.is_leaf() {
+                    1
+                } else {
+                    1 + go(meta, m.left).max(go(meta, m.left + 1))
                 }
             }
-            self.nodes[idx as usize].z32 = z.iter().map(|&x| x as f32).collect();
-            self.nodes[idx as usize].z = z;
-            return;
-        }
-        self.recompute_node(left);
-        self.recompute_node(right);
-        let mut z = vec![0.0f64; dim];
-        for &child in [left, right].iter() {
-            for (zi, ci) in z.iter_mut().zip(&self.nodes[child as usize].z) {
-                *zi += *ci;
+            go(&self.meta, 0)
+        };
+        self.z = vec![0.0; self.meta.len() * self.dim];
+        self.z32 = vec![0.0; self.meta.len() * self.dim];
+        self.delta_pool.clear();
+        self.recompute_all();
+    }
+
+    /// Recompute every z from the embedding mirror. Children always have
+    /// larger ids than their parent (breadth-first layout), so one reverse
+    /// sweep visits children before parents — no recursion.
+    fn recompute_all(&mut self) {
+        let dim = self.dim;
+        let mut phi = vec![0.0f64; dim];
+        for idx in (0..self.meta.len()).rev() {
+            let m = self.meta[idx];
+            if m.is_leaf() {
+                let target = &mut self.z[idx * dim..(idx + 1) * dim];
+                target.fill(0.0);
+                for j in m.lo..m.hi {
+                    let j = j as usize;
+                    self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
+                    for (zi, pi) in target.iter_mut().zip(&phi) {
+                        *zi += *pi;
+                    }
+                }
+            } else {
+                let l = m.left as usize;
+                let (head, tail) = self.z.split_at_mut(l * dim);
+                let target = &mut head[idx * dim..(idx + 1) * dim];
+                let (zl, zr) = (&tail[..dim], &tail[dim..2 * dim]);
+                for ((t, a), b) in target.iter_mut().zip(zl).zip(zr) {
+                    *t = *a + *b;
+                }
             }
         }
-        self.nodes[idx as usize].z32 = z.iter().map(|&x| x as f32).collect();
-        self.nodes[idx as usize].z = z;
+        for (s, &v) in self.z32.iter_mut().zip(self.z.iter()) {
+            *s = to_f32_clamped(v);
+        }
     }
 
     /// Max |z − z_rebuilt| over all nodes/components: drift diagnostic.
     pub fn max_drift(&self) -> f64 {
-        let mut clone_z: Vec<Vec<f64>> = self.nodes.iter().map(|n| n.z.clone()).collect();
-        // rebuild into a scratch copy
-        let mut fresh = KernelTreeSamplerRebuild {
-            map: &self.map,
-            d: self.d,
-            emb: &self.emb,
-            nodes: &self.nodes,
-            out: &mut clone_z,
-        };
-        fresh.recompute(0);
-        let mut worst = 0.0f64;
-        for (node, fresh_z) in self.nodes.iter().zip(clone_z.iter()) {
-            for (a, b) in node.z.iter().zip(fresh_z) {
-                worst = worst.max((a - b).abs());
-            }
-        }
-        worst
-    }
-}
-
-/// Helper to rebuild z values without mutating the sampler (drift check).
-struct KernelTreeSamplerRebuild<'a, M: FeatureMap> {
-    map: &'a M,
-    d: usize,
-    emb: &'a [f32],
-    nodes: &'a [Node],
-    out: &'a mut Vec<Vec<f64>>,
-}
-
-impl<'a, M: FeatureMap> KernelTreeSamplerRebuild<'a, M> {
-    fn recompute(&mut self, idx: u32) {
-        let n = &self.nodes[idx as usize];
-        let dim = self.map.dim();
-        let mut z = vec![0.0f64; dim];
-        if n.is_leaf() {
-            let mut phi = vec![0.0f64; dim];
-            for j in n.lo..n.hi {
-                let j = j as usize;
-                self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
-                for (zi, pi) in z.iter_mut().zip(&phi) {
-                    *zi += *pi;
+        let dim = self.dim;
+        let mut fresh = vec![0.0f64; self.z.len()];
+        let mut phi = vec![0.0f64; dim];
+        for idx in (0..self.meta.len()).rev() {
+            let m = self.meta[idx];
+            if m.is_leaf() {
+                let target = &mut fresh[idx * dim..(idx + 1) * dim];
+                for j in m.lo..m.hi {
+                    let j = j as usize;
+                    self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
+                    for (zi, pi) in target.iter_mut().zip(&phi) {
+                        *zi += *pi;
+                    }
                 }
-            }
-        } else {
-            self.recompute(n.left);
-            self.recompute(n.right);
-            for &child in [n.left, n.right].iter() {
-                for (zi, ci) in z.iter_mut().zip(&self.out[child as usize]) {
-                    *zi += *ci;
+            } else {
+                let l = m.left as usize;
+                let (head, tail) = fresh.split_at_mut(l * dim);
+                let target = &mut head[idx * dim..(idx + 1) * dim];
+                for ((t, a), b) in target.iter_mut().zip(&tail[..dim]).zip(&tail[dim..2 * dim]) {
+                    *t = *a + *b;
                 }
             }
         }
-        self.out[idx as usize] = z;
+        self.z
+            .iter()
+            .zip(&fresh)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max)
     }
 }
 
-/// Per-example memo shared by the m draws of one example: lazily computed
-/// `⟨φ(h), z(node)⟩` values and leaf CDFs. Reduces the per-example cost from
-/// O(m · D · log n) to O(min(m·log n, #nodes) · D + m · log n).
-pub struct DrawCache {
-    /// f32 copy of φ(h) for the vectorized descent dots.
+/// Reusable per-example memo pool for the m draws of one example: lazily
+/// computed `⟨φ(h), z(node)⟩` values and leaf CDFs, validated by a
+/// generation counter that [`KernelTreeSampler::begin_example`] bumps.
+/// Replaces the old per-call NaN-sentinel vector + `HashMap` cache: flat
+/// arrays indexed by node/class id, zero allocation after construction, and
+/// NaN is a representable value rather than "unset".
+pub struct DrawScratch {
+    /// φ(h) of the current example (f64 master).
+    phi_h: Vec<f64>,
+    /// f32 copy of φ(h) for the vectorized descent dots (clamped finite).
     phi32: Vec<f32>,
     /// f64 partition function ⟨φ(h), z(root)⟩ for exact q reporting.
     total: f64,
+    /// Memoized node masses, valid where `node_gen[i] == gen`.
     node_dot: Vec<f64>,
-    leaf_cdf: std::collections::HashMap<u32, LeafCdf>,
+    node_gen: Vec<u32>,
+    /// Leaf CDF arena indexed by class id (leaf [lo, hi) owns [lo..hi]),
+    /// valid where `leaf_gen[node] == gen`.
+    leaf_cum: Vec<f64>,
+    leaf_gen: Vec<u32>,
+    gen: u32,
 }
 
-struct LeafCdf {
-    lo: u32,
-    /// Inclusive prefix sums of the leaf's kernel scores.
-    cum: Vec<f64>,
+impl DrawScratch {
+    /// Invalidate all memos for a new example (O(1) amortized; the marker
+    /// arrays are only rewritten on generation-counter wrap).
+    fn advance_gen(&mut self) {
+        if self.gen == u32::MAX {
+            self.node_gen.fill(0);
+            self.leaf_gen.fill(0);
+            self.gen = 0;
+        }
+        self.gen += 1;
+    }
+
+    /// eq. (8) partition function of the current example.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// φ(h) of the current example.
+    pub fn phi_h(&self) -> &[f64] {
+        &self.phi_h
+    }
 }
 
 /// f32 dot with 8-way accumulation — the hot descent dot (z32 shadow path).
@@ -470,7 +679,7 @@ fn dot32(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// f64 dot with 4-way accumulation (keeps LLVM auto-vectorizing the
-/// non-hot f64 paths: partition(), draw_leaf()).
+/// non-hot f64 paths: partition(), draw_leaf(), overflow fallbacks).
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -505,13 +714,55 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
         anyhow::ensure!(h.len() == self.d, "h len {} != d {}", h.len(), self.d);
         out.clear();
         // φ(h) once per example, shared by the m draws (O(d²) amortized);
-        // node dots and leaf CDFs are memoized across the draws too.
-        let phi_h = self.phi_query(h);
-        let mut cache = self.new_cache(&phi_h);
+        // node dots and leaf CDFs are memoized across the draws too. The
+        // scratch comes from the freelist, so repeated per-example calls
+        // don't pay the O(#nodes + n) allocation either.
+        let mut scratch = self.take_scratch();
+        self.begin_example(h, &mut scratch);
         for _ in 0..m {
-            let (class, q) = self.draw(h, &mut cache, rng);
+            let (class, q) = self.draw(h, &mut scratch, rng);
             out.push(class, q);
         }
+        self.put_scratch(scratch);
+        Ok(())
+    }
+
+    /// Batched descent engine: each worker checks one [`DrawScratch`] out
+    /// of the freelist and reuses it across all of that worker's rows, so a
+    /// steady-state batch performs zero allocations and walks only the flat
+    /// arena. Row `i` draws from [`row_rng`]`(step_seed, i)`, bit-identical
+    /// to the per-example loop.
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        anyhow::ensure!(inputs.d == self.d, "batch h dim {} != sampler d {}", inputs.d, self.d);
+        let h_all = inputs.h.expect("validated: kernel tree needs h");
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut scratch = self.take_scratch();
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = &h_all[i * self.d..(i + 1) * self.d];
+                let mut rng = row_rng(step_seed, i);
+                self.begin_example(h, &mut scratch);
+                slot.clear();
+                for _ in 0..m {
+                    let (class, q) = self.draw(h, &mut scratch, &mut rng);
+                    slot.push(class, q);
+                }
+            }
+            self.put_scratch(scratch);
+        });
         Ok(())
     }
 
@@ -529,34 +780,32 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
     fn update(&mut self, class: usize, w_new: &[f32]) {
         debug_assert!(class < self.n);
         debug_assert_eq!(w_new.len(), self.d);
-        let row = &self.emb[class * self.d..(class + 1) * self.d];
         // Δφ = φ(new) − φ(old)
         // (scratch buffers are reused; this is the hot update path)
-        let dim = self.map.dim();
-        let (old_buf, new_buf) = (&mut self.scratch_old, &mut self.scratch_new);
-        self.map.phi(row, old_buf);
-        self.map.phi(w_new, new_buf);
+        let dim = self.dim;
+        self.map.phi(&self.emb[class * self.d..(class + 1) * self.d], &mut self.scratch_old);
+        self.map.phi(w_new, &mut self.scratch_new);
         for i in 0..dim {
-            new_buf[i] -= old_buf[i];
+            self.scratch_new[i] -= self.scratch_old[i];
         }
-        // walk the path by range descent
+        // walk the path by range descent, patching arena slices
         let mut idx = 0u32;
         loop {
-            let node = &mut self.nodes[idx as usize];
-            for ((zi, z32i), di) in node.z.iter_mut().zip(node.z32.iter_mut()).zip(new_buf.iter()) {
+            let meta = self.meta[idx as usize];
+            let base = idx as usize * dim;
+            let zs = &mut self.z[base..base + dim];
+            let z32s = &mut self.z32[base..base + dim];
+            for ((zi, z32i), di) in zs.iter_mut().zip(z32s.iter_mut()).zip(self.scratch_new.iter())
+            {
                 *zi += *di;
-                *z32i = *zi as f32; // refresh the f32 shadow from the master
+                *z32i = to_f32_clamped(*zi);
             }
             self.stats.node_visits += 1;
-            if node.is_leaf() {
+            if meta.is_leaf() {
                 break;
             }
-            let mid = self.nodes[self.nodes[idx as usize].left as usize].hi;
-            idx = if (class as u32) < mid {
-                self.nodes[idx as usize].left
-            } else {
-                self.nodes[idx as usize].right
-            };
+            let mid = self.meta[meta.left as usize].hi;
+            idx = if (class as u32) < mid { meta.left } else { meta.left + 1 };
         }
         self.emb[class * self.d..(class + 1) * self.d].copy_from_slice(w_new);
         self.stats.updates += 1;
@@ -669,6 +918,48 @@ mod tests {
     }
 
     #[test]
+    fn update_many_matches_single_updates_and_rebuild() {
+        // the batched aggregated sweep must leave the arena within 1e-9 of
+        // (a) the equivalent sequence of single updates and (b) a rebuild
+        check("update_many == singles == rebuild", 12, |g| {
+            let n = g.usize_in(3, 48);
+            let d = g.usize_in(1, 4);
+            let leaf = g.usize_in(1, n);
+            let mut rng = Rng::new(g.case_seed ^ 3);
+            let emb = random_emb(&mut rng, n, d);
+            let map = QuadraticMap::new(d, 100.0);
+            let mut batched = KernelTreeSampler::new(map.clone(), n, Some(leaf));
+            batched.reset_embeddings(&emb, n, d);
+            let mut singles = KernelTreeSampler::new(map, n, Some(leaf));
+            singles.reset_embeddings(&emb, n, d);
+            // random class subset, sorted + dedup, with fresh rows
+            let k = g.usize_in(1, n);
+            let mut classes: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut classes);
+            classes.truncate(k);
+            classes.sort_unstable();
+            let mut rows = vec![0.0f32; k * d];
+            rng.fill_normal(&mut rows, 0.8);
+
+            batched.update_many(&classes, &rows);
+            for (i, &class) in classes.iter().enumerate() {
+                singles.update(class, &rows[i * d..(i + 1) * d]);
+            }
+            for (idx, (a, b)) in batched.z.iter().zip(&singles.z).enumerate() {
+                assert!((a - b).abs() < 1e-9, "z[{idx}]: {a} vs {b}");
+            }
+            assert_eq!(batched.emb, singles.emb);
+            assert!(batched.max_drift() < 1e-9, "drift {}", batched.max_drift());
+            // a second sweep over a subset keeps everything consistent too
+            let classes2: Vec<usize> = classes.iter().copied().step_by(2).collect();
+            let mut rows2 = vec![0.0f32; classes2.len() * d];
+            rng.fill_normal(&mut rows2, 0.8);
+            batched.update_many(&classes2, &rows2);
+            assert!(batched.max_drift() < 1e-9, "drift {}", batched.max_drift());
+        });
+    }
+
+    #[test]
     fn update_changes_distribution_correctly() {
         let (n, d) = (16, 3);
         let mut rng = Rng::new(5);
@@ -697,6 +988,24 @@ mod tests {
         // D = 65, d = 8 -> leaf_size = 8
         assert_eq!(tree.leaf_size(), 8);
         assert!(tree.depth() <= 9, "depth {}", tree.depth());
+    }
+
+    #[test]
+    fn bfs_arena_children_are_adjacent() {
+        let tree = KernelTreeSampler::new(QuadraticMap::new(4, 100.0), 100, Some(4));
+        for m in &tree.meta {
+            if !m.is_leaf() {
+                let l = &tree.meta[m.left as usize];
+                let r = &tree.meta[m.left as usize + 1];
+                assert_eq!(l.lo, m.lo);
+                assert_eq!(l.hi, r.lo, "siblings must split the parent range");
+                assert_eq!(r.hi, m.hi);
+            }
+        }
+        // root covers everything; arena sized to the node count
+        assert_eq!((tree.meta[0].lo, tree.meta[0].hi), (0, 100));
+        assert_eq!(tree.z.len(), tree.node_count() * tree.dim);
+        assert_eq!(tree.z32.len(), tree.node_count() * tree.dim);
     }
 
     #[test]
@@ -746,10 +1055,128 @@ mod tests {
         for (&lo, &count) in &seen {
             // find the leaf's p by a fresh descent probability computation:
             // p = ⟨φ(h), z(leaf)⟩ / ⟨φ(h), z(root)⟩ by eq. (9) chain
-            let leaf = tree.nodes.iter().find(|nd| nd.is_leaf() && nd.lo == lo).unwrap();
-            let p = super::dot(&phi_h, &leaf.z) / tree.partition(&phi_h);
+            let leaf = (0..tree.meta.len() as u32)
+                .find(|&i| tree.meta[i as usize].is_leaf() && tree.meta[i as usize].lo == lo)
+                .unwrap();
+            let p = super::dot(&phi_h, tree.z_of(leaf)) / tree.partition(&phi_h);
             let freq = count as f64 / 2000.0;
             assert!((freq - p).abs() < 0.05, "leaf {lo}: freq {freq} vs p {p}");
+        }
+    }
+
+    /// A feature map whose masses all vanish — the degenerate regime the
+    /// zero-mass guards exist for.
+    #[derive(Clone)]
+    struct ZeroMap {
+        d: usize,
+    }
+
+    impl FeatureMap for ZeroMap {
+        fn d(&self) -> usize {
+            self.d
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn phi(&self, _a: &[f32], out: &mut [f64]) {
+            out.fill(0.0);
+        }
+        fn kernel(&self, _a: &[f32], _b: &[f32]) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn zero_mass_tree_reports_positive_q_and_no_descent_bias() {
+        // regression (zero-mass leaf + zero-mass branch): an all-zero
+        // kernel used to clamp every draw to the last class of the
+        // rightmost leaf and report q = 0 (-> ln(m·q) = -inf downstream).
+        let n = 16;
+        let tree = KernelTreeSampler::new(ZeroMap { d: 3 }, n, Some(2));
+        let h = vec![1.0f32, 2.0, 3.0];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut rng = Rng::new(11);
+        let mut out = Sample::default();
+        let m = 512;
+        tree.sample(&input, m, &mut rng, &mut out).unwrap();
+        assert_eq!(out.classes.len(), m);
+        let mut counts = vec![0usize; n];
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            assert!((c as usize) < n);
+            assert!(q > 0.0 && q.is_finite(), "q = {q}");
+            assert!((m as f64 * q).ln().is_finite(), "eq. 2 correction blew up");
+            counts[c as usize] += 1;
+        }
+        // guarded descent = fair coin per level + uniform leaf: both halves
+        // must be hit, and no single class may absorb the draws
+        let left: usize = counts[..n / 2].iter().sum();
+        let right: usize = counts[n / 2..].iter().sum();
+        assert!(left > m / 8 && right > m / 8, "biased halves: {left} vs {right}");
+        assert!(counts.iter().all(|&c| c < m / 2), "one class absorbed the draws: {counts:?}");
+        // draw_leaf shares the guard
+        let phi_h = tree.phi_query(&h);
+        let (_, p) = tree.draw_leaf(&phi_h, &mut rng);
+        assert!(p > 0.0, "leaf probability must stay positive");
+    }
+
+    #[test]
+    fn f32_shadow_overflow_keeps_q_exact() {
+        // regression (NaN memo sentinel): at extreme α the z32 shadow
+        // overflows f32 and the descent dots go inf/NaN; the generation
+        // memo + f64 fallback must keep draws working and q exact.
+        let (n, d) = (12, 2);
+        let mut rng = Rng::new(13);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 1e80);
+        let mut tree = KernelTreeSampler::new(map.clone(), n, Some(2));
+        tree.reset_embeddings(&emb, n, d);
+        // shadow must be clamped finite even though the master overflows f32
+        assert!(tree.z32.iter().all(|x| x.is_finite()));
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let expected = exact_dist(&map, &h, &emb, n, d);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 64, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            let want = expected[c as usize];
+            assert!(q > 0.0 && q.is_finite());
+            assert!((q - want).abs() < 1e-9 * want.max(1e-12), "q {q} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batched_sampling_reproduces_per_example_streams() {
+        // the sample_batch override must be bit-identical to the default
+        // per-row loop, for any thread count
+        let (n_classes, d, rows, m) = (40, 3, 17, 9);
+        let mut rng = Rng::new(21);
+        let emb = random_emb(&mut rng, n_classes, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n_classes, Some(3));
+        tree.reset_embeddings(&emb, n_classes, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let step_seed = 0xBA7C4;
+        let mut per_example: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+        for (i, slot) in per_example.iter_mut().enumerate() {
+            let input = SampleInput { h: Some(&hs[i * d..(i + 1) * d]), ..Default::default() };
+            let mut r = row_rng(step_seed, i);
+            tree.sample(&input, m, &mut r, slot).unwrap();
+        }
+        for threads in [0usize, 1, 3, 8] {
+            let inputs = BatchSampleInput {
+                n: rows,
+                d,
+                n_classes,
+                h: Some(&hs),
+                threads,
+                ..Default::default()
+            };
+            let mut batched: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            tree.sample_batch(&inputs, m, step_seed, &mut batched).unwrap();
+            for (i, (a, b)) in batched.iter().zip(&per_example).enumerate() {
+                assert_eq!(a.classes, b.classes, "threads {threads} row {i}");
+                assert_eq!(a.q, b.q, "threads {threads} row {i}");
+            }
         }
     }
 }

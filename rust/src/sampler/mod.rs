@@ -6,18 +6,35 @@
 //! `ln(m q_i)`). The paper's taxonomy (§2.4) orders samplers by how much of
 //! the model they see:
 //!
-//! | sampler        | example-dep. | model-dep. | cost/draw        |
-//! |----------------|--------------|------------|------------------|
-//! | uniform        | no           | no         | O(1)             |
-//! | unigram        | no           | no         | O(1) (alias)     |
-//! | bigram         | context only | no         | O(1) (alias)     |
-//! | quadratic tree | yes          | yes        | O(D log n) §3.2  |
-//! | quadratic flat | yes          | yes        | O(n) (oracle)    |
-//! | quartic flat   | yes          | yes        | O(n)             |
-//! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   |
+//! | sampler        | example-dep. | model-dep. | cost/draw        | batched draw        |
+//! |----------------|--------------|------------|------------------|---------------------|
+//! | uniform        | no           | no         | O(1)             | default fan-out     |
+//! | unigram        | no           | no         | O(1) (alias)     | default fan-out     |
+//! | bigram         | context only | no         | O(1) (alias)     | default fan-out     |
+//! | quadratic tree | yes          | yes        | O(D log n) §3.2  | native (arena+pool) |
+//! | quadratic flat | yes          | yes        | O(n) (oracle)    | default fan-out     |
+//! | quartic flat   | yes          | yes        | O(n)             | default fan-out     |
+//! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   | default fan-out     |
 //!
 //! All samplers are deterministic functions of the seeded [`Rng`] stream
 //! passed in, so experiments replay exactly.
+//!
+//! # Batch API contract
+//!
+//! [`Sampler::sample_batch`] draws every example of a training step in one
+//! call; the sampler layer (not the trainer) owns the parallel fan-out.
+//! The contract is **stream determinism**: row `i` of the batch must be
+//! sampled from the RNG stream [`row_rng`]`(step_seed, i)`, so
+//! `sample_batch` produces bit-identical `(class, q)` sequences to calling
+//! [`Sampler::sample`] per row with those streams — for any thread count,
+//! including 1. The default implementation does exactly that per-row loop
+//! (fanned out over [`par_chunks_mut`] workers); `KernelTreeSampler`
+//! overrides it with a batched descent engine that reuses one arena scratch
+//! pool per worker instead of allocating per example.
+//!
+//! Invariant (eq. 2): no sampler may ever report `q ≤ 0` — the trainer
+//! feeds `ln(m·q)` to the training kernel, and a zero would poison the
+//! logits with `-inf`. [`Sample::push`] debug-asserts this at the source.
 
 pub mod bigram;
 pub mod kernel;
@@ -26,6 +43,7 @@ pub mod uniform;
 pub mod unigram;
 
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_chunks_mut;
 use anyhow::Result;
 
 pub use bigram::BigramSampler;
@@ -35,6 +53,94 @@ pub use kernel::{KernelKind, QuadraticMap};
 pub use softmax_exact::SoftmaxSampler;
 pub use uniform::UniformSampler;
 pub use unigram::UnigramSampler;
+
+/// The deterministic per-row RNG stream of the batch API: row `i` of a step
+/// seeded with `step_seed` always samples from this stream, whether drawn
+/// through [`Sampler::sample_batch`] or a per-example [`Sampler::sample`]
+/// loop, and regardless of the fan-out thread count.
+#[inline]
+pub fn row_rng(step_seed: u64, row: usize) -> Rng {
+    Rng::new(step_seed ^ (row as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Batch-level inputs for [`Sampler::sample_batch`]: the whole step's
+/// model-dependent tensors in flat row-major form, plus the fan-out width.
+/// The trainer fills only what the chosen sampler [`Needs`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchSampleInput<'a> {
+    /// Number of examples (rows) in the batch.
+    pub n: usize,
+    /// Embedding dimension of `h` rows.
+    pub d: usize,
+    /// Number of classes (width of `logits` rows).
+    pub n_classes: usize,
+    /// Query embeddings, (n × d) row-major.
+    pub h: Option<&'a [f32]>,
+    /// Full logit rows, (n × n_classes) row-major.
+    pub logits: Option<&'a [f32]>,
+    /// Previous token per example (LM context).
+    pub prev: Option<&'a [u32]>,
+    /// Worker threads for the fan-out (0 = serial). Results never depend on
+    /// this — it is part of the batch input only so the sampler layer owns
+    /// the parallelism decision, not the trainer.
+    pub threads: usize,
+}
+
+impl<'a> BatchSampleInput<'a> {
+    /// The per-example view of row `i` (what [`Sampler::sample`] consumes).
+    #[inline]
+    pub fn row(&self, i: usize) -> SampleInput<'a> {
+        SampleInput {
+            h: self.h.map(|h| &h[i * self.d..(i + 1) * self.d]),
+            logits: self.logits.map(|l| &l[i * self.n_classes..(i + 1) * self.n_classes]),
+            prev: self.prev.map(|p| p[i]),
+        }
+    }
+
+    /// Validate that everything `needs` asks for is present and correctly
+    /// sized for `n` rows, so per-row sampling cannot fail midway through a
+    /// parallel section.
+    pub fn validate(&self, name: &str, needs: Needs) -> Result<()> {
+        if needs.h {
+            let h = self
+                .h
+                .ok_or_else(|| anyhow::anyhow!("sampler '{name}' needs h for sample_batch"))?;
+            anyhow::ensure!(
+                h.len() == self.n * self.d,
+                "h is {} floats, batch ({} × d={}) needs {}",
+                h.len(),
+                self.n,
+                self.d,
+                self.n * self.d
+            );
+        }
+        if needs.logits {
+            let l = self
+                .logits
+                .ok_or_else(|| anyhow::anyhow!("sampler '{name}' needs logits for sample_batch"))?;
+            anyhow::ensure!(
+                l.len() == self.n * self.n_classes,
+                "logits is {} floats, batch ({} × n={}) needs {}",
+                l.len(),
+                self.n,
+                self.n_classes,
+                self.n * self.n_classes
+            );
+        }
+        if needs.prev {
+            let p = self
+                .prev
+                .ok_or_else(|| anyhow::anyhow!("sampler '{name}' needs prev for sample_batch"))?;
+            anyhow::ensure!(
+                p.len() == self.n,
+                "prev has {} entries, batch has {}",
+                p.len(),
+                self.n
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Per-example inputs a sampler may consume. The trainer fills only what the
 /// chosen sampler [`Needs`]; the rest stays `None`.
@@ -77,6 +183,13 @@ impl Sample {
     }
 
     pub fn push(&mut self, class: u32, q: f64) {
+        // eq. (2) feeds ln(m·q) to the training kernel: q = 0 would inject
+        // -inf, q = NaN poisons the loss. Every sampler must guard its own
+        // degenerate cases (see the zero-mass fallbacks in kernel/tree.rs).
+        debug_assert!(
+            q > 0.0 && q.is_finite(),
+            "sampler reported q = {q} for class {class} (must be finite and > 0)"
+        );
         self.classes.push(class);
         self.q.push(q);
     }
@@ -95,6 +208,42 @@ pub trait Sampler: Send + Sync {
 
     /// Draw `m` negatives with replacement into `out` (cleared first).
     fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()>;
+
+    /// Draw `m` negatives for every row of a batch into `out` (one slot per
+    /// row, each cleared first). Row `i` samples from the deterministic
+    /// stream [`row_rng`]`(step_seed, i)`, so the result is bit-identical
+    /// to a per-example [`Sampler::sample`] loop over those streams — for
+    /// any `inputs.threads`, including 0/1 (serial).
+    ///
+    /// The default implementation is exactly that loop, fanned out over
+    /// static contiguous chunks; adaptive samplers override it to amortize
+    /// per-example setup (see `KernelTreeSampler`, which reuses one arena
+    /// scratch pool per worker).
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let input = inputs.row(i);
+                let mut rng = row_rng(step_seed, i);
+                self.sample(&input, m, &mut rng, slot)
+                    .expect("sampler failed (batch inputs were validated)");
+            }
+        });
+        Ok(())
+    }
 
     /// Probability of a single class under the current distribution for the
     /// given input (used by tests and the gradient-bias bench). Default:
@@ -218,5 +367,58 @@ pub(crate) mod test_util {
             .zip(expected)
             .map(|(&c, &p)| (c as f64 / total as f64 - p).abs())
             .sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sample_batch_reproduces_per_row_streams() {
+        let sampler = UniformSampler::new(50);
+        let n = 13;
+        let m = 7;
+        let step_seed = 0xFEED_F00D;
+        let inputs = BatchSampleInput { n, threads: 3, ..Default::default() };
+        let mut batched: Vec<Sample> = (0..n).map(|_| Sample::with_capacity(m)).collect();
+        sampler.sample_batch(&inputs, m, step_seed, &mut batched).unwrap();
+        for (i, row) in batched.iter().enumerate() {
+            let mut rng = row_rng(step_seed, i);
+            let mut want = Sample::default();
+            sampler.sample(&SampleInput::default(), m, &mut rng, &mut want).unwrap();
+            assert_eq!(row.classes, want.classes, "row {i}");
+            assert_eq!(row.q, want.q, "row {i}");
+        }
+    }
+
+    #[test]
+    fn sample_batch_is_thread_count_invariant() {
+        let sampler = UniformSampler::new(31);
+        let n = 9;
+        let m = 4;
+        let run = |threads: usize| {
+            let inputs = BatchSampleInput { n, threads, ..Default::default() };
+            let mut out: Vec<Sample> = (0..n).map(|_| Sample::with_capacity(m)).collect();
+            sampler.sample_batch(&inputs, m, 42, &mut out).unwrap();
+            out.iter().map(|s| s.classes.clone()).collect::<Vec<_>>()
+        };
+        let serial = run(0);
+        for threads in [1, 2, 5, 16] {
+            assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sample_batch_validates_missing_inputs() {
+        // softmax needs logits; an unfilled batch input must error up front
+        let sampler = SoftmaxSampler::new(8, false);
+        let inputs = BatchSampleInput { n: 2, n_classes: 8, ..Default::default() };
+        let mut out: Vec<Sample> = (0..2).map(|_| Sample::default()).collect();
+        let err = sampler.sample_batch(&inputs, 3, 1, &mut out).unwrap_err();
+        assert!(err.to_string().contains("logits"), "{err}");
+        // wrong out length is also an error
+        let mut short: Vec<Sample> = vec![Sample::default()];
+        assert!(sampler.sample_batch(&inputs, 3, 1, &mut short).is_err());
     }
 }

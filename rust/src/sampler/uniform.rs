@@ -2,7 +2,9 @@
 //!
 //! Neither example- nor model-dependent; the paper shows it needs one to two
 //! orders of magnitude more samples than the quadratic kernel to reach
-//! full-softmax quality.
+//! full-softmax quality. `q = 1/n > 0` trivially satisfies the sampler
+//! layer's q-positivity invariant, and the default [`Sampler::sample_batch`]
+//! fan-out is already optimal here (no per-example setup to amortize).
 
 use super::{Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;

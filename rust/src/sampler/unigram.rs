@@ -4,7 +4,10 @@
 //! Static: built once from corpus counts, O(1) per draw via Walker's alias
 //! method. Add-one smoothing keeps every class reachable (a class with
 //! q_i = 0 could never be corrected by eq. (2) and would make the estimator
-//! blow up if it appeared as a negative elsewhere).
+//! blow up if it appeared as a negative elsewhere) — it is also what makes
+//! the sampler layer's q-positivity invariant hold unconditionally here:
+//! every reported q is at least 1/(Σ counts + n). Batch draws go through
+//! the default [`Sampler::sample_batch`] fan-out.
 
 use super::{Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::{AliasTable, Rng};

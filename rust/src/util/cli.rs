@@ -23,15 +23,26 @@ pub struct Args {
     prog: String,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0} (see --help)")]
     Unknown(String),
-    #[error("flag --{0}: expected a value")]
     MissingValue(String),
-    #[error("flag --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(flag) => write!(f, "unknown flag --{flag} (see --help)"),
+            CliError::MissingValue(flag) => write!(f, "flag --{flag}: expected a value"),
+            CliError::BadValue(flag, value, ty) => {
+                write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse a raw argv (without the program name) against declared specs.

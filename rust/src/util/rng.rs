@@ -219,12 +219,34 @@ impl Cdf {
         (self.cum[i] - lo) / self.total
     }
 
-    /// Draw one index.
+    /// Draw one index. The returned index always has strictly positive
+    /// weight: `partition_point` guarantees it when `u < total`, and the
+    /// floating-point slack case (`u` rounding up to `total`) clamps to the
+    /// last *positive-weight* index — a plain `len - 1` clamp could select
+    /// a zero-weight tail class, whose reported q of 0 would blow up the
+    /// eq. (2) correction downstream.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64() * self.total;
-        // partition_point: first index with cum[i] > u.
+        // partition_point: first index with cum[i] > u (its increment is
+        // then > 0 because cum[idx-1] <= u < cum[idx]).
         let idx = self.cum.partition_point(|&c| c <= u);
-        idx.min(self.cum.len() - 1)
+        if idx < self.cum.len() {
+            idx
+        } else {
+            self.last_positive_index()
+        }
+    }
+
+    /// Index of the last strictly positive weight (exists: construction
+    /// rejects zero total mass).
+    fn last_positive_index(&self) -> usize {
+        (0..self.cum.len())
+            .rev()
+            .find(|&i| {
+                let lo = if i == 0 { 0.0 } else { self.cum[i - 1] };
+                self.cum[i] - lo > 0.0
+            })
+            .expect("Cdf invariant: total mass > 0")
     }
 }
 
@@ -467,6 +489,23 @@ mod tests {
             let expect = 80_000.0 * cdf.prob(i);
             assert!((c as f64 - expect).abs() < 6.0 * expect.max(1.0).sqrt(), "class {i}: {c} vs {expect}");
         }
+    }
+
+    #[test]
+    fn cdf_never_selects_zero_weight_tail() {
+        // regression: the old top-end clamp (`idx.min(len - 1)`) could hand
+        // out the last index even when its weight was zero, reporting q = 0.
+        let cdf = Cdf::new(&[0.0f32, 3.0, 0.0, 0.0]).unwrap();
+        let mut r = Rng::new(29);
+        for _ in 0..20_000 {
+            let i = cdf.sample(&mut r);
+            assert_eq!(i, 1, "only the positive-weight class may be drawn");
+            assert!(cdf.prob(i) > 0.0);
+        }
+        assert_eq!(cdf.last_positive_index(), 1);
+        // and the all-positive case still reaches the true last index
+        let cdf = Cdf::new(&[1.0f32, 1.0]).unwrap();
+        assert_eq!(cdf.last_positive_index(), 1);
     }
 
     #[test]

@@ -1,11 +1,11 @@
 //! Scoped data-parallel helpers (no `rayon` offline).
 //!
-//! The trainer samples negatives for every row of a batch independently;
-//! [`par_map_mut`] fans those rows out over `std::thread::scope` workers with
-//! static chunking. Each worker gets a forked, independent RNG stream from
-//! the caller, so results are deterministic for a fixed seed *and* thread
-//! count (thread count is part of the experiment config, defaulting to the
-//! machine's parallelism).
+//! The sampler layer fans a batch's rows out over `std::thread::scope`
+//! workers with [`par_chunks_mut`] — static contiguous chunking, so the
+//! partition depends only on `(len, threads)`. Each row derives its own RNG
+//! stream from its index (`sampler::row_rng`), which makes results
+//! deterministic for a fixed seed and *any* thread count. [`par_for_each_mut`]
+//! and [`par_map`] are the per-element conveniences built on top.
 
 /// Number of worker threads to use by default (capped: the batch rows we
 /// parallelize over are small work items).
@@ -13,19 +13,23 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
 }
 
-/// Apply `f(index, &mut item)` to every element, in parallel chunks across
-/// `threads` workers. Deterministic partitioning: element order and
-/// chunk->worker assignment do not depend on scheduling.
-pub fn par_for_each_mut<T: Send>(
+/// Apply `f(base_index, chunk)` to contiguous chunks of `items`, one chunk
+/// per worker. The partition depends only on `items.len()` and `threads`
+/// (static chunking), so callers that derive per-index state (per-row RNG
+/// streams, per-worker scratch buffers) get identical results for any
+/// thread count. This is the primitive the batch sampling engine fans out
+/// on: workers allocate scratch once per chunk, not once per item.
+pub fn par_chunks_mut<T: Send>(
     items: &mut [T],
     threads: usize,
-    f: impl Fn(usize, &mut T) + Sync,
+    f: impl Fn(usize, &mut [T]) + Sync,
 ) {
+    if items.is_empty() {
+        return;
+    }
     let threads = threads.max(1);
-    if threads == 1 || items.len() <= 1 {
-        for (i, item) in items.iter_mut().enumerate() {
-            f(i, item);
-        }
+    if threads == 1 || items.len() == 1 {
+        f(0, items);
         return;
     }
     let n = items.len();
@@ -37,13 +41,24 @@ pub fn par_for_each_mut<T: Send>(
             let take = chunk.min(rest.len());
             let (head, tail) = rest.split_at_mut(take);
             let fref = &f;
-            scope.spawn(move || {
-                for (i, item) in head.iter_mut().enumerate() {
-                    fref(base + i, item);
-                }
-            });
+            scope.spawn(move || fref(base, head));
             rest = tail;
             base += take;
+        }
+    });
+}
+
+/// Apply `f(index, &mut item)` to every element, in parallel chunks across
+/// `threads` workers. Deterministic partitioning: element order and
+/// chunk->worker assignment do not depend on scheduling.
+pub fn par_for_each_mut<T: Send>(
+    items: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    par_chunks_mut(items, threads, |base, chunk| {
+        for (i, item) in chunk.iter_mut().enumerate() {
+            f(base + i, item);
         }
     });
 }
@@ -112,5 +127,38 @@ mod tests {
         let xs: Vec<usize> = (0..3).collect();
         let ys = par_map(&xs, 64, |i, &x| x + i);
         assert_eq!(ys, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn chunks_cover_everything_with_correct_bases() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let mut xs = vec![0usize; 23];
+            par_chunks_mut(&mut xs, threads, |base, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = base + i + 1;
+                }
+            });
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, i + 1, "threads={threads}");
+            }
+        }
+        let mut empty: Vec<u8> = vec![];
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn chunk_partition_is_static() {
+        // same (len, threads) must always produce the same chunk bases
+        let collect = |threads: usize| {
+            let mut xs = vec![0usize; 17];
+            let bases = std::sync::Mutex::new(Vec::new());
+            par_chunks_mut(&mut xs, threads, |base, chunk| {
+                bases.lock().unwrap().push((base, chunk.len()));
+            });
+            let mut b = bases.into_inner().unwrap();
+            b.sort_unstable();
+            b
+        };
+        assert_eq!(collect(4), collect(4));
     }
 }

@@ -14,7 +14,8 @@
 use kss::data::{synptb::SynPtb, youtube::YouTube, Dataset};
 use kss::sampler::kernel::FeatureMap;
 use kss::sampler::{
-    build_sampler, CorpusStats, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+    build_sampler, row_rng, BatchSampleInput, CorpusStats, KernelTreeSampler, QuadraticMap,
+    Sample, SampleInput, Sampler,
 };
 use kss::util::rng::Rng;
 use kss::util::testing::{check, Gen};
@@ -68,6 +69,73 @@ fn prop_every_sampler_q_is_valid_and_consistent() {
                         (p - q).abs() <= 1e-6 * p.abs().max(1e-12),
                         "{name}: q {q} != prob {p}"
                     );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sample_batch_reproduces_per_row_streams_for_every_sampler() {
+    // the batch API contract: for every sampler, sample_batch over the
+    // row_rng(step_seed, i) streams is bit-identical to the per-example
+    // loop, for any thread count — and every reported q is > 0.
+    check("sample_batch == per-row sample streams", 12, |g: &mut Gen| {
+        let n_classes = g.usize_in(4, 80);
+        let d = g.usize_in(1, 6);
+        let rows = g.usize_in(1, 12);
+        let m = g.usize_in(1, 8);
+        let threads = g.usize_in(0, 8);
+        let mut rng = Rng::new(g.case_seed ^ 0x5A);
+        let emb = random_emb(&mut rng, n_classes, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let logits: Vec<f32> = (0..rows)
+            .flat_map(|i| {
+                let h = &hs[i * d..(i + 1) * d];
+                (0..n_classes)
+                    .map(|j| {
+                        emb[j * d..(j + 1) * d].iter().zip(h).map(|(&a, &b)| a * b).sum::<f32>()
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let prevs: Vec<u32> = (0..rows).map(|_| rng.below(n_classes as u64) as u32).collect();
+        let counts: Vec<u64> = (0..n_classes).map(|_| rng.below(50)).collect();
+        let pairs: Vec<Vec<(u32, u64)>> = (0..n_classes)
+            .map(|_| {
+                (0..g.usize_in(0, 3))
+                    .map(|_| (rng.below(n_classes as u64) as u32, 1 + rng.below(9)))
+                    .collect()
+            })
+            .collect();
+        let stats = CorpusStats { class_counts: counts, bigram_counts: Some(pairs) };
+        let step_seed = g.case_seed ^ 0x77;
+        for name in
+            ["uniform", "unigram", "bigram", "softmax", "quadratic", "quadratic-flat", "quartic"]
+        {
+            let sampler =
+                build_sampler(name, n_classes, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
+            let inputs = BatchSampleInput {
+                n: rows,
+                d,
+                n_classes,
+                h: Some(&hs),
+                logits: Some(&logits),
+                prev: Some(&prevs),
+                threads,
+            };
+            let mut batched: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            sampler.sample_batch(&inputs, m, step_seed, &mut batched).unwrap();
+            for i in 0..rows {
+                let input = inputs.row(i);
+                let mut r = row_rng(step_seed, i);
+                let mut want = Sample::default();
+                sampler.sample(&input, m, &mut r, &mut want).unwrap();
+                assert_eq!(batched[i].classes, want.classes, "{name} row {i}");
+                assert_eq!(batched[i].q, want.q, "{name} row {i}");
+                for &q in &batched[i].q {
+                    assert!(q > 0.0 && q.is_finite(), "{name}: bad q {q}");
                 }
             }
         }
