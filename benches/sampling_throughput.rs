@@ -12,7 +12,7 @@
 //!
 //! No artifacts needed (pure L3). `cargo bench --bench sampling_throughput`.
 
-use kss::bench_harness::{print_speedup, print_table, scale, Bencher, BenchRow, Scale};
+use kss::bench_harness::{print_speedup, print_table, scale, write_json, Bencher, BenchRow, Scale};
 use kss::sampler::{
     row_rng, BatchSampleInput, FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap,
     Sample, SampleInput, Sampler, SoftmaxSampler,
@@ -178,5 +178,15 @@ fn main() {
         t_last / t_first,
         f_last / f_first,
         factor
+    );
+
+    // machine-readable results for the cross-PR perf trajectory
+    write_json(
+        "sampling",
+        &[
+            ("per-example draw cost", &draw_rows),
+            ("batch engine vs per-example loop", &batch_rows),
+            ("per-class update cost", &update_rows),
+        ],
     );
 }

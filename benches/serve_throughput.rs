@@ -1,0 +1,227 @@
+//! Serving-layer acceptance bench: reader scaling under concurrent
+//! publishing, and the cost of a publish as seen from both sides.
+//!
+//! Measures, per reader thread count:
+//!
+//! * aggregate draw throughput with an **idle** writer (baseline);
+//! * the same with a writer continuously applying `update_many` batches
+//!   and publishing snapshot generations (the production shape);
+//!
+//! and reports the publish path's build time (replay/clone, off the reader
+//! path) vs swap time (the only interval a refreshing reader can contend
+//! with). Readers are wait-free in steady state, so throughput with a
+//! publishing writer should track the idle baseline and scale with thread
+//! count; the swap max is the worst stall any reader could observe.
+//!
+//! No artifacts needed (pure L3). `cargo bench --bench serve_throughput`.
+
+use kss::bench_harness::{print_table, scale, write_json, BenchRow, Scale};
+use kss::sampler::Sample;
+use kss::serve::{draw_from_shards, shard::scratch_for, ShardSet, SnapshotReader};
+use kss::sampler::kernel::QuadraticMap;
+use kss::sampler::row_rng;
+use kss::util::rng::Rng;
+use kss::util::stats::Samples;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+struct RunResult {
+    wall_s: f64,
+    draws: u64,
+    /// publish timings (empty when the writer was idle)
+    build: Samples,
+    swap: Samples,
+    publishes: u64,
+    reclaimed: u64,
+}
+
+/// Run `threads` readers drawing `requests_per_thread × m` samples each,
+/// optionally against a continuously publishing writer.
+fn run_readers(
+    set: &mut ShardSet<QuadraticMap>,
+    hs: &[f32],
+    d: usize,
+    m: usize,
+    threads: usize,
+    requests_per_thread: usize,
+    writer_updates: usize,
+) -> RunResult {
+    let stores = set.stores();
+    let offsets = set.offsets().to_vec();
+    let n_h = hs.len() / d;
+    let stop = AtomicBool::new(false);
+    let mut build = Samples::new();
+    let mut swap = Samples::new();
+    let mut publishes = 0u64;
+    let mut reclaimed = 0u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut readers = Vec::new();
+        for worker in 0..threads {
+            let stores = stores.clone();
+            let offsets = &offsets;
+            readers.push(scope.spawn(move || {
+                let mut shard_readers: Vec<SnapshotReader<_>> =
+                    stores.iter().map(|s| SnapshotReader::new(s.clone())).collect();
+                let mut state = {
+                    let views: Vec<_> =
+                        shard_readers.iter().map(|r| r.pinned().tree.view()).collect();
+                    scratch_for(&views)
+                };
+                let mut out = Sample::with_capacity(m);
+                for req in 0..requests_per_thread {
+                    for r in shard_readers.iter_mut() {
+                        r.current();
+                    }
+                    let snaps: Vec<_> =
+                        shard_readers.iter().map(|r| r.pinned().clone()).collect();
+                    let trees: Vec<_> = snaps.iter().map(|s| s.tree.view()).collect();
+                    let h = &hs[(req % n_h) * d..(req % n_h + 1) * d];
+                    let mut rng = row_rng(worker as u64, req);
+                    out.clear();
+                    draw_from_shards(&trees, offsets, h, m, &mut state, &mut rng, &mut out);
+                    std::hint::black_box(&out);
+                }
+            }));
+        }
+        let writer = (writer_updates > 0).then(|| {
+            let stop = &stop;
+            let set = &mut *set;
+            scope.spawn(move || {
+                let mut wrng = Rng::new(0xBEEF);
+                let mut builds = Samples::new();
+                let mut swaps = Samples::new();
+                let (mut pubs, mut recl) = (0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    for report in set.publish_random_batch(&mut wrng, writer_updates) {
+                        builds.push(report.build_s);
+                        swaps.push(report.swap_s);
+                        pubs += 1;
+                        if report.reclaimed {
+                            recl += 1;
+                        }
+                    }
+                }
+                (builds, swaps, pubs, recl)
+            })
+        });
+        for r in readers {
+            r.join().expect("reader panicked");
+        }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(w) = writer {
+            let (builds, swaps, pubs, recl) = w.join().expect("writer panicked");
+            build = builds;
+            swap = swaps;
+            publishes = pubs;
+            reclaimed = recl;
+        }
+    });
+    RunResult {
+        wall_s: t0.elapsed().as_secs_f64(),
+        draws: (threads * requests_per_thread * m) as u64,
+        build,
+        swap,
+        publishes,
+        reclaimed,
+    }
+}
+
+fn row(name: &str, r: &RunResult) -> BenchRow {
+    BenchRow {
+        name: name.to_string(),
+        mean_s: r.wall_s,
+        p50_s: r.wall_s,
+        p95_s: r.wall_s,
+        iters: 1,
+        items_per_iter: Some(r.draws as f64),
+    }
+}
+
+fn main() {
+    let (n, d, m) = match scale() {
+        Scale::Quick => (20_000usize, 16usize, 8usize),
+        Scale::Full => (200_000, 32, 16),
+    };
+    let shards = 4;
+    let requests = match scale() {
+        Scale::Quick => 2_000usize,
+        Scale::Full => 10_000,
+    };
+    let mut rng = Rng::new(7);
+    let mut emb = vec![0.0f32; n * d];
+    rng.fill_normal(&mut emb, 0.3);
+    let mut hs = vec![0.0f32; 256 * d];
+    rng.fill_normal(&mut hs, 1.0);
+    let mut set = ShardSet::new(QuadraticMap::new(d, 100.0), n, shards, None, Some(&emb));
+    println!("serve bench: {n} classes × d={d} in {shards} shards, m={m}, {requests} req/reader");
+
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut reader_rows: Vec<BenchRow> = Vec::new();
+    let mut publish_rows: Vec<BenchRow> = Vec::new();
+    let mut idle_tput = Vec::new();
+    let mut busy_tput = Vec::new();
+    for &threads in &thread_counts {
+        let idle = run_readers(&mut set, &hs, d, m, threads, requests, 0);
+        idle_tput.push(idle.draws as f64 / idle.wall_s);
+        reader_rows.push(row(&format!("readers={threads} writer=idle"), &idle));
+        let busy = run_readers(&mut set, &hs, d, m, threads, requests, 64);
+        busy_tput.push(busy.draws as f64 / busy.wall_s);
+        reader_rows.push(row(&format!("readers={threads} writer=publishing"), &busy));
+        if !busy.swap.is_empty() {
+            publish_rows.push(BenchRow {
+                name: format!("publish build (readers={threads})"),
+                mean_s: busy.build.mean(),
+                p50_s: busy.build.p50(),
+                p95_s: busy.build.p95(),
+                iters: busy.publishes as usize,
+                items_per_iter: None,
+            });
+            publish_rows.push(BenchRow {
+                name: format!("publish swap  (readers={threads})"),
+                mean_s: busy.swap.mean(),
+                p50_s: busy.swap.p50(),
+                p95_s: busy.swap.percentile(100.0),
+                iters: busy.publishes as usize,
+                items_per_iter: None,
+            });
+            println!(
+                "readers={threads}: {} publishes ({} reclaimed), swap max {:.3} µs — publish \
+                 never blocks readers beyond the swap",
+                busy.publishes,
+                busy.reclaimed,
+                busy.swap.percentile(100.0) * 1e6
+            );
+        }
+    }
+
+    print_table("reader draw throughput (wall-clock per full run)", &reader_rows);
+    print_table("publish cost: build (off reader path) vs swap (p95 column = max)", &publish_rows);
+
+    println!("\nreader scaling (draws/s):");
+    for (i, &threads) in thread_counts.iter().enumerate() {
+        println!(
+            "  {threads:>2} readers: idle {:>12.0}/s  publishing {:>12.0}/s  \
+             ({:.1}% of idle, {:.2}x vs 1 reader)",
+            idle_tput[i],
+            busy_tput[i],
+            100.0 * busy_tput[i] / idle_tput[i],
+            busy_tput[i] / busy_tput[0]
+        );
+    }
+    let last = thread_counts.len() - 1;
+    println!(
+        "(acceptance: throughput grows with readers — {:.2}x at {} threads — while the writer \
+         publishes concurrently)",
+        busy_tput[last] / busy_tput[0],
+        thread_counts[last]
+    );
+
+    write_json(
+        "serve",
+        &[
+            ("reader throughput", &reader_rows),
+            ("publish cost", &publish_rows),
+        ],
+    );
+}

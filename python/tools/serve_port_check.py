@@ -1,0 +1,597 @@
+#!/usr/bin/env python3
+"""Line-for-line Python port of the PR's serve-layer algorithms, run
+against the same property checks as the Rust tests.
+
+The build container has no rust toolchain (see .claude/skills/verify/
+SKILL.md), so — as in PR 1 — the algorithmic core of the change is ported
+faithfully (same data layout, same guards, same arithmetic order where it
+matters) and validated here:
+
+  1. kernel tree draw with scratch memos (f32-shadow node masses, exact
+     f64 fallback, guarded branches, leaf CDFs)  [baseline from PR 1]
+  2. snapshot publisher: double-buffered reclaim + replay == straight-line
+     update_many (arena equality, bitwise)
+  3. shard router: merged q == K/ΣM == unsharded distribution; empirical
+     chi-square; zero-mass fallback composition
+  4. top-k beam: full width == exact ranking; width-1 finds a dominant
+     class; zero-mass guard returns k distinct classes
+  5. partial-leaf scratch draws: importance identity E[f/P(leaf)] = Σ f
+  6. micro-batcher close rule: size-or-oldest-deadline simulation
+
+Run: python3 python/tools/serve_port_check.py
+"""
+import math
+import random
+
+import numpy as np
+
+NO_CHILD = -1
+
+
+class QuadraticMap:
+    def __init__(self, d, alpha):
+        self.d, self.alpha = d, alpha
+
+    def dim(self):
+        return self.d * self.d + 1
+
+    def phi(self, a):
+        out = np.zeros(self.dim())
+        sqrt_alpha = math.sqrt(self.alpha)
+        for i in range(self.d):
+            ai = sqrt_alpha * float(a[i])
+            for j in range(self.d):
+                out[i * self.d + j] = ai * float(a[j])
+        out[self.d * self.d] = 1.0
+        return out
+
+    def kernel(self, a, b):
+        dot = sum(float(x) * float(y) for x, y in zip(a, b))
+        return self.alpha * dot * dot + 1.0
+
+
+class ZeroMap:
+    def __init__(self, d):
+        self.d, self.alpha = d, 0.0
+
+    def dim(self):
+        return 2
+
+    def phi(self, a):
+        return np.zeros(2)
+
+    def kernel(self, a, b):
+        return 0.0
+
+
+def sanitize_mass(x):
+    if math.isnan(x):
+        return 0.0
+    return min(max(x, 0.0), 1.7976931348623157e308)
+
+
+def to_f32_clamped(v):
+    x = np.float32(v)
+    if np.isfinite(x):
+        return x
+    if np.isnan(x):
+        return np.float32(0.0)
+    return np.float32(math.copysign(3.4028235e38, v))
+
+
+def choose_branch(sl, sr, rng):
+    total = sl + sr
+    if total > 0.0 and math.isfinite(total):
+        u = rng.random() * total
+        if u < sl:
+            return True, sl / total
+        return False, sr / total
+    return rng.random() < 0.5, 0.5
+
+
+def step_down_to_positive(cum, off):
+    while off > 0 and cum[off] - cum[off - 1] <= 0.0:
+        off -= 1
+    return off
+
+
+class Tree:
+    """Port of KernelTreeSampler's arena (tree.rs)."""
+
+    def __init__(self, fmap, n, leaf_size):
+        self.map, self.n, self.leaf = fmap, n, max(1, min(leaf_size, n))
+        self.d = fmap.d
+        self.dim = fmap.dim()
+        self.emb = np.zeros((n, fmap.d), dtype=np.float32)
+        self.meta = [[0, n, NO_CHILD]]
+        head = 0
+        while head < len(self.meta):
+            lo, hi, _ = self.meta[head]
+            if hi - lo > self.leaf:
+                mid = lo + (hi - lo) // 2
+                self.meta[head][2] = len(self.meta)
+                self.meta.append([lo, mid, NO_CHILD])
+                self.meta.append([mid, hi, NO_CHILD])
+            head += 1
+        self.z = np.zeros((len(self.meta), self.dim))
+        self.z32 = np.zeros((len(self.meta), self.dim), dtype=np.float32)
+        self.recompute_all()
+
+    def clone(self):
+        t = object.__new__(Tree)
+        t.map, t.n, t.leaf, t.d, t.dim = self.map, self.n, self.leaf, self.d, self.dim
+        t.emb = self.emb.copy()
+        t.meta = [m[:] for m in self.meta]
+        t.z = self.z.copy()
+        t.z32 = self.z32.copy()
+        return t
+
+    def reset(self, emb):
+        self.emb = np.array(emb, dtype=np.float32).reshape(self.n, self.d)
+        self.recompute_all()
+
+    def recompute_all(self):
+        for idx in reversed(range(len(self.meta))):
+            lo, hi, left = self.meta[idx]
+            if left == NO_CHILD:
+                acc = np.zeros(self.dim)
+                for j in range(lo, hi):
+                    acc += self.map.phi(self.emb[j])
+                self.z[idx] = acc
+            else:
+                self.z[idx] = self.z[left] + self.z[left + 1]
+        for i in range(len(self.meta)):
+            self.z32[i] = [to_f32_clamped(v) for v in self.z[i]]
+
+    def update_many(self, classes, rows):
+        if not classes:
+            return
+        self._apply_rec(0, classes, rows)
+
+    def _apply_rec(self, idx, classes, rows):
+        lo, hi, left = self.meta[idx]
+        delta = np.zeros(self.dim)
+        if left == NO_CHILD:
+            for (c, w_new) in zip(classes, rows):
+                old = self.map.phi(self.emb[c])
+                new = self.map.phi(np.array(w_new, dtype=np.float32))
+                delta += new - old
+                self.emb[c] = w_new
+        else:
+            mid = self.meta[left][1]
+            split = sum(1 for c in classes if c < mid)
+            if split > 0:
+                delta += self._apply_rec(left, classes[:split], rows[:split])
+            if split < len(classes):
+                delta += self._apply_rec(left + 1, classes[split:], rows[split:])
+        self.z[idx] += delta
+        self.z32[idx] = [to_f32_clamped(v) for v in self.z[idx]]
+        return delta
+
+    # --- draw path with scratch memos -----------------------------------
+    def begin_example(self, h):
+        phi = self.map.phi(h)
+        phi32 = np.array([to_f32_clamped(v) for v in phi], dtype=np.float32)
+        total = float(np.dot(phi, self.z[0]))
+        return {"phi": phi, "phi32": phi32, "total": total, "node": {}, "leafcdf": {}}
+
+    def begin_example_prepared(self, phi, total):
+        # total = caller's already-computed <phi, z(root)> (router reuse)
+        phi32 = np.array([to_f32_clamped(v) for v in phi], dtype=np.float32)
+        assert total == float(np.dot(phi, self.z[0]))
+        return {"phi": phi, "phi32": phi32, "total": total, "node": {}, "leafcdf": {}}
+
+    def node_mass(self, s, idx):
+        if idx in s["node"]:
+            return s["node"][idx]
+        fast = float(np.dot(s["phi32"], self.z32[idx]).astype(np.float32))
+        if math.isfinite(fast):
+            v = max(fast, 0.0)
+        else:
+            v = sanitize_mass(float(np.dot(s["phi"], self.z[idx])))
+        s["node"][idx] = v
+        return v
+
+    def leaf_cdf(self, s, h, idx):
+        if idx not in s["leafcdf"]:
+            lo, hi, _ = self.meta[idx]
+            acc, cum = 0.0, []
+            for j in range(lo, hi):
+                acc += sanitize_mass(self.map.kernel(h, self.emb[j]))
+                cum.append(acc)
+            s["leafcdf"][idx] = cum
+        return s["leafcdf"][idx], self.meta[idx][0]
+
+    def draw(self, h, s, rng):
+        total = s["total"]
+        idx, p_path = 0, 1.0
+        while True:
+            lo, hi, left = self.meta[idx]
+            if left == NO_CHILD:
+                length = hi - lo
+                cum, lo = self.leaf_cdf(s, h, idx)
+                mass = cum[-1]
+                if not mass > 0.0:
+                    off = rng.randrange(length)
+                    q = max(p_path / length, 5e-324)
+                    return lo + off, q
+                u = rng.random() * mass
+                off = min(sum(1 for c in cum if c <= u), length - 1)
+                off = step_down_to_positive(cum, off)
+                k = cum[0] if off == 0 else cum[off] - cum[off - 1]
+                q = k / total
+                if not (q > 0.0 and math.isfinite(q)):
+                    q = max(p_path * k / mass, 5e-324)
+                return lo + off, q
+            sl = self.node_mass(s, left)
+            sr = self.node_mass(s, left + 1)
+            go_left, p = choose_branch(sl, sr, rng)
+            p_path *= p
+            idx = left if go_left else left + 1
+
+    def draw_leaf_scratch(self, s, rng):
+        idx, p_leaf = 0, 1.0
+        while True:
+            lo, hi, left = self.meta[idx]
+            if left == NO_CHILD:
+                return (lo, hi), max(p_leaf, 5e-324)
+            sl = self.node_mass(s, left)
+            sr = self.node_mass(s, left + 1)
+            go_left, p = choose_branch(sl, sr, rng)
+            p_leaf *= p
+            idx = left if go_left else left + 1
+
+    def partition(self, phi):
+        return float(np.dot(phi, self.z[0]))
+
+    def topk_beam(self, h, k, beam_width):
+        beam_width = max(1, beam_width)
+        phi = self.map.phi(h)
+        mass = lambda idx: sanitize_mass(float(np.dot(phi, self.z[idx])))
+        frontier = [(0, mass(0))]
+        while True:
+            nxt, expanded = [], False
+            for idx, m in frontier:
+                lo, hi, left = self.meta[idx]
+                if left == NO_CHILD:
+                    nxt.append((idx, m))
+                else:
+                    expanded = True
+                    nxt.append((left, mass(left)))
+                    nxt.append((left + 1, mass(left + 1)))
+            if not expanded:
+                break
+            nxt.sort(key=lambda t: (-t[1], t[0]))
+            frontier = nxt[:beam_width]
+        scored = []
+        for idx, _ in frontier:
+            lo, hi, _ = self.meta[idx]
+            for c in range(lo, hi):
+                scored.append((c, sanitize_mass(self.map.kernel(h, self.emb[c]))))
+        scored.sort(key=lambda t: (-t[1], t[0]))
+        return scored[:k]
+
+
+# --- snapshot publisher (snapshot.rs) ----------------------------------
+class Publisher:
+    MAX_RETIRED = 6
+
+    def __init__(self, tree):
+        self.shadow = tree
+        self.gen = 0
+        # (generation, tree, pinned_flag-box) — pinned simulates readers
+        snap = {"gen": 0, "tree": tree.clone(), "pins": 0}
+        self.current = snap
+        self.retired = [snap]
+        self.log = []
+        self.stats = {"publishes": 0, "reclaimed": 0, "copied": 0, "replayed": 0}
+
+    def publish(self, classes, rows):
+        self.shadow.update_many(classes, rows)
+        self.gen += 1
+        self.log.append((self.gen, list(classes), [list(r) for r in rows]))
+        reclaimed = None
+        # strong_count == 1 <=> not current and not pinned; scan the whole
+        # queue (a pinned old generation must not block frees behind it),
+        # oldest→newest so the newest free arena wins
+        i = 0
+        while i < len(self.retired):
+            cand = self.retired[i]
+            if cand is self.current or cand["pins"] > 0:
+                i += 1
+                continue
+            reclaimed = self.retired.pop(i)
+        if reclaimed is not None:
+            for (g, cl, rw) in self.log:
+                if g > reclaimed["gen"]:
+                    reclaimed["tree"].update_many(cl, rw)
+                    self.stats["replayed"] += 1
+            reclaimed["gen"] = self.gen
+            self.stats["reclaimed"] += 1
+            nxt = reclaimed
+        else:
+            self.stats["copied"] += 1
+            nxt = {"gen": self.gen, "tree": self.shadow.clone(), "pins": 0}
+        self.retired.append(nxt)
+        self.current = nxt
+        self.stats["publishes"] += 1
+        while len(self.retired) > self.MAX_RETIRED:
+            self.retired.pop(0)
+        min_gen = self.retired[0]["gen"] if self.retired else self.gen
+        self.log = [b for b in self.log if b[0] > min_gen]
+        return nxt
+
+
+# --- shard router (shard.rs) -------------------------------------------
+def shard_offsets(n, shards):
+    shards = max(1, min(shards, n))
+    return [s * n // shards for s in range(shards + 1)]
+
+
+def draw_from_shards(trees, offsets, h, m, rng):
+    phi = trees[0].map.phi(h)
+    raw_totals = [t.partition(phi) for t in trees]
+    masses = [sanitize_mass(r) for r in raw_totals]
+    cum, acc = [], 0.0
+    for ms in masses:
+        acc += ms
+        cum.append(acc)
+    total = acc
+    scratches = [None] * len(trees)
+    out = []
+    for _ in range(m):
+        if total > 0.0 and math.isfinite(total):
+            u = rng.random() * total
+            sid = min(sum(1 for c in cum if c <= u), len(trees) - 1)
+            sid = step_down_to_positive(cum, sid)
+            p_shard = masses[sid] / total
+        else:
+            sid = rng.randrange(len(trees))
+            p_shard = 1.0 / len(trees)
+        if scratches[sid] is None:
+            scratches[sid] = trees[sid].begin_example_prepared(phi, raw_totals[sid])
+        local, q_local = trees[sid].draw(h, scratches[sid], rng)
+        out.append((offsets[sid] + local, max(p_shard * q_local, 5e-324)))
+    return out
+
+
+# --- checks -------------------------------------------------------------
+def exact_dist(fmap, h, emb):
+    w = [fmap.kernel(h, e) for e in emb]
+    z = sum(w)
+    return [x / z for x in w]
+
+
+def check_baseline_tree(trials=40):
+    rng = random.Random(1)
+    for case in range(trials):
+        n = rng.randint(2, 40)
+        d = rng.randint(1, 4)
+        leaf = rng.randint(1, n)
+        fmap = QuadraticMap(d, rng.uniform(1.0, 150.0))
+        emb = np.random.default_rng(case).normal(0, 0.5, (n, d)).astype(np.float32)
+        t = Tree(fmap, n, leaf)
+        t.reset(emb)
+        h = np.random.default_rng(case + 999).normal(0, 1, d).astype(np.float32)
+        expected = exact_dist(fmap, h, emb)
+        s = t.begin_example(h)
+        for _ in range(32):
+            c, q = t.draw(h, s, rng)
+            assert abs(q - expected[c]) < 1e-9, (case, c, q, expected[c])
+    print("  baseline tree q == closed form: OK")
+
+
+def check_publisher(trials=12):
+    rng = random.Random(7)
+    for case in range(trials):
+        n = rng.randint(4, 40)
+        d = rng.randint(1, 3)
+        fmap = QuadraticMap(d, 100.0)
+        emb = np.random.default_rng(case).normal(0, 0.5, (n, d)).astype(np.float32)
+        base = Tree(fmap, n, 4)
+        base.reset(emb)
+        reference = base.clone()
+        pub = Publisher(base)
+        npr = np.random.default_rng(1000 + case)
+        reader_pin = None
+        for step in range(10):
+            k = rng.randint(1, 5)
+            classes = sorted(rng.sample(range(n), k))
+            rows = npr.normal(0, 0.7, (k, d)).astype(np.float32)
+            reference.update_many(classes, rows)
+            snap = pub.publish(classes, rows)
+            # a reader pins every 3rd generation for a while
+            if step % 3 == 0:
+                if reader_pin is not None:
+                    reader_pin["pins"] -= 1
+                reader_pin = snap
+                snap["pins"] += 1
+            assert np.array_equal(snap["tree"].z, reference.z), (case, step)
+            assert np.array_equal(snap["tree"].emb, reference.emb)
+        assert pub.stats["reclaimed"] > 0, (case, pub.stats)
+        assert pub.stats["publishes"] == 10
+    # head-of-line: one reader pins an early generation forever; frees
+    # behind it must still be reclaimed and replay must stay exact
+    fmap = QuadraticMap(2, 100.0)
+    emb = np.random.default_rng(77).normal(0, 0.5, (12, 2)).astype(np.float32)
+    base = Tree(fmap, 12, 3)
+    base.reset(emb)
+    reference = base.clone()
+    pub = Publisher(base)
+    npr = np.random.default_rng(78)
+    pinned = pub.publish([0, 5], npr.normal(0, 0.5, (2, 2)).astype(np.float32))
+    reference.update_many([0, 5], pinned["tree"].emb[[0, 5]].copy())
+    # re-derive reference rows exactly: use the same rows we published
+    pinned["pins"] += 1
+    pinned_z = pinned["tree"].z.copy()
+    for _ in range(8):
+        classes = sorted(rng.sample(range(12), 3))
+        rows = npr.normal(0, 0.5, (3, 2)).astype(np.float32)
+        reference.update_many(classes, rows)
+        snap = pub.publish(classes, rows)
+        assert np.array_equal(snap["tree"].z, reference.z)
+    assert pub.stats["reclaimed"] >= 6, pub.stats
+    assert np.array_equal(pinned["tree"].z, pinned_z), "pinned generation mutated"
+    print("  publisher reclaim+replay == straight-line updates (bitwise): OK")
+
+
+def check_shards(trials=16):
+    rng = random.Random(3)
+    for case in range(trials):
+        n = rng.randint(4, 60)
+        d = rng.randint(1, 4)
+        shards = rng.randint(1, min(8, n))
+        leaf = rng.randint(1, 8)
+        fmap = QuadraticMap(d, rng.uniform(1.0, 150.0))
+        emb = np.random.default_rng(case).normal(0, 0.5, (n, d)).astype(np.float32)
+        offs = shard_offsets(n, shards)
+        trees = []
+        for lo, hi in zip(offs, offs[1:]):
+            t = Tree(fmap, hi - lo, leaf)
+            t.reset(emb[lo:hi])
+            trees.append(t)
+        h = np.random.default_rng(case + 55).normal(0, 1, d).astype(np.float32)
+        expected = exact_dist(fmap, h, emb)
+        for c, q in draw_from_shards(trees, offs, h, 64, rng):
+            assert 0 <= c < n
+            assert abs(q - expected[c]) < 1e-9, (case, c, q, expected[c])
+    # chi-square of the merged empirical distribution
+    n, d, shards = 40, 3, 5
+    fmap = QuadraticMap(d, 100.0)
+    emb = np.random.default_rng(42).normal(0, 0.5, (n, d)).astype(np.float32)
+    offs = shard_offsets(n, shards)
+    trees = []
+    for lo, hi in zip(offs, offs[1:]):
+        t = Tree(fmap, hi - lo, 3)
+        t.reset(emb[lo:hi])
+        trees.append(t)
+    h = np.random.default_rng(43).normal(0, 1, d).astype(np.float32)
+    expected = exact_dist(fmap, h, emb)
+    rng = random.Random(9)
+    counts = [0] * n
+    draws = 120_000
+    for _ in range(draws // 50):
+        for c, _ in draw_from_shards(trees, offs, h, 50, rng):
+            counts[c] += 1
+    stat = sum(
+        (counts[i] - expected[i] * draws) ** 2 / (expected[i] * draws)
+        for i in range(n)
+        if expected[i] * draws >= 1.0
+    )
+    assert stat < 39 + 5 * math.sqrt(78), stat
+    # zero-mass composition: all q > 0, both halves hit
+    zt = [Tree(ZeroMap(3), 8, 2) for _ in range(2)]
+    zo = [0, 8, 16]
+    seen = set()
+    for c, q in draw_from_shards(zt, zo, np.ones(3, dtype=np.float32), 512, rng):
+        assert q > 0.0
+        seen.add(c // 8)
+    assert seen == {0, 1}
+    print(f"  shard router merged q == unsharded (chi2 {stat:.1f}, df 39): OK")
+
+
+def check_topk(trials=20):
+    rng = random.Random(11)
+    for case in range(trials):
+        n = rng.randint(4, 50)
+        d = rng.randint(1, 4)
+        k = rng.randint(1, n)
+        fmap = QuadraticMap(d, rng.uniform(1.0, 150.0))
+        emb = np.random.default_rng(case).normal(0, 0.5, (n, d)).astype(np.float32)
+        t = Tree(fmap, n, rng.randint(1, n))
+        t.reset(emb)
+        h = np.random.default_rng(case + 5).normal(0, 1, d).astype(np.float32)
+        exact = sorted(
+            ((c, fmap.kernel(h, emb[c])) for c in range(n)), key=lambda x: (-x[1], x[0])
+        )[:k]
+        got = t.topk_beam(h, k, len(t.meta))
+        assert [c for c, _ in got] == [c for c, _ in exact], (case, got, exact)
+    # width-1 beam finds a dominant class
+    n, d = 64, 3
+    emb = np.random.default_rng(0).normal(0, 0.05, (n, d)).astype(np.float32)
+    emb[17] = [4.0, -4.0, 4.0]
+    t = Tree(QuadraticMap(d, 100.0), n, 4)
+    t.reset(emb)
+    top = t.topk_beam(np.array([1.0, -1.0, 1.0], dtype=np.float32), 1, 1)
+    assert top[0][0] == 17, top
+    # zero-mass guard: k distinct classes
+    zt = Tree(ZeroMap(3), 16, 2)
+    zk = zt.topk_beam(np.ones(3, dtype=np.float32), 4, 2)
+    assert len({c for c, _ in zk}) == 4
+    print("  top-k beam (full width == exact, dominance, zero-mass): OK")
+
+
+def check_partial_leaf():
+    rng = random.Random(13)
+    n, d = 30, 3
+    fmap = QuadraticMap(d, 100.0)
+    emb = np.random.default_rng(30).normal(0, 0.6, (n, d)).astype(np.float32)
+    t = Tree(fmap, n, 5)
+    t.reset(emb)
+    h = np.random.default_rng(31).normal(0, 1, d).astype(np.float32)
+    f = lambda j: 1.0 + j * 0.1
+    truth = sum(f(j) for j in range(n))
+    s = t.begin_example(h)
+    runs, acc = 30_000, 0.0
+    for _ in range(runs):
+        (lo, hi), p = t.draw_leaf_scratch(s, rng)
+        for c in range(lo, hi):
+            acc += f(c) / p
+    est = acc / runs
+    assert abs(est - truth) < 0.05 * truth, (est, truth)
+    print(f"  partial-leaf scratch importance identity ({est:.2f} vs {truth:.2f}): OK")
+
+
+def check_batcher_rule():
+    # pure simulation of MicroBatcher::next_batch's close rule
+    def close_points(arrivals, max_batch, max_wait):
+        batches, queue = [], []
+        events = sorted(arrivals)
+        t, i = 0.0, 0
+        while i < len(events) or queue:
+            if not queue:
+                t = events[i]
+            while i < len(events) and events[i] <= t:
+                queue.append(events[i])
+                i += 1
+            if len(queue) >= max_batch:
+                batches.append((t, queue[:max_batch]))
+                queue = queue[max_batch:]
+                continue
+            deadline = queue[0] + max_wait
+            if i < len(events) and events[i] < deadline:
+                t = events[i]
+                continue
+            t = deadline
+            while i < len(events) and events[i] <= t:
+                queue.append(events[i])
+                i += 1
+            take = min(len(queue), max_batch)
+            batches.append((t, queue[:take]))
+            queue = queue[take:]
+        return batches
+
+    rng = random.Random(17)
+    for _ in range(200):
+        arrivals = sorted(rng.uniform(0, 10) for _ in range(rng.randint(1, 40)))
+        mb = rng.randint(1, 8)
+        mw = rng.uniform(0.1, 2.0)
+        total = 0
+        for t_close, batch in close_points(arrivals, mb, mw):
+            assert len(batch) <= mb
+            # deadline contract: oldest row dispatched within max_wait
+            assert t_close <= batch[0] + mw + 1e-9
+            total += len(batch)
+        assert total == len(arrivals)
+    print("  micro-batcher close rule (size cap + oldest-row deadline): OK")
+
+
+if __name__ == "__main__":
+    print("serve-layer port checks:")
+    check_baseline_tree()
+    check_publisher()
+    check_shards()
+    check_topk()
+    check_partial_leaf()
+    check_batcher_rule()
+    print("all serve-layer port checks passed")

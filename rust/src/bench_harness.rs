@@ -7,6 +7,7 @@
 //! and print the loss series; this harness provides their timing and table
 //! output too.
 
+use crate::util::json::Value;
 use crate::util::stats::Samples;
 use std::time::Instant;
 
@@ -196,6 +197,66 @@ pub fn print_series(label: &str, points: &[(f64, f64)]) {
     }
 }
 
+/// One row as a JSON object (seconds; throughput in items/s when known).
+fn row_to_json(r: &BenchRow) -> Value {
+    let mut pairs = vec![
+        ("name", Value::str(&r.name)),
+        ("mean_s", Value::num(r.mean_s)),
+        ("p50_s", Value::num(r.p50_s)),
+        ("p95_s", Value::num(r.p95_s)),
+        ("iters", Value::num(r.iters as f64)),
+    ];
+    if let Some(t) = r.throughput() {
+        pairs.push(("throughput_per_s", Value::num(t)));
+    }
+    Value::object(pairs)
+}
+
+/// Serialize bench tables to the machine-readable result format written by
+/// [`write_json`]: `{"bench": label, "scale": ..., "tables": [{"title",
+/// "rows": [...]}]}`.
+pub fn tables_to_json(label: &str, tables: &[(&str, &[BenchRow])]) -> Value {
+    Value::object(vec![
+        ("bench", Value::str(label)),
+        (
+            "scale",
+            Value::str(match scale() {
+                Scale::Quick => "quick",
+                Scale::Full => "full",
+            }),
+        ),
+        (
+            "tables",
+            Value::Array(
+                tables
+                    .iter()
+                    .map(|(title, rows)| {
+                        Value::object(vec![
+                            ("title", Value::str(title)),
+                            ("rows", Value::Array(rows.iter().map(row_to_json).collect())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write `BENCH_<label>.json` next to the printed tables so the perf
+/// trajectory is diffable across PRs. Destination directory comes from
+/// `KSS_BENCH_JSON_DIR` (default: the working directory — the repo root
+/// under `cargo bench`). A write failure is reported but never fails the
+/// bench itself.
+pub fn write_json(label: &str, tables: &[(&str, &[BenchRow])]) {
+    let dir = std::env::var("KSS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{label}.json"));
+    let doc = tables_to_json(label, tables);
+    match std::fs::write(&path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +282,27 @@ mod tests {
         });
         let t = row.throughput().unwrap();
         assert!(t > 1_000.0 && t < 2_000_000.0, "throughput {t}");
+    }
+
+    #[test]
+    fn json_emission_roundtrips() {
+        let rows = vec![BenchRow {
+            name: "draw n=1000".into(),
+            mean_s: 1.5e-4,
+            p50_s: 1.4e-4,
+            p95_s: 2.0e-4,
+            iters: 42,
+            items_per_iter: Some(32.0),
+        }];
+        let doc = tables_to_json("sampling", &[("draws", &rows)]);
+        let parsed = crate::util::json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "sampling");
+        let tables = parsed.get("tables").unwrap().as_array().unwrap();
+        let row = &tables[0].get("rows").unwrap().as_array().unwrap()[0];
+        assert_eq!(row.get("name").unwrap().as_str().unwrap(), "draw n=1000");
+        assert!((row.get("mean_s").unwrap().as_f64().unwrap() - 1.5e-4).abs() < 1e-12);
+        let tput = row.get("throughput_per_s").unwrap().as_f64().unwrap();
+        assert!((tput - 32.0 / 1.5e-4).abs() < 1e-6 * tput);
     }
 
     #[test]

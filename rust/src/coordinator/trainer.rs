@@ -20,11 +20,13 @@ use crate::coordinator::config::{build_dataset, TrainConfig};
 use crate::coordinator::metrics::{EvalPoint, MetricsSink};
 use crate::data::{Batch, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
-use crate::sampler::{build_sampler, BatchSampleInput, Sample, Sampler};
+use crate::sampler::{build_sampler, BatchSampleInput, QuadraticMap, Sample, Sampler};
+use crate::serve::{ShardSet, SnapshotStore, TreeSnapshot};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
 use crate::util::threadpool::default_threads;
 use anyhow::{Context, Result};
+use std::sync::Arc;
 
 /// Result of a training run.
 #[derive(Clone, Debug)]
@@ -52,6 +54,10 @@ pub struct Trainer<'e> {
     pub phases: PhaseTimes,
     threads: usize,
     step_count: usize,
+    /// Serving publisher (see [`Trainer::enable_serving`]): a sharded
+    /// mirror of the output-embedding table that republishes a snapshot
+    /// generation after every sampled step.
+    publisher: Option<ShardSet<QuadraticMap>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -87,7 +93,39 @@ impl<'e> Trainer<'e> {
             phases: PhaseTimes::default(),
             threads,
             step_count: 0,
+            publisher: None,
         })
+    }
+
+    /// Attach the serving publisher: a sharded kernel-tree mirror of the
+    /// output-embedding table whose shards republish a fresh immutable
+    /// snapshot generation after every sampled training step (the same
+    /// Fig. 1(b) rows the sampler applies). Returns the per-shard publish
+    /// points and shard offsets — exactly what
+    /// [`crate::serve::SamplingService::start`] takes — so online readers
+    /// sample the training-fresh distribution while the trainer keeps
+    /// stepping.
+    #[allow(clippy::type_complexity)]
+    pub fn enable_serving(
+        &mut self,
+        shards: usize,
+    ) -> Result<(Vec<Arc<SnapshotStore<TreeSnapshot<QuadraticMap>>>>, Vec<u32>)> {
+        let set = ShardSet::new(
+            QuadraticMap::new(self.spec.d, self.spec.alpha as f64),
+            self.spec.n_classes,
+            shards,
+            None,
+            Some(self.store.out_w().as_f32()?),
+        );
+        let stores = set.stores();
+        let offsets = set.offsets().to_vec();
+        self.publisher = Some(set);
+        Ok((stores, offsets))
+    }
+
+    /// Aggregated publish counters (None until serving is enabled).
+    pub fn publish_stats(&self) -> Option<crate::serve::PublishStats> {
+        self.publisher.as_ref().map(|p| p.stats())
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -230,16 +268,27 @@ impl<'e> Trainer<'e> {
             .store
             .apply_sampled_rows(&s_idx, &out[n_p + 1])
             .context("applying updated rows")?;
-        if needs.h {
+        if needs.h || self.publisher.is_some() {
             // flat copy of the changed rows (sorted + deduped by
             // apply_sampled_rows), then one batched tree sweep
             let mut rows_flat = Vec::with_capacity(changed.len() * d);
             for &class in &changed {
                 rows_flat.extend_from_slice(self.store.out_row(class));
             }
-            self.sampler.as_mut().unwrap().update_many(&changed, &rows_flat);
+            if needs.h {
+                self.sampler.as_mut().unwrap().update_many(&changed, &rows_flat);
+            }
+            self.phases.add("update", sw.lap());
+            // 5. publish the step's rows to the serving snapshots: online
+            // readers pick up generation G+1 at their next batch while any
+            // in-flight request finishes on G
+            if let Some(set) = &mut self.publisher {
+                set.update_and_publish(&changed, &rows_flat);
+                self.phases.add("publish", sw.lap());
+            }
+        } else {
+            self.phases.add("update", sw.lap());
         }
-        self.phases.add("update", sw.lap());
         Ok(loss)
     }
 
@@ -401,6 +450,49 @@ mod tests {
         let c = run(10);
         assert_eq!(a, b, "same seed must reproduce exactly");
         assert_ne!(a, c, "different seed should differ");
+    }
+
+    #[test]
+    fn serving_publisher_tracks_training() {
+        // snapshots must advance one generation per sampled step (per
+        // touched shard) and agree with the sampler's own mirror
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg("quadratic", 4);
+        cfg.max_steps_per_epoch = 6;
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        let (stores, offsets) = t.enable_serving(2).unwrap();
+        assert_eq!(stores.len(), 2);
+        assert!(stores.iter().all(|s| s.generation() == 0));
+        let mut sink = MetricsSink::memory("serve-hook");
+        t.train(&mut sink).unwrap();
+        let stats = t.publish_stats().unwrap();
+        assert_eq!(stats.publishes as usize, {
+            // every step publishes each shard it touched
+            let total: u64 = stores.iter().map(|s| s.generation()).sum();
+            total as usize
+        });
+        assert!(stats.publishes >= 6, "no publishes happened: {stats:?}");
+        // published snapshots mirror the trained table: q over the serve
+        // snapshots must match the closed form over the live weights
+        let w = t.store.out_w().as_f32().unwrap().to_vec();
+        let spec = t.spec().clone();
+        let h: Vec<f32> = (0..spec.d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let snaps: Vec<_> = stores.iter().map(|s| s.load().1).collect();
+        let phi = snaps[0].tree.phi_query(&h);
+        let total: f64 = snaps.iter().map(|s| s.tree.partition(&phi).max(0.0)).sum();
+        let map = crate::sampler::QuadraticMap::new(spec.d, spec.alpha as f64);
+        use crate::sampler::kernel::FeatureMap;
+        for class in [0usize, spec.n_classes / 2, spec.n_classes - 1] {
+            let sid = crate::serve::shard::shard_of_class(&offsets, class);
+            let local = class - offsets[sid] as usize;
+            let got = snaps[sid].tree.feature_map().kernel(&h, snaps[sid].tree.emb_row(local))
+                / total;
+            let want = map.kernel(&h, &w[class * spec.d..(class + 1) * spec.d])
+                / (0..spec.n_classes)
+                    .map(|j| map.kernel(&h, &w[j * spec.d..(j + 1) * spec.d]))
+                    .sum::<f64>();
+            assert!((got - want).abs() < 1e-6, "class {class}: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -32,9 +32,14 @@
 //!   parameter store.
 //! * [`coordinator`] — training loop, metrics, experiment grid runner,
 //!   config system.
+//! * [`serve`] — online serving: snapshot-isolated concurrent sampling
+//!   (epoch snapshots + double-buffered publishing), sharded trees behind
+//!   a mass router, request micro-batching, and top-k beam retrieval; the
+//!   `kss serve` subcommand's load generator lives here too.
 //! * [`hsm`] — hierarchical softmax baseline (related-work comparison).
 //! * [`bench_harness`] — timing/stats harness used by `benches/` (criterion
-//!   is unavailable offline).
+//!   is unavailable offline); emits machine-readable `BENCH_*.json` next to
+//!   the printed tables.
 
 pub mod bench_harness;
 pub mod coordinator;
@@ -42,6 +47,7 @@ pub mod data;
 pub mod hsm;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

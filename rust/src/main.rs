@@ -8,15 +8,22 @@
 //!   figures; writes per-run JSONL + summary.json and prints the Figure-2
 //!   style bias table.
 //! * `kss demo` — 30-second tiny-model walkthrough of the whole stack.
+//! * `kss serve` — closed-loop load test of the online serving subsystem
+//!   (sharded snapshots + micro-batcher + top-k retrieval); pure L3, needs
+//!   no artifacts. Exits non-zero when the deadline-miss rate exceeds
+//!   `--miss-threshold` — the CI smoke gate.
 //!
-//! Artifacts must exist (`make artifacts`). Logging level: `KSS_LOG`.
+//! Artifacts must exist for train/experiment/demo (`make artifacts`).
+//! Logging level: `KSS_LOG`.
 
 use anyhow::Result;
 use kss::coordinator::{run_grid, GridSpec, MetricsSink, TrainConfig, Trainer};
 use kss::runtime::Engine;
+use kss::serve::{BatcherConfig, LoadGenConfig, TopKConfig};
 use kss::util::cli::{Args, OptSpec};
 use kss::{error, info};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 fn main() {
     kss::util::logging::init_from_env();
@@ -69,15 +76,47 @@ fn parse_config(args: &Args) -> Result<TrainConfig> {
     })
 }
 
+fn serve_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "classes", help: "catalog size (classes)", default: Some("10000".into()) },
+        OptSpec { name: "d", help: "embedding dimension", default: Some("16".into()) },
+        OptSpec { name: "alpha", help: "quadratic kernel α", default: Some("100".into()) },
+        OptSpec { name: "shards", help: "shard count", default: Some("4".into()) },
+        OptSpec { name: "workers", help: "serve worker threads", default: Some("2".into()) },
+        OptSpec { name: "clients", help: "closed-loop client threads", default: Some("4".into()) },
+        OptSpec { name: "requests", help: "requests per client", default: Some("1000".into()) },
+        OptSpec { name: "m", help: "negatives per request", default: Some("8".into()) },
+        OptSpec { name: "topk", help: "retrieval k (every 16th req)", default: Some("10".into()) },
+        OptSpec { name: "beam", help: "retrieval beam width", default: Some("8".into()) },
+        OptSpec { name: "max-batch", help: "micro-batch size cap", default: Some("32".into()) },
+        OptSpec { name: "max-wait-us", help: "batch deadline (us)", default: Some("2000".into()) },
+        OptSpec { name: "queue-cap", help: "bounded queue capacity", default: Some("4096".into()) },
+        OptSpec { name: "updates", help: "classes per publish (0=off)", default: Some("32".into()) },
+        OptSpec { name: "deadline-ms", help: "end-to-end budget (ms)", default: Some("20".into()) },
+        OptSpec { name: "miss-threshold", help: "max miss rate", default: Some("0.05".into()) },
+        OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
+    ]
+}
+
 fn run(argv: Vec<String>) -> Result<()> {
     let (cmd, rest) = match argv.split_first() {
         Some((c, rest)) if !c.starts_with("--") => (c.clone(), rest.to_vec()),
         _ => ("help".to_string(), argv),
     };
-    let args = Args::parse("kss <info|train|experiment|demo>", &rest, &specs(), &["help"])?;
+    // `serve` is pure L3 with its own flag set; everything else shares the
+    // training specs
+    if cmd == "serve" {
+        let args = Args::parse("kss serve", &rest, &serve_specs(), &["help"])?;
+        if args.wants_help() {
+            println!("{}", args.usage());
+            return Ok(());
+        }
+        return serve_cmd(&args);
+    }
+    let args = Args::parse("kss <info|train|experiment|demo|serve>", &rest, &specs(), &["help"])?;
     if args.wants_help() || cmd == "help" {
         println!("{}", args.usage());
-        println!("subcommands: info, train, experiment, demo");
+        println!("subcommands: info, train, experiment, demo, serve (own flags: kss serve --help)");
         return Ok(());
     }
     let artifacts = PathBuf::from(args.get_string_or("artifacts", "artifacts"));
@@ -86,8 +125,81 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => train_cmd(&artifacts, &args),
         "experiment" => experiment_cmd(&artifacts, &args),
         "demo" => demo_cmd(&artifacts),
-        other => anyhow::bail!("unknown subcommand '{other}' (info, train, experiment, demo)"),
+        other => {
+            anyhow::bail!("unknown subcommand '{other}' (info, train, experiment, demo, serve)")
+        }
     }
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cfg = LoadGenConfig {
+        n_classes: args.get_usize("classes", 10_000)?,
+        d: args.get_usize("d", 16)?,
+        alpha: args.get_f64("alpha", 100.0)?,
+        shards: args.get_usize("shards", 4)?,
+        workers: args.get_usize("workers", 2)?,
+        clients: args.get_usize("clients", 4)?,
+        requests: args.get_usize("requests", 1_000)?,
+        m: args.get_usize("m", 8)?,
+        topk: TopKConfig {
+            k: args.get_usize("topk", 10)?,
+            beam_width: args.get_usize("beam", 8)?,
+        },
+        batcher: BatcherConfig {
+            max_batch: args.get_usize("max-batch", 32)?,
+            max_wait: Duration::from_micros(args.get_u64("max-wait-us", 2_000)?),
+            queue_cap: args.get_usize("queue-cap", 4_096)?,
+        },
+        updates_per_publish: args.get_usize("updates", 32)?,
+        deadline: Duration::from_millis(args.get_u64("deadline-ms", 20)?),
+        seed: args.get_u64("seed", 42)?,
+    };
+    let miss_threshold = args.get_f64("miss-threshold", 0.05)?;
+    info!(
+        "serve load test: {} classes × d={} in {} shards, {} workers, {} clients × {} requests",
+        cfg.n_classes, cfg.d, cfg.shards, cfg.workers, cfg.clients, cfg.requests
+    );
+    let report = kss::serve::run_load_test(&cfg);
+    println!("serve load test ({:.2}s wall):", report.wall_s);
+    println!("  completed        {:>10}  ({:.0} req/s)", report.completed, report.throughput_rps);
+    println!("  topk calls       {:>10}", report.topk_calls);
+    println!("  rejected         {:>10}  (bounded queue shed)", report.rejected);
+    println!(
+        "  latency          p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+        report.latency_p50_s * 1e3,
+        report.latency_p95_s * 1e3,
+        report.latency_p99_s * 1e3,
+        report.latency_max_s * 1e3
+    );
+    println!(
+        "  deadline misses  {:>9.3}%  (budget {:.1} ms, threshold {:.1}%)",
+        report.deadline_miss_rate * 100.0,
+        cfg.deadline.as_secs_f64() * 1e3,
+        miss_threshold * 100.0
+    );
+    println!(
+        "  publishes        {:>10}  (reclaimed {}, copied {}, replayed {} batches)",
+        report.publishes,
+        report.publish_stats.reclaimed,
+        report.publish_stats.copied,
+        report.publish_stats.replayed_batches
+    );
+    println!(
+        "  publish cost     build p95 {:.3} ms, swap max {:.6} ms (readers wait only for the swap)",
+        report.publish_build_p95_s * 1e3,
+        report.publish_swap_max_s * 1e3
+    );
+    anyhow::ensure!(
+        report.completed > 0,
+        "no requests completed — the serving stack is wedged"
+    );
+    anyhow::ensure!(
+        report.deadline_miss_rate <= miss_threshold,
+        "deadline-miss rate {:.3}% exceeds threshold {:.3}%",
+        report.deadline_miss_rate * 100.0,
+        miss_threshold * 100.0
+    );
+    Ok(())
 }
 
 fn info_cmd(artifacts: &Path) -> Result<()> {

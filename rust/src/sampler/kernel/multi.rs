@@ -16,8 +16,9 @@
 
 use super::tree::KernelTreeSampler;
 use super::FeatureMap;
-use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_chunks_mut;
 use anyhow::Result;
 
 /// Wraps a [`KernelTreeSampler`] to return whole leaves per descent.
@@ -49,16 +50,64 @@ impl<M: FeatureMap> Sampler for PartialLeafSampler<M> {
     fn sample(&self, input: &SampleInput, runs: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
         let h = input.h.ok_or_else(|| anyhow::anyhow!("partial-leaf sampler needs h"))?;
         out.clear();
-        let phi_h = self.tree.phi_query(h);
+        // Scratch-based descents: node masses are memoized across the
+        // `runs` descents of this example (and the scratch itself comes
+        // from the tree's freelist), exactly like the full draw path.
+        // draw_leaf_scratch shares the tree's guarded branch step, so
+        // p_leaf is strictly positive even when subset masses underflow to
+        // zero (the eq. 2 correction ln(runs·q) stays finite).
+        let mut scratch = self.tree.take_scratch();
+        self.tree.begin_example(h, &mut scratch);
         for _ in 0..runs {
-            // draw_leaf shares the tree's guarded branch step, so p_leaf is
-            // strictly positive even when subset masses underflow to zero
-            // (the eq. 2 correction ln(runs·q) stays finite).
-            let (range, p_leaf) = self.tree.draw_leaf(&phi_h, rng);
+            let (range, p_leaf) = self.tree.draw_leaf_scratch(&mut scratch, rng);
             for class in range {
                 out.push(class, p_leaf);
             }
         }
+        self.tree.put_scratch(scratch);
+        Ok(())
+    }
+
+    /// Batched descent engine, mirroring `KernelTreeSampler::sample_batch`:
+    /// each worker checks one `DrawScratch` out of the tree's freelist and
+    /// reuses it across all of that worker's rows (zero steady-state
+    /// allocation), instead of inheriting the per-row default loop. Row `i`
+    /// draws from [`row_rng`]`(step_seed, i)`, bit-identical to the
+    /// per-example [`Sampler::sample`] loop for any thread count.
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        runs: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        let d = self.tree.embed_dim();
+        anyhow::ensure!(inputs.d == d, "batch h dim {} != sampler d {}", inputs.d, d);
+        let h_all = inputs.h.expect("validated: partial-leaf sampler needs h");
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut scratch = self.tree.take_scratch();
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = &h_all[i * d..(i + 1) * d];
+                let mut rng = row_rng(step_seed, i);
+                self.tree.begin_example(h, &mut scratch);
+                slot.clear();
+                for _ in 0..runs {
+                    let (range, p_leaf) = self.tree.draw_leaf_scratch(&mut scratch, &mut rng);
+                    for class in range {
+                        slot.push(class, p_leaf);
+                    }
+                }
+            }
+            self.tree.put_scratch(scratch);
+        });
         Ok(())
     }
 
@@ -130,6 +179,44 @@ mod tests {
         for run in 0..3 {
             let qs = &out.q[run * 4..(run + 1) * 4];
             assert!(qs.iter().all(|&q| (q - qs[0]).abs() < 1e-15));
+        }
+    }
+
+    #[test]
+    fn partial_sample_batch_reproduces_per_row_streams() {
+        // the scratch-reusing override must be bit-identical to a per-row
+        // sample() loop over the row_rng streams, for any thread count
+        let (n_classes, d, rows, runs) = (48, 3, 13, 5);
+        let mut rng = Rng::new(23);
+        let mut emb = vec![0.0f32; n_classes * d];
+        rng.fill_normal(&mut emb, 0.6);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n_classes, Some(4));
+        tree.reset_embeddings(&emb, n_classes, d);
+        let sampler = PartialLeafSampler::new(tree);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let step_seed = 0x9A17;
+        let mut per_row: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+        for (i, slot) in per_row.iter_mut().enumerate() {
+            let input = SampleInput { h: Some(&hs[i * d..(i + 1) * d]), ..Default::default() };
+            let mut r = row_rng(step_seed, i);
+            sampler.sample(&input, runs, &mut r, slot).unwrap();
+        }
+        for threads in [0usize, 1, 4, 8] {
+            let inputs = BatchSampleInput {
+                n: rows,
+                d,
+                n_classes,
+                h: Some(&hs),
+                threads,
+                ..Default::default()
+            };
+            let mut batched: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            sampler.sample_batch(&inputs, runs, step_seed, &mut batched).unwrap();
+            for (i, (a, b)) in batched.iter().zip(&per_row).enumerate() {
+                assert_eq!(a.classes, b.classes, "threads {threads} row {i}");
+                assert_eq!(a.q, b.q, "threads {threads} row {i}");
+            }
         }
     }
 }

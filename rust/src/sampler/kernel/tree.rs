@@ -48,7 +48,7 @@
 use super::FeatureMap;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
-use crate::util::threadpool::par_chunks_mut;
+use crate::util::threadpool::{par_chunks_mut, Pool};
 use anyhow::Result;
 
 const NO_CHILD: u32 = u32::MAX;
@@ -107,7 +107,7 @@ pub struct KernelTreeSampler<M: FeatureMap> {
     /// per sampler lifetime instead of per call. Scratch contents never
     /// affect results (generation counters invalidate them per example),
     /// so pooling preserves stream determinism.
-    scratch_pool: std::sync::Mutex<Vec<DrawScratch>>,
+    scratch_pool: Pool<DrawScratch>,
     /// Draws + updates performed (ops accounting for the benches).
     pub stats: TreeStats,
 }
@@ -135,9 +135,10 @@ fn to_f32_clamped(v: f64) -> f32 {
 }
 
 /// Coerce a kernel/subset mass to a usable value: NaN → 0, negative → 0,
-/// +inf → f64::MAX.
+/// +inf → f64::MAX. Shared with the serve layer (shard router masses and
+/// beam scores go through the same guard).
 #[inline]
-fn sanitize_mass(x: f64) -> f64 {
+pub(crate) fn sanitize_mass(x: f64) -> f64 {
     if x.is_nan() {
         0.0
     } else {
@@ -169,8 +170,10 @@ fn choose_branch(sl: f64, sr: f64, rng: &mut Rng) -> (bool, f64) {
 /// `partition_point`'s floating-point slack can clamp a draw onto a
 /// zero-mass tail slot of the CDF; walk down to the nearest strictly
 /// positive increment (one exists whenever the total mass is positive).
+/// Shared with the serve-layer shard router, which draws shards from the
+/// same kind of inclusive-prefix-sum CDF.
 #[inline]
-fn step_down_to_positive(cum: &[f64], mut off: usize) -> usize {
+pub(crate) fn step_down_to_positive(cum: &[f64], mut off: usize) -> usize {
     while off > 0 && cum[off] - cum[off - 1] <= 0.0 {
         off -= 1;
     }
@@ -200,7 +203,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             scratch_old: vec![0.0; dim],
             scratch_new: vec![0.0; dim],
             delta_pool: Vec::new(),
-            scratch_pool: std::sync::Mutex::new(Vec::new()),
+            scratch_pool: Pool::new(),
             stats: TreeStats::default(),
         };
         sampler.build();
@@ -219,6 +222,28 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
 
     pub fn leaf_size(&self) -> usize {
         self.leaf_size
+    }
+
+    /// Number of classes the tree covers.
+    pub fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding dimension d.
+    pub fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    /// The kernel's feature map (the serve router needs `K(h, ·)` in closed
+    /// form to report merged q values).
+    pub fn feature_map(&self) -> &M {
+        &self.map
+    }
+
+    /// Row `class` of the host embedding mirror.
+    #[inline]
+    pub fn emb_row(&self, class: usize) -> &[f32] {
+        &self.emb[class * self.d..(class + 1) * self.d]
     }
 
     /// Node i's z(C) slice in the arena.
@@ -268,16 +293,12 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
     /// allocates nothing, and total allocations are bounded by the maximum
     /// number of concurrent users rather than the call count.
     pub fn take_scratch(&self) -> DrawScratch {
-        self.scratch_pool
-            .lock()
-            .expect("scratch pool poisoned")
-            .pop()
-            .unwrap_or_else(|| self.new_scratch())
+        self.scratch_pool.take(|| self.new_scratch())
     }
 
     /// Return a scratch pool to the freelist for reuse by later calls.
     pub fn put_scratch(&self, scratch: DrawScratch) {
-        self.scratch_pool.lock().expect("scratch pool poisoned").push(scratch);
+        self.scratch_pool.put(scratch);
     }
 
     /// Start a new example: materialize φ(h), compute the eq. (8) partition
@@ -291,6 +312,22 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             *dst = to_f32_clamped(x);
         }
         s.total = self.partition(&s.phi_h);
+        s.advance_gen();
+    }
+
+    /// [`Self::begin_example`] with a caller-materialized φ(h) and root
+    /// partition `total = ⟨φ(h), z(root)⟩`. The serve layer's shard router
+    /// computes φ(h) once per request and scores every shard's root to
+    /// build its CDF; priming the shard a draw lands on then reuses both —
+    /// no repeated O(d²) feature map, no repeated O(D) root dot.
+    pub fn begin_example_prepared(&self, phi_h: &[f64], total: f64, s: &mut DrawScratch) {
+        debug_assert_eq!(phi_h.len(), self.dim);
+        debug_assert_eq!(total.to_bits(), self.partition(phi_h).to_bits());
+        s.phi_h.copy_from_slice(phi_h);
+        for (dst, &x) in s.phi32.iter_mut().zip(s.phi_h.iter()) {
+            *dst = to_f32_clamped(x);
+        }
+        s.total = total;
         s.advance_gen();
     }
 
@@ -390,6 +427,34 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         }
     }
 
+    /// [`Self::draw_leaf`] through a [`DrawScratch`] primed by
+    /// [`Self::begin_example`]: uses the same memoized f32-shadow node
+    /// masses (with the exact f64 fallback) as [`Self::draw`], so the
+    /// partial-leaf batch engine reuses one scratch per worker instead of
+    /// re-deriving every node dot per descent. The returned `p` is the
+    /// actual probability of reaching the leaf under the guarded descent
+    /// (always strictly positive), which keeps the §3.2.2 importance
+    /// weights unbiased regardless of which precision produced the masses.
+    pub fn draw_leaf_scratch(
+        &self,
+        s: &mut DrawScratch,
+        rng: &mut Rng,
+    ) -> (std::ops::Range<u32>, f64) {
+        let mut idx = 0u32;
+        let mut p_leaf = 1.0f64;
+        loop {
+            let meta = self.meta[idx as usize];
+            if meta.is_leaf() {
+                return (meta.lo..meta.hi, p_leaf.max(f64::MIN_POSITIVE));
+            }
+            let sl = self.node_mass(s, meta.left);
+            let sr = self.node_mass(s, meta.left + 1);
+            let (go_left, p) = choose_branch(sl, sr, rng);
+            p_leaf *= p;
+            idx = if go_left { meta.left } else { meta.left + 1 };
+        }
+    }
+
     /// §3.2.2 "multiple partial samples": one descent, return the whole leaf.
     /// Each returned class carries `q = P(reaching its leaf)`; correcting
     /// with `ln(runs · q)` keeps `E[Σ exp(o')] = Σ exp(o)` (the classes of a
@@ -432,6 +497,69 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             .map
             .kernel(h, &self.emb[class as usize * self.d..(class as usize + 1) * self.d]);
         k / self.partition(&phi_h)
+    }
+
+    /// Approximate top-k retrieval by kernel score `K(h, w_j) = ⟨φ(h), φ(w_j)⟩`
+    /// via a level-synchronous beam descent over the arena.
+    ///
+    /// At each level every surviving internal node is expanded into its two
+    /// children; leaves carry forward; the frontier is then cut to the
+    /// `beam_width` nodes with the largest subset mass `⟨φ(h), z(C)⟩`
+    /// (sanitized through the same zero-mass guard as the draw path, so
+    /// degenerate masses sort as 0 instead of poisoning the ordering). The
+    /// ≤ `beam_width · leaf_size` classes of the surviving leaves are then
+    /// scored exactly with the closed-form kernel — O(d) each, the §3.2.2
+    /// trick — and the best `k` are returned, sorted by descending score
+    /// with class id as the deterministic tie-break.
+    ///
+    /// Approximate because a subset's *mass* (a sum) can understate a lone
+    /// high-scoring class inside a low-mass subset; `beam_width ≥ #leaves`
+    /// makes the result exact (tests pin this), and recall degrades
+    /// gracefully as the beam narrows.
+    pub fn topk_beam(&self, h: &[f32], k: usize, beam_width: usize) -> Vec<(u32, f64)> {
+        let beam_width = beam_width.max(1);
+        let phi_h = self.phi_query(h);
+        let mass = |idx: u32| sanitize_mass(dot(&phi_h, self.z_of(idx)));
+        let mut frontier: Vec<(u32, f64)> = vec![(0, mass(0))];
+        loop {
+            let mut next: Vec<(u32, f64)> = Vec::with_capacity(2 * frontier.len());
+            let mut expanded = false;
+            for &(idx, m) in &frontier {
+                let meta = self.meta[idx as usize];
+                if meta.is_leaf() {
+                    next.push((idx, m));
+                } else {
+                    expanded = true;
+                    next.push((meta.left, mass(meta.left)));
+                    next.push((meta.left + 1, mass(meta.left + 1)));
+                }
+            }
+            if !expanded {
+                break;
+            }
+            // keep the beam_width heaviest subsets; ties resolve by node id
+            // so the result is deterministic across runs and platforms
+            next.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            next.truncate(beam_width);
+            frontier = next;
+        }
+        // exact closed-form scores inside the surviving leaves
+        let mut scored: Vec<(u32, f64)> = Vec::with_capacity(frontier.len() * self.leaf_size);
+        for &(idx, _) in &frontier {
+            let meta = self.meta[idx as usize];
+            for class in meta.lo..meta.hi {
+                let w = &self.emb[class as usize * self.d..(class as usize + 1) * self.d];
+                scored.push((class, sanitize_mass(self.map.kernel(h, w))));
+            }
+        }
+        scored.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored
+    }
+
+    /// Read-only sampling/retrieval view (see [`TreeView`]).
+    pub fn view(&self) -> TreeView<'_, M> {
+        TreeView { tree: self }
     }
 
     /// Batched Fig. 1(b): apply many embedding updates in one bottom-up
@@ -610,6 +738,107 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             .zip(&fresh)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max)
+    }
+}
+
+/// Cloning duplicates the *arena state* (meta, z master + f32 shadow,
+/// embedding mirror) — the primitive the serve layer's double-buffered
+/// snapshot publisher is built on. Transient state is deliberately not
+/// shared: the clone gets fresh update scratch, an empty delta pool, and an
+/// empty [`DrawScratch`] freelist (scratches are sized per tree and refill
+/// on first use), while `stats` carries over as a plain copy.
+impl<M: FeatureMap + Clone> Clone for KernelTreeSampler<M> {
+    fn clone(&self) -> Self {
+        KernelTreeSampler {
+            map: self.map.clone(),
+            n: self.n,
+            d: self.d,
+            dim: self.dim,
+            leaf_size: self.leaf_size,
+            tree_depth: self.tree_depth,
+            meta: self.meta.clone(),
+            z: self.z.clone(),
+            z32: self.z32.clone(),
+            emb: self.emb.clone(),
+            scratch_old: vec![0.0; self.dim],
+            scratch_new: vec![0.0; self.dim],
+            delta_pool: Vec::new(),
+            scratch_pool: Pool::new(),
+            stats: self.stats,
+        }
+    }
+}
+
+/// Read-only view over a [`KernelTreeSampler`]: exposes exactly the `&self`
+/// surface the serve layer's read paths consume (router scoring, scratch
+/// draws, top-k retrieval, closed-form probabilities) and nothing that can
+/// mutate the arena. `draw_from_shards`, the serve workers, and snapshot
+/// top-k all take `TreeView`s — the type system, not convention, keeps the
+/// update paths off the read side.
+pub struct TreeView<'a, M: FeatureMap> {
+    tree: &'a KernelTreeSampler<M>,
+}
+
+// manual impls: a view is a reference, copyable regardless of whether M is
+impl<M: FeatureMap> Clone for TreeView<'_, M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: FeatureMap> Copy for TreeView<'_, M> {}
+
+impl<'a, M: FeatureMap> TreeView<'a, M> {
+    pub fn num_classes(&self) -> usize {
+        self.tree.num_classes()
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.tree.embed_dim()
+    }
+
+    pub fn feature_map(&self) -> &'a M {
+        self.tree.feature_map()
+    }
+
+    pub fn emb_row(&self, class: usize) -> &'a [f32] {
+        self.tree.emb_row(class)
+    }
+
+    pub fn new_scratch(&self) -> DrawScratch {
+        self.tree.new_scratch()
+    }
+
+    pub fn partition(&self, phi_h: &[f64]) -> f64 {
+        self.tree.partition(phi_h)
+    }
+
+    pub fn begin_example(&self, h: &[f32], s: &mut DrawScratch) {
+        self.tree.begin_example(h, s)
+    }
+
+    pub fn begin_example_prepared(&self, phi_h: &[f64], total: f64, s: &mut DrawScratch) {
+        self.tree.begin_example_prepared(phi_h, total, s)
+    }
+
+    pub fn draw(&self, h: &[f32], s: &mut DrawScratch, rng: &mut Rng) -> (u32, f64) {
+        self.tree.draw(h, s, rng)
+    }
+
+    pub fn draw_leaf_scratch(
+        &self,
+        s: &mut DrawScratch,
+        rng: &mut Rng,
+    ) -> (std::ops::Range<u32>, f64) {
+        self.tree.draw_leaf_scratch(s, rng)
+    }
+
+    pub fn class_prob(&self, h: &[f32], class: u32) -> f64 {
+        self.tree.class_prob(h, class)
+    }
+
+    pub fn topk_beam(&self, h: &[f32], k: usize, beam_width: usize) -> Vec<(u32, f64)> {
+        self.tree.topk_beam(h, k, beam_width)
     }
 }
 
@@ -1178,5 +1407,102 @@ mod tests {
                 assert_eq!(a.q, b.q, "threads {threads} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn clone_duplicates_arena_and_diverges_independently() {
+        let (n, d) = (24, 3);
+        let mut rng = Rng::new(31);
+        let emb = random_emb(&mut rng, n, d);
+        let mut a = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(3));
+        a.reset_embeddings(&emb, n, d);
+        let b = a.clone();
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.emb, b.emb);
+        // mutate the original; the clone's arena must be untouched
+        let w = vec![2.0f32; d];
+        a.update(5, &w);
+        assert_ne!(a.z, b.z);
+        assert_eq!(b.emb[5 * d..6 * d], emb[5 * d..6 * d]);
+        assert!(b.max_drift() < 1e-9);
+    }
+
+    #[test]
+    fn draw_leaf_scratch_matches_descent_probabilities() {
+        // the scratch-based leaf draw must report the probability it
+        // actually used, leaf frequencies ≈ reported p (same contract as
+        // draw_leaf, now over the memoized f32-shadow masses)
+        let (n, d) = (32, 3);
+        let mut rng = Rng::new(37);
+        let emb = random_emb(&mut rng, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        tree.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut scratch = tree.take_scratch();
+        tree.begin_example(&h, &mut scratch);
+        let mut seen: std::collections::HashMap<u32, (usize, f64)> = Default::default();
+        let trials = 4000;
+        for _ in 0..trials {
+            let (range, p) = tree.draw_leaf_scratch(&mut scratch, &mut rng);
+            assert!(p > 0.0 && p <= 1.0 + 1e-12);
+            let e = seen.entry(range.start).or_insert((0, p));
+            e.0 += 1;
+            assert!((e.1 - p).abs() < 1e-12, "same leaf must report the same p");
+        }
+        tree.put_scratch(scratch);
+        for (_, &(count, p)) in &seen {
+            let freq = count as f64 / trials as f64;
+            assert!((freq - p).abs() < 0.04, "freq {freq} vs p {p}");
+        }
+    }
+
+    #[test]
+    fn topk_beam_full_width_is_exact() {
+        check("full-width beam == exact top-k", 10, |g| {
+            let n = g.usize_in(4, 60);
+            let d = g.usize_in(1, 5);
+            let k = g.usize_in(1, n);
+            let mut rng = Rng::new(g.case_seed ^ 7);
+            let emb = random_emb(&mut rng, n, d);
+            let map = QuadraticMap::new(d, g.f64_in(1.0, 150.0));
+            let mut tree = KernelTreeSampler::new(map.clone(), n, Some(g.usize_in(1, n)));
+            tree.reset_embeddings(&emb, n, d);
+            let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            // oracle: score every class, sort desc with id tie-break
+            let mut exact: Vec<(u32, f64)> = (0..n as u32)
+                .map(|c| (c, map.kernel(&h, &emb[c as usize * d..(c as usize + 1) * d])))
+                .collect();
+            exact.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            exact.truncate(k);
+            let got = tree.topk_beam(&h, k, tree.node_count());
+            assert_eq!(got.len(), k.min(n));
+            for (i, ((gc, gs), (ec, es))) in got.iter().zip(&exact).enumerate() {
+                assert!((gs - es).abs() < 1e-9 * es.max(1.0), "rank {i}: {gs} vs {es}");
+                assert_eq!(gc, ec, "rank {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn topk_beam_narrow_finds_dominant_class() {
+        // one class dwarfs the rest: even a width-1 beam must find it,
+        // because its leaf's mass dominates every level of the descent
+        let (n, d) = (64, 3);
+        let mut rng = Rng::new(41);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.05);
+        emb[17 * d..18 * d].copy_from_slice(&[4.0, -4.0, 4.0]);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        tree.reset_embeddings(&emb, n, d);
+        let h = vec![1.0f32, -1.0, 1.0];
+        let top = tree.topk_beam(&h, 1, 1);
+        assert_eq!(top[0].0, 17, "beam missed the dominant class: {top:?}");
+        // zero-mass guard: an all-zero map still returns k distinct classes
+        let ztree = KernelTreeSampler::new(ZeroMap { d: 3 }, 16, Some(2));
+        let zt = ztree.topk_beam(&[1.0, 2.0, 3.0], 4, 2);
+        assert_eq!(zt.len(), 4);
+        let mut ids: Vec<u32> = zt.iter().map(|&(c, _)| c).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "duplicate classes in top-k: {zt:?}");
     }
 }

@@ -12,6 +12,7 @@
 //! | unigram        | no           | no         | O(1) (alias)     | default fan-out     |
 //! | bigram         | context only | no         | O(1) (alias)     | default fan-out     |
 //! | quadratic tree | yes          | yes        | O(D log n) §3.2  | native (arena+pool) |
+//! | quadratic shard| yes          | yes        | O(D log n) + S   | native (router+pool)|
 //! | quadratic flat | yes          | yes        | O(n) (oracle)    | default fan-out     |
 //! | quartic flat   | yes          | yes        | O(n)             | default fan-out     |
 //! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   | default fan-out     |
@@ -314,13 +315,28 @@ pub fn build_sampler(
             n_classes,
             None,
         )),
+        // the serve layer's sharded tree as a drop-in training sampler:
+        // identical distribution to "quadratic" (property-tested), with
+        // per-shard parallel updates. S is pinned — NOT derived from the
+        // host's core count — because shard topology shapes how the
+        // row_rng streams are consumed, and results must stay
+        // bit-reproducible from (config, seed) on any machine. The update
+        // fan-out adapts to the machine instead (a cap, never affecting
+        // results); code that needs a different S constructs the sampler
+        // directly.
+        "quadratic-sharded" => Box::new(crate::serve::shard::ShardedKernelSampler::new(
+            QuadraticMap::new(d, alpha as f64),
+            n_classes,
+            4,
+            None,
+        )),
         "quadratic-flat" => {
             Box::new(FlatKernelSampler::new(KernelKind::Quadratic { alpha: alpha as f64 }))
         }
         "quartic" => Box::new(FlatKernelSampler::new(KernelKind::Quartic)),
         other => anyhow::bail!(
             "unknown sampler '{other}' (known: uniform, unigram, bigram, softmax, \
-             quadratic, quadratic-flat, quartic)"
+             quadratic, quadratic-sharded, quadratic-flat, quartic)"
         ),
     };
     if let Some(w) = w {

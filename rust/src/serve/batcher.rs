@@ -1,0 +1,323 @@
+//! Request micro-batching: coalesce concurrent single-row sampling
+//! requests into batched draws under a latency deadline.
+//!
+//! # Deadline contract
+//!
+//! A batch closes either because it reached `max_batch` rows or because
+//! its oldest row has waited `max_wait` — so `max_wait` bounds how long an
+//! *idle* worker lets a partial batch age before dispatching it. It is NOT
+//! an end-to-end queueing bound: when every worker is busy executing,
+//! requests wait until one returns to `next_batch`, however long that
+//! takes. The end-to-end budget is the service's concern — it reports
+//! per-request queued time and enforces `request_timeout` as the liveness
+//! backstop, and load generators count misses against their own budget.
+//!
+//! The queue is bounded (`queue_cap`): past it, [`MicroBatcher::submit`]
+//! fails fast with [`ServeError::Overloaded`] instead of letting latency
+//! grow without bound — load shedding is the serving-layer tradition.
+//!
+//! # Determinism
+//!
+//! Batching only *groups* work; it never changes results. Each request is
+//! stamped with an arrival sequence number, and workers draw request `seq`
+//! from the stream `row_rng(service_seed, seq)` — the batch API's per-row
+//! stream discipline from PR 1 — so a request's samples depend on its
+//! arrival index alone, not on how the batcher happened to coalesce it.
+
+use crate::sampler::Sample;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Micro-batcher tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Close a batch at this many rows.
+    pub max_batch: usize,
+    /// ... or when the oldest queued row has waited this long.
+    pub max_wait: Duration,
+    /// Reject submissions beyond this many queued rows.
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+        }
+    }
+}
+
+/// Serving-path errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded queue is full — shed load and retry later.
+    Overloaded,
+    /// The service is shutting down.
+    ShuttingDown,
+    /// Malformed request (`got` vs `want` query-embedding length). Rejected
+    /// at submit so a bad client cannot panic a worker and wedge the pool.
+    BadRequest { got: usize, want: usize },
+    /// Requested sample count is 0 or exceeds the service cap (also
+    /// rejected at submit: a pathological `m` must not abort a worker's
+    /// allocation).
+    BadSampleCount { got: usize, max: usize },
+    /// No response within the service's request timeout — the liveness
+    /// backstop for a wedged/dead worker pool (blocking callers must never
+    /// hang forever).
+    Timeout,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "serve queue full (overloaded)"),
+            ServeError::ShuttingDown => write!(f, "service shutting down"),
+            ServeError::BadRequest { got, want } => {
+                write!(f, "bad request: h has {got} floats, the index expects {want}")
+            }
+            ServeError::BadSampleCount { got, max } => {
+                write!(f, "bad request: m = {got} (must be 1..={max})")
+            }
+            ServeError::Timeout => write!(f, "no response within the request timeout"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One queued sampling request.
+pub struct Request {
+    /// Query embedding (owned: the caller moves on immediately).
+    pub h: Vec<f32>,
+    /// Number of negatives to draw.
+    pub m: usize,
+    /// Arrival sequence number — the request's RNG-stream identity.
+    pub seq: u64,
+    /// When the request entered the queue.
+    pub enqueued: Instant,
+    /// Where the worker sends the response.
+    pub tx: mpsc::Sender<SampleResponse>,
+}
+
+/// What the worker sends back.
+#[derive(Clone, Debug)]
+pub struct SampleResponse {
+    pub sample: Sample,
+    /// Snapshot generations the draw used (one per shard it touched is
+    /// overkill; the minimum generation across shards is what freshness
+    /// SLAs care about).
+    pub generation: u64,
+    /// Time spent queued before a worker picked the batch up.
+    pub queued: Duration,
+    /// Rows in the batch this request rode in (observability).
+    pub batch_rows: usize,
+}
+
+struct Queue {
+    items: VecDeque<Request>,
+    open: bool,
+}
+
+/// The coalescing queue. Execution lives in the service's workers: they
+/// loop on [`MicroBatcher::next_batch`], which blocks until a batch closes
+/// (size or deadline) and returns its rows.
+pub struct MicroBatcher {
+    cfg: BatcherConfig,
+    queue: Mutex<Queue>,
+    /// Signaled on submit and shutdown.
+    cv: Condvar,
+    seq: AtomicU64,
+    /// Requests rejected for overload (observability).
+    pub rejected: AtomicU64,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: BatcherConfig) -> Arc<MicroBatcher> {
+        assert!(cfg.max_batch > 0 && cfg.queue_cap > 0);
+        Arc::new(MicroBatcher {
+            cfg,
+            queue: Mutex::new(Queue { items: VecDeque::new(), open: true }),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue one request; returns the receiver for its response and the
+    /// sequence number assigned. Fails fast when the queue is at capacity
+    /// or the batcher has shut down.
+    pub fn submit(
+        &self,
+        h: Vec<f32>,
+        m: usize,
+    ) -> Result<(u64, mpsc::Receiver<SampleResponse>), ServeError> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        if !q.open {
+            return Err(ServeError::ShuttingDown);
+        }
+        if q.items.len() >= self.cfg.queue_cap {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        q.items.push_back(Request { h, m, seq, enqueued: Instant::now(), tx });
+        let full = q.items.len() >= self.cfg.max_batch;
+        drop(q);
+        // one waiter is enough for a single new row; a full batch may be
+        // worth a second worker if more rows are already queued behind it
+        if full {
+            self.cv.notify_all();
+        } else {
+            self.cv.notify_one();
+        }
+        Ok((seq, rx))
+    }
+
+    /// Block until a batch closes, then return its rows (oldest first).
+    /// `None` means shutdown with an empty queue — workers exit.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        loop {
+            if q.items.is_empty() {
+                if !q.open {
+                    return None;
+                }
+                q = self.cv.wait(q).expect("batcher queue poisoned");
+                continue;
+            }
+            // a batch is open: close on size, shutdown, or oldest-row age
+            if q.items.len() >= self.cfg.max_batch || !q.open {
+                break;
+            }
+            let age = q.items.front().expect("non-empty").enqueued.elapsed();
+            if age >= self.cfg.max_wait {
+                break;
+            }
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(q, self.cfg.max_wait - age)
+                .expect("batcher queue poisoned");
+            q = guard;
+        }
+        let take = q.items.len().min(self.cfg.max_batch);
+        Some(q.items.drain(..take).collect())
+    }
+
+    /// Stop accepting new requests and wake every worker; queued requests
+    /// are still drained (each worker keeps pulling until the queue is
+    /// empty, then sees `None`).
+    pub fn shutdown(&self) {
+        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        q.open = false;
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    /// Queued rows right now (observability).
+    pub fn depth(&self) -> usize {
+        self.queue.lock().expect("batcher queue poisoned").items.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_wait_ms: u64, cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let b = MicroBatcher::new(cfg(4, 200, 64));
+        for _ in 0..10 {
+            b.submit(vec![0.0], 1).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4, "batch must close at max_batch");
+        // sequence numbers are arrival order, oldest first
+        let seqs: Vec<u64> = batch.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn deadline_dispatches_partial_batch() {
+        let b = MicroBatcher::new(cfg(64, 10, 64));
+        let t0 = Instant::now();
+        b.submit(vec![1.0], 1).unwrap();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        // dispatched at ~max_wait, not at max_batch (generous upper slack
+        // for a loaded CI box; the point is it did not wait forever)
+        assert!(waited >= Duration::from_millis(9), "returned too early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "deadline ignored: {waited:?}");
+    }
+
+    #[test]
+    fn overload_rejects_and_counts() {
+        let b = MicroBatcher::new(cfg(8, 50, 3));
+        for _ in 0..3 {
+            b.submit(vec![0.0], 1).unwrap();
+        }
+        assert_eq!(b.submit(vec![0.0], 1).unwrap_err(), ServeError::Overloaded);
+        assert_eq!(b.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let b = MicroBatcher::new(cfg(2, 500, 64));
+        for _ in 0..3 {
+            b.submit(vec![0.0], 1).unwrap();
+        }
+        b.shutdown();
+        assert_eq!(b.submit(vec![0.0], 1).unwrap_err(), ServeError::ShuttingDown);
+        // queued rows still come out, then None
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none(), "None must be sticky");
+    }
+
+    #[test]
+    fn concurrent_submitters_each_get_unique_seq() {
+        let b = MicroBatcher::new(cfg(16, 5, 1024));
+        let mut seqs: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let b = &b;
+                    scope.spawn(move || {
+                        (0..50).map(|_| b.submit(vec![0.5], 2).unwrap().0).collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        seqs.sort_unstable();
+        let expect: Vec<u64> = (0..400).collect();
+        assert_eq!(seqs, expect, "sequence numbers must be unique and dense");
+        // drain everything so nothing leaks a blocked worker
+        b.shutdown();
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+        }
+        assert_eq!(total, 400);
+    }
+}

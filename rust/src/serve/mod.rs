@@ -1,0 +1,300 @@
+//! Online serving: snapshot-isolated concurrent sampling over the kernel
+//! tree — the layer that turns the training-time sampler into a query
+//! service (ROADMAP: "heavy traffic from millions of users").
+//!
+//! The kernel tree is a great *training* structure but was single-writer:
+//! nothing could draw while `update_many` swept the arena. This subsystem
+//! makes the same index serve concurrent traffic:
+//!
+//! * [`snapshot`] — epoch snapshots: immutable `Arc`'d tree generations
+//!   behind an atomic publish point ([`SnapshotStore`]); readers are
+//!   wait-free in steady state, and the [`TreePublisher`] double-buffers
+//!   arenas (reclaim + replay, no rebuild, no steady-state copy).
+//! * [`shard`] — [`ShardedKernelSampler`]: the class space split into S
+//!   sub-trees behind a router that draws shards from the root-mass CDF
+//!   and rescales per-shard q so the merged proposal distribution is
+//!   exactly the unsharded eq. (8) one (property-tested). Shards update in
+//!   parallel and publish independently.
+//! * [`batcher`] — [`MicroBatcher`]: a bounded queue that coalesces
+//!   concurrent single-row requests into batched draws under a latency
+//!   deadline, preserving per-request determinism via `row_rng` streams.
+//! * [`topk`] — beam retrieval: approximate top-k classes by kernel score
+//!   over the same arenas (inference-style recommendation queries),
+//!   sharing the draw path's zero-mass guards.
+//! * [`service`] — [`SamplingService`]: shard snapshot stores + batcher +
+//!   worker pool behind one façade, and the [`ShardSet`] writer bundle.
+//!
+//! The `kss serve` subcommand drives the whole stack with the closed-loop
+//! load generator below ([`run_load_test`]); `benches/serve_throughput.rs`
+//! measures reader scaling and publish stalls.
+
+pub mod batcher;
+pub mod service;
+pub mod shard;
+pub mod snapshot;
+pub mod topk;
+
+pub use batcher::{BatcherConfig, MicroBatcher, SampleResponse, ServeError};
+pub use service::{SamplingService, ServiceConfig, ShardSet};
+pub use shard::{
+    draw_from_shards, shard_of_class, shard_offsets, split_updates_by_shard, ShardedKernelSampler,
+};
+pub use snapshot::{
+    PublishReport, PublishStats, SnapshotReader, SnapshotStore, TreePublisher, TreeSnapshot,
+};
+pub use topk::{merge_shard_topk, topk_over_snapshots, Hit, TopKConfig};
+
+use crate::sampler::kernel::QuadraticMap;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use std::time::{Duration, Instant};
+
+/// Closed-loop load-test parameters (the `kss serve` subcommand).
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Catalog size (classes) and embedding dim of the synthetic index.
+    pub n_classes: usize,
+    pub d: usize,
+    /// Kernel α (eq. 10).
+    pub alpha: f64,
+    pub shards: usize,
+    pub workers: usize,
+    /// Closed-loop client threads; each issues `requests` sequentially.
+    pub clients: usize,
+    pub requests: usize,
+    /// Negatives per request.
+    pub m: usize,
+    /// Top-k retrieval calls interleaved per client (every 16th request).
+    pub topk: TopKConfig,
+    pub batcher: BatcherConfig,
+    /// Writer cadence: classes updated + published per writer iteration
+    /// (0 disables the writer).
+    pub updates_per_publish: usize,
+    /// End-to-end latency budget a request must meet (queue + execute).
+    pub deadline: Duration,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            n_classes: 10_000,
+            d: 16,
+            alpha: 100.0,
+            shards: 4,
+            workers: 2,
+            clients: 4,
+            requests: 1_000,
+            m: 8,
+            topk: TopKConfig::default(),
+            batcher: BatcherConfig::default(),
+            updates_per_publish: 32,
+            deadline: Duration::from_millis(20),
+            seed: 42,
+        }
+    }
+}
+
+/// What the load test observed.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub completed: u64,
+    pub rejected: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// End-to-end request latency (submit → response received), seconds.
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_max_s: f64,
+    /// Fraction of completed requests over the deadline.
+    pub deadline_miss_rate: f64,
+    /// Publishes performed while the load ran, and their costs.
+    pub publishes: u64,
+    pub publish_stats: PublishStats,
+    pub publish_build_p95_s: f64,
+    /// Worst swap-lock hold time — the only interval a reader can contend
+    /// with a publish.
+    pub publish_swap_max_s: f64,
+    pub topk_calls: u64,
+}
+
+/// Drive a synthetic sharded index with closed-loop clients while a writer
+/// continuously updates and publishes. Returns the observed latency /
+/// throughput / publish profile; the caller (CLI, CI smoke job) decides
+/// pass/fail against its own thresholds.
+pub fn run_load_test(cfg: &LoadGenConfig) -> LoadReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut emb = vec![0.0f32; cfg.n_classes * cfg.d];
+    rng.fill_normal(&mut emb, 0.3);
+    let mut set = ShardSet::new(
+        QuadraticMap::new(cfg.d, cfg.alpha),
+        cfg.n_classes,
+        cfg.shards,
+        None,
+        Some(&emb),
+    );
+    let service_cfg = ServiceConfig {
+        workers: cfg.workers,
+        batcher: cfg.batcher,
+        seed: cfg.seed ^ 0x5E17E,
+        topk: cfg.topk,
+        max_m: cfg.m.max(4096),
+        request_timeout: Duration::from_secs(30),
+    };
+    let service = SamplingService::start(set.stores(), set.offsets().to_vec(), service_cfg);
+
+    let stop_writer = std::sync::atomic::AtomicBool::new(false);
+    let mut latencies = Samples::new();
+    let mut completed = 0u64;
+    let mut misses = 0u64;
+    let mut topk_calls = 0u64;
+    let mut build_times = Samples::new();
+    let mut swap_max = 0.0f64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        // closed-loop clients
+        let mut handles = Vec::new();
+        for client in 0..cfg.clients as u64 {
+            let service = &service;
+            let (d, m, requests, deadline, topk) =
+                (cfg.d, cfg.m, cfg.requests, cfg.deadline, cfg.topk);
+            let seed = cfg.seed;
+            handles.push(scope.spawn(move || {
+                let mut crng = Rng::new(seed ^ (0xC11E + client));
+                let mut lats = Vec::with_capacity(requests);
+                let mut done = 0u64;
+                let mut missed = 0u64;
+                let mut topks = 0u64;
+                for i in 0..requests {
+                    let h: Vec<f32> = (0..d).map(|_| crng.normal_f32(0.0, 1.0)).collect();
+                    if topk.k > 0 && i % 16 == 15 {
+                        let hits = service.topk(&h).expect("well-formed retrieval rejected");
+                        assert!(!hits.is_empty(), "retrieval returned nothing");
+                        topks += 1;
+                        continue;
+                    }
+                    let t = Instant::now();
+                    match service.sample_blocking(h, m) {
+                        Ok(resp) => {
+                            let lat = t.elapsed();
+                            assert_eq!(resp.sample.classes.len(), m);
+                            lats.push(lat.as_secs_f64());
+                            done += 1;
+                            if lat > deadline {
+                                missed += 1;
+                            }
+                        }
+                        Err(ServeError::Overloaded) => {
+                            // shed: back off a little, closed loop retries
+                            // implicitly on the next iteration
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(ServeError::ShuttingDown) => break,
+                        // the load generator only builds well-formed
+                        // requests; a validation reject or a request
+                        // timeout means the stack is broken — fail loud
+                        // (this is the CI smoke gate)
+                        Err(e) => panic!("request failed unexpectedly: {e}"),
+                    }
+                }
+                (lats, done, missed, topks)
+            }));
+        }
+        // writer: update random classes, publish per shard, until clients
+        // finish
+        let writer = (cfg.updates_per_publish > 0).then(|| {
+            let stop_writer = &stop_writer;
+            let set = &mut set;
+            let k = cfg.updates_per_publish;
+            let seed = cfg.seed;
+            scope.spawn(move || {
+                let mut wrng = Rng::new(seed ^ 0x3217E4);
+                let mut builds = Samples::new();
+                let mut swap_worst = 0.0f64;
+                while !stop_writer.load(std::sync::atomic::Ordering::Relaxed) {
+                    for report in set.publish_random_batch(&mut wrng, k) {
+                        builds.push(report.build_s);
+                        swap_worst = swap_worst.max(report.swap_s);
+                    }
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                (builds, swap_worst)
+            })
+        });
+        for handle in handles {
+            let (lats, done, missed, topks) = handle.join().expect("client panicked");
+            for l in lats {
+                latencies.push(l);
+            }
+            completed += done;
+            misses += missed;
+            topk_calls += topks;
+        }
+        stop_writer.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(w) = writer {
+            let (builds, swap_worst) = w.join().expect("writer panicked");
+            build_times = builds;
+            swap_max = swap_worst;
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let publish_stats = set.stats();
+    let lat = latencies.percentiles(&[50.0, 95.0, 99.0, 100.0]);
+    let report = LoadReport {
+        completed,
+        rejected: service.rejected(),
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        latency_p50_s: lat[0],
+        latency_p95_s: lat[1],
+        latency_p99_s: lat[2],
+        latency_max_s: lat[3],
+        deadline_miss_rate: if completed == 0 { 1.0 } else { misses as f64 / completed as f64 },
+        publishes: publish_stats.publishes,
+        publish_stats,
+        publish_build_p95_s: build_times.p95(),
+        publish_swap_max_s: swap_max,
+        topk_calls,
+    };
+    service.shutdown();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_test_smoke() {
+        // tiny end-to-end pass of the whole serving stack: every request
+        // answered, writer published, nothing panicked
+        let cfg = LoadGenConfig {
+            n_classes: 400,
+            d: 4,
+            shards: 3,
+            workers: 2,
+            clients: 3,
+            requests: 60,
+            m: 4,
+            updates_per_publish: 8,
+            deadline: Duration::from_secs(5),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 512,
+            },
+            ..Default::default()
+        };
+        let report = run_load_test(&cfg);
+        // 1/16 of requests are topk calls
+        assert!(report.completed > 0 && report.topk_calls > 0, "{report:?}");
+        assert_eq!(
+            report.completed + report.topk_calls,
+            (cfg.clients * cfg.requests) as u64 - report.rejected,
+        );
+        assert!(report.publishes > 0, "writer never published: {report:?}");
+        assert!(report.deadline_miss_rate < 1.0);
+        assert!(report.latency_p50_s >= 0.0 && report.latency_p95_s >= report.latency_p50_s);
+    }
+}

@@ -1,0 +1,537 @@
+//! The sampling service: shard snapshot stores + micro-batcher + worker
+//! pool behind one façade, and the [`ShardSet`] writer that feeds it.
+//!
+//! Data flow:
+//!
+//! ```text
+//!          trainer / writer thread                     clients
+//!                   │                                     │ submit(h, m)
+//!        ShardSet::update_and_publish              MicroBatcher (bounded,
+//!          │ per-shard update_many                   deadline-coalesced)
+//!          ▼                                              │ next_batch
+//!   TreePublisher ×S ──publish──► SnapshotStore ×S ──► workers ×W
+//!   (double-buffered arenas)      (atomic swap)     SnapshotReader per shard
+//!                                                    draw_from_shards / topk
+//! ```
+//!
+//! Workers refresh their per-shard [`SnapshotReader`]s once per batch, so
+//! every request in a batch samples one consistent generation set; a
+//! publish lands between batches, never inside one. Request `seq` draws
+//! from `row_rng(service_seed, seq)` regardless of how it was batched.
+
+use crate::sampler::kernel::tree::TreeView;
+use crate::sampler::kernel::FeatureMap;
+use crate::sampler::{row_rng, Sample};
+use crate::serve::batcher::{BatcherConfig, MicroBatcher, SampleResponse, ServeError};
+use crate::serve::shard::{
+    draw_from_shards, scratch_for, split_updates_by_shard, ShardedKernelSampler,
+};
+use crate::serve::snapshot::{
+    PublishReport, PublishStats, SnapshotReader, SnapshotStore, TreePublisher, TreeSnapshot,
+};
+use crate::serve::topk::{topk_over_snapshots, Hit, TopKConfig};
+use crate::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Writer-side bundle: one [`TreePublisher`] per shard, with global-class
+/// routing — the serving counterpart of [`ShardedKernelSampler`], updates
+/// routed and published per shard so a hot shard never stalls the rest.
+pub struct ShardSet<M: FeatureMap + Clone> {
+    publishers: Vec<TreePublisher<M>>,
+    offsets: Vec<u32>,
+    d: usize,
+}
+
+impl<M: FeatureMap + Clone> ShardSet<M> {
+    /// Build S shard trees over `n` classes (optionally seeded with the
+    /// embedding table `w`, flat n×d) and publish each as generation 0.
+    pub fn new(
+        map: M,
+        n: usize,
+        shards: usize,
+        leaf_size: Option<usize>,
+        w: Option<&[f32]>,
+    ) -> Self {
+        let d = map.d();
+        let mut sampler = ShardedKernelSampler::new(map, n, shards, leaf_size);
+        if let Some(w) = w {
+            sampler.reset_embeddings(w, n, d);
+        }
+        let (trees, offsets) = sampler.into_shards();
+        ShardSet {
+            publishers: trees.into_iter().map(TreePublisher::new).collect(),
+            offsets,
+            d,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.publishers.len()
+    }
+
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// The publish points, one per shard, to hand to
+    /// [`SamplingService::start`].
+    pub fn stores(&self) -> Vec<Arc<SnapshotStore<TreeSnapshot<M>>>> {
+        self.publishers.iter().map(|p| p.store()).collect()
+    }
+
+    /// Route a global-class update batch (`classes` sorted + dedup, `rows`
+    /// flat len×d) to the owning shards and publish each touched shard's
+    /// next generation. Untouched shards keep their current generation —
+    /// the per-shard publish this layout exists for.
+    pub fn update_and_publish(&mut self, classes: &[usize], rows: &[f32]) -> Vec<PublishReport> {
+        let parts = split_updates_by_shard(&self.offsets, self.d, classes, rows);
+        let mut reports = Vec::new();
+        for (publisher, (cl, rw)) in self.publishers.iter_mut().zip(&parts) {
+            if !cl.is_empty() {
+                reports.push(publisher.update_and_publish(cl, rw));
+            }
+        }
+        reports
+    }
+
+    /// One synthetic writer iteration, shared by the load generator and
+    /// the serve bench: draw `k` random classes (sorted + dedup), generate
+    /// fresh N(0, 0.3) rows, and publish the touched shards.
+    pub fn publish_random_batch(&mut self, rng: &mut Rng, k: usize) -> Vec<PublishReport> {
+        let n = *self.offsets.last().expect("offsets non-empty") as usize;
+        let mut classes: Vec<usize> = (0..k.max(1)).map(|_| rng.range(0, n)).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        let mut rows = vec![0.0f32; classes.len() * self.d];
+        rng.fill_normal(&mut rows, 0.3);
+        self.update_and_publish(&classes, &rows)
+    }
+
+    /// Publish-path counters summed over all shards.
+    pub fn stats(&self) -> PublishStats {
+        let mut total = PublishStats::default();
+        for p in &self.publishers {
+            total.publishes += p.stats.publishes;
+            total.reclaimed += p.stats.reclaimed;
+            total.copied += p.stats.copied;
+            total.replayed_batches += p.stats.replayed_batches;
+        }
+        total
+    }
+}
+
+/// Service tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads executing batches.
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    /// Seed of the per-request RNG streams (`row_rng(seed, seq)`).
+    pub seed: u64,
+    pub topk: TopKConfig,
+    /// Largest accepted per-request sample count (submit-time guard: a
+    /// pathological `m` must fail fast, not abort a worker's allocation).
+    pub max_m: usize,
+    /// Liveness backstop for blocking callers: `sample_blocking` gives up
+    /// with [`ServeError::Timeout`] after this long, so a dead worker pool
+    /// wedges no client forever. Generous by default — it is a backstop,
+    /// not the latency SLA (that is the batcher deadline + load budget).
+    pub request_timeout: std::time::Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            seed: 0x5E17E,
+            topk: TopKConfig::default(),
+            max_m: 4096,
+            request_timeout: std::time::Duration::from_secs(30),
+        }
+    }
+}
+
+/// Concurrent sampling service over a shard set's snapshot stores.
+pub struct SamplingService<M: FeatureMap + 'static> {
+    stores: Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>,
+    offsets: Arc<Vec<u32>>,
+    batcher: Arc<MicroBatcher>,
+    workers: Vec<JoinHandle<()>>,
+    topk_cfg: TopKConfig,
+    /// Expected query-embedding length; requests are validated at submit
+    /// so a malformed `h` can never panic a worker.
+    d: usize,
+    /// Per-request sample-count cap (see [`ServiceConfig::max_m`]).
+    max_m: usize,
+    request_timeout: std::time::Duration,
+}
+
+impl<M: FeatureMap + 'static> SamplingService<M> {
+    /// Spawn the worker pool over the given per-shard publish points.
+    pub fn start(
+        stores: Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>,
+        offsets: Vec<u32>,
+        cfg: ServiceConfig,
+    ) -> SamplingService<M> {
+        assert_eq!(offsets.len(), stores.len() + 1, "offsets must bracket every shard");
+        let d = stores[0].load().1.tree.embed_dim();
+        let batcher = MicroBatcher::new(cfg.batcher);
+        let offsets = Arc::new(offsets);
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
+                let batcher = batcher.clone();
+                let stores = stores.clone();
+                let offsets = offsets.clone();
+                std::thread::Builder::new()
+                    .name(format!("kss-serve-{w}"))
+                    .spawn(move || worker_loop(&batcher, &stores, &offsets, cfg.seed))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        SamplingService {
+            stores,
+            offsets,
+            batcher,
+            workers,
+            topk_cfg: cfg.topk,
+            d,
+            max_m: cfg.max_m.max(1),
+            request_timeout: cfg.request_timeout,
+        }
+    }
+
+    /// Enqueue a sampling request; returns its sequence number and the
+    /// response receiver. Fails fast under overload (bounded queue) and on
+    /// malformed requests (wrong `h` length).
+    pub fn submit(
+        &self,
+        h: Vec<f32>,
+        m: usize,
+    ) -> Result<(u64, mpsc::Receiver<SampleResponse>), ServeError> {
+        if h.len() != self.d {
+            return Err(ServeError::BadRequest { got: h.len(), want: self.d });
+        }
+        if m == 0 || m > self.max_m {
+            return Err(ServeError::BadSampleCount { got: m, max: self.max_m });
+        }
+        self.batcher.submit(h, m)
+    }
+
+    /// Submit and block for the response (the closed-loop client path).
+    /// Bounded wait: a wedged or dead worker pool surfaces as
+    /// [`ServeError::Timeout`] instead of hanging the caller forever.
+    pub fn sample_blocking(&self, h: Vec<f32>, m: usize) -> Result<SampleResponse, ServeError> {
+        let (_, rx) = self.submit(h, m)?;
+        rx.recv_timeout(self.request_timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => ServeError::Timeout,
+            mpsc::RecvTimeoutError::Disconnected => ServeError::ShuttingDown,
+        })
+    }
+
+    /// Top-k retrieval against the freshest published generation of every
+    /// shard. Served inline (not through the batcher): retrieval reads one
+    /// consistent pinned snapshot set and needs no RNG stream bookkeeping.
+    ///
+    /// This path takes each store's short swap lock (one `Arc` clone per
+    /// shard) instead of a wait-free cached reader — a deliberate trade:
+    /// the beam search dominates a retrieval call by orders of magnitude,
+    /// `&self` here would force a shared mutable cache (its own lock), and
+    /// the high-QPS sample path already goes through the workers' wait-free
+    /// [`SnapshotReader`]s. Revisit if retrieval ever becomes the dominant
+    /// traffic class.
+    pub fn topk(&self, h: &[f32]) -> Result<Vec<Hit>, ServeError> {
+        if h.len() != self.d {
+            return Err(ServeError::BadRequest { got: h.len(), want: self.d });
+        }
+        let snaps: Vec<Arc<TreeSnapshot<M>>> =
+            self.stores.iter().map(|s| s.load().1).collect();
+        Ok(topk_over_snapshots(&snaps, &self.offsets, h, self.topk_cfg))
+    }
+
+    /// Requests shed for overload so far.
+    pub fn rejected(&self) -> u64 {
+        self.batcher.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Queued rows right now.
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Drain the queue, stop the workers, and propagate any worker panic.
+    pub fn shutdown(mut self) {
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            if let Err(payload) = w.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+impl<M: FeatureMap + 'static> Drop for SamplingService<M> {
+    fn drop(&mut self) {
+        // unblock workers if the service is dropped without shutdown();
+        // they drain and exit on their own (drop does not join)
+        self.batcher.shutdown();
+    }
+}
+
+/// One worker: pull closed batches, refresh shard snapshots once per
+/// batch, draw every request from its own `row_rng(seed, seq)` stream.
+fn worker_loop<M: FeatureMap>(
+    batcher: &MicroBatcher,
+    stores: &[Arc<SnapshotStore<TreeSnapshot<M>>>],
+    offsets: &[u32],
+    seed: u64,
+) {
+    let mut readers: Vec<SnapshotReader<TreeSnapshot<M>>> =
+        stores.iter().map(|s| SnapshotReader::new(s.clone())).collect();
+    // scratch geometry (node counts, φ dim) is fixed across generations,
+    // so one state serves the worker for its whole life
+    let mut state = {
+        let views: Vec<TreeView<'_, M>> =
+            readers.iter().map(|r| r.pinned().tree.view()).collect();
+        scratch_for(&views)
+    };
+    while let Some(batch) = batcher.next_batch() {
+        let picked = Instant::now();
+        for r in readers.iter_mut() {
+            r.current();
+        }
+        // pin this batch's generation set (Arc clones) so a concurrent
+        // publish cannot swap trees out from under the views below
+        let snaps: Vec<Arc<TreeSnapshot<M>>> =
+            readers.iter().map(|r| r.pinned().clone()).collect();
+        let generation = snaps.iter().map(|s| s.generation).min().unwrap_or(0);
+        // read-only views: workers cannot reach an update path by type
+        let trees: Vec<TreeView<'_, M>> = snaps.iter().map(|s| s.tree.view()).collect();
+        let batch_rows = batch.len();
+        for req in batch {
+            let mut rng = row_rng(seed, req.seq as usize);
+            let mut sample = Sample::with_capacity(req.m);
+            draw_from_shards(&trees, offsets, &req.h, req.m, &mut state, &mut rng, &mut sample);
+            // a dropped receiver (client gave up) is not a worker error
+            let _ = req.tx.send(SampleResponse {
+                sample,
+                generation,
+                queued: picked.duration_since(req.enqueued),
+                batch_rows,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::sampler::{SampleInput, Sampler};
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn shard_set(
+        n: usize,
+        d: usize,
+        shards: usize,
+        seed: u64,
+    ) -> (ShardSet<QuadraticMap>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, shards, Some(4), Some(&emb));
+        (set, emb)
+    }
+
+    fn quick_cfg(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 1024,
+            },
+            seed: 0xFACE,
+            topk: TopKConfig { k: 5, beam_width: 64 },
+            max_m: 64,
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+
+    #[test]
+    fn end_to_end_requests_get_valid_samples() {
+        let (n, d) = (60, 3);
+        let (set, emb) = shard_set(n, d, 4, 1);
+        let service = SamplingService::start(set.stores(), set.offsets().to_vec(), quick_cfg(3));
+        let mut rng = Rng::new(2);
+        // oracle distribution for q checks
+        let map = QuadraticMap::new(d, 100.0);
+        std::thread::scope(|scope| {
+            for client in 0..4u64 {
+                let service = &service;
+                let emb = &emb;
+                let map = &map;
+                scope.spawn(move || {
+                    let mut crng = Rng::new(50 + client);
+                    for _ in 0..40 {
+                        let h: Vec<f32> = (0..d).map(|_| crng.normal_f32(0.0, 1.0)).collect();
+                        let resp = service.sample_blocking(h.clone(), 6).unwrap();
+                        assert_eq!(resp.sample.classes.len(), 6);
+                        let weights: Vec<f64> = (0..n)
+                            .map(|j| map.kernel(&h, &emb[j * d..(j + 1) * d]))
+                            .collect();
+                        let z: f64 = weights.iter().sum();
+                        for (&c, &q) in resp.sample.classes.iter().zip(&resp.sample.q) {
+                            assert!((c as usize) < n);
+                            let want = weights[c as usize] / z;
+                            assert!((q - want).abs() < 1e-9, "q {q} vs {want}");
+                        }
+                        assert!(resp.batch_rows >= 1);
+                    }
+                });
+            }
+        });
+        // retrieval against the same snapshots
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let hits = service.topk(&h).unwrap();
+        assert_eq!(hits.len(), 5);
+        let best = (0..n)
+            .max_by(|&a, &b| {
+                let ka = map.kernel(&h, &emb[a * d..(a + 1) * d]);
+                let kb = map.kernel(&h, &emb[b * d..(b + 1) * d]);
+                ka.total_cmp(&kb)
+            })
+            .unwrap();
+        assert_eq!(hits[0].class as usize, best, "wide beam must find the argmax");
+        service.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_at_submit() {
+        // a wrong-length h must fail fast, not panic a worker and wedge
+        // every later request
+        let (set, _) = shard_set(20, 3, 2, 11);
+        let service = SamplingService::start(set.stores(), set.offsets().to_vec(), quick_cfg(1));
+        let err = service.submit(vec![0.0; 5], 4).unwrap_err();
+        assert_eq!(err, crate::serve::ServeError::BadRequest { got: 5, want: 3 });
+        let err = service.topk(&[0.0; 2]).unwrap_err();
+        assert_eq!(err, crate::serve::ServeError::BadRequest { got: 2, want: 3 });
+        // so must a pathological sample count (would abort the worker's
+        // allocation otherwise)
+        let err = service.submit(vec![0.0; 3], usize::MAX).unwrap_err();
+        assert_eq!(err, crate::serve::ServeError::BadSampleCount { got: usize::MAX, max: 64 });
+        let err = service.submit(vec![0.0; 3], 0).unwrap_err();
+        assert_eq!(err, crate::serve::ServeError::BadSampleCount { got: 0, max: 64 });
+        // the pool is still healthy afterwards
+        let resp = service.sample_blocking(vec![0.1, -0.2, 0.3], 4).unwrap();
+        assert_eq!(resp.sample.classes.len(), 4);
+        service.shutdown();
+    }
+
+    #[test]
+    fn request_results_depend_on_seq_not_batching() {
+        // the same request stream must produce identical samples whether
+        // requests arrive one by one (batches of 1) or all at once
+        let (set, _) = shard_set(32, 2, 2, 3);
+        let hs: Vec<Vec<f32>> = {
+            let mut rng = Rng::new(4);
+            (0..12).map(|_| (0..2).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect()
+        };
+        let run = |trickle: bool| -> Vec<(Vec<u32>, Vec<f64>)> {
+            let cfg = ServiceConfig {
+                batcher: BatcherConfig {
+                    max_batch: if trickle { 1 } else { 64 },
+                    max_wait: Duration::from_millis(if trickle { 0 } else { 20 }),
+                    queue_cap: 256,
+                },
+                workers: if trickle { 1 } else { 2 },
+                ..quick_cfg(1)
+            };
+            let service = SamplingService::start(set.stores(), set.offsets().to_vec(), cfg);
+            let mut rxs = Vec::new();
+            for h in &hs {
+                rxs.push(service.submit(h.clone(), 4).unwrap().1);
+            }
+            let out = rxs
+                .into_iter()
+                .map(|rx| {
+                    let r = rx.recv().unwrap();
+                    (r.sample.classes, r.sample.q)
+                })
+                .collect();
+            service.shutdown();
+            out
+        };
+        let coalesced = run(false);
+        let trickled = run(true);
+        assert_eq!(coalesced, trickled, "batch composition changed results");
+    }
+
+    #[test]
+    fn published_updates_become_visible_to_new_requests() {
+        let (n, d) = (24, 2);
+        let (mut set, _) = shard_set(n, d, 3, 5);
+        let service = SamplingService::start(set.stores(), set.offsets().to_vec(), quick_cfg(2));
+        // blow up one class's alignment and publish only its shard
+        let target = 13usize;
+        let w_new = vec![6.0f32, -6.0];
+        let reports = set.update_and_publish(&[target], &w_new);
+        assert_eq!(reports.len(), 1, "only the owning shard publishes");
+        let h = vec![1.0f32, -1.0];
+        // the updated class now dominates retrieval
+        let hits = service.topk(&h).unwrap();
+        assert_eq!(hits[0].class as usize, target, "{hits:?}");
+        // and sampling mass concentrates on it
+        let resp = service.sample_blocking(h.clone(), 64).unwrap();
+        let hit_count = resp.sample.classes.iter().filter(|&&c| c as usize == target).count();
+        assert!(hit_count > 16, "updated class undersampled: {hit_count}/64");
+        assert!(resp.sample.q.iter().all(|&q| q > 0.0 && q.is_finite()));
+        service.shutdown();
+    }
+
+    #[test]
+    fn shard_set_matches_sharded_sampler_distribution() {
+        // the writer bundle must produce the same distribution as the
+        // training-side ShardedKernelSampler it was built from
+        let (n, d, shards) = (40, 3, 4);
+        let mut rng = Rng::new(7);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut sampler =
+            ShardedKernelSampler::new(QuadraticMap::new(d, 100.0), n, shards, Some(4));
+        sampler.reset_embeddings(&emb, n, d);
+        let mut set =
+            ShardSet::new(QuadraticMap::new(d, 100.0), n, shards, Some(4), Some(&emb));
+        // a couple of update rounds through both paths
+        for _round in 0..3 {
+            let mut classes: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut classes);
+            classes.truncate(5);
+            classes.sort_unstable();
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 0.6);
+            sampler.update_many(&classes, &rows);
+            set.update_and_publish(&classes, &rows);
+        }
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let stores = set.stores();
+        for c in 0..n as u32 {
+            let want = sampler.prob(&input, c).unwrap();
+            // closed form over the published snapshots
+            let sid = crate::serve::shard::shard_of_class(set.offsets(), c as usize);
+            let local = (c - set.offsets()[sid]) as usize;
+            let snaps: Vec<_> = stores.iter().map(|s| s.load().1).collect();
+            let phi = snaps[0].tree.phi_query(&h);
+            let total: f64 = snaps.iter().map(|s| s.tree.partition(&phi).max(0.0)).sum();
+            let k = snaps[sid].tree.feature_map().kernel(&h, snaps[sid].tree.emb_row(local));
+            let got = k / total;
+            assert!((got - want).abs() < 1e-9, "class {c}: {got} vs {want}");
+        }
+        assert!(set.stats().publishes >= 3);
+    }
+}

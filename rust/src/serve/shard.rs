@@ -1,0 +1,567 @@
+//! Sharded kernel sampling: S independent sub-trees behind a mass router.
+//!
+//! The class space `[0, n)` is split into S contiguous ranges; shard `s`
+//! owns a [`KernelTreeSampler`] over its local ids `[0, n_s)`. A draw picks
+//! the shard from the top-level CDF over the per-shard root masses
+//! `M_s = ⟨φ(h), z_s(root)⟩`, then descends inside it, and rescales the
+//! shard-local probability:
+//!
+//! ```text
+//! q(j) = P(shard s) · P(j | shard s) = (M_s / Σ_t M_t) · (K(h, w_j) / M_s)
+//!      = K(h, w_j) / Σ_t M_t
+//! ```
+//!
+//! — exactly the unsharded eq. (8) distribution, since the unsharded root
+//! mass is the same sum `Σ_t M_t` (up to f64 summation order; the property
+//! test pins the tolerance). The zero-mass guards compose the same way:
+//! when `Σ M_t` degenerates the router falls back to a uniform shard choice
+//! with probability 1/S, the shard's own guarded descent supplies a
+//! strictly positive conditional, and the reported q is the product of the
+//! probabilities actually used — so q > 0 always, sharded or not.
+//!
+//! Shards are independent for writes too: `update_many` routes each class
+//! to its shard (parallel across shards via [`update_many_parallel`]), and
+//! the serving layer gives every shard its own snapshot store so a hot
+//! shard can publish without touching the others.
+//!
+//! [`update_many_parallel`]: ShardedKernelSampler::update_many_parallel
+
+use crate::sampler::kernel::tree::{
+    sanitize_mass, step_down_to_positive, DrawScratch, KernelTreeSampler, TreeView,
+};
+use crate::sampler::kernel::FeatureMap;
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{par_chunks_mut, Pool};
+use anyhow::Result;
+
+/// Contiguous shard boundaries over `n` classes: `offsets[s]..offsets[s+1]`
+/// is shard `s`'s global class range (as even as integer division allows).
+pub fn shard_offsets(n: usize, shards: usize) -> Vec<u32> {
+    let shards = shards.clamp(1, n.max(1));
+    (0..=shards).map(|s| (s * n / shards) as u32).collect()
+}
+
+/// Shard id owning a global class under contiguous `offsets` — the single
+/// routing rule shared by the sampler, the writer bundle
+/// ([`crate::serve::ShardSet`]) and retrieval, so a layout change cannot
+/// desynchronize them.
+#[inline]
+pub fn shard_of_class(offsets: &[u32], class: usize) -> usize {
+    debug_assert!(class < *offsets.last().expect("offsets non-empty") as usize);
+    offsets.partition_point(|&o| (o as usize) <= class) - 1
+}
+
+/// Split a global-class update batch (`classes` sorted + dedup, `rows` flat
+/// len×d) into per-shard `(local classes, rows)` parts, empty where a shard
+/// is untouched.
+pub fn split_updates_by_shard(
+    offsets: &[u32],
+    d: usize,
+    classes: &[usize],
+    rows: &[f32],
+) -> Vec<(Vec<usize>, Vec<f32>)> {
+    debug_assert_eq!(rows.len(), classes.len() * d);
+    let mut parts: Vec<(Vec<usize>, Vec<f32>)> =
+        (0..offsets.len() - 1).map(|_| (Vec::new(), Vec::new())).collect();
+    for (i, &class) in classes.iter().enumerate() {
+        let sid = shard_of_class(offsets, class);
+        parts[sid].0.push(class - offsets[sid] as usize);
+        parts[sid].1.extend_from_slice(&rows[i * d..(i + 1) * d]);
+    }
+    parts
+}
+
+/// Reusable per-caller router state: one [`DrawScratch`] per shard plus the
+/// φ(h)/mass/CDF buffers. Checked out of a freelist like the tree's own
+/// scratches, so steady-state sampling allocates nothing.
+pub struct ShardScratch {
+    phi_h: Vec<f64>,
+    scratches: Vec<DrawScratch>,
+    /// Whether shard s's scratch is primed for the current example.
+    primed: Vec<bool>,
+    /// Raw per-shard root partitions (reused to prime a shard's scratch
+    /// without recomputing the O(D) dot), their sanitized versions, and
+    /// the sanitized inclusive prefix sums the router draws from.
+    raw_totals: Vec<f64>,
+    masses: Vec<f64>,
+    cum: Vec<f64>,
+}
+
+/// Draw `m` samples for one example from a set of shard trees, writing
+/// `(global class, merged q)` into `out` (appended, not cleared — the
+/// caller owns clearing). Shared by [`ShardedKernelSampler`] and the serve
+/// workers, which operate on snapshot trees. Takes read-only [`TreeView`]s:
+/// the type guarantees the router can never touch an update path.
+///
+/// φ(h) is materialized once and reused to score every shard's root; a
+/// shard's descent scratch is primed lazily, only when a draw first lands
+/// on it.
+pub fn draw_from_shards<M: FeatureMap>(
+    trees: &[TreeView<'_, M>],
+    offsets: &[u32],
+    h: &[f32],
+    m: usize,
+    state: &mut ShardScratch,
+    rng: &mut Rng,
+    out: &mut Sample,
+) {
+    let s_count = trees.len();
+    debug_assert_eq!(offsets.len(), s_count + 1);
+    trees[0].feature_map().phi(h, &mut state.phi_h);
+    let mut acc = 0.0f64;
+    for (s, tree) in trees.iter().enumerate() {
+        let raw = tree.partition(&state.phi_h);
+        let mass = sanitize_mass(raw);
+        state.raw_totals[s] = raw;
+        state.masses[s] = mass;
+        acc += mass;
+        state.cum[s] = acc;
+        state.primed[s] = false;
+    }
+    let total = acc;
+    for _ in 0..m {
+        // eq. (9) at the router level: shard ∝ its root mass, guarded the
+        // same way the tree guards a degenerate branch
+        let (sid, p_shard) = if total > 0.0 && total.is_finite() {
+            let u = rng.f64() * total;
+            let idx = state.cum.partition_point(|&c| c <= u).min(s_count - 1);
+            let idx = step_down_to_positive(&state.cum, idx);
+            (idx, state.masses[idx] / total)
+        } else {
+            (rng.below(s_count as u64) as usize, 1.0 / s_count as f64)
+        };
+        if !state.primed[sid] {
+            trees[sid].begin_example_prepared(
+                &state.phi_h,
+                state.raw_totals[sid],
+                &mut state.scratches[sid],
+            );
+            state.primed[sid] = true;
+        }
+        let (local, q_local) = trees[sid].draw(h, &mut state.scratches[sid], rng);
+        // merged q — the product of the probabilities actually used, which
+        // equals K/ΣM in the clean regime and stays > 0 in every other
+        let q = (p_shard * q_local).max(f64::MIN_POSITIVE);
+        out.push(offsets[sid] + local, q);
+    }
+}
+
+/// S independent kernel trees behind the mass router (a drop-in
+/// [`Sampler`]: `"quadratic-sharded"` in configs).
+pub struct ShardedKernelSampler<M: FeatureMap + Clone> {
+    shards: Vec<KernelTreeSampler<M>>,
+    offsets: Vec<u32>,
+    n: usize,
+    d: usize,
+    /// Freelist of router scratch states (same pooling discipline as the
+    /// tree's DrawScratch freelist — see [`Pool`]).
+    scratch_pool: Pool<ShardScratch>,
+}
+
+impl<M: FeatureMap + Clone> ShardedKernelSampler<M> {
+    /// Split `n` classes into `shards` contiguous sub-trees. `leaf_size`
+    /// as in [`KernelTreeSampler::new`].
+    pub fn new(map: M, n: usize, shards: usize, leaf_size: Option<usize>) -> Self {
+        assert!(n > 0);
+        let offsets = shard_offsets(n, shards);
+        let trees: Vec<KernelTreeSampler<M>> = offsets
+            .windows(2)
+            .map(|w| KernelTreeSampler::new(map.clone(), (w[1] - w[0]) as usize, leaf_size))
+            .collect();
+        let d = trees[0].embed_dim();
+        ShardedKernelSampler { shards: trees, offsets, n, d, scratch_pool: Pool::new() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// The shard trees (the serve layer wraps each in its own publisher).
+    pub fn shards(&self) -> &[KernelTreeSampler<M>] {
+        &self.shards
+    }
+
+    /// Consume the sampler into its shard trees.
+    pub fn into_shards(self) -> (Vec<KernelTreeSampler<M>>, Vec<u32>) {
+        (self.shards, self.offsets)
+    }
+
+    /// Shard id owning a global class.
+    #[inline]
+    fn shard_of(&self, class: usize) -> usize {
+        debug_assert!(class < self.n);
+        shard_of_class(&self.offsets, class)
+    }
+
+    /// Allocate a router scratch sized for these shards.
+    pub fn new_scratch(&self) -> ShardScratch {
+        scratch_for(&self.views())
+    }
+
+    /// Read-only views over the shard trees (what the draw path consumes).
+    fn views(&self) -> Vec<TreeView<'_, M>> {
+        self.shards.iter().map(|t| t.view()).collect()
+    }
+
+    fn take_scratch(&self) -> ShardScratch {
+        self.scratch_pool.take(|| self.new_scratch())
+    }
+
+    fn put_scratch(&self, s: ShardScratch) {
+        self.scratch_pool.put(s);
+    }
+
+    /// `update_many` with the independent shards swept concurrently — the
+    /// parallel-update payoff of sharding (each sub-tree's bottom-up sweep
+    /// touches disjoint arenas). `threads` is a real concurrency cap:
+    /// touched shards are dealt round-robin onto at most that many worker
+    /// threads (0/1 runs serially). Results never depend on `threads` —
+    /// shard states are disjoint.
+    pub fn update_many_parallel(&mut self, classes: &[usize], rows: &[f32], threads: usize) {
+        debug_assert_eq!(rows.len(), classes.len() * self.d);
+        if classes.is_empty() {
+            return;
+        }
+        let parts = split_updates_by_shard(&self.offsets, self.d, classes, rows);
+        let touched = parts.iter().filter(|(cl, _)| !cl.is_empty()).count();
+        let threads = threads.max(1).min(touched);
+        if threads <= 1 {
+            for (shard, (cl, rw)) in self.shards.iter_mut().zip(&parts) {
+                if !cl.is_empty() {
+                    shard.update_many(cl, rw);
+                }
+            }
+            return;
+        }
+        let mut groups: Vec<Vec<(&mut KernelTreeSampler<M>, &(Vec<usize>, Vec<f32>))>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, (shard, part)) in
+            self.shards.iter_mut().zip(&parts).filter(|(_, (cl, _))| !cl.is_empty()).enumerate()
+        {
+            groups[i % threads].push((shard, part));
+        }
+        std::thread::scope(|scope| {
+            for group in groups {
+                scope.spawn(move || {
+                    for (shard, (cl, rw)) in group {
+                        shard.update_many(cl, rw);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Merged top-k across shards: per-shard beam descents, then the
+    /// shared deterministic merge (see [`crate::serve::topk`]).
+    pub fn topk_beam(&self, h: &[f32], k: usize, beam_width: usize) -> Vec<(u32, f64)> {
+        crate::serve::topk::merge_shard_topk(
+            self.shards
+                .iter()
+                .enumerate()
+                .map(|(sid, shard)| (self.offsets[sid], shard.topk_beam(h, k, beam_width)))
+                .collect(),
+            k,
+        )
+    }
+}
+
+/// Build a [`ShardScratch`] for a specific shard set (serve workers build
+/// theirs from snapshot trees rather than a `ShardedKernelSampler`).
+pub fn scratch_for<M: FeatureMap>(trees: &[TreeView<'_, M>]) -> ShardScratch {
+    let s = trees.len();
+    ShardScratch {
+        phi_h: vec![0.0; trees[0].feature_map().dim()],
+        scratches: trees.iter().map(|t| t.new_scratch()).collect(),
+        primed: vec![false; s],
+        raw_totals: vec![0.0; s],
+        masses: vec![0.0; s],
+        cum: vec![0.0; s],
+    }
+}
+
+impl<M: FeatureMap + Clone> Sampler for ShardedKernelSampler<M> {
+    fn name(&self) -> &str {
+        "quadratic-sharded"
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let h = input.h.ok_or_else(|| anyhow::anyhow!("sharded kernel sampler needs h"))?;
+        anyhow::ensure!(h.len() == self.d, "h len {} != d {}", h.len(), self.d);
+        out.clear();
+        let trees = self.views();
+        let mut state = self.take_scratch();
+        draw_from_shards(&trees, &self.offsets, h, m, &mut state, rng, out);
+        self.put_scratch(state);
+        Ok(())
+    }
+
+    /// Batched engine: one router scratch per worker, row streams from
+    /// [`row_rng`] — bit-identical to the per-row [`Sampler::sample`] loop.
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        anyhow::ensure!(inputs.d == self.d, "batch h dim {} != sampler d {}", inputs.d, self.d);
+        let h_all = inputs.h.expect("validated: sharded sampler needs h");
+        let trees = self.views();
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut state = self.take_scratch();
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = &h_all[i * self.d..(i + 1) * self.d];
+                let mut rng = row_rng(step_seed, i);
+                slot.clear();
+                draw_from_shards(&trees, &self.offsets, h, m, &mut state, &mut rng, slot);
+            }
+            self.put_scratch(state);
+        });
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let h = input.h?;
+        let phi_h = self.shards[0].phi_query(h);
+        let total: f64 = self.shards.iter().map(|t| sanitize_mass(t.partition(&phi_h))).sum();
+        let sid = self.shard_of(class as usize);
+        let local = class - self.offsets[sid];
+        let k = self.shards[sid].feature_map().kernel(h, self.shards[sid].emb_row(local as usize));
+        Some(k / total)
+    }
+
+    fn update(&mut self, class: usize, w_new: &[f32]) {
+        let sid = self.shard_of(class);
+        let local = class - self.offsets[sid] as usize;
+        self.shards[sid].update(local, w_new);
+    }
+
+    /// The trait hook (trainer path) sweeps shards concurrently up to the
+    /// machine's default worker count — this is the parallel-update payoff
+    /// the sharding exists for, and results cannot depend on it (disjoint
+    /// shard states).
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        let threads = crate::util::threadpool::default_threads();
+        self.update_many_parallel(classes, rows, threads);
+    }
+
+    fn reset_embeddings(&mut self, w: &[f32], n: usize, d: usize) {
+        assert_eq!(n, self.n, "class count changed");
+        assert_eq!(d, self.d, "embedding dim changed");
+        assert_eq!(w.len(), n * d);
+        let offsets = self.offsets.clone();
+        for (shard, win) in self.shards.iter_mut().zip(offsets.windows(2)) {
+            let (lo, hi) = (win[0] as usize, win[1] as usize);
+            shard.reset_embeddings(&w[lo * d..hi * d], hi - lo, d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::util::stats::chi_square_stat;
+    use crate::util::testing::check;
+
+    fn random_emb(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_normal(&mut v, 0.5);
+        v
+    }
+
+    fn exact_dist(map: &QuadraticMap, h: &[f32], emb: &[f32], n: usize, d: usize) -> Vec<f64> {
+        let w: Vec<f64> = (0..n).map(|j| map.kernel(h, &emb[j * d..(j + 1) * d])).collect();
+        let z: f64 = w.iter().sum();
+        w.into_iter().map(|x| x / z).collect()
+    }
+
+    #[test]
+    fn offsets_partition_the_class_space() {
+        for (n, s) in [(10, 3), (7, 7), (100, 8), (5, 16), (1, 1)] {
+            let off = shard_offsets(n, s);
+            assert_eq!(off[0], 0);
+            assert_eq!(*off.last().unwrap() as usize, n);
+            assert!(off.windows(2).all(|w| w[0] < w[1]), "empty shard in {off:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_q_matches_unsharded_tree() {
+        // the acceptance property: the merged proposal distribution is
+        // exactly the unsharded one, to f64 tolerance
+        check("sharded q == unsharded q", 12, |g| {
+            let n = g.usize_in(4, 96);
+            let d = g.usize_in(1, 5);
+            let shards = g.usize_in(1, 8.min(n));
+            let leaf = g.usize_in(1, 8);
+            let mut rng = Rng::new(g.case_seed ^ 0x51);
+            let emb = random_emb(&mut rng, n, d);
+            let map = QuadraticMap::new(d, g.f64_in(1.0, 150.0));
+            let mut sharded = ShardedKernelSampler::new(map.clone(), n, shards, Some(leaf));
+            sharded.reset_embeddings(&emb, n, d);
+            let mut unsharded = KernelTreeSampler::new(map.clone(), n, Some(leaf));
+            unsharded.reset_embeddings(&emb, n, d);
+            let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let input = SampleInput { h: Some(&h), ..Default::default() };
+            let expected = exact_dist(&map, &h, &emb, n, d);
+            let mut out = Sample::default();
+            sharded.sample(&input, 64, &mut rng, &mut out).unwrap();
+            assert_eq!(out.classes.len(), 64);
+            for (&c, &q) in out.classes.iter().zip(&out.q) {
+                assert!((c as usize) < n);
+                let wanted = expected[c as usize];
+                assert!(
+                    (q - wanted).abs() < 1e-9,
+                    "class {c}: sharded q {q} vs unsharded {wanted}"
+                );
+                // and against the unsharded tree's own closed form
+                let tq = unsharded.prob(&input, c).unwrap();
+                assert!((q - tq).abs() < 1e-9, "class {c}: {q} vs tree {tq}");
+            }
+            // prob() agrees everywhere, not just on sampled classes
+            for c in 0..n as u32 {
+                let a = sharded.prob(&input, c).unwrap();
+                let b = expected[c as usize];
+                assert!((a - b).abs() < 1e-9, "class {c}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn sharded_draw_distribution_chi_square() {
+        let (n, d, shards) = (40, 3, 5);
+        let mut rng = Rng::new(61);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut sampler = ShardedKernelSampler::new(map.clone(), n, shards, Some(3));
+        sampler.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let expected = exact_dist(&map, &h, &emb, n, d);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut counts = vec![0u64; n];
+        let mut out = Sample::default();
+        let draws = 200_000usize;
+        let m = 50;
+        for _ in 0..draws / m {
+            sampler.sample(&input, m, &mut rng, &mut out).unwrap();
+            for &c in &out.classes {
+                counts[c as usize] += 1;
+            }
+        }
+        let stat = chi_square_stat(&counts, &expected, draws as f64);
+        // df = n - 1 = 39; mean 39, std sqrt(78) ≈ 8.8 — 39 + 5σ ≈ 83
+        assert!(stat < 83.0, "chi-square {stat} too large for df=39");
+    }
+
+    #[test]
+    fn updates_route_to_the_owning_shard() {
+        check("sharded updates == fresh rebuild", 10, |g| {
+            let n = g.usize_in(6, 64);
+            let d = g.usize_in(1, 4);
+            let shards = g.usize_in(2, 6.min(n));
+            let mut rng = Rng::new(g.case_seed ^ 0x71);
+            let mut emb = random_emb(&mut rng, n, d);
+            let map = QuadraticMap::new(d, 100.0);
+            let mut sampler = ShardedKernelSampler::new(map.clone(), n, shards, Some(3));
+            sampler.reset_embeddings(&emb, n, d);
+            // batch update a random subset (sorted + dedup), both parallel
+            // and serial paths
+            let k = g.usize_in(1, n);
+            let mut classes: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut classes);
+            classes.truncate(k);
+            classes.sort_unstable();
+            let mut rows = vec![0.0f32; k * d];
+            rng.fill_normal(&mut rows, 0.7);
+            let threads = g.usize_in(0, 4);
+            sampler.update_many_parallel(&classes, &rows, threads);
+            for (i, &c) in classes.iter().enumerate() {
+                emb[c * d..(c + 1) * d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let input = SampleInput { h: Some(&h), ..Default::default() };
+            let expected = exact_dist(&map, &h, &emb, n, d);
+            for c in 0..n as u32 {
+                let got = sampler.prob(&input, c).unwrap();
+                let want = expected[c as usize];
+                assert!((got - want).abs() < 1e-9, "class {c}: {got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn sharded_sample_batch_reproduces_per_row_streams() {
+        let (n_classes, d, rows, m) = (32, 3, 11, 7);
+        let mut rng = Rng::new(83);
+        let emb = random_emb(&mut rng, n_classes, d);
+        let mut sampler =
+            ShardedKernelSampler::new(QuadraticMap::new(d, 100.0), n_classes, 4, Some(3));
+        sampler.reset_embeddings(&emb, n_classes, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let step_seed = 0x54AD;
+        let mut per_row: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+        for (i, slot) in per_row.iter_mut().enumerate() {
+            let input = SampleInput { h: Some(&hs[i * d..(i + 1) * d]), ..Default::default() };
+            let mut r = row_rng(step_seed, i);
+            sampler.sample(&input, m, &mut r, slot).unwrap();
+        }
+        for threads in [0usize, 1, 3, 8] {
+            let inputs = BatchSampleInput {
+                n: rows,
+                d,
+                n_classes,
+                h: Some(&hs),
+                threads,
+                ..Default::default()
+            };
+            let mut batched: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            sampler.sample_batch(&inputs, m, step_seed, &mut batched).unwrap();
+            for (i, (a, b)) in batched.iter().zip(&per_row).enumerate() {
+                assert_eq!(a.classes, b.classes, "threads {threads} row {i}");
+                assert_eq!(a.q, b.q, "threads {threads} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_topk_matches_unsharded_exact() {
+        let (n, d) = (48, 3);
+        let mut rng = Rng::new(91);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut sharded = ShardedKernelSampler::new(map.clone(), n, 5, Some(3));
+        sharded.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut exact: Vec<(u32, f64)> = (0..n as u32)
+            .map(|c| (c, map.kernel(&h, &emb[c as usize * d..(c as usize + 1) * d])))
+            .collect();
+        exact.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let k = 10;
+        // wide beam: exact within each shard, so the merge is exact overall
+        let got = sharded.topk_beam(&h, k, n);
+        assert_eq!(got.len(), k);
+        for (i, ((gc, gs), (ec, es))) in got.iter().zip(&exact).enumerate() {
+            assert_eq!(gc, ec, "rank {i}");
+            assert!((gs - es).abs() < 1e-9 * es.max(1.0));
+        }
+    }
+}

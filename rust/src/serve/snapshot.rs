@@ -1,0 +1,530 @@
+//! Epoch snapshots: immutable kernel-tree generations behind an atomic
+//! publish point, plus the double-buffered writer that produces them.
+//!
+//! # Reader protocol
+//!
+//! [`SnapshotStore`] holds the current generation as an `Arc<T>` guarded by
+//! a mutex, next to an `AtomicU64` generation counter that is the *only*
+//! thing the steady-state read path touches. Each reader thread owns a
+//! [`SnapshotReader`], which caches `(generation, Arc)`; `current()` is one
+//! relaxed-acquire atomic load and a compare — wait-free — and only when
+//! the counter moved does the reader take the mutex for the microseconds an
+//! `Arc::clone` costs. The writer holds that same mutex only for the
+//! pointer swap itself, never while building the next generation, so
+//! publishing G+1 stalls readers for at most one clone/swap critical
+//! section (the serve bench measures it). A reader that keeps using its
+//! cached `Arc` sees generation G bit-for-bit forever: snapshots are
+//! immutable by construction.
+//!
+//! # Writer protocol (double-buffered arenas, no full rebuild)
+//!
+//! [`TreePublisher`] owns the mutable *shadow* tree the trainer updates.
+//! Publishing does not rebuild and, in steady state, does not copy either:
+//! the publisher retains a handle to each published generation and, once
+//! readers have released generation G−k (its `Arc` strong count drops to
+//! 1), reclaims that arena and **replays** the logged update batches to
+//! fast-forward it from G−k to the new generation — each batch is applied
+//! once to the shadow and once more during a later replay, the classic
+//! left-right scheme. Only when no retired arena has been released yet
+//! (cold start, or readers pinning old generations) does it fall back to a
+//! flat `clone()` of the shadow (a memcpy of the arena — still no φ
+//! recomputation). [`PublishStats`] counts which path ran.
+
+use crate::sampler::kernel::tree::KernelTreeSampler;
+use crate::sampler::kernel::FeatureMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One immutable published generation of a kernel tree.
+pub struct TreeSnapshot<M: FeatureMap> {
+    /// Monotonic generation number (0 = the initial publish).
+    pub generation: u64,
+    /// The frozen tree. Only `&self` methods are reachable through the
+    /// `Arc`, and serving code goes through [`KernelTreeSampler::view`].
+    pub tree: KernelTreeSampler<M>,
+}
+
+/// Atomic publish point for `Arc<T>` generations (see module docs for the
+/// reader/writer protocol). Generic so tests can exercise it with plain
+/// values; the serve layer instantiates it with [`TreeSnapshot`].
+pub struct SnapshotStore<T> {
+    /// (generation, current). The mutex is held only for clone/swap.
+    current: Mutex<(u64, Arc<T>)>,
+    /// Fast-path generation mirror: readers poll this without locking.
+    gen: AtomicU64,
+}
+
+impl<T> SnapshotStore<T> {
+    pub fn new(initial: T) -> SnapshotStore<T> {
+        SnapshotStore { current: Mutex::new((0, Arc::new(initial))), gen: AtomicU64::new(0) }
+    }
+
+    /// Generation of the currently published snapshot.
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Clone a handle to the current snapshot (one short lock).
+    pub fn load(&self) -> (u64, Arc<T>) {
+        let guard = self.current.lock().expect("snapshot store poisoned");
+        (guard.0, guard.1.clone())
+    }
+
+    /// Swap in the next generation and return its number. The lock is held
+    /// only for the swap — building `next` happened outside.
+    pub fn publish(&self, next: Arc<T>) -> u64 {
+        let mut guard = self.current.lock().expect("snapshot store poisoned");
+        let g = guard.0 + 1;
+        *guard = (g, next);
+        // release-store after the swap so a reader that observes the new
+        // counter always finds the new Arc under the mutex
+        self.gen.store(g, Ordering::Release);
+        g
+    }
+}
+
+/// Per-reader-thread cache over a [`SnapshotStore`]: `current()` is
+/// wait-free (one atomic load) until a publish happens, then refreshes with
+/// one short lock. Holding on to the returned `Arc` pins that generation.
+pub struct SnapshotReader<T> {
+    store: Arc<SnapshotStore<T>>,
+    cached: Arc<T>,
+    cached_gen: u64,
+}
+
+impl<T> SnapshotReader<T> {
+    pub fn new(store: Arc<SnapshotStore<T>>) -> SnapshotReader<T> {
+        let (cached_gen, cached) = store.load();
+        SnapshotReader { store, cached, cached_gen }
+    }
+
+    /// Generation of the cached snapshot.
+    pub fn generation(&self) -> u64 {
+        self.cached_gen
+    }
+
+    /// The freshest snapshot: refreshes the cache iff the store's
+    /// generation counter moved since the last call.
+    pub fn current(&mut self) -> &Arc<T> {
+        if self.store.generation() != self.cached_gen {
+            let (g, arc) = self.store.load();
+            self.cached_gen = g;
+            self.cached = arc;
+        }
+        &self.cached
+    }
+
+    /// The cached snapshot without checking for a newer generation —
+    /// readers mid-request use this so one request never mixes generations.
+    pub fn pinned(&self) -> &Arc<T> {
+        &self.cached
+    }
+}
+
+impl<T> Clone for SnapshotReader<T> {
+    fn clone(&self) -> Self {
+        SnapshotReader {
+            store: self.store.clone(),
+            cached: self.cached.clone(),
+            cached_gen: self.cached_gen,
+        }
+    }
+}
+
+/// Publish-path accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PublishStats {
+    /// Generations published (excluding the initial one).
+    pub publishes: u64,
+    /// Publishes that reused a reclaimed retired arena via replay.
+    pub reclaimed: u64,
+    /// Publishes that fell back to a flat clone of the shadow.
+    pub copied: u64,
+    /// Update batches replayed onto reclaimed arenas.
+    pub replayed_batches: u64,
+}
+
+/// Timing report of one publish.
+#[derive(Clone, Copy, Debug)]
+pub struct PublishReport {
+    pub generation: u64,
+    /// Seconds spent building the next snapshot (replay or clone) —
+    /// off the reader path.
+    pub build_s: f64,
+    /// Seconds the store's swap lock was held — the only interval a
+    /// refreshing reader can contend with.
+    pub swap_s: f64,
+    /// Whether the build reclaimed a retired arena (vs cloning).
+    pub reclaimed: bool,
+}
+
+/// One logged update batch (the replay unit).
+struct UpdateBatch {
+    /// Generation this batch produced when applied to the shadow.
+    gen: u64,
+    classes: Vec<usize>,
+    rows: Vec<f32>,
+}
+
+/// Retired generations the publisher still holds a handle to. Bounded: if
+/// readers pin more generations than this, the oldest handles are dropped
+/// (readers keep them alive; the publisher just loses the chance to
+/// reclaim those arenas and falls back to cloning).
+const MAX_RETIRED: usize = 6;
+
+/// Double-buffered snapshot writer for one kernel tree (see module docs).
+pub struct TreePublisher<M: FeatureMap + Clone> {
+    store: Arc<SnapshotStore<TreeSnapshot<M>>>,
+    /// The writer's working tree, always at the latest generation.
+    shadow: KernelTreeSampler<M>,
+    shadow_gen: u64,
+    /// Published generations awaiting reclamation (oldest first).
+    retired: VecDeque<Arc<TreeSnapshot<M>>>,
+    /// Update batches newer than the oldest retired generation — exactly
+    /// what a reclaimed arena may need to fast-forward.
+    log: VecDeque<UpdateBatch>,
+    pub stats: PublishStats,
+}
+
+impl<M: FeatureMap + Clone> TreePublisher<M> {
+    /// Wrap a tree and publish it as generation 0.
+    pub fn new(tree: KernelTreeSampler<M>) -> TreePublisher<M> {
+        let snap = Arc::new(TreeSnapshot { generation: 0, tree: tree.clone() });
+        let store = Arc::new(SnapshotStore::new_with_arc(snap.clone()));
+        let mut retired = VecDeque::new();
+        retired.push_back(snap);
+        TreePublisher {
+            store,
+            shadow: tree,
+            shadow_gen: 0,
+            retired,
+            log: VecDeque::new(),
+            stats: PublishStats::default(),
+        }
+    }
+
+    /// The publish point readers subscribe to.
+    pub fn store(&self) -> Arc<SnapshotStore<TreeSnapshot<M>>> {
+        self.store.clone()
+    }
+
+    /// The writer's working tree (read access, e.g. for seeding checks).
+    pub fn shadow(&self) -> &KernelTreeSampler<M> {
+        &self.shadow
+    }
+
+    /// Apply one update batch to the shadow and publish the result as the
+    /// next generation. `classes` sorted + deduplicated, `rows` the flat
+    /// (len·d) buffer of new embeddings — the same contract as
+    /// [`KernelTreeSampler::update_many`].
+    pub fn update_and_publish(&mut self, classes: &[usize], rows: &[f32]) -> PublishReport {
+        let t_build = Instant::now();
+        self.shadow.update_many(classes, rows);
+        self.shadow_gen += 1;
+        self.log.push_back(UpdateBatch {
+            gen: self.shadow_gen,
+            classes: classes.to_vec(),
+            rows: rows.to_vec(),
+        });
+
+        // Reclaim before the swap: the store still points at the previous
+        // generation, whose Arc count is ≥ 2 (store + retired), so the live
+        // snapshot can never be unwrapped here. Scan the whole retired
+        // queue — a single slow reader pinning an old generation must not
+        // block reclamation of the free arenas behind it (head-of-line
+        // blocking would force a full clone per publish). Of several free
+        // arenas, keep the newest (fewest batches to replay), drop the
+        // rest; log trimming stays keyed off the true front, so every
+        // arena still in the queue remains replay-coverable.
+        let mut reclaimed: Option<TreeSnapshot<M>> = None;
+        let mut i = 0;
+        while i < self.retired.len() {
+            if Arc::strong_count(&self.retired[i]) != 1 {
+                i += 1;
+                continue;
+            }
+            let arc = self.retired.remove(i).expect("index checked");
+            match Arc::try_unwrap(arc) {
+                // oldest→newest scan: a later free arena replaces an
+                // earlier one, which is simply dropped
+                Ok(snap) => reclaimed = Some(snap),
+                Err(arc) => {
+                    // a reader cloned between the count check and the
+                    // unwrap; put it back and move on
+                    self.retired.insert(i, arc);
+                    i += 1;
+                }
+            }
+        }
+        let was_reclaimed = reclaimed.is_some();
+        let next = match reclaimed {
+            Some(mut snap) => {
+                // fast-forward: replay every logged batch newer than the
+                // reclaimed generation (the log is trimmed below to always
+                // cover the oldest retired generation)
+                for batch in self.log.iter() {
+                    if batch.gen > snap.generation {
+                        snap.tree.update_many(&batch.classes, &batch.rows);
+                        self.stats.replayed_batches += 1;
+                    }
+                }
+                snap.generation = self.shadow_gen;
+                self.stats.reclaimed += 1;
+                snap
+            }
+            None => {
+                self.stats.copied += 1;
+                TreeSnapshot { generation: self.shadow_gen, tree: self.shadow.clone() }
+            }
+        };
+        let build_s = t_build.elapsed().as_secs_f64();
+
+        let arc = Arc::new(next);
+        self.retired.push_back(arc.clone());
+        let t_swap = Instant::now();
+        let generation = self.store.publish(arc);
+        let swap_s = t_swap.elapsed().as_secs_f64();
+        debug_assert_eq!(generation, self.shadow_gen);
+        self.stats.publishes += 1;
+
+        // Bound the retired queue: beyond MAX_RETIRED we stop tracking the
+        // oldest handles (their readers keep them alive; we lose only the
+        // reclaim opportunity).
+        while self.retired.len() > MAX_RETIRED {
+            self.retired.pop_front();
+        }
+        // The log only needs batches newer than the oldest retired
+        // generation (the furthest-behind arena we could ever reclaim).
+        let min_gen = self.retired.front().map(|s| s.generation).unwrap_or(self.shadow_gen);
+        while self.log.front().is_some_and(|b| b.gen <= min_gen) {
+            self.log.pop_front();
+        }
+
+        PublishReport { generation, build_s, swap_s, reclaimed: was_reclaimed }
+    }
+}
+
+impl<T> SnapshotStore<T> {
+    /// Construct directly from an `Arc` (publisher bootstrap keeps a
+    /// retained handle to generation 0).
+    fn new_with_arc(initial: Arc<T>) -> SnapshotStore<T> {
+        SnapshotStore { current: Mutex::new((0, initial)), gen: AtomicU64::new(0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::sampler::{Sample, SampleInput, Sampler};
+    use crate::util::rng::Rng;
+
+    fn tree(n: usize, d: usize, seed: u64) -> (KernelTreeSampler<QuadraticMap>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut t = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        t.reset_embeddings(&emb, n, d);
+        (t, emb)
+    }
+
+    fn draws(snap: &TreeSnapshot<QuadraticMap>, h: &[f32], seed: u64) -> (Vec<u32>, Vec<f64>) {
+        let input = SampleInput { h: Some(h), ..Default::default() };
+        let mut out = Sample::default();
+        let mut rng = Rng::new(seed);
+        snap.tree.sample(&input, 64, &mut rng, &mut out).unwrap();
+        (out.classes, out.q)
+    }
+
+    #[test]
+    fn held_generation_is_bit_identical_across_publishes() {
+        let (t, _) = tree(40, 3, 1);
+        let d = 3;
+        let mut publisher = TreePublisher::new(t);
+        let store = publisher.store();
+        let h = vec![0.7f32, -0.3, 1.1];
+        let (g0, pinned) = store.load();
+        assert_eq!(g0, 0);
+        let before = draws(&pinned, &h, 99);
+        // publish several new generations while the reader holds gen 0
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let classes = vec![1usize, 7, 20];
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 0.8);
+            publisher.update_and_publish(&classes, &rows);
+        }
+        assert_eq!(store.generation(), 5);
+        // the pinned snapshot must replay the identical stream, bit for bit
+        let after = draws(&pinned, &h, 99);
+        assert_eq!(before.0, after.0, "classes changed under a held snapshot");
+        assert_eq!(before.1, after.1, "q changed under a held snapshot");
+        // while a fresh load sees the updated distribution
+        let (g5, fresh) = store.load();
+        assert_eq!(g5, 5);
+        assert_eq!(fresh.generation, 5);
+        let now = draws(&fresh, &h, 99);
+        assert_ne!(before.1, now.1, "new generation should differ");
+    }
+
+    #[test]
+    fn reader_refreshes_only_on_generation_change() {
+        let (t, _) = tree(16, 2, 3);
+        let mut publisher = TreePublisher::new(t);
+        let mut reader = SnapshotReader::new(publisher.store());
+        assert_eq!(reader.current().generation, 0);
+        let p0 = Arc::as_ptr(reader.pinned());
+        assert_eq!(Arc::as_ptr(reader.current()), p0, "no publish -> same Arc");
+        publisher.update_and_publish(&[3], &[0.5, -0.5]);
+        assert_eq!(reader.generation(), 0, "pinned view stays until refreshed");
+        assert_eq!(reader.current().generation, 1);
+        assert_ne!(Arc::as_ptr(reader.pinned()), p0);
+    }
+
+    #[test]
+    fn publisher_reclaims_released_arenas_and_replay_matches_shadow() {
+        let (t, emb) = tree(48, 3, 5);
+        let d = 3;
+        let n = 48;
+        // reference: a plain tree receiving the same updates directly
+        let mut reference = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        reference.reset_embeddings(&emb, n, d);
+        let mut publisher = TreePublisher::new(t);
+        let mut reader = SnapshotReader::new(publisher.store());
+        let mut rng = Rng::new(7);
+        for step in 0..12 {
+            let k = 1 + (step % 5);
+            let mut classes: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut classes);
+            classes.truncate(k);
+            classes.sort_unstable();
+            let mut rows = vec![0.0f32; k * d];
+            rng.fill_normal(&mut rows, 0.7);
+            reference.update_many(&classes, &rows);
+            publisher.update_and_publish(&classes, &rows);
+            // the reader tracks the head, releasing old generations so the
+            // publisher's reclaim path actually runs
+            reader.current();
+        }
+        let stats = publisher.stats;
+        assert_eq!(stats.publishes, 12);
+        assert!(stats.reclaimed > 0, "reclaim path never ran: {stats:?}");
+        // every published snapshot — reclaimed-and-replayed or cloned —
+        // must match the straight-line reference exactly
+        let (g, snap) = publisher.store().load();
+        assert_eq!(g, 12);
+        let h = vec![0.4f32, 0.9, -1.2];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        for c in [0u32, 11, 30, 47] {
+            let a = snap.tree.prob(&input, c).unwrap();
+            let b = reference.prob(&input, c).unwrap();
+            assert!((a - b).abs() < 1e-12 * b.max(1e-12), "class {c}: {a} vs {b}");
+        }
+        assert!(snap.tree.max_drift() < 1e-9, "drift {}", snap.tree.max_drift());
+    }
+
+    #[test]
+    fn pinned_old_generation_does_not_block_reclamation() {
+        // head-of-line regression: one reader pins an early generation
+        // forever; free arenas behind it must still be reclaimed (not
+        // every publish degraded to a full clone), the pinned snapshot
+        // stays bit-identical, and replay stays exact
+        let (t, emb) = tree(32, 2, 13);
+        let (n, d) = (32usize, 2usize);
+        let mut reference = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        reference.reset_embeddings(&emb, n, d);
+        let mut publisher = TreePublisher::new(t);
+        let store = publisher.store();
+        let mut rng = Rng::new(17);
+        let mut rows = vec![0.0f32; 2 * d];
+        rng.fill_normal(&mut rows, 0.5);
+        reference.update_many(&[0, 20], &rows);
+        publisher.update_and_publish(&[0, 20], &rows);
+        let (_, pinned) = store.load(); // hold generation 1 for the whole test
+        let h = vec![0.8f32, -0.4];
+        let before = draws(&pinned, &h, 7);
+        let clones_before = publisher.stats.copied;
+        for step in 0..8 {
+            let classes = vec![step % n, 10 + step % 20];
+            let mut classes: Vec<usize> = classes;
+            classes.sort_unstable();
+            classes.dedup();
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 0.5);
+            reference.update_many(&classes, &rows);
+            publisher.update_and_publish(&classes, &rows);
+        }
+        assert!(
+            publisher.stats.reclaimed >= 6,
+            "pinned gen blocked reclamation: {:?}",
+            publisher.stats
+        );
+        assert!(
+            publisher.stats.copied <= clones_before + 2,
+            "publishes degraded to clones: {:?}",
+            publisher.stats
+        );
+        // pinned snapshot untouched; head replays the reference exactly
+        let after = draws(&pinned, &h, 7);
+        assert_eq!(before, after, "pinned generation changed");
+        let (_, head) = store.load();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        for c in [0u32, 15, 31] {
+            let a = head.tree.prob(&input, c).unwrap();
+            let b = reference.prob(&input, c).unwrap();
+            assert_eq!(a, b, "class {c}");
+        }
+        assert!(head.tree.max_drift() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_readers_sample_while_writer_publishes() {
+        let (t, _) = tree(64, 3, 9);
+        let d = 3;
+        let mut publisher = TreePublisher::new(t);
+        let store = publisher.store();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for worker in 0..4u64 {
+                let store = store.clone();
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut reader = SnapshotReader::new(store);
+                    let mut rng = Rng::new(100 + worker);
+                    let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let input = SampleInput { h: Some(&h), ..Default::default() };
+                    let mut out = Sample::default();
+                    let mut seen_gens = 0u64;
+                    let mut last_gen = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let snap = reader.current().clone();
+                        if snap.generation != last_gen {
+                            last_gen = snap.generation;
+                            seen_gens += 1;
+                        }
+                        snap.tree.sample(&input, 8, &mut rng, &mut out).unwrap();
+                        for (&c, &q) in out.classes.iter().zip(&out.q) {
+                            assert!((c as usize) < 64);
+                            assert!(q > 0.0 && q.is_finite());
+                        }
+                    }
+                    seen_gens
+                });
+            }
+            let mut rng = Rng::new(11);
+            for _ in 0..50 {
+                let classes = vec![2usize, 17, 40, 63];
+                let mut rows = vec![0.0f32; classes.len() * d];
+                rng.fill_normal(&mut rows, 0.6);
+                let report = publisher.update_and_publish(&classes, &rows);
+                assert!(report.swap_s < 1.0, "swap took {}s", report.swap_s);
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert_eq!(publisher.stats.publishes, 50);
+        assert_eq!(store.generation(), 50);
+    }
+}

@@ -1,0 +1,163 @@
+//! Top-k beam retrieval over published snapshots — the inference-style
+//! "recommend k items" query served from the same kernel-tree index that
+//! adaptive sampling trains against.
+//!
+//! The per-tree beam descent lives in
+//! [`KernelTreeSampler::topk_beam`](crate::sampler::KernelTreeSampler::topk_beam)
+//! (it shares the arena and the zero-mass guards with the draw path); this
+//! module runs it across a shard set's pinned snapshots and merges the
+//! per-shard candidates by exact kernel score. Merging is deterministic:
+//! scores tie-break on global class id, and every shard is queried with the
+//! same `k`/`beam_width`, so a result depends only on (snapshot
+//! generations, h, k, beam_width).
+
+use crate::sampler::kernel::FeatureMap;
+use crate::serve::snapshot::TreeSnapshot;
+use std::sync::Arc;
+
+/// Retrieval tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct TopKConfig {
+    /// Results to return.
+    pub k: usize,
+    /// Beam width per shard tree; `≥` a shard's leaf count makes that
+    /// shard's candidates exact.
+    pub beam_width: usize,
+}
+
+impl Default for TopKConfig {
+    fn default() -> Self {
+        TopKConfig { k: 10, beam_width: 8 }
+    }
+}
+
+/// One retrieval result: global class id, exact kernel score
+/// `K(h, w) = ⟨φ(h), φ(w)⟩`, and the snapshot generation it came from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub class: u32,
+    pub score: f64,
+    pub generation: u64,
+}
+
+/// The one deterministic merge rule for per-shard top-k candidates: each
+/// entry is `(shard offset, that shard's local (class, score) list)`; the
+/// result is global ids ranked by descending score with class-id
+/// tie-break, truncated to `k`. [`ShardedKernelSampler::topk_beam`] and
+/// [`topk_over_snapshots`] both delegate here, so training-side and
+/// serve-side retrieval can never disagree on the ordering contract.
+///
+/// [`ShardedKernelSampler::topk_beam`]: crate::serve::ShardedKernelSampler::topk_beam
+pub fn merge_shard_topk(per_shard: Vec<(u32, Vec<(u32, f64)>)>, k: usize) -> Vec<(u32, f64)> {
+    let mut merged: Vec<(u32, f64)> = per_shard
+        .into_iter()
+        .flat_map(|(offset, hits)| {
+            hits.into_iter().map(move |(local, score)| (offset + local, score))
+        })
+        .collect();
+    merged.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    merged.truncate(k);
+    merged
+}
+
+/// Approximate top-k by kernel score across a shard set's snapshots.
+/// `snaps[s]` serves global classes `offsets[s]..offsets[s+1]`.
+pub fn topk_over_snapshots<M: FeatureMap>(
+    snaps: &[Arc<TreeSnapshot<M>>],
+    offsets: &[u32],
+    h: &[f32],
+    cfg: TopKConfig,
+) -> Vec<Hit> {
+    debug_assert_eq!(offsets.len(), snaps.len() + 1);
+    let merged = merge_shard_topk(
+        snaps
+            .iter()
+            .enumerate()
+            .map(|(sid, snap)| {
+                (offsets[sid], snap.tree.view().topk_beam(h, cfg.k, cfg.beam_width))
+            })
+            .collect(),
+        cfg.k,
+    );
+    merged
+        .into_iter()
+        .map(|(class, score)| Hit {
+            class,
+            score,
+            generation: snaps[crate::serve::shard::shard_of_class(offsets, class as usize)]
+                .generation,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::sampler::KernelTreeSampler;
+    use crate::serve::shard::shard_offsets;
+    use crate::util::rng::Rng;
+    // FeatureMap (for map.kernel in the oracle) comes in via `use super::*`.
+
+    fn snapshot_shards(
+        emb: &[f32],
+        n: usize,
+        d: usize,
+        shards: usize,
+    ) -> (Vec<Arc<TreeSnapshot<QuadraticMap>>>, Vec<u32>) {
+        let offsets = shard_offsets(n, shards);
+        let snaps = offsets
+            .windows(2)
+            .map(|w| {
+                let (lo, hi) = (w[0] as usize, w[1] as usize);
+                let mut t =
+                    KernelTreeSampler::new(QuadraticMap::new(d, 100.0), hi - lo, Some(3));
+                t.reset_embeddings(&emb[lo * d..hi * d], hi - lo, d);
+                Arc::new(TreeSnapshot { generation: 7, tree: t })
+            })
+            .collect();
+        (snaps, offsets)
+    }
+
+    #[test]
+    fn merged_snapshot_topk_matches_exact_with_wide_beam() {
+        let (n, d) = (40, 3);
+        let mut rng = Rng::new(3);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let (snaps, offsets) = snapshot_shards(&emb, n, d, 4);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let map = QuadraticMap::new(d, 100.0);
+        let mut exact: Vec<(u32, f64)> = (0..n as u32)
+            .map(|c| (c, map.kernel(&h, &emb[c as usize * d..(c as usize + 1) * d])))
+            .collect();
+        exact.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let hits = topk_over_snapshots(&snaps, &offsets, &h, TopKConfig { k: 8, beam_width: n });
+        assert_eq!(hits.len(), 8);
+        for (i, (hit, (ec, es))) in hits.iter().zip(&exact).enumerate() {
+            assert_eq!(hit.class, *ec, "rank {i}");
+            assert!((hit.score - es).abs() < 1e-9 * es.max(1.0));
+            assert_eq!(hit.generation, 7);
+        }
+    }
+
+    #[test]
+    fn narrow_beam_is_deterministic_and_well_formed() {
+        let (n, d) = (64, 2);
+        let mut rng = Rng::new(5);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.4);
+        let (snaps, offsets) = snapshot_shards(&emb, n, d, 3);
+        let h = vec![0.8f32, -0.6];
+        let cfg = TopKConfig { k: 5, beam_width: 2 };
+        let a = topk_over_snapshots(&snaps, &offsets, &h, cfg);
+        let b = topk_over_snapshots(&snaps, &offsets, &h, cfg);
+        assert_eq!(a, b, "same inputs must produce the same ranking");
+        assert_eq!(a.len(), 5);
+        let mut ids: Vec<u32> = a.iter().map(|hit| hit.class).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5, "duplicate classes in merged top-k");
+        assert!(a.windows(2).all(|w| w[0].score >= w[1].score), "not sorted by score");
+    }
+}

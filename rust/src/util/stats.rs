@@ -90,6 +90,22 @@ impl Samples {
         }
         let mut sorted = self.xs.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self::percentile_of_sorted(&sorted, p)
+    }
+
+    /// Several percentiles with one clone + sort (latency reports ask for
+    /// p50/p95/p99/max together; per-call [`Self::percentile`] would re-sort
+    /// each time).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.xs.is_empty() {
+            return vec![f64::NAN; ps.len()];
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| Self::percentile_of_sorted(&sorted, p)).collect()
+    }
+
+    fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
         let rank = (p / 100.0) * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -108,6 +124,37 @@ impl Samples {
     pub fn p95(&self) -> f64 {
         self.percentile(95.0)
     }
+}
+
+/// Pearson chi-square statistic of observed `counts` against a probability
+/// vector `probs` over `total` draws: `Σ (obs − exp)² / exp` over the bins
+/// with non-negligible expected mass, plus one *pooled* bin holding every
+/// tiny-expectation bin (observed and expected summed, denominator clamped
+/// to 1). Pooling — rather than dropping — keeps mass misplaced onto
+/// ~zero-probability classes visible without letting a near-zero
+/// denominator dominate the statistic. Under the null the statistic is
+/// ≈ χ²(df) with `df ≈ kept_bins − 1`: tests compare against
+/// `df + c·√(2·df)` for a c-sigma bound. Used by the sharded-vs-unsharded
+/// draw-distribution tests.
+pub fn chi_square_stat(counts: &[u64], probs: &[f64], total: f64) -> f64 {
+    assert_eq!(counts.len(), probs.len(), "counts/probs length mismatch");
+    let mut stat = 0.0f64;
+    let (mut pooled_obs, mut pooled_exp) = (0.0f64, 0.0f64);
+    for (&c, &p) in counts.iter().zip(probs) {
+        let expect = p * total;
+        if expect >= 1.0 {
+            let diff = c as f64 - expect;
+            stat += diff * diff / expect;
+        } else {
+            pooled_obs += c as f64;
+            pooled_exp += expect;
+        }
+    }
+    if pooled_obs > 0.0 || pooled_exp > 0.0 {
+        let diff = pooled_obs - pooled_exp;
+        stat += diff * diff / pooled_exp.max(1.0);
+    }
+    stat
 }
 
 /// Wall-clock stopwatch with named laps; powers the trainer's step-phase
@@ -215,6 +262,10 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!(s.p95() > 90.0 && s.p95() < 100.0);
+        // batch form sorts once and matches the per-call results
+        let batch = s.percentiles(&[0.0, 50.0, 95.0, 100.0]);
+        assert_eq!(batch, vec![s.percentile(0.0), s.p50(), s.p95(), s.percentile(100.0)]);
+        assert!(Samples::new().percentiles(&[50.0]).iter().all(|x| x.is_nan()));
     }
 
     #[test]
@@ -226,6 +277,41 @@ mod tests {
         assert!((p.total() - 1.25).abs() < 1e-9);
         let rep = p.report();
         assert!(rep.contains("sample") && rep.contains("40.0%"));
+    }
+
+    #[test]
+    fn chi_square_accepts_true_distribution_and_rejects_wrong_one() {
+        use crate::util::rng::Rng;
+        let probs = [0.5, 0.25, 0.125, 0.125];
+        let mut rng = Rng::new(3);
+        let total = 40_000u64;
+        let mut counts = [0u64; 4];
+        for _ in 0..total {
+            let u = rng.f64();
+            let mut acc = 0.0;
+            let mut idx = probs.len() - 1;
+            for (i, p) in probs.iter().enumerate() {
+                acc += p;
+                if u < acc {
+                    idx = i;
+                    break;
+                }
+            }
+            counts[idx] += 1;
+        }
+        let stat = chi_square_stat(&counts, &probs, total as f64);
+        // df = 3: mean 3, std √6 ≈ 2.45; 3 + 5σ ≈ 15
+        assert!(stat < 15.0, "true distribution rejected: {stat}");
+        let wrong = [0.25, 0.25, 0.25, 0.25];
+        let bad = chi_square_stat(&counts, &wrong, total as f64);
+        assert!(bad > 100.0, "wrong distribution accepted: {bad}");
+        // tiny-expectation bins are pooled (clamped denominator), not
+        // divided by ~0 — and not silently dropped: dumping half the mass
+        // onto a ~zero-probability bin must blow the statistic up
+        let sparse = chi_square_stat(&[0, 1], &[1.0 - 1e-9, 1e-9], 100.0);
+        assert!(sparse.is_finite());
+        let misplaced = chi_square_stat(&[50_000, 50_000], &[1.0 - 1e-9, 1e-9], 100_000.0);
+        assert!(misplaced > 1e6, "misplaced mass accepted: {misplaced}");
     }
 
     #[test]

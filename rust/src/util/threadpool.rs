@@ -13,6 +13,39 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
 }
 
+/// Mutex-guarded freelist of reusable scratch states: `take` pops a pooled
+/// item (or builds a fresh one when empty), `put` returns it. Total
+/// allocations are bounded by the peak number of concurrent users rather
+/// than the call count — the discipline both the kernel tree's
+/// `DrawScratch` pool and the shard router's `ShardScratch` pool share.
+/// Contents must never affect results (kss scratches are invalidated by
+/// generation counters on checkout).
+pub struct Pool<T> {
+    items: std::sync::Mutex<Vec<T>>,
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Pool::new()
+    }
+}
+
+impl<T> Pool<T> {
+    pub fn new() -> Pool<T> {
+        Pool { items: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a pooled item, or build one with `make` when the pool is empty.
+    pub fn take(&self, make: impl FnOnce() -> T) -> T {
+        self.items.lock().expect("scratch pool poisoned").pop().unwrap_or_else(make)
+    }
+
+    /// Return an item for reuse by later `take`s.
+    pub fn put(&self, item: T) {
+        self.items.lock().expect("scratch pool poisoned").push(item);
+    }
+}
+
 /// Apply `f(base_index, chunk)` to contiguous chunks of `items`, one chunk
 /// per worker. The partition depends only on `items.len()` and `threads`
 /// (static chunking), so callers that derive per-index state (per-row RNG

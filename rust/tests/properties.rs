@@ -47,7 +47,16 @@ fn prop_every_sampler_q_is_valid_and_consistent() {
             })
             .collect();
         let stats = CorpusStats { class_counts: counts, bigram_counts: Some(pairs) };
-        for name in ["uniform", "unigram", "bigram", "softmax", "quadratic", "quadratic-flat", "quartic"] {
+        for name in [
+            "uniform",
+            "unigram",
+            "bigram",
+            "softmax",
+            "quadratic",
+            "quadratic-sharded",
+            "quadratic-flat",
+            "quartic",
+        ] {
             let sampler =
                 build_sampler(name, n, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
             let input = SampleInput {
@@ -111,9 +120,16 @@ fn prop_sample_batch_reproduces_per_row_streams_for_every_sampler() {
             .collect();
         let stats = CorpusStats { class_counts: counts, bigram_counts: Some(pairs) };
         let step_seed = g.case_seed ^ 0x77;
-        for name in
-            ["uniform", "unigram", "bigram", "softmax", "quadratic", "quadratic-flat", "quartic"]
-        {
+        for name in [
+            "uniform",
+            "unigram",
+            "bigram",
+            "softmax",
+            "quadratic",
+            "quadratic-sharded",
+            "quadratic-flat",
+            "quartic",
+        ] {
             let sampler =
                 build_sampler(name, n_classes, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
             let inputs = BatchSampleInput {
