@@ -5,7 +5,10 @@
 //! report the final full-softmax eval loss, plus the full-softmax reference
 //! line. The paper's claim to reproduce: the quadratic kernel reaches
 //! full-softmax quality with one to two orders of magnitude fewer samples
-//! than uniform, and softmax sampling's quality is independent of m.
+//! than uniform, and softmax sampling's quality is independent of m. The
+//! `rff` rows add the random-feature exp-kernel family (D = 4d), expected
+//! to land between quadratic and the exact-softmax line; see
+//! `ablation_rff_dim` for the D sweep.
 //!
 //! `cargo bench --bench fig2_bias` (quick: tiny models) or
 //! `KSS_BENCH_SCALE=full cargo bench --bench fig2_bias` (paper scale:
@@ -32,7 +35,12 @@ fn main() -> anyhow::Result<()> {
                         eval_batches: 10,
                         ..Default::default()
                     },
-                    samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+                    samplers: vec![
+                        "uniform".into(),
+                        "quadratic".into(),
+                        "rff".into(),
+                        "softmax".into(),
+                    ],
                     ms: vec![4, 8],
                     include_full: true,
                 },
@@ -54,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                         "bigram".into(),
                         "quadratic".into(),
                         "quartic".into(),
+                        "rff".into(),
                         "softmax".into(),
                     ],
                     ms: vec![4],
@@ -81,6 +90,7 @@ fn main() -> anyhow::Result<()> {
                             "bigram".into(),
                             "quadratic".into(),
                             "quartic".into(),
+                            "rff".into(),
                             "softmax".into(),
                         ],
                         ms: ms.clone(),
@@ -98,7 +108,12 @@ fn main() -> anyhow::Result<()> {
                             eval_batches: 10,
                             ..Default::default()
                         },
-                        samplers: vec!["uniform".into(), "quadratic".into(), "softmax".into()],
+                        samplers: vec![
+                            "uniform".into(),
+                            "quadratic".into(),
+                            "rff".into(),
+                            "softmax".into(),
+                        ],
                         ms: ms.clone(),
                         include_full: true,
                     },

@@ -15,8 +15,8 @@
 //! ```
 
 use kss::sampler::{
-    FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
-    SoftmaxSampler, UniformSampler,
+    FlatKernelSampler, KernelKind, KernelTreeSampler, PositiveRffMap, QuadraticMap, RffConfig,
+    Sample, SampleInput, Sampler, SoftmaxSampler, UniformSampler,
 };
 use kss::util::rng::Rng;
 
@@ -42,11 +42,18 @@ fn main() -> anyhow::Result<()> {
 
     let mut tree = KernelTreeSampler::new(QuadraticMap::new(D, 100.0), N, None);
     tree.reset_embeddings(&w, N, D);
+    // the rff tree at the registry default D = 4d: exp-kernel proposals
+    // through the same divide-and-conquer machinery
+    let mut rff_tree =
+        KernelTreeSampler::new(PositiveRffMap::new(RffConfig::new(D, 0x2FF)), N, None);
+    rff_tree.reset_embeddings(&w, N, D);
     let samplers: Vec<Box<dyn Sampler>> = vec![
         Box::new(UniformSampler::new(N)),
         Box::new(FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 })),
         Box::new(tree),
         Box::new(FlatKernelSampler::new(KernelKind::Quartic)),
+        Box::new(rff_tree),
+        Box::new(FlatKernelSampler::new(KernelKind::Exp)),
         Box::new(SoftmaxSampler::new(N, false)),
     ];
 
@@ -67,7 +74,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "\nExpected shape (paper §2.3/Thm 2.1): softmax ≈ 0 at every m (only\n\
-         Monte-Carlo noise); quadratic/quartic well below uniform; all biased\n\
+         Monte-Carlo noise); rff-flat (= exp kernel = softmax) ≈ 0 too; the\n\
+         rff tree near it, quadratic/quartic well below uniform; all biased\n\
          samplers improve as m grows."
     );
     Ok(())

@@ -117,3 +117,21 @@ def phi_quadratic_ref(a, alpha=100.0):
     `rust/src/sampler/kernel/mod.rs` mirrors."""
     outer = jnp.einsum("i,j->ij", a, a).reshape(-1)
     return jnp.concatenate([jnp.sqrt(jnp.asarray(alpha, a.dtype)) * outer, jnp.ones((1,), a.dtype)])
+
+
+def phi_rff_ref(a, omega):
+    """Positive random feature map of the exponential kernel (Rawat et al.,
+    2019): ``φ(a)_i = exp(ω_iᵀa − ‖a‖²/2) / √D`` for ``ω`` of shape (D, d),
+    so ``E_ω[⟨φ(a), φ(b)⟩] = exp(aᵀb)`` and every component is positive.
+
+    Pins the layout the rust ``PositiveRffMap`` mirrors
+    (`rust/src/sampler/rff/map.rs`): component ``i`` is frequency *row* ``i``
+    of the row-major (D × d) ``ω``, prefactor folded into each component."""
+    proj = omega @ a
+    return jnp.exp(proj - 0.5 * jnp.dot(a, a)) / jnp.sqrt(jnp.asarray(omega.shape[0], a.dtype))
+
+
+def rff_kernel_ref(a, b, omega):
+    """The realized random kernel ``K̂(a,b) = ⟨φ(a), φ(b)⟩`` in its factored
+    closed form — the quantity the rust tree's leaf scoring computes."""
+    return jnp.exp(omega @ (a + b) - 0.5 * (jnp.dot(a, a) + jnp.dot(b, b))).sum() / omega.shape[0]

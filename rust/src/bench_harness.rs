@@ -248,9 +248,16 @@ pub fn tables_to_json(label: &str, tables: &[(&str, &[BenchRow])]) -> Value {
 /// under `cargo bench`). A write failure is reported but never fails the
 /// bench itself.
 pub fn write_json(label: &str, tables: &[(&str, &[BenchRow])]) {
+    write_json_value(label, &tables_to_json(label, tables));
+}
+
+/// [`write_json`] for benches whose result rows are not timing-shaped
+/// (e.g. the bias/TV tables of `ablation_rff_dim`): same destination rule
+/// (`KSS_BENCH_JSON_DIR`), same never-fail contract, caller-supplied
+/// document.
+pub fn write_json_value(label: &str, doc: &Value) {
     let dir = std::env::var("KSS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
     let path = std::path::Path::new(&dir).join(format!("BENCH_{label}.json"));
-    let doc = tables_to_json(label, tables);
     match std::fs::write(&path, doc.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -20,8 +20,9 @@ use crate::coordinator::config::{build_dataset, TrainConfig};
 use crate::coordinator::metrics::{EvalPoint, MetricsSink};
 use crate::data::{Batch, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
+use crate::sampler::kernel::FeatureMap;
 use crate::sampler::{build_sampler, BatchSampleInput, QuadraticMap, Sample, Sampler};
-use crate::serve::{ShardSet, SnapshotStore, TreeSnapshot};
+use crate::serve::{ShardPublisher, ShardSet, SnapshotStore, TreeSnapshot};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
 use crate::util::threadpool::default_threads;
@@ -56,8 +57,9 @@ pub struct Trainer<'e> {
     step_count: usize,
     /// Serving publisher (see [`Trainer::enable_serving`]): a sharded
     /// mirror of the output-embedding table that republishes a snapshot
-    /// generation after every sampled step.
-    publisher: Option<ShardSet<QuadraticMap>>,
+    /// generation after every sampled step. Kernel-erased so the trainer
+    /// can publish whichever kernel family it trains (quadratic, rff, …).
+    publisher: Option<Box<dyn ShardPublisher>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -104,14 +106,28 @@ impl<'e> Trainer<'e> {
     /// points and shard offsets — exactly what
     /// [`crate::serve::SamplingService::start`] takes — so online readers
     /// sample the training-fresh distribution while the trainer keeps
-    /// stepping.
+    /// stepping. The quadratic-kernel convenience wrapper around
+    /// [`Trainer::enable_serving_with`].
     #[allow(clippy::type_complexity)]
     pub fn enable_serving(
         &mut self,
         shards: usize,
     ) -> Result<(Vec<Arc<SnapshotStore<TreeSnapshot<QuadraticMap>>>>, Vec<u32>)> {
+        let map = QuadraticMap::new(self.spec.d, self.spec.alpha as f64);
+        self.enable_serving_with(map, shards)
+    }
+
+    /// [`Trainer::enable_serving`] over any kernel family: the publisher is
+    /// stored kernel-erased, the returned stores keep the concrete map type
+    /// the caller's [`crate::serve::SamplingService`] needs.
+    #[allow(clippy::type_complexity)]
+    pub fn enable_serving_with<M: FeatureMap + Clone + 'static>(
+        &mut self,
+        map: M,
+        shards: usize,
+    ) -> Result<(Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>, Vec<u32>)> {
         let set = ShardSet::new(
-            QuadraticMap::new(self.spec.d, self.spec.alpha as f64),
+            map,
             self.spec.n_classes,
             shards,
             None,
@@ -119,13 +135,13 @@ impl<'e> Trainer<'e> {
         );
         let stores = set.stores();
         let offsets = set.offsets().to_vec();
-        self.publisher = Some(set);
+        self.publisher = Some(Box::new(set));
         Ok((stores, offsets))
     }
 
     /// Aggregated publish counters (None until serving is enabled).
     pub fn publish_stats(&self) -> Option<crate::serve::PublishStats> {
-        self.publisher.as_ref().map(|p| p.stats())
+        self.publisher.as_ref().map(|p| p.publish_stats())
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -283,7 +299,7 @@ impl<'e> Trainer<'e> {
             // readers pick up generation G+1 at their next batch while any
             // in-flight request finishes on G
             if let Some(set) = &mut self.publisher {
-                set.update_and_publish(&changed, &rows_flat);
+                set.update_and_publish_rows(&changed, &rows_flat);
                 self.phases.add("publish", sw.lap());
             }
         } else {

@@ -80,7 +80,9 @@ fn serve_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "classes", help: "catalog size (classes)", default: Some("10000".into()) },
         OptSpec { name: "d", help: "embedding dimension", default: Some("16".into()) },
+        OptSpec { name: "kernel", help: "kernel family (quadratic|rff)", default: Some("quadratic".into()) },
         OptSpec { name: "alpha", help: "quadratic kernel α", default: Some("100".into()) },
+        OptSpec { name: "rff-dim", help: "rff feature dim D (0 = 4d)", default: Some("0".into()) },
         OptSpec { name: "shards", help: "shard count", default: Some("4".into()) },
         OptSpec { name: "workers", help: "serve worker threads", default: Some("2".into()) },
         OptSpec { name: "clients", help: "closed-loop client threads", default: Some("4".into()) },
@@ -117,6 +119,12 @@ fn run(argv: Vec<String>) -> Result<()> {
     if args.wants_help() || cmd == "help" {
         println!("{}", args.usage());
         println!("subcommands: info, train, experiment, demo, serve (own flags: kss serve --help)");
+        // one registry drives --sampler validation and this help text —
+        // new kernels appear here automatically
+        println!("samplers (--sampler/--samplers):");
+        for info in kss::sampler::SAMPLER_REGISTRY {
+            println!("  {:<18} {}", info.name, info.summary);
+        }
         return Ok(());
     }
     let artifacts = PathBuf::from(args.get_string_or("artifacts", "artifacts"));
@@ -135,7 +143,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let cfg = LoadGenConfig {
         n_classes: args.get_usize("classes", 10_000)?,
         d: args.get_usize("d", 16)?,
+        kernel: kss::serve::ServeKernel::parse(&args.get_string_or("kernel", "quadratic"))?,
         alpha: args.get_f64("alpha", 100.0)?,
+        rff_dim: args.get_usize("rff-dim", 0)?,
         shards: args.get_usize("shards", 4)?,
         workers: args.get_usize("workers", 2)?,
         clients: args.get_usize("clients", 4)?,
@@ -156,8 +166,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     };
     let miss_threshold = args.get_f64("miss-threshold", 0.05)?;
     info!(
-        "serve load test: {} classes × d={} in {} shards, {} workers, {} clients × {} requests",
-        cfg.n_classes, cfg.d, cfg.shards, cfg.workers, cfg.clients, cfg.requests
+        "serve load test: {} classes × d={} ({:?} kernel) in {} shards, \
+         {} workers, {} clients × {} requests",
+        cfg.n_classes, cfg.d, cfg.kernel, cfg.shards, cfg.workers, cfg.clients, cfg.requests
     );
     let report = kss::serve::run_load_test(&cfg);
     println!("serve load test ({:.2}s wall):", report.wall_s);

@@ -1,28 +1,107 @@
 //! Flat (exact, O(n)) kernel sampling — the oracle the tree is tested
 //! against, and the only implementation for kernels whose feature map is
-//! intractable (quartic: D = O(d⁴)).
+//! intractable (quartic: D = O(d⁴)) or infinite-dimensional (exact exp,
+//! the `"rff-flat"` oracle the random-feature tree approximates).
 //!
 //! Consumes the logits row `o = W h` (from the score_all artifact, the same
-//! input the exact-softmax sampler uses) since both of the paper's kernels
-//! are functions of the dot product: `K = f(⟨h, w_i⟩)`.
+//! input the exact-softmax sampler uses) since all of these kernels are
+//! functions of the dot product: `K = f(⟨h, w_i⟩)`.
+//!
+//! Steady-state sampling allocates nothing: the per-row weight and CDF
+//! buffers live in a [`Pool`]-backed scratch checked out per call (and per
+//! worker in the batched path), the same freelist discipline as the tree's
+//! `DrawScratch`. `Exp` rows are weighted relative to their max logit, so
+//! the oracle is overflow-proof at any logit scale.
 
 use super::KernelKind;
-use crate::sampler::{Needs, Sample, SampleInput, Sampler};
-use crate::util::rng::{Cdf, Rng};
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{fill_cum, sample_cum, Rng};
+use crate::util::threadpool::{par_chunks_mut, Pool};
 use anyhow::Result;
+use std::sync::Mutex;
+
+/// Reusable per-caller buffers: shifted weights and their inclusive f64
+/// prefix sums (the same arithmetic `util::rng::Cdf` uses, kept in a
+/// caller-owned arena so repeated rows never reallocate).
+#[derive(Default)]
+struct FlatScratch {
+    w: Vec<f32>,
+    cum: Vec<f64>,
+}
+
+/// One row's precomputed sampling state: the `Exp` shift and the total
+/// kernel mass. [`FlatKernelSampler::prob_prepared`] answers per-class
+/// probability queries in O(1) against it instead of re-summing all n
+/// logits per class.
+#[derive(Clone, Copy, Debug)]
+pub struct PreparedRow {
+    shift: f64,
+    total: f64,
+}
+
+impl PreparedRow {
+    /// Total (shifted) kernel mass of the row.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+}
 
 /// Exact sampler for `q_i ∝ f(o_i)`.
 pub struct FlatKernelSampler {
     kind: KernelKind,
+    /// Freelist of weight/CDF scratches (bounded by max concurrent users).
+    scratch_pool: Pool<FlatScratch>,
 }
 
 impl FlatKernelSampler {
     pub fn new(kind: KernelKind) -> FlatKernelSampler {
-        FlatKernelSampler { kind }
+        FlatKernelSampler { kind, scratch_pool: Pool::new() }
     }
 
-    fn weights(&self, logits: &[f32]) -> Vec<f32> {
-        logits.iter().map(|&o| self.kind.weight(o) as f32).collect()
+    /// Precompute the row's shift + total once (O(n)); pair with
+    /// [`Self::prob_prepared`] for O(1) per-class queries. Callers scoring
+    /// many classes of one row (tests, the gradient-bias bench) should use
+    /// this instead of [`Sampler::prob`], which prepares per call.
+    pub fn prepare(&self, logits: &[f32]) -> PreparedRow {
+        let shift = self.kind.shift(logits);
+        let total: f64 = logits.iter().map(|&o| self.kind.weight_shifted(o, shift)).sum();
+        PreparedRow { shift, total }
+    }
+
+    /// Probability of `class` given a row prepared by [`Self::prepare`].
+    pub fn prob_prepared(&self, prepared: &PreparedRow, logits: &[f32], class: u32) -> f64 {
+        self.kind.weight_shifted(logits[class as usize], prepared.shift) / prepared.total
+    }
+
+    /// Fill the scratch's weight + CDF arenas for one row and draw `m`
+    /// samples — the single code path behind both `sample` and
+    /// `sample_batch`, so the batched result is the per-row stream by
+    /// construction. Draw semantics are [`sample_cum`]'s (the same
+    /// implementation `Cdf` uses), so the zero-weight-tail invariant lives
+    /// in one place; only the buffers are caller-owned here.
+    fn sample_into(
+        &self,
+        logits: &[f32],
+        m: usize,
+        rng: &mut Rng,
+        s: &mut FlatScratch,
+        out: &mut Sample,
+    ) -> Result<()> {
+        out.clear();
+        let shift = self.kind.shift(logits);
+        s.w.clear();
+        s.w.extend(logits.iter().map(|&o| self.kind.weight_shifted(o, shift) as f32));
+        let total = fill_cum(&s.w, &mut s.cum);
+        anyhow::ensure!(total > 0.0 && total.is_finite(), "degenerate kernel weights");
+        for _ in 0..m {
+            let idx = sample_cum(&s.cum, total, rng);
+            let lo = if idx == 0 { 0.0 } else { s.cum[idx - 1] };
+            let q = (s.cum[idx] - lo) / total;
+            // the clamp keeps q > 0 even if the ratio to a huge total
+            // underflows
+            out.push(idx as u32, q.max(f64::MIN_POSITIVE));
+        }
+        Ok(())
     }
 }
 
@@ -38,22 +117,64 @@ impl Sampler for FlatKernelSampler {
     fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
         let logits =
             input.logits.ok_or_else(|| anyhow::anyhow!("flat kernel sampler needs logits"))?;
-        out.clear();
-        let w = self.weights(logits);
-        let cdf = Cdf::new(&w).ok_or_else(|| anyhow::anyhow!("degenerate kernel weights"))?;
-        for _ in 0..m {
-            let c = cdf.sample(rng);
-            // Cdf::sample only returns positive-weight indices; the clamp
-            // keeps q > 0 even if the ratio to a huge total underflows.
-            out.push(c as u32, cdf.prob(c).max(f64::MIN_POSITIVE));
+        let mut scratch = self.scratch_pool.take(FlatScratch::default);
+        let res = self.sample_into(logits, m, rng, &mut scratch, out);
+        self.scratch_pool.put(scratch);
+        res
+    }
+
+    /// Batched engine: one weight/CDF scratch per worker, reused across all
+    /// of that worker's rows (zero steady-state allocation — the default
+    /// fan-out would pay a fresh weight `Vec` + `Cdf` per row). Row `i`
+    /// draws from [`row_rng`]`(step_seed, i)`, bit-identical to the
+    /// per-example loop: both paths run [`Self::sample_into`].
+    ///
+    /// Shape validation cannot rule out a *degenerate* row (NaN logits
+    /// from a diverging model, or weights overflowing the f32 cast), which
+    /// the per-row path reports as a recoverable `Err` — so the fan-out
+    /// records the first failure and surfaces it instead of panicking a
+    /// worker.
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        let logits_all = inputs.logits.expect("validated: flat kernel needs logits");
+        let nc = inputs.n_classes;
+        let failed: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut scratch = self.scratch_pool.take(FlatScratch::default);
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let logits = &logits_all[i * nc..(i + 1) * nc];
+                let mut rng = row_rng(step_seed, i);
+                if let Err(e) = self.sample_into(logits, m, &mut rng, &mut scratch, slot) {
+                    let mut first = failed.lock().expect("failure slot poisoned");
+                    first.get_or_insert(e.context(format!("batch row {i}")));
+                    break;
+                }
+            }
+            self.scratch_pool.put(scratch);
+        });
+        match failed.into_inner().expect("failure slot poisoned") {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
-        Ok(())
     }
 
     fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
         let logits = input.logits?;
-        let total: f64 = logits.iter().map(|&o| self.kind.weight(o)).sum();
-        Some(self.kind.weight(logits[class as usize]) / total)
+        let prepared = self.prepare(logits);
+        Some(self.prob_prepared(&prepared, logits, class))
     }
 }
 
@@ -61,6 +182,7 @@ impl Sampler for FlatKernelSampler {
 mod tests {
     use super::*;
     use crate::sampler::test_util::empirical_tv;
+    use crate::util::stats::chi_square_stat;
 
     #[test]
     fn quadratic_flat_matches_kernel_distribution() {
@@ -96,6 +218,177 @@ mod tests {
         let input = SampleInput { logits: Some(&logits), ..Default::default() };
         for c in 0..8u32 {
             assert!((s.prob(&input, c).unwrap() - 0.125).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exp_flat_is_the_softmax_distribution() {
+        // q ∝ exp(o) IS softmax(o): the Theorem 2.1 unbiased distribution,
+        // and the target the random-feature tree approximates
+        let logits = vec![0.4f32, -1.2, 2.0, 0.0, -0.3, 1.1];
+        let s = FlatKernelSampler::new(KernelKind::Exp);
+        assert_eq!(s.name(), "rff-flat");
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let mx = 2.0f64;
+        let w: Vec<f64> = logits.iter().map(|&o| ((o as f64) - mx).exp()).collect();
+        let z: f64 = w.iter().sum();
+        for c in 0..logits.len() as u32 {
+            let want = w[c as usize] / z;
+            let got = s.prob(&input, c).unwrap();
+            assert!((got - want).abs() < 1e-12 * want.max(1e-12), "class {c}: {got} vs {want}");
+        }
+        // huge logits: the shift keeps weights finite and the distribution
+        // unchanged relative to the small-logit row (tolerance: f32
+        // rounding of o + 400 perturbs exponents by ~3e-5)
+        let big: Vec<f32> = logits.iter().map(|&o| o + 400.0).collect();
+        let input_big = SampleInput { logits: Some(&big), ..Default::default() };
+        for c in 0..logits.len() as u32 {
+            let a = s.prob(&input, c).unwrap();
+            let b = s.prob(&input_big, c).unwrap();
+            assert!((a - b).abs() < 1e-3 * a.max(1e-12), "class {c}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quartic_flat_chi_square_goodness_of_fit() {
+        // empirical draw counts on the quartic path against the closed-form
+        // distribution (the flat sampler's sampling, not just prob())
+        let mut rng = Rng::new(41);
+        let logits: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let s = FlatKernelSampler::new(KernelKind::Quartic);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let w: Vec<f64> = logits.iter().map(|&o| (o as f64).powi(4) + 1.0).collect();
+        let z: f64 = w.iter().sum();
+        let expected: Vec<f64> = w.iter().map(|x| x / z).collect();
+        let mut counts = vec![0u64; logits.len()];
+        let mut out = Sample::default();
+        let draws = 200_000usize;
+        let m = 50;
+        for _ in 0..draws / m {
+            s.sample(&input, m, &mut rng, &mut out).unwrap();
+            for &c in &out.classes {
+                counts[c as usize] += 1;
+            }
+        }
+        let stat = chi_square_stat(&counts, &expected, draws as f64);
+        // df = 39; mean 39, std √78 ≈ 8.8 — 39 + 5σ ≈ 83
+        assert!(stat < 83.0, "chi-square {stat} too large for df=39");
+    }
+
+    #[test]
+    fn exp_flat_chi_square_goodness_of_fit() {
+        // the rff-flat oracle must *sample* softmax(o), not just report it
+        let mut rng = Rng::new(43);
+        let logits: Vec<f32> = (0..30).map(|_| rng.normal_f32(0.0, 1.2)).collect();
+        let s = FlatKernelSampler::new(KernelKind::Exp);
+        let input = SampleInput { logits: Some(&logits), ..Default::default() };
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let w: Vec<f64> = logits.iter().map(|&o| ((o as f64) - mx).exp()).collect();
+        let z: f64 = w.iter().sum();
+        let expected: Vec<f64> = w.iter().map(|x| x / z).collect();
+        let mut counts = vec![0u64; logits.len()];
+        let mut out = Sample::default();
+        let draws = 200_000usize;
+        let m = 50;
+        for _ in 0..draws / m {
+            s.sample(&input, m, &mut rng, &mut out).unwrap();
+            for &c in &out.classes {
+                counts[c as usize] += 1;
+            }
+        }
+        let stat = chi_square_stat(&counts, &expected, draws as f64);
+        // df = 29; mean 29, std √58 ≈ 7.6 — 29 + 5σ ≈ 67
+        assert!(stat < 67.0, "chi-square {stat} too large for df=29");
+    }
+
+    #[test]
+    fn flat_sample_batch_reproduces_per_row_streams() {
+        // the native batched engine (pooled scratch) must be bit-identical
+        // to the per-example loop for every kernel kind and thread count
+        let (rows, nc, m) = (9, 24, 6);
+        let mut rng = Rng::new(57);
+        let logits: Vec<f32> = (0..rows * nc).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for kind in [
+            KernelKind::Quadratic { alpha: 100.0 },
+            KernelKind::Quartic,
+            KernelKind::Exp,
+        ] {
+            let s = FlatKernelSampler::new(kind);
+            let step_seed = 0xF1A7;
+            let mut per_row: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            for (i, slot) in per_row.iter_mut().enumerate() {
+                let row = &logits[i * nc..(i + 1) * nc];
+                let input = SampleInput { logits: Some(row), ..Default::default() };
+                let mut r = row_rng(step_seed, i);
+                s.sample(&input, m, &mut r, slot).unwrap();
+            }
+            for threads in [0usize, 1, 3, 8] {
+                let inputs = BatchSampleInput {
+                    n: rows,
+                    n_classes: nc,
+                    logits: Some(&logits),
+                    threads,
+                    ..Default::default()
+                };
+                let mut batched: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+                s.sample_batch(&inputs, m, step_seed, &mut batched).unwrap();
+                for (i, (a, b)) in batched.iter().zip(&per_row).enumerate() {
+                    assert_eq!(a.classes, b.classes, "{} threads {threads} row {i}", s.name());
+                    assert_eq!(a.q, b.q, "{} threads {threads} row {i}", s.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_batch_row_errors_instead_of_panicking() {
+        // shape validation can't catch a NaN row or an f32 weight overflow;
+        // the fan-out must surface the per-row Err, not abort a worker
+        let (rows, nc, m) = (3usize, 4usize, 4usize);
+        for poison in [f32::NAN, 1e30] {
+            let s = FlatKernelSampler::new(KernelKind::Quadratic { alpha: 100.0 });
+            let mut logits = vec![0.5f32; rows * nc];
+            logits[nc] = poison; // row 1 degenerates (NaN total / inf weight)
+            let inputs = BatchSampleInput {
+                n: rows,
+                n_classes: nc,
+                logits: Some(&logits),
+                threads: 2,
+                ..Default::default()
+            };
+            let mut out: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+            let err = s.sample_batch(&inputs, m, 9, &mut out).unwrap_err();
+            assert!(err.to_string().contains("batch row 1"), "{err}");
+            // the per-row path reports the same failure recoverably
+            let row = &logits[nc..2 * nc];
+            let input = SampleInput { logits: Some(row), ..Default::default() };
+            let mut one = Sample::default();
+            let mut rng = Rng::new(1);
+            assert!(s.sample(&input, m, &mut rng, &mut one).is_err());
+            // and the sampler still works on clean rows afterwards
+            let clean = &logits[..nc];
+            let input = SampleInput { logits: Some(clean), ..Default::default() };
+            s.sample(&input, m, &mut rng, &mut one).unwrap();
+            assert_eq!(one.classes.len(), m);
+        }
+    }
+
+    #[test]
+    fn prepared_prob_matches_trait_prob() {
+        let mut rng = Rng::new(71);
+        let logits: Vec<f32> = (0..50).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        for kind in [KernelKind::Quadratic { alpha: 10.0 }, KernelKind::Quartic, KernelKind::Exp] {
+            let s = FlatKernelSampler::new(kind);
+            let input = SampleInput { logits: Some(&logits), ..Default::default() };
+            let prepared = s.prepare(&logits);
+            let mut total = 0.0;
+            for c in 0..logits.len() as u32 {
+                let fast = s.prob_prepared(&prepared, &logits, c);
+                let slow = s.prob(&input, c).unwrap();
+                assert_eq!(fast, slow, "{} class {c}", s.name());
+                total += fast;
+            }
+            assert!((total - 1.0).abs() < 1e-9, "{}: Σq = {total}", s.name());
         }
     }
 }

@@ -11,9 +11,13 @@
 //!   python/compile/kernels/ref.py (row-major outer product, constant last).
 //! * [`flat`] — exact O(n·d) sampling directly from kernel scores; the
 //!   correctness oracle for the tree and the only option for kernels with
-//!   intractable feature maps (quartic: D = d⁴).
+//!   intractable feature maps (quartic: D = d⁴; exact exp: D = ∞).
 //! * [`tree`] — the paper's divide-and-conquer sampler (§3.2): O(D log n)
 //!   draws and updates via per-subset summaries `z(C)`.
+//!
+//! The random-feature approximation of the *exponential* kernel
+//! (`crate::sampler::rff`) plugs into the same [`FeatureMap`] machinery
+//! with a tunable D; [`KernelKind::Exp`] is its closed-form flat oracle.
 
 pub mod flat;
 pub mod multi;
@@ -25,6 +29,9 @@ pub trait FeatureMap: Send + Sync {
     fn d(&self) -> usize;
     /// Feature dimension D.
     fn dim(&self) -> usize;
+    /// Kernel-family name; doubles as the tree sampler's registry name
+    /// (`"quadratic"`, `"rff"`) — the sharded variant appends `-sharded`.
+    fn name(&self) -> &'static str;
     /// Write φ(a) into `out` (len = D). f64: the tree's z statistics are
     /// updated incrementally and must not drift.
     fn phi(&self, a: &[f32], out: &mut [f64]);
@@ -60,6 +67,10 @@ impl FeatureMap for QuadraticMap {
         self.d * self.d + 1
     }
 
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
     fn phi(&self, a: &[f32], out: &mut [f64]) {
         debug_assert_eq!(a.len(), self.d);
         debug_assert_eq!(out.len(), self.dim());
@@ -89,12 +100,35 @@ pub enum KernelKind {
     /// `o⁴ + 1` — the 4th-degree polynomial extra from Figure 2 (no
     /// tractable feature map: D = O(d⁴), so flat sampling only).
     Quartic,
+    /// `exp(o)` — the exponential kernel itself, i.e. the softmax
+    /// distribution (Theorem 2.1's unbiased case). The closed-form oracle
+    /// the `"rff"` random-feature tree approximates; registered as
+    /// `"rff-flat"`. Weights are computed relative to the row's max logit
+    /// (a per-row shift that cancels in every probability), so the flat
+    /// sampler never overflows on large logits.
+    Exp,
 }
 
 impl KernelKind {
-    /// Kernel value from a precomputed logit.
+    /// Per-row weight shift, subtracted from the logit before
+    /// [`Self::weight_shifted`]. Zero for the polynomial kernels; the row
+    /// max for `Exp`, where `exp(o − max)` keeps every weight in (0, 1] —
+    /// the shift cancels in `q = w_i / Σ w_j`, so the distribution (and
+    /// `prob`) is unchanged.
     #[inline]
-    pub fn weight(&self, o: f32) -> f64 {
+    pub fn shift(&self, logits: &[f32]) -> f64 {
+        match self {
+            KernelKind::Exp => {
+                logits.iter().fold(f64::NEG_INFINITY, |m, &o| m.max(o as f64))
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Kernel weight of one logit under a precomputed per-row
+    /// [`Self::shift`].
+    #[inline]
+    pub fn weight_shifted(&self, o: f32, shift: f64) -> f64 {
         let o = o as f64;
         match self {
             KernelKind::Quadratic { alpha } => alpha * o * o + 1.0,
@@ -102,13 +136,23 @@ impl KernelKind {
                 let o2 = o * o;
                 o2 * o2 + 1.0
             }
+            KernelKind::Exp => (o - shift).exp(),
         }
+    }
+
+    /// Unshifted kernel value from a precomputed logit (polynomial kernels
+    /// and tests; row-aware callers use [`Self::shift`] +
+    /// [`Self::weight_shifted`]).
+    #[inline]
+    pub fn weight(&self, o: f32) -> f64 {
+        self.weight_shifted(o, 0.0)
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             KernelKind::Quadratic { .. } => "quadratic-flat",
             KernelKind::Quartic => "quartic",
+            KernelKind::Exp => "rff-flat",
         }
     }
 }
@@ -158,6 +202,27 @@ mod tests {
         assert_eq!(f.weight(0.0), 1.0);
         assert_eq!(f.weight(2.0), 17.0);
         assert_eq!(f.weight(-2.0), 17.0);
+        let e = KernelKind::Exp;
+        assert_eq!(e.weight(0.0), 1.0);
+        assert!((e.weight(2.0) - (2.0f64).exp()).abs() < 1e-12);
+        assert!(e.weight(-2.0) < e.weight(0.0), "exp is monotone, not symmetric");
+    }
+
+    #[test]
+    fn exp_shift_cancels_in_ratios() {
+        // the max-logit shift must not change relative weights: w_i/w_j is
+        // exp(o_i - o_j) either way, and huge logits no longer overflow
+        let e = KernelKind::Exp;
+        let logits = vec![500.0f32, 498.0, 300.0];
+        let shift = e.shift(&logits);
+        assert_eq!(shift, 500.0);
+        let w: Vec<f64> = logits.iter().map(|&o| e.weight_shifted(o, shift)).collect();
+        assert!(w.iter().all(|x| x.is_finite() && *x > 0.0), "{w:?}");
+        assert!((w[0] / w[1] - (2.0f64).exp()).abs() < 1e-9);
+        // polynomial kernels ignore the shift entirely
+        let q = KernelKind::Quadratic { alpha: 2.0 };
+        assert_eq!(q.shift(&logits), 0.0);
+        assert_eq!(q.weight_shifted(3.0, 123.0), q.weight(3.0));
     }
 
     #[test]

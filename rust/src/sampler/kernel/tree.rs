@@ -930,8 +930,10 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
 }
 
 impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
+    /// The kernel family's registry name (`"quadratic"`, `"rff"`): the tree
+    /// is the canonical sampler of whichever kernel it hosts.
     fn name(&self) -> &str {
-        "quadratic"
+        self.map.name()
     }
 
     fn needs(&self) -> Needs {
@@ -1306,6 +1308,9 @@ mod tests {
         }
         fn dim(&self) -> usize {
             2
+        }
+        fn name(&self) -> &'static str {
+            "zero"
         }
         fn phi(&self, _a: &[f32], out: &mut [f64]) {
             out.fill(0.0);

@@ -13,9 +13,16 @@
 //! | bigram         | context only | no         | O(1) (alias)     | default fan-out     |
 //! | quadratic tree | yes          | yes        | O(D log n) §3.2  | native (arena+pool) |
 //! | quadratic shard| yes          | yes        | O(D log n) + S   | native (router+pool)|
-//! | quadratic flat | yes          | yes        | O(n) (oracle)    | default fan-out     |
-//! | quartic flat   | yes          | yes        | O(n)             | default fan-out     |
+//! | quadratic flat | yes          | yes        | O(n) (oracle)    | native (pooled CDF) |
+//! | quartic flat   | yes          | yes        | O(n)             | native (pooled CDF) |
+//! | rff tree       | yes          | yes        | O(D log n), D=4d | native (arena+pool) |
+//! | rff shard      | yes          | yes        | O(D log n) + S   | native (router+pool)|
+//! | rff flat (exp) | yes          | yes        | O(n) (oracle)    | native (pooled CDF) |
 //! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   | default fan-out     |
+//!
+//! The canonical name list (with one-line summaries for the CLI and the
+//! unknown-name error) is [`SAMPLER_REGISTRY`] — one table, so new kernels
+//! cannot drift out of the help text or the error message.
 //!
 //! All samplers are deterministic functions of the seeded [`Rng`] stream
 //! passed in, so experiments replay exactly.
@@ -39,6 +46,7 @@
 
 pub mod bigram;
 pub mod kernel;
+pub mod rff;
 pub mod softmax_exact;
 pub mod uniform;
 pub mod unigram;
@@ -51,6 +59,7 @@ pub use bigram::BigramSampler;
 pub use kernel::flat::FlatKernelSampler;
 pub use kernel::tree::KernelTreeSampler;
 pub use kernel::{KernelKind, QuadraticMap};
+pub use rff::{PositiveRffMap, RffConfig};
 pub use softmax_exact::SoftmaxSampler;
 pub use uniform::UniformSampler;
 pub use unigram::UnigramSampler;
@@ -283,9 +292,46 @@ pub struct CorpusStats {
     pub bigram_counts: Option<Vec<Vec<(u32, u64)>>>,
 }
 
-/// Build a sampler by name. `stats` feeds unigram/bigram; `w`/`d` seed the
-/// adaptive samplers' embedding mirror; `abs_logits` tells the softmax
-/// oracle to use the |o| prediction distribution (§3.3).
+/// One registry entry: the canonical sampler name plus the one-line
+/// summary shown by `kss --help` and the README table.
+pub struct SamplerInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The single source of truth for sampler names: the unknown-name error
+/// and the CLI help footer derive from this list mechanically, and the
+/// registry round-trip test pins every entry to a building sampler that
+/// reports exactly this name (the README table mirrors it by hand). Order
+/// is display order.
+pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
+    SamplerInfo { name: "uniform", summary: "uniform over classes (static baseline)" },
+    SamplerInfo { name: "unigram", summary: "corpus frequency, alias table (static)" },
+    SamplerInfo { name: "bigram", summary: "previous-token conditional (LM datasets)" },
+    SamplerInfo { name: "softmax", summary: "exact softmax oracle (Thm 2.1, O(n))" },
+    SamplerInfo { name: "quadratic", summary: "αo²+1 kernel tree (§3.2, D = d²+1)" },
+    SamplerInfo {
+        name: "quadratic-sharded",
+        summary: "quadratic tree split into S router-merged shards",
+    },
+    SamplerInfo { name: "quadratic-flat", summary: "αo²+1 exact O(n) oracle" },
+    SamplerInfo { name: "quartic", summary: "o⁴+1 flat sampler (no tractable φ)" },
+    SamplerInfo { name: "rff", summary: "positive random features ≈ exp kernel, D = 4d" },
+    SamplerInfo { name: "rff-sharded", summary: "rff tree split into S router-merged shards" },
+    SamplerInfo { name: "rff-flat", summary: "exact exp-kernel (softmax) flat oracle" },
+];
+
+/// Comma-separated registry names (error messages, CLI help).
+pub fn sampler_names() -> String {
+    SAMPLER_REGISTRY.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+}
+
+/// Build a sampler by name (see [`SAMPLER_REGISTRY`] for the list).
+/// `stats` feeds unigram/bigram; `w`/`d` seed the adaptive samplers'
+/// embedding mirror; `abs_logits` tells the softmax oracle to use the |o|
+/// prediction distribution (§3.3); `alpha` parameterizes the quadratic
+/// family (the rff family instead reads its fixed build seed and `D = 4d`
+/// from [`RffConfig`], so draws reproduce from `(config, seed)` alone).
 pub fn build_sampler(
     name: &str,
     n_classes: usize,
@@ -334,10 +380,23 @@ pub fn build_sampler(
             Box::new(FlatKernelSampler::new(KernelKind::Quadratic { alpha: alpha as f64 }))
         }
         "quartic" => Box::new(FlatKernelSampler::new(KernelKind::Quartic)),
-        other => anyhow::bail!(
-            "unknown sampler '{other}' (known: uniform, unigram, bigram, softmax, \
-             quadratic, quadratic-sharded, quadratic-flat, quartic)"
-        ),
+        // exp-kernel family via positive random features: D = 4d, feature
+        // draws pinned to RFF_BUILD_SEED (shard-consistent and
+        // reproducible from the config alone — same rule as the pinned
+        // shard count above)
+        "rff" => Box::new(KernelTreeSampler::new(
+            PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
+            n_classes,
+            None,
+        )),
+        "rff-sharded" => Box::new(crate::serve::shard::ShardedKernelSampler::new(
+            PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
+            n_classes,
+            4,
+            None,
+        )),
+        "rff-flat" => Box::new(FlatKernelSampler::new(KernelKind::Exp)),
+        other => anyhow::bail!("unknown sampler '{other}' (known: {})", sampler_names()),
     };
     if let Some(w) = w {
         s.reset_embeddings(w, n_classes, d);
@@ -422,6 +481,32 @@ mod tests {
         let serial = run(0);
         for threads in [1, 2, 5, 16] {
             assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn registry_is_the_single_source_of_names() {
+        // every registered name must build, and must report itself under
+        // exactly its registry name (the round-trip that keeps configs,
+        // logs and figures consistent)
+        let n = 16;
+        let stats = CorpusStats {
+            class_counts: vec![1; n],
+            bigram_counts: Some(vec![vec![(0, 1)]; n]),
+        };
+        let emb = vec![0.1f32; n * 3];
+        for info in SAMPLER_REGISTRY {
+            let s = build_sampler(info.name, n, 3, 100.0, false, Some(&stats), Some(&emb))
+                .unwrap_or_else(|e| panic!("registry name '{}' failed to build: {e}", info.name));
+            assert_eq!(s.name(), info.name, "name must round-trip through build_sampler");
+            assert!(!info.summary.is_empty());
+        }
+        // the unknown-name error derives from the same table — no
+        // hand-maintained list to drift
+        let err = build_sampler("no-such-kernel", n, 3, 100.0, false, None, None).unwrap_err();
+        let msg = err.to_string();
+        for info in SAMPLER_REGISTRY {
+            assert!(msg.contains(info.name), "error message misses '{}': {msg}", info.name);
         }
     }
 

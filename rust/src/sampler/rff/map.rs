@@ -1,0 +1,161 @@
+//! [`PositiveRffMap`] — positive random features for the exponential
+//! kernel, as a drop-in [`FeatureMap`] for the §3.2 tree machinery.
+//!
+//! ```text
+//! φ(a)_i = exp(ω_iᵀa − ‖a‖²/2) / √D          (every component > 0)
+//! K̂(a,b) = ⟨φ(a), φ(b)⟩ = 1/D Σ_i exp(ω_iᵀ(a+b) − (‖a‖²+‖b‖²)/2)
+//! E_ω[K̂(a,b)] = exp(aᵀb)                     (ω_i ~ N(0, I_d))
+//! ```
+//!
+//! The identity is `E exp(ωᵀx) = exp(‖x‖²/2)` for `ω ~ N(0, I)` applied to
+//! `x = a + b`: the prefactors turn `‖a+b‖²/2 − ‖a‖²/2 − ‖b‖²/2` into
+//! `aᵀb`. Positivity is what lets the whole subset-summary tree work: node
+//! masses `⟨φ(h), z(C)⟩` are sums of positive terms, so eq. (9) descent
+//! probabilities are honest probabilities and the zero-mass guards only
+//! ever fire on true underflow.
+
+use super::config::RffConfig;
+use crate::sampler::kernel::FeatureMap;
+
+/// Exponents are clamped here before `exp` so φ components and kernel
+/// values stay finite f64s (`exp(709.8)` overflows); the tree additionally
+/// sanitizes masses, so the clamp only matters for pathological inputs.
+const MAX_EXP: f64 = 700.0;
+
+/// Positive random feature map of the exponential kernel (see module docs).
+/// `ω` is frozen at construction from the config seed; `Clone` shares the
+/// realized kernel, which is what keeps shards and snapshots consistent.
+#[derive(Clone, Debug)]
+pub struct PositiveRffMap {
+    cfg: RffConfig,
+    /// Frequency matrix, `dim × d` row-major.
+    omega: Vec<f64>,
+}
+
+/// One query's precomputed kernel state (see
+/// [`PositiveRffMap::prepare_query`]).
+pub struct PreparedQuery {
+    /// `ω_iᵀa` per feature row.
+    proj: Vec<f64>,
+    /// `−‖a‖²/2 − ln D` (the query side's share of the exponent).
+    log_pref: f64,
+}
+
+impl PositiveRffMap {
+    /// Build the map this config describes (draws `ω` deterministically).
+    pub fn new(cfg: RffConfig) -> PositiveRffMap {
+        assert!(cfg.d > 0 && cfg.dim > 0);
+        let omega = cfg.draw_omega();
+        PositiveRffMap { cfg, omega }
+    }
+
+    /// Build from an explicit frequency matrix (`omega.len()` must be a
+    /// multiple of `d`). Used by the layout-pinning tests against the
+    /// Python oracle (`phi_rff_ref`) and by variance experiments.
+    ///
+    /// **Outside the config-identity contract:** the fabricated config
+    /// (`seed = u64::MAX` sentinel) does *not* determine this map's `ω` —
+    /// re-deriving via `PositiveRffMap::new(map.config()…)` or comparing
+    /// configs for kernel equality is only valid for maps built from
+    /// [`Self::new`]. Share a `with_omega` map by `Clone`, never by
+    /// config.
+    pub fn with_omega(d: usize, omega: Vec<f64>) -> PositiveRffMap {
+        assert!(d > 0 && !omega.is_empty() && omega.len() % d == 0);
+        let dim = omega.len() / d;
+        let cfg = RffConfig { d, dim, seed: u64::MAX, orthogonal: false };
+        PositiveRffMap { cfg, omega }
+    }
+
+    /// The config this map was built from. For [`Self::new`] maps this is
+    /// the kernel identity (equal config ⇒ identical `ω`); for
+    /// [`Self::with_omega`] maps it is descriptive only (see there).
+    pub fn config(&self) -> &RffConfig {
+        &self.cfg
+    }
+
+    /// The realized frequency matrix (`dim × d` row-major).
+    pub fn omega(&self) -> &[f64] {
+        &self.omega
+    }
+
+    /// Precompute the query-side state for scoring one fixed `a` against
+    /// many classes: the D projections `ω_iᵀa` plus that side's prefactor
+    /// exponent. [`Self::kernel_prepared`] then costs one `ω` pass per
+    /// class instead of two — the dominant pattern of closed-form
+    /// distribution sweeps (benches, tests) over a fixed query.
+    pub fn prepare_query(&self, a: &[f32]) -> PreparedQuery {
+        debug_assert_eq!(a.len(), self.cfg.d);
+        PreparedQuery {
+            proj: (0..self.cfg.dim).map(|i| self.row_dot(i, a)).collect(),
+            log_pref: Self::half_neg_sq_norm(a) - (self.cfg.dim as f64).ln(),
+        }
+    }
+
+    /// `K̂(a, b)` against a query prepared by [`Self::prepare_query`] —
+    /// same factored exponents as [`FeatureMap::kernel`] up to f64
+    /// addition order (tests bound the difference).
+    pub fn kernel_prepared(&self, q: &PreparedQuery, b: &[f32]) -> f64 {
+        debug_assert_eq!(b.len(), self.cfg.d);
+        let lp = q.log_pref + Self::half_neg_sq_norm(b);
+        let mut acc = 0.0f64;
+        for (i, &pa) in q.proj.iter().enumerate() {
+            acc += (pa + self.row_dot(i, b) + lp).min(MAX_EXP).exp();
+        }
+        acc
+    }
+
+    /// `−‖a‖²/2` — the Gaussian-kernel prefactor exponent of one side.
+    #[inline]
+    fn half_neg_sq_norm(a: &[f32]) -> f64 {
+        -0.5 * a.iter().map(|&x| x as f64 * x as f64).sum::<f64>()
+    }
+
+    /// `ω_iᵀ a` for row `i`.
+    #[inline]
+    fn row_dot(&self, i: usize, a: &[f32]) -> f64 {
+        let row = &self.omega[i * self.cfg.d..(i + 1) * self.cfg.d];
+        row.iter().zip(a).map(|(&w, &x)| w * x as f64).sum()
+    }
+}
+
+impl FeatureMap for PositiveRffMap {
+    fn d(&self) -> usize {
+        self.cfg.d
+    }
+
+    fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn name(&self) -> &'static str {
+        "rff"
+    }
+
+    fn phi(&self, a: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), self.cfg.d);
+        debug_assert_eq!(out.len(), self.cfg.dim);
+        // log of the scalar prefactor exp(−‖a‖²/2)/√D, folded into each
+        // component's exponent (one exp per component, no second pass)
+        let log_pref = Self::half_neg_sq_norm(a) - 0.5 * (self.cfg.dim as f64).ln();
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = (self.row_dot(i, a) + log_pref).min(MAX_EXP).exp();
+        }
+    }
+
+    /// `⟨φ(a), φ(b)⟩` in closed form: the factored exponent
+    /// `ω_iᵀa + ω_iᵀb + log_pref(a) + log_pref(b)` sums the same quantities
+    /// `phi` exponentiates per side, so leaf scores agree with the arena's
+    /// `z` sums to f64 rounding (the same contract the quadratic map
+    /// satisfies — the tree's closed-form q depends on it).
+    fn kernel(&self, a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), self.cfg.d);
+        debug_assert_eq!(b.len(), self.cfg.d);
+        let log_pref = Self::half_neg_sq_norm(a) + Self::half_neg_sq_norm(b)
+            - (self.cfg.dim as f64).ln();
+        let mut acc = 0.0f64;
+        for i in 0..self.cfg.dim {
+            acc += (self.row_dot(i, a) + self.row_dot(i, b) + log_pref).min(MAX_EXP).exp();
+        }
+        acc
+    }
+}

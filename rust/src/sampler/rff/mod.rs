@@ -1,0 +1,48 @@
+//! Random-feature kernel sampling — low-bias exp-kernel proposals through
+//! the whole tree/shard/serve stack.
+//!
+//! The paper's quadratic kernel (eq. 10) is a fixed-shape surrogate for
+//! `exp(o)`: its bias floor is set by how badly `αo² + 1` tracks the
+//! exponential tails, and its explicit feature map costs `D = d² + 1`.
+//! *Sampled Softmax with Random Fourier Features* (Rawat et al., 2019)
+//! approximates the exponential kernel directly with **positive random
+//! features**:
+//!
+//! ```text
+//! φ(a) = exp(−‖a‖²/2) / √D · [exp(ω_1ᵀa), …, exp(ω_Dᵀa)],   ω_i ~ N(0, I_d)
+//! ```
+//!
+//! so `E_ω[⟨φ(h), φ(w)⟩] = exp(hᵀw)` (the softmax kernel itself), every
+//! feature is **strictly positive** (node masses stay ≥ 0 — the tree's
+//! zero-mass guards compose unchanged), and `D` is a *tunable knob*: larger
+//! `D` means lower variance around the exp kernel, smaller `D` means
+//! cheaper nodes (`D ≪ d²` beats the quadratic map's footprint). The
+//! `benches/ablation_rff_dim.rs` sweep ablates `D ∈ {d, 2d, 4d, d²}` the
+//! way the paper ablates `m`.
+//!
+//! Within one draw the sampler is *exact* for the realized random kernel
+//! `K̂(a,b) = ⟨φ(a), φ(b)⟩` — reported q values equal `K̂/Σ K̂` in closed
+//! form, like every other [`FeatureMap`] in the tree — and `K̂` is an
+//! unbiased, concentrating estimate of `exp(aᵀb)`. All randomness is
+//! **frozen at construction** from [`RffConfig::seed`]: the same config
+//! always draws the same `ω`, and cloning shares it, so shards, snapshot
+//! replicas, and replay all score with the identical kernel (see the
+//! shard-consistency tests).
+//!
+//! * [`RffConfig`] — dimension/seed/variant; the determinism contract.
+//! * [`PositiveRffMap`] — the [`FeatureMap`] implementation.
+//! * [`orthogonal`] — blockwise-orthogonalized `ω` draws (structured
+//!   orthogonal random features: same marginals, lower kernel-estimate
+//!   variance).
+//!
+//! [`FeatureMap`]: crate::sampler::kernel::FeatureMap
+
+pub mod config;
+pub mod map;
+pub mod orthogonal;
+
+pub use config::{RffConfig, RFF_BUILD_SEED};
+pub use map::PositiveRffMap;
+
+#[cfg(test)]
+mod tests;

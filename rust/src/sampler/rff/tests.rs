@@ -1,0 +1,337 @@
+//! Tests of the random-feature subsystem: feature/kernel consistency,
+//! unbiasedness, determinism + shard consistency, tree integration, and
+//! the acceptance property (lower bias than quadratic at `D = 4d` on
+//! dominant-tail rows).
+
+use super::config::RffConfig;
+use super::map::PositiveRffMap;
+use crate::sampler::kernel::tree::KernelTreeSampler;
+use crate::sampler::kernel::{FeatureMap, QuadraticMap};
+use crate::sampler::test_util::empirical_tv;
+use crate::sampler::{Sample, SampleInput, Sampler};
+use crate::serve::shard::ShardedKernelSampler;
+use crate::serve::{ShardPublisher, ShardSet};
+use crate::util::rng::Rng;
+use crate::util::testing::check;
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Closed-form distribution of the *realized* random kernel — what the
+/// tree must sample exactly.
+fn realized_dist(map: &PositiveRffMap, h: &[f32], emb: &[f32], n: usize, d: usize) -> Vec<f64> {
+    let w: Vec<f64> = (0..n).map(|j| map.kernel(h, &emb[j * d..(j + 1) * d])).collect();
+    let z: f64 = w.iter().sum();
+    w.into_iter().map(|x| x / z).collect()
+}
+
+#[test]
+fn phi_inner_product_equals_kernel() {
+    // the FeatureMap contract the whole tree stands on, for both variants
+    check("⟨φ(a),φ(b)⟩ == K̂(a,b)", 60, |g| {
+        let d = g.usize_in(1, 10);
+        let dim = g.usize_in(1, 40);
+        let cfg = RffConfig::new(d, g.case_seed).with_dim(dim).with_orthogonal(g.bool());
+        let map = PositiveRffMap::new(cfg);
+        let a = g.vec_f32(d, -1.5, 1.5);
+        let b = g.vec_f32(d, -1.5, 1.5);
+        let mut pa = vec![0.0; dim];
+        let mut pb = vec![0.0; dim];
+        map.phi(&a, &mut pa);
+        map.phi(&b, &mut pb);
+        let ip: f64 = pa.iter().zip(&pb).map(|(x, y)| x * y).sum();
+        let k = map.kernel(&a, &b);
+        assert!((ip - k).abs() < 1e-9 * k.abs().max(1e-9), "ip={ip} k={k}");
+    });
+}
+
+#[test]
+fn prepared_query_matches_kernel() {
+    // the one-pass prepared path must agree with the stateless kernel to
+    // f64 addition-order tolerance
+    check("kernel_prepared == kernel", 30, |g| {
+        let d = g.usize_in(1, 8);
+        let cfg = RffConfig::new(d, g.case_seed ^ 3)
+            .with_dim(g.usize_in(1, 32))
+            .with_orthogonal(g.bool());
+        let map = PositiveRffMap::new(cfg);
+        let a = g.vec_f32(d, -1.5, 1.5);
+        let prepared = map.prepare_query(&a);
+        for _ in 0..4 {
+            let b = g.vec_f32(d, -1.5, 1.5);
+            let fast = map.kernel_prepared(&prepared, &b);
+            let slow = map.kernel(&a, &b);
+            assert!((fast - slow).abs() < 1e-9 * slow.max(1e-12), "{fast} vs {slow}");
+        }
+    });
+}
+
+#[test]
+fn phi_components_are_positive() {
+    // positivity is what keeps node masses ≥ 0 through the tree
+    check("φ > 0 componentwise", 30, |g| {
+        let d = g.usize_in(1, 8);
+        let cfg = RffConfig::new(d, g.case_seed ^ 1).with_orthogonal(g.bool());
+        let map = PositiveRffMap::new(cfg);
+        let a = g.vec_f32(d, -2.0, 2.0);
+        let mut phi = vec![0.0; map.dim()];
+        map.phi(&a, &mut phi);
+        assert!(phi.iter().all(|&x| x > 0.0 && x.is_finite()), "{phi:?}");
+        let b = g.vec_f32(d, -2.0, 2.0);
+        assert!(map.kernel(&a, &b) > 0.0);
+    });
+}
+
+#[test]
+fn kernel_estimate_is_unbiased_for_exp() {
+    // E_ω[K̂(a,b)] = exp(aᵀb): average the realized kernel over many
+    // independent feature draws (both variants — orthogonalization changes
+    // variance, not expectation)
+    for orthogonal in [false, true] {
+        let d = 3;
+        let a = vec![0.4f32, -0.3, 0.5];
+        let b = vec![-0.2f32, 0.6, 0.35];
+        let want = dot(&a, &b).exp();
+        let seeds = 400usize;
+        let mean: f64 = (0..seeds)
+            .map(|s| {
+                let cfg = RffConfig::new(d, 0xBEEF + s as u64)
+                    .with_dim(12)
+                    .with_orthogonal(orthogonal);
+                PositiveRffMap::new(cfg).kernel(&a, &b)
+            })
+            .sum::<f64>()
+            / seeds as f64;
+        // 4800 effective features; per-feature rel-std ≈ √(e^‖a+b‖² − 1)
+        assert!(
+            (mean - want).abs() < 0.12 * want,
+            "orthogonal={orthogonal}: mean {mean} vs exp(ab) {want}"
+        );
+    }
+}
+
+#[test]
+fn same_config_draws_identical_features() {
+    // the determinism / shard-consistency contract: config == identity
+    let cfg = RffConfig::new(5, 99).with_dim(20).with_orthogonal(true);
+    let a = PositiveRffMap::new(cfg);
+    let b = PositiveRffMap::new(cfg);
+    assert_eq!(a.omega(), b.omega());
+    let c = a.clone();
+    assert_eq!(a.omega(), c.omega());
+    // and a different seed realizes a different kernel
+    let other = PositiveRffMap::new(RffConfig::new(5, 100).with_dim(20).with_orthogonal(true));
+    assert_ne!(a.omega(), other.omega());
+}
+
+#[test]
+fn phi_layout_matches_python_oracle() {
+    // pins the layout contract with ref.phi_rff_ref: out[i] is ω row i
+    // (row-major D × d), each component exp(ω_iᵀa − ‖a‖²/2)/√D
+    let omega = vec![1.0, 0.0, 0.0, 1.0]; // rows e_1, e_2
+    let map = PositiveRffMap::with_omega(2, omega);
+    let a = [0.6f32, -0.8];
+    let mut out = vec![0.0; 2];
+    map.phi(&a, &mut out);
+    let pref = (-0.5f64).exp() / (2.0f64).sqrt(); // ‖a‖² = 1
+    let want = [pref * (0.6f64).exp(), pref * (-0.8f64).exp()];
+    for (i, (&got, &w)) in out.iter().zip(&want).enumerate() {
+        assert!((got - w).abs() < 1e-12, "slot {i}: {got} vs {w}");
+    }
+}
+
+#[test]
+fn tree_q_matches_realized_kernel_closed_form() {
+    // the §3.2 machinery must be *exact* for the realized kernel: reported
+    // q == K̂/Σ K̂ (relative tolerance: f64 summation order)
+    check("rff tree q == K̂ closed form", 12, |g| {
+        let n = g.usize_in(4, 48);
+        let d = g.usize_in(1, 6);
+        let leaf = g.usize_in(1, 8);
+        let mut rng = Rng::new(g.case_seed ^ 0x2FF);
+        let cfg = RffConfig::new(d, g.case_seed ^ 7)
+            .with_dim(g.usize_in(2, 24))
+            .with_orthogonal(g.bool());
+        let map = PositiveRffMap::new(cfg);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut tree = KernelTreeSampler::new(map.clone(), n, Some(leaf));
+        tree.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let expected = realized_dist(&map, &h, &emb, n, d);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 48, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            let want = expected[c as usize];
+            assert!(
+                (q - want).abs() < 1e-9 * want.max(1e-12),
+                "class {c}: q {q} vs closed form {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn tree_samples_match_realized_kernel_distribution() {
+    // tree-vs-flat-oracle TV for the RFF map (the crate-wide tree == flat
+    // contract, instantiated for PositiveRffMap)
+    let (n, d) = (64, 4);
+    let mut rng = Rng::new(2026);
+    let map = PositiveRffMap::new(RffConfig::new(d, 0x51).with_dim(16));
+    let mut emb = vec![0.0f32; n * d];
+    rng.fill_normal(&mut emb, 0.5);
+    let mut tree = KernelTreeSampler::new(map.clone(), n, None);
+    tree.reset_embeddings(&emb, n, d);
+    let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let expected = realized_dist(&map, &h, &emb, n, d);
+    let input = SampleInput { h: Some(&h), ..Default::default() };
+    let tv = empirical_tv(&tree, &input, &expected, 300_000, 17);
+    assert!(tv < 0.02, "tv {tv}");
+}
+
+#[test]
+fn sharded_rff_matches_unsharded_distribution() {
+    // shard consistency: clones share ω, so the router's merged q equals
+    // the unsharded realized-kernel distribution
+    check("rff sharded q == unsharded q", 8, |g| {
+        let n = g.usize_in(6, 80);
+        let d = g.usize_in(1, 5);
+        let shards = g.usize_in(2, 6.min(n));
+        let mut rng = Rng::new(g.case_seed ^ 0x5F);
+        let map = PositiveRffMap::new(
+            RffConfig::new(d, g.case_seed ^ 0x11).with_dim(g.usize_in(2, 16)),
+        );
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut sharded = ShardedKernelSampler::new(map.clone(), n, shards, Some(4));
+        sharded.reset_embeddings(&emb, n, d);
+        assert_eq!(sharded.name(), "rff-sharded");
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let expected = realized_dist(&map, &h, &emb, n, d);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        sharded.sample(&input, 32, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            let want = expected[c as usize];
+            assert!(
+                (q - want).abs() < 1e-9 * want.max(1e-12),
+                "class {c}: sharded q {q} vs unsharded {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn kernel_erased_publisher_serves_the_realized_rff_kernel() {
+    // the trainer's publish path for a non-quadratic kernel: stores/offsets
+    // taken first (as enable_serving_with does), the set then driven
+    // kernel-erased through Box<dyn ShardPublisher> across several rounds —
+    // deep enough that publishes go through the reclaim+replay path — and
+    // the published snapshots must still score with the *same realized
+    // kernel* (cloned ω, not re-derived) as the training-side mirror.
+    let (n, d, shards) = (30usize, 3usize, 3usize);
+    let mut rng = Rng::new(0xE2A);
+    let map = PositiveRffMap::new(RffConfig::new(d, 0x77).with_dim(8));
+    let mut emb = vec![0.0f32; n * d];
+    rng.fill_normal(&mut emb, 0.5);
+    let set = ShardSet::new(map.clone(), n, shards, Some(4), Some(&emb));
+    let stores = set.stores();
+    let offsets = set.offsets().to_vec();
+    let mut publisher: Box<dyn ShardPublisher> = Box::new(set);
+    for _round in 0..6 {
+        let mut classes: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut classes);
+        classes.truncate(5);
+        classes.sort_unstable();
+        let mut rows = vec![0.0f32; classes.len() * d];
+        rng.fill_normal(&mut rows, 0.6);
+        publisher.update_and_publish_rows(&classes, &rows);
+        for (i, &c) in classes.iter().enumerate() {
+            emb[c * d..(c + 1) * d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+        }
+    }
+    assert!(publisher.publish_stats().publishes >= 6);
+    // closed form over the published snapshots == realized kernel over the
+    // mirrored table (any ω re-derivation or replay defect would skew it)
+    let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let expected = realized_dist(&map, &h, &emb, n, d);
+    let snaps: Vec<_> = stores.iter().map(|s| s.load().1).collect();
+    let phi = snaps[0].tree.phi_query(&h);
+    let total: f64 = snaps.iter().map(|s| s.tree.partition(&phi).max(0.0)).sum();
+    for c in 0..n {
+        let sid = crate::serve::shard::shard_of_class(&offsets, c);
+        let local = c - offsets[sid] as usize;
+        let k = snaps[sid].tree.feature_map().kernel(&h, snaps[sid].tree.emb_row(local));
+        let got = k / total;
+        let want = expected[c];
+        assert!(
+            (got - want).abs() < 1e-9 * want.max(1e-12),
+            "class {c}: served {got} vs realized kernel {want}"
+        );
+    }
+}
+
+/// The acceptance property: on logit rows with a *dominant tail class*
+/// (one class far above the bulk, mirror classes far below — where the
+/// quadratic kernel's sign-blindness hurts most), the rff tree at `D = 4d`
+/// lands measurably closer to the exact softmax distribution than the
+/// quadratic tree. The construction plants `o = +2.2` for one class,
+/// `o = −2.2` for six mirrors, and small logits for the rest: softmax
+/// concentrates on the positive class, quadratic weights ±2.2 identically.
+#[test]
+fn rff_4d_beats_quadratic_tv_to_softmax_on_dominant_tail() {
+    check("rff(4d) TV < quadratic TV to softmax", 5, |g| {
+        let d = 4usize;
+        let n = 24usize;
+        let mut rng = Rng::new(g.case_seed ^ 0xD0);
+        // h with a controlled norm
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut h, 1.0);
+        let norm = dot(&h, &h).sqrt() as f32;
+        for x in h.iter_mut() {
+            *x *= 1.2 / norm.max(1e-6);
+        }
+        let h2 = dot(&h, &h) as f32; // ≈ 1.44
+        // class 0: o = +2.2; classes 1..=6: o = −2.2; rest: small
+        let mut emb = vec![0.0f32; n * d];
+        for k in 0..d {
+            emb[k] = h[k] * 2.2 / h2;
+        }
+        for j in 1..=6 {
+            for k in 0..d {
+                emb[j * d + k] = -emb[k];
+            }
+        }
+        for j in 7..n {
+            for k in 0..d {
+                emb[j * d + k] = rng.normal_f32(0.0, 0.25);
+            }
+        }
+        // exact softmax target p ∝ exp(o)
+        let logits: Vec<f64> = (0..n).map(|j| dot(&h, &emb[j * d..(j + 1) * d])).collect();
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ws: Vec<f64> = logits.iter().map(|&o| (o - mx).exp()).collect();
+        let z: f64 = ws.iter().sum();
+        let softmax: Vec<f64> = ws.iter().map(|w| w / z).collect();
+
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let draws = 120_000;
+
+        let mut quad = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, None);
+        quad.reset_embeddings(&emb, n, d);
+        let tv_quad = empirical_tv(&quad, &input, &softmax, draws, g.case_seed ^ 0xA1);
+
+        let cfg = RffConfig::new(d, g.case_seed ^ 0xB2); // D = 4d
+        assert_eq!(cfg.dim, 4 * d);
+        let mut rff = KernelTreeSampler::new(PositiveRffMap::new(cfg), n, None);
+        rff.reset_embeddings(&emb, n, d);
+        let tv_rff = empirical_tv(&rff, &input, &softmax, draws, g.case_seed ^ 0xA2);
+
+        assert!(
+            tv_rff < tv_quad - 0.1,
+            "rff at D=4d should beat quadratic decisively: tv_rff {tv_rff} vs tv_quad {tv_quad}"
+        );
+    });
+}

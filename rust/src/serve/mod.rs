@@ -35,7 +35,7 @@ pub mod snapshot;
 pub mod topk;
 
 pub use batcher::{BatcherConfig, MicroBatcher, SampleResponse, ServeError};
-pub use service::{SamplingService, ServiceConfig, ShardSet};
+pub use service::{SamplingService, ServiceConfig, ShardPublisher, ShardSet};
 pub use shard::{
     draw_from_shards, shard_of_class, shard_offsets, split_updates_by_shard, ShardedKernelSampler,
 };
@@ -44,10 +44,33 @@ pub use snapshot::{
 };
 pub use topk::{merge_shard_topk, topk_over_snapshots, Hit, TopKConfig};
 
-use crate::sampler::kernel::QuadraticMap;
+use crate::sampler::kernel::{FeatureMap, QuadraticMap};
+use crate::sampler::rff::{PositiveRffMap, RffConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 use std::time::{Duration, Instant};
+
+/// Which kernel family the serve stack hosts. The whole serving layer
+/// (publishers, shards, workers, retrieval) is generic over [`FeatureMap`];
+/// this enum is only the CLI-facing dispatch point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeKernel {
+    /// The paper's `αo² + 1` quadratic kernel (eq. 10).
+    Quadratic,
+    /// Positive random features approximating `exp(o)` (the rff family).
+    Rff,
+}
+
+impl ServeKernel {
+    /// Parse a `--kernel` flag value.
+    pub fn parse(name: &str) -> anyhow::Result<ServeKernel> {
+        match name {
+            "quadratic" => Ok(ServeKernel::Quadratic),
+            "rff" => Ok(ServeKernel::Rff),
+            other => anyhow::bail!("unknown serve kernel '{other}' (known: quadratic, rff)"),
+        }
+    }
+}
 
 /// Closed-loop load-test parameters (the `kss serve` subcommand).
 #[derive(Clone, Debug)]
@@ -55,8 +78,12 @@ pub struct LoadGenConfig {
     /// Catalog size (classes) and embedding dim of the synthetic index.
     pub n_classes: usize,
     pub d: usize,
-    /// Kernel α (eq. 10).
+    /// Kernel family the index is built on.
+    pub kernel: ServeKernel,
+    /// Kernel α (eq. 10; quadratic only).
     pub alpha: f64,
+    /// RFF feature dimension D (0 = the registry default `4·d`; rff only).
+    pub rff_dim: usize,
     pub shards: usize,
     pub workers: usize,
     /// Closed-loop client threads; each issues `requests` sequentially.
@@ -80,7 +107,9 @@ impl Default for LoadGenConfig {
         LoadGenConfig {
             n_classes: 10_000,
             d: 16,
+            kernel: ServeKernel::Quadratic,
             alpha: 100.0,
+            rff_dim: 0,
             shards: 4,
             workers: 2,
             clients: 4,
@@ -122,18 +151,33 @@ pub struct LoadReport {
 /// Drive a synthetic sharded index with closed-loop clients while a writer
 /// continuously updates and publishes. Returns the observed latency /
 /// throughput / publish profile; the caller (CLI, CI smoke job) decides
-/// pass/fail against its own thresholds.
+/// pass/fail against its own thresholds. Dispatches on
+/// [`LoadGenConfig::kernel`] into the kernel-generic loop — the serving
+/// stack itself never mentions a concrete map.
 pub fn run_load_test(cfg: &LoadGenConfig) -> LoadReport {
+    match cfg.kernel {
+        ServeKernel::Quadratic => {
+            run_load_test_with(QuadraticMap::new(cfg.d, cfg.alpha), cfg)
+        }
+        ServeKernel::Rff => {
+            let mut rff = RffConfig::new(cfg.d, cfg.seed ^ 0x2FF_5EED);
+            if cfg.rff_dim > 0 {
+                rff = rff.with_dim(cfg.rff_dim);
+            }
+            run_load_test_with(PositiveRffMap::new(rff), cfg)
+        }
+    }
+}
+
+/// The kernel-generic closed loop behind [`run_load_test`].
+pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
+    map: M,
+    cfg: &LoadGenConfig,
+) -> LoadReport {
     let mut rng = Rng::new(cfg.seed);
     let mut emb = vec![0.0f32; cfg.n_classes * cfg.d];
     rng.fill_normal(&mut emb, 0.3);
-    let mut set = ShardSet::new(
-        QuadraticMap::new(cfg.d, cfg.alpha),
-        cfg.n_classes,
-        cfg.shards,
-        None,
-        Some(&emb),
-    );
+    let mut set = ShardSet::new(map, cfg.n_classes, cfg.shards, None, Some(&emb));
     let service_cfg = ServiceConfig {
         workers: cfg.workers,
         batcher: cfg.batcher,
@@ -296,5 +340,40 @@ mod tests {
         assert!(report.publishes > 0, "writer never published: {report:?}");
         assert!(report.deadline_miss_rate < 1.0);
         assert!(report.latency_p50_s >= 0.0 && report.latency_p95_s >= report.latency_p50_s);
+    }
+
+    #[test]
+    fn load_test_smoke_rff_kernel() {
+        // the same closed loop over the random-feature kernel: publishing,
+        // sampling, retrieval and the writer all run kernel-generic
+        let cfg = LoadGenConfig {
+            n_classes: 300,
+            d: 4,
+            kernel: ServeKernel::Rff,
+            rff_dim: 0, // registry default D = 4d
+            shards: 3,
+            workers: 2,
+            clients: 2,
+            requests: 40,
+            m: 4,
+            updates_per_publish: 8,
+            deadline: Duration::from_secs(5),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 512,
+            },
+            ..Default::default()
+        };
+        let report = run_load_test(&cfg);
+        assert!(report.completed > 0 && report.topk_calls > 0, "{report:?}");
+        assert!(report.publishes > 0, "writer never published: {report:?}");
+    }
+
+    #[test]
+    fn serve_kernel_parses() {
+        assert_eq!(ServeKernel::parse("quadratic").unwrap(), ServeKernel::Quadratic);
+        assert_eq!(ServeKernel::parse("rff").unwrap(), ServeKernel::Rff);
+        assert!(ServeKernel::parse("cubic").is_err());
     }
 }

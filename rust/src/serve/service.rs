@@ -123,6 +123,31 @@ impl<M: FeatureMap + Clone> ShardSet<M> {
     }
 }
 
+/// Kernel-erased writer surface of a [`ShardSet`]: exactly the two calls
+/// the trainer's publish hook makes per step. Boxing this (instead of a
+/// concrete `ShardSet<QuadraticMap>`) is what lets `Trainer` publish
+/// whichever kernel family its sampler trains — quadratic and rff shard
+/// sets behind the same hook.
+pub trait ShardPublisher: Send {
+    /// Route a global-class update batch to the owning shards and publish
+    /// each touched shard's next generation (see
+    /// [`ShardSet::update_and_publish`]).
+    fn update_and_publish_rows(&mut self, classes: &[usize], rows: &[f32]) -> Vec<PublishReport>;
+
+    /// Publish-path counters summed over all shards.
+    fn publish_stats(&self) -> PublishStats;
+}
+
+impl<M: FeatureMap + Clone> ShardPublisher for ShardSet<M> {
+    fn update_and_publish_rows(&mut self, classes: &[usize], rows: &[f32]) -> Vec<PublishReport> {
+        self.update_and_publish(classes, rows)
+    }
+
+    fn publish_stats(&self) -> PublishStats {
+        self.stats()
+    }
+}
+
 /// Service tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {

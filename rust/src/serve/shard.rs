@@ -148,12 +148,14 @@ pub fn draw_from_shards<M: FeatureMap>(
 }
 
 /// S independent kernel trees behind the mass router (a drop-in
-/// [`Sampler`]: `"quadratic-sharded"` in configs).
+/// [`Sampler`]: `"quadratic-sharded"` / `"rff-sharded"` in configs).
 pub struct ShardedKernelSampler<M: FeatureMap + Clone> {
     shards: Vec<KernelTreeSampler<M>>,
     offsets: Vec<u32>,
     n: usize,
     d: usize,
+    /// Registry name, `<kernel>-sharded` (derived from the map).
+    name: String,
     /// Freelist of router scratch states (same pooling discipline as the
     /// tree's DrawScratch freelist — see [`Pool`]).
     scratch_pool: Pool<ShardScratch>,
@@ -164,13 +166,14 @@ impl<M: FeatureMap + Clone> ShardedKernelSampler<M> {
     /// as in [`KernelTreeSampler::new`].
     pub fn new(map: M, n: usize, shards: usize, leaf_size: Option<usize>) -> Self {
         assert!(n > 0);
+        let name = format!("{}-sharded", map.name());
         let offsets = shard_offsets(n, shards);
         let trees: Vec<KernelTreeSampler<M>> = offsets
             .windows(2)
             .map(|w| KernelTreeSampler::new(map.clone(), (w[1] - w[0]) as usize, leaf_size))
             .collect();
         let d = trees[0].embed_dim();
-        ShardedKernelSampler { shards: trees, offsets, n, d, scratch_pool: Pool::new() }
+        ShardedKernelSampler { shards: trees, offsets, n, d, name, scratch_pool: Pool::new() }
     }
 
     pub fn shard_count(&self) -> usize {
@@ -286,7 +289,7 @@ pub fn scratch_for<M: FeatureMap>(trees: &[TreeView<'_, M>]) -> ShardScratch {
 
 impl<M: FeatureMap + Clone> Sampler for ShardedKernelSampler<M> {
     fn name(&self) -> &str {
-        "quadratic-sharded"
+        &self.name
     }
 
     fn needs(&self) -> Needs {

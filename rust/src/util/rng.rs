@@ -182,6 +182,59 @@ impl Rng {
     }
 }
 
+/// Fill `cum` with the inclusive prefix sums of `weights` (`cum[i] =
+/// Σ_{j<=i} w_j`, f64) and return the total mass — the allocation-free
+/// core shared by [`Cdf`] and pooled-scratch callers (the flat kernel
+/// sampler reuses one buffer across a whole batch). The caller must check
+/// the returned total is positive and finite before sampling from `cum`.
+pub fn fill_cum(weights: &[f32], cum: &mut Vec<f64>) -> f64 {
+    cum.clear();
+    cum.reserve(weights.len());
+    let mut acc = 0.0f64;
+    for &w in weights {
+        // negative weights are a programming error; NaN/inf flow through
+        // to the caller's total check as a *recoverable* degenerate row
+        debug_assert!(!(w < 0.0), "negative weight in Cdf");
+        acc += w as f64;
+        cum.push(acc);
+    }
+    acc
+}
+
+/// Draw one index from an inclusive-prefix-sum CDF with positive finite
+/// `total`. The returned index always has a strictly positive increment:
+/// `partition_point` guarantees it when `u < total`, and the
+/// floating-point slack case (`u` rounding up to `total`) clamps to the
+/// last *positive-weight* index — a plain `len - 1` clamp could select a
+/// zero-weight tail class, whose reported q of 0 would blow up the
+/// eq. (2) correction downstream. The single implementation behind
+/// [`Cdf::sample`] and the flat kernel sampler's scratch path, so the
+/// zero-mass-tail invariant lives in one place.
+pub fn sample_cum(cum: &[f64], total: f64, rng: &mut Rng) -> usize {
+    debug_assert!(total > 0.0 && total.is_finite());
+    let u = rng.f64() * total;
+    // partition_point: first index with cum[i] > u (its increment is
+    // then > 0 because cum[idx-1] <= u < cum[idx]).
+    let idx = cum.partition_point(|&c| c <= u);
+    if idx < cum.len() {
+        idx
+    } else {
+        last_positive_cum_index(cum)
+    }
+}
+
+/// Index of the last strictly positive CDF increment (exists whenever the
+/// total mass is positive).
+pub fn last_positive_cum_index(cum: &[f64]) -> usize {
+    (0..cum.len())
+        .rev()
+        .find(|&i| {
+            let lo = if i == 0 { 0.0 } else { cum[i - 1] };
+            cum[i] - lo > 0.0
+        })
+        .expect("CDF invariant: total mass > 0")
+}
+
 /// Cumulative distribution over class weights, for O(log n) repeated draws
 /// from the same (per-example) distribution. Built once per example by the
 /// exact-softmax and flat-kernel samplers, then binary-searched `m` times.
@@ -194,13 +247,8 @@ pub struct Cdf {
 impl Cdf {
     /// Build from unnormalized non-negative weights.
     pub fn new(weights: &[f32]) -> Option<Cdf> {
-        let mut cum = Vec::with_capacity(weights.len());
-        let mut acc = 0.0f64;
-        for &w in weights {
-            debug_assert!(w >= 0.0, "negative weight in Cdf");
-            acc += w as f64;
-            cum.push(acc);
-        }
+        let mut cum = Vec::new();
+        let acc = fill_cum(weights, &mut cum);
         if !(acc > 0.0) || !acc.is_finite() {
             return None;
         }
@@ -219,34 +267,18 @@ impl Cdf {
         (self.cum[i] - lo) / self.total
     }
 
-    /// Draw one index. The returned index always has strictly positive
-    /// weight: `partition_point` guarantees it when `u < total`, and the
-    /// floating-point slack case (`u` rounding up to `total`) clamps to the
-    /// last *positive-weight* index — a plain `len - 1` clamp could select
-    /// a zero-weight tail class, whose reported q of 0 would blow up the
-    /// eq. (2) correction downstream.
+    /// Draw one index with strictly positive weight (see [`sample_cum`],
+    /// the shared implementation).
     pub fn sample(&self, rng: &mut Rng) -> usize {
-        let u = rng.f64() * self.total;
-        // partition_point: first index with cum[i] > u (its increment is
-        // then > 0 because cum[idx-1] <= u < cum[idx]).
-        let idx = self.cum.partition_point(|&c| c <= u);
-        if idx < self.cum.len() {
-            idx
-        } else {
-            self.last_positive_index()
-        }
+        sample_cum(&self.cum, self.total, rng)
     }
 
     /// Index of the last strictly positive weight (exists: construction
-    /// rejects zero total mass).
+    /// rejects zero total mass). Test hook over [`last_positive_cum_index`],
+    /// which `sample` reaches through [`sample_cum`].
+    #[cfg(test)]
     fn last_positive_index(&self) -> usize {
-        (0..self.cum.len())
-            .rev()
-            .find(|&i| {
-                let lo = if i == 0 { 0.0 } else { self.cum[i - 1] };
-                self.cum[i] - lo > 0.0
-            })
-            .expect("Cdf invariant: total mass > 0")
+        last_positive_cum_index(&self.cum)
     }
 }
 

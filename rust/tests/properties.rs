@@ -56,6 +56,9 @@ fn prop_every_sampler_q_is_valid_and_consistent() {
             "quadratic-sharded",
             "quadratic-flat",
             "quartic",
+            "rff",
+            "rff-sharded",
+            "rff-flat",
         ] {
             let sampler =
                 build_sampler(name, n, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
@@ -129,6 +132,9 @@ fn prop_sample_batch_reproduces_per_row_streams_for_every_sampler() {
             "quadratic-sharded",
             "quadratic-flat",
             "quartic",
+            "rff",
+            "rff-sharded",
+            "rff-flat",
         ] {
             let sampler =
                 build_sampler(name, n_classes, d, 100.0, false, Some(&stats), Some(&emb)).unwrap();
