@@ -24,28 +24,23 @@ use kss::sampler::{
 };
 use kss::util::json::Value;
 use kss::util::rng::Rng;
+use kss::util::stats::tv_from_scores;
 
 /// The exact softmax target `p ∝ exp(o)` for one query — map-independent,
-/// so it is computed once per query and shared across every proposal.
+/// so it is computed once per query and shared across every proposal (one
+/// ops-layer panel sweep + the max-shift softmax primitive).
 fn softmax_target(h: &[f32], emb: &[f32], n: usize, d: usize) -> Vec<f64> {
-    let logits: Vec<f64> = (0..n)
-        .map(|j| emb[j * d..(j + 1) * d].iter().zip(h).map(|(&w, &x)| w as f64 * x as f64).sum())
-        .collect();
-    let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let ws: Vec<f64> = logits.iter().map(|&o| (o - mx).exp()).collect();
-    let wz: f64 = ws.iter().sum();
+    debug_assert_eq!(emb.len(), n * d);
+    let mut logits = vec![0.0f64; n];
+    kss::ops::dot_many_f32(h, emb, &mut logits);
+    let mut ws = vec![0.0f64; n];
+    let (_, wz) = kss::ops::max_shift_exp(&logits, &mut ws);
     ws.into_iter().map(|w| w / wz).collect()
 }
 
-/// TV distance between unnormalized kernel scores and a precomputed target
-/// distribution.
-fn tv_from_scores(ks: &[f64], target: &[f64]) -> f64 {
-    let kz: f64 = ks.iter().sum();
-    0.5 * ks.iter().zip(target).map(|(&k, &p)| (k / kz - p).abs()).sum::<f64>()
-}
-
 /// Closed-form TV distance between a kernel proposal `q ∝ K(h, ·)` and a
-/// precomputed target distribution, for one query.
+/// precomputed target distribution, for one query (the TV itself is the
+/// shared `util::stats::tv_from_scores`).
 fn tv_to_target(map: &dyn FeatureMap, h: &[f32], emb: &[f32], d: usize, target: &[f64]) -> f64 {
     let ks: Vec<f64> =
         (0..target.len()).map(|j| map.kernel(h, &emb[j * d..(j + 1) * d])).collect();

@@ -151,6 +151,46 @@ fn main() {
         );
     }
 
+    // batched-descent series over the feature dimension: the ops-layer
+    // surface (fused dot2_32 sibling panels + kernel_many leaf sweeps)
+    // scales with D, so this series is where a compute-core win shows up
+    // end to end — one fixed batch, D = d²+1 swept via d.
+    let mut descent_rows: Vec<BenchRow> = Vec::new();
+    {
+        let n = 50_000usize;
+        let batch_examples = 64usize;
+        let threads = default_threads();
+        for d in [8usize, 16, 24] {
+            let dim = d * d + 1;
+            let mut rng = Rng::new(0xD00 + d as u64);
+            let mut w = vec![0.0f32; n * d];
+            rng.fill_normal(&mut w, 0.3);
+            let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, None);
+            tree.reset_embeddings(&w, n, d);
+            let mut hs = vec![0.0f32; batch_examples * d];
+            rng.fill_normal(&mut hs, 1.0);
+            let input = BatchSampleInput {
+                n: batch_examples,
+                d,
+                n_classes: n,
+                h: Some(&hs),
+                threads,
+                ..Default::default()
+            };
+            let mut outs: Vec<Sample> =
+                (0..batch_examples).map(|_| Sample::with_capacity(m)).collect();
+            let mut step = 0u64;
+            descent_rows.push(bencher.run_with_items(
+                &format!("batched descent D={dim:>4} (d={d}, n={n}, {batch_examples} ex × m={m})"),
+                Some((batch_examples * m) as f64),
+                || {
+                    step += 1;
+                    tree.sample_batch(&input, m, step, &mut outs).unwrap();
+                },
+            ));
+        }
+    }
+
     print_table("per-example draw cost (m draws incl. φ(h) + memoized node dots)", &draw_rows);
     print_table(
         "batch engine: sample_batch (arena scratch reuse + fan-out) vs per-example loop",
@@ -160,6 +200,10 @@ fn main() {
         print_speedup(&format!("batched vs per-example @ n={n}"), per_ex, batched);
     }
     println!("(acceptance target: batched ≥ 1.3x the per-example arena baseline at n ≥ 10^4)");
+    print_table(
+        "batched descent vs feature dim D (ops-layer fused panels; draws/s should track 1/D)",
+        &descent_rows,
+    );
     print_table("per-class update cost (Fig. 1(b) path refresh)", &update_rows);
 
     // scaling check: tree grows ~log n (plus touched leaves), exact grows
@@ -186,6 +230,7 @@ fn main() {
         &[
             ("per-example draw cost", &draw_rows),
             ("batch engine vs per-example loop", &batch_rows),
+            ("batched descent vs feature dim", &descent_rows),
             ("per-class update cost", &update_rows),
         ],
     );

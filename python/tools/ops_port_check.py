@@ -1,0 +1,431 @@
+#!/usr/bin/env python3
+"""Line-for-line Python port of the ops-layer blocked primitives
+(rust/src/ops/mod.rs), run against the same property checks as the Rust
+tests (the build container has no rust toolchain — see
+.claude/skills/verify/SKILL.md; serve_port_check.py / rff_port_check.py
+are the PR-2/PR-3 precedents).
+
+Ported and checked here:
+
+  1. blocked dot (4-lane f64), dot32 (8-lane f32), dot_f32 / dot_mixed
+     (4-lane, f64 accumulation): remainder-lane correctness against the
+     scalar sequential reference for every len % block in {0..block-1}
+  2. dot2_32 (fused sibling-panel dot): BITWISE equal to two single dot32
+     calls — the tree memo caches per-node values, so the fused and single
+     descent paths must be indistinguishable
+  3. dot_many / dot_many_f32 (fused two-rows-per-pass panel sweep):
+     bitwise equal to row-at-a-time dots for every (d, rows) shape
+  4. fill_cum: strictly sequential prefix sums (each partial bitwise equal
+     to the sequential fold — the CDF draw observes every partial)
+  5. row_max: blocked lane max == sequential fold exactly (max is
+     associative; NaNs ignored per f64::max), max_shift_exp normalizes
+  6. the HSM cluster-blocked panel restructure (hsm/mod.rs): the
+     panel_lo/row_of_class permutation is a bijection and panel-swept
+     logits equal the old per-member strided gather bitwise
+  7. tree-descent integration: fused-pair node masses == single-node
+     masses bitwise on a synthetic z32 arena (float32 throughout)
+  8. q-tolerance regression (the bugfix-audit satellite): switching the
+     quadratic kernel's dot from sequential to blocked accumulation moves
+     q by < 1e-9 relative at n = 10^4 classes — the Rust tests' closed-form
+     tolerance cannot be violated by the ops migration
+
+Run: python3 python/tools/ops_port_check.py
+"""
+import math
+import os
+import random
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+F32 = np.float32
+
+
+# --- ports of rust/src/ops/mod.rs ----------------------------------------
+def ref_dot(a, b):
+    """reference::dot — sequential f64 fold."""
+    acc = 0.0
+    for x, y in zip(a, b):
+        acc += float(x) * float(y)
+    return acc
+
+
+def blk_dot(a, b):
+    """blocked::dot — 4 lanes, pairwise combine, sequential remainder."""
+    n4 = len(a) // 4 * 4
+    s = [0.0, 0.0, 0.0, 0.0]
+    i = 0
+    while i < n4:
+        for k in range(4):
+            s[k] += float(a[i + k]) * float(b[i + k])
+        i += 4
+    acc = (s[0] + s[1]) + (s[2] + s[3])
+    for j in range(n4, len(a)):
+        acc += float(a[j]) * float(b[j])
+    return acc
+
+
+def ref_dot32(a, b):
+    """reference::dot32 — sequential f32 fold (a, b float32 arrays)."""
+    acc = F32(0.0)
+    for x, y in zip(a, b):
+        acc = F32(acc + F32(x * y))
+    return acc
+
+
+def blk_dot32(a, b):
+    """blocked::dot32 — 8 f32 lanes, left-fold lane combine, remainder."""
+    acc = [F32(0.0)] * 8
+    chunks = len(a) // 8
+    for c in range(chunks):
+        base = c * 8
+        for k in range(8):
+            acc[k] = F32(acc[k] + F32(a[base + k] * b[base + k]))
+    total = F32(0.0)
+    for k in range(8):  # acc.iter().sum::<f32>() is a left fold
+        total = F32(total + acc[k])
+    for j in range(chunks * 8, len(a)):
+        total = F32(total + F32(a[j] * b[j]))
+    return total
+
+
+def blk_dot2_32(q, rows):
+    """blocked::dot2_32 — fused two-row panel dot, per-row order == dot32."""
+    n = len(q)
+    l, r = rows[:n], rows[n:]
+    al = [F32(0.0)] * 8
+    ar = [F32(0.0)] * 8
+    chunks = n // 8
+    for c in range(chunks):
+        base = c * 8
+        for k in range(8):
+            al[k] = F32(al[k] + F32(q[base + k] * l[base + k]))
+            ar[k] = F32(ar[k] + F32(q[base + k] * r[base + k]))
+    tl = F32(0.0)
+    tr = F32(0.0)
+    for k in range(8):
+        tl = F32(tl + al[k])
+        tr = F32(tr + ar[k])
+    for j in range(chunks * 8, n):
+        tl = F32(tl + F32(q[j] * l[j]))
+        tr = F32(tr + F32(q[j] * r[j]))
+    return tl, tr
+
+
+def blk_dot_f32(a, b):
+    """blocked::dot_f32 — f32 inputs, 4-lane f64 accumulation."""
+    n4 = len(a) // 4 * 4
+    s = [0.0, 0.0, 0.0, 0.0]
+    i = 0
+    while i < n4:
+        for k in range(4):
+            s[k] += float(a[i + k]) * float(b[i + k])
+        i += 4
+    acc = (s[0] + s[1]) + (s[2] + s[3])
+    for j in range(n4, len(a)):
+        acc += float(a[j]) * float(b[j])
+    return acc
+
+
+def blk_dot2_f32(q, a, b):
+    """blocked::dot2_f32 — fused pair, per-row order == dot_f32."""
+    n4 = len(q) // 4 * 4
+    sa = [0.0] * 4
+    sb = [0.0] * 4
+    i = 0
+    while i < n4:
+        for k in range(4):
+            sa[k] += float(q[i + k]) * float(a[i + k])
+            sb[k] += float(q[i + k]) * float(b[i + k])
+        i += 4
+    ta = (sa[0] + sa[1]) + (sa[2] + sa[3])
+    tb = (sb[0] + sb[1]) + (sb[2] + sb[3])
+    for j in range(n4, len(q)):
+        ta += float(q[j]) * float(a[j])
+        tb += float(q[j]) * float(b[j])
+    return ta, tb
+
+
+def blk_dot_many_f32(q, panel, rows):
+    """blocked::dot_many_f32 — two rows per pass, odd tail row single."""
+    d = len(q)
+    out = [0.0] * rows
+    pairs = rows // 2
+    for p in range(pairs):
+        base = 2 * p * d
+        x, y = blk_dot2_f32(q, panel[base : base + d], panel[base + d : base + 2 * d])
+        out[2 * p] = x
+        out[2 * p + 1] = y
+    if rows % 2 == 1:
+        i = rows - 1
+        out[i] = blk_dot_f32(q, panel[i * d : (i + 1) * d])
+    return out
+
+
+def fill_cum(weights):
+    """ops::fill_cum — strictly sequential f64 prefix over f32 weights."""
+    cum = []
+    acc = 0.0
+    for w in weights:
+        acc += float(w)
+        cum.append(acc)
+    return cum, acc
+
+
+def row_max_ref(xs):
+    """reference::row_max — sequential f64::max fold (NaN-ignoring)."""
+    m = -math.inf
+    for x in xs:
+        m = float(np.fmax(m, float(x)))
+    return m
+
+
+def row_max_blk(xs):
+    """blocked::row_max — 8 lanes of f64::max, lane fold, remainder."""
+    lanes = [-math.inf] * 8
+    chunks = len(xs) // 8
+    for c in range(chunks):
+        base = c * 8
+        for k in range(8):
+            lanes[k] = float(np.fmax(lanes[k], float(xs[base + k])))
+    m = -math.inf
+    for k in range(8):
+        m = float(np.fmax(m, lanes[k]))
+    for x in xs[chunks * 8 :]:
+        m = float(np.fmax(m, float(x)))
+    return m
+
+
+def max_shift_exp(xs):
+    """ops::max_shift_exp — out[i] = exp(x − max); returns (max, 4-lane Σ)."""
+    mx = -math.inf
+    for x in xs:
+        mx = float(np.fmax(mx, x))
+    out = [math.exp(x - mx) for x in xs]
+    n4 = len(out) // 4 * 4
+    s = [0.0] * 4
+    i = 0
+    while i < n4:
+        for k in range(4):
+            s[k] += out[i + k]
+        i += 4
+    z = (s[0] + s[1]) + (s[2] + s[3])
+    for j in range(n4, len(out)):
+        z += out[j]
+    return mx, out, z
+
+
+# every remainder lane for both block sizes, plus empty and singletons
+LENS = list(range(0, 18)) + [24, 31, 32, 33, 63, 64, 65, 100]
+
+
+# --- 1: remainder-lane correctness ----------------------------------------
+def check_remainder_lanes():
+    npr = np.random.default_rng(5)
+    for n in LENS:
+        a = npr.normal(0, 1, n)
+        b = npr.normal(0, 1, n)
+        got, want = blk_dot(a, b), ref_dot(a, b)
+        assert abs(got - want) <= 1e-12 * max(abs(want), 1.0), (n, got, want)
+        a32 = npr.normal(0, 1, n).astype(F32)
+        b32 = npr.normal(0, 1, n).astype(F32)
+        g32, w32 = blk_dot32(a32, b32), ref_dot32(a32, b32)
+        assert abs(float(g32) - float(w32)) <= 1e-4 * max(abs(float(w32)), 1.0), (n, g32, w32)
+        gf = blk_dot_f32(a32, b32)
+        wf = ref_dot(a32, b32)
+        assert abs(gf - wf) <= 1e-12 * max(abs(wf), 1.0), (n, gf, wf)
+    print("  blocked dot/dot32/dot_f32 == scalar reference on every remainder lane: OK")
+
+
+# --- 2: fused pair is bitwise two singles ----------------------------------
+def check_fused_pair_bitwise():
+    npr = np.random.default_rng(7)
+    for n in LENS:
+        q = npr.normal(0, 1, n).astype(F32)
+        rows = npr.normal(0, 1, 2 * n).astype(F32)
+        tl, tr = blk_dot2_32(q, rows)
+        sl = blk_dot32(q, rows[:n])
+        sr = blk_dot32(q, rows[n:])
+        assert tl.tobytes() == sl.tobytes(), (n, tl, sl)
+        assert tr.tobytes() == sr.tobytes(), (n, tr, sr)
+    print("  dot2_32 fused pair == two single dot32 calls, bitwise: OK")
+
+
+# --- 3: panel sweep is bitwise row-at-a-time -------------------------------
+def check_dot_many_bitwise():
+    npr = np.random.default_rng(9)
+    for d in (1, 3, 4, 7, 8, 16, 65):
+        for rows in (0, 1, 2, 3, 5, 8):
+            q = npr.normal(0, 1, d).astype(F32)
+            panel = npr.normal(0, 1, d * rows).astype(F32)
+            out = blk_dot_many_f32(q, panel, rows)
+            for i in range(rows):
+                want = blk_dot_f32(q, panel[i * d : (i + 1) * d])
+                assert out[i] == want, (d, rows, i, out[i], want)
+    print("  dot_many_f32 panel sweep == per-row dot_f32, bitwise: OK")
+
+
+# --- 4: prefix sums are sequential -----------------------------------------
+def check_fill_cum_sequential():
+    npr = np.random.default_rng(11)
+    for n in LENS:
+        w = npr.random(n).astype(F32)
+        cum, total = fill_cum(w)
+        acc = 0.0
+        for i in range(n):
+            acc += float(w[i])
+            assert cum[i] == acc, (n, i)
+        assert total == acc
+    print("  fill_cum prefix sums strictly sequential: OK")
+
+
+# --- 5: row max + max-shift-exp --------------------------------------------
+def check_row_max_and_softmax():
+    npr = np.random.default_rng(13)
+    for n in LENS:
+        xs = npr.normal(0, 2, n).astype(F32)
+        assert row_max_blk(xs) == row_max_ref(xs), n
+    assert row_max_blk(np.array([], dtype=F32)) == -math.inf
+    assert row_max_blk(np.array([math.nan, 2.0, 1.0], dtype=F32)) == 2.0
+    # max_shift_exp: overflow-proof and normalizing
+    mx, out, z = max_shift_exp([700.0, 710.0, 5.0, -3000.0])
+    assert mx == 710.0 and all(math.isfinite(e) for e in out) and out[1] == 1.0
+    assert abs(sum(e / z for e in out) - 1.0) < 1e-12
+    print("  row_max blocked == sequential (NaN-ignoring); max_shift_exp safe: OK")
+
+
+# --- 6: HSM cluster-blocked panel ------------------------------------------
+def frequency_binning(counts, n_clusters):
+    """Port of hsm/mod.rs::frequency_binning."""
+    n = len(counts)
+    n_clusters = max(1, min(n_clusters, n))
+    order = sorted(range(n), key=lambda c: (-counts[c], c))
+    # rust sort_by_key(Reverse(count)) is stable: ties keep index order
+    total = sum(counts) + n
+    per_bin = total / n_clusters
+    assign = [0] * n
+    members = [[] for _ in range(n_clusters)]
+    acc = 0.0
+    bin_ = 0
+    for cls in order:
+        if acc >= per_bin * (bin_ + 1) and bin_ + 1 < n_clusters:
+            bin_ += 1
+        assign[cls] = bin_
+        members[bin_].append(cls)
+        acc += counts[cls] + 1
+    for b in range(n_clusters):
+        if not members[b]:
+            donor = max(range(n_clusters), key=lambda i: len(members[i]))
+            cls = members[donor].pop()
+            assign[cls] = b
+            members[b].append(cls)
+    return assign, members
+
+
+def check_hsm_panel():
+    rng = random.Random(17)
+    for case in range(20):
+        n = rng.randint(3, 80)
+        d = rng.randint(1, 9)
+        counts = [rng.randint(0, 50) for _ in range(n)]
+        assign, members = frequency_binning(counts, rng.randint(1, 12))
+        # the panel construction of HsmHead::new
+        panel_lo, row_of_class, row = [], [0] * n, 0
+        for m in members:
+            panel_lo.append(row)
+            for cls in m:
+                row_of_class[cls] = row
+                row += 1
+        panel_lo.append(row)
+        assert row == n
+        # bijection: every class owns exactly one row inside its cluster
+        seen = [False] * n
+        for c, m in enumerate(members):
+            lo, hi = panel_lo[c], panel_lo[c + 1]
+            assert hi - lo == len(m)
+            for cls in m:
+                r = row_of_class[cls]
+                assert lo <= r < hi and not seen[r]
+                seen[r] = True
+        assert all(seen)
+        # panel-swept logits == the old per-member strided gather, bitwise:
+        # class_w rows laid out in panel order, gather indexes via class id
+        npr = np.random.default_rng(case)
+        class_w_panel = npr.normal(0, 0.1, (n, d)).astype(F32)  # panel order
+        h = npr.normal(0, 1, d).astype(F32)
+        for c, m in enumerate(members):
+            lo, hi = panel_lo[c], panel_lo[c + 1]
+            flat = class_w_panel[lo:hi].reshape(-1)
+            swept = blk_dot_many_f32(h, flat, hi - lo)
+            for j, cls in enumerate(m):
+                gathered = blk_dot_f32(h, class_w_panel[row_of_class[cls]])
+                assert swept[j] == gathered, (case, c, j)
+    print("  hsm cluster-blocked panel: bijection + swept == gathered logits: OK")
+
+
+# --- 7: tree descent with fused pair masses --------------------------------
+def check_descent_pair_integration():
+    """node_mass vs node_mass_pair on a synthetic adjacent-sibling arena:
+    values and memo contents must be identical whichever path ran first."""
+    npr = np.random.default_rng(23)
+    dim, nodes = 37, 30  # odd dim exercises both remainders
+    z32 = npr.normal(0, 1, nodes * dim).astype(F32)
+    phi32 = npr.normal(0, 1, dim).astype(F32)
+
+    def single(left):
+        return (
+            blk_dot32(phi32, z32[left * dim : (left + 1) * dim]),
+            blk_dot32(phi32, z32[(left + 1) * dim : (left + 2) * dim]),
+        )
+
+    for left in range(0, nodes - 1, 2):
+        fused = blk_dot2_32(phi32, z32[left * dim : (left + 2) * dim])
+        sl, sr = single(left)
+        assert fused[0].tobytes() == sl.tobytes(), left
+        assert fused[1].tobytes() == sr.tobytes(), left
+    print("  descent fused-pair node masses == single-node masses, bitwise: OK")
+
+
+# --- 8: q tolerance under the accumulation-order change --------------------
+def check_q_tolerance_regression(n=10_000, d=8, draws_checked=200):
+    """The tree reports q = K(h,w)/Σ_j K(h,w_j). The ops migration changed
+    the kernel's inner dot from a sequential fold to the 4-lane blocked
+    order; this pins that the induced relative change in q stays far
+    below the Rust tests' 1e-9 closed-form tolerance at catalog scale."""
+    npr = np.random.default_rng(29)
+    emb = npr.normal(0, 0.4, (n, d)).astype(F32)
+    h = npr.normal(0, 1, d).astype(F32)
+    alpha = 100.0
+
+    def kernel(dot_fn, w):
+        o = dot_fn(h, w)
+        return alpha * o * o + 1.0
+
+    # partition functions under both accumulation orders
+    z_seq = 0.0
+    z_blk = 0.0
+    for j in range(n):
+        z_seq += kernel(ref_dot, emb[j])
+        z_blk += kernel(blk_dot_f32, emb[j])
+    worst = 0.0
+    for j in range(0, n, max(1, n // draws_checked)):
+        q_seq = kernel(ref_dot, emb[j]) / z_seq
+        q_blk = kernel(blk_dot_f32, emb[j]) / z_blk
+        worst = max(worst, abs(q_blk - q_seq) / max(q_seq, 1e-300))
+    assert worst < 1e-9, f"q moved by {worst:.2e} relative"
+    print(f"  q drift under blocked accumulation at n={n}: {worst:.2e} rel (< 1e-9): OK")
+
+
+if __name__ == "__main__":
+    print("ops-layer port checks:")
+    check_remainder_lanes()
+    check_fused_pair_bitwise()
+    check_dot_many_bitwise()
+    check_fill_cum_sequential()
+    check_row_max_and_softmax()
+    check_hsm_panel()
+    check_descent_pair_integration()
+    check_q_tolerance_regression()
+    print("all ops-layer port checks passed")

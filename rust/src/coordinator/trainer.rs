@@ -354,6 +354,10 @@ impl<'e> Trainer<'e> {
                 last_train_loss
             );
         }
+        // per-phase wall accounting + steps/sec into the metrics JSONL, so
+        // ops-layer wins are visible outside the benches (kss train prints
+        // the same breakdown at the end of the run)
+        metrics.log_record("phase_times", vec![("timing", self.phases.to_json(self.step_count))]);
         Ok(TrainResult {
             final_loss: metrics.final_loss().unwrap_or(f64::NAN),
             best_loss: metrics.best_loss().unwrap_or(f64::NAN),

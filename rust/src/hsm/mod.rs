@@ -11,7 +11,21 @@
 //! Self-contained: its own two-level head, exact gradients (both softmaxes
 //! are small), SGD — no XLA involvement, so the comparison isolates the
 //! output-layer method.
+//!
+//! # Panel layout (ops-layer integration)
+//!
+//! Both levels run on [`crate::ops`]: logits are one
+//! [`crate::ops::dot_many_f32`] sweep over a contiguous row panel, the
+//! softmax is the [`crate::ops::max_shift_exp`] row primitive (f64
+//! accumulation — the head's long sums are never f32), and SGD row
+//! updates are [`crate::ops::axpy32`]. To make level 2 a panel sweep, the
+//! class vectors are stored **cluster-blocked**: `class_w` is permuted so
+//! cluster `c`'s member rows occupy the contiguous range
+//! `[panel_lo[c], panel_lo[c] + members[c].len())` — the same
+//! class-blocked-panel idea as the kernel tree's leaf step, replacing the
+//! old per-member strided gather.
 
+use crate::ops;
 use crate::util::rng::Rng;
 
 /// Cluster assignment: contiguous frequency bins (Mikolov et al. 2011 style
@@ -53,10 +67,20 @@ pub struct HsmHead {
     d: usize,
     assign: Vec<u32>,
     members: Vec<Vec<u32>>,
-    /// (n_clusters, d) cluster logit vectors.
+    /// (n_clusters, d) cluster logit vectors (contiguous panel).
     cluster_w: Vec<f32>,
-    /// (n, d) within-cluster class vectors.
+    /// (n, d) within-cluster class vectors in **cluster-blocked panel
+    /// order**: cluster c owns rows `panel_lo[c] ..` (see module docs).
     class_w: Vec<f32>,
+    /// First panel row of each cluster (`panel_lo[c+1] − panel_lo[c] ==
+    /// members[c].len()`; one extra terminal entry).
+    panel_lo: Vec<usize>,
+    /// Class id → its panel row in `class_w`.
+    row_of_class: Vec<u32>,
+    /// Reusable logits/softmax buffers (avoid per-step allocation; sized
+    /// to max(n_clusters, largest cluster)).
+    scratch_logits: Vec<f64>,
+    scratch_p: Vec<f64>,
 }
 
 impl HsmHead {
@@ -67,18 +91,46 @@ impl HsmHead {
         let mut class_w = vec![0.0f32; n * d];
         rng.fill_normal(&mut cluster_w, 0.1);
         rng.fill_normal(&mut class_w, 0.1);
-        HsmHead { d, assign, members, cluster_w, class_w }
+        // cluster-blocked panel: cluster c's members are contiguous rows
+        let mut panel_lo = Vec::with_capacity(members.len() + 1);
+        let mut row_of_class = vec![0u32; n];
+        let mut row = 0usize;
+        for m in &members {
+            panel_lo.push(row);
+            for &class in m {
+                row_of_class[class as usize] = row as u32;
+                row += 1;
+            }
+        }
+        panel_lo.push(row);
+        debug_assert_eq!(row, n);
+        let widest = members.iter().map(|m| m.len()).max().unwrap_or(1).max(members.len());
+        HsmHead {
+            d,
+            assign,
+            members,
+            cluster_w,
+            class_w,
+            panel_lo,
+            row_of_class,
+            scratch_logits: vec![0.0; widest],
+            scratch_p: vec![0.0; widest],
+        }
     }
 
     pub fn n_clusters(&self) -> usize {
         self.members.len()
     }
 
+    /// Cluster c's contiguous class-vector panel.
+    #[inline]
+    fn panel(&self, c: usize) -> &[f32] {
+        &self.class_w[self.panel_lo[c] * self.d..self.panel_lo[c + 1] * self.d]
+    }
+
     /// -log p(y|h) under the factorization; O(d(√n + |cluster|)).
     pub fn loss(&self, h: &[f32], y: u32) -> f64 {
-        let c = self.assign[y as usize] as usize;
-        let (lc, _) = self.softmax_over(h, None, c, y);
-        lc
+        -(self.prob(h, y).max(1e-300)).ln()
     }
 
     /// One SGD step on example (h, y); returns the loss. Updates both levels
@@ -88,41 +140,37 @@ impl HsmHead {
         let c = self.assign[y as usize] as usize;
         dh.iter_mut().for_each(|x| *x = 0.0);
 
-        // level 1: cluster softmax over all clusters
+        // level 1: cluster softmax over all clusters — one panel sweep
         let k = self.members.len();
-        let mut logits = vec![0.0f32; k];
-        for (j, slot) in logits.iter_mut().enumerate() {
-            *slot = dotf(&self.cluster_w[j * d..(j + 1) * d], h);
-        }
-        let p1 = softmax(&logits);
-        let loss1 = -(p1[c].max(1e-30)).ln();
+        let logits = &mut self.scratch_logits[..k];
+        ops::dot_many_f32(h, &self.cluster_w, logits);
+        let p1 = &mut self.scratch_p[..k];
+        let (_, z1) = ops::max_shift_exp(logits, p1);
+        let loss1 = -((p1[c] / z1).max(1e-30)).ln();
         for j in 0..k {
-            let g = (p1[j] - f64::from(j == c) as f64) as f32;
-            for t in 0..d {
-                dh[t] += g * self.cluster_w[j * d + t];
-                self.cluster_w[j * d + t] -= lr * g * h[t];
-            }
+            let g = ((p1[j] / z1) - f64::from(j == c) as f64) as f32;
+            let row = &self.cluster_w[j * d..(j + 1) * d];
+            ops::axpy32(dh, g, row);
+            let row = &mut self.cluster_w[j * d..(j + 1) * d];
+            ops::axpy32(row, -lr * g, h);
         }
 
-        // level 2: class softmax within y's cluster
-        let members = self.members[c].clone();
-        let mut logits = vec![0.0f32; members.len()];
-        let mut y_pos = 0;
-        for (j, &class) in members.iter().enumerate() {
-            logits[j] = dotf(&self.class_w[class as usize * d..(class as usize + 1) * d], h);
-            if class == y {
-                y_pos = j;
-            }
-        }
-        let p2 = softmax(&logits);
-        let loss2 = -(p2[y_pos].max(1e-30)).ln();
-        for (j, &class) in members.iter().enumerate() {
-            let g = (p2[j] - f64::from(j == y_pos) as f64) as f32;
-            let row = &mut self.class_w[class as usize * d..(class as usize + 1) * d];
-            for t in 0..d {
-                dh[t] += g * row[t];
-                row[t] -= lr * g * h[t];
-            }
+        // level 2: class softmax within y's cluster — the cluster-blocked
+        // panel makes this one contiguous sweep, no strided gather
+        let (lo, hi) = (self.panel_lo[c], self.panel_lo[c + 1]);
+        let len = hi - lo;
+        let y_pos = self.row_of_class[y as usize] as usize - lo;
+        let logits = &mut self.scratch_logits[..len];
+        ops::dot_many_f32(h, &self.class_w[lo * d..hi * d], logits);
+        let p2 = &mut self.scratch_p[..len];
+        let (_, z2) = ops::max_shift_exp(logits, p2);
+        let loss2 = -((p2[y_pos] / z2).max(1e-30)).ln();
+        for j in 0..len {
+            let g = ((p2[j] / z2) - f64::from(j == y_pos) as f64) as f32;
+            let row = &self.class_w[(lo + j) * d..(lo + j + 1) * d];
+            ops::axpy32(dh, g, row);
+            let row = &mut self.class_w[(lo + j) * d..(lo + j + 1) * d];
+            ops::axpy32(row, -lr * g, h);
         }
         loss1 + loss2
     }
@@ -131,27 +179,20 @@ impl HsmHead {
     /// construction — verified in tests).
     pub fn prob(&self, h: &[f32], y: u32) -> f64 {
         let c = self.assign[y as usize] as usize;
-        let k = self.members.len();
         let d = self.d;
-        let mut logits = vec![0.0f32; k];
-        for (j, slot) in logits.iter_mut().enumerate() {
-            *slot = dotf(&self.cluster_w[j * d..(j + 1) * d], h);
-        }
-        let p1 = softmax(&logits)[c];
-        let members = &self.members[c];
-        let mut logits = vec![0.0f32; members.len()];
-        let mut y_pos = 0;
-        for (j, &class) in members.iter().enumerate() {
-            logits[j] = dotf(&self.class_w[class as usize * d..(class as usize + 1) * d], h);
-            if class == y {
-                y_pos = j;
-            }
-        }
-        p1 * softmax(&logits)[y_pos]
-    }
-
-    fn softmax_over(&self, h: &[f32], _unused: Option<()>, c: usize, y: u32) -> (f64, usize) {
-        (-(self.prob(h, y).max(1e-300)).ln(), c)
+        let k = self.members.len();
+        let mut logits = vec![0.0f64; k];
+        ops::dot_many_f32(h, &self.cluster_w, &mut logits);
+        let mut e = vec![0.0f64; k];
+        let (_, z1) = ops::max_shift_exp(&logits, &mut e);
+        let p1 = e[c] / z1;
+        let (lo, hi) = (self.panel_lo[c], self.panel_lo[c + 1]);
+        let y_pos = self.row_of_class[y as usize] as usize - lo;
+        let mut logits = vec![0.0f64; hi - lo];
+        ops::dot_many_f32(h, self.panel(c), &mut logits);
+        let mut e = vec![0.0f64; hi - lo];
+        let (_, z2) = ops::max_shift_exp(&logits, &mut e);
+        p1 * (e[y_pos] / z2)
     }
 }
 
@@ -159,48 +200,42 @@ impl HsmHead {
 pub struct FullHead {
     d: usize,
     w: Vec<f32>,
+    /// Reusable logits/softmax buffers.
+    scratch_logits: Vec<f64>,
+    scratch_p: Vec<f64>,
 }
 
 impl FullHead {
     pub fn new(n: usize, d: usize, rng: &mut Rng) -> FullHead {
         let mut w = vec![0.0f32; n * d];
         rng.fill_normal(&mut w, 0.1);
-        FullHead { d, w }
+        FullHead { d, w, scratch_logits: vec![0.0; n], scratch_p: vec![0.0; n] }
     }
 
     pub fn loss(&self, h: &[f32], y: u32) -> f64 {
         let n = self.w.len() / self.d;
-        let logits: Vec<f32> =
-            (0..n).map(|j| dotf(&self.w[j * self.d..(j + 1) * self.d], h)).collect();
-        -(softmax(&logits)[y as usize].max(1e-30)).ln()
+        let mut logits = vec![0.0f64; n];
+        ops::dot_many_f32(h, &self.w, &mut logits);
+        let mut e = vec![0.0f64; n];
+        let (_, z) = ops::max_shift_exp(&logits, &mut e);
+        -((e[y as usize] / z).max(1e-30)).ln()
     }
 
     pub fn step(&mut self, h: &[f32], y: u32, lr: f32) -> f64 {
         let d = self.d;
         let n = self.w.len() / d;
-        let logits: Vec<f32> = (0..n).map(|j| dotf(&self.w[j * d..(j + 1) * d], h)).collect();
-        let p = softmax(&logits);
-        let loss = -(p[y as usize].max(1e-30)).ln();
+        let logits = &mut self.scratch_logits[..n];
+        ops::dot_many_f32(h, &self.w, logits);
+        let p = &mut self.scratch_p[..n];
+        let (_, z) = ops::max_shift_exp(logits, p);
+        let loss = -((p[y as usize] / z).max(1e-30)).ln();
         for j in 0..n {
-            let g = (p[j] - f64::from(j == y as usize) as f64) as f32;
+            let g = ((p[j] / z) - f64::from(j == y as usize) as f64) as f32;
             let row = &mut self.w[j * d..(j + 1) * d];
-            for t in 0..d {
-                row[t] -= lr * g * h[t];
-            }
+            ops::axpy32(row, -lr * g, h);
         }
         loss
     }
-}
-
-fn dotf(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
-}
-
-fn softmax(o: &[f32]) -> Vec<f64> {
-    let mx = o.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let e: Vec<f64> = o.iter().map(|&x| (x as f64 - mx).exp()).collect();
-    let z: f64 = e.iter().sum();
-    e.into_iter().map(|x| x / z).collect()
 }
 
 #[cfg(test)]
@@ -226,6 +261,29 @@ mod tests {
     }
 
     #[test]
+    fn cluster_panel_layout_is_a_permutation() {
+        // every class owns exactly one panel row inside its cluster's
+        // contiguous block — the invariant the level-2 sweep depends on
+        let mut rng = Rng::new(13);
+        let counts: Vec<u64> = (0..57u64).map(|i| i * 7 % 23).collect();
+        let head = HsmHead::new(&counts, 5, 8, &mut rng);
+        let n = counts.len();
+        let mut seen = vec![false; n];
+        for (c, m) in head.members.iter().enumerate() {
+            let (lo, hi) = (head.panel_lo[c], head.panel_lo[c + 1]);
+            assert_eq!(hi - lo, m.len(), "cluster {c} panel size");
+            for &class in m {
+                let row = head.row_of_class[class as usize] as usize;
+                assert!((lo..hi).contains(&row), "class {class} outside its panel");
+                assert!(!seen[row], "panel row {row} assigned twice");
+                seen[row] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "panel rows must cover all classes");
+        assert_eq!(*head.panel_lo.last().unwrap(), n);
+    }
+
+    #[test]
     fn hsm_probabilities_sum_to_one() {
         let mut rng = Rng::new(3);
         let counts = vec![5u64; 30];
@@ -233,6 +291,22 @@ mod tests {
         let h: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let total: f64 = (0..30).map(|y| head.prob(&h, y)).sum();
         assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn step_loss_matches_prob_before_update() {
+        // the step's reported loss must equal -ln p(y|h) of the pre-update
+        // head (same max-shift softmax both ways)
+        let mut rng = Rng::new(17);
+        let counts: Vec<u64> = (0..40u64).map(|i| i + 1).collect();
+        let mut head = HsmHead::new(&counts, 6, 7, &mut rng);
+        let mut dh = vec![0.0f32; 6];
+        for y in [0u32, 13, 39] {
+            let h: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let want = head.loss(&h, y);
+            let got = head.step(&h, y, 0.05, &mut dh);
+            assert!((got - want).abs() < 1e-9 * want.max(1.0), "y {y}: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, threadpool, stats,
 //!   property-test harness); the offline build has no external crates for
 //!   these.
+//! * [`ops`] — the vectorized compute core: blocked/unrolled `dot`
+//!   families, panel `dot_many`, `axpy`, prefix sums and the max-shift+exp
+//!   row primitive, each with a scalar reference implementation
+//!   (`--features ops-scalar` selects it at build time). Every hot inner
+//!   loop in the sampler, serve, hsm, runtime and util layers calls here.
 //! * [`sampler`] — the `Sampler` trait, the paper's kernel samplers
 //!   (quadratic/quartic; flat and tree-based) and the baselines (uniform,
 //!   unigram, bigram, exact softmax).
@@ -45,6 +50,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
 pub mod hsm;
+pub mod ops;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;

@@ -248,7 +248,10 @@ fn train_cmd(artifacts: &Path, args: &Args) -> Result<()> {
     println!("  final eval loss {:.4} (ppl {:.2})", res.final_loss, res.final_loss.exp());
     println!("  best  eval loss {:.4}", res.best_loss);
     println!("  steps {}", res.steps);
-    println!("phase breakdown:\n{}", trainer.phases.report());
+    println!(
+        "phase breakdown (share of accounted wall):\n{}",
+        trainer.phases.report_with_throughput(res.steps)
+    );
     Ok(())
 }
 

@@ -1,0 +1,895 @@
+//! Vectorized compute core — the one set of inner-loop primitives under
+//! every hot path in the system.
+//!
+//! The paper's cost argument is that one kernel draw is O(D log n) against
+//! the full softmax's O(nd); once that asymptotic is in place, the constant
+//! factor on the D-dimensional inner products and row sweeps *is* the
+//! product. Before this module those loops were hand-rolled in five places
+//! (tree descent, tree update sweep, flat CDF fill, RFF φ, HSM head) with
+//! mixed f32/f64 accumulation and per-site layouts that blocked
+//! autovectorization. Now every layer calls here:
+//!
+//! ```text
+//! sampler/kernel/tree.rs   descent node masses ──► dot2_32 / dot32 (f32 shadow)
+//!                          q / partition / beam ─► dot            (f64 master)
+//!                          leaf scoring ────────► FeatureMap::kernel_many
+//!                                                  └► dot_many_f32 (class panel)
+//!                          update sweeps ───────► add_assign / sub_assign
+//! sampler/kernel/flat.rs   weight shift ────────► row_max
+//!                          CDF fill ────────────► fill_cum
+//! sampler/rff/map.rs       φ(a), K̂(a,b) ───────► dot_many_mixed / dot_mixed
+//!                                                  └► exp_shifted
+//! sampler/rff/orthogonal   Gram–Schmidt ────────► dot
+//! hsm/mod.rs               head logits ─────────► dot_many_f32 (cluster panel)
+//!                          softmax ─────────────► max_shift_exp
+//!                          SGD row updates ─────► axpy32
+//! util/rng.rs              Cdf construction ────► fill_cum
+//! serve/shard.rs           router CDF ──────────► fill_cum_into
+//! serve/topk.rs            beam / leaf scores ──► dot, kernel_many (via tree)
+//! ```
+//!
+//! # Accumulation-order contract
+//!
+//! Every reduction here has a **pinned, input-only accumulation order**:
+//! the result is a pure function of the input values and length — never of
+//! thread count, call site, or previous calls. Concretely:
+//!
+//! * `dot`-family reductions split the input into a fixed number of lanes
+//!   (4 for f64, 8 for f32), accumulate each lane sequentially over its
+//!   strided elements, combine lanes pairwise (`(s0+s1)+(s2+s3)` for 4
+//!   lanes; left-fold of the 8-lane array for f32), then fold the `len %
+//!   lanes` remainder sequentially. This is both the SIMD-friendly shape
+//!   (independent dependence chains) and a *pairwise-style* summation whose
+//!   worst-case rounding error is strictly smaller than the scalar
+//!   sequential fold's for long inputs.
+//! * Long sums that feed probabilities accumulate in **f64** even when the
+//!   inputs are f32 (`dot_f32`, `dot_many_f32`, `fill_cum`): the only f32
+//!   accumulation in the system is the tree's descent shadow (`dot32` /
+//!   `dot2_32`), whose exactness the sampler never relies on — q values are
+//!   recomputed in closed form from f64 state.
+//! * Prefix sums (`fill_cum`, `fill_cum_into`) are defined **strictly
+//!   sequentially** in both implementations: each cumulative value is
+//!   observable by the CDF draw, so there is exactly one legal order.
+//! * Element-wise ops (`axpy`, `add_assign`, `exp_shifted`, …) have no
+//!   reduction at all; blocked and scalar versions are bit-identical.
+//!
+//! # Build-time selection
+//!
+//! The public dot/axpy/row_max families dispatch to the blocked
+//! implementations by default; building with `--features ops-scalar`
+//! swaps in the scalar reference bodies (`ops::reference`) instead — a
+//! debugging/bisection aid, and the baseline `benches/ops_throughput.rs`
+//! measures against. Exceptions with a **single** implementation in both
+//! builds (a bisection cannot swap these out): the prefix sums
+//! (`fill_cum`, `fill_cum_into` — sequential is the only legal order),
+//! the element-wise `exp_shifted`, and `max_shift_exp` (element-wise exp
+//! plus one pinned 4-lane normalizer). Property tests pin blocked ==
+//! reference across every remainder-lane length and assert bitwise
+//! determinism (same input ⇒ same bits, on any thread).
+
+/// Scalar reference implementations: the semantic ground truth the blocked
+/// kernels are property-tested against, and the baseline the throughput
+/// bench measures. Plain sequential loops — one accumulator, one pass.
+pub mod reference {
+    /// Sequential f64 dot product.
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+    }
+
+    /// Sequential f32 dot product with f32 accumulation.
+    pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+    }
+
+    /// Sequential f32-input dot with f64 accumulation.
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    /// Sequential mixed f64×f32 dot with f64 accumulation.
+    pub fn dot_mixed(w: &[f64], x: &[f32]) -> f64 {
+        debug_assert_eq!(w.len(), x.len());
+        w.iter().zip(x).map(|(&a, &b)| a * b as f64).sum()
+    }
+
+    /// Row-at-a-time panel dot (see [`super::dot_many`]).
+    pub fn dot_many(q: &[f64], panel: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(panel.len(), q.len() * out.len());
+        for (slot, row) in out.iter_mut().zip(panel.chunks_exact(q.len().max(1))) {
+            *slot = dot(q, row);
+        }
+    }
+
+    /// Row-at-a-time f32 panel dot with f64 accumulation.
+    pub fn dot_many_f32(q: &[f32], panel: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(panel.len(), q.len() * out.len());
+        for (slot, row) in out.iter_mut().zip(panel.chunks_exact(q.len().max(1))) {
+            *slot = dot_f32(q, row);
+        }
+    }
+
+    /// Row-at-a-time mixed panel dot: `out[i] = ⟨panel_row_i, x⟩`.
+    pub fn dot_many_mixed(panel: &[f64], x: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(panel.len(), x.len() * out.len());
+        for (slot, row) in out.iter_mut().zip(panel.chunks_exact(x.len().max(1))) {
+            *slot = dot_mixed(row, x);
+        }
+    }
+
+    /// `y += a·x`, element-wise.
+    pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// `y += a·x`, element-wise, f32.
+    pub fn axpy32(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// `y += x`, element-wise.
+    pub fn add_assign(y: &mut [f64], x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += xi;
+        }
+    }
+
+    /// `y -= x`, element-wise.
+    pub fn sub_assign(y: &mut [f64], x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi -= xi;
+        }
+    }
+
+    /// Row max of f32 values as f64 (NaNs ignored, `-inf` when empty).
+    pub fn row_max(xs: &[f32]) -> f64 {
+        xs.iter().fold(f64::NEG_INFINITY, |m, &o| m.max(o as f64))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked implementations. Lane counts are fixed constants of the contract
+// (4 f64 lanes / 8 f32 lanes), chosen to saturate the FP pipelines of any
+// recent x86/aarch64 core without spilling accumulators.
+// ---------------------------------------------------------------------------
+
+mod blocked {
+    /// 4-lane f64 dot: lanes combined pairwise, then the remainder
+    /// sequentially — the pinned accumulation order of the contract.
+    #[inline]
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut i = 0;
+        while i < n4 {
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+            i += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3);
+        for j in n4..a.len() {
+            acc += a[j] * b[j];
+        }
+        acc
+    }
+
+    /// 8-lane f32 dot with f32 accumulation (the descent shadow's dot:
+    /// twice the SIMD width of f64, half the memory traffic).
+    #[inline]
+    pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; 8];
+        let chunks = a.len() / 8;
+        for c in 0..chunks {
+            let base = c * 8;
+            for k in 0..8 {
+                acc[k] += a[base + k] * b[base + k];
+            }
+        }
+        let mut total = acc.iter().sum::<f32>();
+        for j in chunks * 8..a.len() {
+            total += a[j] * b[j];
+        }
+        total
+    }
+
+    /// 4-lane f32-input dot with **f64 accumulation** — the long-sum-safe
+    /// form every probability-feeding reduction over f32 data uses.
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n4 = a.len() / 4 * 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut i = 0;
+        while i < n4 {
+            s0 += a[i] as f64 * b[i] as f64;
+            s1 += a[i + 1] as f64 * b[i + 1] as f64;
+            s2 += a[i + 2] as f64 * b[i + 2] as f64;
+            s3 += a[i + 3] as f64 * b[i + 3] as f64;
+            i += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3);
+        for j in n4..a.len() {
+            acc += a[j] as f64 * b[j] as f64;
+        }
+        acc
+    }
+
+    /// 4-lane mixed f64×f32 dot, f64 accumulation.
+    #[inline]
+    pub fn dot_mixed(w: &[f64], x: &[f32]) -> f64 {
+        debug_assert_eq!(w.len(), x.len());
+        let n4 = w.len() / 4 * 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut i = 0;
+        while i < n4 {
+            s0 += w[i] * x[i] as f64;
+            s1 += w[i + 1] * x[i + 1] as f64;
+            s2 += w[i + 2] * x[i + 2] as f64;
+            s3 += w[i + 3] * x[i + 3] as f64;
+            i += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3);
+        for j in n4..w.len() {
+            acc += w[j] * x[j] as f64;
+        }
+        acc
+    }
+
+    /// Fused two-row f32 panel dot: one pass over `q` against two
+    /// *contiguous* rows (`rows.len() == 2·q.len()`), each accumulated in
+    /// exactly [`dot32`]'s order — the results are bit-identical to two
+    /// separate `dot32` calls, but every `q` load is reused for both rows.
+    /// This is the tree-descent shape: sibling `z32` slices are adjacent in
+    /// the arena by construction.
+    #[inline]
+    pub fn dot2_32(q: &[f32], rows: &[f32]) -> (f32, f32) {
+        let n = q.len();
+        debug_assert_eq!(rows.len(), 2 * n);
+        let (l, r) = rows.split_at(n);
+        let mut al = [0.0f32; 8];
+        let mut ar = [0.0f32; 8];
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let base = c * 8;
+            for k in 0..8 {
+                al[k] += q[base + k] * l[base + k];
+                ar[k] += q[base + k] * r[base + k];
+            }
+        }
+        let mut tl = al.iter().sum::<f32>();
+        let mut tr = ar.iter().sum::<f32>();
+        for j in chunks * 8..n {
+            tl += q[j] * l[j];
+            tr += q[j] * r[j];
+        }
+        (tl, tr)
+    }
+
+    /// Fused two-row f64 dot (same pinned per-row order as [`dot`]).
+    #[inline]
+    fn dot2(q: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let n4 = q.len() / 4 * 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+        let (mut b0, mut b1, mut b2, mut b3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut i = 0;
+        while i < n4 {
+            a0 += q[i] * a[i];
+            a1 += q[i + 1] * a[i + 1];
+            a2 += q[i + 2] * a[i + 2];
+            a3 += q[i + 3] * a[i + 3];
+            b0 += q[i] * b[i];
+            b1 += q[i + 1] * b[i + 1];
+            b2 += q[i + 2] * b[i + 2];
+            b3 += q[i + 3] * b[i + 3];
+            i += 4;
+        }
+        let mut ta = (a0 + a1) + (a2 + a3);
+        let mut tb = (b0 + b1) + (b2 + b3);
+        for j in n4..q.len() {
+            ta += q[j] * a[j];
+            tb += q[j] * b[j];
+        }
+        (ta, tb)
+    }
+
+    /// Fused two-row f32 dot with f64 accumulation (per-row order pinned
+    /// to [`dot_f32`]'s).
+    #[inline]
+    fn dot2_f32(q: &[f32], a: &[f32], b: &[f32]) -> (f64, f64) {
+        let n4 = q.len() / 4 * 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+        let (mut b0, mut b1, mut b2, mut b3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut i = 0;
+        while i < n4 {
+            a0 += q[i] as f64 * a[i] as f64;
+            a1 += q[i + 1] as f64 * a[i + 1] as f64;
+            a2 += q[i + 2] as f64 * a[i + 2] as f64;
+            a3 += q[i + 3] as f64 * a[i + 3] as f64;
+            b0 += q[i] as f64 * b[i] as f64;
+            b1 += q[i + 1] as f64 * b[i + 1] as f64;
+            b2 += q[i + 2] as f64 * b[i + 2] as f64;
+            b3 += q[i + 3] as f64 * b[i + 3] as f64;
+            i += 4;
+        }
+        let mut ta = (a0 + a1) + (a2 + a3);
+        let mut tb = (b0 + b1) + (b2 + b3);
+        for j in n4..q.len() {
+            ta += q[j] as f64 * a[j] as f64;
+            tb += q[j] as f64 * b[j] as f64;
+        }
+        (ta, tb)
+    }
+
+    /// Fused panel dot: `out[i] = ⟨q, panel[i·d..(i+1)·d]⟩` with `q`
+    /// cache-resident and the panel streamed once, two rows per pass (each
+    /// row still accumulates in [`dot`]'s pinned order, so the result is
+    /// bit-identical to row-at-a-time calls).
+    #[inline]
+    pub fn dot_many(q: &[f64], panel: &[f64], out: &mut [f64]) {
+        let d = q.len();
+        debug_assert_eq!(panel.len(), d * out.len());
+        let pairs = out.len() / 2;
+        for p in 0..pairs {
+            let base = 2 * p * d;
+            let (x, y) = dot2(q, &panel[base..base + d], &panel[base + d..base + 2 * d]);
+            out[2 * p] = x;
+            out[2 * p + 1] = y;
+        }
+        if out.len() % 2 == 1 {
+            let i = out.len() - 1;
+            out[i] = dot(q, &panel[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// [`dot_many`] over f32 data with f64 accumulation — leaf class
+    /// panels, HSM head panels, logits rows.
+    #[inline]
+    pub fn dot_many_f32(q: &[f32], panel: &[f32], out: &mut [f64]) {
+        let d = q.len();
+        debug_assert_eq!(panel.len(), d * out.len());
+        let pairs = out.len() / 2;
+        for p in 0..pairs {
+            let base = 2 * p * d;
+            let (x, y) = dot2_f32(q, &panel[base..base + d], &panel[base + d..base + 2 * d]);
+            out[2 * p] = x;
+            out[2 * p + 1] = y;
+        }
+        if out.len() % 2 == 1 {
+            let i = out.len() - 1;
+            out[i] = dot_f32(q, &panel[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Mixed panel dot: `out[i] = ⟨panel_row_i (f64), x (f32)⟩` — the RFF
+    /// `ω` projection, streaming the D×d frequency panel once.
+    #[inline]
+    pub fn dot_many_mixed(panel: &[f64], x: &[f32], out: &mut [f64]) {
+        let d = x.len();
+        debug_assert_eq!(panel.len(), d * out.len());
+        for (slot, row) in out.iter_mut().zip(panel.chunks_exact(d.max(1))) {
+            *slot = dot_mixed(row, x);
+        }
+    }
+
+    /// `y += a·x` (element-wise; 4-lane unrolled, bit-identical to the
+    /// scalar loop — there is no reduction).
+    #[inline]
+    pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n4 = y.len() / 4 * 4;
+        let mut i = 0;
+        while i < n4 {
+            y[i] += a * x[i];
+            y[i + 1] += a * x[i + 1];
+            y[i + 2] += a * x[i + 2];
+            y[i + 3] += a * x[i + 3];
+            i += 4;
+        }
+        for j in n4..y.len() {
+            y[j] += a * x[j];
+        }
+    }
+
+    /// `y += a·x`, f32 (HSM SGD row updates).
+    #[inline]
+    pub fn axpy32(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n8 = y.len() / 8 * 8;
+        let mut i = 0;
+        while i < n8 {
+            for k in 0..8 {
+                y[i + k] += a * x[i + k];
+            }
+            i += 8;
+        }
+        for j in n8..y.len() {
+            y[j] += a * x[j];
+        }
+    }
+
+    /// `y += x` (the update sweep's Δz merge).
+    #[inline]
+    pub fn add_assign(y: &mut [f64], x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n4 = y.len() / 4 * 4;
+        let mut i = 0;
+        while i < n4 {
+            y[i] += x[i];
+            y[i + 1] += x[i + 1];
+            y[i + 2] += x[i + 2];
+            y[i + 3] += x[i + 3];
+            i += 4;
+        }
+        for j in n4..y.len() {
+            y[j] += x[j];
+        }
+    }
+
+    /// `y -= x` (Δφ = φ_new − φ_old in place).
+    #[inline]
+    pub fn sub_assign(y: &mut [f64], x: &[f64]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n4 = y.len() / 4 * 4;
+        let mut i = 0;
+        while i < n4 {
+            y[i] -= x[i];
+            y[i + 1] -= x[i + 1];
+            y[i + 2] -= x[i + 2];
+            y[i + 3] -= x[i + 3];
+            i += 4;
+        }
+        for j in n4..y.len() {
+            y[j] -= x[j];
+        }
+    }
+
+    /// Row max of f32 values as f64. `max` is associative and commutative
+    /// and NaNs are ignored per `f64::max`, so the blocked lane order
+    /// returns exactly the scalar fold's value (`-inf` on empty input).
+    #[inline]
+    pub fn row_max(xs: &[f32]) -> f64 {
+        let mut lanes = [f64::NEG_INFINITY; 8];
+        let chunks = xs.len() / 8;
+        for c in 0..chunks {
+            let base = c * 8;
+            for k in 0..8 {
+                lanes[k] = lanes[k].max(xs[base + k] as f64);
+            }
+        }
+        let mut m = lanes.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        for &x in &xs[chunks * 8..] {
+            m = m.max(x as f64);
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API: blocked by default, scalar reference under `ops-scalar`.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "ops-scalar"))]
+use blocked as imp;
+#[cfg(feature = "ops-scalar")]
+use reference as imp;
+
+/// `⟨a, b⟩`, f64 (4-lane blocked; see the module contract).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    imp::dot(a, b)
+}
+
+/// `⟨a, b⟩`, f32 inputs, **f32 accumulation** (8-lane) — the tree's descent
+/// shadow dot only. Every probability-feeding sum uses [`dot_f32`] instead.
+#[inline]
+pub fn dot32(a: &[f32], b: &[f32]) -> f32 {
+    imp::dot32(a, b)
+}
+
+/// `⟨a, b⟩`, f32 inputs, f64 accumulation (4-lane).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    imp::dot_f32(a, b)
+}
+
+/// `⟨w, x⟩` for f64 `w` against f32 `x`, f64 accumulation (4-lane).
+#[inline]
+pub fn dot_mixed(w: &[f64], x: &[f32]) -> f64 {
+    imp::dot_mixed(w, x)
+}
+
+/// Fused dot of `q` against two contiguous f32 rows (`rows.len() ==
+/// 2·q.len()`); returns both, bit-identical to two [`dot32`] calls. The
+/// descent reads sibling `z32` slices, which are adjacent by arena
+/// construction — one streamed panel, `q` loaded once.
+#[inline]
+pub fn dot2_32(q: &[f32], rows: &[f32]) -> (f32, f32) {
+    #[cfg(not(feature = "ops-scalar"))]
+    {
+        blocked::dot2_32(q, rows)
+    }
+    #[cfg(feature = "ops-scalar")]
+    {
+        let n = q.len();
+        (reference::dot32(q, &rows[..n]), reference::dot32(q, &rows[n..]))
+    }
+}
+
+/// `out[i] = ⟨q, panel[i·d..(i+1)·d]⟩` over a row-major class-blocked
+/// panel: the panel streams through cache once while `q` stays resident —
+/// the shape every leaf/HSM/logits sweep now has.
+#[inline]
+pub fn dot_many(q: &[f64], panel: &[f64], out: &mut [f64]) {
+    imp::dot_many(q, panel, out)
+}
+
+/// [`dot_many`] over f32 data with f64 accumulation.
+#[inline]
+pub fn dot_many_f32(q: &[f32], panel: &[f32], out: &mut [f64]) {
+    imp::dot_many_f32(q, panel, out)
+}
+
+/// `out[i] = ⟨panel_row_i, x⟩` for an f64 panel against an f32 query (the
+/// RFF `ω` projection).
+#[inline]
+pub fn dot_many_mixed(panel: &[f64], x: &[f32], out: &mut [f64]) {
+    imp::dot_many_mixed(panel, x, out)
+}
+
+/// `y += a·x`, element-wise f64.
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    imp::axpy(y, a, x)
+}
+
+/// `y += a·x`, element-wise f32.
+#[inline]
+pub fn axpy32(y: &mut [f32], a: f32, x: &[f32]) {
+    imp::axpy32(y, a, x)
+}
+
+/// `y += x`, element-wise f64.
+#[inline]
+pub fn add_assign(y: &mut [f64], x: &[f64]) {
+    imp::add_assign(y, x)
+}
+
+/// `y -= x`, element-wise f64.
+#[inline]
+pub fn sub_assign(y: &mut [f64], x: &[f64]) {
+    imp::sub_assign(y, x)
+}
+
+/// Row max of f32 values as f64 (NaNs ignored, `-inf` when empty) — the
+/// `Exp` kernel's overflow shift.
+#[inline]
+pub fn row_max(xs: &[f32]) -> f64 {
+    imp::row_max(xs)
+}
+
+/// Fill `cum` with the inclusive prefix sums of `weights` (`cum[i] =
+/// Σ_{j<=i} w_j`, f64) and return the total mass. **Strictly sequential in
+/// both implementations** — every partial sum is observable by the CDF
+/// draw, so there is exactly one legal accumulation order (the contract's
+/// prefix-sum clause). Negative weights are a programming error; NaN/inf
+/// flow through to the caller's total check as a recoverable degenerate
+/// row. The allocation-free core behind `util::rng::Cdf` and the flat
+/// sampler's pooled scratch.
+pub fn fill_cum(weights: &[f32], cum: &mut Vec<f64>) -> f64 {
+    cum.clear();
+    cum.reserve(weights.len());
+    let mut acc = 0.0f64;
+    for &w in weights {
+        debug_assert!(!(w < 0.0), "negative weight in CDF");
+        acc += w as f64;
+        cum.push(acc);
+    }
+    acc
+}
+
+/// [`fill_cum`] over f64 weights into a preallocated slice (`cum.len() ==
+/// weights.len()`); returns the total. The serve-layer shard router builds
+/// its per-request root-mass CDF with this.
+pub fn fill_cum_into(weights: &[f64], cum: &mut [f64]) -> f64 {
+    debug_assert_eq!(weights.len(), cum.len());
+    let mut acc = 0.0f64;
+    for (slot, &w) in cum.iter_mut().zip(weights) {
+        debug_assert!(!(w < 0.0), "negative weight in CDF");
+        acc += w;
+        *slot = acc;
+    }
+    acc
+}
+
+/// Max-shift + exp row primitive: `out[i] = exp(xs[i] − max(xs))`; returns
+/// `(max, Σ out)`. The numerically safe softmax numerator every head loss
+/// shares (the shift cancels in all probability ratios). Element-wise exp
+/// plus the pinned 4-lane sum for the total.
+pub fn max_shift_exp(xs: &[f64], out: &mut [f64]) -> (f64, f64) {
+    debug_assert_eq!(xs.len(), out.len());
+    let mx = xs.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+    for (slot, &x) in out.iter_mut().zip(xs) {
+        *slot = (x - mx).exp();
+    }
+    // pinned 4-lane reduction for the normalizer (same order as `dot` with
+    // an all-ones query)
+    let n4 = out.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < n4 {
+        s0 += out[i];
+        s1 += out[i + 1];
+        s2 += out[i + 2];
+        s3 += out[i + 3];
+        i += 4;
+    }
+    let mut z = (s0 + s1) + (s2 + s3);
+    for j in n4..out.len() {
+        z += out[j];
+    }
+    (mx, z)
+}
+
+/// `xs[i] = exp(min(xs[i] + shift, max_exp))` in place — the RFF φ/kernel
+/// exponentiation with its overflow clamp folded in. Element-wise.
+pub fn exp_shifted(xs: &mut [f64], shift: f64, max_exp: f64) {
+    for x in xs.iter_mut() {
+        *x = (*x + shift).min(max_exp).exp();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Lengths exercising every remainder lane for both block sizes
+    /// (len % 4 ∈ {0..3} and len % 8 ∈ {0..7}), plus empty and length-1.
+    fn lens() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=17).collect();
+        v.extend([24, 31, 32, 33, 63, 64, 65, 100]);
+        v
+    }
+
+    fn vec64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn vec32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn blocked_dot_matches_reference_across_remainder_lanes() {
+        let mut rng = Rng::new(0x0505);
+        for n in lens() {
+            let a = vec64(&mut rng, n);
+            let b = vec64(&mut rng, n);
+            let got = blocked::dot(&a, &b);
+            let want = reference::dot(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                "len {n}: {got} vs {want}"
+            );
+            let a32 = vec32(&mut rng, n);
+            let b32 = vec32(&mut rng, n);
+            let g32 = blocked::dot32(&a32, &b32);
+            let w32 = reference::dot32(&a32, &b32);
+            assert!(
+                (g32 - w32).abs() <= 1e-4 * w32.abs().max(1.0),
+                "len {n}: {g32} vs {w32}"
+            );
+            let gf = blocked::dot_f32(&a32, &b32);
+            let wf = reference::dot_f32(&a32, &b32);
+            assert!((gf - wf).abs() <= 1e-12 * wf.abs().max(1.0), "len {n}");
+            let gm = blocked::dot_mixed(&a, &b32);
+            let wm = reference::dot_mixed(&a, &b32);
+            assert!((gm - wm).abs() <= 1e-12 * wm.abs().max(1.0), "len {n}");
+        }
+    }
+
+    #[test]
+    fn fused_pair_dot_is_bitwise_two_singles() {
+        // dot2_32 must equal (dot32(q, left), dot32(q, right)) *bitwise*:
+        // the tree memo caches per-node values, so fused and single paths
+        // must be indistinguishable
+        let mut rng = Rng::new(0x0707);
+        for n in lens() {
+            let q = vec32(&mut rng, n);
+            let rows = vec32(&mut rng, 2 * n);
+            let (l, r) = dot2_32(&q, &rows);
+            assert_eq!(l.to_bits(), dot32(&q, &rows[..n]).to_bits(), "len {n} left");
+            assert_eq!(r.to_bits(), dot32(&q, &rows[n..]).to_bits(), "len {n} right");
+        }
+    }
+
+    #[test]
+    fn dot_many_is_bitwise_row_at_a_time() {
+        let mut rng = Rng::new(0x0909);
+        for d in [1usize, 3, 4, 7, 8, 16, 65] {
+            for rows in [0usize, 1, 2, 3, 5, 8] {
+                let q = vec64(&mut rng, d);
+                let panel = vec64(&mut rng, d * rows);
+                let mut out = vec![0.0f64; rows];
+                dot_many(&q, &panel, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let want = dot(&q, &panel[i * d..(i + 1) * d]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "d {d} row {i}");
+                }
+                let q32 = vec32(&mut rng, d);
+                let p32 = vec32(&mut rng, d * rows);
+                let mut out = vec![0.0f64; rows];
+                dot_many_f32(&q32, &p32, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let want = dot_f32(&q32, &p32[i * d..(i + 1) * d]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "d {d} row {i} (f32)");
+                }
+                let pw = vec64(&mut rng, d * rows);
+                let mut out = vec![0.0f64; rows];
+                dot_many_mixed(&pw, &q32, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let want = dot_mixed(&pw[i * d..(i + 1) * d], &q32);
+                    assert_eq!(o.to_bits(), want.to_bits(), "d {d} row {i} (mixed)");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_match_reference_bitwise() {
+        let mut rng = Rng::new(0x0B0B);
+        for n in lens() {
+            let x = vec64(&mut rng, n);
+            let x32 = vec32(&mut rng, n);
+            let a = rng.normal();
+            let base = vec64(&mut rng, n);
+            let base32 = vec32(&mut rng, n);
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            blocked::axpy(&mut got, a, &x);
+            reference::axpy(&mut want, a, &x);
+            assert_eq!(got, want, "axpy len {n}");
+
+            let mut g32 = base32.clone();
+            let mut w32 = base32.clone();
+            blocked::axpy32(&mut g32, a as f32, &x32);
+            reference::axpy32(&mut w32, a as f32, &x32);
+            assert_eq!(g32, w32, "axpy32 len {n}");
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            blocked::add_assign(&mut got, &x);
+            reference::add_assign(&mut want, &x);
+            assert_eq!(got, want, "add_assign len {n}");
+
+            let mut got = base.clone();
+            let mut want = base;
+            blocked::sub_assign(&mut got, &x);
+            reference::sub_assign(&mut want, &x);
+            assert_eq!(got, want, "sub_assign len {n}");
+
+            assert_eq!(
+                blocked::row_max(&x32).to_bits(),
+                reference::row_max(&x32).to_bits(),
+                "row_max len {n}"
+            );
+        }
+        // row_max edge cases: empty, NaN-ignoring
+        assert_eq!(row_max(&[]), f64::NEG_INFINITY);
+        assert_eq!(row_max(&[f32::NAN, 2.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn fill_cum_is_sequential_and_total_matches() {
+        let mut rng = Rng::new(0x0D0D);
+        for n in lens() {
+            let w: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut cum = Vec::new();
+            let total = fill_cum(&w, &mut cum);
+            assert_eq!(cum.len(), n);
+            let mut acc = 0.0f64;
+            for (i, &c) in cum.iter().enumerate() {
+                acc += w[i] as f64;
+                assert_eq!(c.to_bits(), acc.to_bits(), "prefix {i} must be sequential");
+            }
+            assert_eq!(total.to_bits(), acc.to_bits());
+            // f64 slice variant: same sequential order
+            let w64: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+            let mut cum2 = vec![0.0f64; n];
+            let t2 = fill_cum_into(&w64, &mut cum2);
+            assert_eq!(t2.to_bits(), total.to_bits());
+            assert_eq!(cum, cum2);
+        }
+    }
+
+    #[test]
+    fn max_shift_exp_is_safe_and_normalizing() {
+        let xs = vec![700.0f64, 710.0, 5.0, -3000.0];
+        let mut out = vec![0.0; 4];
+        let (mx, z) = max_shift_exp(&xs, &mut out);
+        assert_eq!(mx, 710.0);
+        assert!(out.iter().all(|&e| e.is_finite() && e >= 0.0));
+        assert_eq!(out[1], 1.0);
+        assert!(z.is_finite() && z >= 1.0);
+        // probabilities from the shifted exps sum to 1
+        let p: f64 = out.iter().map(|&e| e / z).sum();
+        assert!((p - 1.0).abs() < 1e-12);
+        // exp_shifted clamps its exponent
+        let mut ys = vec![1e6f64, 0.0];
+        exp_shifted(&mut ys, 0.0, 700.0);
+        assert!(ys[0].is_finite());
+        assert_eq!(ys[1], 1.0);
+    }
+
+    #[test]
+    fn results_are_bitwise_deterministic_across_threads() {
+        // the contract: a reduction's bits depend only on the input values
+        // and length — same input must produce the same bits on the main
+        // thread and on any number of worker threads
+        let mut rng = Rng::new(0x0F0F);
+        let a = vec64(&mut rng, 257);
+        let b = vec64(&mut rng, 257);
+        let a32 = vec32(&mut rng, 257);
+        let b32 = vec32(&mut rng, 257);
+        let panel = vec64(&mut rng, 257 * 6);
+        let want = (
+            dot(&a, &b).to_bits(),
+            dot32(&a32, &b32).to_bits(),
+            dot_f32(&a32, &b32).to_bits(),
+            {
+                let mut out = vec![0.0; 6];
+                dot_many(&a, &panel, &mut out);
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            },
+        );
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (a, b, a32, b32, panel) = (&a, &b, &a32, &b32, &panel);
+                let want = &want;
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        assert_eq!(dot(a, b).to_bits(), want.0);
+                        assert_eq!(dot32(a32, b32).to_bits(), want.1);
+                        assert_eq!(dot_f32(a32, b32).to_bits(), want.2);
+                        let mut out = vec![0.0; 6];
+                        dot_many(a, panel, &mut out);
+                        assert_eq!(out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), want.3);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_f32_long_sum_drift_is_bounded_by_reference() {
+        // the pairwise-style lane split must not be *worse* than the scalar
+        // fold against an f64 ground truth on a long, same-sign sum — the
+        // rounding-drift clause of the bugfix audit
+        let mut rng = Rng::new(0x1111);
+        let n = 4097; // the quadratic map's D at d = 64
+        let a: Vec<f32> = (0..n).map(|_| rng.f32() + 0.5).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.f32() + 0.5).collect();
+        let truth = reference::dot_f32(&a, &b); // f64 accumulation
+        let blocked_err = (blocked::dot32(&a, &b) as f64 - truth).abs();
+        let scalar_err = (reference::dot32(&a, &b) as f64 - truth).abs();
+        assert!(
+            blocked_err <= scalar_err.max(1e-3 * truth.abs()),
+            "blocked f32 drift {blocked_err} worse than scalar {scalar_err}"
+        );
+    }
+}

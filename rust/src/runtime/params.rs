@@ -119,8 +119,11 @@ impl ParamStore {
         if out_shape[1] != d {
             bail!("row width {} != out_w width {}", d, out_shape[1]);
         }
+        // borrow the artifact's row buffer directly — this runs on every
+        // sampled step, and the old `.to_vec()` cloned the whole (N, S, d)
+        // tensor before the row patch
+        let data = rows.as_f32()?;
         let out = out_t.as_f32_mut()?;
-        let data = rows.as_f32()?.to_vec();
         let mut changed: Vec<usize> = Vec::with_capacity(s.len());
         for i in 0..n * sdim {
             let class = s[i] as usize;

@@ -10,8 +10,11 @@
 //! Steady-state sampling allocates nothing: the per-row weight and CDF
 //! buffers live in a [`Pool`]-backed scratch checked out per call (and per
 //! worker in the batched path), the same freelist discipline as the tree's
-//! `DrawScratch`. `Exp` rows are weighted relative to their max logit, so
-//! the oracle is overflow-proof at any logit scale.
+//! `DrawScratch`. `Exp` rows are weighted relative to their max logit
+//! ([`crate::ops::row_max`] via [`KernelKind::shift`]), so the oracle is
+//! overflow-proof at any logit scale. The CDF fill is
+//! [`crate::ops::fill_cum`]: weights are cast to f32 per element but the
+//! prefix sums accumulate in f64 — the long sum is never f32.
 
 use super::KernelKind;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};

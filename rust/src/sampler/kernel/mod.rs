@@ -23,6 +23,8 @@ pub mod flat;
 pub mod multi;
 pub mod tree;
 
+use crate::ops;
+
 /// Explicit feature map of a kernel: `K(a,b) = ⟨φ(a), φ(b)⟩`.
 pub trait FeatureMap: Send + Sync {
     /// Input dimension d.
@@ -38,6 +40,21 @@ pub trait FeatureMap: Send + Sync {
     /// Closed-form kernel value (cheaper than materializing φ: the paper's
     /// §3.2.2 leaf-step trick relies on K being O(d) to evaluate).
     fn kernel(&self, a: &[f32], b: &[f32]) -> f64;
+    /// `out[i] = K(a, panel[i·d..(i+1)·d])` over a contiguous row-major
+    /// class panel — the shape of the tree's leaf step and beam scoring
+    /// (leaf classes are contiguous in the embedding mirror). The default
+    /// is the row-at-a-time loop; maps with a cheaper fused form override
+    /// it (quadratic → one [`ops::dot_many_f32`] sweep; rff → one shared
+    /// query-projection pass). Implementations must agree with
+    /// [`Self::kernel`] to f64 rounding — the tree's closed-form q
+    /// tolerance (1e-9) depends on it.
+    fn kernel_many(&self, a: &[f32], panel: &[f32], out: &mut [f64]) {
+        let d = self.d();
+        debug_assert_eq!(panel.len(), d * out.len());
+        for (slot, row) in out.iter_mut().zip(panel.chunks_exact(d.max(1))) {
+            *slot = self.kernel(a, row);
+        }
+    }
 }
 
 /// The paper's quadratic kernel, eq. (10): `K(a,b) = α⟨a,b⟩² + 1`.
@@ -86,8 +103,20 @@ impl FeatureMap for QuadraticMap {
     }
 
     fn kernel(&self, a: &[f32], b: &[f32]) -> f64 {
-        let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let dot = ops::dot_f32(a, b);
         self.alpha * dot * dot + 1.0
+    }
+
+    /// Fused leaf/beam scoring: one [`ops::dot_many_f32`] sweep over the
+    /// class panel, then the α·o²+1 polynomial element-wise. Each row's dot
+    /// is bit-identical to [`Self::kernel`]'s, so the two paths agree
+    /// exactly.
+    fn kernel_many(&self, a: &[f32], panel: &[f32], out: &mut [f64]) {
+        debug_assert_eq!(panel.len(), a.len() * out.len());
+        ops::dot_many_f32(a, panel, out);
+        for o in out.iter_mut() {
+            *o = self.alpha * *o * *o + 1.0;
+        }
     }
 }
 
@@ -118,9 +147,7 @@ impl KernelKind {
     #[inline]
     pub fn shift(&self, logits: &[f32]) -> f64 {
         match self {
-            KernelKind::Exp => {
-                logits.iter().fold(f64::NEG_INFINITY, |m, &o| m.max(o as f64))
-            }
+            KernelKind::Exp => ops::row_max(logits),
             _ => 0.0,
         }
     }
@@ -223,6 +250,25 @@ mod tests {
         let q = KernelKind::Quadratic { alpha: 2.0 };
         assert_eq!(q.shift(&logits), 0.0);
         assert_eq!(q.weight_shifted(3.0, 123.0), q.weight(3.0));
+    }
+
+    #[test]
+    fn kernel_many_matches_kernel_rows_bitwise() {
+        // the fused panel sweep must agree with the row-at-a-time closed
+        // form exactly — the tree's leaf CDF and beam scores rely on it
+        check("kernel_many == per-row kernel", 40, |g| {
+            let d = g.usize_in(1, 9);
+            let rows = g.usize_in(0, 12);
+            let map = QuadraticMap::new(d, g.f64_in(0.0, 150.0));
+            let a = g.vec_f32(d, -2.0, 2.0);
+            let panel = g.vec_f32(d * rows, -2.0, 2.0);
+            let mut out = vec![0.0f64; rows];
+            map.kernel_many(&a, &panel, &mut out);
+            for (i, &o) in out.iter().enumerate() {
+                let want = map.kernel(&a, &panel[i * d..(i + 1) * d]);
+                assert_eq!(o.to_bits(), want.to_bits(), "row {i}");
+            }
+        });
     }
 
     #[test]

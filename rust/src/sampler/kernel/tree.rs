@@ -26,6 +26,25 @@
 //! after warm-up), which the batched [`Sampler::sample_batch`] engine keeps
 //! per worker across the whole batch.
 //!
+//! # Panel layout and the ops layer
+//!
+//! Every inner loop here runs on [`crate::ops`], and the arena is laid out
+//! as the **class-blocked panels** those primitives stream:
+//!
+//! * sibling `z32` slices are adjacent (`left`, `left+1`), so one descent
+//!   level is a single contiguous 2×D panel — [`crate::ops::dot2_32`]
+//!   scores both children in one pass with φ(h) cache-resident (loaded
+//!   once, not twice), falling back to the exact f64 [`crate::ops::dot`]
+//!   per side on overflow;
+//! * a leaf covers the contiguous class range `[lo, hi)` and the embedding
+//!   mirror is row-major by class id, so the §3.2.2 leaf step is one
+//!   [`FeatureMap::kernel_many`] sweep over the contiguous
+//!   `emb[lo·d..hi·d]` panel (→ [`crate::ops::dot_many_f32`] for the
+//!   quadratic kernel) instead of strided row-at-a-time kernel calls;
+//! * `update_many`'s Δz merges and `update`'s Δφ are
+//!   [`crate::ops::add_assign`]/[`crate::ops::sub_assign`] over arena
+//!   slices.
+//!
 //! * **draw** (Fig. 1(a)): descend from the root; at each internal node go
 //!   left with probability `⟨φ(h), z(left)⟩ / ⟨φ(h), z(left)⟩+⟨φ(h), z(right)⟩`
 //!   (eq. 9); inside the leaf, score its ≤ leaf_size classes directly with
@@ -46,6 +65,7 @@
 //! instead of poisoning descent probabilities.
 
 use super::FeatureMap;
+use crate::ops;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{par_chunks_mut, Pool};
@@ -261,7 +281,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
     /// Total kernel mass `⟨φ(h), z(root)⟩ = Σ_j K(h, w_j)` — the eq. (8)
     /// partition function, computed in O(D).
     pub fn partition(&self, phi_h: &[f64]) -> f64 {
-        dot(phi_h, self.z_of(0))
+        ops::dot(phi_h, self.z_of(0))
     }
 
     /// Materialize φ(h) (callers that draw many samples per example should
@@ -283,6 +303,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             node_dot: vec![0.0; self.meta.len()],
             node_gen: vec![0; self.meta.len()],
             leaf_cum: vec![0.0; self.n],
+            leaf_k: vec![0.0; self.leaf_size],
             leaf_gen: vec![0; self.meta.len()],
             gen: 0,
         }
@@ -342,15 +363,53 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         if s.node_gen[i] == s.gen {
             return s.node_dot[i];
         }
-        let fast = dot32(&s.phi32, self.z32_of(idx)) as f64;
-        let v = if fast.is_finite() {
-            fast.max(0.0)
-        } else {
-            sanitize_mass(dot(&s.phi_h, self.z_of(idx)))
-        };
+        let v = self.sanitized_mass_of(s, idx, ops::dot32(&s.phi32, self.z32_of(idx)));
         s.node_dot[i] = v;
         s.node_gen[i] = s.gen;
         v
+    }
+
+    /// Sanitize one fast f32 descent dot into a usable mass, falling back
+    /// to the exact f64 arena on overflow (shared by the single and fused
+    /// memo paths — identical values by construction).
+    #[inline]
+    fn sanitized_mass_of(&self, s: &DrawScratch, idx: u32, fast: f32) -> f64 {
+        let fast = fast as f64;
+        if fast.is_finite() {
+            fast.max(0.0)
+        } else {
+            sanitize_mass(ops::dot(&s.phi_h, self.z_of(idx)))
+        }
+    }
+
+    /// Memoized masses of a sibling pair (`left`, `left+1`). The two `z32`
+    /// slices are adjacent in the arena, so when neither is memoized yet
+    /// the pair is one fused [`ops::dot2_32`] over the contiguous 2×D
+    /// panel — φ(h) streams through cache once per level instead of twice.
+    /// Values are bit-identical to two [`Self::node_mass`] calls (the
+    /// fused kernel pins each row's accumulation order), so memo state
+    /// composes transparently with the single-node path.
+    #[inline]
+    fn node_mass_pair(&self, s: &mut DrawScratch, left: u32) -> (f64, f64) {
+        let li = left as usize;
+        let lv = s.node_gen[li] == s.gen;
+        let rv = s.node_gen[li + 1] == s.gen;
+        if lv && rv {
+            return (s.node_dot[li], s.node_dot[li + 1]);
+        }
+        if lv || rv {
+            // one side already memoized: compute only the other
+            return (self.node_mass(s, left), self.node_mass(s, left + 1));
+        }
+        let base = li * self.dim;
+        let (fl, fr) = ops::dot2_32(&s.phi32, &self.z32[base..base + 2 * self.dim]);
+        let sl = self.sanitized_mass_of(s, left, fl);
+        let sr = self.sanitized_mass_of(s, left + 1, fr);
+        s.node_dot[li] = sl;
+        s.node_dot[li + 1] = sr;
+        s.node_gen[li] = s.gen;
+        s.node_gen[li + 1] = s.gen;
+        (sl, sr)
     }
 
     /// Fill (at most once per example per leaf) and return the leaf's
@@ -362,11 +421,16 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         let (lo, hi) = (m.lo as usize, m.hi as usize);
         if s.leaf_gen[idx as usize] != s.gen {
             // §3.2.2: score the O(D/d) leaf classes in the original space —
-            // O(d) per class with the closed-form kernel.
+            // O(d) per class with the closed-form kernel, fused over the
+            // contiguous class-blocked embedding panel (the mirror is
+            // row-major by class id and a leaf covers [lo, hi), so this is
+            // one ops::dot_many-shaped sweep, not strided row gathers).
+            let ks = &mut s.leaf_k[..hi - lo];
+            self.map.kernel_many(h, &self.emb[lo * self.d..hi * self.d], ks);
             let mut acc = 0.0f64;
-            for j in lo..hi {
-                acc += sanitize_mass(self.map.kernel(h, &self.emb[j * self.d..(j + 1) * self.d]));
-                s.leaf_cum[j] = acc;
+            for (j, &k) in ks.iter().enumerate() {
+                acc += sanitize_mass(k);
+                s.leaf_cum[lo + j] = acc;
             }
             s.leaf_gen[idx as usize] = s.gen;
         }
@@ -418,9 +482,9 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                 };
                 return (lo + off as u32, q);
             }
-            // eq. (9): branch proportionally to the subset masses (guarded).
-            let sl = self.node_mass(s, meta.left);
-            let sr = self.node_mass(s, meta.left + 1);
+            // eq. (9): branch proportionally to the subset masses (guarded;
+            // one fused pass over the adjacent sibling panel).
+            let (sl, sr) = self.node_mass_pair(s, meta.left);
             let (go_left, p) = choose_branch(sl, sr, rng);
             p_path *= p;
             idx = if go_left { meta.left } else { meta.left + 1 };
@@ -447,8 +511,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             if meta.is_leaf() {
                 return (meta.lo..meta.hi, p_leaf.max(f64::MIN_POSITIVE));
             }
-            let sl = self.node_mass(s, meta.left);
-            let sr = self.node_mass(s, meta.left + 1);
+            let (sl, sr) = self.node_mass_pair(s, meta.left);
             let (go_left, p) = choose_branch(sl, sr, rng);
             p_leaf *= p;
             idx = if go_left { meta.left } else { meta.left + 1 };
@@ -468,8 +531,8 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             if meta.is_leaf() {
                 return (meta.lo..meta.hi, p_leaf.max(f64::MIN_POSITIVE));
             }
-            let sl = sanitize_mass(dot(phi_h, self.z_of(meta.left)));
-            let sr = sanitize_mass(dot(phi_h, self.z_of(meta.left + 1)));
+            let sl = sanitize_mass(ops::dot(phi_h, self.z_of(meta.left)));
+            let sr = sanitize_mass(ops::dot(phi_h, self.z_of(meta.left + 1)));
             let (go_left, p) = choose_branch(sl, sr, rng);
             p_leaf *= p;
             idx = if go_left { meta.left } else { meta.left + 1 };
@@ -483,7 +546,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         loop {
             let meta = self.meta[idx as usize];
             if meta.is_leaf() {
-                return dot(phi_h, self.z_of(idx)).max(0.0) / self.partition(phi_h);
+                return ops::dot(phi_h, self.z_of(idx)).max(0.0) / self.partition(phi_h);
             }
             let mid = self.meta[meta.left as usize].hi;
             idx = if class < mid { meta.left } else { meta.left + 1 };
@@ -519,7 +582,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
     pub fn topk_beam(&self, h: &[f32], k: usize, beam_width: usize) -> Vec<(u32, f64)> {
         let beam_width = beam_width.max(1);
         let phi_h = self.phi_query(h);
-        let mass = |idx: u32| sanitize_mass(dot(&phi_h, self.z_of(idx)));
+        let mass = |idx: u32| sanitize_mass(ops::dot(&phi_h, self.z_of(idx)));
         let mut frontier: Vec<(u32, f64)> = vec![(0, mass(0))];
         loop {
             let mut next: Vec<(u32, f64)> = Vec::with_capacity(2 * frontier.len());
@@ -543,13 +606,17 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             next.truncate(beam_width);
             frontier = next;
         }
-        // exact closed-form scores inside the surviving leaves
+        // exact closed-form scores inside the surviving leaves: one fused
+        // kernel_many sweep per leaf over its contiguous class panel
         let mut scored: Vec<(u32, f64)> = Vec::with_capacity(frontier.len() * self.leaf_size);
+        let mut ks = vec![0.0f64; self.leaf_size];
         for &(idx, _) in &frontier {
             let meta = self.meta[idx as usize];
-            for class in meta.lo..meta.hi {
-                let w = &self.emb[class as usize * self.d..(class as usize + 1) * self.d];
-                scored.push((class, sanitize_mass(self.map.kernel(h, w))));
+            let (lo, hi) = (meta.lo as usize, meta.hi as usize);
+            let ks = &mut ks[..hi - lo];
+            self.map.kernel_many(h, &self.emb[lo * self.d..hi * self.d], ks);
+            for (j, &k) in ks.iter().enumerate() {
+                scored.push(((lo + j) as u32, sanitize_mass(k)));
             }
         }
         scored.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -601,10 +668,8 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                 self.map
                     .phi(&self.emb[class * self.d..(class + 1) * self.d], &mut self.scratch_old);
                 self.map.phi(w_new, &mut self.scratch_new);
-                let dst = &mut self.delta_pool[level];
-                for k in 0..self.dim {
-                    dst[k] += self.scratch_new[k] - self.scratch_old[k];
-                }
+                ops::sub_assign(&mut self.scratch_new, &self.scratch_old);
+                ops::add_assign(&mut self.delta_pool[level], &self.scratch_new);
                 self.emb[class * self.d..(class + 1) * self.d].copy_from_slice(w_new);
             }
         } else {
@@ -613,9 +678,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             if split > 0 {
                 self.apply_updates_rec(meta.left, &classes[..split], &rows[..split * self.d], level + 1);
                 let (head, tail) = self.delta_pool.split_at_mut(level + 1);
-                for (a, b) in head[level].iter_mut().zip(tail[0].iter()) {
-                    *a += *b;
-                }
+                ops::add_assign(&mut head[level], &tail[0]);
             }
             if split < classes.len() {
                 self.apply_updates_rec(
@@ -625,9 +688,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                     level + 1,
                 );
                 let (head, tail) = self.delta_pool.split_at_mut(level + 1);
-                for (a, b) in head[level].iter_mut().zip(tail[0].iter()) {
-                    *a += *b;
-                }
+                ops::add_assign(&mut head[level], &tail[0]);
             }
         }
         // apply the aggregated Δz to this node's arena slices
@@ -689,9 +750,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                 for j in m.lo..m.hi {
                     let j = j as usize;
                     self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
-                    for (zi, pi) in target.iter_mut().zip(&phi) {
-                        *zi += *pi;
-                    }
+                    ops::add_assign(target, &phi);
                 }
             } else {
                 let l = m.left as usize;
@@ -720,9 +779,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                 for j in m.lo..m.hi {
                     let j = j as usize;
                     self.map.phi(&self.emb[j * self.d..(j + 1) * self.d], &mut phi);
-                    for (zi, pi) in target.iter_mut().zip(&phi) {
-                        *zi += *pi;
-                    }
+                    ops::add_assign(target, &phi);
                 }
             } else {
                 let l = m.left as usize;
@@ -861,6 +918,9 @@ pub struct DrawScratch {
     /// Leaf CDF arena indexed by class id (leaf [lo, hi) owns [lo..hi]),
     /// valid where `leaf_gen[node] == gen`.
     leaf_cum: Vec<f64>,
+    /// Raw kernel scores of one leaf's class panel (`kernel_many` output
+    /// before sanitize+cumsum; sized to the tree's `leaf_size`).
+    leaf_k: Vec<f64>,
     leaf_gen: Vec<u32>,
     gen: u32,
 }
@@ -886,47 +946,6 @@ impl DrawScratch {
     pub fn phi_h(&self) -> &[f64] {
         &self.phi_h
     }
-}
-
-/// f32 dot with 8-way accumulation — the hot descent dot (z32 shadow path).
-#[inline]
-fn dot32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let base = c * 8;
-        for k in 0..8 {
-            acc[k] += a[base + k] * b[base + k];
-        }
-    }
-    let mut total = acc.iter().sum::<f32>();
-    for j in chunks * 8..a.len() {
-        total += a[j] * b[j];
-    }
-    total
-}
-
-/// f64 dot with 4-way accumulation (keeps LLVM auto-vectorizing the
-/// non-hot f64 paths: partition(), draw_leaf(), overflow fallbacks).
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n4 = a.len() / 4 * 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-    let mut i = 0;
-    while i < n4 {
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-        i += 4;
-    }
-    let mut acc = (s0 + s1) + (s2 + s3);
-    for j in n4..a.len() {
-        acc += a[j] * b[j];
-    }
-    acc
 }
 
 impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
@@ -1016,9 +1035,7 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
         let dim = self.dim;
         self.map.phi(&self.emb[class * self.d..(class + 1) * self.d], &mut self.scratch_old);
         self.map.phi(w_new, &mut self.scratch_new);
-        for i in 0..dim {
-            self.scratch_new[i] -= self.scratch_old[i];
-        }
+        ops::sub_assign(&mut self.scratch_new, &self.scratch_old);
         // walk the path by range descent, patching arena slices
         let mut idx = 0u32;
         loop {
@@ -1289,7 +1306,7 @@ mod tests {
             let leaf = (0..tree.meta.len() as u32)
                 .find(|&i| tree.meta[i as usize].is_leaf() && tree.meta[i as usize].lo == lo)
                 .unwrap();
-            let p = super::dot(&phi_h, tree.z_of(leaf)) / tree.partition(&phi_h);
+            let p = ops::dot(&phi_h, tree.z_of(leaf)) / tree.partition(&phi_h);
             let freq = count as f64 / 2000.0;
             assert!((freq - p).abs() < 0.05, "leaf {lo}: freq {freq} vs p {p}");
         }
@@ -1486,6 +1503,44 @@ mod tests {
                 assert_eq!(gc, ec, "rank {i}");
             }
         });
+    }
+
+    #[test]
+    fn tree_q_stays_exact_at_1e5_classes() {
+        // bugfix-audit regression for the ops-layer migration: on a
+        // catalog-scale model the blocked-dot tree must report q within
+        // 1e-9 of a closed form accumulated in a *different* (sequential
+        // f64) order, and an update sweep must not widen drift against a
+        // from-scratch rebuild — i.e. the refactor cannot have silently
+        // changed where long sums accumulate.
+        let (n, d) = (100_000usize, 4usize);
+        let mut rng = Rng::new(0x1E5);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.4);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut tree = KernelTreeSampler::new(map.clone(), n, None);
+        tree.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // independent partition function: sequential f64 accumulation, a
+        // deliberately different order than the tree's blocked dots
+        let total: f64 = (0..n).map(|j| map.kernel(&h, &emb[j * d..(j + 1) * d])).sum();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 64, &mut rng, &mut out).unwrap();
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            let c = c as usize;
+            let want = map.kernel(&h, &emb[c * d..(c + 1) * d]) / total;
+            assert!((q - want).abs() < 1e-9 * want.max(1e-12), "class {c}: {q} vs {want}");
+        }
+        // a batched Fig. 1(b) sweep over 1000 classes stays within rebuild
+        // tolerance (f64 master must not drift)
+        let classes: Vec<usize> = (0..1000).map(|i| i * 100).collect();
+        let mut rows = vec![0.0f32; classes.len() * d];
+        rng.fill_normal(&mut rows, 0.4);
+        tree.update_many(&classes, &rows);
+        let drift = tree.max_drift();
+        assert!(drift < 1e-6, "drift {drift} after sweep at n=1e5");
+        assert!(tree.z32.iter().all(|x| x.is_finite()), "shadow must stay finite");
     }
 
     #[test]

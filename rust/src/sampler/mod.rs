@@ -416,7 +416,9 @@ pub(crate) mod test_util {
     use super::*;
 
     /// Empirical total-variation distance between a sampler and an expected
-    /// distribution, over `draws` samples.
+    /// distribution, over `draws` samples. The TV arithmetic itself lives
+    /// in [`crate::util::stats::tv_from_counts`] — one implementation
+    /// shared with the closed-form bias benches.
     pub fn empirical_tv(
         sampler: &dyn Sampler,
         input: &SampleInput,
@@ -437,11 +439,7 @@ pub(crate) mod test_util {
             }
             total += m;
         }
-        0.5 * counts
-            .iter()
-            .zip(expected)
-            .map(|(&c, &p)| (c as f64 / total as f64 - p).abs())
-            .sum::<f64>()
+        crate::util::stats::tv_from_counts(&counts, total, expected)
     }
 }
 

@@ -13,9 +13,28 @@
 //! masses `⟨φ(h), z(C)⟩` are sums of positive terms, so eq. (9) descent
 //! probabilities are honest probabilities and the zero-mass guards only
 //! ever fire on true underflow.
+//!
+//! All inner loops run on the [`crate::ops`] layer: the `ω` projections
+//! are panel sweeps ([`crate::ops::dot_many_mixed`] streams the D×d
+//! frequency matrix once with the query cache-resident), and the
+//! exponentiation is the clamped [`crate::ops::exp_shifted`] row
+//! primitive.
 
 use super::config::RffConfig;
+use crate::ops;
 use crate::sampler::kernel::FeatureMap;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread projection buffer for [`FeatureMap::kernel_many`]: the
+    /// tree's leaf step runs there once per (example, leaf), which is too
+    /// fine-grained for a `Pool` (two Mutex round-trips per leaf would
+    /// serialize batch workers) and has no scratch parameter to thread a
+    /// per-worker buffer through — so the buffer is thread-local: zero
+    /// allocation after each worker's first leaf, zero contention.
+    /// Contents never affect results (fully overwritten per call).
+    static PROJ_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 /// Exponents are clamped here before `exp` so φ components and kernel
 /// values stay finite f64s (`exp(709.8)` overflows); the tree additionally
@@ -82,13 +101,13 @@ impl PositiveRffMap {
     /// many classes: the D projections `ω_iᵀa` plus that side's prefactor
     /// exponent. [`Self::kernel_prepared`] then costs one `ω` pass per
     /// class instead of two — the dominant pattern of closed-form
-    /// distribution sweeps (benches, tests) over a fixed query.
+    /// distribution sweeps (benches, tests) over a fixed query;
+    /// [`Self::kernel_many`] uses the same factoring for leaf panels.
     pub fn prepare_query(&self, a: &[f32]) -> PreparedQuery {
         debug_assert_eq!(a.len(), self.cfg.d);
-        PreparedQuery {
-            proj: (0..self.cfg.dim).map(|i| self.row_dot(i, a)).collect(),
-            log_pref: Self::half_neg_sq_norm(a) - (self.cfg.dim as f64).ln(),
-        }
+        let mut proj = vec![0.0f64; self.cfg.dim];
+        ops::dot_many_mixed(&self.omega, a, &mut proj);
+        PreparedQuery { proj, log_pref: Self::half_neg_sq_norm(a) - (self.cfg.dim as f64).ln() }
     }
 
     /// `K̂(a, b)` against a query prepared by [`Self::prepare_query`] —
@@ -96,10 +115,20 @@ impl PositiveRffMap {
     /// addition order (tests bound the difference).
     pub fn kernel_prepared(&self, q: &PreparedQuery, b: &[f32]) -> f64 {
         debug_assert_eq!(b.len(), self.cfg.d);
-        let lp = q.log_pref + Self::half_neg_sq_norm(b);
+        self.sum_prepared_exponents(&q.proj, q.log_pref + Self::half_neg_sq_norm(b), b)
+    }
+
+    /// `Σ_i exp(min(proj_i + ω_iᵀb + lp, MAX_EXP))` — the ONE accumulation
+    /// body behind every prepared-query kernel evaluation
+    /// ([`Self::kernel_prepared`] and [`FeatureMap::kernel_many`]); the
+    /// clamp/factoring must never diverge between them (the tree's 1e-9
+    /// closed-form q tolerance depends on their agreement).
+    fn sum_prepared_exponents(&self, proj: &[f64], lp: f64, b: &[f32]) -> f64 {
+        let d = self.cfg.d;
         let mut acc = 0.0f64;
-        for (i, &pa) in q.proj.iter().enumerate() {
-            acc += (pa + self.row_dot(i, b) + lp).min(MAX_EXP).exp();
+        for (i, &pa) in proj.iter().enumerate() {
+            let row = &self.omega[i * d..(i + 1) * d];
+            acc += (pa + ops::dot_mixed(row, b) + lp).min(MAX_EXP).exp();
         }
         acc
     }
@@ -107,14 +136,7 @@ impl PositiveRffMap {
     /// `−‖a‖²/2` — the Gaussian-kernel prefactor exponent of one side.
     #[inline]
     fn half_neg_sq_norm(a: &[f32]) -> f64 {
-        -0.5 * a.iter().map(|&x| x as f64 * x as f64).sum::<f64>()
-    }
-
-    /// `ω_iᵀ a` for row `i`.
-    #[inline]
-    fn row_dot(&self, i: usize, a: &[f32]) -> f64 {
-        let row = &self.omega[i * self.cfg.d..(i + 1) * self.cfg.d];
-        row.iter().zip(a).map(|(&w, &x)| w * x as f64).sum()
+        -0.5 * ops::dot_f32(a, a)
     }
 }
 
@@ -134,12 +156,12 @@ impl FeatureMap for PositiveRffMap {
     fn phi(&self, a: &[f32], out: &mut [f64]) {
         debug_assert_eq!(a.len(), self.cfg.d);
         debug_assert_eq!(out.len(), self.cfg.dim);
-        // log of the scalar prefactor exp(−‖a‖²/2)/√D, folded into each
-        // component's exponent (one exp per component, no second pass)
+        // one panel sweep for all D projections (ω streamed once), then
+        // the scalar prefactor exp(−‖a‖²/2)/√D folded into each exponent —
+        // one clamped exp per component, no second pass
+        ops::dot_many_mixed(&self.omega, a, out);
         let log_pref = Self::half_neg_sq_norm(a) - 0.5 * (self.cfg.dim as f64).ln();
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = (self.row_dot(i, a) + log_pref).min(MAX_EXP).exp();
-        }
+        ops::exp_shifted(out, log_pref, MAX_EXP);
     }
 
     /// `⟨φ(a), φ(b)⟩` in closed form: the factored exponent
@@ -152,10 +174,38 @@ impl FeatureMap for PositiveRffMap {
         debug_assert_eq!(b.len(), self.cfg.d);
         let log_pref = Self::half_neg_sq_norm(a) + Self::half_neg_sq_norm(b)
             - (self.cfg.dim as f64).ln();
+        let d = self.cfg.d;
         let mut acc = 0.0f64;
         for i in 0..self.cfg.dim {
-            acc += (self.row_dot(i, a) + self.row_dot(i, b) + log_pref).min(MAX_EXP).exp();
+            let row = &self.omega[i * d..(i + 1) * d];
+            acc += (ops::dot_mixed(row, a) + ops::dot_mixed(row, b) + log_pref)
+                .min(MAX_EXP)
+                .exp();
         }
         acc
+    }
+
+    /// Leaf-panel scoring with the query side factored out: one ω pass for
+    /// the shared projections (`prepare_query`-style, but into the
+    /// thread-local buffer — the tree's leaf step runs here and
+    /// steady-state sampling must neither allocate nor take a lock), then
+    /// one ω pass per class — instead of the default loop's two. Same
+    /// factored exponents as [`Self::kernel`] up to f64 addition order
+    /// (within the tree's 1e-9 closed-form tolerance; the rff tests bound
+    /// it).
+    fn kernel_many(&self, a: &[f32], panel: &[f32], out: &mut [f64]) {
+        let d = self.cfg.d;
+        debug_assert_eq!(panel.len(), d * out.len());
+        PROJ_SCRATCH.with(|cell| {
+            let mut proj = cell.borrow_mut();
+            proj.clear();
+            proj.resize(self.cfg.dim, 0.0);
+            ops::dot_many_mixed(&self.omega, a, &mut proj);
+            let lp_query = Self::half_neg_sq_norm(a) - (self.cfg.dim as f64).ln();
+            for (slot, row) in out.iter_mut().zip(panel.chunks_exact(d.max(1))) {
+                *slot =
+                    self.sum_prepared_exponents(&proj, lp_query + Self::half_neg_sq_norm(row), row);
+            }
+        });
     }
 }

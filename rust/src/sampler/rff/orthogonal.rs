@@ -19,11 +19,12 @@
 //! marginal law of each `ω_i`, so orthogonalization changes variance, not
 //! expectation — the property tests check both.
 
+use crate::ops;
 use crate::util::rng::Rng;
 
-/// Squared Euclidean norm of an f64 slice.
+/// Squared Euclidean norm of an f64 slice (the ops-layer dot with itself).
 fn sq_norm(v: &[f64]) -> f64 {
-    v.iter().map(|x| x * x).sum()
+    ops::dot(v, v)
 }
 
 /// Draw a `rows × d` row-major frequency matrix whose rows are blockwise
@@ -41,10 +42,8 @@ pub fn draw_orthogonal_omega(rng: &mut Rng, rows: usize, d: usize) -> Vec<f64> {
         let dir = loop {
             let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
             for prev in &block {
-                let proj: f64 = v.iter().zip(prev).map(|(a, b)| a * b).sum();
-                for (vi, pi) in v.iter_mut().zip(prev) {
-                    *vi -= proj * pi;
-                }
+                let proj = ops::dot(&v, prev);
+                ops::axpy(&mut v, -proj, prev);
             }
             let n2 = sq_norm(&v);
             if n2 > 1e-24 {

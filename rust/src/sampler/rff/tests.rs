@@ -11,12 +11,9 @@ use crate::sampler::test_util::empirical_tv;
 use crate::sampler::{Sample, SampleInput, Sampler};
 use crate::serve::shard::ShardedKernelSampler;
 use crate::serve::{ShardPublisher, ShardSet};
+use crate::ops::dot_f32 as dot;
 use crate::util::rng::Rng;
 use crate::util::testing::check;
-
-fn dot(a: &[f32], b: &[f32]) -> f64 {
-    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
-}
 
 /// Closed-form distribution of the *realized* random kernel — what the
 /// tree must sample exactly.
@@ -43,6 +40,29 @@ fn phi_inner_product_equals_kernel() {
         let ip: f64 = pa.iter().zip(&pb).map(|(x, y)| x * y).sum();
         let k = map.kernel(&a, &b);
         assert!((ip - k).abs() < 1e-9 * k.abs().max(1e-9), "ip={ip} k={k}");
+    });
+}
+
+#[test]
+fn kernel_many_matches_kernel_within_f64_order() {
+    // the fused panel sweep factors the query projections out once; it
+    // must agree with the stateless kernel to f64 addition-order tolerance
+    // (the tree's leaf CDF runs on it)
+    check("rff kernel_many ≈ per-row kernel", 30, |g| {
+        let d = g.usize_in(1, 8);
+        let rows = g.usize_in(1, 10);
+        let cfg = RffConfig::new(d, g.case_seed ^ 9)
+            .with_dim(g.usize_in(1, 32))
+            .with_orthogonal(g.bool());
+        let map = PositiveRffMap::new(cfg);
+        let a = g.vec_f32(d, -1.5, 1.5);
+        let panel = g.vec_f32(d * rows, -1.5, 1.5);
+        let mut out = vec![0.0f64; rows];
+        map.kernel_many(&a, &panel, &mut out);
+        for (i, &o) in out.iter().enumerate() {
+            let want = map.kernel(&a, &panel[i * d..(i + 1) * d]);
+            assert!((o - want).abs() < 1e-9 * want.abs().max(1e-12), "row {i}: {o} vs {want}");
+        }
     });
 }
 

@@ -25,9 +25,14 @@ impl SoftmaxSampler {
 
     /// exp-normalized weights with max-subtraction for stability.
     fn weights(&self, logits: &[f32]) -> Vec<f32> {
-        let eff = |o: f32| if self.abs_logits { o.abs() } else { o };
-        let max = logits.iter().map(|&o| eff(o)).fold(f32::NEG_INFINITY, f32::max);
-        logits.iter().map(|&o| (eff(o) - max).exp()).collect()
+        if self.abs_logits {
+            let max = logits.iter().map(|&o| o.abs()).fold(f32::NEG_INFINITY, f32::max);
+            logits.iter().map(|&o| (o.abs() - max).exp()).collect()
+        } else {
+            // shared ops-layer row max (exact: the max is an input value)
+            let max = crate::ops::row_max(logits) as f32;
+            logits.iter().map(|&o| (o - max).exp()).collect()
+        }
     }
 }
 

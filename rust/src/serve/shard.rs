@@ -26,6 +26,7 @@
 //!
 //! [`update_many_parallel`]: ShardedKernelSampler::update_many_parallel
 
+use crate::ops;
 use crate::sampler::kernel::tree::{
     sanitize_mass, step_down_to_positive, DrawScratch, KernelTreeSampler, TreeView,
 };
@@ -109,17 +110,15 @@ pub fn draw_from_shards<M: FeatureMap>(
     let s_count = trees.len();
     debug_assert_eq!(offsets.len(), s_count + 1);
     trees[0].feature_map().phi(h, &mut state.phi_h);
-    let mut acc = 0.0f64;
     for (s, tree) in trees.iter().enumerate() {
         let raw = tree.partition(&state.phi_h);
-        let mass = sanitize_mass(raw);
         state.raw_totals[s] = raw;
-        state.masses[s] = mass;
-        acc += mass;
-        state.cum[s] = acc;
+        state.masses[s] = sanitize_mass(raw);
         state.primed[s] = false;
     }
-    let total = acc;
+    // router CDF over the sanitized masses: the same ops-layer prefix sum
+    // the flat sampler's scratch and `util::rng::Cdf` draw from
+    let total = ops::fill_cum_into(&state.masses, &mut state.cum);
     for _ in 0..m {
         // eq. (9) at the router level: shard ∝ its root mass, guarded the
         // same way the tree guards a degenerate branch

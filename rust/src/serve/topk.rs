@@ -4,7 +4,10 @@
 //!
 //! The per-tree beam descent lives in
 //! [`KernelTreeSampler::topk_beam`](crate::sampler::KernelTreeSampler::topk_beam)
-//! (it shares the arena and the zero-mass guards with the draw path); this
+//! (it shares the arena and the zero-mass guards with the draw path, and
+//! runs on the ops layer: frontier masses are [`crate::ops::dot`] against
+//! arena slices, surviving leaves are scored with one
+//! `FeatureMap::kernel_many` sweep per contiguous class panel); this
 //! module runs it across a shard set's pinned snapshots and merges the
 //! per-shard candidates by exact kernel score. Merging is deterministic:
 //! scores tie-break on global class id, and every shard is queried with the

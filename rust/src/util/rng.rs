@@ -182,24 +182,12 @@ impl Rng {
     }
 }
 
-/// Fill `cum` with the inclusive prefix sums of `weights` (`cum[i] =
-/// Σ_{j<=i} w_j`, f64) and return the total mass — the allocation-free
-/// core shared by [`Cdf`] and pooled-scratch callers (the flat kernel
-/// sampler reuses one buffer across a whole batch). The caller must check
-/// the returned total is positive and finite before sampling from `cum`.
-pub fn fill_cum(weights: &[f32], cum: &mut Vec<f64>) -> f64 {
-    cum.clear();
-    cum.reserve(weights.len());
-    let mut acc = 0.0f64;
-    for &w in weights {
-        // negative weights are a programming error; NaN/inf flow through
-        // to the caller's total check as a *recoverable* degenerate row
-        debug_assert!(!(w < 0.0), "negative weight in Cdf");
-        acc += w as f64;
-        cum.push(acc);
-    }
-    acc
-}
+/// The CDF prefix-sum fill lives in the ops layer ([`crate::ops::fill_cum`]
+/// — strictly sequential by the accumulation-order contract); re-exported
+/// here because it is half of the CDF-draw pair with [`sample_cum`]. The
+/// caller must check the returned total is positive and finite before
+/// sampling from `cum`.
+pub use crate::ops::fill_cum;
 
 /// Draw one index from an inclusive-prefix-sum CDF with positive finite
 /// `total`. The returned index always has a strictly positive increment:

@@ -1,6 +1,7 @@
 //! Online statistics and timing utilities shared by the trainer, the metric
 //! sinks and the bench harness.
 
+use crate::util::json::Value;
 use std::time::{Duration, Instant};
 
 /// Welford online mean/variance accumulator.
@@ -157,6 +158,38 @@ pub fn chi_square_stat(counts: &[u64], probs: &[f64], total: f64) -> f64 {
     stat
 }
 
+/// Total-variation distance `½ Σ |p_i − q_i|` between two probability
+/// vectors. The single TV implementation in the tree: the samplers' test
+/// harness ([`tv_from_counts`]) and the bias benches ([`tv_from_scores`])
+/// both reduce to it.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len(), "TV over mismatched supports");
+    0.5 * p.iter().zip(q).map(|(&a, &b)| (a - b).abs()).sum::<f64>()
+}
+
+/// TV distance between *unnormalized* non-negative scores (a kernel row,
+/// closed-form proposal weights) and a probability vector `target`: the
+/// scores are normalized by their sum, then delegated to [`tv_distance`].
+/// Used by the closed-form bias sweeps (`benches/ablation_rff_dim.rs`).
+pub fn tv_from_scores(scores: &[f64], target: &[f64]) -> f64 {
+    let z: f64 = scores.iter().sum();
+    // same degenerate-total convention as the sampling paths (fill_cum
+    // callers, draw_from_shards): a zero/non-finite mass must fail loudly,
+    // not flow into a bias table as NaN
+    assert!(z > 0.0 && z.is_finite(), "degenerate score total {z} in tv_from_scores");
+    let p: Vec<f64> = scores.iter().map(|&s| s / z).collect();
+    tv_distance(&p, target)
+}
+
+/// TV distance between empirical draw counts (over `total` draws) and an
+/// expected distribution — the samplers' empirical-bias metric
+/// (`sampler::test_util::empirical_tv` reduces to this via
+/// [`tv_distance`]).
+pub fn tv_from_counts(counts: &[usize], total: usize, expected: &[f64]) -> f64 {
+    let p: Vec<f64> = counts.iter().map(|&c| c as f64 / total as f64).collect();
+    tv_distance(&p, expected)
+}
+
 /// Wall-clock stopwatch with named laps; powers the trainer's step-phase
 /// breakdown (encode / sample / step / tree-update) used in the perf pass.
 pub struct Stopwatch {
@@ -226,6 +259,52 @@ impl PhaseTimes {
         }
         s
     }
+
+    /// [`Self::report`] plus throughput: a trailing line with the total
+    /// accounted wall time, the step count, and steps/sec — the number an
+    /// ops-layer win moves outside the benches (`kss train` prints this at
+    /// the end of every run).
+    pub fn report_with_throughput(&self, steps: usize) -> String {
+        let mut s = self.report();
+        let total = self.total();
+        let rate = if total > 0.0 { steps as f64 / total } else { f64::NAN };
+        s.push_str(&format!(
+            "  {:<14} {:>9.3}s  ({} steps, {:.1} steps/s)\n",
+            "total", total, steps, rate
+        ));
+        s
+    }
+
+    /// Machine-readable form for the metrics JSONL: per-phase seconds and
+    /// share of accounted wall, plus the total and steps/sec.
+    pub fn to_json(&self, steps: usize) -> Value {
+        let total = self.total();
+        let denom = total.max(1e-12);
+        Value::object(vec![
+            (
+                "phases",
+                Value::Array(
+                    self.phases
+                        .iter()
+                        .map(|(name, d)| {
+                            let secs = d.as_secs_f64();
+                            Value::object(vec![
+                                ("name", Value::str(name)),
+                                ("secs", Value::num(secs)),
+                                ("share", Value::num(secs / denom)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_s", Value::num(total)),
+            ("steps", Value::num(steps as f64)),
+            (
+                "steps_per_s",
+                Value::num(if total > 0.0 { steps as f64 / total } else { 0.0 }),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +356,30 @@ mod tests {
         assert!((p.total() - 1.25).abs() < 1e-9);
         let rep = p.report();
         assert!(rep.contains("sample") && rep.contains("40.0%"));
+        // throughput report appends steps/sec over the accounted wall
+        let rep = p.report_with_throughput(10);
+        assert!(rep.contains("10 steps") && rep.contains("8.0 steps/s"), "{rep}");
+        // machine-readable form carries shares and steps/sec
+        let j = p.to_json(10);
+        assert!((j.get("steps_per_s").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert!((j.get("total_s").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-9);
+        let phases = j.get("phases").unwrap().as_array().unwrap();
+        assert_eq!(phases.len(), 2);
+        assert!((phases[0].get("share").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tv_helpers_agree() {
+        let p = [0.5, 0.25, 0.25];
+        let q = [0.25, 0.5, 0.25];
+        assert!((tv_distance(&p, &q) - 0.25).abs() < 1e-12);
+        // unnormalized scores proportional to q give the same TV
+        let scores = [1.0, 2.0, 1.0];
+        assert!((tv_from_scores(&scores, &p) - 0.25).abs() < 1e-12);
+        // counts realizing q exactly give the same TV
+        let counts = [25usize, 50, 25];
+        assert!((tv_from_counts(&counts, 100, &p) - 0.25).abs() < 1e-12);
+        assert_eq!(tv_distance(&p, &p), 0.0);
     }
 
     #[test]
