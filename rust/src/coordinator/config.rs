@@ -37,6 +37,19 @@ pub struct TrainConfig {
     pub threads: usize,
     /// Master seed: data, init and sampling streams derive from it.
     pub seed: u64,
+    /// Training-pipeline depth: 1 = sequential stages (bitwise identical
+    /// to the pre-pipeline loop), 2 = the next step's encode + negative
+    /// sampling overlap the current step's device execute, with q read
+    /// from a one-step-stale snapshot generation (eq. (2) corrections use
+    /// the q actually sampled, so the estimator stays exact — see
+    /// `coordinator::pipeline`). Values > 2 are clamped to 2.
+    pub pipeline_depth: usize,
+    /// Route the adaptive kernel-tree samplers through the serve snapshot
+    /// layer (one shared tree for training *and* serving; single update
+    /// sweep per step). `false` restores the pre-pipeline private-tree
+    /// sampler — kept as the bitwise-equivalence reference for tests, not
+    /// exposed on the CLI.
+    pub unified_tree: bool,
 }
 
 impl Default for TrainConfig {
@@ -54,17 +67,29 @@ impl Default for TrainConfig {
             eval_batches: 20,
             threads: 0,
             seed: 42,
+            pipeline_depth: 1,
+            unified_tree: true,
         }
     }
 }
 
 impl TrainConfig {
-    /// Identifier used in logs/metrics files.
+    /// Identifier used in logs/metrics files. Pipeline depth is part of
+    /// the id only when it changes results (depth ≥ 2 samples one
+    /// generation stale; depth 1 is the sequential reference).
     pub fn run_id(&self) -> String {
+        let depth = if self.pipeline_depth > 1 {
+            format!("_p{}", self.pipeline_depth.min(2))
+        } else {
+            String::new()
+        };
         if self.sampler == "full" {
             format!("{}_full_lr{}_s{}", self.model, self.lr, self.seed)
         } else {
-            format!("{}_{}_m{}_lr{}_s{}", self.model, self.sampler, self.m, self.lr, self.seed)
+            format!(
+                "{}_{}_m{}_lr{}_s{}{}",
+                self.model, self.sampler, self.m, self.lr, self.seed, depth
+            )
         }
     }
 
@@ -83,6 +108,8 @@ impl TrainConfig {
             ("eval_batches", Value::num(self.eval_batches as f64)),
             ("threads", Value::num(self.threads as f64)),
             ("seed", Value::num(self.seed as f64)),
+            ("pipeline_depth", Value::num(self.pipeline_depth as f64)),
+            ("unified_tree", Value::Bool(self.unified_tree)),
         ])
     }
 
@@ -139,6 +166,11 @@ mod tests {
         let c = TrainConfig { sampler: "full".into(), ..Default::default() };
         assert_ne!(a.run_id(), b.run_id());
         assert!(c.run_id().contains("full") && !c.run_id().contains("_m"));
+        // depth changes results only at >= 2, so only then does it tag the id
+        let d2 = TrainConfig { sampler: "quadratic".into(), pipeline_depth: 2, ..a.clone() };
+        assert!(d2.run_id().ends_with("_p2"), "{}", d2.run_id());
+        assert!(!a.run_id().contains("_p"), "{}", a.run_id());
+        assert_ne!(a.run_id(), d2.run_id());
     }
 
     #[test]

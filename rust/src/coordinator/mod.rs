@@ -3,18 +3,24 @@
 //! * [`config`] — experiment configuration (model, sampler, m, schedule) and
 //!   dataset construction.
 //! * [`trainer`] — the training loop implementing the paper's procedure:
-//!   encode → per-example negative sampling (threadpool) → sampled-softmax
-//!   step → host-mirror/kernel-tree update; plus the full-softmax baseline
-//!   and the full-softmax evaluation the figures report.
+//!   encode → batch negative sampling → sampled-softmax step → one
+//!   kernel-tree update + publish; plus the full-softmax baseline and the
+//!   full-softmax evaluation the figures report.
+//! * [`pipeline`] — the stage-overlapped engine under the trainer: the
+//!   sample/step/publish schedule (depth 1 sequential, depth 2 overlapped
+//!   with one-step-stale q), the pipeline worker, pooled step scratch and
+//!   the resolved-op cache.
 //! * [`metrics`] — JSONL metric sink + in-memory loss curves.
 //! * [`experiment`] — the (sampler × m) grid runner behind every figure.
 
 pub mod config;
 pub mod experiment;
 pub mod metrics;
+pub mod pipeline;
 pub mod trainer;
 
 pub use config::TrainConfig;
 pub use experiment::{run_grid, GridSpec, RunSummary};
 pub use metrics::MetricsSink;
+pub use pipeline::{PipelineDriver, SampleOutcome, SampleTask, StepScratch};
 pub use trainer::{TrainResult, Trainer};

@@ -1,0 +1,605 @@
+//! The stage-overlapped training engine behind [`crate::coordinator::Trainer`].
+//!
+//! The paper's training step is inherently staged — encode `h`, draw `m`
+//! negatives with the eq. (2) corrections, fused sampled-softmax device
+//! step, Fig. 1(b) tree update + publish — and the stages have exactly one
+//! cross-step dependency that matters: step `t`'s *device math* needs step
+//! `t`'s negatives, but step `t+1`'s *negatives* only need a proposal
+//! distribution q, and eq. (2) stays an exact estimator for **any** q as
+//! long as the corrections `ln(m·q)` use the q actually sampled from. That
+//! freedom is what this module exploits.
+//!
+//! ```text
+//! depth 1 (sequential; bitwise the legacy loop)
+//!   main:    [enc t][sample t][device t][apply t][publish t][enc t+1]...
+//!
+//! depth 2 (one step of lookahead)
+//!   main:    [enc t+1]          [device t][apply t]  [enc t+2]  [device t+1]...
+//!   worker:           [sample t+1]        [publish t]        [sample t+2]...
+//! ```
+//!
+//! * The **coordinator thread** keeps the PJRT engine (it is not `Sync`)
+//!   and runs encode, the fused device step, and the host-mirror patch.
+//! * One **pipeline worker** runs the sampling fan-out (which itself fans
+//!   out over the sampler layer's threadpool) and the tree
+//!   update+publish, in strict FIFO order.
+//!
+//! FIFO is the determinism argument: `sample t+1` is enqueued *before*
+//! `publish t`, so it always reads the generation published by step `t−1`
+//! — one step staler than the sequential loop, never a race. The q it
+//! reports is the exact probability under that pinned generation, so the
+//! corrections match the draws and the estimator stays exact; only the
+//! *adaptivity* of q lags one step. `publish t` completes before
+//! `sample t+2` begins (same queue), so staleness is exactly one step, for
+//! any thread count. Seeds are drawn from the trainer RNG in step order at
+//! schedule time, giving depth 2 the same seed sequence as depth 1.
+//!
+//! Publishing rides the worker too ("publish moves off the critical
+//! path"): the coordinator enqueues the step's changed rows and starts the
+//! next device step immediately; [`PipelineDriver::drain`] collects the
+//! hidden wall time for [`crate::util::stats::PhaseTimes`].
+
+use crate::runtime::manifest::{ModelSpec, OpSpec};
+use crate::sampler::{BatchSampleInput, Sample, Sampler};
+use crate::serve::ShardPublisher;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A publisher shared between the coordinator (enable-serving, stats,
+/// depth-1 inline publish) and the pipeline worker (depth-2 offloaded
+/// publish). The mutex is uncontended by construction: at depth 2 only the
+/// worker publishes during an epoch.
+pub type SharedPublisher = Arc<Mutex<Box<dyn ShardPublisher>>>;
+
+/// Everything one step's sampling stage needs, owned — so it can cross to
+/// the pipeline worker without borrowing the trainer. The model-dependent
+/// tensors (`h`, `logits`) were produced by the coordinator's encode stage
+/// at schedule time; at depth 2 they are one device step stale, which is
+/// exactly the documented q-staleness.
+pub struct SampleTask {
+    /// Step index (for reporting; the schedule is FIFO regardless).
+    pub step: usize,
+    /// The trainer-RNG seed for this step's `row_rng` streams, drawn in
+    /// step order at schedule time.
+    pub seed: u64,
+    pub n: usize,
+    pub d: usize,
+    pub n_classes: usize,
+    pub m: usize,
+    pub threads: usize,
+    /// Query embeddings (n × d) from the encode artifact.
+    pub h: Option<Vec<f32>>,
+    /// Full logit rows (n × n_classes) from the score_all artifact.
+    pub logits: Option<Vec<f32>>,
+    /// Previous-token context (LM datasets).
+    pub prev: Option<Vec<u32>>,
+    /// Reused output buffer (from [`StepScratch::take_rows`]).
+    pub rows: Vec<Sample>,
+}
+
+/// What the sampling stage hands back to the device stage.
+pub struct SampleOutcome {
+    pub step: usize,
+    /// One slot per example: `m` (class, q) draws.
+    pub rows: Vec<Sample>,
+    /// Wall seconds the fan-out took (hidden at depth 2).
+    pub sample_s: f64,
+    /// Snapshot generation the draws were pinned to (`None` for samplers
+    /// that own their state) — the tag that proves the eq. (2) corrections
+    /// came from the generation actually sampled.
+    pub generation: Option<u64>,
+    /// Sampling errors surface here, at collect time, on the coordinator.
+    pub result: Result<()>,
+}
+
+/// Run one sampling stage: re-pin the sampler's snapshot generation (the
+/// deterministic refresh point — see the module docs), then draw every
+/// row's negatives. Shared verbatim by the depth-1 inline path and the
+/// pipeline worker, so the two depths execute identical sampling code.
+pub fn run_sample_task(sampler: &dyn Sampler, mut task: SampleTask) -> SampleOutcome {
+    let t0 = Instant::now();
+    sampler.refresh_snapshots();
+    let generation = sampler.pinned_generation();
+    if task.rows.len() != task.n {
+        task.rows.resize_with(task.n, Sample::default);
+    }
+    let inputs = BatchSampleInput {
+        n: task.n,
+        d: task.d,
+        n_classes: task.n_classes,
+        h: task.h.as_deref(),
+        logits: task.logits.as_deref(),
+        prev: task.prev.as_deref(),
+        threads: task.threads,
+    };
+    let result = sampler.sample_batch(&inputs, task.m, task.seed, &mut task.rows);
+    SampleOutcome {
+        step: task.step,
+        rows: task.rows,
+        sample_s: t0.elapsed().as_secs_f64(),
+        generation,
+        result,
+    }
+}
+
+enum WorkItem {
+    Sample(Arc<dyn Sampler>, SampleTask),
+    Publish(SharedPublisher, Vec<usize>, Vec<f32>),
+}
+
+/// What a finished publish sends back: its wall seconds plus the rows
+/// buffer, returned for reuse (the classes vec was a fresh allocation the
+/// host mirror produced anyway; it dies with the worker).
+type PublishDone = (f64, Vec<f32>);
+
+/// The pipeline worker thread: samples and publishes in strict FIFO order
+/// (the determinism contract of the module docs).
+struct Worker {
+    tx: Option<mpsc::Sender<WorkItem>>,
+    sample_rx: mpsc::Receiver<SampleOutcome>,
+    publish_rx: mpsc::Receiver<PublishDone>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    fn spawn() -> Worker {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let (sample_tx, sample_rx) = mpsc::channel();
+        let (publish_tx, publish_rx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("kss-pipeline".into())
+            .spawn(move || {
+                while let Ok(item) = rx.recv() {
+                    match item {
+                        WorkItem::Sample(sampler, task) => {
+                            let outcome = run_sample_task(sampler.as_ref(), task);
+                            if sample_tx.send(outcome).is_err() {
+                                return;
+                            }
+                        }
+                        WorkItem::Publish(publisher, classes, rows_flat) => {
+                            let t0 = Instant::now();
+                            publisher
+                                .lock()
+                                .expect("publisher poisoned")
+                                .update_and_publish_rows(&classes, &rows_flat);
+                            if publish_tx.send((t0.elapsed().as_secs_f64(), rows_flat)).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn pipeline worker");
+        Worker { tx: Some(tx), sample_rx, publish_rx, handle: Some(handle) }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        // close the queue; the worker finishes what it has and exits
+        drop(self.tx.take());
+        if let Some(handle) = self.handle.take() {
+            if let Err(payload) = handle.join() {
+                // propagate a worker panic — unless this drop is itself
+                // part of an unwind (a second panic would abort and eat
+                // the original message)
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+}
+
+/// Schedules sampling and publishing around the coordinator's device
+/// steps. Depth 1 runs every stage inline in legacy order; depth ≥ 2 keeps
+/// one sampling stage in flight on the worker and offloads publishes
+/// behind it.
+pub struct PipelineDriver {
+    depth: usize,
+    worker: Option<Worker>,
+    /// Completed outcomes awaiting collection (inline path).
+    ready: VecDeque<SampleOutcome>,
+    in_flight: usize,
+    pending_publishes: usize,
+    hidden_publish_s: f64,
+    /// Freelist of rows buffers round-tripping through the publish stage
+    /// (filled by the caller, consumed by the publish, returned here) —
+    /// steady-state publishes allocate nothing for their payload.
+    rows_bufs: Vec<Vec<f32>>,
+}
+
+impl PipelineDriver {
+    /// `depth` 1 = sequential; 2 = one step of lookahead. Deeper lookahead
+    /// would add more than one generation of staleness for no extra
+    /// overlap (one device stream), so depth is clamped to [1, 2].
+    pub fn new(depth: usize) -> PipelineDriver {
+        PipelineDriver {
+            depth: depth.clamp(1, 2),
+            worker: None,
+            ready: VecDeque::new(),
+            in_flight: 0,
+            pending_publishes: 0,
+            hidden_publish_s: 0.0,
+            rows_bufs: Vec::new(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Whether sampling overlaps the device step (depth ≥ 2).
+    pub fn overlapped(&self) -> bool {
+        self.depth > 1
+    }
+
+    /// Sampling stages scheduled but not yet collected.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    fn worker(&mut self) -> &Worker {
+        if self.worker.is_none() {
+            self.worker = Some(Worker::spawn());
+        }
+        self.worker.as_ref().expect("just spawned")
+    }
+
+    /// Schedule one step's sampling. Inline (runs now, on this thread) at
+    /// depth 1; enqueued on the worker at depth 2. At most one stage may
+    /// be in flight beyond the one being collected.
+    pub fn schedule_sample(&mut self, sampler: &Arc<dyn Sampler>, task: SampleTask) {
+        debug_assert!(self.in_flight < self.depth, "pipeline overfilled");
+        self.in_flight += 1;
+        if self.overlapped() {
+            let sampler = sampler.clone();
+            self.worker()
+                .tx
+                .as_ref()
+                .expect("worker queue open")
+                .send(WorkItem::Sample(sampler, task))
+                .expect("pipeline worker died");
+        } else {
+            let outcome = run_sample_task(sampler.as_ref(), task);
+            self.ready.push_back(outcome);
+        }
+    }
+
+    /// Collect the oldest scheduled sampling stage. Returns the outcome
+    /// and the seconds this thread blocked waiting for it (the *visible*
+    /// part of sampling at depth 2; ~0 when overlap worked).
+    pub fn collect_sample(&mut self) -> (SampleOutcome, f64) {
+        assert!(self.in_flight > 0, "collect without a scheduled sample");
+        self.in_flight -= 1;
+        if let Some(outcome) = self.ready.pop_front() {
+            return (outcome, 0.0);
+        }
+        // opportunistically bank finished publish timings first
+        self.drain_publish_times(false);
+        let t0 = Instant::now();
+        let outcome = self
+            .worker
+            .as_ref()
+            .expect("in-flight sample implies a worker")
+            .sample_rx
+            .recv()
+            .expect("pipeline worker died");
+        (outcome, t0.elapsed().as_secs_f64())
+    }
+
+    /// A rows buffer for the next publish payload (pooled: buffers return
+    /// here after the publish consumes them, so steady-state publishes
+    /// allocate nothing). Opportunistically banks finished publish
+    /// timings.
+    pub fn take_rows_buf(&mut self) -> Vec<f32> {
+        self.drain_publish_times(false);
+        self.rows_bufs.pop().unwrap_or_default()
+    }
+
+    /// Return a rows buffer that ended up not being published (e.g. a
+    /// sampler-only update with no publisher attached).
+    pub fn put_rows_buf(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        if self.rows_bufs.len() < 4 {
+            self.rows_bufs.push(buf);
+        }
+    }
+
+    /// Run a tree update + publish, consuming its payload (`rows_flat`
+    /// from [`PipelineDriver::take_rows_buf`]; `classes` as produced by
+    /// the host-mirror patch). `offload` false runs it on this thread and
+    /// returns the publish seconds for the critical-path book — the only
+    /// mode that keeps draws deterministic for callers driving single
+    /// steps outside the overlapped schedule. `offload` true (depth-2
+    /// train loop only) enqueues it behind the in-flight sampling and
+    /// returns `None`; the hidden time is banked and surfaced by
+    /// [`PipelineDriver::drain`].
+    pub fn schedule_publish(
+        &mut self,
+        publisher: &SharedPublisher,
+        classes: Vec<usize>,
+        rows_flat: Vec<f32>,
+        offload: bool,
+    ) -> Option<f64> {
+        if offload && self.overlapped() {
+            self.pending_publishes += 1;
+            let publisher = publisher.clone();
+            self.worker()
+                .tx
+                .as_ref()
+                .expect("worker queue open")
+                .send(WorkItem::Publish(publisher, classes, rows_flat))
+                .expect("pipeline worker died");
+            None
+        } else {
+            let t0 = Instant::now();
+            publisher
+                .lock()
+                .expect("publisher poisoned")
+                .update_and_publish_rows(&classes, &rows_flat);
+            let secs = t0.elapsed().as_secs_f64();
+            self.put_rows_buf(rows_flat);
+            Some(secs)
+        }
+    }
+
+    fn drain_publish_times(&mut self, block: bool) {
+        let Some(worker) = self.worker.as_ref() else { return };
+        while self.pending_publishes > 0 {
+            let got = if block {
+                worker.publish_rx.recv().ok()
+            } else {
+                worker.publish_rx.try_recv().ok()
+            };
+            match got {
+                Some((secs, buf)) => {
+                    self.hidden_publish_s += secs;
+                    self.pending_publishes -= 1;
+                    if self.rows_bufs.len() < 4 {
+                        let mut buf = buf;
+                        buf.clear();
+                        self.rows_bufs.push(buf);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Wait for every enqueued publish to land and return the hidden
+    /// publish seconds accumulated since the last drain. Call before
+    /// reading publisher state (stats, served snapshots) or finishing a
+    /// run. No sampling stage may be in flight.
+    pub fn drain(&mut self) -> f64 {
+        assert_eq!(self.in_flight, 0, "drain with a sampling stage in flight");
+        self.drain_publish_times(true);
+        debug_assert_eq!(self.pending_publishes, 0);
+        std::mem::take(&mut self.hidden_publish_s)
+    }
+}
+
+/// Reusable per-step host buffers for the sampled training loop. One
+/// instance lives in the trainer; every vector keeps its allocation across
+/// steps (the sampler layer's `DrawScratch`/`Pool` discipline applied to
+/// the coordinator): `neg`/`sub` round-trip through the staging tensors
+/// via [`crate::runtime::Tensor::into_i32`]/[`into_f32`], `s_idx` is
+/// refilled in place, the `Vec<Sample>` row buffers rotate through a small
+/// freelist (two are live at depth 2 — one being drawn into, one being
+/// consumed), and the publish payload buffers round-trip through the
+/// [`PipelineDriver`]'s own pool (they cross to the worker at depth 2).
+///
+/// [`into_f32`]: crate::runtime::Tensor::into_f32
+#[derive(Default)]
+pub struct StepScratch {
+    pub neg: Vec<i32>,
+    pub sub: Vec<f32>,
+    pub s_idx: Vec<i32>,
+    row_bufs: Vec<Vec<Sample>>,
+}
+
+impl StepScratch {
+    /// A row buffer with `n` slots, each with capacity for `m` draws —
+    /// pooled, so steady-state steps allocate nothing here.
+    pub fn take_rows(&mut self, n: usize, m: usize) -> Vec<Sample> {
+        let mut rows = self.row_bufs.pop().unwrap_or_default();
+        if rows.len() > n {
+            rows.truncate(n);
+        }
+        while rows.len() < n {
+            rows.push(Sample::with_capacity(m));
+        }
+        rows
+    }
+
+    /// Return a row buffer for reuse.
+    pub fn put_rows(&mut self, rows: Vec<Sample>) {
+        // bound the freelist: the pipeline never has more than two buffers
+        // alive (plus slack for callers that drop out mid-step)
+        if self.row_bufs.len() < 4 {
+            self.row_bufs.push(rows);
+        }
+    }
+}
+
+/// Resolved-op cache: the trainer used to call `spec.op(...)` — a lookup
+/// plus a full `OpSpec` clone — on **every** encode/step/eval. Each op is
+/// now resolved once and reused for the run (`train_sampled` is keyed by
+/// the m it was resolved for, so a config's single m never re-resolves).
+#[derive(Default)]
+pub struct OpCache {
+    pub encode: Option<OpSpec>,
+    pub score_all: Option<OpSpec>,
+    pub eval_full: Option<OpSpec>,
+    pub train_full: Option<OpSpec>,
+    pub train_sampled: Option<(usize, OpSpec)>,
+}
+
+impl OpCache {
+    /// Fill `slot` from the spec if empty. Two-phase on purpose: callers
+    /// ensure first, then re-borrow the slot immutably next to the other
+    /// trainer fields.
+    pub fn ensure(slot: &mut Option<OpSpec>, spec: &ModelSpec, name: &str) -> Result<()> {
+        if slot.is_none() {
+            *slot = Some(spec.op(name)?.clone());
+        }
+        Ok(())
+    }
+
+    /// Fill the `train_sampled` slot for this m (re-resolving only if m
+    /// changed, which a fixed config never does).
+    pub fn ensure_train_sampled(&mut self, spec: &ModelSpec, m: usize) -> Result<()> {
+        if self.train_sampled.as_ref().is_none_or(|(mm, _)| *mm != m) {
+            self.train_sampled = Some((m, spec.train_sampled_op(m)?.clone()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::sampler::UniformSampler;
+    use crate::serve::ShardSet;
+    use crate::util::rng::Rng;
+
+    fn uniform_task(step: usize, seed: u64, n: usize, m: usize, rows: Vec<Sample>) -> SampleTask {
+        SampleTask {
+            step,
+            seed,
+            n,
+            d: 0,
+            n_classes: 0,
+            m,
+            threads: 2,
+            h: None,
+            logits: None,
+            prev: None,
+            rows,
+        }
+    }
+
+    #[test]
+    fn depth1_runs_inline_and_fifo() {
+        let sampler: Arc<dyn Sampler> = Arc::new(UniformSampler::new(10));
+        let mut driver = PipelineDriver::new(1);
+        assert!(!driver.overlapped());
+        driver.schedule_sample(&sampler, uniform_task(0, 7, 4, 3, Vec::new()));
+        let (out, wait) = driver.collect_sample();
+        assert_eq!(out.step, 0);
+        assert_eq!(wait, 0.0, "inline outcomes are already complete");
+        out.result.unwrap();
+        assert_eq!(out.rows.len(), 4);
+        assert!(out.rows.iter().all(|r| r.classes.len() == 3));
+        assert_eq!(driver.drain(), 0.0);
+    }
+
+    #[test]
+    fn depth2_background_outcome_matches_inline() {
+        // same task, same seed: the worker path must produce bit-identical
+        // draws to the inline path (they share run_sample_task)
+        let sampler: Arc<dyn Sampler> = Arc::new(UniformSampler::new(50));
+        let inline = run_sample_task(sampler.as_ref(), uniform_task(3, 0xBEEF, 6, 5, Vec::new()));
+        let mut driver = PipelineDriver::new(2);
+        assert!(driver.overlapped());
+        driver.schedule_sample(&sampler, uniform_task(3, 0xBEEF, 6, 5, Vec::new()));
+        let (bg, _) = driver.collect_sample();
+        bg.result.unwrap();
+        for (a, b) in inline.rows.iter().zip(&bg.rows) {
+            assert_eq!(a.classes, b.classes);
+            assert_eq!(a.q, b.q);
+        }
+        driver.drain();
+    }
+
+    #[test]
+    fn fifo_pins_sample_to_the_generation_before_the_publish() {
+        // the staleness contract: a sample enqueued before a publish reads
+        // the pre-publish generation; one enqueued after reads the new one
+        let (n, d, m) = (32usize, 2usize, 4usize);
+        let mut rng = Rng::new(5);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 1, None, Some(&emb));
+        let sampler_typed = set.snapshot_sampler();
+        let sampler: Arc<dyn Sampler> = Arc::new(sampler_typed);
+        let publisher: SharedPublisher = Arc::new(Mutex::new(Box::new(set)));
+        let mut driver = PipelineDriver::new(2);
+        let mut hs = vec![0.0f32; 3 * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let task = |step: usize, seed: u64, hs: &[f32]| SampleTask {
+            step,
+            seed,
+            n: 3,
+            d,
+            n_classes: n,
+            m,
+            threads: 1,
+            h: Some(hs.to_vec()),
+            logits: None,
+            prev: None,
+            rows: Vec::new(),
+        };
+        // sample 0 before any publish: generation 0
+        driver.schedule_sample(&sampler, task(0, 1, &hs));
+        let (o0, _) = driver.collect_sample();
+        o0.result.unwrap();
+        assert_eq!(o0.generation, Some(0));
+        // enqueue sample 1, then a publish behind it: FIFO means sample 1
+        // still sees generation 0 ...
+        driver.schedule_sample(&sampler, task(1, 2, &hs));
+        let mut new_row = vec![0.0f32; d];
+        rng.fill_normal(&mut new_row, 0.9);
+        assert!(driver.schedule_publish(&publisher, vec![7], new_row, true).is_none());
+        let (o1, _) = driver.collect_sample();
+        o1.result.unwrap();
+        assert_eq!(o1.generation, Some(0), "sample overtook the publish");
+        // ... and a sample enqueued after the publish sees generation 1
+        driver.schedule_sample(&sampler, task(2, 3, &hs));
+        let (o2, _) = driver.collect_sample();
+        o2.result.unwrap();
+        assert_eq!(o2.generation, Some(1), "publish not visible to later sample");
+        let hidden = driver.drain();
+        assert!(hidden >= 0.0);
+        assert_eq!(publisher.lock().unwrap().publish_stats().publishes, 1);
+    }
+
+    #[test]
+    fn depth1_publish_is_inline_and_timed() {
+        let (n, d) = (16usize, 2usize);
+        let emb = vec![0.05f32; n * d];
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 2, None, Some(&emb));
+        let publisher: SharedPublisher = Arc::new(Mutex::new(Box::new(set)));
+        let mut driver = PipelineDriver::new(1);
+        let secs =
+            driver.schedule_publish(&publisher, vec![1, 9], vec![0.1, 0.2, 0.3, 0.4], false);
+        assert!(secs.is_some(), "depth 1 publishes on the calling thread");
+        assert_eq!(publisher.lock().unwrap().publish_stats().publishes, 2);
+        assert_eq!(driver.drain(), 0.0);
+        // the payload buffer came back to the pool
+        let buf = driver.take_rows_buf();
+        assert!(buf.is_empty() && buf.capacity() >= 4, "rows buffer not pooled");
+    }
+
+    #[test]
+    fn step_scratch_pools_row_buffers() {
+        let mut scratch = StepScratch::default();
+        let rows = scratch.take_rows(8, 4);
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|r| r.classes.capacity() >= 4));
+        let ptr = rows.as_ptr();
+        scratch.put_rows(rows);
+        let again = scratch.take_rows(8, 4);
+        assert_eq!(again.as_ptr(), ptr, "row buffer must be reused");
+        // resizing keeps the allocation when shrinking
+        scratch.put_rows(again);
+        let smaller = scratch.take_rows(3, 4);
+        assert_eq!(smaller.len(), 3);
+    }
+}

@@ -9,8 +9,18 @@
 //! 3. the `train_sampled` artifact performs the fused sampled-softmax
 //!    forward/backward (Pallas kernel) + SGD update on-device;
 //! 4. the updated output-embedding rows (returned by the artifact for
-//!    exactly the sampled classes) patch the host mirror, and the kernel
-//!    tree updates its `z(C)` path statistics (Fig. 1(b)).
+//!    exactly the sampled classes) patch the host mirror, and **one**
+//!    kernel-tree update sweep runs — in the serve-layer publisher, whose
+//!    published generation both the training sampler and any online
+//!    serving readers draw from (the one-tree contract; see
+//!    [`crate::coordinator::pipeline`] and [`crate::serve::SnapshotSampler`]).
+//!
+//! Stages are scheduled by a [`PipelineDriver`]: depth 1 executes them
+//! sequentially (bitwise the pre-pipeline loop); depth 2 runs step `t+1`'s
+//! encode + sampling while step `t`'s device execute and publish complete,
+//! sampling from a one-generation-stale snapshot with exact q corrections
+//! (the module docs of [`crate::coordinator::pipeline`] carry the
+//! staleness/exactness argument).
 //!
 //! The full-softmax baseline (`sampler = "full"`) replaces 1-4 with the
 //! `train_full` artifact. Evaluation is always the *full* softmax loss on
@@ -18,16 +28,21 @@
 
 use crate::coordinator::config::{build_dataset, TrainConfig};
 use crate::coordinator::metrics::{EvalPoint, MetricsSink};
-use crate::data::{Batch, Dataset};
+use crate::coordinator::pipeline::{
+    run_sample_task, OpCache, PipelineDriver, SampleOutcome, SampleTask, SharedPublisher,
+    StepScratch,
+};
+use crate::data::{Batch, BatchPrefetcher, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
 use crate::sampler::kernel::FeatureMap;
-use crate::sampler::{build_sampler, BatchSampleInput, QuadraticMap, Sample, Sampler};
+use crate::sampler::rff::{self, PositiveRffMap, RffConfig};
+use crate::sampler::{build_sampler, QuadraticMap, Sampler};
 use crate::serve::{ShardPublisher, ShardSet, SnapshotStore, TreeSnapshot};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
 use crate::util::threadpool::default_threads;
 use anyhow::{Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Result of a training run.
 #[derive(Clone, Debug)]
@@ -48,42 +63,116 @@ pub struct Trainer<'e> {
     spec: ModelSpec,
     cfg: TrainConfig,
     pub store: ParamStore,
-    sampler: Option<Box<dyn Sampler>>,
-    dataset: Box<dyn Dataset>,
+    /// `Arc` so a background sampling stage can hold the sampler while the
+    /// coordinator runs the device step. Mutated (`Arc::get_mut`) only by
+    /// legacy samplers that own per-step state — those force depth 1, so
+    /// the Arc is unique whenever mutation happens.
+    sampler: Option<Arc<dyn Sampler>>,
+    dataset: Arc<dyn Dataset>,
     rng: Rng,
-    /// Per-phase wall-clock accounting (encode/sample/step/update/eval).
+    /// Per-phase wall-clock accounting (prefetch/encode/sample/step/update/
+    /// publish/eval; overlapped work is booked separately).
     pub phases: PhaseTimes,
     threads: usize,
     step_count: usize,
-    /// Serving publisher (see [`Trainer::enable_serving`]): a sharded
-    /// mirror of the output-embedding table that republishes a snapshot
-    /// generation after every sampled step. Kernel-erased so the trainer
-    /// can publish whichever kernel family it trains (quadratic, rff, …).
-    publisher: Option<Box<dyn ShardPublisher>>,
+    /// The single source of kernel-tree truth: a serve-layer [`ShardSet`]
+    /// that applies each sampled step's Fig. 1(b) rows once and publishes
+    /// the generation both the training sampler and online serving read.
+    /// Present whenever the sampler is a kernel-tree kind (unified path)
+    /// or serving was enabled; shared with the pipeline worker at depth 2.
+    publisher: Option<SharedPublisher>,
+    /// Resolved artifact ops (no per-call `spec.op(...)` clone).
+    ops: OpCache,
+    /// Pooled per-step host buffers.
+    scratch: StepScratch,
+    driver: PipelineDriver,
+}
+
+/// The unified-tree construction: for the kernel-tree sampler kinds the
+/// trainer builds the serve-layer [`ShardSet`] — the **one** tree — and a
+/// [`crate::serve::SnapshotSampler`] over its publish points. Shard
+/// topology mirrors `build_sampler`'s pinned counts exactly (1 unsharded,
+/// 4 sharded) so draw streams stay bit-reproducible from (config, seed).
+/// Non-tree kinds (flat oracles, exact softmax, static samplers) return
+/// `None` and keep their legacy construction.
+#[allow(clippy::type_complexity)]
+fn snapshot_backed_parts(
+    name: &str,
+    spec: &ModelSpec,
+    w: &[f32],
+) -> Option<(Arc<dyn Sampler>, SharedPublisher)> {
+    let shards = match name {
+        "quadratic" | "rff" => 1,
+        "quadratic-sharded" | "rff-sharded" => 4,
+        _ => return None,
+    };
+    fn parts<M: FeatureMap + Clone + 'static>(
+        map: M,
+        n: usize,
+        shards: usize,
+        w: &[f32],
+    ) -> (Arc<dyn Sampler>, SharedPublisher) {
+        let set = ShardSet::new(map, n, shards, None, Some(w));
+        let sampler: Arc<dyn Sampler> = Arc::new(set.snapshot_sampler());
+        (sampler, Arc::new(Mutex::new(Box::new(set))))
+    }
+    Some(if name.starts_with("quadratic") {
+        parts(QuadraticMap::new(spec.d, spec.alpha as f64), spec.n_classes, shards, w)
+    } else {
+        let map = PositiveRffMap::new(RffConfig::new(spec.d, rff::RFF_BUILD_SEED));
+        parts(map, spec.n_classes, shards, w)
+    })
 }
 
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
         let spec = engine.manifest().model(&cfg.model)?.clone();
         let cfg = cfg.with_model_defaults(&spec);
-        let dataset = build_dataset(&spec, &cfg)?;
+        let dataset: Arc<dyn Dataset> = Arc::from(build_dataset(&spec, &cfg)?);
         let store = ParamStore::init(&spec.params, splitmix64(&mut (cfg.seed ^ 0x1417)))?;
-        let sampler: Option<Box<dyn Sampler>> = if cfg.sampler == "full" {
-            None
+        let unified = if cfg.sampler != "full" && cfg.unified_tree {
+            snapshot_backed_parts(&cfg.sampler, &spec, store.out_w().as_f32()?)
         } else {
-            let stats = dataset.stats();
-            Some(build_sampler(
-                &cfg.sampler,
-                spec.n_classes,
-                spec.d,
-                spec.alpha,
-                spec.abs_logits,
-                Some(&stats),
-                Some(store.out_w().as_f32()?),
-            )?)
+            None
         };
+        let (sampler, publisher): (Option<Arc<dyn Sampler>>, Option<SharedPublisher>) =
+            if cfg.sampler == "full" {
+                (None, None)
+            } else if let Some((s, p)) = unified {
+                (Some(s), Some(p))
+            } else {
+                let stats = dataset.stats();
+                let boxed = build_sampler(
+                    &cfg.sampler,
+                    spec.n_classes,
+                    spec.d,
+                    spec.alpha,
+                    spec.abs_logits,
+                    Some(&stats),
+                    Some(store.out_w().as_f32()?),
+                )?;
+                (Some(Arc::from(boxed)), None)
+            };
         let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
         let rng = Rng::new(cfg.seed ^ 0x7141_1e5);
+        // Overlap needs a sampler whose state cannot change under a
+        // background draw: snapshot-backed (pinned generations) or one the
+        // trainer never updates (no h dependence). Legacy mutable samplers
+        // (the flat w-mirror oracles) run sequentially.
+        let overlap_safe = sampler.as_ref().is_some_and(|s| s.snapshot_backed() || !s.needs().h);
+        let depth = if cfg.pipeline_depth > 1 && !overlap_safe {
+            if sampler.is_some() {
+                crate::info!(
+                    "pipeline depth {} downgraded to 1: sampler '{}' mutates per-step state",
+                    cfg.pipeline_depth,
+                    cfg.sampler
+                );
+            }
+            // full softmax has no sampling stage to overlap: clamp silently
+            1
+        } else {
+            cfg.pipeline_depth.clamp(1, 2)
+        };
         Ok(Trainer {
             engine,
             spec,
@@ -95,19 +184,21 @@ impl<'e> Trainer<'e> {
             phases: PhaseTimes::default(),
             threads,
             step_count: 0,
-            publisher: None,
+            publisher,
+            ops: OpCache::default(),
+            scratch: StepScratch::default(),
+            driver: PipelineDriver::new(depth),
         })
     }
 
-    /// Attach the serving publisher: a sharded kernel-tree mirror of the
-    /// output-embedding table whose shards republish a fresh immutable
-    /// snapshot generation after every sampled training step (the same
-    /// Fig. 1(b) rows the sampler applies). Returns the per-shard publish
+    /// Attach online serving over the quadratic kernel: with the unified
+    /// tree this hands back the publish points the trainer *already*
+    /// maintains; otherwise it builds the serving mirror (which then is
+    /// the only kernel tree in the system). Returns the per-shard publish
     /// points and shard offsets — exactly what
     /// [`crate::serve::SamplingService::start`] takes — so online readers
     /// sample the training-fresh distribution while the trainer keeps
-    /// stepping. The quadratic-kernel convenience wrapper around
-    /// [`Trainer::enable_serving_with`].
+    /// stepping.
     #[allow(clippy::type_complexity)]
     pub fn enable_serving(
         &mut self,
@@ -117,15 +208,36 @@ impl<'e> Trainer<'e> {
         self.enable_serving_with(map, shards)
     }
 
-    /// [`Trainer::enable_serving`] over any kernel family: the publisher is
-    /// stored kernel-erased, the returned stores keep the concrete map type
-    /// the caller's [`crate::serve::SamplingService`] needs.
+    /// [`Trainer::enable_serving`] over any kernel family. When the
+    /// trainer's sampler is already snapshot-backed, the existing
+    /// [`ShardSet`] is reused — one tree, one update sweep, one publish
+    /// point shared by training and serving; the `shards` argument is
+    /// advisory then (topology is pinned by the sampler kind for
+    /// bit-reproducibility), and a kernel-family mismatch is an error.
     #[allow(clippy::type_complexity)]
     pub fn enable_serving_with<M: FeatureMap + Clone + 'static>(
         &mut self,
         map: M,
         shards: usize,
     ) -> Result<(Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>, Vec<u32>)> {
+        if let Some(publisher) = &self.publisher {
+            let guard = publisher.lock().expect("publisher poisoned");
+            let set = guard.as_any().downcast_ref::<ShardSet<M>>().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "serving kernel family does not match the training sampler '{}'",
+                    self.cfg.sampler
+                )
+            })?;
+            if shards != set.shard_count() {
+                crate::info!(
+                    "serving shard count {} ignored: topology pinned by sampler '{}' ({} shard(s))",
+                    shards,
+                    self.cfg.sampler,
+                    set.shard_count()
+                );
+            }
+            return Ok((set.stores(), set.offsets().to_vec()));
+        }
         let set = ShardSet::new(
             map,
             self.spec.n_classes,
@@ -135,13 +247,18 @@ impl<'e> Trainer<'e> {
         );
         let stores = set.stores();
         let offsets = set.offsets().to_vec();
-        self.publisher = Some(Box::new(set));
+        self.publisher = Some(Arc::new(Mutex::new(Box::new(set))));
         Ok((stores, offsets))
     }
 
-    /// Aggregated publish counters (None until serving is enabled).
+    /// Aggregated publish counters (None when no publisher exists — i.e. a
+    /// non-tree sampler with serving never enabled). Complete once
+    /// [`Trainer::train`] returns; mid-run, depth-2 publishes may still be
+    /// in flight on the pipeline worker.
     pub fn publish_stats(&self) -> Option<crate::serve::PublishStats> {
-        self.publisher.as_ref().map(|p| p.publish_stats())
+        self.publisher
+            .as_ref()
+            .map(|p| p.lock().expect("publisher poisoned").publish_stats())
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -160,151 +277,269 @@ impl<'e> Trainer<'e> {
         self.step_count
     }
 
+    /// Effective pipeline depth (after the mutable-sampler downgrade).
+    pub fn pipeline_depth(&self) -> usize {
+        self.driver.depth()
+    }
+
     /// Mean full-softmax CE on held-out data (capped at cfg.eval_batches).
     pub fn eval(&mut self) -> Result<f64> {
         let mut sw = Stopwatch::new();
-        let op = self.spec.op("eval_full")?.clone();
+        OpCache::ensure(&mut self.ops.eval_full, &self.spec, "eval_full")?;
         let mut total = 0.0f64;
         let mut count = 0usize;
         let batches = self.dataset.eval_batches();
         let cap = if self.cfg.eval_batches == 0 { batches.len() } else { self.cfg.eval_batches };
         anyhow::ensure!(!batches.is_empty(), "no eval batches (valid_size too small)");
-        for batch in batches.iter().take(cap) {
-            let args = self.args_with(&batch.data, &[]);
-            let out = self.engine.execute(&op, self.store.len(), &args)?;
-            total += out[0].scalar()? as f64;
-            count += batch.n_examples();
+        {
+            let op = self.ops.eval_full.as_ref().expect("ensured above");
+            for batch in batches.iter().take(cap) {
+                let args = self.args_with(&batch.data, &[]);
+                let out = self.engine.execute(op, self.store.len(), &args)?;
+                total += out[0].scalar()? as f64;
+                count += batch.n_examples();
+            }
         }
         self.phases.add("eval", sw.lap());
         Ok(total / count as f64)
     }
 
-    /// One sampled-softmax (or full-softmax) training step.
+    /// One sampled-softmax (or full-softmax) training step, stages run
+    /// sequentially on this thread (the depth-1 path; [`Trainer::train`]
+    /// switches to the overlapped schedule at depth 2).
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
         let loss = if self.sampler.is_none() {
             self.step_full(batch)?
         } else {
-            self.step_sampled(batch)?
+            let outcome = {
+                let task = self.prepare_sample_task(batch, self.step_count)?;
+                let sampler = self.sampler.as_ref().expect("sampled step without sampler");
+                run_sample_task(sampler.as_ref(), task)
+            };
+            self.phases.add("sample", outcome.sample_s);
+            self.finish_sampled_step(batch, outcome, false)?
         };
+        self.step_count += 1;
+        Ok(loss)
+    }
+
+    /// The depth-2 schedule: collect this step's (already in-flight)
+    /// draws, put the *next* step's encode + sampling in flight, then run
+    /// this step's device execute/apply/publish while they proceed.
+    fn step_overlapped(&mut self, batch: &Batch, next: Option<&Batch>) -> Result<f32> {
+        if self.driver.in_flight() == 0 {
+            // pipeline head (first step of an epoch): prime it
+            let task = self.prepare_sample_task(batch, self.step_count)?;
+            let sampler = self.sampler.as_ref().expect("sampled step").clone();
+            self.driver.schedule_sample(&sampler, task);
+        }
+        let (outcome, wait_s) = self.driver.collect_sample();
+        self.phases.add("sample_wait", wait_s);
+        // only the part of the fan-out that finished before collect was
+        // truly hidden; the waited remainder is already on the critical
+        // book above
+        self.phases.add_overlapped("sample", (outcome.sample_s - wait_s).max(0.0));
+        if let Some(next_batch) = next {
+            // scheduled before the device step, so the draws overlap it;
+            // h is encoded from the pre-step params and q read from the
+            // pre-publish generation — the documented one-step staleness,
+            // corrected exactly by eq. (2) at that q
+            let task = self.prepare_sample_task(next_batch, self.step_count + 1)?;
+            let sampler = self.sampler.as_ref().expect("sampled step").clone();
+            self.driver.schedule_sample(&sampler, task);
+        }
+        let loss = self.finish_sampled_step(batch, outcome, true)?;
         self.step_count += 1;
         Ok(loss)
     }
 
     fn step_full(&mut self, batch: &Batch) -> Result<f32> {
         let mut sw = Stopwatch::new();
-        let op = self.spec.op("train_full")?.clone();
+        OpCache::ensure(&mut self.ops.train_full, &self.spec, "train_full")?;
         let lr = Tensor::scalar_f32(self.cfg.lr);
-        let args = self.args_with(&batch.data, &[&lr]);
-        let out = self.engine.execute(&op, self.store.len(), &args)?;
         let n_p = self.store.len();
+        let out = {
+            let op = self.ops.train_full.as_ref().expect("ensured above");
+            let args = self.args_with(&batch.data, &[&lr]);
+            self.engine.execute(op, n_p, &args)?
+        };
         self.store.set_all(&out[..n_p])?;
         self.phases.add("step", sw.lap());
         out[n_p].scalar()
     }
 
-    fn step_sampled(&mut self, batch: &Batch) -> Result<f32> {
-        let mut sw = Stopwatch::new();
-        let sampler = self.sampler.as_deref().expect("sampled step without sampler");
-        let needs = sampler.needs();
+    /// Stage 1 of a sampled step: run the model-dependent artifacts
+    /// (encode / score_all) and pack everything the sampling fan-out needs
+    /// into an owned [`SampleTask`]. Draws the step seed from the trainer
+    /// RNG — always in step order, whatever the pipeline depth.
+    fn prepare_sample_task(&mut self, batch: &Batch, step: usize) -> Result<SampleTask> {
+        let needs = self.sampler.as_ref().expect("sampled step without sampler").needs();
         let n = batch.n_examples();
-        let m = self.cfg.m;
-        let s_dim = m + 1;
-        let d = self.spec.d;
-        let n_classes = self.spec.n_classes;
-
-        // 1. model-dependent inputs for the sampler
-        let h_tensor = if needs.h {
-            let op = self.spec.op("encode")?.clone();
+        let mut sw = Stopwatch::new();
+        let h = if needs.h {
+            OpCache::ensure(&mut self.ops.encode, &self.spec, "encode")?;
+            let op = self.ops.encode.as_ref().expect("ensured above");
             let data = &batch.data[..op.inputs.len()];
             let args = self.args_with(data, &[]);
-            let out = self.engine.execute(&op, self.store.len(), &args)?;
-            Some(out.into_iter().next().unwrap())
+            let out = self.engine.execute(op, self.store.len(), &args)?;
+            Some(out.into_iter().next().expect("encode returns h").into_f32()?)
         } else {
             None
         };
-        let logits_tensor = if needs.logits {
-            let op = self.spec.op("score_all")?.clone();
+        let logits = if needs.logits {
+            OpCache::ensure(&mut self.ops.score_all, &self.spec, "score_all")?;
+            let op = self.ops.score_all.as_ref().expect("ensured above");
             let data = &batch.data[..op.inputs.len()];
             let args = self.args_with(data, &[]);
-            let out = self.engine.execute(&op, self.store.len(), &args)?;
-            Some(out.into_iter().next().unwrap())
+            let out = self.engine.execute(op, self.store.len(), &args)?;
+            Some(out.into_iter().next().expect("score_all returns logits").into_f32()?)
         } else {
             None
         };
         self.phases.add("encode", sw.lap());
-
-        // 2. batch-level negative sampling. The sampler layer owns the
-        // parallel fan-out; the per-row RNG streams (sampler::row_rng) keep
-        // results deterministic for a fixed seed and any thread count.
-        let step_seed = self.rng.next_u64();
-        let inputs = BatchSampleInput {
+        let seed = self.rng.next_u64();
+        let rows = self.scratch.take_rows(n, self.cfg.m);
+        Ok(SampleTask {
+            step,
+            seed,
             n,
-            d,
-            n_classes,
-            h: h_tensor.as_ref().map(|t| t.as_f32()).transpose()?,
-            logits: logits_tensor.as_ref().map(|t| t.as_f32()).transpose()?,
-            prev: batch.prev.as_deref(),
+            d: self.spec.d,
+            n_classes: self.spec.n_classes,
+            m: self.cfg.m,
             threads: self.threads,
-        };
-        let mut rows: Vec<Sample> = (0..n).map(|_| Sample::with_capacity(m)).collect();
-        sampler.sample_batch(&inputs, m, step_seed, &mut rows)?;
-        // assemble neg (N, m), sub (N, m+1) and s (N, S) host-side
-        let mut neg = Vec::with_capacity(n * m);
-        let mut sub = Vec::with_capacity(n * s_dim);
-        let mut s_idx = Vec::with_capacity(n * s_dim);
+            h,
+            logits,
+            prev: batch.prev.clone(),
+            rows,
+        })
+    }
+
+    /// Stages 3–5 of a sampled step: assemble the device inputs from the
+    /// draws, run the fused sampled-softmax artifact, patch the host
+    /// mirror, and run the **single** kernel-tree update sweep (through
+    /// the publisher when one exists). `offload_publish` moves that sweep
+    /// onto the pipeline worker — only the depth-2 train loop may set it
+    /// (its FIFO schedule is what keeps offloaded publishes deterministic
+    /// relative to the draws).
+    fn finish_sampled_step(
+        &mut self,
+        batch: &Batch,
+        outcome: SampleOutcome,
+        offload_publish: bool,
+    ) -> Result<f32> {
+        let SampleOutcome { rows, result, .. } = outcome;
+        result?;
+        let n = batch.n_examples();
+        let m = self.cfg.m;
+        let s_dim = m + 1;
+        let d = self.spec.d;
+        let mut sw = Stopwatch::new();
+
+        // assemble neg (N, m), sub (N, m+1) and s (N, S) into the pooled
+        // step scratch (allocation-free in steady state)
+        self.scratch.neg.clear();
+        self.scratch.sub.clear();
+        self.scratch.s_idx.clear();
+        self.scratch.neg.reserve(n * m);
+        self.scratch.sub.reserve(n * s_dim);
+        self.scratch.s_idx.reserve(n * s_dim);
         for (i, row) in rows.iter().enumerate() {
             debug_assert_eq!(row.classes.len(), m);
-            sub.push(0.0f32); // positive: uncorrected (eq. 2)
-            s_idx.push(batch.pos[i]);
+            self.scratch.sub.push(0.0f32); // positive: uncorrected (eq. 2)
+            self.scratch.s_idx.push(batch.pos[i]);
             for (&c, &q) in row.classes.iter().zip(&row.q) {
                 // the sampler layer guarantees q > 0 (see sampler/mod.rs);
-                // a violation here would send ln(m·q) = -inf on-device.
+                // a violation here would send ln(m·q) = -inf on-device
                 debug_assert!(q > 0.0 && q.is_finite(), "sampler reported q = {q}");
-                neg.push(c as i32);
-                sub.push(((m as f64) * q).ln() as f32);
-                s_idx.push(c as i32);
+                self.scratch.neg.push(c as i32);
+                self.scratch.sub.push(((m as f64) * q).ln() as f32);
+                self.scratch.s_idx.push(c as i32);
             }
         }
-        self.phases.add("sample", sw.lap());
 
-        // 3. fused sampled-softmax step on-device
-        let op = self.spec.train_sampled_op(m)?.clone();
-        let neg_t = Tensor::i32s(&[n, m], neg);
-        let sub_t = Tensor::f32s(&[n, s_dim], sub);
+        // fused sampled-softmax step on-device
+        self.ops.ensure_train_sampled(&self.spec, m)?;
+        let neg_t = Tensor::i32s(&[n, m], std::mem::take(&mut self.scratch.neg));
+        let sub_t = Tensor::f32s(&[n, s_dim], std::mem::take(&mut self.scratch.sub));
         let lr = Tensor::scalar_f32(self.cfg.lr);
-        let args = self.args_with(&batch.data, &[&neg_t, &sub_t, &lr]);
-        let out = self.engine.execute(&op, self.store.len(), &args)?;
         let n_p = self.store.len();
+        let out = {
+            let op = &self.ops.train_sampled.as_ref().expect("ensured above").1;
+            let args = self.args_with(&batch.data, &[&neg_t, &sub_t, &lr]);
+            self.engine.execute(op, n_p, &args)?
+        };
         self.store.set_all(&out[..n_p])?;
         let loss = out[n_p].scalar()?;
+        // staging buffers give their allocations back to the scratch
+        self.scratch.neg = neg_t.into_i32().expect("staged as i32");
+        self.scratch.sub = sub_t.into_f32().expect("staged as f32");
         self.phases.add("step", sw.lap());
 
-        // 4. host mirror + adaptive-sampler update (Fig. 1(b))
+        // host mirror + the single Fig. 1(b) tree sweep
         let changed = self
             .store
-            .apply_sampled_rows(&s_idx, &out[n_p + 1])
+            .apply_sampled_rows(&self.scratch.s_idx, &out[n_p + 1])
             .context("applying updated rows")?;
-        if needs.h || self.publisher.is_some() {
+        let (needs_h, snapshot_backed, owns_tree) = {
+            let s = self.sampler.as_ref().expect("sampled step");
+            (s.needs().h, s.snapshot_backed(), s.owns_kernel_tree())
+        };
+        let mut tree_sweeps = 0u32;
+        if (needs_h && !snapshot_backed) || self.publisher.is_some() {
             // flat copy of the changed rows (sorted + deduped by
-            // apply_sampled_rows), then one batched tree sweep
-            let mut rows_flat = Vec::with_capacity(changed.len() * d);
+            // apply_sampled_rows), shared by every consumer below; the
+            // buffer round-trips through the driver's publish pool
+            let mut rows_flat = self.driver.take_rows_buf();
+            rows_flat.clear();
+            rows_flat.reserve(changed.len() * d);
             for &class in &changed {
                 rows_flat.extend_from_slice(self.store.out_row(class));
             }
-            if needs.h {
-                self.sampler.as_mut().unwrap().update_many(&changed, &rows_flat);
+            if needs_h && !snapshot_backed {
+                // legacy samplers that mirror state (flat oracles, or the
+                // private-tree reference path): update in place. The Arc
+                // is unique here — mutable samplers force depth 1.
+                let s = self.sampler.as_mut().expect("sampled step");
+                Arc::get_mut(s)
+                    .expect("sampler aliased during update (depth must be 1)")
+                    .update_many(&changed, &rows_flat);
+                if owns_tree {
+                    tree_sweeps += 1;
+                }
             }
             self.phases.add("update", sw.lap());
-            // 5. publish the step's rows to the serving snapshots: online
-            // readers pick up generation G+1 at their next batch while any
-            // in-flight request finishes on G
-            if let Some(set) = &mut self.publisher {
-                set.update_and_publish_rows(&changed, &rows_flat);
-                self.phases.add("publish", sw.lap());
+            if let Some(publisher) = &self.publisher {
+                // the one tree-update sweep + publish; offloaded behind
+                // the in-flight sampling at depth 2's train loop (the
+                // publish lands before the next-but-one step's draws —
+                // FIFO). Inline steps publish on this thread so draws
+                // stay deterministic outside the overlapped schedule.
+                tree_sweeps += 1;
+                if let Some(secs) =
+                    self.driver.schedule_publish(publisher, changed, rows_flat, offload_publish)
+                {
+                    self.phases.add("publish", secs);
+                }
+            } else {
+                self.driver.put_rows_buf(rows_flat);
             }
         } else {
             self.phases.add("update", sw.lap());
         }
+        // the refactor's invariant: never two kernel-tree sweeps per step,
+        // and the snapshot-backed path always has exactly its publisher
+        // one. (The test-only unified_tree=false reference deliberately
+        // reproduces the pre-pipeline duplicated behavior when combined
+        // with serving, so it is exempt.)
+        debug_assert!(
+            tree_sweeps <= 1 || !self.cfg.unified_tree,
+            "duplicated kernel-tree update sweep ({tree_sweeps})"
+        );
+        debug_assert!(
+            !snapshot_backed || tree_sweeps == 1,
+            "snapshot-backed sampler without its publisher sweep"
+        );
+        self.scratch.put_rows(rows);
         Ok(loss)
     }
 
@@ -322,17 +557,29 @@ impl<'e> Trainer<'e> {
         let initial = self.eval()?;
         metrics.log_eval(EvalPoint { epoch: 0.0, step: 0, loss: initial });
 
+        // epoch batches generate one epoch ahead on a background thread;
+        // the `prefetch` phase records only the wait that remained visible
+        let mut prefetch = BatchPrefetcher::start(
+            self.dataset.clone(),
+            self.cfg.epochs,
+            self.cfg.max_steps_per_epoch,
+        );
+        let overlapped = self.driver.overlapped() && self.sampler.is_some();
         let mut last_train_loss = f32::NAN;
         for epoch in 0..self.cfg.epochs {
-            let mut batches = self.dataset.train_batches(epoch);
-            if self.cfg.max_steps_per_epoch > 0 {
-                batches.truncate(self.cfg.max_steps_per_epoch);
-            }
+            let (got_epoch, batches, wait_s) =
+                prefetch.next_epoch().ok_or_else(|| anyhow::anyhow!("prefetcher ended early"))?;
+            debug_assert_eq!(got_epoch, epoch);
+            self.phases.add("prefetch", wait_s);
             anyhow::ensure!(!batches.is_empty(), "no train batches (train_size too small)");
             let steps_per_epoch = batches.len();
             let mut train_loss_sum = 0.0f64;
             for (bi, batch) in batches.iter().enumerate() {
-                let loss = self.step(batch)?;
+                let loss = if overlapped {
+                    self.step_overlapped(batch, batches.get(bi + 1))?
+                } else {
+                    self.step(batch)?
+                };
                 train_loss_sum += loss as f64;
                 let step = epoch * steps_per_epoch + bi + 1;
                 if self.cfg.eval_every > 0 && step % self.cfg.eval_every == 0 {
@@ -354,8 +601,14 @@ impl<'e> Trainer<'e> {
                 last_train_loss
             );
         }
+        // pipeline epilogue: land every offloaded publish and book the
+        // wall time it hid behind the device steps
+        let hidden_publish_s = self.driver.drain();
+        if hidden_publish_s > 0.0 {
+            self.phases.add_overlapped("publish", hidden_publish_s);
+        }
         // per-phase wall accounting + steps/sec into the metrics JSONL, so
-        // ops-layer wins are visible outside the benches (kss train prints
+        // pipeline wins are visible outside the benches (kss train prints
         // the same breakdown at the end of the run)
         metrics.log_record("phase_times", vec![("timing", self.phases.to_json(self.step_count))]);
         Ok(TrainResult {
@@ -473,15 +726,70 @@ mod tests {
     }
 
     #[test]
+    fn unified_tree_matches_private_tree_bitwise() {
+        // THE depth-1 acceptance pin: routing the quadratic sampler through
+        // the serve snapshot layer (one shared tree, publisher sweep) must
+        // reproduce the legacy private-tree sequential loop bit for bit —
+        // same seed ⇒ identical eval curve and identical final parameters.
+        let Some(engine) = engine() else { return };
+        let run = |unified: bool| {
+            let mut cfg = tiny_cfg("quadratic", 4);
+            cfg.unified_tree = unified;
+            cfg.max_steps_per_epoch = 12;
+            let mut t = Trainer::new(&engine, cfg).unwrap();
+            let mut sink = MetricsSink::memory(if unified { "uni" } else { "ref" });
+            let res = t.train(&mut sink).unwrap();
+            let params: Vec<Vec<f32>> =
+                t.store.values().iter().map(|v| v.as_f32().unwrap().to_vec()).collect();
+            (res.curve, params)
+        };
+        let (curve_a, params_a) = run(true);
+        let (curve_b, params_b) = run(false);
+        assert_eq!(curve_a, curve_b, "eval curves diverged");
+        assert_eq!(params_a, params_b, "final params diverged");
+    }
+
+    #[test]
+    fn depth2_is_deterministic_and_still_beats_uniform() {
+        // depth-2 overlap: same seed ⇒ identical run (any thread count);
+        // and the one-step-stale quadratic proposal still beats uniform on
+        // the tiny ordering task (the staleness regression)
+        let Some(engine) = engine() else { return };
+        let run = |sampler: &str, depth: usize, threads: usize| {
+            let mut cfg = tiny_cfg(sampler, 8);
+            cfg.pipeline_depth = depth;
+            cfg.threads = threads;
+            let mut t = Trainer::new(&engine, cfg).unwrap();
+            let mut sink = MetricsSink::memory("p2");
+            let res = t.train(&mut sink).unwrap();
+            let w = t.store.out_w().as_f32().unwrap().to_vec();
+            (res.final_loss, res.curve, w)
+        };
+        let (a_loss, a_curve, a_w) = run("quadratic", 2, 2);
+        let (b_loss, b_curve, b_w) = run("quadratic", 2, 4);
+        assert_eq!(a_loss, b_loss, "depth-2 must not depend on thread count");
+        assert_eq!(a_curve, b_curve);
+        assert_eq!(a_w, b_w);
+        let (d1_loss, ..) = run("quadratic", 1, 2);
+        let (uni_loss, ..) = run("uniform", 2, 2);
+        assert!(a_loss < uni_loss, "stale quadratic {a_loss} should beat uniform {uni_loss}");
+        // depth-2 is a different (stale-q) trajectory, not a broken one
+        assert!((a_loss - d1_loss).abs() < 0.5, "depth-2 diverged wildly: {a_loss} vs {d1_loss}");
+    }
+
+    #[test]
     fn serving_publisher_tracks_training() {
-        // snapshots must advance one generation per sampled step (per
-        // touched shard) and agree with the sampler's own mirror
+        // ONE tree: enable_serving on a snapshot-backed trainer returns the
+        // publish points the sampler already reads (1 store for the
+        // unsharded quadratic kind); snapshots advance one generation per
+        // sampled step and mirror the trained table exactly
         let Some(engine) = engine() else { return };
         let mut cfg = tiny_cfg("quadratic", 4);
         cfg.max_steps_per_epoch = 6;
         let mut t = Trainer::new(&engine, cfg).unwrap();
+        assert!(t.publish_stats().is_some(), "unified tree publishes from step 0");
         let (stores, offsets) = t.enable_serving(2).unwrap();
-        assert_eq!(stores.len(), 2);
+        assert_eq!(stores.len(), 1, "unsharded quadratic pins a 1-shard topology");
         assert!(stores.iter().all(|s| s.generation() == 0));
         let mut sink = MetricsSink::memory("serve-hook");
         t.train(&mut sink).unwrap();
@@ -513,6 +821,17 @@ mod tests {
                     .sum::<f64>();
             assert!((got - want).abs() < 1e-6, "class {class}: {got} vs {want}");
         }
+        // a second kernel family cannot attach to the quadratic publisher
+        let err = t
+            .enable_serving_with(
+                crate::sampler::PositiveRffMap::new(crate::sampler::RffConfig::new(
+                    spec.d,
+                    crate::sampler::rff::RFF_BUILD_SEED,
+                )),
+                2,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("kernel family"), "{err}");
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! [`Batch`]es whose `data` tensors are already in the artifact input order,
 //! plus the per-example metadata the samplers need (positives, LM context).
 
+pub mod prefetch;
 pub mod synptb;
 pub mod youtube;
+
+pub use prefetch::BatchPrefetcher;
 
 use crate::runtime::Tensor;
 use crate::sampler::CorpusStats;

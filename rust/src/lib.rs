@@ -35,8 +35,9 @@
 //!   see DESIGN.md §3).
 //! * [`runtime`] — PJRT engine: artifact manifest, executables, literals,
 //!   parameter store.
-//! * [`coordinator`] — training loop, metrics, experiment grid runner,
-//!   config system.
+//! * [`coordinator`] — training loop + the stage-overlapped pipeline
+//!   engine (sample/step/publish overlap over serve-layer snapshots),
+//!   metrics, experiment grid runner, config system.
 //! * [`serve`] — online serving: snapshot-isolated concurrent sampling
 //!   (epoch snapshots + double-buffered publishing), sharded trees behind
 //!   a mass router, request micro-batching, and top-k beam retrieval; the

@@ -53,6 +53,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "eval-every", help: "eval every k steps (0 = per epoch)", default: Some("0".into()) },
         OptSpec { name: "eval-batches", help: "eval batch cap (0 = all)", default: Some("20".into()) },
         OptSpec { name: "threads", help: "sampling threads (0 = auto)", default: Some("0".into()) },
+        OptSpec { name: "pipeline-depth", help: "1 = sequential, 2 = overlap sample with step", default: Some("1".into()) },
         OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
         OptSpec { name: "out", help: "metrics output directory", default: Some("runs".into()) },
         OptSpec { name: "full", help: "include full-softmax reference (experiment)", default: Some("true".into()) },
@@ -73,6 +74,8 @@ fn parse_config(args: &Args) -> Result<TrainConfig> {
         eval_batches: args.get_usize("eval-batches", 20)?,
         threads: args.get_usize("threads", 0)?,
         seed: args.get_u64("seed", 42)?,
+        pipeline_depth: args.get_usize("pipeline-depth", 1)?,
+        ..Default::default()
     })
 }
 

@@ -83,6 +83,26 @@ impl Tensor {
         Ok(self.as_f32()?.first().copied().ok_or_else(|| anyhow!("empty tensor"))?)
     }
 
+    /// Consume the tensor into its f32 buffer (no copy). The training
+    /// pipeline uses this in both directions: artifact outputs become owned
+    /// sampling inputs for a background stage, and staging tensors give
+    /// their allocation back to the step scratch after execute.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            t => Err(anyhow!("tensor is {} not f32", t.dtype_name())),
+        }
+    }
+
+    /// Consume the tensor into its i32 buffer (no copy) — see
+    /// [`Tensor::into_f32`].
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            t => Err(anyhow!("tensor is {} not i32", t.dtype_name())),
+        }
+    }
+
     /// Convert to an XLA literal (copies).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
@@ -153,5 +173,20 @@ mod tests {
         let f = Tensor::zeros_f32(&[3]);
         assert!(f.as_i32().is_err());
         assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn into_buffers_reclaim_without_copy() {
+        let mut v = Vec::with_capacity(64);
+        v.extend_from_slice(&[1.0f32, 2.0, 3.0]);
+        let ptr = v.as_ptr();
+        let t = Tensor::f32s(&[3], v);
+        let back = t.into_f32().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0]);
+        assert_eq!(back.as_ptr(), ptr, "reclaim must reuse the allocation");
+        assert!(back.capacity() >= 64);
+        assert!(Tensor::i32s(&[1], vec![1]).into_f32().is_err());
+        assert_eq!(Tensor::i32s(&[2], vec![4, 5]).into_i32().unwrap(), vec![4, 5]);
+        assert!(Tensor::zeros_f32(&[1]).into_i32().is_err());
     }
 }

@@ -1066,6 +1066,12 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
         self.emb.copy_from_slice(w);
         self.build();
     }
+
+    /// The tree IS the kernel tree — its `update_many` is a real arena
+    /// sweep (the trainer's single-sweep accounting counts it).
+    fn owns_kernel_tree(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

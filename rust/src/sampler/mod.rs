@@ -282,6 +282,42 @@ pub trait Sampler: Send + Sync {
 
     /// Adaptive samplers that mirror W need the full table at (re)start.
     fn reset_embeddings(&mut self, _w: &[f32], _n: usize, _d: usize) {}
+
+    /// True for read-only adapters that draw from *published* kernel-tree
+    /// snapshots (see `crate::serve::SnapshotSampler`): their tree
+    /// maintenance happens in the owning publisher, never through
+    /// [`Sampler::update_many`]. The training pipeline uses this to (a)
+    /// skip the sampler-side tree sweep (the single-sweep invariant) and
+    /// (b) allow a step's sampling to overlap the previous step's device
+    /// execute — a pinned snapshot generation cannot change underneath the
+    /// draw.
+    fn snapshot_backed(&self) -> bool {
+        false
+    }
+
+    /// Re-pin a snapshot-backed sampler to the freshest published
+    /// generation set. The pipeline calls this at a deterministic point in
+    /// the stage schedule (immediately before a step's draws begin, on the
+    /// thread running them — never concurrently with `sample_batch`), so
+    /// the generation a step samples from is a pure function of the
+    /// schedule, not of thread timing. No-op for samplers that own their
+    /// state.
+    fn refresh_snapshots(&self) {}
+
+    /// Minimum generation across the currently pinned snapshot set; `None`
+    /// for samplers that own their state. The pipeline tags each step's
+    /// draws with this so the eq. (2) corrections are provably taken from
+    /// the generation actually sampled.
+    fn pinned_generation(&self) -> Option<u64> {
+        None
+    }
+
+    /// Whether this sampler owns and maintains a kernel tree through
+    /// [`Sampler::update_many`] — the trainer's per-step sweep accounting
+    /// (at most one kernel-tree update sweep may run per sampled step).
+    fn owns_kernel_tree(&self) -> bool {
+        false
+    }
 }
 
 /// Corpus statistics the frequency-based samplers are built from.

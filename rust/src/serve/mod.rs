@@ -23,18 +23,24 @@
 //!   sharing the draw path's zero-mass guards.
 //! * [`service`] — [`SamplingService`]: shard snapshot stores + batcher +
 //!   worker pool behind one façade, and the [`ShardSet`] writer bundle.
+//! * [`reader_sampler`] — [`SnapshotSampler`]: the snapshot stores turned
+//!   back into a training-side [`crate::sampler::Sampler`]. The pipelined
+//!   trainer draws its negatives through this adapter, so training and
+//!   serving share one tree, one update sweep and one publish point.
 //!
 //! The `kss serve` subcommand drives the whole stack with the closed-loop
 //! load generator below ([`run_load_test`]); `benches/serve_throughput.rs`
 //! measures reader scaling and publish stalls.
 
 pub mod batcher;
+pub mod reader_sampler;
 pub mod service;
 pub mod shard;
 pub mod snapshot;
 pub mod topk;
 
 pub use batcher::{BatcherConfig, MicroBatcher, SampleResponse, ServeError};
+pub use reader_sampler::SnapshotSampler;
 pub use service::{SamplingService, ServiceConfig, ShardPublisher, ShardSet};
 pub use shard::{
     draw_from_shards, shard_of_class, shard_offsets, split_updates_by_shard, ShardedKernelSampler,

@@ -1,0 +1,372 @@
+//! Snapshot-backed training sampler: the [`Sampler`] face of the serve
+//! layer's publish points.
+//!
+//! [`SnapshotSampler`] owns **no tree**. It holds one [`SnapshotReader`]
+//! per shard over the same [`SnapshotStore`]s the online serving workers
+//! read, and draws every negative from the *pinned* generation set. Tree
+//! maintenance happens exactly once, in the [`TreePublisher`]s behind the
+//! owning [`crate::serve::ShardSet`] — the trainer routes each step's
+//! Fig. 1(b) rows through `update_and_publish_rows` and this adapter picks
+//! the new generation up at its next [`Sampler::refresh_snapshots`]. One
+//! tree, one update sweep, one publish point, shared by training and
+//! serving.
+//!
+//! # Determinism contract
+//!
+//! The pinned generation changes **only** in [`Sampler::refresh_snapshots`]
+//! — never inside a draw. The training pipeline calls refresh at a fixed
+//! point of its stage schedule (immediately before a step's draws, on the
+//! thread running them, FIFO-ordered after the publishes that must be
+//! visible), so the generation a step samples from is a pure function of
+//! the schedule: at pipeline depth 1 it is the generation the previous
+//! step published (exactly the live tree of the pre-refactor private
+//! sampler), at depth 2 it is one generation older (the documented
+//! staleness). Draw streams are bit-identical to the samplers this adapter
+//! replaces:
+//!
+//! * one shard — delegates to the snapshot tree's own
+//!   [`KernelTreeSampler`] batch engine (same arena walk, same RNG
+//!   consumption as the legacy `"quadratic"` / `"rff"` samplers);
+//! * several shards — the router fan-out of
+//!   [`crate::serve::ShardedKernelSampler`], reusing the same
+//!   [`draw_from_shards`] body the serve workers run.
+
+use crate::sampler::kernel::tree::{sanitize_mass, TreeView};
+use crate::sampler::kernel::FeatureMap;
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
+use crate::serve::shard::{draw_from_shards, scratch_for, shard_of_class, ShardScratch};
+use crate::serve::snapshot::{SnapshotReader, SnapshotStore, TreeSnapshot};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{par_chunks_mut, Pool};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// The pinned state: per-shard readers plus the `Arc`'d snapshots they
+/// currently pin. Guarded by one mutex that is locked only at refresh and
+/// at the start of a batch (to clone the pinned `Arc`s out) — never held
+/// across draws.
+struct Pinned<M: FeatureMap> {
+    readers: Vec<SnapshotReader<TreeSnapshot<M>>>,
+    snaps: Vec<Arc<TreeSnapshot<M>>>,
+}
+
+/// Read-only [`Sampler`] over published kernel-tree snapshot generations
+/// (see the module docs for the determinism contract).
+pub struct SnapshotSampler<M: FeatureMap + Clone> {
+    offsets: Vec<u32>,
+    n: usize,
+    d: usize,
+    /// Registry name this adapter stands in for (`"quadratic"`,
+    /// `"rff-sharded"`, ...): configs and logs keep reading the same names.
+    name: String,
+    pinned: Mutex<Pinned<M>>,
+    /// Router scratch freelist (multi-shard draws only) — the same pooling
+    /// discipline as [`crate::serve::ShardedKernelSampler`].
+    scratch_pool: Pool<ShardScratch>,
+}
+
+impl<M: FeatureMap + Clone> SnapshotSampler<M> {
+    /// Subscribe to the given per-shard publish points. `offsets` bracket
+    /// every shard (`offsets.len() == stores.len() + 1`); `name` is the
+    /// sampler-registry name this adapter reports.
+    pub fn new(
+        stores: Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>,
+        offsets: Vec<u32>,
+        name: String,
+    ) -> SnapshotSampler<M> {
+        assert_eq!(offsets.len(), stores.len() + 1, "offsets must bracket every shard");
+        let readers: Vec<SnapshotReader<TreeSnapshot<M>>> =
+            stores.iter().map(|s| SnapshotReader::new(s.clone())).collect();
+        let snaps: Vec<Arc<TreeSnapshot<M>>> =
+            readers.iter().map(|r| r.pinned().clone()).collect();
+        let n = *offsets.last().expect("offsets non-empty") as usize;
+        let d = snaps[0].tree.embed_dim();
+        SnapshotSampler {
+            offsets,
+            n,
+            d,
+            name,
+            pinned: Mutex::new(Pinned { readers, snaps }),
+            scratch_pool: Pool::new(),
+        }
+    }
+
+    /// Generation of every pinned shard snapshot (test/debug surface).
+    pub fn pinned_generations(&self) -> Vec<u64> {
+        let guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        guard.snaps.iter().map(|s| s.generation).collect()
+    }
+
+    /// Clone the pinned snapshot set out of the lock (one `Arc` clone per
+    /// shard; the lock is never held while drawing).
+    fn pin(&self) -> Vec<Arc<TreeSnapshot<M>>> {
+        self.pinned.lock().expect("snapshot sampler poisoned").snaps.clone()
+    }
+}
+
+impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let snaps = self.pin();
+        if snaps.len() == 1 {
+            // single tree: the snapshot's own engine (bit-identical stream
+            // to the legacy private KernelTreeSampler)
+            return snaps[0].tree.sample(input, m, rng, out);
+        }
+        let h = input.h.ok_or_else(|| anyhow::anyhow!("snapshot sampler needs h"))?;
+        anyhow::ensure!(h.len() == self.d, "h len {} != d {}", h.len(), self.d);
+        out.clear();
+        let trees: Vec<TreeView<'_, M>> = snaps.iter().map(|s| s.tree.view()).collect();
+        let mut state = self.scratch_pool.take(|| scratch_for(&trees));
+        draw_from_shards(&trees, &self.offsets, h, m, &mut state, rng, out);
+        self.scratch_pool.put(state);
+        Ok(())
+    }
+
+    /// Batched engine over the pinned generation set — the same fan-out
+    /// bodies as the samplers this adapter replaces, so the per-row
+    /// [`row_rng`] streams are bit-identical for any thread count.
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        let snaps = self.pin();
+        if snaps.len() == 1 {
+            return snaps[0].tree.sample_batch(inputs, m, step_seed, out);
+        }
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        anyhow::ensure!(inputs.d == self.d, "batch h dim {} != sampler d {}", inputs.d, self.d);
+        let h_all = inputs.h.expect("validated: snapshot sampler needs h");
+        let trees: Vec<TreeView<'_, M>> = snaps.iter().map(|s| s.tree.view()).collect();
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut state = self.scratch_pool.take(|| scratch_for(&trees));
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = &h_all[i * self.d..(i + 1) * self.d];
+                let mut rng = row_rng(step_seed, i);
+                slot.clear();
+                draw_from_shards(&trees, &self.offsets, h, m, &mut state, &mut rng, slot);
+            }
+            self.scratch_pool.put(state);
+        });
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let h = input.h?;
+        let snaps = self.pin();
+        let phi_h = snaps[0].tree.phi_query(h);
+        let total: f64 = snaps.iter().map(|s| sanitize_mass(s.tree.partition(&phi_h))).sum();
+        let sid = shard_of_class(&self.offsets, class as usize);
+        let local = (class - self.offsets[sid]) as usize;
+        let k = snaps[sid].tree.feature_map().kernel(h, snaps[sid].tree.emb_row(local));
+        Some(k / total)
+    }
+
+    /// Snapshot samplers are read-only: their tree lives in the publisher.
+    /// Receiving an update here means a duplicated tree-maintenance path
+    /// survived the refactor — fail loudly in debug builds.
+    fn update(&mut self, _class: usize, _w_new: &[f32]) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; route updates through the publisher"
+        );
+    }
+
+    fn update_many(&mut self, _classes: &[usize], _rows: &[f32]) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; route updates through the publisher"
+        );
+    }
+
+    fn reset_embeddings(&mut self, _w: &[f32], _n: usize, _d: usize) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; seed the ShardSet with w instead"
+        );
+    }
+
+    fn snapshot_backed(&self) -> bool {
+        true
+    }
+
+    /// Advance every shard reader to the freshest published generation.
+    /// The *only* place the pinned set changes — see the module docs.
+    fn refresh_snapshots(&self) {
+        let mut guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        let Pinned { readers, snaps } = &mut *guard;
+        for (reader, snap) in readers.iter_mut().zip(snaps.iter_mut()) {
+            *snap = reader.current().clone();
+        }
+    }
+
+    fn pinned_generation(&self) -> Option<u64> {
+        let guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        guard.snaps.iter().map(|s| s.generation).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::tree::KernelTreeSampler;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::serve::service::ShardSet;
+    use crate::serve::shard::ShardedKernelSampler;
+
+    fn random_emb(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_normal(&mut v, 0.5);
+        v
+    }
+
+    fn batch_draws(
+        s: &dyn Sampler,
+        hs: &[f32],
+        n_rows: usize,
+        d: usize,
+        n_classes: usize,
+        m: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Vec<Sample> {
+        let inputs = BatchSampleInput {
+            n: n_rows,
+            d,
+            n_classes,
+            h: Some(hs),
+            threads,
+            ..Default::default()
+        };
+        let mut out: Vec<Sample> = (0..n_rows).map(|_| Sample::default()).collect();
+        s.sample_batch(&inputs, m, seed, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn single_shard_streams_match_live_tree_across_updates() {
+        // the bitwise contract behind depth-1 pipeline equivalence: with
+        // identical update history, the snapshot adapter and the legacy
+        // private tree draw identical (class, q) streams
+        let (n, d, rows, m) = (48usize, 3usize, 9usize, 6usize);
+        let mut rng = Rng::new(11);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut live = KernelTreeSampler::new(map.clone(), n, None);
+        live.reset_embeddings(&emb, n, d);
+        let mut set = ShardSet::new(map, n, 1, None, Some(&emb));
+        let reader = SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic".into());
+        for step in 0..7u64 {
+            let mut hs = vec![0.0f32; rows * d];
+            rng.fill_normal(&mut hs, 1.0);
+            reader.refresh_snapshots();
+            let a = batch_draws(&live, &hs, rows, d, n, m, 0xA0 + step, 3);
+            let b = batch_draws(&reader, &hs, rows, d, n, m, 0xA0 + step, 2);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.classes, y.classes, "step {step} row {i}");
+                assert_eq!(x.q, y.q, "step {step} row {i}");
+            }
+            // identical Fig. 1(b) rows through both maintenance paths
+            let k = 1 + (step as usize % 4);
+            let classes: Vec<usize> = (0..k).map(|j| (j * 11 + step as usize) % n).collect();
+            let mut classes = classes;
+            classes.sort_unstable();
+            classes.dedup();
+            let mut new_rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut new_rows, 0.6);
+            Sampler::update_many(&mut live, &classes, &new_rows);
+            set.update_and_publish(&classes, &new_rows);
+        }
+    }
+
+    #[test]
+    fn sharded_streams_match_sharded_sampler() {
+        let (n, d, shards, rows, m) = (40usize, 3usize, 4usize, 7usize, 5usize);
+        let mut rng = Rng::new(21);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut live = ShardedKernelSampler::new(map.clone(), n, shards, None);
+        live.reset_embeddings(&emb, n, d);
+        let set = ShardSet::new(map, n, shards, None, Some(&emb));
+        let reader =
+            SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic-sharded".into());
+        reader.refresh_snapshots();
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        for threads in [0usize, 1, 3] {
+            let a = batch_draws(&live, &hs, rows, d, n, m, 0x51ED, threads);
+            let b = batch_draws(&reader, &hs, rows, d, n, m, 0x51ED, threads);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.classes, y.classes, "threads {threads} row {i}");
+                assert_eq!(x.q, y.q, "threads {threads} row {i}");
+            }
+        }
+        // prob() closed form agrees with the live sampler everywhere
+        let input = SampleInput { h: Some(&hs[..d]), ..Default::default() };
+        for c in 0..n as u32 {
+            let a = live.prob(&input, c).unwrap();
+            let b = reader.prob(&input, c).unwrap();
+            assert!((a - b).abs() < 1e-12, "class {c}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn generation_is_pinned_until_refresh() {
+        let (n, d) = (24usize, 2usize);
+        let mut rng = Rng::new(31);
+        let emb = random_emb(&mut rng, n, d);
+        let mut set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 1, None, Some(&emb));
+        let reader = SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic".into());
+        assert_eq!(reader.pinned_generation(), Some(0));
+        let h = vec![0.7f32, -0.4];
+        let draw = |r: &SnapshotSampler<QuadraticMap>| {
+            let input = SampleInput { h: Some(&h), ..Default::default() };
+            let mut out = Sample::default();
+            let mut rng = Rng::new(99);
+            r.sample(&input, 32, &mut rng, &mut out).unwrap();
+            (out.classes, out.q)
+        };
+        let before = draw(&reader);
+        // publishes land; the pinned set must not move until refresh
+        let mut new_rows = vec![0.0f32; d];
+        for _ in 0..3 {
+            rng.fill_normal(&mut new_rows, 0.8);
+            set.update_and_publish(&[5], &new_rows);
+        }
+        assert_eq!(reader.pinned_generation(), Some(0), "pinned set moved without refresh");
+        assert_eq!(draw(&reader), before, "draw stream changed under a pinned generation");
+        reader.refresh_snapshots();
+        assert_eq!(reader.pinned_generation(), Some(3));
+        assert_eq!(reader.pinned_generations(), vec![3]);
+        assert_ne!(draw(&reader).1, before.1, "fresh generation should differ");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "read-only")]
+    fn updates_through_the_adapter_are_rejected() {
+        let (n, d) = (8usize, 2usize);
+        let emb = vec![0.1f32; n * d];
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 1, None, Some(&emb));
+        let mut reader =
+            SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic".into());
+        Sampler::update_many(&mut reader, &[1], &[0.5, 0.5]);
+    }
+}

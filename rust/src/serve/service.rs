@@ -82,6 +82,21 @@ impl<M: FeatureMap + Clone> ShardSet<M> {
         self.publishers.iter().map(|p| p.store()).collect()
     }
 
+    /// A snapshot-backed training [`crate::sampler::Sampler`] over this
+    /// set's publish points, reporting the hosted kernel family's registry
+    /// name (`<kernel>` unsharded, `<kernel>-sharded` otherwise). The
+    /// trainer's one-tree path: draws read published generations of the
+    /// very trees this set updates and publishes.
+    pub fn snapshot_sampler(&self) -> crate::serve::SnapshotSampler<M> {
+        let base = self.publishers[0].shadow().feature_map().name();
+        let name = if self.publishers.len() == 1 {
+            base.to_string()
+        } else {
+            format!("{base}-sharded")
+        };
+        crate::serve::SnapshotSampler::new(self.stores(), self.offsets.clone(), name)
+    }
+
     /// Route a global-class update batch (`classes` sorted + dedup, `rows`
     /// flat len×d) to the owning shards and publish each touched shard's
     /// next generation. Untouched shards keep their current generation —
@@ -136,15 +151,32 @@ pub trait ShardPublisher: Send {
 
     /// Publish-path counters summed over all shards.
     fn publish_stats(&self) -> PublishStats;
+
+    /// Number of shards behind this publisher.
+    fn shard_count(&self) -> usize;
+
+    /// Downcast hook: when the trainer already routes its sampler through
+    /// a publisher, `enable_serving_with::<M>` recovers the concrete
+    /// [`ShardSet<M>`] to hand its typed snapshot stores to the serving
+    /// stack — the same tree serves both, no second mirror is built.
+    fn as_any(&self) -> &dyn std::any::Any;
 }
 
-impl<M: FeatureMap + Clone> ShardPublisher for ShardSet<M> {
+impl<M: FeatureMap + Clone + 'static> ShardPublisher for ShardSet<M> {
     fn update_and_publish_rows(&mut self, classes: &[usize], rows: &[f32]) -> Vec<PublishReport> {
         self.update_and_publish(classes, rows)
     }
 
     fn publish_stats(&self) -> PublishStats {
         self.stats()
+    }
+
+    fn shard_count(&self) -> usize {
+        ShardSet::shard_count(self)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -374,6 +374,12 @@ impl<M: FeatureMap + Clone> Sampler for ShardedKernelSampler<M> {
             shard.reset_embeddings(&w[lo * d..hi * d], hi - lo, d);
         }
     }
+
+    /// The shard set owns S kernel trees; its `update_many` sweeps them
+    /// (the trainer's single-sweep accounting counts it as one sweep).
+    fn owns_kernel_tree(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

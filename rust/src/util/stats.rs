@@ -231,21 +231,40 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
 }
 
 /// Accumulates per-phase durations across many steps.
+///
+/// Two books are kept: `phases` is critical-path wall time (the terms sum
+/// to the accounted wall the throughput line divides by), and `overlapped`
+/// is work the pipelined trainer hid behind another phase on a background
+/// thread (depth-2 sampling/publishing) — reported for visibility but
+/// excluded from [`PhaseTimes::total`], since counting it would double-book
+/// the wall clock.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimes {
     pub phases: Vec<(String, Duration)>,
+    pub overlapped: Vec<(String, Duration)>,
 }
 
 impl PhaseTimes {
     pub fn add(&mut self, name: &str, secs: f64) {
+        Self::accumulate(&mut self.phases, name, secs);
+    }
+
+    /// Record work that ran concurrently with an accounted phase (hidden
+    /// wall time — see the struct docs).
+    pub fn add_overlapped(&mut self, name: &str, secs: f64) {
+        Self::accumulate(&mut self.overlapped, name, secs);
+    }
+
+    fn accumulate(book: &mut Vec<(String, Duration)>, name: &str, secs: f64) {
         let d = Duration::from_secs_f64(secs.max(0.0));
-        if let Some((_, tot)) = self.phases.iter_mut().find(|(n, _)| n == name) {
+        if let Some((_, tot)) = book.iter_mut().find(|(n, _)| n == name) {
             *tot += d;
         } else {
-            self.phases.push((name.to_string(), d));
+            book.push((name.to_string(), d));
         }
     }
 
+    /// Critical-path seconds (overlapped work excluded).
     pub fn total(&self) -> f64 {
         self.phases.iter().map(|(_, d)| d.as_secs_f64()).sum()
     }
@@ -256,6 +275,14 @@ impl PhaseTimes {
         for (name, d) in &self.phases {
             let secs = d.as_secs_f64();
             s.push_str(&format!("  {:<14} {:>9.3}s  ({:>5.1}%)\n", name, secs, 100.0 * secs / total));
+        }
+        for (name, d) in &self.overlapped {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!(
+                "  {:<14} {:>9.3}s  (hidden behind other phases; not in total)\n",
+                format!("{name} (bg)"),
+                secs
+            ));
         }
         s
     }
@@ -276,7 +303,8 @@ impl PhaseTimes {
     }
 
     /// Machine-readable form for the metrics JSONL: per-phase seconds and
-    /// share of accounted wall, plus the total and steps/sec.
+    /// share of accounted wall, plus hidden (overlapped) phase seconds,
+    /// the total and steps/sec.
     pub fn to_json(&self, steps: usize) -> Value {
         let total = self.total();
         let denom = total.max(1e-12);
@@ -292,6 +320,20 @@ impl PhaseTimes {
                                 ("name", Value::str(name)),
                                 ("secs", Value::num(secs)),
                                 ("share", Value::num(secs / denom)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "overlapped",
+                Value::Array(
+                    self.overlapped
+                        .iter()
+                        .map(|(name, d)| {
+                            Value::object(vec![
+                                ("name", Value::str(name)),
+                                ("secs", Value::num(d.as_secs_f64())),
                             ])
                         })
                         .collect(),
@@ -366,6 +408,26 @@ mod tests {
         let phases = j.get("phases").unwrap().as_array().unwrap();
         assert_eq!(phases.len(), 2);
         assert!((phases[0].get("share").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapped_phases_are_reported_but_not_totalled() {
+        let mut p = PhaseTimes::default();
+        p.add("step", 1.0);
+        p.add_overlapped("sample", 0.8);
+        p.add_overlapped("sample", 0.2);
+        // hidden work must not inflate the accounted wall (steps/s would
+        // double-book the clock otherwise)
+        assert!((p.total() - 1.0).abs() < 1e-9);
+        let rep = p.report();
+        assert!(rep.contains("sample (bg)") && rep.contains("hidden"), "{rep}");
+        let rep = p.report_with_throughput(10);
+        assert!(rep.contains("10.0 steps/s"), "{rep}");
+        let j = p.to_json(10);
+        let over = j.get("overlapped").unwrap().as_array().unwrap();
+        assert_eq!(over.len(), 1);
+        assert!((over[0].get("secs").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((j.get("steps_per_s").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
     }
 
     #[test]
