@@ -1,113 +1,27 @@
 #!/usr/bin/env python3
 """Delimiter-balance lexer for Rust sources (offline compile sanity).
 
-The build container has no rust toolchain, so this script provides the
-cheapest mechanical check a compiler would do first: every `(`/`[`/`{` is
-closed by the matching delimiter, with string literals (including raw
-strings), char literals, lifetimes, and comments handled so they cannot
-produce false positives. Run:
+Thin shim over the shared pallas-lint frontend (python/tools/pallas_lint/
+frontend.py), which owns the string/char/lifetime/comment-aware Rust
+lexer this script used to carry inline. Same CLI as before:
 
     python3 python/tools/lexcheck.py $(git ls-files '*.rs')
+
+prints one `path:line: message` per balance error and
+`lexcheck: N files, M errors`, exiting 1 if any error was found.
 """
+import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from pallas_lint.frontend import tokenize
 
 
 def lex(path: str) -> list[str]:
-    src = open(path, encoding="utf-8").read()
-    errs = []
-    stack = []  # (char, line)
-    pairs = {")": "(", "]": "[", "}": "{"}
-    i, n, line = 0, len(src), 1
-    while i < n:
-        c = src[i]
-        if c == "\n":
-            line += 1
-            i += 1
-            continue
-        # line comment
-        if c == "/" and i + 1 < n and src[i + 1] == "/":
-            while i < n and src[i] != "\n":
-                i += 1
-            continue
-        # block comment (nested)
-        if c == "/" and i + 1 < n and src[i + 1] == "*":
-            depth, i = 1, i + 2
-            while i < n and depth:
-                if src[i] == "\n":
-                    line += 1
-                if src.startswith("/*", i):
-                    depth += 1
-                    i += 2
-                elif src.startswith("*/", i):
-                    depth -= 1
-                    i += 2
-                else:
-                    i += 1
-            continue
-        # raw string r"..." / r#"..."# / br#"..."#
-        if c in "rb":
-            j = i
-            if src[j] == "b":
-                j += 1
-            if j < n and src[j] == "r":
-                k = j + 1
-                hashes = 0
-                while k < n and src[k] == "#":
-                    hashes += 1
-                    k += 1
-                if k < n and src[k] == '"':
-                    end = '"' + "#" * hashes
-                    e = src.find(end, k + 1)
-                    if e < 0:
-                        errs.append(f"{path}:{line}: unterminated raw string")
-                        return errs
-                    line += src.count("\n", i, e)
-                    i = e + len(end)
-                    continue
-        # plain string (b"..." too)
-        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
-            i += 2 if c == "b" else 1
-            while i < n:
-                if src[i] == "\\":
-                    i += 2
-                    continue
-                if src[i] == "\n":
-                    line += 1
-                if src[i] == '"':
-                    i += 1
-                    break
-                i += 1
-            continue
-        # char literal vs lifetime: 'a' is a char, 'a (no closing quote
-        # within 2-3 chars, or followed by ident) is a lifetime
-        if c == "'":
-            if i + 1 < n and src[i + 1] == "\\":
-                e = src.find("'", i + 2)
-                i = (e + 1) if e > 0 else i + 2
-                continue
-            if i + 2 < n and src[i + 2] == "'":
-                i += 3
-                continue
-            i += 1  # lifetime
-            continue
-        if c in "([{":
-            stack.append((c, line))
-            i += 1
-            continue
-        if c in ")]}":
-            if not stack:
-                errs.append(f"{path}:{line}: unmatched '{c}'")
-            elif stack[-1][0] != pairs[c]:
-                o, ol = stack[-1]
-                errs.append(f"{path}:{line}: '{c}' closes '{o}' opened at line {ol}")
-                stack.pop()
-            else:
-                stack.pop()
-            i += 1
-            continue
-        i += 1
-    for o, ol in stack:
-        errs.append(f"{path}:{ol}: unclosed '{o}'")
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    _, errs = tokenize(src, path)
     return errs
 
 

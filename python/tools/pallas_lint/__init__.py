@@ -1,0 +1,20 @@
+"""pallas-lint: static invariant analysis for the kss Rust sources.
+
+The build container has no rust toolchain, so clippy/miri can never gate a
+PR here. This package is the no-toolchain stand-in: a Rust tokenizer and
+lightweight parser (`frontend`) shared by a set of repo-specific rules
+(`rules/`) that enforce the correctness contracts the paper's eq. (2)
+exactness rests on — the ops accumulation-order contract, the zero-mass
+q-positivity guards, panic-free serve/pipeline workers, lock-acquisition
+ordering, unsafe-block audits, and sampler-registry consistency.
+
+Run the full pass:
+
+    PYTHONPATH=python/tools python3 -m pallas_lint --root . --report ANALYSIS.json
+
+Pre-existing, justified findings live in `baseline.json` (the waiver
+file); the pass fails only on findings not covered by a waiver, so new
+violations block CI while the waived remainder is documented in place.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,121 @@
+"""CLI: `python3 -m pallas_lint [--root R] [--report P] [--baseline P]`.
+
+Exit 0 when every finding is waived by the baseline, 1 when new
+findings exist, 2 on usage errors. `--write-baseline` accepts the
+current findings as the new baseline (reasons start as TODO and are
+filled in by hand — a waiver without a reason should not survive
+review).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):
+    # invoked as `python3 python/tools/pallas_lint` — put the parent dir
+    # on sys.path so the package imports resolve
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from pallas_lint import __version__
+from pallas_lint.engine import run, write_baseline
+
+
+def _default_root() -> str:
+    """Nearest ancestor of this file containing Cargo.toml (the repo
+    root), falling back to the current directory."""
+    d = os.path.dirname(os.path.abspath(__file__))
+    while True:
+        if os.path.exists(os.path.join(d, "Cargo.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.getcwd()
+        d = parent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="pallas-lint",
+        description="static invariant analyzer for the kss repo",
+    )
+    ap.add_argument("--root", default=None, help="repo root (default: auto)")
+    ap.add_argument(
+        "--report",
+        default="ANALYSIS.json",
+        help="machine-readable report path, relative to root ('-' to skip)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default="python/tools/pallas_lint/baseline.json",
+        help="waiver file, relative to root",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline: report every finding as new",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="accept current findings as the baseline and exit 0",
+    )
+    ap.add_argument(
+        "--rule",
+        action="append",
+        default=None,
+        metavar="ID",
+        help="run only this rule id (repeatable; LEX ACC QPOS PANIC LOCK UNSAFE REG)",
+    )
+    ap.add_argument("--version", action="version", version=f"pallas-lint {__version__}")
+    args = ap.parse_args(argv)
+
+    root = args.root or _default_root()
+    if not os.path.isdir(root):
+        print(f"pallas-lint: no such root: {root}", file=sys.stderr)
+        return 2
+    baseline_path = None if args.no_baseline else os.path.join(root, args.baseline)
+    rule_filter = set(args.rule) if args.rule else None
+
+    report = run(root, baseline_path=baseline_path, rule_filter=rule_filter)
+    fingerprinted = report.pop("_fingerprinted")
+
+    if args.write_baseline:
+        out = os.path.join(root, args.baseline)
+        write_baseline(out, fingerprinted)
+        print(
+            f"pallas-lint: wrote {len(fingerprinted)} waiver(s) to {args.baseline} "
+            "(fill in the reasons)"
+        )
+        return 0
+
+    for it in report["findings"]:
+        tag = "waived" if it["waived"] else "NEW"
+        print(f"{it['file']}:{it['line']}: [{it['rule']}/{tag}] {it['message']}")
+        if it["snippet"]:
+            print(f"    {it['snippet']}")
+    for w in report["stale_waivers"]:
+        print(
+            f"stale waiver: {w['fingerprint']} ({w['rule']} {w['file']}) — "
+            "finding no longer present; prune it from the baseline"
+        )
+
+    if args.report != "-":
+        report_path = os.path.join(root, args.report)
+        with open(report_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+
+    print(
+        f"pallas-lint: {report['files_scanned']} files, "
+        f"{report['new_count']} new finding(s), "
+        f"{report['waived_count']} waived, "
+        f"{len(report['stale_waivers'])} stale waiver(s)"
+    )
+    return 1 if report["new_count"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

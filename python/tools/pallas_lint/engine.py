@@ -1,0 +1,198 @@
+"""Scan driver: file discovery, rule execution, baseline, ANALYSIS.json.
+
+The baseline (waiver) workflow: `baseline.json` holds fingerprints of
+accepted findings with a written reason each. A finding whose
+fingerprint appears there is *waived* — reported in ANALYSIS.json but
+not counted against the build; anything else is *new* and fails CI.
+Fingerprints hash rule + file + the whitespace-normalized source line +
+an ordinal (for repeated identical lines), so they survive unrelated
+edits that shift line numbers, and die with the code they describe —
+a stale waiver is reported so it can be pruned.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Optional
+
+from pallas_lint import __version__
+from pallas_lint.frontend import SourceFile, normalize
+from pallas_lint.rules import Finding, ProjectRule, all_rules
+
+# directories searched for .rs sources, relative to the repo root
+SCAN_ROOTS = ("rust", "benches", "examples", "vendor")
+
+LEX_RULE = {
+    "id": "LEX",
+    "name": "lexical-balance",
+    "summary": "delimiter balance / unterminated literals (ex-lexcheck)",
+    "contract": "every tracked .rs file lexes cleanly (tier-0 sanity)",
+}
+
+
+def discover(root: str) -> list:
+    """Repo-relative forward-slash paths of every .rs file under
+    SCAN_ROOTS, sorted."""
+    out = []
+    for top in SCAN_ROOTS:
+        base = os.path.join(root, top)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d not in (".git", "target")]
+            for fn in filenames:
+                if fn.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                    out.append(rel.replace(os.sep, "/"))
+    return sorted(out)
+
+
+def load_files(root: str, relpaths: list) -> dict:
+    files = {}
+    for rel in relpaths:
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as f:
+            files[rel] = SourceFile(rel, f.read())
+    return files
+
+
+def fingerprint(f: Finding, ordinal: int) -> str:
+    key = f"{f.rule}|{f.file}|{normalize(f.snippet)}|{ordinal}"
+    return hashlib.sha1(key.encode("utf-8")).hexdigest()[:16]
+
+
+def assign_fingerprints(findings: list) -> list:
+    """Stable fingerprints: ordinal disambiguates identical (rule, file,
+    normalized-line) triples in source order."""
+    counts: dict = {}
+    out = []
+    for f in sorted(findings, key=lambda f: (f.file, f.line, f.rule, f.message)):
+        key = (f.rule, f.file, normalize(f.snippet))
+        ordinal = counts.get(key, 0)
+        counts[key] = ordinal + 1
+        out.append((f, fingerprint(f, ordinal)))
+    return out
+
+
+def load_baseline(path: str) -> dict:
+    """fingerprint -> waiver entry. Missing file = empty baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    return {w["fingerprint"]: w for w in data.get("waivers", [])}
+
+
+def write_baseline(path: str, fingerprinted: list) -> None:
+    waivers = [
+        {
+            "fingerprint": fp,
+            "rule": f.rule,
+            "file": f.file,
+            "line": f.line,
+            "snippet": f.snippet,
+            "reason": "TODO: justify or fix",
+        }
+        for f, fp in fingerprinted
+    ]
+    with open(path, "w", encoding="utf-8") as out:
+        json.dump({"version": 1, "waivers": waivers}, out, indent=2)
+        out.write("\n")
+
+
+def run(
+    root: str,
+    baseline_path: Optional[str] = None,
+    rule_filter: Optional[set] = None,
+) -> dict:
+    """Run every rule; return the ANALYSIS report dict.
+
+    Report keys: files, rules, findings (each with fingerprint + waived
+    flag + reason), new_count, waived_count, stale_waivers.
+    """
+    relpaths = discover(root)
+    files = load_files(root, relpaths)
+    rules = all_rules()
+    if rule_filter:
+        rules = [r for r in rules if r.id in rule_filter]
+
+    findings: list = []
+
+    # LEX pseudo-rule: balance errors from the shared tokenizer
+    if rule_filter is None or "LEX" in rule_filter:
+        for sf in files.values():
+            for err in sf.balance:
+                # "path:line: message"
+                try:
+                    _, line_s, msg = err.split(":", 2)
+                    line = int(line_s)
+                except ValueError:
+                    line, msg = 1, err
+                findings.append(
+                    Finding(
+                        rule="LEX",
+                        file=sf.path,
+                        line=line,
+                        message=msg.strip(),
+                        snippet=sf.line_text(line).strip()[:160],
+                    )
+                )
+
+    extra: dict = {}
+    for r in rules:
+        if isinstance(r, ProjectRule):
+            for rel in r.extra_files:
+                p = os.path.join(root, rel)
+                if rel not in extra and os.path.exists(p):
+                    with open(p, "r", encoding="utf-8") as f:
+                        extra[rel] = f.read()
+
+    for r in rules:
+        if isinstance(r, ProjectRule):
+            findings.extend(r.check_project(files, extra))
+        else:
+            for sf in files.values():
+                if r.applies(sf.path):
+                    findings.extend(r.check(sf))
+
+    fingerprinted = assign_fingerprints(findings)
+    baseline = (
+        load_baseline(baseline_path) if baseline_path else {}
+    )
+
+    seen_fps = set()
+    items = []
+    for f, fp in fingerprinted:
+        seen_fps.add(fp)
+        waiver = baseline.get(fp)
+        items.append(
+            {
+                "rule": f.rule,
+                "file": f.file,
+                "line": f.line,
+                "message": f.message,
+                "snippet": f.snippet,
+                "fingerprint": fp,
+                "waived": waiver is not None,
+                "reason": waiver.get("reason") if waiver else None,
+            }
+        )
+    stale = [w for fp, w in sorted(baseline.items()) if fp not in seen_fps]
+
+    rule_meta = [LEX_RULE] + [
+        {"id": r.id, "name": r.name, "summary": r.summary, "contract": r.contract}
+        for r in all_rules()
+    ]
+    report = {
+        "tool": "pallas-lint",
+        "version": __version__,
+        "files_scanned": len(files),
+        "rules": rule_meta,
+        "findings": items,
+        "new_count": sum(1 for it in items if not it["waived"]),
+        "waived_count": sum(1 for it in items if it["waived"]),
+        "stale_waivers": stale,
+    }
+    report["_fingerprinted"] = fingerprinted  # internal, stripped before dump
+    return report

@@ -1,0 +1,368 @@
+"""Rust tokenizer + lightweight parser: the shared frontend of pallas-lint.
+
+One pass produces, per source file:
+
+* a token stream (idents, numbers, strings, lifetimes, punctuation,
+  comments) with line numbers — string literals (incl. raw/byte strings),
+  char literals, lifetimes and nested block comments are lexed exactly so
+  no rule can be fooled by `"unsafe"` inside a string or a `// panic!`
+  comment;
+* delimiter-balance errors (the original `lexcheck.py` check — that
+  script is now a thin shim over this module);
+* lightweight structure: `fn` spans (name + body extent via brace
+  matching), `#[cfg(test)] mod` spans, and brace-matched block extraction
+  helpers the rules build scope tracking on.
+
+This is intentionally NOT a full Rust parser: every rule works on tokens
+plus brace structure, which is robust to the subset of Rust this repo
+uses and cheap enough to run on every file in CI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+# Token kinds
+IDENT = "ident"
+NUM = "num"
+STR = "str"
+CHAR = "char"
+LIFETIME = "lifetime"
+PUNCT = "punct"
+COMMENT = "comment"
+
+_IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_IDENT_CONT = _IDENT_START | set("0123456789")
+_DIGITS = set("0123456789")
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {")": "(", "]": "[", "}": "{"}
+
+
+@dataclass
+class Token:
+    kind: str
+    text: str
+    line: int
+
+    def __repr__(self) -> str:  # compact for test failures
+        return f"{self.kind}:{self.text!r}@{self.line}"
+
+
+@dataclass
+class Function:
+    """A `fn` item: header + brace-matched body extent (token indices are
+    into the *code* token stream of the owning SourceFile)."""
+
+    name: str
+    start_line: int
+    end_line: int
+    # index of the body-opening `{` and its matching `}` in sf.code
+    body_open: int
+    body_close: int
+
+
+def tokenize(src: str, path: str = "<mem>"):
+    """Lex `src` into (tokens, balance_errors).
+
+    `balance_errors` is the list of human-readable delimiter problems the
+    original lexcheck reported — empty for well-formed sources.
+    """
+    toks: list[Token] = []
+    errs: list[str] = []
+    stack: list[tuple[str, int]] = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # line comment (doc comments included)
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            toks.append(Token(COMMENT, src[i:j], line))
+            i = j
+            continue
+        # block comment (nested)
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            start, start_line, depth, i = i, line, 1, i + 2
+            while i < n and depth:
+                if src[i] == "\n":
+                    line += 1
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            toks.append(Token(COMMENT, src[start:i], start_line))
+            continue
+        # raw string r"..." / r#"..."# / br#"..."#
+        if c in "rb":
+            j = i
+            if src[j] == "b":
+                j += 1
+            if j < n and src[j] == "r":
+                k = j + 1
+                hashes = 0
+                while k < n and src[k] == "#":
+                    hashes += 1
+                    k += 1
+                if k < n and src[k] == '"':
+                    end = '"' + "#" * hashes
+                    e = src.find(end, k + 1)
+                    if e < 0:
+                        errs.append(f"{path}:{line}: unterminated raw string")
+                        return toks, errs
+                    start_line = line
+                    line += src.count("\n", i, e)
+                    toks.append(Token(STR, src[i : e + len(end)], start_line))
+                    i = e + len(end)
+                    continue
+        # plain string (b"..." too)
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            start, start_line = i, line
+            i += 2 if c == "b" else 1
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                    continue
+                if src[i] == "\n":
+                    line += 1
+                if src[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            toks.append(Token(STR, src[start:i], start_line))
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                e = src.find("'", i + 2)
+                j = (e + 1) if e > 0 else i + 2
+                toks.append(Token(CHAR, src[i:j], line))
+                i = j
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                toks.append(Token(CHAR, src[i : i + 3], line))
+                i += 3
+                continue
+            j = i + 1
+            while j < n and src[j] in _IDENT_CONT:
+                j += 1
+            toks.append(Token(LIFETIME, src[i:j], line))
+            i = j
+            continue
+        # identifier / keyword
+        if c in _IDENT_START:
+            j = i + 1
+            while j < n and src[j] in _IDENT_CONT:
+                j += 1
+            toks.append(Token(IDENT, src[i:j], line))
+            i = j
+            continue
+        # number: digits, optional fraction/exponent/suffix (0.0f64, 1e-9,
+        # 0xFF, 1_000). A trailing `.` followed by an ident is a method
+        # call on an integer literal (`0.max(..)`) — leave the dot.
+        if c in _DIGITS:
+            j = i + 1
+            while j < n and (src[j] in _IDENT_CONT):
+                j += 1
+            if j < n and src[j] == "." and j + 1 < n and src[j + 1] in _DIGITS:
+                j += 1
+                while j < n and src[j] in _IDENT_CONT:
+                    j += 1
+            elif j < n and src[j] == "." and not (j + 1 < n and src[j + 1] in _IDENT_START):
+                j += 1  # `1.` style float
+            # exponent sign: `1e-9` lexes as one number
+            if j < n and src[j] in "+-" and src[j - 1] in "eE" and src[i] != "0":
+                j += 1
+                while j < n and src[j] in _IDENT_CONT:
+                    j += 1
+            toks.append(Token(NUM, src[i:j], line))
+            i = j
+            continue
+        # delimiters: balance-checked, emitted as punct
+        if c in OPEN:
+            stack.append((c, line))
+            toks.append(Token(PUNCT, c, line))
+            i += 1
+            continue
+        if c in CLOSE:
+            if not stack:
+                errs.append(f"{path}:{line}: unmatched '{c}'")
+            elif stack[-1][0] != CLOSE[c]:
+                o, ol = stack[-1]
+                errs.append(f"{path}:{line}: '{c}' closes '{o}' opened at line {ol}")
+                stack.pop()
+            else:
+                stack.pop()
+            toks.append(Token(PUNCT, c, line))
+            i += 1
+            continue
+        toks.append(Token(PUNCT, c, line))
+        i += 1
+    for o, ol in stack:
+        errs.append(f"{path}:{ol}: unclosed '{o}'")
+    return toks, errs
+
+
+def balance_errors(src: str, path: str) -> list[str]:
+    """Delimiter-balance check only — the original lexcheck behaviour."""
+    return tokenize(src, path)[1]
+
+
+class SourceFile:
+    """A lexed Rust source with the structure helpers rules need."""
+
+    def __init__(self, path: str, src: str):
+        self.path = path  # repo-relative, forward slashes
+        self.src = src
+        self.lines = src.split("\n")
+        self.tokens, self.balance = tokenize(src, path)
+        # code stream: comments stripped (rules that need comments — the
+        # unsafe audit — read self.lines / self.tokens directly)
+        self.code: list[Token] = [t for t in self.tokens if t.kind != COMMENT]
+        self._test_spans: Optional[list[tuple[int, int]]] = None
+        self._functions: Optional[list[Function]] = None
+
+    # -- structure ---------------------------------------------------------
+
+    def match_brace(self, open_idx: int) -> int:
+        """Index (into self.code) of the `}` matching the `{` at open_idx.
+        Returns len(self.code) - 1 when unbalanced (callers treat the rest
+        of the file as the block)."""
+        depth = 0
+        for j in range(open_idx, len(self.code)):
+            t = self.code[j]
+            if t.kind == PUNCT and t.text == "{":
+                depth += 1
+            elif t.kind == PUNCT and t.text == "}":
+                depth -= 1
+                if depth == 0:
+                    return j
+        return len(self.code) - 1
+
+    def test_spans(self) -> list[tuple[int, int]]:
+        """Line spans (start, end inclusive) of `#[cfg(test)] mod` blocks
+        and `#[test]`-attributed items."""
+        if self._test_spans is not None:
+            return self._test_spans
+        spans: list[tuple[int, int]] = []
+        code = self.code
+        i = 0
+        while i < len(code):
+            t = code[i]
+            if t.kind == PUNCT and t.text == "#":
+                # match #[cfg(test)] or #[test]
+                texts = [c.text for c in code[i : i + 7]]
+                is_cfg_test = texts[:6] == ["#", "[", "cfg", "(", "test", ")"]
+                is_test_attr = texts[:4] == ["#", "[", "test", "]"]
+                if is_cfg_test or is_test_attr:
+                    # find the next `{` and take its block
+                    j = i
+                    while j < len(code) and not (
+                        code[j].kind == PUNCT and code[j].text == "{"
+                    ):
+                        j += 1
+                    if j < len(code):
+                        close = self.match_brace(j)
+                        spans.append((t.line, code[close].line))
+                        i = close + 1
+                        continue
+            i += 1
+        self._test_spans = spans
+        return spans
+
+    def in_test(self, line: int) -> bool:
+        return any(lo <= line <= hi for lo, hi in self.test_spans())
+
+    def functions(self) -> list[Function]:
+        """Every `fn` item (including nested/impl fns and fns in test
+        mods) with its brace-matched body extent."""
+        if self._functions is not None:
+            return self._functions
+        fns: list[Function] = []
+        code = self.code
+        i = 0
+        while i < len(code):
+            t = code[i]
+            if t.kind == IDENT and t.text == "fn":
+                if i + 1 < len(code) and code[i + 1].kind == IDENT:
+                    name = code[i + 1].text
+                    # body `{` is the first `{` with (), [] and <> header
+                    # nesting closed; a `;` first means a trait/extern
+                    # declaration with no body
+                    depth_par = 0
+                    j = i + 2
+                    body_open = -1
+                    while j < len(code):
+                        c = code[j]
+                        if c.kind == PUNCT:
+                            if c.text in "([":
+                                depth_par += 1
+                            elif c.text in ")]":
+                                depth_par -= 1
+                            elif c.text == ";" and depth_par == 0:
+                                break
+                            elif c.text == "{" and depth_par == 0:
+                                body_open = j
+                                break
+                        j += 1
+                    if body_open >= 0:
+                        close = self.match_brace(body_open)
+                        fns.append(
+                            Function(
+                                name=name,
+                                start_line=t.line,
+                                end_line=code[close].line,
+                                body_open=body_open,
+                                body_close=close,
+                            )
+                        )
+            i += 1
+        self._functions = fns
+        return fns
+
+    def function_at(self, line: int) -> Optional[Function]:
+        """Innermost function containing `line` (functions() returns outer
+        fns before the nested ones they contain; last match = innermost)."""
+        hit = None
+        for f in self.functions():
+            if f.start_line <= line <= f.end_line:
+                if hit is None or f.start_line >= hit.start_line:
+                    hit = f
+        return hit
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def window(self, line: int, before: int = 0, after: int = 0) -> str:
+        lo = max(1, line - before)
+        hi = min(len(self.lines), line + after)
+        return "\n".join(self.lines[lo - 1 : hi])
+
+
+def snippet(sf: SourceFile, line: int, width: int = 160) -> str:
+    s = sf.line_text(line).strip()
+    return s[:width]
+
+
+_WS = re.compile(r"\s+")
+
+
+def normalize(code_line: str) -> str:
+    """Whitespace-insensitive form of a line, for stable fingerprints."""
+    return _WS.sub(" ", code_line.strip())

@@ -1,0 +1,70 @@
+"""Rule registry: every invariant pallas-lint enforces, in display order.
+
+A `Rule` checks one SourceFile at a time; a `ProjectRule` sees the whole
+scanned file set at once (cross-file invariants like registry
+consistency or the global lock-acquisition graph). Each rule names the
+contract it protects — the same text lands in ANALYSIS.json and the
+README invariant catalog.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from pallas_lint.frontend import SourceFile
+
+
+@dataclass
+class Finding:
+    rule: str
+    file: str
+    line: int
+    message: str
+    snippet: str
+
+
+class Rule:
+    id = "RULE"
+    name = "rule"
+    summary = ""
+    contract = ""
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("rust/src/")
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        raise NotImplementedError
+
+
+class ProjectRule(Rule):
+    """Cross-file rule: `check_project` runs once over the scanned set.
+    `extra_files` lists non-Rust paths (relative to the repo root) the
+    rule wants the engine to read for it (e.g. README.md)."""
+
+    extra_files: tuple = ()
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        return []
+
+    def check_project(
+        self, files: dict, extra: dict
+    ) -> list[Finding]:  # files: relpath -> SourceFile; extra: relpath -> str
+        raise NotImplementedError
+
+
+def all_rules() -> list[Rule]:
+    from pallas_lint.rules.accumulation import AccumulationContract
+    from pallas_lint.rules.lock_discipline import LockDiscipline
+    from pallas_lint.rules.panic_free import PanicFreeWorkers
+    from pallas_lint.rules.q_positivity import QPositivity
+    from pallas_lint.rules.registry_consistency import RegistryConsistency
+    from pallas_lint.rules.unsafe_audit import UnsafeAudit
+
+    return [
+        AccumulationContract(),
+        QPositivity(),
+        PanicFreeWorkers(),
+        LockDiscipline(),
+        UnsafeAudit(),
+        RegistryConsistency(),
+    ]

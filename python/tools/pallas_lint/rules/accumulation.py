@@ -1,0 +1,126 @@
+"""ACC — the ops accumulation-order contract.
+
+`rust/src/ops/` pins one accumulation order per reduction (blocked lanes
+for dots, strictly sequential prefix sums, f64 long sums) so that every
+probability in the system is a pure function of its inputs. A raw
+`for`-loop float reduction anywhere else is a second, unpinned order:
+it can silently disagree with the ops result at the 1e-15 level that the
+eq. (2) q-exactness regression tests bound, and it re-opens the
+duplicated-inner-loop class PR 4 deleted. Hot paths must call `ops::`
+primitives (`dot*`, `dot_many*`, `fill_cum*`, `axpy*`); intentionally
+sequential cold-path loops get a waiver with a reason.
+"""
+
+from __future__ import annotations
+
+import re
+
+from pallas_lint.frontend import IDENT, PUNCT, SourceFile, snippet
+from pallas_lint.rules import Finding, Rule
+
+# `acc += <expr>;` where <expr> reads data (indexing, call, field or
+# multiply) — not a bare counter bump.
+_COMPOUND = re.compile(
+    r"(?:^|[^+\-*/%&|^])\b(?P<target>\*?\s*[A-Za-z_]\w*(?:\s*\[[^\]]*\])?)\s*"
+    r"\+=\s*(?P<rhs>[^;]+);"
+)
+_RHS_READS_DATA = re.compile(r"[\[(*.]")
+
+
+def _float_zero_init(body: str, ident: str) -> bool:
+    """Is `ident` initialized as a float accumulator in this function?"""
+    pat = (
+        rf"let\s+(?:mut\s+)?{re.escape(ident)}\s*"
+        r"(?::\s*f(?:32|64)\s*)?=\s*0(?:\.\d*)?(?:_?f(?:32|64))?\s*;"
+    )
+    if re.search(pat, body):
+        # integer zero (`= 0;` with no float type/suffix) is a counter,
+        # not a float accumulator
+        m = re.search(pat, body)
+        text = m.group(0)
+        return ("f32" in text) or ("f64" in text) or ("." in text)
+    # explicitly typed float binding initialized from something else
+    return bool(
+        re.search(rf"let\s+(?:mut\s+)?{re.escape(ident)}\s*:\s*f(?:32|64)\b", body)
+    )
+
+
+class AccumulationContract(Rule):
+    id = "ACC"
+    name = "accumulation-contract"
+    summary = "raw for-loop float reductions outside rust/src/ops/"
+    contract = (
+        "ops accumulation-order contract (README 'The ops layer'): every "
+        "float reduction on a hot path goes through ops:: primitives so "
+        "the eq. (2) probabilities are a pure function of the inputs"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("rust/src/") and not relpath.startswith(
+            "rust/src/ops/"
+        )
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        code = sf.code
+        seen_lines: set[int] = set()
+        for i, tok in enumerate(code):
+            if not (tok.kind == IDENT and tok.text == "for"):
+                continue
+            if sf.in_test(tok.line):
+                continue
+            # body `{` of the for loop: first `{` with ()/[] closed
+            depth = 0
+            j = i + 1
+            body_open = -1
+            while j < len(code):
+                c = code[j]
+                if c.kind == PUNCT:
+                    if c.text in "([":
+                        depth += 1
+                    elif c.text in ")]":
+                        depth -= 1
+                    elif c.text == "{" and depth == 0:
+                        body_open = j
+                        break
+                    elif c.text == ";" and depth == 0:
+                        break
+                j += 1
+            if body_open < 0:
+                continue
+            body_close = sf.match_brace(body_open)
+            lo, hi = code[body_open].line, code[body_close].line
+            fn = sf.function_at(tok.line)
+            fn_body = (
+                "\n".join(sf.lines[fn.start_line - 1 : fn.end_line])
+                if fn
+                else "\n".join(sf.lines[max(0, lo - 40) : hi])
+            )
+            for m in _COMPOUND.finditer("\n".join(sf.lines[lo - 1 : hi])):
+                target = m.group("target").lstrip("*").strip()
+                base = re.split(r"[\s\[]", target, 1)[0]
+                rhs = m.group("rhs")
+                # the decimal point of a float literal is not a field access
+                rhs_no_nums = re.sub(r"\b\d[\d_]*\.\d*", "", rhs)
+                if not _RHS_READS_DATA.search(rhs_no_nums):
+                    continue
+                if not _float_zero_init(fn_body, base):
+                    continue
+                line = lo + "\n".join(sf.lines[lo - 1 : hi])[: m.start()].count("\n")
+                if line in seen_lines or sf.in_test(line):
+                    continue
+                seen_lines.add(line)
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=sf.path,
+                        line=line,
+                        message=(
+                            f"raw float reduction `{base} += ...` in a for loop "
+                            "outside ops:: — hot-path reductions must use "
+                            "ops::dot/dot_many/fill_cum (pinned accumulation order)"
+                        ),
+                        snippet=snippet(sf, line),
+                    )
+                )
+        return findings

@@ -1,0 +1,372 @@
+"""LOCK — static lock-acquisition graph + pinned-snapshot discipline.
+
+Eight files hold Mutexes (batcher queue, snapshot stores, the pinned
+reader set, scratch pools, the shared publisher). The serving design
+stays deadlock-free by construction: every guard is scoped to one short
+critical section and no lock is taken while another is held. This rule
+keeps it that way mechanically:
+
+* every `.lock()` site is collected, with the receiver chain as the lock
+  identity (`self.queue` -> `queue`), and guard lifetimes are tracked
+  lexically (`let g = x.lock()...` lives to end of scope or `drop(g)`;
+  an un-bound guard lives to the end of its statement);
+* acquiring lock B while lock A is held adds edge A -> B to a global
+  acquisition graph; a cycle in that graph is a potential deadlock and
+  fails the pass. Acquiring A while A is held is reported directly
+  (std::sync::Mutex self-deadlock);
+* acquiring any lock while a pinned `SnapshotReader` generation binding
+  (`let s = reader.pinned()/current()...`) is live is flagged: holding a
+  pinned generation across a lock acquisition lets one slow/blocked
+  reader degrade every publish to a clone (the PR 2 head-of-line
+  regression) and inverts the wait-free-reader design.
+
+The analysis is lexical (per function body); cross-function acquisition
+chains are out of scope and covered by the module docs' ownership rules.
+"""
+
+from __future__ import annotations
+
+from pallas_lint.frontend import IDENT, PUNCT, SourceFile, snippet
+from pallas_lint.rules import Finding, ProjectRule
+
+
+def _receiver_chain(code, j: int) -> list:
+    """Receiver segments of the call at code[j] (j = method ident whose
+    preceding token is `.`), walked backwards over idents, `.`/`::` and
+    balanced `()`/`[]` groups."""
+    k = j - 2
+    parts: list = []
+    while k >= 0:
+        t = code[k]
+        if t.kind == PUNCT and t.text == ")":
+            depth = 0
+            while k >= 0:
+                if code[k].kind == PUNCT and code[k].text == ")":
+                    depth += 1
+                elif code[k].kind == PUNCT and code[k].text == "(":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                k -= 1
+            k -= 1
+            if k >= 0 and code[k].kind == IDENT:
+                parts.append(code[k].text + "()")
+                k -= 1
+            else:
+                break
+        elif t.kind == PUNCT and t.text == "]":
+            depth = 0
+            while k >= 0:
+                if code[k].kind == PUNCT and code[k].text == "]":
+                    depth += 1
+                elif code[k].kind == PUNCT and code[k].text == "[":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                k -= 1
+            k -= 1
+            continue
+        elif t.kind == IDENT:
+            parts.append(t.text)
+            k -= 1
+        else:
+            break
+        if k >= 0 and code[k].kind == PUNCT and code[k].text == ".":
+            k -= 1
+            continue
+        if k >= 1 and code[k].text == ":" and code[k - 1].text == ":":
+            k -= 2
+            continue
+        break
+    parts.reverse()
+    return parts
+
+
+def _lock_id(parts: list) -> str:
+    parts = [p for p in parts if p != "self"]
+    return ".".join(parts) if parts else "<anon>"
+
+
+def _stmt_end(code, j: int) -> int:
+    """Index of the `;` ending the statement containing code[j] (or the
+    index where the enclosing block closes)."""
+    depth = 0
+    k = j
+    while k < len(code):
+        t = code[k]
+        if t.kind == PUNCT:
+            if t.text in "([{":
+                depth += 1
+            elif t.text in ")]":
+                depth -= 1
+            elif t.text == "}":
+                depth -= 1
+                if depth < 0:
+                    return k
+            elif t.text == ";" and depth <= 0:
+                return k
+        k += 1
+    return len(code) - 1
+
+
+def _let_binding(code, recv_start: int):
+    """If the statement holding the expression starting at recv_start is
+    `let [mut] NAME = ...`, return NAME."""
+    k = recv_start - 1
+    if k >= 0 and code[k].kind == PUNCT and code[k].text == "=":
+        k -= 1
+        if k >= 0 and code[k].kind == IDENT:
+            name = code[k].text
+            k -= 1
+            if k >= 0 and code[k].kind == IDENT and code[k].text == "mut":
+                k -= 1
+            if k >= 0 and code[k].kind == IDENT and code[k].text == "let":
+                return name
+    return None
+
+
+class LockDiscipline(ProjectRule):
+    id = "LOCK"
+    name = "lock-discipline"
+    summary = "lock-order cycles, double-locks, locks under pinned snapshots"
+    contract = (
+        "serving concurrency design (README 'Online serving'): one short "
+        "critical section per guard, no nested lock acquisition, and never "
+        "a lock while a pinned SnapshotReader generation is held (wait-free "
+        "readers; publisher reclaim must not block on readers)"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("rust/src/")
+
+    def check_project(self, files: dict, extra: dict) -> list[Finding]:
+        findings: list[Finding] = []
+        edges: dict = {}  # (held, acquired) -> (file, line, snippet)
+
+        for sf in files.values():
+            if not self.applies(sf.path):
+                continue
+            for fn in sf.functions():
+                if sf.in_test(fn.start_line):
+                    continue
+                self._walk_function(sf, fn, edges, findings)
+
+        # cycle detection over the acquisition graph
+        graph: dict = {}
+        for held, acquired in edges:
+            graph.setdefault(held, set()).add(acquired)
+        for cycle in _find_cycles(graph):
+            first = min(
+                (e for e in edges if e[0] in cycle and e[1] in cycle),
+                key=lambda e: edges[e][:2],
+            )
+            f, line, snip = edges[first]
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=f,
+                    line=line,
+                    message=(
+                        "lock-acquisition cycle "
+                        + " -> ".join(cycle + [cycle[0]])
+                        + " — a deadlock is reachable if these sections run "
+                        "concurrently; impose one global acquisition order"
+                    ),
+                    snippet=snip,
+                )
+            )
+        return findings
+
+    def _walk_function(self, sf: SourceFile, fn, edges: dict, findings: list) -> None:
+        code = sf.code
+        depth = 0
+        # each guard: [kind, lock_id/var, var, declared_depth, until_idx]
+        guards: list = []
+        j = fn.body_open
+        while j <= fn.body_close:
+            t = code[j]
+            if t.kind == PUNCT and t.text == "{":
+                depth += 1
+            elif t.kind == PUNCT and t.text == "}":
+                depth -= 1
+                guards = [g for g in guards if g["depth"] <= depth]
+            # expire temporary guards at their statement end
+            guards = [g for g in guards if g["until"] is None or j <= g["until"]]
+            # drop(var) releases a guard early
+            if (
+                t.kind == IDENT
+                and t.text == "drop"
+                and j + 2 < len(code)
+                and code[j + 1].text == "("
+                and code[j + 2].kind == IDENT
+            ):
+                victim = code[j + 2].text
+                guards = [g for g in guards if g["var"] != victim]
+            # a method call token preceded by `.`
+            if (
+                t.kind == IDENT
+                and j > 0
+                and code[j - 1].kind == PUNCT
+                and code[j - 1].text == "."
+                and j + 1 < len(code)
+                and code[j + 1].kind == PUNCT
+                and code[j + 1].text == "("
+            ):
+                if t.text == "lock":
+                    parts = _receiver_chain(code, j)
+                    lock = _lock_id(parts)
+                    recv_start = j - 1 - _chain_token_len(code, j)
+                    var = _let_binding(code, recv_start)
+                    line, snip = t.line, snippet(sf, t.line)
+                    for g in guards:
+                        if g["kind"] == "pinned":
+                            findings.append(
+                                Finding(
+                                    rule=self.id,
+                                    file=sf.path,
+                                    line=line,
+                                    message=(
+                                        f"`{lock}` locked while the pinned snapshot "
+                                        f"binding `{g['var']}` is live — release the "
+                                        "pinned generation before taking locks "
+                                        "(wait-free reader contract)"
+                                    ),
+                                    snippet=snip,
+                                )
+                            )
+                        elif g["lock"] == lock:
+                            findings.append(
+                                Finding(
+                                    rule=self.id,
+                                    file=sf.path,
+                                    line=line,
+                                    message=(
+                                        f"`{lock}` locked while already held "
+                                        f"(guard `{g['var'] or '<temp>'}` from line "
+                                        f"{g['line']}) — std::sync::Mutex "
+                                        "self-deadlocks on re-acquisition"
+                                    ),
+                                    snippet=snip,
+                                )
+                            )
+                        else:
+                            edges.setdefault(
+                                (g["lock"], lock), (sf.path, line, snip)
+                            )
+                    guards.append(
+                        {
+                            "kind": "lock",
+                            "lock": lock,
+                            "var": var,
+                            "depth": depth,
+                            "line": line,
+                            "until": None if var else _stmt_end(code, j),
+                        }
+                    )
+                elif t.text in ("pinned", "current"):
+                    recv = _receiver_chain(code, j)
+                    # only track let-bound pinned generations; a bare
+                    # `r.current();` refresh releases at statement end
+                    stmt_let = _enclosing_let(code, j, fn.body_open)
+                    if stmt_let is not None and recv:
+                        guards.append(
+                            {
+                                "kind": "pinned",
+                                "lock": None,
+                                "var": stmt_let,
+                                "depth": depth,
+                                "line": t.line,
+                                "until": None,
+                            }
+                        )
+            j += 1
+
+
+def _chain_token_len(code, j: int) -> int:
+    """Token count of the receiver chain before `.lock` at j (approximate:
+    walk back over idents, dots, `::` and balanced groups)."""
+    k = j - 2
+    start = k
+    while k >= 0:
+        t = code[k]
+        if t.kind == PUNCT and t.text in ")]":
+            close = t.text
+            open_ = "(" if close == ")" else "["
+            depth = 0
+            while k >= 0:
+                if code[k].kind == PUNCT and code[k].text == close:
+                    depth += 1
+                elif code[k].kind == PUNCT and code[k].text == open_:
+                    depth -= 1
+                    if depth == 0:
+                        break
+                k -= 1
+            k -= 1
+            continue
+        if t.kind == IDENT:
+            k -= 1
+            if k >= 0 and code[k].kind == PUNCT and code[k].text == ".":
+                k -= 1
+                continue
+            if k >= 1 and code[k].text == ":" and code[k - 1].text == ":":
+                k -= 2
+                continue
+            break
+        break
+    return start - k
+
+
+def _enclosing_let(code, j: int, floor: int):
+    """Name bound by the `let` statement containing code[j], or None."""
+    k = j
+    while k > floor:
+        t = code[k]
+        if t.kind == PUNCT and t.text in (";", "{", "}"):
+            break
+        k -= 1
+    k += 1
+    if k < len(code) and code[k].kind == IDENT and code[k].text == "let":
+        k += 1
+        if k < len(code) and code[k].kind == IDENT and code[k].text == "mut":
+            k += 1
+        if k < len(code) and code[k].kind == IDENT:
+            return code[k].text
+    return None
+
+
+def _find_cycles(graph: dict) -> list:
+    """Simple cycles (as node lists) via Tarjan SCCs; self-loops excluded
+    (reported directly at the acquisition site)."""
+    index: dict = {}
+    low: dict = {}
+    on_stack: set = set()
+    stack: list = []
+    sccs: list = []
+    counter = [0]
+
+    def strongconnect(v):
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        for w in graph.get(v, ()):
+            if w not in index:
+                strongconnect(w)
+                low[v] = min(low[v], low[w])
+            elif w in on_stack:
+                low[v] = min(low[v], index[w])
+        if low[v] == index[v]:
+            comp = []
+            while True:
+                w = stack.pop()
+                on_stack.discard(w)
+                comp.append(w)
+                if w == v:
+                    break
+            if len(comp) > 1:
+                sccs.append(sorted(comp))
+
+    for v in list(graph):
+        if v not in index:
+            strongconnect(v)
+    return sccs

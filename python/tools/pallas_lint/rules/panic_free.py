@@ -1,0 +1,145 @@
+"""PANIC — panic-free serve / pipeline workers.
+
+A panic on a worker thread does not crash the process: it kills the
+worker, poisons whatever Mutex it held, and leaves the rest of the pool
+to either wedge on the poisoned lock or starve the queue — PR 2 shipped
+two such bugs (malformed `h`, pathological `m`) that were fixed by hand
+with submit-time validation. This rule makes the class extinct: in the
+worker code paths (serve batcher, serve worker loop, snapshot reader
+sampler, pipeline FIFO worker) it flags
+
+* `.unwrap()` / `.expect(...)` — convert to `ServeError` / `anyhow`
+  returns, or recover poisoned locks via `PoisonError::into_inner`;
+* `panic!` / `unreachable!` / `todo!` / `unimplemented!`;
+* direct slice indexing inside the draw-executing functions (a bad index
+  aborts the worker mid-batch; use `.get()` or pre-validated bounds).
+
+`debug_assert!` is allowed (compiled out of release workers); test code
+is excluded; deliberate fail-loud sites (thread spawn at startup, the
+training driver's crash-on-wedge philosophy) carry waivers.
+"""
+
+from __future__ import annotations
+
+from pallas_lint.frontend import IDENT, PUNCT, SourceFile, snippet
+from pallas_lint.rules import Finding, Rule
+
+# file -> functions whose bodies are additionally checked for raw indexing
+WORKER_FILES = {
+    "rust/src/serve/batcher.rs": ("submit", "next_batch", "shutdown", "depth"),
+    "rust/src/serve/service.rs": ("worker_loop",),
+    "rust/src/serve/reader_sampler.rs": ("sample", "sample_batch", "prob"),
+    "rust/src/serve/shard.rs": ("draw_from_shards",),
+    "rust/src/coordinator/pipeline.rs": ("spawn",),
+}
+
+_PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+_PANIC_METHODS = {"unwrap", "expect"}
+
+
+class PanicFreeWorkers(Rule):
+    id = "PANIC"
+    name = "panic-free-workers"
+    summary = "unwrap/expect/panic!/raw indexing on worker code paths"
+    contract = (
+        "serve & pipeline liveness: a panicking worker poisons locks and "
+        "wedges the pool — request paths return ServeError, poisoned locks "
+        "recover via PoisonError::into_inner (serve/batcher.rs docs)"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in WORKER_FILES
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        code = sf.code
+        index_fns = [
+            f
+            for f in sf.functions()
+            if f.name in WORKER_FILES.get(sf.path, ()) and not sf.in_test(f.start_line)
+        ]
+
+        for i, tok in enumerate(code):
+            if tok.kind != IDENT or sf.in_test(tok.line):
+                continue
+            nxt = code[i + 1] if i + 1 < len(code) else None
+            prev = code[i - 1] if i > 0 else None
+            # .unwrap( / .expect(
+            if (
+                tok.text in _PANIC_METHODS
+                and prev is not None
+                and prev.kind == PUNCT
+                and prev.text == "."
+                and nxt is not None
+                and nxt.kind == PUNCT
+                and nxt.text == "("
+                # a panic inside debug_assert! is compiled out of release
+                # workers, same as the assertion itself
+                and "debug_assert" not in sf.line_text(tok.line)
+            ):
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=sf.path,
+                        line=tok.line,
+                        message=(
+                            f".{tok.text}() on a worker code path — return a "
+                            "ServeError/anyhow error, or recover a poisoned "
+                            "lock with PoisonError::into_inner"
+                        ),
+                        snippet=snippet(sf, tok.line),
+                    )
+                )
+                continue
+            # panic-family macros
+            if (
+                tok.text in _PANIC_MACROS
+                and nxt is not None
+                and nxt.kind == PUNCT
+                and nxt.text == "!"
+            ):
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=sf.path,
+                        line=tok.line,
+                        message=(
+                            f"{tok.text}! on a worker code path — a worker "
+                            "panic wedges the pool; surface an error instead"
+                        ),
+                        snippet=snippet(sf, tok.line),
+                    )
+                )
+
+        # raw indexing inside the draw-executing functions
+        seen: set[int] = set()
+        for fn in index_fns:
+            for j in range(fn.body_open + 1, fn.body_close):
+                t = code[j]
+                if not (t.kind == PUNCT and t.text == "["):
+                    continue
+                prev = code[j - 1]
+                # indexing (ident[..], )[..], ][..]) vs array literal / attr
+                if not (
+                    prev.kind == IDENT or (prev.kind == PUNCT and prev.text in ")]")
+                ):
+                    continue
+                if prev.kind == IDENT and prev.text in ("vec",):  # vec![...]
+                    continue
+                if t.line in seen or sf.in_test(t.line):
+                    continue
+                seen.add(t.line)
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=sf.path,
+                        line=t.line,
+                        message=(
+                            f"raw slice indexing inside `{fn.name}` (worker draw "
+                            "path) — an out-of-bounds index aborts the worker; "
+                            "use .get() or bounds validated at submit time"
+                        ),
+                        snippet=snippet(sf, t.line),
+                    )
+                )
+        return findings

@@ -1,0 +1,137 @@
+"""QPOS — eq. (2) q-positivity: no unguarded division by kernel mass.
+
+Sampled softmax is unbiased only when every reported q is exact and
+strictly positive (`Sample::push` debug-asserts it; the trainer feeds
+`ln(m·q)` to the loss). Kernel masses and partition totals can underflow
+to zero or go non-finite, so the draw paths route every division through
+`choose_branch` / `sanitize_mass` / `.max(f64::MIN_POSITIVE)` guards.
+This rule flags a raw division whose divisor is a mass/total/partition
+quantity with none of the guard patterns in sight:
+
+* the result is clamped: `.max(f64::MIN_POSITIVE)` on the same statement;
+* the divisor was checked: `<divisor> > 0.0` / `is_finite` in the
+  enclosing few lines (branch guards like `if total > 0.0 && ...`);
+* the quotient is validated right after: `q > 0.0 && q.is_finite()`.
+
+Diagnostic-only divisions (closed-form oracles in tests) are excluded by
+the test-span filter; surviving cold-path sites carry waivers.
+"""
+
+from __future__ import annotations
+
+import re
+
+from pallas_lint.frontend import IDENT, NUM, PUNCT, SourceFile, snippet
+from pallas_lint.rules import Finding, Rule
+
+_MASS_NAME = re.compile(r"(?:^|_)(mass|masses|total|totals|partition|denom)(?:$|_)")
+
+_GUARD_BEFORE = 8  # lines of look-behind for a divisor positivity check
+_GUARD_AFTER = 6  # lines of look-ahead for a quotient validation
+
+
+class QPositivity(Rule):
+    id = "QPOS"
+    name = "q-positivity"
+    summary = "unguarded division by kernel mass / partition total"
+    contract = (
+        "eq. (2) exactness: q must stay finite and strictly positive; "
+        "divisions by subtree/leaf mass go through choose_branch or the "
+        "sanitize_mass/MIN_POSITIVE guards (sampler/kernel/tree.rs)"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("rust/src/sampler/") or relpath.startswith(
+            "rust/src/serve/"
+        )
+
+    def _divisor_chain(self, sf: SourceFile, idx: int) -> str:
+        """Dotted ident chain starting at code[idx] (the token after `/`)."""
+        code = sf.code
+        parts = []
+        j = idx
+        while j < len(code):
+            t = code[j]
+            if t.kind == IDENT:
+                parts.append(t.text)
+                j += 1
+                # skip an index expression after the ident
+                if j < len(code) and code[j].kind == PUNCT and code[j].text == "[":
+                    depth = 0
+                    while j < len(code):
+                        if code[j].kind == PUNCT and code[j].text == "[":
+                            depth += 1
+                        elif code[j].kind == PUNCT and code[j].text == "]":
+                            depth -= 1
+                            if depth == 0:
+                                j += 1
+                                break
+                        j += 1
+                if j < len(code) and code[j].kind == PUNCT and code[j].text == ".":
+                    j += 1
+                    continue
+            break
+        return ".".join(parts)
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        code = sf.code
+        for i, tok in enumerate(code):
+            if not (tok.kind == PUNCT and tok.text == "/"):
+                continue
+            if sf.in_test(tok.line):
+                continue
+            # must be a binary division: something dividable on the left
+            if i == 0:
+                continue
+            prev = code[i - 1]
+            if not (
+                prev.kind in (IDENT, NUM)
+                or (prev.kind == PUNCT and prev.text in ")]")
+            ):
+                continue
+            if i + 1 >= len(code) or code[i + 1].kind != IDENT:
+                continue
+            chain = self._divisor_chain(sf, i + 1)
+            if not chain:
+                continue
+            last = chain.split(".")[-1]
+            if not _MASS_NAME.search(last):
+                continue
+            line = tok.line
+            # guard 1: clamped result on this or the next line
+            stmt = sf.window(line, before=0, after=1)
+            if "MIN_POSITIVE" in stmt:
+                continue
+            # guard 2: divisor checked positive/finite just above
+            behind = sf.window(line, before=_GUARD_BEFORE)
+            if re.search(rf"\b{re.escape(last)}\b\s*>\s*0(\.0)?", behind) or re.search(
+                rf"\b{re.escape(last)}\s*\.\s*is_finite", behind
+            ):
+                continue
+            # guard 3: the quotient is validated right after
+            #   let q = k / total;  ...  if q > 0.0 && q.is_finite()
+            mline = sf.line_text(line)
+            m = re.search(r"let\s+(?:mut\s+)?(\w+)\s*=", mline)
+            ahead = sf.window(line, after=_GUARD_AFTER)
+            if m:
+                q = m.group(1)
+                if re.search(rf"\b{re.escape(q)}\b\s*>\s*0(\.0)?", ahead) and re.search(
+                    rf"\b{re.escape(q)}\s*\.\s*is_finite", ahead
+                ):
+                    continue
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=sf.path,
+                    line=line,
+                    message=(
+                        f"unguarded division by mass-like `{chain}` — route "
+                        "through choose_branch/sanitize_mass or clamp with "
+                        ".max(f64::MIN_POSITIVE) / a `> 0.0 && is_finite` check "
+                        "(eq. (2) q-positivity)"
+                    ),
+                    snippet=snippet(sf, line),
+                )
+            )
+        return findings

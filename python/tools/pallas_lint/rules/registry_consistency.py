@@ -1,0 +1,256 @@
+"""REG — one sampler registry, four mechanically-agreeing views.
+
+`SAMPLER_REGISTRY` in `rust/src/sampler/mod.rs` is the single source of
+truth for sampler names. Three other surfaces must agree with it:
+
+* the `build_sampler` match arms (a registry entry with no arm is an
+  advertised name that errors at runtime; an arm with no entry is an
+  undiscoverable sampler that skips the round-trip test);
+* the `kss --help` footer in `rust/src/main.rs`, which must iterate
+  `SAMPLER_REGISTRY` rather than hand-list names;
+* the hand-kept mirror table under README "### Sampler registry".
+
+PR 4 and PR 5 each added sampler families; this rule is the mechanical
+replacement for the "remember to update the table" review comment.
+"""
+
+from __future__ import annotations
+
+import re
+
+from pallas_lint.frontend import IDENT, PUNCT, STR, SourceFile
+from pallas_lint.rules import Finding, ProjectRule
+
+_MOD = "rust/src/sampler/mod.rs"
+_MAIN = "rust/src/main.rs"
+_README = "README.md"
+
+
+def _str_value(text: str) -> str:
+    """Literal value of a STR token (strip quotes / b / r#)."""
+    m = re.match(r'^b?r?#*"(.*)"#*$', text, re.S)
+    return m.group(1) if m else text.strip('"')
+
+
+def _registry_names(sf: SourceFile) -> list:
+    """`name: "..."` entries inside the SAMPLER_REGISTRY const."""
+    code = sf.code
+    names = []
+    for i, t in enumerate(code):
+        if not (t.kind == IDENT and t.text == "SAMPLER_REGISTRY"):
+            continue
+        if not (i > 0 and code[i - 1].kind == IDENT and code[i - 1].text == "const"):
+            continue
+        # skip past the `=` so we land on the initializer `&[...]`, not
+        # the `&[SamplerInfo]` type annotation
+        j = i
+        while j < len(code) and not (code[j].kind == PUNCT and code[j].text == "="):
+            j += 1
+        while j < len(code) and not (code[j].kind == PUNCT and code[j].text == "["):
+            j += 1
+        depth = 0
+        while j < len(code):
+            c = code[j]
+            if c.kind == PUNCT and c.text == "[":
+                depth += 1
+            elif c.kind == PUNCT and c.text == "]":
+                depth -= 1
+                if depth == 0:
+                    break
+            elif (
+                c.kind == IDENT
+                and c.text == "name"
+                and j + 2 < len(code)
+                and code[j + 1].kind == PUNCT
+                and code[j + 1].text == ":"
+                and code[j + 2].kind == STR
+            ):
+                names.append((_str_value(code[j + 2].text), code[j + 2].line))
+            j += 1
+        break
+    return names
+
+
+def _match_arm_names(sf: SourceFile) -> list:
+    """String-literal match arms (`"name" =>`) inside build_sampler."""
+    arms = []
+    for fn in sf.functions():
+        if fn.name != "build_sampler":
+            continue
+        code = sf.code
+        for j in range(fn.body_open, fn.body_close):
+            t = code[j]
+            if (
+                t.kind == STR
+                and j + 2 < len(code)
+                and code[j + 1].kind == PUNCT
+                and code[j + 1].text == "="
+                and code[j + 2].kind == PUNCT
+                and code[j + 2].text == ">"
+            ):
+                arms.append((_str_value(t.text), t.line))
+    return arms
+
+
+def _readme_names(readme: str) -> list:
+    """Backticked names in the table under '### Sampler registry'."""
+    lines = readme.split("\n")
+    names = []
+    in_section = False
+    for lineno, raw in enumerate(lines, start=1):
+        if raw.startswith("### Sampler registry"):
+            in_section = True
+            continue
+        if in_section and (raw.startswith("## ") or raw.startswith("### ")):
+            break
+        if in_section and raw.lstrip().startswith("|"):
+            m = re.match(r"\s*\|\s*`([^`]+)`\s*\|", raw)
+            if m:
+                names.append((m.group(1), lineno))
+    return names
+
+
+class RegistryConsistency(ProjectRule):
+    id = "REG"
+    name = "registry-consistency"
+    summary = "SAMPLER_REGISTRY vs build_sampler vs --help vs README table"
+    contract = (
+        "single-source-of-truth registry (sampler/mod.rs docs): every "
+        "surface that lists sampler names derives from or mirrors "
+        "SAMPLER_REGISTRY, and the mirrors are checked, not remembered"
+    )
+    extra_files = (_README,)
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in (_MOD, _MAIN)
+
+    def check_project(self, files: dict, extra: dict) -> list[Finding]:
+        findings: list[Finding] = []
+        mod = files.get(_MOD)
+        if mod is None:
+            return findings
+
+        reg = _registry_names(mod)
+        reg_names = [n for n, _ in reg]
+        reg_set = set(reg_names)
+        reg_line = reg[0][1] if reg else 1
+
+        if not reg:
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=_MOD,
+                    line=1,
+                    message="SAMPLER_REGISTRY not found (const renamed or removed?)",
+                    snippet="",
+                )
+            )
+            return findings
+
+        dupes = {n for n in reg_names if reg_names.count(n) > 1}
+        for n in sorted(dupes):
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=_MOD,
+                    line=reg_line,
+                    message=f"duplicate registry name `{n}`",
+                    snippet=f'name: "{n}"',
+                )
+            )
+
+        arms = _match_arm_names(mod)
+        arm_set = {n for n, _ in arms}
+        for n in sorted(reg_set - arm_set):
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=_MOD,
+                    line=next(l for name, l in reg if name == n),
+                    message=(
+                        f"registry name `{n}` has no build_sampler match arm — "
+                        "it is advertised but errors at runtime"
+                    ),
+                    snippet=f'name: "{n}"',
+                )
+            )
+        for n, line in arms:
+            if n not in reg_set:
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=_MOD,
+                        line=line,
+                        message=(
+                            f"build_sampler arm `{n}` missing from "
+                            "SAMPLER_REGISTRY — undiscoverable and skips the "
+                            "registry round-trip test"
+                        ),
+                        snippet=f'"{n}" =>',
+                    )
+                )
+
+        main = files.get(_MAIN)
+        if main is not None and "SAMPLER_REGISTRY" not in main.src:
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=_MAIN,
+                    line=1,
+                    message=(
+                        "kss --help no longer iterates SAMPLER_REGISTRY — the "
+                        "help footer must derive from the registry, not a "
+                        "hand-kept list"
+                    ),
+                    snippet="",
+                )
+            )
+
+        readme = extra.get(_README)
+        if readme is not None:
+            table = _readme_names(readme)
+            table_set = {n for n, _ in table}
+            if not table:
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        file=_README,
+                        line=1,
+                        message=(
+                            "README '### Sampler registry' table not found — "
+                            "the mirror table must exist (and agree with the "
+                            "registry)"
+                        ),
+                        snippet="",
+                    )
+                )
+            else:
+                first_line = table[0][1]
+                for n in sorted(reg_set - table_set):
+                    findings.append(
+                        Finding(
+                            rule=self.id,
+                            file=_README,
+                            line=first_line,
+                            message=(
+                                f"registry name `{n}` missing from the README "
+                                "sampler table (hand-kept mirror is stale)"
+                            ),
+                            snippet=f"`{n}`",
+                        )
+                    )
+                for n, line in table:
+                    if n not in reg_set:
+                        findings.append(
+                            Finding(
+                                rule=self.id,
+                                file=_README,
+                                line=line,
+                                message=(
+                                    f"README sampler table lists `{n}` which is "
+                                    "not in SAMPLER_REGISTRY"
+                                ),
+                                snippet=f"`{n}`",
+                            )
+                        )
+        return findings

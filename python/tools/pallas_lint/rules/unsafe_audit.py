@@ -1,0 +1,59 @@
+"""UNSAFE — every `unsafe` block carries an adjacent `// SAFETY:` proof.
+
+The repo's only `unsafe` is the byte-level reinterpretation handing
+tensors to the XLA boundary (`runtime/tensor.rs`). Unsafe without a
+written obligation is how those sites rot: the next edit changes an
+element type or a length computation and the invariant that made the
+cast sound silently stops holding. Rule: an `unsafe` keyword (block or
+fn) must have a `// SAFETY:` comment on the same line or within the few
+lines directly above it, stating the invariant being relied on. The
+waiver file for this rule is expected to stay empty.
+"""
+
+from __future__ import annotations
+
+from pallas_lint.frontend import IDENT, SourceFile, snippet
+from pallas_lint.rules import Finding, Rule
+
+_LOOKBACK = 5  # lines above the `unsafe` token searched for // SAFETY:
+
+
+class UnsafeAudit(Rule):
+    id = "UNSAFE"
+    name = "unsafe-audit"
+    summary = "`unsafe` without an adjacent // SAFETY: justification"
+    contract = (
+        "XLA boundary soundness (runtime/tensor.rs): each unsafe "
+        "reinterpretation documents the pointer/length/alignment invariant "
+        "it relies on, so edits that break the invariant are visible in review"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        # audit everything we lex, including benches/examples
+        return relpath.endswith(".rs")
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        for tok in sf.tokens:
+            if not (tok.kind == IDENT and tok.text == "unsafe"):
+                continue
+            if sf.in_test(tok.line):
+                continue
+            lo = max(1, tok.line - _LOOKBACK)
+            window = "\n".join(sf.lines[lo - 1 : tok.line])
+            if "SAFETY:" in window:
+                continue
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=sf.path,
+                    line=tok.line,
+                    message=(
+                        "`unsafe` without a `// SAFETY:` comment — state the "
+                        "invariant (pointer validity, length, alignment, bit "
+                        "validity) on the line(s) directly above"
+                    ),
+                    snippet=snippet(sf, tok.line),
+                )
+            )
+        return findings

@@ -1,0 +1,10 @@
+// pallas-lint fixture — MUST trip ACC (raw float reduction outside ops::).
+// Scanned by the self-tests under a rust/src/sampler/ logical path.
+
+pub fn dot_by_hand(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += (a[i] * b[i]) as f64;
+    }
+    acc
+}

@@ -1,0 +1,42 @@
+// pallas-lint fixture — must NOT trip ACC.
+
+/// Hot-path reduction through the ops layer: the pinned accumulation order.
+pub fn dot_ok(a: &[f32], b: &[f32]) -> f64 {
+    crate::ops::dot_mixed(a, b)
+}
+
+/// Integer counter bumps are not float reductions.
+pub fn count_positive(xs: &[i32]) -> usize {
+    let mut n = 0;
+    for x in xs {
+        if *x > 0 {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// A float accumulator that never reads data (constant stride) is not a
+/// reduction over a slice.
+pub fn ramp(steps: usize) -> f64 {
+    let mut t = 0.0f64;
+    for _ in 0..steps {
+        t += 1.0;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    /// Test oracles may sum however they like — the contract binds
+    /// production paths only.
+    #[test]
+    fn oracle_sum_is_fine() {
+        let xs = [0.25f64, 0.5, 0.125];
+        let mut acc = 0.0f64;
+        for i in 0..xs.len() {
+            acc += xs[i];
+        }
+        assert!(acc > 0.0);
+    }
+}

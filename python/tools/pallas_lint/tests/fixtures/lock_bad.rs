@@ -1,0 +1,52 @@
+// pallas-lint fixture — MUST trip LOCK three ways: a self-deadlock, a
+// lock taken under a pinned snapshot binding, and an ordering cycle
+// across two functions.
+
+use std::sync::Mutex;
+
+pub struct S {
+    queue: Mutex<Vec<u32>>,
+    state: Mutex<u32>,
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+pub struct Reader;
+impl Reader {
+    pub fn pinned(&self) -> u64 {
+        0
+    }
+}
+
+impl S {
+    /// Self-deadlock: std::sync::Mutex is not reentrant.
+    pub fn double_lock(&self) {
+        let first = self.queue.lock().unwrap();
+        let second = self.queue.lock().unwrap();
+        drop(second);
+        drop(first);
+    }
+
+    /// Lock acquired while a pinned snapshot generation is held.
+    pub fn lock_under_pin(&self, reader: &Reader) {
+        let snap = reader.pinned();
+        let g = self.state.lock().unwrap();
+        drop(g);
+        let _ = snap;
+    }
+
+    /// With order_ba below: a -> b and b -> a, an ordering cycle.
+    pub fn order_ab(&self) {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+        drop(ga);
+    }
+
+    pub fn order_ba(&self) {
+        let gb = self.b.lock().unwrap();
+        let ga = self.a.lock().unwrap();
+        drop(ga);
+        drop(gb);
+    }
+}

@@ -1,0 +1,68 @@
+// pallas-lint fixture — must NOT trip LOCK: disciplined variants of every
+// pattern lock_bad.rs breaks.
+
+use std::sync::Mutex;
+
+pub struct S {
+    queue: Mutex<Vec<u32>>,
+    state: Mutex<u32>,
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+pub struct Reader;
+impl Reader {
+    pub fn pinned(&self) -> u64 {
+        0
+    }
+}
+
+impl S {
+    /// Sequential sections: the first guard is dropped before relocking.
+    pub fn relock_after_drop(&self) {
+        let g = self.queue.lock().unwrap();
+        drop(g);
+        let g = self.queue.lock().unwrap();
+        drop(g);
+    }
+
+    /// Scope-bounded guards never overlap.
+    pub fn scoped_sections(&self) {
+        {
+            let _g = self.a.lock().unwrap();
+        }
+        {
+            let _g = self.b.lock().unwrap();
+        }
+    }
+
+    /// A statement-temporary guard is released at the semicolon.
+    pub fn temporaries(&self) {
+        self.queue.lock().unwrap().push(1);
+        self.state.lock().unwrap().checked_add(1).map(|_| ()).unwrap_or(());
+    }
+
+    /// The pinned generation is released before any lock.
+    pub fn pin_then_lock(&self, reader: &Reader) {
+        let snap = reader.pinned();
+        let _ = snap;
+        drop(snap);
+        let g = self.state.lock().unwrap();
+        drop(g);
+    }
+
+    /// Consistent a-then-b order in every function: acyclic graph.
+    pub fn order_ab_one(&self) {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+        drop(ga);
+    }
+
+    pub fn order_ab_two(&self) {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        drop(gb);
+        drop(ga);
+    }
+}

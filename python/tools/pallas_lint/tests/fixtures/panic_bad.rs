@@ -1,0 +1,26 @@
+// pallas-lint fixture — MUST trip PANIC. Scanned by the self-tests under
+// the rust/src/serve/batcher.rs logical path (a PANIC worker file whose
+// `submit`/`next_batch` bodies are also checked for raw indexing).
+
+pub struct B {
+    q: std::sync::Mutex<Vec<u32>>,
+}
+
+impl B {
+    pub fn submit(&self, x: u32) {
+        let mut g = self.q.lock().unwrap();
+        g.push(x);
+    }
+
+    pub fn next_batch(&self, items: &[u32]) -> u32 {
+        if items.is_empty() {
+            panic!("empty batch");
+        }
+        items[0]
+    }
+
+    pub fn shutdown(&self) {
+        let g = self.q.lock().expect("poisoned");
+        drop(g);
+    }
+}

@@ -1,0 +1,53 @@
+// pallas-lint fixture — must NOT trip PANIC. Same logical path as
+// panic_bad.rs (rust/src/serve/batcher.rs): the compliant idioms.
+
+pub struct B {
+    q: std::sync::Mutex<Vec<u32>>,
+}
+
+pub enum E {
+    Poisoned,
+}
+
+impl B {
+    /// Request path: poison becomes an error, never a panic.
+    pub fn submit(&self, x: u32) -> Result<(), E> {
+        let mut g = self.q.lock().map_err(|_| E::Poisoned)?;
+        g.push(x);
+        Ok(())
+    }
+
+    /// Worker path: poison means clean exit; access via .get(), not [i].
+    pub fn next_batch(&self, items: &[u32]) -> Option<u32> {
+        let g = self.q.lock().ok()?;
+        debug_assert!(!g.is_empty() || g.is_empty());
+        items.first().copied()
+    }
+
+    /// Must-not-fail path: recover the poisoned lock.
+    pub fn shutdown(&self) {
+        let g = self.q.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g);
+    }
+
+    /// `vec!` macro brackets are literals, not indexing.
+    pub fn depth(&self) -> usize {
+        let seed = vec![0u32; 4];
+        seed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests may unwrap and index freely.
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let b = B { q: std::sync::Mutex::new(vec![7]) };
+        b.submit(1).ok();
+        let items = [3u32, 4];
+        assert_eq!(items[0], 3);
+        assert_eq!(*b.q.lock().unwrap().first().unwrap(), 7);
+    }
+}

@@ -1,0 +1,14 @@
+// pallas-lint fixture — MUST trip QPOS (unguarded division by a mass).
+// Scanned by the self-tests under a rust/src/sampler/ logical path.
+
+pub fn leaf_prob(k: f64, total: f64) -> f64 {
+    k / total
+}
+
+pub struct Node {
+    pub mass: f64,
+}
+
+pub fn branch_ratio(child: &Node, parent_mass: f64) -> f64 {
+    child.mass / parent_mass
+}

@@ -1,0 +1,31 @@
+// pallas-lint fixture — must NOT trip QPOS: one function per accepted
+// guard idiom.
+
+/// Guard 1: the denominator is clamped on the division statement.
+pub fn clamped(k: f64, total: f64) -> f64 {
+    k / total.max(f64::MIN_POSITIVE)
+}
+
+/// Guard 2: the divisor is checked positive-and-finite just above.
+pub fn checked(k: f64, total: f64) -> f64 {
+    if total > 0.0 && total.is_finite() {
+        k / total
+    } else {
+        0.0
+    }
+}
+
+/// Guard 3: the quotient is validated immediately after the division.
+pub fn validated(k: f64, total: f64) -> f64 {
+    let q = k / total;
+    if q > 0.0 && q.is_finite() {
+        q
+    } else {
+        f64::MIN_POSITIVE
+    }
+}
+
+/// Divisors that are not mass-like are out of scope for this rule.
+pub fn plain_average(sum: f64, len: f64) -> f64 {
+    sum / len
+}

@@ -1,0 +1,5 @@
+// pallas-lint REG fixture: hand-kept help footer — the drift REG flags.
+
+fn main() {
+    println!("samplers: uniform");
+}

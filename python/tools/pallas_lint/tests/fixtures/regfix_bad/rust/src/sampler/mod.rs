@@ -1,0 +1,20 @@
+// pallas-lint REG fixture (inconsistent): "phantom" has no match arm,
+// "orphan" has no registry entry, and README/main.rs drift (see siblings).
+
+pub struct SamplerInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
+    SamplerInfo { name: "uniform", summary: "uniform over classes" },
+    SamplerInfo { name: "phantom", summary: "advertised but unbuildable" },
+];
+
+pub fn build_sampler(name: &str) -> Result<u32, String> {
+    match name {
+        "uniform" => Ok(0),
+        "orphan" => Ok(9),
+        other => Err(format!("unknown sampler '{other}'")),
+    }
+}

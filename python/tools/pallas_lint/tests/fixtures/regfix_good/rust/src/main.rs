@@ -1,0 +1,7 @@
+// pallas-lint REG fixture: the help footer iterates the registry.
+
+fn main() {
+    for info in sampler::SAMPLER_REGISTRY {
+        println!("  {:<18} {}", info.name, info.summary);
+    }
+}

@@ -1,0 +1,20 @@
+// pallas-lint REG fixture (consistent): registry, arms, help and README
+// all agree.
+
+pub struct SamplerInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
+    SamplerInfo { name: "uniform", summary: "uniform over classes" },
+    SamplerInfo { name: "softmax", summary: "exact softmax oracle" },
+];
+
+pub fn build_sampler(name: &str) -> Result<u32, String> {
+    match name {
+        "uniform" => Ok(0),
+        "softmax" => Ok(1),
+        other => Err(format!("unknown sampler '{other}'")),
+    }
+}

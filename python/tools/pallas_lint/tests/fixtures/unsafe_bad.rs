@@ -1,0 +1,5 @@
+// pallas-lint fixture — MUST trip UNSAFE (no SAFETY comment adjacent).
+
+pub fn reinterpret(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}

@@ -1,0 +1,19 @@
+// pallas-lint fixture — must NOT trip UNSAFE.
+
+pub fn reinterpret(data: &[f32]) -> &[u8] {
+    // SAFETY: the pointer is valid for data.len() * 4 bytes (f32 is 4
+    // bytes, no padding), u8 is align-1 and any bit pattern is valid; the
+    // returned borrow is tied to `data`'s lifetime.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    /// Test-only unsafe is exempt (the audit binds shipping code).
+    #[test]
+    fn test_unsafe_is_exempt() {
+        let x = [1.0f32];
+        let b = unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, 4) };
+        assert_eq!(b.len(), 4);
+    }
+}

@@ -1,0 +1,256 @@
+#!/usr/bin/env python3
+"""pallas-lint self-tests: every rule must trip on its known-bad fixture
+and stay silent on its known-good twin, and the engine's baseline
+workflow must fail the build on a seeded violation (the CI-fail
+demonstration the static-analysis job relies on).
+
+Plain asserts, stdlib only, Python 3.10: `python3 run_tests.py` exits 0
+on success.
+"""
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+
+from pallas_lint import engine
+from pallas_lint.frontend import SourceFile, normalize, tokenize
+from pallas_lint.rules.accumulation import AccumulationContract
+from pallas_lint.rules.lock_discipline import LockDiscipline
+from pallas_lint.rules.panic_free import PanicFreeWorkers
+from pallas_lint.rules.q_positivity import QPositivity
+from pallas_lint.rules.registry_consistency import RegistryConsistency
+from pallas_lint.rules.unsafe_audit import UnsafeAudit
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+
+
+def fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name), "r", encoding="utf-8") as f:
+        return f.read()
+
+
+def sf(logical_path: str, fixture_name: str) -> SourceFile:
+    """Lex a fixture under the repo-relative path the rule scopes on."""
+    return SourceFile(logical_path, fixture(fixture_name))
+
+
+# -- frontend ---------------------------------------------------------------
+
+
+def test_tokenizer_balance():
+    _, errs = tokenize("fn main() { let x = (1 + 2; }", "bad.rs")
+    assert errs, "unbalanced source must produce balance errors"
+    _, errs = tokenize('fn ok() { let s = r#"no { balance " here"#; }', "ok.rs")
+    assert errs == [], f"raw string confused the lexer: {errs}"
+    _, errs = tokenize("fn ok() { let c = '{'; let lt: &'static str = \"x\"; }", "ok.rs")
+    assert errs == [], f"char literal / lifetime confused the lexer: {errs}"
+
+
+def test_structure_helpers():
+    s = SourceFile("rust/src/x.rs", fixture("panic_good.rs"))
+    names = {f.name for f in s.functions()}
+    assert {"submit", "next_batch", "shutdown", "depth"} <= names, names
+    spans = s.test_spans()
+    assert spans, "#[cfg(test)] mod must be detected"
+    assert s.in_test(spans[0][0]) and s.in_test(spans[0][1])
+    assert not s.in_test(1)
+
+
+# -- per-rule fixtures ------------------------------------------------------
+
+
+def test_acc_rule():
+    rule = AccumulationContract()
+    bad = rule.check(sf("rust/src/sampler/acc_bad.rs", "acc_bad.rs"))
+    assert len(bad) == 1 and bad[0].rule == "ACC", bad
+    assert "acc" in bad[0].message, bad[0].message
+    good = rule.check(sf("rust/src/sampler/acc_good.rs", "acc_good.rs"))
+    assert good == [], good
+    # the same reduction inside rust/src/ops/ is the contract, not a breach
+    assert not rule.applies("rust/src/ops/lanes.rs")
+
+
+def test_qpos_rule():
+    rule = QPositivity()
+    bad = rule.check(sf("rust/src/sampler/qpos_bad.rs", "qpos_bad.rs"))
+    assert len(bad) == 2, bad
+    assert all(f.rule == "QPOS" for f in bad)
+    good = rule.check(sf("rust/src/sampler/qpos_good.rs", "qpos_good.rs"))
+    assert good == [], good
+    # the rule scopes to sampler/ + serve/ only
+    assert not rule.applies("rust/src/util/stats.rs")
+
+
+def test_panic_rule():
+    rule = PanicFreeWorkers()
+    bad = rule.check(sf("rust/src/serve/batcher.rs", "panic_bad.rs"))
+    kinds = sorted(f.message.split(" ")[0] for f in bad)
+    assert len(bad) == 4, (len(bad), kinds)  # unwrap, expect, panic!, items[0]
+    assert any(".unwrap()" in f.message for f in bad)
+    assert any(".expect()" in f.message for f in bad)
+    assert any("panic!" in f.message for f in bad)
+    assert any("indexing" in f.message for f in bad)
+    good = rule.check(sf("rust/src/serve/batcher.rs", "panic_good.rs"))
+    assert good == [], good
+
+
+def test_lock_rule():
+    rule = LockDiscipline()
+    bad_sf = sf("rust/src/serve/lock_bad.rs", "lock_bad.rs")
+    bad = rule.check_project({bad_sf.path: bad_sf}, {})
+    msgs = [f.message for f in bad]
+    assert any("already held" in m for m in msgs), msgs
+    assert any("pinned snapshot" in m for m in msgs), msgs
+    assert any("lock-acquisition cycle" in m for m in msgs), msgs
+    assert len(bad) == 3, msgs
+    good_sf = sf("rust/src/serve/lock_good.rs", "lock_good.rs")
+    good = rule.check_project({good_sf.path: good_sf}, {})
+    assert good == [], [f.message for f in good]
+
+
+def test_unsafe_rule():
+    rule = UnsafeAudit()
+    bad = rule.check(sf("rust/src/runtime/unsafe_bad.rs", "unsafe_bad.rs"))
+    assert len(bad) == 1 and bad[0].rule == "UNSAFE", bad
+    good = rule.check(sf("rust/src/runtime/unsafe_good.rs", "unsafe_good.rs"))
+    assert good == [], good
+
+
+def _reg_files(tree: str):
+    root = os.path.join(FIXTURES, tree)
+    files = {}
+    for rel in ("rust/src/sampler/mod.rs", "rust/src/main.rs"):
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as f:
+            files[rel] = SourceFile(rel, f.read())
+    with open(os.path.join(root, "README.md"), "r", encoding="utf-8") as f:
+        extra = {"README.md": f.read()}
+    return files, extra
+
+
+def test_reg_rule():
+    rule = RegistryConsistency()
+    files, extra = _reg_files("regfix_bad")
+    bad = rule.check_project(files, extra)
+    msgs = [f.message for f in bad]
+    assert any("phantom" in m and "no build_sampler match arm" in m for m in msgs), msgs
+    assert any("orphan" in m and "missing from" in m for m in msgs), msgs
+    assert any("no longer iterates SAMPLER_REGISTRY" in m for m in msgs), msgs
+    assert any("phantom" in m and "README" in m for m in msgs), msgs
+    assert any("stale" in m and "not in SAMPLER_REGISTRY" in m for m in msgs), msgs
+    assert len(bad) == 5, msgs
+    files, extra = _reg_files("regfix_good")
+    good = rule.check_project(files, extra)
+    assert good == [], [f.message for f in good]
+
+
+# -- engine + baseline workflow --------------------------------------------
+
+
+def test_engine_clean_tree():
+    report = engine.run(os.path.join(FIXTURES, "regfix_good"))
+    report.pop("_fingerprinted")
+    assert report["new_count"] == 0, report["findings"]
+    assert report["files_scanned"] == 2
+
+
+def test_engine_dirty_tree():
+    report = engine.run(os.path.join(FIXTURES, "regfix_bad"))
+    report.pop("_fingerprinted")
+    assert report["new_count"] == 5, report["findings"]
+    assert {f["rule"] for f in report["findings"]} == {"REG"}
+
+
+def test_baseline_blocks_only_new_findings():
+    """The acceptance demonstration: pre-existing findings are waived by
+    the checked-in baseline; a seeded violation fails the run."""
+    with tempfile.TemporaryDirectory() as tmp:
+        root = os.path.join(tmp, "repo")
+        shutil.copytree(os.path.join(FIXTURES, "regfix_bad"), root)
+        baseline = os.path.join(root, "baseline.json")
+
+        # 1. accept the 5 pre-existing findings
+        report = engine.run(root)
+        engine.write_baseline(baseline, report.pop("_fingerprinted"))
+        report = engine.run(root, baseline_path=baseline)
+        report.pop("_fingerprinted")
+        assert report["new_count"] == 0 and report["waived_count"] == 5, report
+
+        # 2. seed a violation: an unsafe block with no SAFETY comment
+        main_rs = os.path.join(root, "rust", "src", "main.rs")
+        with open(main_rs, "a", encoding="utf-8") as f:
+            f.write(
+                "\npub fn seeded(x: &[f32]) -> *const f32 {\n"
+                "    unsafe { x.as_ptr().add(0) }\n"
+                "}\n"
+            )
+        report = engine.run(root, baseline_path=baseline)
+        report.pop("_fingerprinted")
+        assert report["new_count"] == 1, report["findings"]
+        seeded = [f for f in report["findings"] if not f["waived"]]
+        assert seeded[0]["rule"] == "UNSAFE", seeded
+
+        # 3. fix one waived finding -> its waiver is reported stale
+        mod_rs = os.path.join(root, "rust", "src", "sampler", "mod.rs")
+        with open(mod_rs, "r", encoding="utf-8") as f:
+            src = f.read()
+        with open(mod_rs, "w", encoding="utf-8") as f:
+            f.write(src.replace('"orphan" => Ok(9),\n', ""))
+        report = engine.run(root, baseline_path=baseline)
+        report.pop("_fingerprinted")
+        assert report["stale_waivers"], "fixed finding must surface its waiver"
+
+
+def test_lex_findings_through_engine():
+    with tempfile.TemporaryDirectory() as tmp:
+        root = os.path.join(tmp, "repo")
+        os.makedirs(os.path.join(root, "rust", "src"))
+        with open(os.path.join(root, "rust", "src", "broken.rs"), "w") as f:
+            f.write("fn main() { let x = (1 + 2; }\n")
+        report = engine.run(root)
+        report.pop("_fingerprinted")
+        rules = {f["rule"] for f in report["findings"]}
+        assert "LEX" in rules, report["findings"]
+
+
+def test_fingerprints_survive_line_drift():
+    f1 = engine.Finding("ACC", "a.rs", 10, "m", "    acc += x[i];")
+    f2 = engine.Finding("ACC", "a.rs", 99, "m", "acc += x[i];")
+    assert normalize(f1.snippet) == normalize(f2.snippet)
+    assert engine.fingerprint(f1, 0) == engine.fingerprint(f2, 0)
+    assert engine.fingerprint(f1, 0) != engine.fingerprint(f1, 1)
+
+
+def test_repo_baseline_is_justified():
+    """Every waiver in the checked-in baseline must carry a real reason."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(here, "baseline.json")
+    assert os.path.exists(path), "checked-in baseline missing"
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    for w in data["waivers"]:
+        reason = w.get("reason", "")
+        assert reason and "TODO" not in reason, f"unjustified waiver: {w}"
+        # the unsafe-audit waiver set must stay empty (satellite b)
+        assert w["rule"] != "UNSAFE", f"unsafe finding must be fixed, not waived: {w}"
+
+
+def main() -> int:
+    tests = [(n, fn) for n, fn in sorted(globals().items()) if n.startswith("test_")]
+    failed = 0
+    for name, fn in tests:
+        try:
+            fn()
+            print(f"  ok  {name}")
+        except AssertionError as e:
+            failed += 1
+            print(f"FAIL  {name}: {e}")
+    print(f"pallas-lint self-tests: {len(tests) - failed}/{len(tests)} passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,10 @@
 //!   is unavailable offline); emits machine-readable `BENCH_*.json` next to
 //!   the printed tables.
 
+// Also denied workspace-wide via [workspace.lints]; the crate attribute
+// keeps the guarantee under direct `rustc` invocations too.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench_harness;
 pub mod coordinator;
 pub mod data;

@@ -16,6 +16,8 @@
 //! Artifacts must exist for train/experiment/demo (`make artifacts`).
 //! Logging level: `KSS_LOG`.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use anyhow::Result;
 use kss::coordinator::{run_grid, GridSpec, MetricsSink, TrainConfig, Trainer};
 use kss::runtime::Engine;

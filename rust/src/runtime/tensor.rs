@@ -107,6 +107,11 @@ impl Tensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             Tensor::F32 { shape, data } => {
+                // SAFETY: `data` is a live Vec<f32> borrowed for this call,
+                // so the pointer is valid for `data.len() * 4` bytes
+                // (size_of::<f32>() == 4, no padding between elements);
+                // u8 has alignment 1 and every byte pattern is a valid u8.
+                // The borrow of `data` outlives `bytes` (consumed below).
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };
@@ -114,6 +119,9 @@ impl Tensor {
                     .context("creating f32 literal")?
             }
             Tensor::I32 { shape, data } => {
+                // SAFETY: same invariants as the F32 arm with
+                // size_of::<i32>() == 4 — pointer valid for len * 4 bytes,
+                // u8 is align-1 and any-bit-pattern, borrow outlives `bytes`.
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };

@@ -546,7 +546,10 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         loop {
             let meta = self.meta[idx as usize];
             if meta.is_leaf() {
-                return ops::dot(phi_h, self.z_of(idx)).max(0.0) / self.partition(phi_h);
+                // clamped denominator keeps the quotient finite if the
+                // root mass underflows (eq. (2) q-positivity)
+                return ops::dot(phi_h, self.z_of(idx)).max(0.0)
+                    / self.partition(phi_h).max(f64::MIN_POSITIVE);
             }
             let mid = self.meta[meta.left as usize].hi;
             idx = if class < mid { meta.left } else { meta.left + 1 };
@@ -559,7 +562,7 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         let k = self
             .map
             .kernel(h, &self.emb[class as usize * self.d..(class as usize + 1) * self.d]);
-        k / self.partition(&phi_h)
+        k / self.partition(&phi_h).max(f64::MIN_POSITIVE)
     }
 
     /// Approximate top-k retrieval by kernel score `K(h, w_j) = ⟨φ(h), φ(w_j)⟩`

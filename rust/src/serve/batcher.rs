@@ -27,7 +27,7 @@
 use crate::sampler::Sample;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Micro-batcher tuning.
@@ -69,6 +69,11 @@ pub enum ServeError {
     /// backstop for a wedged/dead worker pool (blocking callers must never
     /// hang forever).
     Timeout,
+    /// A worker panicked while holding the queue lock. Request paths
+    /// surface this instead of propagating the panic into every caller;
+    /// the pool drains and shuts down (a poisoned queue is not recoverable
+    /// mid-flight, but shedding beats cascading aborts).
+    Poisoned,
 }
 
 impl std::fmt::Display for ServeError {
@@ -83,6 +88,7 @@ impl std::fmt::Display for ServeError {
                 write!(f, "bad request: m = {got} (must be 1..={max})")
             }
             ServeError::Timeout => write!(f, "no response within the request timeout"),
+            ServeError::Poisoned => write!(f, "serve queue poisoned by a worker panic"),
         }
     }
 }
@@ -160,7 +166,7 @@ impl MicroBatcher {
         m: usize,
     ) -> Result<(u64, mpsc::Receiver<SampleResponse>), ServeError> {
         let (tx, rx) = mpsc::channel();
-        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        let mut q = self.queue.lock().map_err(|_| ServeError::Poisoned)?;
         if !q.open {
             return Err(ServeError::ShuttingDown);
         }
@@ -183,29 +189,33 @@ impl MicroBatcher {
     }
 
     /// Block until a batch closes, then return its rows (oldest first).
-    /// `None` means shutdown with an empty queue — workers exit.
+    /// `None` means shutdown with an empty queue — workers exit. A
+    /// poisoned queue also returns `None`: the surviving workers exit
+    /// cleanly instead of propagating the original panic across the pool
+    /// (submitters see [`ServeError::Poisoned`] / dropped-channel timeouts).
     pub fn next_batch(&self) -> Option<Vec<Request>> {
-        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        let mut q = self.queue.lock().ok()?;
         loop {
             if q.items.is_empty() {
                 if !q.open {
                     return None;
                 }
-                q = self.cv.wait(q).expect("batcher queue poisoned");
+                q = self.cv.wait(q).ok()?;
                 continue;
             }
             // a batch is open: close on size, shutdown, or oldest-row age
             if q.items.len() >= self.cfg.max_batch || !q.open {
                 break;
             }
-            let age = q.items.front().expect("non-empty").enqueued.elapsed();
+            let age = match q.items.front() {
+                Some(front) => front.enqueued.elapsed(),
+                None => continue, // unreachable: is_empty handled above
+            };
             if age >= self.cfg.max_wait {
                 break;
             }
-            let (guard, _timeout) = self
-                .cv
-                .wait_timeout(q, self.cfg.max_wait - age)
-                .expect("batcher queue poisoned");
+            let (guard, _timeout) =
+                self.cv.wait_timeout(q, self.cfg.max_wait - age).ok()?;
             q = guard;
         }
         let take = q.items.len().min(self.cfg.max_batch);
@@ -214,17 +224,20 @@ impl MicroBatcher {
 
     /// Stop accepting new requests and wake every worker; queued requests
     /// are still drained (each worker keeps pulling until the queue is
-    /// empty, then sees `None`).
+    /// empty, then sees `None`). Shutdown must succeed even after a worker
+    /// panic, so a poisoned lock is recovered — flipping `open` is sound
+    /// regardless of what the panicking thread left behind.
     pub fn shutdown(&self) {
-        let mut q = self.queue.lock().expect("batcher queue poisoned");
+        let mut q = self.queue.lock().unwrap_or_else(PoisonError::into_inner);
         q.open = false;
         drop(q);
         self.cv.notify_all();
     }
 
-    /// Queued rows right now (observability).
+    /// Queued rows right now (observability; reading a length is sound
+    /// even under poison).
     pub fn depth(&self) -> usize {
-        self.queue.lock().expect("batcher queue poisoned").items.len()
+        self.queue.lock().unwrap_or_else(PoisonError::into_inner).items.len()
     }
 }
 
@@ -293,6 +306,43 @@ mod tests {
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
         assert!(b.next_batch().is_none(), "None must be sticky");
+    }
+
+    /// Poison the queue mutex the only way possible: a thread panics while
+    /// holding it (join consumes the Err so the test itself stays green).
+    fn poison_queue(b: &Arc<MicroBatcher>) {
+        let b2 = Arc::clone(b);
+        let _ = std::thread::spawn(move || {
+            let _g = b2.queue.lock().unwrap();
+            panic!("poisoning the batcher queue");
+        })
+        .join();
+        assert!(b.queue.is_poisoned(), "setup failed: queue not poisoned");
+    }
+
+    #[test]
+    fn poisoned_submit_errors_instead_of_panicking() {
+        let b = MicroBatcher::new(cfg(4, 10, 64));
+        b.submit(vec![0.0], 1).unwrap();
+        poison_queue(&b);
+        assert_eq!(b.submit(vec![0.0], 1).unwrap_err(), ServeError::Poisoned);
+    }
+
+    #[test]
+    fn poisoned_next_batch_returns_none_for_clean_worker_exit() {
+        let b = MicroBatcher::new(cfg(4, 10, 64));
+        b.submit(vec![0.0], 1).unwrap();
+        poison_queue(&b);
+        assert!(b.next_batch().is_none(), "workers must exit, not panic");
+    }
+
+    #[test]
+    fn poisoned_shutdown_and_depth_recover_the_lock() {
+        let b = MicroBatcher::new(cfg(4, 10, 64));
+        b.submit(vec![0.0], 1).unwrap();
+        poison_queue(&b);
+        b.shutdown(); // must not panic
+        assert_eq!(b.depth(), 1, "depth reads through the recovered lock");
     }
 
     #[test]

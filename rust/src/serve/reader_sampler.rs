@@ -39,7 +39,7 @@ use crate::serve::snapshot::{SnapshotReader, SnapshotStore, TreeSnapshot};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{par_chunks_mut, Pool};
 use anyhow::Result;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// The pinned state: per-shard readers plus the `Arc`'d snapshots they
 /// currently pin. Guarded by one mutex that is locked only at refresh and
@@ -92,15 +92,23 @@ impl<M: FeatureMap + Clone> SnapshotSampler<M> {
     }
 
     /// Generation of every pinned shard snapshot (test/debug surface).
+    /// Reading generations is sound even if a draw thread panicked with
+    /// the lock held, so poison is recovered rather than propagated.
     pub fn pinned_generations(&self) -> Vec<u64> {
-        let guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        let guard = self.pinned.lock().unwrap_or_else(PoisonError::into_inner);
         guard.snaps.iter().map(|s| s.generation).collect()
     }
 
     /// Clone the pinned snapshot set out of the lock (one `Arc` clone per
-    /// shard; the lock is never held while drawing).
-    fn pin(&self) -> Vec<Arc<TreeSnapshot<M>>> {
-        self.pinned.lock().expect("snapshot sampler poisoned").snaps.clone()
+    /// shard; the lock is never held while drawing). Errors instead of
+    /// panicking on poison: the draw paths surface it to the caller, so a
+    /// panic elsewhere cannot cascade through every sampling thread.
+    fn pin(&self) -> Result<Vec<Arc<TreeSnapshot<M>>>> {
+        let guard = self
+            .pinned
+            .lock()
+            .map_err(|_| anyhow::anyhow!("snapshot sampler lock poisoned"))?;
+        Ok(guard.snaps.clone())
     }
 }
 
@@ -114,7 +122,7 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
     }
 
     fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
-        let snaps = self.pin();
+        let snaps = self.pin()?;
         if snaps.len() == 1 {
             // single tree: the snapshot's own engine (bit-identical stream
             // to the legacy private KernelTreeSampler)
@@ -140,7 +148,7 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
         step_seed: u64,
         out: &mut [Sample],
     ) -> Result<()> {
-        let snaps = self.pin();
+        let snaps = self.pin()?;
         if snaps.len() == 1 {
             return snaps[0].tree.sample_batch(inputs, m, step_seed, out);
         }
@@ -152,7 +160,7 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
         );
         inputs.validate(self.name(), self.needs())?;
         anyhow::ensure!(inputs.d == self.d, "batch h dim {} != sampler d {}", inputs.d, self.d);
-        let h_all = inputs.h.expect("validated: snapshot sampler needs h");
+        let h_all = inputs.h.ok_or_else(|| anyhow::anyhow!("snapshot sampler needs h"))?;
         let trees: Vec<TreeView<'_, M>> = snaps.iter().map(|s| s.tree.view()).collect();
         par_chunks_mut(out, inputs.threads, |base, chunk| {
             let mut state = self.scratch_pool.take(|| scratch_for(&trees));
@@ -170,9 +178,18 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
 
     fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
         let h = input.h?;
-        let snaps = self.pin();
+        if (class as usize) >= self.n {
+            return None;
+        }
+        let snaps = self.pin().ok()?;
         let phi_h = snaps[0].tree.phi_query(h);
         let total: f64 = snaps.iter().map(|s| sanitize_mass(s.tree.partition(&phi_h))).sum();
+        // eq. (2) q-positivity: a fully-degenerate mass (every shard
+        // sanitized to zero) has no defined distribution — say so rather
+        // than returning inf/NaN
+        if !(total > 0.0) {
+            return None;
+        }
         let sid = shard_of_class(&self.offsets, class as usize);
         let local = (class - self.offsets[sid]) as usize;
         let k = snaps[sid].tree.feature_map().kernel(h, snaps[sid].tree.emb_row(local));
@@ -209,8 +226,12 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
 
     /// Advance every shard reader to the freshest published generation.
     /// The *only* place the pinned set changes — see the module docs.
+    /// Recovers a poisoned lock: refresh rewrites the entire pinned set
+    /// from the readers, so whatever partial state a panicking thread left
+    /// behind is overwritten wholesale (the trait signature has no error
+    /// channel, and the training driver must keep stepping).
     fn refresh_snapshots(&self) {
-        let mut guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        let mut guard = self.pinned.lock().unwrap_or_else(PoisonError::into_inner);
         let Pinned { readers, snaps } = &mut *guard;
         for (reader, snap) in readers.iter_mut().zip(snaps.iter_mut()) {
             *snap = reader.current().clone();
@@ -218,7 +239,8 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
     }
 
     fn pinned_generation(&self) -> Option<u64> {
-        let guard = self.pinned.lock().expect("snapshot sampler poisoned");
+        // read-only aggregate over Arc'd snapshots — sound under poison
+        let guard = self.pinned.lock().unwrap_or_else(PoisonError::into_inner);
         guard.snaps.iter().map(|s| s.generation).min()
     }
 }
@@ -356,6 +378,61 @@ mod tests {
         assert_eq!(reader.pinned_generation(), Some(3));
         assert_eq!(reader.pinned_generations(), vec![3]);
         assert_ne!(draw(&reader).1, before.1, "fresh generation should differ");
+    }
+
+    #[test]
+    fn poisoned_lock_surfaces_errors_not_panics() {
+        let (n, d) = (16usize, 2usize);
+        let emb = vec![0.2f32; n * d];
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 2, None, Some(&emb));
+        let reader = SnapshotSampler::new(
+            set.stores(),
+            set.offsets().to_vec(),
+            "quadratic-sharded".into(),
+        );
+        // poison the pinned-set mutex: a scoped thread panics holding it
+        // (join consumes the Err so the scope exits cleanly)
+        std::thread::scope(|s| {
+            let r = &reader;
+            let _ = s
+                .spawn(move || {
+                    let _g = r.pinned.lock().unwrap();
+                    panic!("poisoning the pinned-set mutex");
+                })
+                .join();
+        });
+        assert!(reader.pinned.is_poisoned(), "setup failed: lock not poisoned");
+        let h = vec![0.3f32, -0.1];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        let mut rng = Rng::new(7);
+        assert!(reader.sample(&input, 4, &mut rng, &mut out).is_err(), "sample must error");
+        let inputs =
+            BatchSampleInput { n: 1, d, n_classes: n, h: Some(&h), ..Default::default() };
+        let mut slots = vec![Sample::default()];
+        assert!(reader.sample_batch(&inputs, 4, 1, &mut slots).is_err(), "batch must error");
+        assert_eq!(reader.prob(&input, 3), None, "prob must decline, not panic");
+        // observability + refresh recover the lock rather than panicking
+        reader.refresh_snapshots();
+        assert_eq!(reader.pinned_generation(), Some(0));
+        assert_eq!(reader.pinned_generations(), vec![0, 0]);
+    }
+
+    #[test]
+    fn prob_out_of_range_class_is_none() {
+        let (n, d) = (12usize, 2usize);
+        let emb = vec![0.4f32; n * d];
+        let set = ShardSet::new(QuadraticMap::new(d, 100.0), n, 2, None, Some(&emb));
+        let reader = SnapshotSampler::new(
+            set.stores(),
+            set.offsets().to_vec(),
+            "quadratic-sharded".into(),
+        );
+        let h = vec![0.5f32, 0.5];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        assert!(reader.prob(&input, (n - 1) as u32).is_some());
+        assert_eq!(reader.prob(&input, n as u32), None, "class past n must be None");
+        assert_eq!(reader.prob(&input, u32::MAX), None);
     }
 
     #[test]

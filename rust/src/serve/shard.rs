@@ -343,6 +343,11 @@ impl<M: FeatureMap + Clone> Sampler for ShardedKernelSampler<M> {
         let h = input.h?;
         let phi_h = self.shards[0].phi_query(h);
         let total: f64 = self.shards.iter().map(|t| sanitize_mass(t.partition(&phi_h))).sum();
+        // eq. (2) q-positivity: every shard mass sanitized to zero means
+        // no defined distribution — decline rather than return inf/NaN
+        if !(total > 0.0) {
+            return None;
+        }
         let sid = self.shard_of(class as usize);
         let local = class - self.offsets[sid];
         let k = self.shards[sid].feature_map().kernel(h, self.shards[sid].emb_row(local as usize));
