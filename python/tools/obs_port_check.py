@@ -1,0 +1,412 @@
+#!/usr/bin/env python3
+"""Line-for-line Python port of the obs subsystem's numeric core, run
+against the same pinned vectors and property checks as the Rust tests.
+
+The build container has no rust toolchain, so — as in the earlier port
+checks — the algorithmic heart of the change is ported faithfully (same
+bit tricks, same guards, same arithmetic order where it matters) and
+validated here:
+
+  1. histogram bucketing: IEEE-754 shift bucketing (`struct.pack('<d')`
+     reproduces `f64::to_bits`), pinned index vectors, monotonicity
+  2. record / record_n / merge: blocked flush equals repeated records;
+     merge of two snapshots equals the interleaved stream
+  3. quantile readout: rank walk + midpoint representative clamped into
+     exact [min, max]; <= 6.25% relative error vs an exact sort (half the
+     widest sub-bucket); constant histograms read back exactly
+  4. ess_fraction: eq. (2) weight ESS/m — full when q matches p,
+     collapsed under a dominant weight, degenerate inputs guarded
+  5. tv_from_pairs: plug-in TV-to-exact — exact under a uniform
+     proposal, ~0 when the proposal equals softmax(o)
+  6. QualityMonitor: Algorithm R reservoir with the splitmix64 ordinal
+     coin — bounded, deterministic, statistically close to exact TV
+
+Mirrors rust/src/obs/histogram.rs and rust/src/obs/monitor.rs; a change
+to the bucketing constants or the reservoir coin must update both or CI
+fails.
+
+Run: python3 python/tools/obs_port_check.py
+"""
+import bisect
+import math
+import struct
+
+# ---------------------------------------------------------------- histogram
+
+SUB_BITS = 3
+MIN_EXP = -30
+MAX_EXP = 14
+LO_RAW = (1023 + MIN_EXP) << SUB_BITS
+HI_RAW = (1023 + MAX_EXP) << SUB_BITS
+BUCKETS = (HI_RAW - LO_RAW) + 2
+
+U64 = (1 << 64) - 1
+
+
+def to_bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def from_bits(b):
+    return struct.unpack("<d", struct.pack("<Q", b))[0]
+
+
+def bucket_of(v):
+    if not (v > 0.0):  # non-positive and NaN -> underflow bucket
+        return 0
+    raw = to_bits(v) >> (52 - SUB_BITS)
+    if raw < LO_RAW:
+        return 0
+    if raw >= HI_RAW:
+        return BUCKETS - 1
+    return (raw - LO_RAW) + 1
+
+
+def bucket_lower(i):
+    assert 1 <= i <= BUCKETS - 1
+    raw = LO_RAW + (i - 1)
+    return from_bits(raw << (52 - SUB_BITS))
+
+
+def representative(i):
+    if i == 0:
+        return bucket_lower(1)
+    if i >= BUCKETS - 1:
+        return bucket_lower(BUCKETS - 1)
+    return 0.5 * (bucket_lower(i) + bucket_lower(i + 1))
+
+
+class Histogram:
+    """Port of Histogram + HistogramSnapshot (single-threaded: the atomics
+    reduce to plain adds; bucket/count/min-bits/max-bits arithmetic is
+    integer-exact, so parity with Rust is bitwise)."""
+
+    def __init__(self):
+        self.buckets = [0] * BUCKETS
+        self.count = 0
+        self.sum = 0.0
+        self.min_bits = U64
+        self.max_bits = 0
+
+    def record(self, v):
+        self.record_n(v, 1)
+
+    def record_n(self, v, n):
+        if n == 0:
+            return
+        self.buckets[bucket_of(v)] += n
+        self.count += n
+        self.sum += v * float(n) if n != 1 else v
+        clamped = v if v > 0.0 else 0.0
+        bits = to_bits(clamped)
+        self.min_bits = min(self.min_bits, bits)
+        self.max_bits = max(self.max_bits, bits)
+
+    def merge(self, other):
+        for i in range(BUCKETS):
+            self.buckets[i] += other.buckets[i]
+        self.count += other.count
+        self.sum += other.sum
+        self.min_bits = min(self.min_bits, other.min_bits)
+        self.max_bits = max(self.max_bits, other.max_bits)
+
+    def min(self):
+        if self.count == 0 or self.min_bits == U64:
+            return 0.0
+        return from_bits(self.min_bits)
+
+    def max(self):
+        if self.count == 0:
+            return 0.0
+        return from_bits(self.max_bits)
+
+    def quantile(self, q):
+        if self.count == 0:
+            return 0.0
+        q = min(max(q, 0.0), 1.0)
+        rank = max(int(math.ceil(q * self.count)), 1)
+        cum = 0
+        for i, b in enumerate(self.buckets):
+            cum += b
+            if cum >= rank:
+                r = representative(i)
+                return min(max(r, self.min()), self.max())
+        return self.max()
+
+
+def check_bucket_pins():
+    assert BUCKETS == 354, BUCKETS
+    pins = [
+        (1e-9, 1),
+        (1e-6, 81),
+        (1e-3, 161),
+        (0.5, 233),
+        (1.0, 241),
+        (1.5, 245),
+        (3.0, 253),
+        (1000.0, 320),
+        (20000.0, 353),
+        (0.0, 0),
+        (-1.0, 0),
+        (float("nan"), 0),
+    ]
+    for v, want in pins:
+        got = bucket_of(v)
+        assert got == want, f"bucket_of({v}) = {got}, want {want}"
+    assert bucket_lower(BUCKETS - 1) == 16384.0
+    assert abs(bucket_lower(161) - 0.0009765625) < 1e-18
+    # monotone in v across the whole range incl. the clamp buckets
+    # (same sequence as histogram.rs::bucket_monotone_in_value)
+    rng = Rng(7)
+    vals = sorted(2.0 ** (rng.f64() * 50.0 - 32.0) for _ in range(4000))
+    for a, b in zip(vals, vals[1:]):
+        assert bucket_of(a) <= bucket_of(b), (a, b)
+    print("  histogram bucketing (pinned vectors + monotonicity): OK")
+
+
+def check_record_merge():
+    # same sequence as histogram.rs::merge_equals_interleaved
+    rng = Rng(11)
+    a, b, both = Histogram(), Histogram(), Histogram()
+    for i in range(5000):
+        v = rng.f64() * 1e3 + 1e-6
+        both.record(v)
+        (a if i % 2 == 0 else b).record(v)
+    a.merge(b)
+    assert a.buckets == both.buckets
+    assert a.count == both.count
+    assert a.min_bits == both.min_bits and a.max_bits == both.max_bits
+    assert abs(a.sum - both.sum) <= 1e-9 * abs(both.sum)
+    # blocked flush: record_n(v, k) == k repeated records, bitwise on the
+    # integer cells
+    h1, hk = Histogram(), Histogram()
+    for v, k in [(0.125, 7), (3.5, 1), (1e-7, 900), (42.0, 3)]:
+        for _ in range(k):
+            h1.record(v)
+        hk.record_n(v, k)
+    assert h1.buckets == hk.buckets and h1.count == hk.count
+    assert h1.min_bits == hk.min_bits and h1.max_bits == hk.max_bits
+    assert abs(h1.sum - hk.sum) <= 1e-9 * abs(h1.sum)
+    print("  record / record_n / merge (blocked flush == repeated records): OK")
+
+
+def check_quantiles():
+    # same sequence (and therefore same worst case) as
+    # histogram.rs::quantile_error_bounded_vs_exact_sort
+    rng = Rng(23)
+    for trial in range(20):
+        h = Histogram()
+        n = 200 + (trial * 37) % 800
+        vals = [2.0 ** (rng.f64() * 24.0 - 18.0) for _ in range(n)]
+        for v in vals:
+            h.record(v)
+        vals.sort()
+        for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+            rank = max(int(math.ceil(q * n)), 1)
+            exact = vals[rank - 1]
+            got = h.quantile(q)
+            rel = abs(got - exact) / exact
+            # worst-case midpoint error: half the 12.5%-wide bottom
+            # sub-bucket of a binade = 6.25% (same bound as the Rust test)
+            assert rel <= 0.0625, f"trial {trial} q {q}: {got} vs {exact} ({rel})"
+    h = Histogram()
+    for _ in range(100):
+        h.record(0.125)
+    assert h.quantile(0.5) == 0.125 and h.quantile(0.99) == 0.125
+    assert h.min() == 0.125 and h.max() == 0.125
+    empty = Histogram()
+    assert empty.quantile(0.5) == 0.0 and empty.min() == 0.0 and empty.max() == 0.0
+    print("  quantile readout (<=6.25% vs exact sort, constants exact): OK")
+
+
+# ----------------------------------------------------------------- monitors
+
+
+def ess_fraction(scored):
+    m = len(scored)
+    if m == 0:
+        return None
+    adj = [
+        o - math.log(m * q)
+        for (o, q) in scored
+        if q > 0.0 and math.isfinite(q) and math.isfinite(o)
+    ]
+    if not adj:
+        return None
+    max_a = max(adj)
+    e = [math.exp(a - max_a) for a in adj]
+    z = sum(e)
+    if not (z > 0.0 and math.isfinite(z)):
+        return None
+    sum_sq = sum((u / z) * (u / z) for u in e)
+    return 1.0 / sum_sq / len(e)
+
+
+def tv_from_pairs(pairs):
+    valid = [
+        (o, q)
+        for (o, q) in pairs
+        if q > 0.0 and math.isfinite(q) and math.isfinite(o)
+    ]
+    if not valid:
+        return None
+    max_o = max(o for (o, _) in valid)
+    weights = [math.exp(o - max_o) / q for (o, q) in valid]
+    zhat = sum(weights) / len(weights)
+    if not (zhat > 0.0 and math.isfinite(zhat)):
+        return None
+    dev = sum(abs(w / zhat - 1.0) for w in weights)
+    return 0.5 * dev / len(weights)
+
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & U64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & U64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & U64
+    return state, (z ^ (z >> 31))
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & U64
+
+
+class Rng:
+    """Port of util::rng::Rng (xoshiro256** seeded via splitmix64) so the
+    property checks replay the *same* pseudo-random sequences as the Rust
+    unit tests — bit-for-bit, since f64() is exact in binary64."""
+
+    def __init__(self, seed):
+        s = []
+        for _ in range(4):
+            seed, out = splitmix64(seed)
+            s.append(out)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & U64, 7) * 9) & U64
+        t = (s[1] << 17) & U64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / float(1 << 53))
+
+
+class QualityMonitor:
+    """Port of the Algorithm R reservoir with the splitmix64 ordinal coin
+    (deterministic given the ingestion sequence — same contract as Rust)."""
+
+    def __init__(self, cap):
+        self.cap = max(cap, 1)
+        self.seen_pairs = 0
+        self.reservoir = []
+
+    def observe(self, scored):
+        for (o, q) in scored:
+            if not (q > 0.0 and math.isfinite(q) and math.isfinite(o)):
+                continue
+            self.seen_pairs += 1
+            if len(self.reservoir) < self.cap:
+                self.reservoir.append((o, q))
+            else:
+                _, coin = splitmix64(self.seen_pairs)
+                j = coin % self.seen_pairs
+                if j < len(self.reservoir):
+                    self.reservoir[j] = (o, q)
+
+    def tv_estimate(self):
+        return tv_from_pairs(self.reservoir)
+
+
+def softmax(o):
+    m = max(o)
+    e = [math.exp(x - m) for x in o]
+    z = sum(e)
+    return [x / z for x in e]
+
+
+def tv_distance(p, q):
+    return 0.5 * sum(abs(a - b) for a, b in zip(p, q))
+
+
+def check_ess():
+    m = 16
+    tri = m * (m + 1) / 2
+    scored = [(math.log(m * ((i + 1) / tri)), (i + 1) / tri) for i in range(m)]
+    f = ess_fraction(scored)
+    assert abs(f - 1.0) < 1e-12, f
+    m = 32
+    scored = [(0.0, 1.0 / m)] * m
+    scored[0] = (50.0, 1.0 / m)
+    f = ess_fraction(scored)
+    assert f < 1.5 / m, f
+    assert ess_fraction([]) is None
+    assert ess_fraction([(1.0, 0.0), (float("nan"), 0.5)]) is None
+    f = ess_fraction([(0.0, 0.5), (0.0, 0.0)])
+    assert abs(f - 1.0) < 1e-12, f
+    print("  ess_fraction (full at q==p, collapse, guards): OK")
+
+
+def check_tv():
+    o = [1.0, -0.5, 2.0, 0.0, -1.5, 0.25]
+    n = len(o)
+    pairs = [(oi, 1.0 / n) for oi in o]
+    got = tv_from_pairs(pairs)
+    exact = tv_distance(softmax(o), [1.0 / n] * n)
+    assert abs(got - exact) < 1e-12, (got, exact)
+    o = [1.0, -0.5, 2.0, 0.0]
+    p = softmax(o)
+    assert tv_from_pairs(list(zip(o, p))) < 1e-12
+    assert tv_from_pairs([]) is None
+    assert tv_from_pairs([(1.0, 0.0)]) is None
+    print("  tv_from_pairs (exact under uniform q, ~0 at q==p): OK")
+
+
+def check_reservoir():
+    a, b = QualityMonitor(8), QualityMonitor(8)
+    for i in range(1000):
+        pair = [(i * 0.01, 1.0 / (1.0 + i))]
+        a.observe(pair)
+        b.observe(pair)
+    assert len(a.reservoir) == 8
+    assert a.seen_pairs == 1000
+    assert a.reservoir == b.reservoir
+    # statistical: classes drawn from q, reservoir TV tracks exact TV(p, q)
+    # (same sequence as monitor.rs::reservoir_statistical_tv_close_to_exact)
+    n = 64
+    rng = Rng(42)
+    o = [rng.f64() * 3.0 - 1.5 for _ in range(n)]
+    q = [rng.f64() + 0.05 for _ in range(n)]
+    zq = sum(q)
+    q = [x / zq for x in q]
+    cum, acc = [], 0.0
+    for x in q:
+        acc += x
+        cum.append(acc)
+    mon = QualityMonitor(4096)
+    for _ in range(20000):
+        u = rng.f64() * acc
+        c = min(bisect.bisect_left(cum, u), n - 1)
+        mon.observe([(o[c], q[c])])
+    est = mon.tv_estimate()
+    exact = tv_distance(softmax(o), q)
+    assert abs(est - exact) < 0.05 + 0.15 * exact, (est, exact)
+    print("  QualityMonitor reservoir (bounded, deterministic, TV tracks exact): OK")
+
+
+if __name__ == "__main__":
+    print("obs port checks:")
+    check_bucket_pins()
+    check_record_merge()
+    check_quantiles()
+    check_ess()
+    check_tv()
+    check_reservoir()
+    print("all obs port checks passed")

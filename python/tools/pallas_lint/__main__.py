@@ -67,7 +67,7 @@ def main(argv=None) -> int:
         action="append",
         default=None,
         metavar="ID",
-        help="run only this rule id (repeatable; LEX ACC QPOS PANIC LOCK UNSAFE REG)",
+        help="run only this rule id (repeatable; LEX ACC QPOS PANIC LOCK OBS UNSAFE REG)",
     )
     ap.add_argument("--version", action="version", version=f"pallas-lint {__version__}")
     args = ap.parse_args(argv)

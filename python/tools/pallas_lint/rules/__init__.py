@@ -55,6 +55,7 @@ class ProjectRule(Rule):
 def all_rules() -> list[Rule]:
     from pallas_lint.rules.accumulation import AccumulationContract
     from pallas_lint.rules.lock_discipline import LockDiscipline
+    from pallas_lint.rules.obs_drop import ObsVisibleDrops
     from pallas_lint.rules.panic_free import PanicFreeWorkers
     from pallas_lint.rules.q_positivity import QPositivity
     from pallas_lint.rules.registry_consistency import RegistryConsistency
@@ -65,6 +66,7 @@ def all_rules() -> list[Rule]:
         QPositivity(),
         PanicFreeWorkers(),
         LockDiscipline(),
+        ObsVisibleDrops(),
         UnsafeAudit(),
         RegistryConsistency(),
     ]

@@ -1,0 +1,132 @@
+"""OBS — no invisible failure: dropped errors must increment a counter.
+
+The telemetry PR's contract is that every shed, drop, and fallback on
+the serve / pipeline paths is *countable*: `kss_batcher_shed_total`,
+`kss_service_dropped_reply_total`, `kss_sampler_zero_mass_fallback_total`
+and friends exist precisely so an operator can see what the code chose
+to swallow. A `let _ = tx.send(reply)` defeats that — the response was
+computed, the client hung up, and nothing anywhere records it happened
+(the serve worker loop shipped exactly this; it now counts the drop).
+
+In the serve and coordinator trees this rule flags error results that
+are discarded with no metrics counter incremented next to the discard:
+
+* `let _ = <expr>;` — a silently dropped value (almost always a
+  `Result` or a `send`);
+* `Err(_) => {}` / `Err(_) => ()` — an empty error match arm;
+* statement-position `.ok();` — discarding a `Result` wholesale.
+
+A discard is fine when the adjacent lines increment an atomic cell
+(`.inc()`, `.add(…)`, a raw `fetch_add`) — the drop is then visible in
+the registry. Test code is excluded; genuinely un-countable sites (the
+metrics sink's own best-effort writer) carry baseline waivers with
+written reasons.
+"""
+
+from __future__ import annotations
+
+from pallas_lint.frontend import IDENT, PUNCT, SourceFile, snippet
+from pallas_lint.rules import Finding, Rule
+
+# evidence that the drop is counted: an increment on an obs cell within
+# one line above / two lines below the discard site
+_INCREMENT_MARKS = (".inc()", ".add(", "fetch_add")
+
+
+class ObsVisibleDrops(Rule):
+    id = "OBS"
+    name = "telemetry-visible-drops"
+    summary = "error discarded on a serve/pipeline path with no counter increment"
+    contract = (
+        "observability: every shed, dropped reply, and fallback is countable "
+        "in the metrics registry — a swallowed Result with no adjacent "
+        ".inc()/.add()/fetch_add is invisible to operators (rust/src/obs/)"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("rust/src/serve/") or relpath.startswith(
+            "rust/src/coordinator/"
+        )
+
+    def _counted(self, sf: SourceFile, line: int) -> bool:
+        return any(m in sf.window(line, before=1, after=2) for m in _INCREMENT_MARKS)
+
+    def check(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        code = sf.code
+
+        def flag(line: int, message: str) -> None:
+            if sf.in_test(line) or self._counted(sf, line):
+                return
+            findings.append(
+                Finding(
+                    rule=self.id,
+                    file=sf.path,
+                    line=line,
+                    message=message,
+                    snippet=snippet(sf, line),
+                )
+            )
+
+        for i, tok in enumerate(code):
+            nxt = code[i + 1] if i + 1 < len(code) else None
+            nx2 = code[i + 2] if i + 2 < len(code) else None
+            # let _ = <expr>;
+            if (
+                tok.kind == IDENT
+                and tok.text == "let"
+                and nxt is not None
+                and nxt.kind == IDENT
+                and nxt.text == "_"
+                and nx2 is not None
+                and nx2.kind == PUNCT
+                and nx2.text == "="
+            ):
+                flag(
+                    tok.line,
+                    "`let _ =` discards a result on a serve/pipeline path — "
+                    "count the drop (.inc() on an obs counter) or handle it",
+                )
+                continue
+            # Err(_) => {}  /  Err(_) => ()
+            if (
+                tok.kind == IDENT
+                and tok.text == "Err"
+                and i + 6 < len(code)
+                and code[i + 1].text == "("
+                and code[i + 2].kind == IDENT
+                and code[i + 2].text == "_"
+                and code[i + 3].text == ")"
+                and code[i + 4].text == "="
+                and code[i + 5].text == ">"
+                and (
+                    (code[i + 6].text == "{" and code[i + 7].text == "}")
+                    or (code[i + 6].text == "(" and code[i + 7].text == ")")
+                )
+            ):
+                flag(
+                    tok.line,
+                    "empty `Err(_)` arm swallows a failure with no counter — "
+                    "increment an obs cell so the error rate is observable",
+                )
+                continue
+            # statement-position `.ok();`
+            if (
+                tok.kind == PUNCT
+                and tok.text == "."
+                and nxt is not None
+                and nxt.kind == IDENT
+                and nxt.text == "ok"
+                and nx2 is not None
+                and nx2.text == "("
+                and i + 4 < len(code)
+                and code[i + 3].text == ")"
+                and code[i + 4].text == ";"
+            ):
+                flag(
+                    tok.line,
+                    "statement-position `.ok();` throws the error away — "
+                    "count it or propagate it; silent drops defeat the "
+                    "telemetry contract",
+                )
+        return findings

@@ -1,0 +1,38 @@
+//! OBS fixture — every way to swallow an error invisibly.
+
+pub struct Worker {
+    tx: std::sync::mpsc::Sender<u32>,
+}
+
+impl Worker {
+    pub fn reply(&self, v: u32) {
+        // 1. silently dropped send: the response was computed, the client
+        //    hung up, and nothing records it
+        let _ = self.tx.send(v);
+    }
+
+    pub fn drain(&self, r: Result<u32, String>) -> u32 {
+        // 2. empty error arm
+        match r {
+            Ok(v) => v,
+            Err(_) => {}
+        }
+        0
+    }
+
+    pub fn flush(&self, r: Result<(), String>) {
+        // 3. statement-position .ok() discards the Result wholesale
+        r.ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // discards inside tests are fine — no operator is watching a test
+    #[test]
+    fn drops_allowed_here() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        drop(rx);
+        let _ = tx.send(1);
+    }
+}

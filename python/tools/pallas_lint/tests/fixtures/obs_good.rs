@@ -1,0 +1,41 @@
+//! OBS fixture — the same discard sites, made visible to the registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+pub struct Worker {
+    tx: std::sync::mpsc::Sender<u32>,
+    dropped_replies: Counter,
+    write_failures: Counter,
+}
+
+impl Worker {
+    pub fn reply(&self, v: u32) {
+        // drop counted: the registry sees every hung-up receiver
+        if self.tx.send(v).is_err() {
+            self.dropped_replies.inc();
+        }
+    }
+
+    pub fn drain(&self, r: Result<u32, String>) -> u32 {
+        match r {
+            Ok(v) => v,
+            Err(_) => {
+                self.write_failures.inc();
+                0
+            }
+        }
+    }
+
+    pub fn flush(&self, r: Result<(), String>) -> Option<()> {
+        // value-position .ok() is a conversion, not a discard
+        r.ok()
+    }
+}

@@ -20,6 +20,7 @@ from pallas_lint import engine
 from pallas_lint.frontend import SourceFile, normalize, tokenize
 from pallas_lint.rules.accumulation import AccumulationContract
 from pallas_lint.rules.lock_discipline import LockDiscipline
+from pallas_lint.rules.obs_drop import ObsVisibleDrops
 from pallas_lint.rules.panic_free import PanicFreeWorkers
 from pallas_lint.rules.q_positivity import QPositivity
 from pallas_lint.rules.registry_consistency import RegistryConsistency
@@ -96,6 +97,22 @@ def test_panic_rule():
     assert any("indexing" in f.message for f in bad)
     good = rule.check(sf("rust/src/serve/batcher.rs", "panic_good.rs"))
     assert good == [], good
+
+
+def test_obs_rule():
+    rule = ObsVisibleDrops()
+    bad = rule.check(sf("rust/src/serve/obs_bad.rs", "obs_bad.rs"))
+    assert len(bad) == 3, [f.message for f in bad]
+    assert all(f.rule == "OBS" for f in bad)
+    assert any("`let _ =`" in f.message for f in bad)
+    assert any("Err(_)" in f.message for f in bad)
+    assert any(".ok();" in f.message for f in bad)
+    good = rule.check(sf("rust/src/serve/obs_good.rs", "obs_good.rs"))
+    assert good == [], [f.message for f in good]
+    # scope: serve + coordinator trees only — sampler fallbacks have their
+    # own dedicated counters wired in the scratch drain
+    assert rule.applies("rust/src/coordinator/pipeline.rs")
+    assert not rule.applies("rust/src/util/logging.rs")
 
 
 def test_lock_rule():

@@ -159,6 +159,14 @@ impl<'e> Trainer<'e> {
         // background draw: snapshot-backed (pinned generations) or one the
         // trainer never updates (no h dependence). Legacy mutable samplers
         // (the flat w-mirror oracles) run sequentially.
+        // one registry across the run: phase cells register as they are
+        // touched, and the publisher binds its publish-path + sampler
+        // cells up front, so `phases.registry().snapshot()` is the whole
+        // trainer-side telemetry surface (logged as kind:"telemetry")
+        let phases = PhaseTimes::default();
+        if let Some(p) = &publisher {
+            p.lock().expect("publisher poisoned").register_metrics(phases.registry());
+        }
         let overlap_safe = sampler.as_ref().is_some_and(|s| s.snapshot_backed() || !s.needs().h);
         let depth = if cfg.pipeline_depth > 1 && !overlap_safe {
             if sampler.is_some() {
@@ -181,7 +189,7 @@ impl<'e> Trainer<'e> {
             sampler,
             dataset,
             rng,
-            phases: PhaseTimes::default(),
+            phases,
             threads,
             step_count: 0,
             publisher,
@@ -247,6 +255,9 @@ impl<'e> Trainer<'e> {
         );
         let stores = set.stores();
         let offsets = set.offsets().to_vec();
+        // late-built serving mirror: bind its cells into the run registry
+        // like the construction-time publisher would have been
+        set.register_metrics(self.phases.registry());
         self.publisher = Some(Arc::new(Mutex::new(Box::new(set))));
         Ok((stores, offsets))
     }
@@ -592,6 +603,16 @@ impl<'e> Trainer<'e> {
             let loss = self.eval()?;
             let step = (epoch + 1) * steps_per_epoch;
             metrics.log_eval(EvalPoint { epoch: (epoch + 1) as f64, step, loss });
+            // periodic telemetry snapshot (phase cells + publish path +
+            // sampler monitors), interleaved with the eval stream so the
+            // two can be joined on `step`
+            metrics.log_record(
+                "telemetry",
+                vec![
+                    ("step", crate::util::json::Value::num(step as f64)),
+                    ("metrics", self.phases.registry().snapshot().to_value()),
+                ],
+            );
             crate::info!(
                 "[{}] epoch {}/{} eval_loss {:.4} (train {:.4})",
                 metrics.run_id(),
@@ -611,6 +632,15 @@ impl<'e> Trainer<'e> {
         // pipeline wins are visible outside the benches (kss train prints
         // the same breakdown at the end of the run)
         metrics.log_record("phase_times", vec![("timing", self.phases.to_json(self.step_count))]);
+        // final telemetry snapshot, after the drain booked the hidden
+        // publish time — the run's closing registry state
+        metrics.log_record(
+            "telemetry",
+            vec![
+                ("step", crate::util::json::Value::num(self.step_count as f64)),
+                ("metrics", self.phases.registry().snapshot().to_value()),
+            ],
+        );
         Ok(TrainResult {
             final_loss: metrics.final_loss().unwrap_or(f64::NAN),
             best_loss: metrics.best_loss().unwrap_or(f64::NAN),
@@ -800,6 +830,19 @@ mod tests {
             total as usize
         });
         assert!(stats.publishes >= 6, "no publishes happened: {stats:?}");
+        // the run registry unifies all trainer-side telemetry: phase cells,
+        // the publish path, and the sampler internals behind the snapshots
+        let snap = t.phases.registry().snapshot();
+        let lag = snap.hist("kss_publish_lag_seconds").expect("publish lag not registered");
+        assert_eq!(lag.count(), stats.publishes, "publish lag count != publishes");
+        assert!(
+            snap.counter("kss_sampler_draws_total").unwrap_or(0) > 0,
+            "tree draws invisible to the run registry"
+        );
+        assert!(
+            snap.hist("kss_phase_sample_seconds").is_some(),
+            "phase cells missing from the run registry"
+        );
         // published snapshots mirror the trained table: q over the serve
         // snapshots must match the closed form over the live weights
         let w = t.store.out_w().as_f32().unwrap().to_vec();

@@ -42,6 +42,11 @@
 //!   (epoch snapshots + double-buffered publishing), sharded trees behind
 //!   a mass router, request micro-batching, and top-k beam retrieval; the
 //!   `kss serve` subcommand's load generator lives here too.
+//! * [`obs`] — unified telemetry: the global-free atomic metrics
+//!   registry (counters / gauges / log-bucketed histograms), RAII phase
+//!   spans wired through the pipeline/serve/sampler hot layers, online
+//!   sampler-quality monitors (streaming TV-to-exact, eq. (2) ESS), and
+//!   the JSONL + Prometheus-text export paths.
 //! * [`hsm`] — hierarchical softmax baseline (related-work comparison).
 //! * [`bench_harness`] — timing/stats harness used by `benches/` (criterion
 //!   is unavailable offline); emits machine-readable `BENCH_*.json` next to
@@ -55,6 +60,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
 pub mod hsm;
+pub mod obs;
 pub mod ops;
 pub mod runtime;
 pub mod sampler;

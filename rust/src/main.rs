@@ -102,6 +102,11 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "deadline-ms", help: "end-to-end budget (ms)", default: Some("20".into()) },
         OptSpec { name: "miss-threshold", help: "max miss rate", default: Some("0.05".into()) },
         OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
+        OptSpec {
+            name: "metrics-path",
+            help: "write Prometheus exposition here on exit",
+            default: Some("".into()),
+        },
     ]
 }
 
@@ -168,6 +173,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         updates_per_publish: args.get_usize("updates", 32)?,
         deadline: Duration::from_millis(args.get_u64("deadline-ms", 20)?),
         seed: args.get_u64("seed", 42)?,
+        metrics_path: {
+            let p = args.get_string_or("metrics-path", "");
+            if p.is_empty() { None } else { Some(PathBuf::from(p)) }
+        },
     };
     let miss_threshold = args.get_f64("miss-threshold", 0.05)?;
     info!(
@@ -205,6 +214,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         report.publish_build_p95_s * 1e3,
         report.publish_swap_max_s * 1e3
     );
+    match &cfg.metrics_path {
+        Some(p) => println!("  metrics          written to {}", p.display()),
+        // no path given: still surface the exposition so an interactive
+        // run (and the CI log) sees every series without another flag
+        None => println!("--- metrics exposition ---\n{}", report.metrics_text),
+    }
     anyhow::ensure!(
         report.completed > 0,
         "no requests completed — the serving stack is wedged"

@@ -1,0 +1,135 @@
+//! Export paths for a [`MetricsSnapshot`]: Prometheus-style text
+//! exposition and the `kind: "telemetry"` JSONL record shape.
+//!
+//! * [`MetricsSnapshot::render_prometheus`] — the text format served by
+//!   `kss serve --metrics-path` and dumped on load-test exit. Counters
+//!   and gauges render as single samples; histograms render as summaries
+//!   (`{quantile="…"}` + `_sum`/`_count`) plus exact `_min`/`_max`
+//!   samples, so a scrape sees the tails even between quantile points.
+//! * [`MetricsSnapshot::to_value`] — the JSON document logged through the
+//!   coordinator's `MetricsSink` as `{"kind": "telemetry", …}` records,
+//!   interleaved with the existing `eval` / `phase_times` stream (one
+//!   object per registry snapshot; see README "Observability" for how to
+//!   join the two streams on `step`).
+
+use crate::util::json::Value;
+
+use super::histogram::HistogramSnapshot;
+use super::registry::{MetricKind, MetricsSnapshot};
+
+fn kind_str(k: MetricKind) -> &'static str {
+    match k {
+        MetricKind::Counter => "counter",
+        MetricKind::Gauge => "gauge",
+        MetricKind::Histogram => "summary",
+    }
+}
+
+fn hist_to_value(h: &HistogramSnapshot) -> Value {
+    Value::object(vec![
+        ("count", Value::num(h.count() as f64)),
+        ("sum", Value::num(h.sum())),
+        ("mean", Value::num(h.mean())),
+        ("min", Value::num(h.min())),
+        ("max", Value::num(h.max())),
+        ("p50", Value::num(h.p50())),
+        ("p95", Value::num(h.p95())),
+        ("p99", Value::num(h.p99())),
+    ])
+}
+
+impl MetricsSnapshot {
+    /// Prometheus-style text exposition of every registered series.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (m, v) in &self.counters {
+            out.push_str(&format!("# HELP {} {} ({}; {})\n", m.name, m.help, m.layer, m.unit));
+            out.push_str(&format!("# TYPE {} {}\n", m.name, kind_str(m.kind)));
+            out.push_str(&format!("{} {}\n", m.name, v));
+        }
+        for (m, v) in &self.gauges {
+            out.push_str(&format!("# HELP {} {} ({}; {})\n", m.name, m.help, m.layer, m.unit));
+            out.push_str(&format!("# TYPE {} {}\n", m.name, kind_str(m.kind)));
+            out.push_str(&format!("{} {}\n", m.name, v));
+        }
+        for (m, h) in &self.hists {
+            out.push_str(&format!("# HELP {} {} ({}; {})\n", m.name, m.help, m.layer, m.unit));
+            out.push_str(&format!("# TYPE {} {}\n", m.name, kind_str(m.kind)));
+            for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                out.push_str(&format!(
+                    "{}{{quantile=\"{}\"}} {}\n",
+                    m.name,
+                    label,
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("{}_sum {}\n", m.name, h.sum()));
+            out.push_str(&format!("{}_count {}\n", m.name, h.count()));
+            out.push_str(&format!("{}_min {}\n", m.name, h.min()));
+            out.push_str(&format!("{}_max {}\n", m.name, h.max()));
+        }
+        out
+    }
+
+    /// JSON document for the `kind: "telemetry"` MetricsSink record:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}` with
+    /// insertion-ordered keys (first registration wins the position).
+    pub fn to_value(&self) -> Value {
+        let counters: Vec<(&str, Value)> = self
+            .counters
+            .iter()
+            .map(|(m, v)| (m.name.as_str(), Value::num(*v as f64)))
+            .collect();
+        let gauges: Vec<(&str, Value)> =
+            self.gauges.iter().map(|(m, v)| (m.name.as_str(), Value::num(*v))).collect();
+        let hists: Vec<(&str, Value)> =
+            self.hists.iter().map(|(m, h)| (m.name.as_str(), hist_to_value(h))).collect();
+        Value::object(vec![
+            ("counters", Value::object(counters)),
+            ("gauges", Value::object(gauges)),
+            ("histograms", Value::object(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs::registry::MetricsRegistry;
+    use crate::util::json;
+
+    fn sample_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("kss_batcher_shed_total", "requests", "serve", "rejected at admission");
+        let g = reg.gauge("kss_batcher_queue_depth_max", "requests", "serve", "depth watermark");
+        let h = reg.histogram("kss_publish_lag_seconds", "seconds", "serve", "build+swap lag");
+        c.add(12);
+        g.set(5.0);
+        h.record(0.25);
+        h.record(0.25);
+        reg
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = sample_registry().snapshot().render_prometheus();
+        assert!(text.contains("# TYPE kss_batcher_shed_total counter"), "{text}");
+        assert!(text.contains("kss_batcher_shed_total 12"), "{text}");
+        assert!(text.contains("# TYPE kss_batcher_queue_depth_max gauge"), "{text}");
+        assert!(text.contains("kss_batcher_queue_depth_max 5"), "{text}");
+        assert!(text.contains("# TYPE kss_publish_lag_seconds summary"), "{text}");
+        assert!(text.contains("kss_publish_lag_seconds{quantile=\"0.5\"} 0.25"), "{text}");
+        assert!(text.contains("kss_publish_lag_seconds_count 2"), "{text}");
+        assert!(text.contains("kss_publish_lag_seconds_max 0.25"), "{text}");
+    }
+
+    #[test]
+    fn telemetry_value_roundtrips() {
+        let doc = sample_registry().snapshot().to_value();
+        let parsed = json::parse(&doc.to_string_compact()).unwrap();
+        let c = parsed.get("counters").unwrap().get("kss_batcher_shed_total").unwrap();
+        assert_eq!(c.as_f64().unwrap(), 12.0);
+        let h = parsed.get("histograms").unwrap().get("kss_publish_lag_seconds").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(h.get("p50").unwrap().as_f64().unwrap(), 0.25);
+    }
+}

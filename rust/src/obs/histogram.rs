@@ -1,0 +1,454 @@
+//! Log-scale-bucketed histogram with a lock-free record path.
+//!
+//! Bucketing is the IEEE-754 bit trick: for a positive finite f64, the
+//! bit pattern `(v.to_bits() >> 49)` is *monotone in v* — it concatenates
+//! the biased exponent with the top [`SUB_BITS`] mantissa bits — so a
+//! bucket index is one shift and two compares, no log calls. Each octave
+//! splits into `2^SUB_BITS = 8` *linearly spaced* sub-buckets (mantissa
+//! bits, not geometric), so relative bucket width ranges from 12.5% at
+//! the bottom of a binade down to 6.7% at the top; the midpoint
+//! representative bounds the quantile readout error at half the width,
+//! worst case 6.25% relative. The tracked
+//! range is `[2^-30, 2^14)` seconds-or-items (≈ 1ns .. 16384); values
+//! outside clamp into the underflow/overflow buckets, and exact min/max
+//! cells keep the tails honest.
+//!
+//! * **record** — one relaxed `fetch_add` on the bucket + count cells and
+//!   a CAS-add on the sum; no locks, no allocation. Safe to call from
+//!   every serve worker / pipeline thread concurrently.
+//! * **snapshot / merge** — integer bucket adds, so
+//!   `merge(snap(a), snap(b))` equals a snapshot of interleaved records
+//!   exactly (pinned by a property test).
+//! * **quantile** — rank walk over the cumulative counts; the bucket
+//!   representative is clamped into the observed `[min, max]`, which
+//!   makes degenerate (constant-value) histograms read back exactly.
+//!
+//! `python/tools/obs_port_check.py` ports this file line-for-line
+//! (`struct.pack('<d')` reproduces `to_bits`) and checks the same pinned
+//! index vectors as the unit tests below.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: `2^SUB_BITS` buckets per octave.
+pub const SUB_BITS: u32 = 3;
+/// Smallest tracked power of two (values below land in the underflow
+/// bucket 0; `2^-30 ≈ 0.93ns`).
+pub const MIN_EXP: i32 = -30;
+/// First untracked power of two (values `>= 2^14 = 16384` land in the
+/// overflow bucket).
+pub const MAX_EXP: i32 = 14;
+
+const LO_RAW: u64 = ((1023 + MIN_EXP) as u64) << SUB_BITS;
+const HI_RAW: u64 = ((1023 + MAX_EXP) as u64) << SUB_BITS;
+/// Total bucket count: the tracked octaves plus underflow + overflow.
+pub const BUCKETS: usize = (HI_RAW - LO_RAW) as usize + 2;
+
+/// Bucket index of `v`. Non-positive and NaN values count in the
+/// underflow bucket (0) — recorded values are durations/sizes, so those
+/// only arise from upstream bugs and must not panic the recorder.
+#[inline]
+pub fn bucket_of(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let raw = v.to_bits() >> (52 - SUB_BITS);
+    if raw < LO_RAW {
+        0
+    } else if raw >= HI_RAW {
+        BUCKETS - 1
+    } else {
+        (raw - LO_RAW) as usize + 1
+    }
+}
+
+/// Lower bound of bucket `i` for `i in [1, BUCKETS-1]` (the upper bound
+/// of bucket `i` is `bucket_lower(i + 1)`; `bucket_lower(BUCKETS - 1)` is
+/// the overflow threshold `2^MAX_EXP`).
+#[inline]
+pub fn bucket_lower(i: usize) -> f64 {
+    debug_assert!(i >= 1 && i <= BUCKETS - 1);
+    let raw = LO_RAW + (i as u64 - 1);
+    f64::from_bits(raw << (52 - SUB_BITS))
+}
+
+/// Midpoint representative reported for a rank that lands in bucket `i`.
+#[inline]
+fn representative(i: usize) -> f64 {
+    if i == 0 {
+        bucket_lower(1)
+    } else if i >= BUCKETS - 1 {
+        bucket_lower(BUCKETS - 1)
+    } else {
+        0.5 * (bucket_lower(i) + bucket_lower(i + 1))
+    }
+}
+
+/// CAS-add for an f64 stored in an `AtomicU64` (lock-free; the histogram
+/// sum and gauge cells use it).
+#[inline]
+pub(crate) fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Concurrent log-bucketed histogram. All cells are `AtomicU64`; `record`
+/// is wait-free apart from the sum CAS. Construction allocates the one
+/// flat bucket array; recording never allocates.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits of Σv (approximate under heavy contention reordering —
+    /// fp adds commute only approximately — but exact for the
+    /// single-writer phase-timer use).
+    sum_bits: AtomicU64,
+    /// Positive-f64 bit patterns order like the floats, so min/max are
+    /// plain integer `fetch_min`/`fetch_max` (non-positive clamps to 0).
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram(count={})", self.count())
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(u64::MAX),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (seconds, items, …). Lock-free hot path.
+    #[inline]
+    pub fn record(&self, v: f64) {
+        let i = bucket_of(v);
+        // `bucket_of` is range-clamped by construction; `.get()` keeps the
+        // recorder panic-free even if that invariant ever regresses.
+        if let Some(b) = self.buckets.get(i) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, v);
+        let clamped = if v > 0.0 { v } else { 0.0 };
+        self.min_bits.fetch_min(clamped.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(clamped.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record `n` identical observations in one shot — the blocked-flush
+    /// path: hot loops accumulate per-value counts in thread-local plain
+    /// fields (e.g. the draw scratch's per-depth counters) and drain them
+    /// here once per batch, so the per-draw cost is a plain integer add,
+    /// not an atomic.
+    #[inline]
+    pub fn record_n(&self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let i = bucket_of(v);
+        if let Some(b) = self.buckets.get(i) {
+            b.fetch_add(n, Ordering::Relaxed);
+        }
+        self.count.fetch_add(n, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, v * n as f64);
+        let clamped = if v > 0.0 { v } else { 0.0 };
+        self.min_bits.fetch_min(clamped.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(clamped.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy for aggregation and readout.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            min_bits: self.min_bits.load(Ordering::Relaxed),
+            max_bits: self.max_bits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-integer snapshot of a [`Histogram`]; merging two snapshots is
+/// elementwise addition, so shard aggregation is exact.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min_bits: u64,
+    max_bits: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        HistogramSnapshot {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min_bits: u64::MAX,
+            max_bits: 0,
+        }
+    }
+
+    /// Fold `other` into `self`: bucket-wise integer adds, min/max of the
+    /// extremes. `merge(snap_a, snap_b)` equals the snapshot of the
+    /// interleaved record stream exactly (bucket counts and count; the fp
+    /// sum is associative-order dependent only in the last ulps).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min_bits = self.min_bits.min(other.min_bits);
+        self.max_bits = self.max_bits.max(other.max_bits);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Raw bucket occupancies (length [`BUCKETS`]); index 0 is the
+    /// underflow bucket, the last is overflow.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 || self.min_bits == u64::MAX {
+            0.0
+        } else {
+            f64::from_bits(self.min_bits)
+        }
+    }
+
+    /// Largest recorded value (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.max_bits)
+        }
+    }
+
+    /// Quantile readout: the midpoint representative of the bucket holding
+    /// the `ceil(q·count)`-th smallest observation, clamped into the exact
+    /// observed `[min, max]`. Relative error vs an exact sort is bounded
+    /// by half a bucket width (≈ 4.6%); a constant-valued histogram reads
+    /// back its value exactly thanks to the clamp.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += *b;
+            if cum >= rank {
+                return representative(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Pinned index vectors — the same table is asserted by
+    /// `python/tools/obs_port_check.py`; a change to the bucketing
+    /// constants must update both or CI fails.
+    #[test]
+    fn bucket_pins() {
+        assert_eq!(BUCKETS, 354);
+        for (v, want) in [
+            (1e-9, 1usize),
+            (1e-6, 81),
+            (1e-3, 161),
+            (0.5, 233),
+            (1.0, 241),
+            (1.5, 245),
+            (3.0, 253),
+            (1000.0, 320),
+            (20000.0, 353),
+            (0.0, 0),
+            (-1.0, 0),
+            (f64::NAN, 0),
+        ] {
+            assert_eq!(bucket_of(v), want, "bucket_of({v})");
+        }
+        assert_eq!(bucket_lower(BUCKETS - 1), 16384.0);
+        assert!((bucket_lower(161) - 0.0009765625).abs() < 1e-18);
+    }
+
+    #[test]
+    fn bucket_monotone_in_value() {
+        let mut rng = Rng::new(7);
+        let mut vals: Vec<f64> = (0..4000)
+            .map(|_| {
+                let e = rng.f64() * 50.0 - 32.0; // 2^-32 .. 2^18 incl. clamps
+                2f64.powf(e)
+            })
+            .collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in vals.windows(2) {
+            assert!(bucket_of(w[0]) <= bucket_of(w[1]), "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn merge_equals_interleaved() {
+        let mut rng = Rng::new(11);
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        for i in 0..5000 {
+            let v = rng.f64() * 1e3 + 1e-6;
+            both.record(v);
+            if i % 2 == 0 { &a } else { &b }.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let full = both.snapshot();
+        assert_eq!(merged.buckets, full.buckets);
+        assert_eq!(merged.count(), full.count());
+        assert_eq!(merged.min_bits, full.min_bits);
+        assert_eq!(merged.max_bits, full.max_bits);
+        assert!((merged.sum() - full.sum()).abs() <= 1e-9 * full.sum().abs());
+    }
+
+    #[test]
+    fn quantile_error_bounded_vs_exact_sort() {
+        let mut rng = Rng::new(23);
+        for trial in 0..20 {
+            let h = Histogram::new();
+            let n = 200 + (trial * 37) % 800;
+            let mut vals: Vec<f64> = (0..n)
+                .map(|_| 2f64.powf(rng.f64() * 24.0 - 18.0)) // 2^-18..2^6
+                .collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let s = h.snapshot();
+            for &q in &[0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let rank = ((q * n as f64).ceil() as usize).max(1);
+                let exact = vals[rank - 1];
+                let got = s.quantile(q);
+                let rel = (got - exact).abs() / exact;
+                // worst-case midpoint error is 6.25% (half the 12.5%-wide
+                // bottom sub-bucket of a binade); the 2^-18..2^6 stream
+                // does hit it, so the bound is the real invariant
+                assert!(rel <= 0.0625, "trial {trial} q {q}: {got} vs exact {exact} (rel {rel})");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_value_reads_back_exact() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(0.125);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.p50(), 0.125);
+        assert_eq!(s.p99(), 0.125);
+        assert_eq!(s.min(), 0.125);
+        assert_eq!(s.max(), 0.125);
+        assert!((s.mean() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_recorders_consistent() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + t);
+                    let mut local_sum = 0.0;
+                    for _ in 0..10_000 {
+                        let v = rng.f64() + 1e-3;
+                        h.record(v);
+                        local_sum += v;
+                    }
+                    local_sum
+                })
+            })
+            .collect();
+        let expect_sum: f64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        let s = h.snapshot();
+        assert_eq!(s.count(), 40_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 40_000);
+        // CAS-add loses no updates; only summation order differs.
+        assert!((s.sum() - expect_sum).abs() <= 1e-6 * expect_sum);
+        assert!(s.min() >= 1e-3 && s.max() < 1.0 + 1e-3 + 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_benign() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Unified telemetry: atomic metrics registry, spans, and online
+//! sampler-quality monitors.
+//!
+//! The paper's central claim is a bias/sample-size/speed trade-off
+//! ("kernel based sampling results in low bias with few samples"); this
+//! module is the layer that makes the trade-off *observable while the
+//! system runs* rather than only in offline benches:
+//!
+//! * [`histogram`] — log-scale-bucketed latency/size histograms with a
+//!   lock-free hot path (one relaxed `fetch_add` into an `AtomicU64`
+//!   bucket array per record) and exact snapshot/merge semantics, so the
+//!   same blocked-accumulation discipline as `ops/` holds: hot threads
+//!   only ever touch atomics, aggregation happens on cold reader paths.
+//! * [`registry`] — a **global-free** [`MetricsRegistry`]: no statics, no
+//!   `lazy_static`; owners construct a registry, components hand their
+//!   already-live atomic cells to it under stable names, and exports read
+//!   a consistent [`MetricsSnapshot`]. Registering is mutex-guarded (cold,
+//!   startup-only); recording never takes a lock.
+//! * [`span`] — RAII phase timers ([`span()`]) recording elapsed seconds
+//!   into a histogram on drop; the re-implemented
+//!   [`crate::util::stats::PhaseTimes`] is a thin adapter over these
+//!   cells, so trainer phase reports and telemetry exports share storage.
+//! * [`monitor`] — online sampler-quality estimators over eq. (2)
+//!   importance weights: a reservoir-based streaming TV-to-exact-softmax
+//!   estimator and an effective-sample-size (ESS) gauge, run on a
+//!   configurable stride so steady-state overhead stays bounded (the
+//!   `obs_overhead` bench pins < 3% at the default stride).
+//! * [`export`] — the two export paths: `kind: "telemetry"` JSONL records
+//!   for the coordinator's `MetricsSink` stream, and Prometheus-style
+//!   text exposition (`kss serve --metrics-path`, load-test exit).
+//!
+//! Every algorithmic piece (bucket index/merge/quantile, TV/ESS) has a
+//! line-for-line Python port in `python/tools/obs_port_check.py`, run in
+//! the no-toolchain CI job against the same pinned vectors as the unit
+//! tests here.
+
+pub mod export;
+pub mod histogram;
+pub mod monitor;
+pub mod registry;
+pub mod span;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use monitor::{ess_fraction, tv_from_pairs, QualityMonitor};
+pub use registry::{Counter, Gauge, MetricKind, MetricsRegistry, MetricsSnapshot};
+pub use span::{span, Span};

@@ -1,0 +1,274 @@
+//! Online sampler-quality monitors over eq. (2) importance weights.
+//!
+//! The paper's eq. (2) trains on adjusted logits `o'_i = o_i − ln(m·q_i)`;
+//! the quality of a proposal `q` is exactly how well the induced
+//! importance weights behave. Two streaming estimators, both cheap enough
+//! to run on a stride inside the hot sampler:
+//!
+//! * **TV-to-exact** — for a class `c` drawn from the proposal
+//!   (which is precisely what the sampler emits), the identity
+//!   `TV(p, q) = ½·E_{c∼q} |p_c/q_c − 1|` turns total-variation distance
+//!   into a per-draw statistic. `p_c = exp(o_c)/Z` needs the unknown
+//!   softmax partition `Z`, which the *same* draws estimate unbiasedly as
+//!   `Ẑ = mean(exp(o_c)/q_c)`. [`QualityMonitor`] keeps a bounded
+//!   reservoir (Algorithm R with a deterministic splitmix64 coin, so the
+//!   Python port reproduces it bit-for-bit) of recent `(o, q)` pairs and
+//!   reads the plug-in estimate out of it.
+//! * **ESS** — per strided example, the effective sample size of the
+//!   eq. (2) weights: `u = softmax(o − ln(m·q))`, `ESS = 1/Σu²  ∈ [1, m]`.
+//!   [`ess_fraction`] reports `ESS/m`: 1.0 means the m draws carry full
+//!   information (q ∝ p), → 1/m means one draw dominates (bad proposal or
+//!   collapsed q).
+//!
+//! Both estimators are validated against the exact `util::stats`
+//! implementations in the unit tests below and re-validated by the Python
+//! port (`python/tools/obs_port_check.py`).
+
+use crate::util::rng::splitmix64;
+
+/// Effective-sample-size fraction `ESS/m ∈ (0, 1]` of one example's
+/// eq. (2) importance weights. `scored` holds `(o_i, q_i)` per drawn
+/// class: raw logit and proposal probability. Pairs with non-positive or
+/// non-finite `q` are skipped (they indicate an upstream q-positivity
+/// breach, counted separately by the sampler's own guards); returns
+/// `None` when nothing valid remains.
+pub fn ess_fraction(scored: &[(f64, f64)]) -> Option<f64> {
+    let m = scored.len();
+    if m == 0 {
+        return None;
+    }
+    // adjusted logits a_i = o_i − ln(m·q_i), max-shifted before exp
+    let mut adj = Vec::with_capacity(m);
+    for &(o, q) in scored {
+        if q > 0.0 && q.is_finite() && o.is_finite() {
+            adj.push(o - (m as f64 * q).ln());
+        }
+    }
+    if adj.is_empty() {
+        return None;
+    }
+    let max_a = adj.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0f64;
+    for a in adj.iter_mut() {
+        *a = (*a - max_a).exp();
+        z += *a;
+    }
+    if !(z > 0.0 && z.is_finite()) {
+        return None;
+    }
+    let sum_sq: f64 = adj.iter().map(|&u| (u / z) * (u / z)).sum();
+    Some(1.0 / sum_sq / adj.len() as f64)
+}
+
+/// Plug-in streaming TV-to-exact estimate from `(o, q)` pairs whose
+/// classes were drawn from `q`: `Ẑ = mean(exp(o − M)/q)`,
+/// `TV ≈ ½·mean(|w/Ẑ − 1|)`. Exact in expectation (see module docs);
+/// `None` when no valid pairs or a degenerate `Ẑ`.
+pub fn tv_from_pairs(pairs: &[(f64, f64)]) -> Option<f64> {
+    let mut max_o = f64::NEG_INFINITY;
+    for &(o, q) in pairs {
+        if q > 0.0 && q.is_finite() && o.is_finite() {
+            max_o = max_o.max(o);
+        }
+    }
+    if !max_o.is_finite() {
+        return None;
+    }
+    let mut weights = Vec::with_capacity(pairs.len());
+    let mut zhat = 0.0f64;
+    for &(o, q) in pairs {
+        if q > 0.0 && q.is_finite() && o.is_finite() {
+            let w = (o - max_o).exp() / q;
+            weights.push(w);
+            zhat += w;
+        }
+    }
+    if weights.is_empty() {
+        return None;
+    }
+    zhat /= weights.len() as f64;
+    if !(zhat > 0.0 && zhat.is_finite()) {
+        return None;
+    }
+    let dev: f64 = weights.iter().map(|&w| (w / zhat - 1.0).abs()).sum();
+    Some(0.5 * dev / weights.len() as f64)
+}
+
+/// Default reservoir capacity (pairs kept for the TV estimate).
+pub const DEFAULT_RESERVOIR: usize = 512;
+/// Default example stride between monitor observations: one in 1024
+/// examples pays the O(m·d) exact-scoring cost, keeping steady-state
+/// overhead under the 3% contract (`benches/obs_overhead.rs`).
+pub const DEFAULT_STRIDE: u64 = 1024;
+
+/// Bounded reservoir of `(o, q)` pairs (Algorithm R). The replacement
+/// coin is splitmix64 of the pair ordinal — deterministic given the
+/// ingestion sequence, so runs and the Python port are reproducible
+/// without threading an `Rng` through the sampler hot path.
+pub struct QualityMonitor {
+    cap: usize,
+    seen_pairs: u64,
+    reservoir: Vec<(f64, f64)>,
+}
+
+impl Default for QualityMonitor {
+    fn default() -> Self {
+        Self::new(DEFAULT_RESERVOIR)
+    }
+}
+
+impl QualityMonitor {
+    pub fn new(cap: usize) -> Self {
+        QualityMonitor { cap: cap.max(1), seen_pairs: 0, reservoir: Vec::new() }
+    }
+
+    /// Ingest one example's scored draws into the reservoir.
+    pub fn observe(&mut self, scored: &[(f64, f64)]) {
+        for &(o, q) in scored {
+            if !(q > 0.0 && q.is_finite() && o.is_finite()) {
+                continue;
+            }
+            self.seen_pairs += 1;
+            if self.reservoir.len() < self.cap {
+                self.reservoir.push((o, q));
+            } else {
+                let mut s = self.seen_pairs;
+                let j = splitmix64(&mut s) % self.seen_pairs;
+                if let Some(slot) = self.reservoir.get_mut(j as usize) {
+                    *slot = (o, q);
+                }
+            }
+        }
+    }
+
+    /// Current TV-to-exact estimate over the reservoir.
+    pub fn tv_estimate(&self) -> Option<f64> {
+        tv_from_pairs(&self.reservoir)
+    }
+
+    /// Total valid pairs ever ingested.
+    pub fn seen_pairs(&self) -> u64 {
+        self.seen_pairs
+    }
+
+    /// Pairs currently held (≤ cap).
+    pub fn len(&self) -> usize {
+        self.reservoir.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reservoir.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::tv_distance;
+
+    fn softmax(o: &[f64]) -> Vec<f64> {
+        let m = o.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = o.iter().map(|&x| (x - m).exp()).collect();
+        let z: f64 = e.iter().sum();
+        e.iter().map(|&x| x / z).collect()
+    }
+
+    #[test]
+    fn ess_full_when_q_matches_p() {
+        // o_i = ln(m·q_i) ⇒ adjusted logits all zero ⇒ uniform weights
+        let m = 16;
+        let scored: Vec<(f64, f64)> = (0..m)
+            .map(|i| {
+                let q = (i + 1) as f64 / ((m * (m + 1) / 2) as f64);
+                ((m as f64 * q).ln(), q)
+            })
+            .collect();
+        let f = ess_fraction(&scored).unwrap();
+        assert!((f - 1.0).abs() < 1e-12, "ess fraction {f}");
+    }
+
+    #[test]
+    fn ess_collapses_under_dominant_weight() {
+        let m = 32usize;
+        let mut scored = vec![(0.0, 1.0 / m as f64); m];
+        scored[0].0 = 50.0; // one draw dominates
+        let f = ess_fraction(&scored).unwrap();
+        assert!(f < 1.5 / m as f64, "ess fraction {f} should collapse toward 1/m");
+    }
+
+    #[test]
+    fn ess_guards_degenerate_input() {
+        assert_eq!(ess_fraction(&[]), None);
+        assert_eq!(ess_fraction(&[(1.0, 0.0), (f64::NAN, 0.5)]), None);
+        // invalid pairs are skipped, not fatal
+        let f = ess_fraction(&[(0.0, 0.5), (0.0, 0.0)]).unwrap();
+        assert!((f - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tv_exact_under_uniform_proposal() {
+        // q uniform ⇒ the unweighted mean over all classes IS E_{c~q},
+        // so the plug-in estimate equals TV(softmax(o), uniform) exactly
+        let o = [1.0, -0.5, 2.0, 0.0, -1.5, 0.25];
+        let n = o.len();
+        let q = vec![1.0 / n as f64; n];
+        let pairs: Vec<(f64, f64)> = o.iter().map(|&oi| (oi, 1.0 / n as f64)).collect();
+        let got = tv_from_pairs(&pairs).unwrap();
+        let exact = tv_distance(&softmax(&o), &q);
+        assert!((got - exact).abs() < 1e-12, "{got} vs {exact}");
+    }
+
+    #[test]
+    fn tv_near_zero_when_proposal_is_exact() {
+        let o = [1.0, -0.5, 2.0, 0.0];
+        let p = softmax(&o);
+        let pairs: Vec<(f64, f64)> = o.iter().zip(&p).map(|(&oi, &pi)| (oi, pi)).collect();
+        let got = tv_from_pairs(&pairs).unwrap();
+        assert!(got < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn reservoir_statistical_tv_close_to_exact() {
+        // draw classes from q, stream through the monitor, compare the
+        // reservoir estimate against the exact TV(p, q)
+        let n = 64;
+        let mut rng = Rng::new(42);
+        let o: Vec<f64> = (0..n).map(|_| rng.f64() * 3.0 - 1.5).collect();
+        let mut q: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
+        let zq: f64 = q.iter().sum();
+        q.iter_mut().for_each(|x| *x /= zq);
+        let mut cum = vec![0.0f64; n];
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += q[i];
+            cum[i] = acc;
+        }
+        let mut mon = QualityMonitor::new(4096);
+        for _ in 0..20_000 {
+            let u = rng.f64() * acc;
+            let c = cum.partition_point(|&x| x < u).min(n - 1);
+            mon.observe(&[(o[c], q[c])]);
+        }
+        let est = mon.tv_estimate().unwrap();
+        let exact = tv_distance(&softmax(&o), &q);
+        assert!(
+            (est - exact).abs() < 0.05 + 0.15 * exact,
+            "reservoir TV {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn reservoir_bounded_and_deterministic() {
+        let mut a = QualityMonitor::new(8);
+        let mut b = QualityMonitor::new(8);
+        for i in 0..1000 {
+            let pair = [(i as f64 * 0.01, 1.0 / (1.0 + i as f64))];
+            a.observe(&pair);
+            b.observe(&pair);
+        }
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.seen_pairs(), 1000);
+        assert_eq!(a.reservoir, b.reservoir);
+    }
+}

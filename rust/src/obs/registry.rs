@@ -1,0 +1,394 @@
+//! Global-free metrics registry.
+//!
+//! There are no statics: the owner of a subsystem (Trainer, the serve
+//! load generator, a bench) constructs a [`MetricsRegistry`], and each
+//! component *binds* its already-live atomic cells to it under a stable
+//! name (`register_*`) or asks the registry to mint one (`counter` /
+//! `gauge` / `histogram`). Components therefore work instrumented even
+//! with no registry in sight — their cells are plain `Arc`s — and a
+//! registry is only the naming/export layer on top.
+//!
+//! Registration takes a mutex (cold, startup-only). The hot path —
+//! `Counter::inc`, `Gauge::set`, `Histogram::record` — never locks.
+//!
+//! Duplicate names are legal and meaningful: the four shards of a
+//! [`crate::serve::ShardSet`] each register their publisher cells under
+//! the same names, and [`MetricsRegistry::snapshot`] aggregates by name
+//! (counters sum, histograms merge, gauges take the max), so exports see
+//! one fleet-wide series per metric.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::{atomic_f64_add, Histogram, HistogramSnapshot};
+
+/// Monotone event counter (`AtomicU64`, relaxed).
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Counter({})", self.get())
+    }
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 cell with monotone helpers (`set_max` keeps a
+/// high-watermark, `add` accumulates — both lock-free).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge { bits: AtomicU64::new(0.0f64.to_bits()) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if larger (high-watermark). Positive-f64
+    /// bit patterns order like the floats, so this is one `fetch_max`;
+    /// non-positive values are ignored (the watermark starts at 0).
+    #[inline]
+    pub fn set_max(&self, v: f64) {
+        if v > 0.0 {
+            self.bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulate into the gauge (CAS-add; for rarely-written cells).
+    #[inline]
+    pub fn add(&self, v: f64) {
+        atomic_f64_add(&self.bits, v);
+    }
+
+    /// Lower the gauge to `v` if smaller, treating the initial 0.0 as
+    /// "no observation yet" (so a min-watermark like min-q-observed works
+    /// without a NaN/inf sentinel that the JSON export couldn't carry).
+    /// Only positive finite values are accepted.
+    #[inline]
+    pub fn set_min(&self, v: f64) {
+        if !(v > 0.0 && v.is_finite()) {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cf = f64::from_bits(cur);
+            if cf != 0.0 && cf <= v {
+                return;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// What a registered cell is — drives exposition rendering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// Name + documentation of one registered metric. `unit` and `layer` are
+/// free-form short strings surfaced in the README metric catalog and the
+/// JSONL export (`layer` is the subsystem: sampler / serve / pipeline /
+/// trainer).
+#[derive(Clone, Debug)]
+pub struct MetricMeta {
+    pub name: String,
+    pub kind: MetricKind,
+    pub unit: &'static str,
+    pub layer: &'static str,
+    pub help: &'static str,
+}
+
+enum Cell {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+struct Entry {
+    meta: MetricMeta,
+    cell: Cell,
+}
+
+/// The registry: an insertion-ordered list of named cells.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn push(&self, meta: MetricMeta, cell: Cell) {
+        // registration is cold; recover a poisoned registry rather than
+        // propagate (a panicked registrant must not take telemetry down)
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.push(Entry { meta, cell });
+    }
+
+    /// Mint + register a counter.
+    pub fn counter(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+    ) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register_counter(name, unit, layer, help, Arc::clone(&c));
+        c
+    }
+
+    /// Mint + register a gauge.
+    pub fn gauge(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+    ) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register_gauge(name, unit, layer, help, Arc::clone(&g));
+        g
+    }
+
+    /// Mint + register a histogram.
+    pub fn histogram(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+    ) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register_histogram(name, unit, layer, help, Arc::clone(&h));
+        h
+    }
+
+    /// Bind an existing counter cell under `name`.
+    pub fn register_counter(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+        cell: Arc<Counter>,
+    ) {
+        self.push(
+            MetricMeta { name: name.to_string(), kind: MetricKind::Counter, unit, layer, help },
+            Cell::Counter(cell),
+        );
+    }
+
+    /// Bind an existing gauge cell under `name`.
+    pub fn register_gauge(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+        cell: Arc<Gauge>,
+    ) {
+        self.push(
+            MetricMeta { name: name.to_string(), kind: MetricKind::Gauge, unit, layer, help },
+            Cell::Gauge(cell),
+        );
+    }
+
+    /// Bind an existing histogram cell under `name`.
+    pub fn register_histogram(
+        &self,
+        name: &str,
+        unit: &'static str,
+        layer: &'static str,
+        help: &'static str,
+        cell: Arc<Histogram>,
+    ) {
+        self.push(
+            MetricMeta { name: name.to_string(), kind: MetricKind::Histogram, unit, layer, help },
+            Cell::Hist(cell),
+        );
+    }
+
+    /// Point-in-time readout, aggregated by name (first-registration
+    /// order): duplicate counters sum, duplicate histograms merge,
+    /// duplicate gauges keep the max (shards report the worst case).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut snap = MetricsSnapshot {
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            hists: Vec::new(),
+        };
+        for e in g.iter() {
+            match &e.cell {
+                Cell::Counter(c) => {
+                    let v = c.get();
+                    match snap.counters.iter_mut().find(|(m, _)| m.name == e.meta.name) {
+                        Some((_, acc)) => *acc += v,
+                        None => snap.counters.push((e.meta.clone(), v)),
+                    }
+                }
+                Cell::Gauge(c) => {
+                    let v = c.get();
+                    match snap.gauges.iter_mut().find(|(m, _)| m.name == e.meta.name) {
+                        Some((_, acc)) => *acc = acc.max(v),
+                        None => snap.gauges.push((e.meta.clone(), v)),
+                    }
+                }
+                Cell::Hist(h) => {
+                    let v = h.snapshot();
+                    match snap.hists.iter_mut().find(|(m, _)| m.name == e.meta.name) {
+                        Some((_, acc)) => acc.merge(&v),
+                        None => snap.hists.push((e.meta.clone(), v)),
+                    }
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// Aggregated point-in-time view of a registry — the input to both export
+/// formats (see `obs::export`) and to test assertions.
+pub struct MetricsSnapshot {
+    pub counters: Vec<(MetricMeta, u64)>,
+    pub gauges: Vec<(MetricMeta, f64)>,
+    pub hists: Vec<(MetricMeta, HistogramSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value by name (tests / assertions).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(m, _)| m.name == name).map(|(_, v)| *v)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(m, _)| m.name == name).map(|(_, v)| *v)
+    }
+
+    /// Histogram snapshot by name.
+    pub fn hist(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.hists.iter().find(|(m, _)| m.name == name).map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_register_and_read_back() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("kss_test_total", "events", "test", "a counter");
+        let g = reg.gauge("kss_test_depth", "items", "test", "a gauge");
+        let h = reg.histogram("kss_test_latency_seconds", "seconds", "test", "a histogram");
+        c.add(3);
+        c.inc();
+        g.set(2.5);
+        h.record(0.25);
+        h.record(0.25);
+        let s = reg.snapshot();
+        assert_eq!(s.counter("kss_test_total"), Some(4));
+        assert_eq!(s.gauge("kss_test_depth"), Some(2.5));
+        let hs = s.hist("kss_test_latency_seconds").unwrap();
+        assert_eq!(hs.count(), 2);
+        assert_eq!(hs.p50(), 0.25);
+        assert_eq!(s.counter("missing"), None);
+    }
+
+    #[test]
+    fn duplicate_names_aggregate() {
+        let reg = MetricsRegistry::new();
+        // two shards binding the same series names
+        let c0 = Arc::new(Counter::new());
+        let c1 = Arc::new(Counter::new());
+        reg.register_counter("kss_shard_total", "events", "serve", "per-shard", Arc::clone(&c0));
+        reg.register_counter("kss_shard_total", "events", "serve", "per-shard", Arc::clone(&c1));
+        let g0 = Arc::new(Gauge::new());
+        let g1 = Arc::new(Gauge::new());
+        reg.register_gauge("kss_shard_peak", "items", "serve", "per-shard", Arc::clone(&g0));
+        reg.register_gauge("kss_shard_peak", "items", "serve", "per-shard", Arc::clone(&g1));
+        let h0 = Arc::new(Histogram::new());
+        let h1 = Arc::new(Histogram::new());
+        reg.register_histogram("kss_shard_lat", "seconds", "serve", "per-shard", Arc::clone(&h0));
+        reg.register_histogram("kss_shard_lat", "seconds", "serve", "per-shard", Arc::clone(&h1));
+        c0.add(2);
+        c1.add(5);
+        g0.set(1.0);
+        g1.set(3.0);
+        h0.record(0.5);
+        h1.record(0.5);
+        let s = reg.snapshot();
+        assert_eq!(s.counter("kss_shard_total"), Some(7));
+        assert_eq!(s.gauge("kss_shard_peak"), Some(3.0));
+        assert_eq!(s.hist("kss_shard_lat").unwrap().count(), 2);
+        // aggregation by name: one row per series
+        assert_eq!(s.counters.len(), 1);
+        assert_eq!(s.gauges.len(), 1);
+        assert_eq!(s.hists.len(), 1);
+    }
+
+    #[test]
+    fn gauge_watermark_and_add() {
+        let g = Gauge::new();
+        g.set_max(2.0);
+        g.set_max(1.0);
+        assert_eq!(g.get(), 2.0);
+        g.set_max(-5.0); // ignored
+        assert_eq!(g.get(), 2.0);
+        let g2 = Gauge::new();
+        g2.add(0.5);
+        g2.add(0.25);
+        assert!((g2.get() - 0.75).abs() < 1e-15);
+    }
+}

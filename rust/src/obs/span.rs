@@ -1,0 +1,95 @@
+//! RAII phase spans: `span(&hist)` starts a timer whose elapsed seconds
+//! land in the histogram when the guard drops (or explicitly via
+//! [`Span::stop`], which also returns the elapsed time so callers that
+//! already thread timings — the pipeline driver, `PhaseTimes` — don't
+//! measure twice). One `Instant::now()` on entry, one `record` on exit;
+//! no allocation, no locks.
+
+use std::time::Instant;
+
+use super::histogram::Histogram;
+
+/// Live span guard. Records on drop unless [`Span::stop`] was called.
+pub struct Span<'a> {
+    hist: &'a Histogram,
+    t0: Instant,
+    armed: bool,
+}
+
+/// Open a span over `hist`.
+#[inline]
+pub fn span(hist: &Histogram) -> Span<'_> {
+    Span { hist, t0: Instant::now(), armed: true }
+}
+
+impl Span<'_> {
+    /// Close the span now, record, and return the elapsed seconds.
+    #[inline]
+    pub fn stop(mut self) -> f64 {
+        self.armed = false;
+        let secs = self.t0.elapsed().as_secs_f64();
+        self.hist.record(secs);
+        secs
+    }
+
+    /// Abandon the span without recording (error paths whose partial
+    /// timing would pollute the distribution).
+    #[inline]
+    pub fn cancel(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.hist.record(self.t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// Time a closure into `hist`, passing its return value through.
+#[inline]
+pub fn time<R>(hist: &Histogram, f: impl FnOnce() -> R) -> R {
+    let _s = span(hist);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_on_drop() {
+        let h = Histogram::new();
+        {
+            let _s = span(&h);
+            std::hint::black_box(2 + 2);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn stop_records_once_and_returns_elapsed() {
+        let h = Histogram::new();
+        let s = span(&h);
+        let secs = s.stop();
+        assert!(secs >= 0.0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn cancel_discards() {
+        let h = Histogram::new();
+        span(&h).cancel();
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn time_passes_value_through() {
+        let h = Histogram::new();
+        let v = time(&h, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -65,11 +65,14 @@
 //! instead of poisoning descent probabilities.
 
 use super::FeatureMap;
+use crate::obs::monitor::DEFAULT_STRIDE;
+use crate::obs::{ess_fraction, Counter, Gauge, Histogram, MetricsRegistry, QualityMonitor};
 use crate::ops;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{par_chunks_mut, Pool};
 use anyhow::Result;
+use std::sync::{Arc, Mutex};
 
 const NO_CHILD: u32 = u32::MAX;
 
@@ -130,6 +133,8 @@ pub struct KernelTreeSampler<M: FeatureMap> {
     scratch_pool: Pool<DrawScratch>,
     /// Draws + updates performed (ops accounting for the benches).
     pub stats: TreeStats,
+    /// Telemetry cells (Arc-shared with clones; see [`TreeObs`]).
+    obs: TreeObs,
 }
 
 /// Operation counters (exposed so benches can report per-op costs).
@@ -138,6 +143,154 @@ pub struct TreeStats {
     pub draws: u64,
     pub updates: u64,
     pub node_visits: u64,
+}
+
+/// Shared telemetry cells for one tree and every clone of it.
+///
+/// The draw hot path never touches these atomics directly: each
+/// [`DrawScratch`] accumulates plain-integer locals and
+/// [`KernelTreeSampler::put_scratch`] drains them in one blocked flush per
+/// checkout (the same accumulate-then-merge discipline as `ops/`). The
+/// cells are `Arc`-shared so the serve layer's snapshot clones report into
+/// the same series as the tree they were published from, and
+/// [`TreeObs::register_into`] binds them to any number of registries.
+///
+/// The quality monitor runs on `monitor_stride` (examples): one strided
+/// example pays the O(m·d) exact re-scoring of its drawn classes, feeding
+/// the reservoir TV estimator and the eq. (2) ESS gauge. The stride is
+/// per-scratch, so with worker pooling it is approximate — a sampling
+/// cadence, not an exact decimation.
+#[derive(Clone)]
+pub struct TreeObs {
+    /// Master switch: when false, draws skip all scratch-local
+    /// bookkeeping (the `obs_overhead` bench compares the two states).
+    pub enabled: bool,
+    /// Examples between quality-monitor observations (0 disables the
+    /// monitor; counters and depth accounting still run).
+    pub monitor_stride: u64,
+    draws: Arc<Counter>,
+    zero_mass: Arc<Counter>,
+    degenerate_branches: Arc<Counter>,
+    exact_fallbacks: Arc<Counter>,
+    depth: Arc<Histogram>,
+    min_q: Arc<Gauge>,
+    tv: Arc<Gauge>,
+    ess: Arc<Gauge>,
+    monitor: Arc<Mutex<QualityMonitor>>,
+}
+
+impl Default for TreeObs {
+    fn default() -> Self {
+        TreeObs {
+            enabled: true,
+            monitor_stride: DEFAULT_STRIDE,
+            draws: Arc::new(Counter::new()),
+            zero_mass: Arc::new(Counter::new()),
+            degenerate_branches: Arc::new(Counter::new()),
+            exact_fallbacks: Arc::new(Counter::new()),
+            depth: Arc::new(Histogram::new()),
+            min_q: Arc::new(Gauge::new()),
+            tv: Arc::new(Gauge::new()),
+            ess: Arc::new(Gauge::new()),
+            monitor: Arc::new(Mutex::new(QualityMonitor::default())),
+        }
+    }
+}
+
+impl TreeObs {
+    /// Bind every cell to `reg` under the stable `kss_sampler_*` names
+    /// (see the README metric catalog).
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_counter(
+            "kss_sampler_draws_total",
+            "draws",
+            "sampler",
+            "classes drawn by tree descent",
+            Arc::clone(&self.draws),
+        );
+        reg.register_counter(
+            "kss_sampler_zero_mass_fallback_total",
+            "draws",
+            "sampler",
+            "leaf draws where every kernel mass underflowed (uniform fallback)",
+            Arc::clone(&self.zero_mass),
+        );
+        reg.register_counter(
+            "kss_sampler_degenerate_branch_total",
+            "branches",
+            "sampler",
+            "eq. (9) branch steps that fell back to a fair coin",
+            Arc::clone(&self.degenerate_branches),
+        );
+        reg.register_counter(
+            "kss_sampler_exact_fallback_total",
+            "dots",
+            "sampler",
+            "f32 descent dots that overflowed into the exact f64 path",
+            Arc::clone(&self.exact_fallbacks),
+        );
+        reg.register_histogram(
+            "kss_sampler_descent_depth",
+            "levels",
+            "sampler",
+            "internal-node levels traversed per draw",
+            Arc::clone(&self.depth),
+        );
+        reg.register_gauge(
+            "kss_sampler_min_q",
+            "probability",
+            "sampler",
+            "smallest proposal probability reported (q-positivity headroom)",
+            Arc::clone(&self.min_q),
+        );
+        reg.register_gauge(
+            "kss_sampler_tv_estimate",
+            "distance",
+            "sampler",
+            "streaming TV(softmax, proposal) over the monitor reservoir",
+            Arc::clone(&self.tv),
+        );
+        reg.register_gauge(
+            "kss_sampler_ess_fraction",
+            "fraction",
+            "sampler",
+            "eq. (2) effective-sample-size fraction of the last monitored example",
+            Arc::clone(&self.ess),
+        );
+    }
+
+    /// Classes drawn (counted on the scratch flush, so a just-finished
+    /// call is visible once its scratch returns to the pool).
+    pub fn draws_total(&self) -> u64 {
+        self.draws.get()
+    }
+
+    pub fn zero_mass_total(&self) -> u64 {
+        self.zero_mass.get()
+    }
+
+    pub fn degenerate_branch_total(&self) -> u64 {
+        self.degenerate_branches.get()
+    }
+
+    pub fn exact_fallback_total(&self) -> u64 {
+        self.exact_fallbacks.get()
+    }
+
+    /// Smallest q reported so far (0.0 until the first flush).
+    pub fn min_q(&self) -> f64 {
+        self.min_q.get()
+    }
+
+    /// Latest reservoir TV estimate (0.0 until the monitor first runs).
+    pub fn tv_estimate(&self) -> f64 {
+        self.tv.get()
+    }
+
+    /// Latest eq. (2) ESS fraction (0.0 until the monitor first runs).
+    pub fn ess_fraction(&self) -> f64 {
+        self.ess.get()
+    }
 }
 
 /// Clamp an f64 to a finite f32 (overflow saturates instead of producing
@@ -170,20 +323,22 @@ pub(crate) fn sanitize_mass(x: f64) -> f64 {
 /// with probability `sl / (sl + sr)`. When the combined subset mass
 /// underflows to zero (or is non-finite) it falls back to a fair coin —
 /// the unguarded version always descended right on zero mass, a
-/// deterministic bias, and could report q = 0. Returns the side taken and
-/// its probability, which is always strictly positive.
+/// deterministic bias, and could report q = 0. Returns the side taken,
+/// its probability (always strictly positive), and whether the fair-coin
+/// fallback fired (the telemetry layer counts those; fallback draws are
+/// correct but signal a degenerate mass upstream).
 #[inline]
-fn choose_branch(sl: f64, sr: f64, rng: &mut Rng) -> (bool, f64) {
+fn choose_branch(sl: f64, sr: f64, rng: &mut Rng) -> (bool, f64, bool) {
     let sum = sl + sr;
     if sum > 0.0 && sum.is_finite() {
         let u = rng.f64() * sum;
         if u < sl {
-            (true, sl / sum)
+            (true, sl / sum, false)
         } else {
-            (false, sr / sum)
+            (false, sr / sum, false)
         }
     } else {
-        (rng.bool(0.5), 0.5)
+        (rng.bool(0.5), 0.5, true)
     }
 }
 
@@ -225,9 +380,28 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             delta_pool: Vec::new(),
             scratch_pool: Pool::new(),
             stats: TreeStats::default(),
+            obs: TreeObs::default(),
         };
         sampler.build();
         sampler
+    }
+
+    /// Telemetry cells (register them into a [`MetricsRegistry`] via
+    /// [`TreeObs::register_into`]; shared with every clone of this tree).
+    pub fn obs(&self) -> &TreeObs {
+        &self.obs
+    }
+
+    /// Toggle per-draw telemetry accounting (the `obs_overhead` bench
+    /// measures both states; the monitor only runs while enabled).
+    pub fn set_obs_enabled(&mut self, on: bool) {
+        self.obs.enabled = on;
+    }
+
+    /// Examples between sampler-quality observations (0 disables the
+    /// monitor entirely).
+    pub fn set_monitor_stride(&mut self, stride: u64) {
+        self.obs.monitor_stride = stride;
     }
 
     /// Number of tree nodes.
@@ -306,6 +480,14 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             leaf_k: vec![0.0; self.leaf_size],
             leaf_gen: vec![0; self.meta.len()],
             gen: 0,
+            obs_on: false,
+            obs_draws: 0,
+            obs_zero_mass: 0,
+            obs_degenerate: 0,
+            obs_exact_fallback: 0,
+            obs_min_q: f64::INFINITY,
+            obs_depth_counts: vec![0; self.tree_depth + 1],
+            obs_examples: 0,
         }
     }
 
@@ -314,12 +496,51 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
     /// allocates nothing, and total allocations are bounded by the maximum
     /// number of concurrent users rather than the call count.
     pub fn take_scratch(&self) -> DrawScratch {
-        self.scratch_pool.take(|| self.new_scratch())
+        let mut s = self.scratch_pool.take(|| self.new_scratch());
+        s.obs_on = self.obs.enabled;
+        s
     }
 
-    /// Return a scratch pool to the freelist for reuse by later calls.
-    pub fn put_scratch(&self, scratch: DrawScratch) {
+    /// Return a scratch pool to the freelist for reuse by later calls,
+    /// draining its telemetry locals into the shared [`TreeObs`] cells
+    /// first (one blocked flush per checkout — the draw loop itself never
+    /// touches an atomic).
+    pub fn put_scratch(&self, mut scratch: DrawScratch) {
+        self.flush_scratch_obs(&mut scratch);
         self.scratch_pool.put(scratch);
+    }
+
+    /// Drain a scratch's telemetry locals into the shared cells and reset
+    /// them (the stride counter survives: it is a cadence, not a stat).
+    fn flush_scratch_obs(&self, s: &mut DrawScratch) {
+        if !s.obs_on {
+            return;
+        }
+        if s.obs_draws > 0 {
+            self.obs.draws.add(s.obs_draws);
+            s.obs_draws = 0;
+        }
+        if s.obs_zero_mass > 0 {
+            self.obs.zero_mass.add(s.obs_zero_mass);
+            s.obs_zero_mass = 0;
+        }
+        if s.obs_degenerate > 0 {
+            self.obs.degenerate_branches.add(s.obs_degenerate);
+            s.obs_degenerate = 0;
+        }
+        if s.obs_exact_fallback > 0 {
+            self.obs.exact_fallbacks.add(s.obs_exact_fallback);
+            s.obs_exact_fallback = 0;
+        }
+        for (depth, c) in s.obs_depth_counts.iter_mut().enumerate() {
+            if *c > 0 {
+                self.obs.depth.record_n(depth as f64, *c);
+                *c = 0;
+            }
+        }
+        // set_min ignores the +inf "nothing observed" sentinel
+        self.obs.min_q.set_min(s.obs_min_q);
+        s.obs_min_q = f64::INFINITY;
     }
 
     /// Start a new example: materialize φ(h), compute the eq. (8) partition
@@ -363,7 +584,8 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         if s.node_gen[i] == s.gen {
             return s.node_dot[i];
         }
-        let v = self.sanitized_mass_of(s, idx, ops::dot32(&s.phi32, self.z32_of(idx)));
+        let fast = ops::dot32(&s.phi32, self.z32_of(idx));
+        let v = self.sanitized_mass_of(s, idx, fast);
         s.node_dot[i] = v;
         s.node_gen[i] = s.gen;
         v
@@ -371,13 +593,17 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
 
     /// Sanitize one fast f32 descent dot into a usable mass, falling back
     /// to the exact f64 arena on overflow (shared by the single and fused
-    /// memo paths — identical values by construction).
+    /// memo paths — identical values by construction). The fallback is
+    /// counted into the scratch's telemetry locals when accounting is on.
     #[inline]
-    fn sanitized_mass_of(&self, s: &DrawScratch, idx: u32, fast: f32) -> f64 {
+    fn sanitized_mass_of(&self, s: &mut DrawScratch, idx: u32, fast: f32) -> f64 {
         let fast = fast as f64;
         if fast.is_finite() {
             fast.max(0.0)
         } else {
+            if s.obs_on {
+                s.obs_exact_fallback += 1;
+            }
             sanitize_mass(ops::dot(&s.phi_h, self.z_of(idx)))
         }
     }
@@ -450,6 +676,8 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         // Guarded descent product — the draw's actual probability when the
         // closed form degenerates.
         let mut p_path = 1.0f64;
+        // internal levels traversed, for the descent-depth histogram
+        let mut depth = 0usize;
         loop {
             let meta = self.meta[idx as usize];
             if meta.is_leaf() {
@@ -464,6 +692,10 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                     // sending ln(m·q) = -inf into the training kernel.
                     let off = rng.below(len as u64) as usize;
                     let q = (p_path / len as f64).max(f64::MIN_POSITIVE);
+                    if s.obs_on {
+                        s.obs_zero_mass += 1;
+                        s.note_draw(depth, q);
+                    }
                     return (lo + off as u32, q);
                 }
                 let u = rng.f64() * mass;
@@ -480,13 +712,20 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                     // probability under the guarded descent instead
                     (p_path * k / mass).max(f64::MIN_POSITIVE)
                 };
+                if s.obs_on {
+                    s.note_draw(depth, q);
+                }
                 return (lo + off as u32, q);
             }
             // eq. (9): branch proportionally to the subset masses (guarded;
             // one fused pass over the adjacent sibling panel).
             let (sl, sr) = self.node_mass_pair(s, meta.left);
-            let (go_left, p) = choose_branch(sl, sr, rng);
+            let (go_left, p, degenerate) = choose_branch(sl, sr, rng);
+            if degenerate && s.obs_on {
+                s.obs_degenerate += 1;
+            }
             p_path *= p;
+            depth += 1;
             idx = if go_left { meta.left } else { meta.left + 1 };
         }
     }
@@ -512,7 +751,10 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
                 return (meta.lo..meta.hi, p_leaf.max(f64::MIN_POSITIVE));
             }
             let (sl, sr) = self.node_mass_pair(s, meta.left);
-            let (go_left, p) = choose_branch(sl, sr, rng);
+            let (go_left, p, degenerate) = choose_branch(sl, sr, rng);
+            if degenerate && s.obs_on {
+                s.obs_degenerate += 1;
+            }
             p_leaf *= p;
             idx = if go_left { meta.left } else { meta.left + 1 };
         }
@@ -533,7 +775,8 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
             }
             let sl = sanitize_mass(ops::dot(phi_h, self.z_of(meta.left)));
             let sr = sanitize_mass(ops::dot(phi_h, self.z_of(meta.left + 1)));
-            let (go_left, p) = choose_branch(sl, sr, rng);
+            // no scratch here: the scratchless path drops the telemetry flag
+            let (go_left, p, _degenerate) = choose_branch(sl, sr, rng);
             p_leaf *= p;
             idx = if go_left { meta.left } else { meta.left + 1 };
         }
@@ -625,6 +868,37 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         scored.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         scored.truncate(k);
         scored
+    }
+
+    /// Strided sampler-quality observation: every `monitor_stride`-th
+    /// example (per scratch) re-scores its m drawn classes exactly —
+    /// `o_c = ⟨h, w_c⟩`, O(m·d) — and feeds the `(o, q)` pairs to the
+    /// reservoir TV estimator and the eq. (2) ESS gauge. `try_lock` on the
+    /// shared reservoir: a contended observation is dropped, never waited
+    /// for (telemetry must not serialize the sampling workers).
+    fn maybe_observe_quality(&self, h: &[f32], s: &DrawScratch, classes: &[u32], q: &[f64]) {
+        let stride = self.obs.monitor_stride;
+        if !s.obs_on || stride == 0 || s.obs_examples % stride != 0 {
+            return;
+        }
+        let m = classes.len().min(q.len());
+        if m == 0 {
+            return;
+        }
+        let mut pairs = Vec::with_capacity(m);
+        for i in 0..m {
+            let o = ops::dot32(h, self.emb_row(classes[i] as usize)) as f64;
+            pairs.push((o, q[i]));
+        }
+        if let Some(f) = ess_fraction(&pairs) {
+            self.obs.ess.set(f);
+        }
+        if let Ok(mut mon) = self.obs.monitor.try_lock() {
+            mon.observe(&pairs);
+            if let Some(tv) = mon.tv_estimate() {
+                self.obs.tv.set(tv);
+            }
+        }
     }
 
     /// Read-only sampling/retrieval view (see [`TreeView`]).
@@ -806,7 +1080,9 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
 /// snapshot publisher is built on. Transient state is deliberately not
 /// shared: the clone gets fresh update scratch, an empty delta pool, and an
 /// empty [`DrawScratch`] freelist (scratches are sized per tree and refill
-/// on first use), while `stats` carries over as a plain copy.
+/// on first use), while `stats` carries over as a plain copy. Telemetry is
+/// the one shared piece: the [`TreeObs`] cells stay Arc-linked so serve
+/// snapshots report into the series of the tree they were published from.
 impl<M: FeatureMap + Clone> Clone for KernelTreeSampler<M> {
     fn clone(&self) -> Self {
         KernelTreeSampler {
@@ -825,6 +1101,9 @@ impl<M: FeatureMap + Clone> Clone for KernelTreeSampler<M> {
             delta_pool: Vec::new(),
             scratch_pool: Pool::new(),
             stats: self.stats,
+            // telemetry cells are Arc-shared: a published snapshot clone
+            // reports into the same series as its source tree
+            obs: self.obs.clone(),
         }
     }
 }
@@ -926,6 +1205,22 @@ pub struct DrawScratch {
     leaf_k: Vec<f64>,
     leaf_gen: Vec<u32>,
     gen: u32,
+    /// Telemetry locals (plain fields — no atomics on the draw path).
+    /// Accumulated while `obs_on` and drained by
+    /// [`KernelTreeSampler::put_scratch`]; never read by the draw logic,
+    /// so pooling them preserves stream determinism like the memos do.
+    obs_on: bool,
+    obs_draws: u64,
+    obs_zero_mass: u64,
+    obs_degenerate: u64,
+    obs_exact_fallback: u64,
+    obs_min_q: f64,
+    /// Draw count per descent depth (index = internal levels traversed);
+    /// flushed into the shared histogram via `record_n`.
+    obs_depth_counts: Vec<u64>,
+    /// Examples begun on this scratch — the quality-monitor stride clock
+    /// (monotone; deliberately not reset by the flush).
+    obs_examples: u64,
 }
 
 impl DrawScratch {
@@ -938,6 +1233,20 @@ impl DrawScratch {
             self.gen = 0;
         }
         self.gen += 1;
+        self.obs_examples += 1;
+    }
+
+    /// Account one finished draw into the telemetry locals (callers gate
+    /// on `obs_on`; kept out of line so the hot loop stays branch-lean).
+    #[inline]
+    fn note_draw(&mut self, depth: usize, q: f64) {
+        self.obs_draws += 1;
+        if q < self.obs_min_q {
+            self.obs_min_q = q;
+        }
+        if let Some(c) = self.obs_depth_counts.get_mut(depth) {
+            *c += 1;
+        }
     }
 
     /// eq. (8) partition function of the current example.
@@ -976,6 +1285,7 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
             let (class, q) = self.draw(h, &mut scratch, rng);
             out.push(class, q);
         }
+        self.maybe_observe_quality(h, &scratch, &out.classes, &out.q);
         self.put_scratch(scratch);
         Ok(())
     }
@@ -1013,6 +1323,7 @@ impl<M: FeatureMap> Sampler for KernelTreeSampler<M> {
                     let (class, q) = self.draw(h, &mut scratch, &mut rng);
                     slot.push(class, q);
                 }
+                self.maybe_observe_quality(h, &scratch, &slot.classes, &slot.q);
             }
             self.put_scratch(scratch);
         });
@@ -1573,5 +1884,124 @@ mod tests {
         let mut ids: Vec<u32> = zt.iter().map(|&(c, _)| c).collect();
         ids.dedup();
         assert_eq!(ids.len(), 4, "duplicate classes in top-k: {zt:?}");
+    }
+
+    #[test]
+    fn obs_counts_draws_depths_and_min_q() {
+        let (n, d, m) = (37, 4, 8usize);
+        let mut rng = Rng::new(7);
+        let emb = random_emb(&mut rng, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(3));
+        tree.reset_embeddings(&emb, n, d);
+        let reg = crate::obs::MetricsRegistry::new();
+        tree.obs().register_into(&reg);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, m, &mut rng, &mut out).unwrap();
+        let s = reg.snapshot();
+        assert_eq!(s.counter("kss_sampler_draws_total"), Some(m as u64));
+        assert_eq!(s.counter("kss_sampler_zero_mass_fallback_total"), Some(0));
+        assert_eq!(s.counter("kss_sampler_degenerate_branch_total"), Some(0));
+        let depth = s.hist("kss_sampler_descent_depth").unwrap();
+        assert_eq!(depth.count(), m as u64);
+        assert!(depth.min() >= 1.0, "37 classes can't live in one leaf of 3");
+        // the min-q gauge is the exact smallest reported proposal prob
+        let want = out.q.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(s.gauge("kss_sampler_min_q"), Some(want));
+        assert!(want > 0.0);
+    }
+
+    #[test]
+    fn obs_counts_zero_mass_and_degenerate_branches() {
+        // all-zero kernel: every leaf draw is a uniform fallback and every
+        // branch step a fair coin — the counters must say exactly that
+        let n = 16; // leaf 2 ⇒ balanced, 3 internal levels per descent
+        let tree = KernelTreeSampler::new(ZeroMap { d: 3 }, n, Some(2));
+        let h = vec![1.0f32, 2.0, 3.0];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut rng = Rng::new(11);
+        let mut out = Sample::default();
+        let m = 64;
+        tree.sample(&input, m, &mut rng, &mut out).unwrap();
+        let obs = tree.obs();
+        assert_eq!(obs.draws_total(), m as u64);
+        assert_eq!(obs.zero_mass_total(), m as u64);
+        assert_eq!(obs.degenerate_branch_total(), 3 * m as u64);
+        assert!(obs.min_q() > 0.0, "q-positivity holds even under fallback");
+    }
+
+    #[test]
+    fn obs_counts_exact_fallbacks_under_f32_overflow() {
+        // same extreme-α setup as f32_shadow_overflow_keeps_q_exact: the
+        // f32 descent dots overflow, so every first-touch node mass must
+        // route through (and count) the exact f64 fallback
+        let (n, d) = (12, 2);
+        let mut rng = Rng::new(13);
+        let emb = random_emb(&mut rng, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 1e80), n, Some(2));
+        tree.reset_embeddings(&emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 16, &mut rng, &mut out).unwrap();
+        assert!(tree.obs().exact_fallback_total() > 0, "overflow never hit the f64 path");
+        assert!(out.q.iter().all(|&q| q > 0.0 && q.is_finite()));
+    }
+
+    #[test]
+    fn obs_quality_monitor_updates_on_stride() {
+        let (n, d, m) = (48, 4, 16usize);
+        let mut rng = Rng::new(23);
+        let emb = random_emb(&mut rng, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(4));
+        tree.reset_embeddings(&emb, n, d);
+        tree.set_monitor_stride(1); // observe every example
+        let mut out = Sample::default();
+        for _ in 0..4 {
+            let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let input = SampleInput { h: Some(&h), ..Default::default() };
+            tree.sample(&input, m, &mut rng, &mut out).unwrap();
+        }
+        let obs = tree.obs();
+        let ess = obs.ess_fraction();
+        assert!(ess > 0.0 && ess <= 1.0 + 1e-12, "ess fraction {ess}");
+        assert!(obs.tv_estimate() > 0.0, "reservoir TV should be set and nonzero");
+    }
+
+    #[test]
+    fn obs_disabled_skips_accounting() {
+        let (n, d) = (24, 3);
+        let mut rng = Rng::new(29);
+        let emb = random_emb(&mut rng, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(3));
+        tree.reset_embeddings(&emb, n, d);
+        tree.set_obs_enabled(false);
+        tree.set_monitor_stride(1);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        tree.sample(&input, 32, &mut rng, &mut out).unwrap();
+        let obs = tree.obs();
+        assert_eq!(obs.draws_total(), 0);
+        assert_eq!(obs.ess_fraction(), 0.0);
+        assert_eq!(obs.min_q(), 0.0);
+    }
+
+    #[test]
+    fn obs_cells_shared_with_clones() {
+        // the snapshot publisher clones trees; telemetry must aggregate
+        // into the source tree's series, not vanish into the clone
+        let (n, d) = (24, 3);
+        let mut rng = Rng::new(31);
+        let emb = random_emb(&mut rng, n, d);
+        let mut a = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n, Some(3));
+        a.reset_embeddings(&emb, n, d);
+        let b = a.clone();
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        b.sample(&input, 8, &mut rng, &mut out).unwrap();
+        assert_eq!(a.obs().draws_total(), 8, "clone draws must land in the shared cells");
     }
 }

@@ -57,7 +57,7 @@ use anyhow::Result;
 
 pub use bigram::BigramSampler;
 pub use kernel::flat::FlatKernelSampler;
-pub use kernel::tree::KernelTreeSampler;
+pub use kernel::tree::{KernelTreeSampler, TreeObs};
 pub use kernel::{KernelKind, QuadraticMap};
 pub use rff::{PositiveRffMap, RffConfig};
 pub use softmax_exact::SoftmaxSampler;

@@ -24,6 +24,7 @@
 //! stream discipline from PR 1 — so a request's samples depend on its
 //! arrival index alone, not on how the batcher happened to coalesce it.
 
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::sampler::Sample;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -123,6 +124,87 @@ pub struct SampleResponse {
     pub batch_rows: usize,
 }
 
+/// Shared telemetry cells for one batcher (all lock-free writes on paths
+/// that already hold, or just released, the queue lock — the accounting
+/// adds no new synchronization). Bind to a registry via
+/// [`BatcherObs::register_into`].
+#[derive(Clone, Default)]
+pub struct BatcherObs {
+    /// Requests accepted into the queue.
+    submitted: Arc<Counter>,
+    /// Requests rejected with [`ServeError::Overloaded`].
+    shed: Arc<Counter>,
+    /// Batches dispatched because the oldest row aged past `max_wait`
+    /// (as opposed to filling to `max_batch` or draining at shutdown).
+    deadline_hits: Arc<Counter>,
+    /// Rows per dispatched batch (the coalescing payoff distribution).
+    coalesce_rows: Arc<Histogram>,
+    /// High-watermark of the queue depth at admission.
+    queue_depth_max: Arc<Gauge>,
+}
+
+impl BatcherObs {
+    /// Bind every cell to `reg` under the stable `kss_batcher_*` names.
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_counter(
+            "kss_batcher_submitted_total",
+            "requests",
+            "serve",
+            "requests admitted to the coalescing queue",
+            Arc::clone(&self.submitted),
+        );
+        reg.register_counter(
+            "kss_batcher_shed_total",
+            "requests",
+            "serve",
+            "requests rejected at admission (queue at capacity)",
+            Arc::clone(&self.shed),
+        );
+        reg.register_counter(
+            "kss_batcher_deadline_dispatch_total",
+            "batches",
+            "serve",
+            "partial batches dispatched by the max_wait deadline",
+            Arc::clone(&self.deadline_hits),
+        );
+        reg.register_histogram(
+            "kss_batcher_coalesce_rows",
+            "rows",
+            "serve",
+            "rows coalesced per dispatched batch",
+            Arc::clone(&self.coalesce_rows),
+        );
+        reg.register_gauge(
+            "kss_batcher_queue_depth_max",
+            "requests",
+            "serve",
+            "queue-depth high-watermark at admission",
+            Arc::clone(&self.queue_depth_max),
+        );
+    }
+
+    pub fn submitted_total(&self) -> u64 {
+        self.submitted.get()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.get()
+    }
+
+    pub fn deadline_dispatch_total(&self) -> u64 {
+        self.deadline_hits.get()
+    }
+
+    /// Batches dispatched so far (= coalesce-histogram count).
+    pub fn batches_dispatched(&self) -> u64 {
+        self.coalesce_rows.count()
+    }
+
+    pub fn queue_depth_max(&self) -> f64 {
+        self.queue_depth_max.get()
+    }
+}
+
 struct Queue {
     items: VecDeque<Request>,
     open: bool,
@@ -137,8 +219,11 @@ pub struct MicroBatcher {
     /// Signaled on submit and shutdown.
     cv: Condvar,
     seq: AtomicU64,
-    /// Requests rejected for overload (observability).
+    /// Requests rejected for overload (observability; kept alongside the
+    /// equivalent [`BatcherObs`] counter for callers that poll it raw).
     pub rejected: AtomicU64,
+    /// Telemetry cells (see [`BatcherObs`]).
+    obs: BatcherObs,
 }
 
 impl MicroBatcher {
@@ -150,11 +235,18 @@ impl MicroBatcher {
             cv: Condvar::new(),
             seq: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            obs: BatcherObs::default(),
         })
     }
 
     pub fn config(&self) -> &BatcherConfig {
         &self.cfg
+    }
+
+    /// Telemetry cells (register into a registry via
+    /// [`BatcherObs::register_into`]).
+    pub fn obs(&self) -> &BatcherObs {
+        &self.obs
     }
 
     /// Enqueue one request; returns the receiver for its response and the
@@ -172,12 +264,16 @@ impl MicroBatcher {
         }
         if q.items.len() >= self.cfg.queue_cap {
             self.rejected.fetch_add(1, Ordering::Relaxed);
+            self.obs.shed.inc();
             return Err(ServeError::Overloaded);
         }
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         q.items.push_back(Request { h, m, seq, enqueued: Instant::now(), tx });
-        let full = q.items.len() >= self.cfg.max_batch;
+        let depth = q.items.len();
+        let full = depth >= self.cfg.max_batch;
         drop(q);
+        self.obs.submitted.inc();
+        self.obs.queue_depth_max.set_max(depth as f64);
         // one waiter is enough for a single new row; a full batch may be
         // worth a second worker if more rows are already queued behind it
         if full {
@@ -195,6 +291,7 @@ impl MicroBatcher {
     /// (submitters see [`ServeError::Poisoned`] / dropped-channel timeouts).
     pub fn next_batch(&self) -> Option<Vec<Request>> {
         let mut q = self.queue.lock().ok()?;
+        let mut deadline_hit = false;
         loop {
             if q.items.is_empty() {
                 if !q.open {
@@ -212,6 +309,7 @@ impl MicroBatcher {
                 None => continue, // unreachable: is_empty handled above
             };
             if age >= self.cfg.max_wait {
+                deadline_hit = true;
                 break;
             }
             let (guard, _timeout) =
@@ -219,7 +317,13 @@ impl MicroBatcher {
             q = guard;
         }
         let take = q.items.len().min(self.cfg.max_batch);
-        Some(q.items.drain(..take).collect())
+        let batch: Vec<Request> = q.items.drain(..take).collect();
+        drop(q);
+        self.obs.coalesce_rows.record(take as f64);
+        if deadline_hit {
+            self.obs.deadline_hits.inc();
+        }
+        Some(batch)
     }
 
     /// Stop accepting new requests and wake every worker; queued requests
@@ -266,6 +370,12 @@ mod tests {
         assert_eq!(seqs, vec![0, 1, 2, 3]);
         assert_eq!(b.next_batch().unwrap().len(), 4);
         assert_eq!(b.next_batch().unwrap().len(), 2);
+        // telemetry: three dispatches (4+4 full, 2 by deadline), all 10
+        // admitted rows accounted, depth watermark saw the deepest queue
+        assert_eq!(b.obs().batches_dispatched(), 3);
+        assert_eq!(b.obs().submitted_total(), 10);
+        assert_eq!(b.obs().deadline_dispatch_total(), 1);
+        assert_eq!(b.obs().queue_depth_max(), 10.0);
     }
 
     #[test]
@@ -280,6 +390,9 @@ mod tests {
         // for a loaded CI box; the point is it did not wait forever)
         assert!(waited >= Duration::from_millis(9), "returned too early: {waited:?}");
         assert!(waited < Duration::from_secs(5), "deadline ignored: {waited:?}");
+        // telemetry: exactly one dispatch, and it was deadline-triggered
+        assert_eq!(b.obs().deadline_dispatch_total(), 1);
+        assert_eq!(b.obs().batches_dispatched(), 1);
     }
 
     #[test]
@@ -291,6 +404,10 @@ mod tests {
         assert_eq!(b.submit(vec![0.0], 1).unwrap_err(), ServeError::Overloaded);
         assert_eq!(b.rejected.load(Ordering::Relaxed), 1);
         assert_eq!(b.depth(), 3);
+        // telemetry mirrors the raw counter and the admission watermark
+        assert_eq!(b.obs().shed_total(), 1);
+        assert_eq!(b.obs().submitted_total(), 3);
+        assert_eq!(b.obs().queue_depth_max(), 3.0);
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub mod topk;
 
 pub use batcher::{BatcherConfig, MicroBatcher, SampleResponse, ServeError};
 pub use reader_sampler::SnapshotSampler;
-pub use service::{SamplingService, ServiceConfig, ShardPublisher, ShardSet};
+pub use service::{SamplingService, ServiceConfig, ServiceObs, ShardPublisher, ShardSet};
 pub use shard::{
     draw_from_shards, shard_of_class, shard_offsets, split_updates_by_shard, ShardedKernelSampler,
 };
@@ -50,6 +50,7 @@ pub use snapshot::{
 };
 pub use topk::{merge_shard_topk, topk_over_snapshots, Hit, TopKConfig};
 
+use crate::obs::MetricsRegistry;
 use crate::sampler::kernel::{FeatureMap, QuadraticMap};
 use crate::sampler::rff::{PositiveRffMap, RffConfig};
 use crate::util::rng::Rng;
@@ -106,6 +107,10 @@ pub struct LoadGenConfig {
     /// End-to-end latency budget a request must meet (queue + execute).
     pub deadline: Duration,
     pub seed: u64,
+    /// Where to write the Prometheus-style metrics exposition on exit
+    /// (`--metrics-path`; `None` keeps it in [`LoadReport::metrics_text`]
+    /// only).
+    pub metrics_path: Option<std::path::PathBuf>,
 }
 
 impl Default for LoadGenConfig {
@@ -126,6 +131,7 @@ impl Default for LoadGenConfig {
             updates_per_publish: 32,
             deadline: Duration::from_millis(20),
             seed: 42,
+            metrics_path: None,
         }
     }
 }
@@ -152,6 +158,10 @@ pub struct LoadReport {
     /// with a publish.
     pub publish_swap_max_s: f64,
     pub topk_calls: u64,
+    /// Prometheus-style exposition of every serve-stack metric at exit
+    /// (batcher, service, publisher and sampler cells) — what
+    /// `--metrics-path` writes to disk.
+    pub metrics_text: String,
 }
 
 /// Drive a synthetic sharded index with closed-loop clients while a writer
@@ -193,6 +203,11 @@ pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
         request_timeout: Duration::from_secs(30),
     };
     let service = SamplingService::start(set.stores(), set.offsets().to_vec(), service_cfg);
+    // one registry over the whole stack: request path (batcher + service),
+    // publish path (per-shard publishers) and the sampler cells behind them
+    let registry = MetricsRegistry::new();
+    service.register_metrics(&registry);
+    set.register_metrics(&registry);
 
     let stop_writer = std::sync::atomic::AtomicBool::new(false);
     let mut latencies = Samples::new();
@@ -290,6 +305,12 @@ pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let publish_stats = set.stats();
+    let metrics_text = registry.snapshot().render_prometheus();
+    if let Some(path) = &cfg.metrics_path {
+        if let Err(e) = std::fs::write(path, &metrics_text) {
+            eprintln!("warning: could not write metrics exposition to {}: {e}", path.display());
+        }
+    }
     let lat = latencies.percentiles(&[50.0, 95.0, 99.0, 100.0]);
     let report = LoadReport {
         completed,
@@ -306,6 +327,7 @@ pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
         publish_build_p95_s: build_times.p95(),
         publish_swap_max_s: swap_max,
         topk_calls,
+        metrics_text,
     };
     service.shutdown();
     report
@@ -346,6 +368,23 @@ mod tests {
         assert!(report.publishes > 0, "writer never published: {report:?}");
         assert!(report.deadline_miss_rate < 1.0);
         assert!(report.latency_p50_s >= 0.0 && report.latency_p95_s >= report.latency_p50_s);
+        // the exit exposition carries every serve-stack series: requests
+        // flowed, shards published, and both are visible by canonical name
+        let text = &report.metrics_text;
+        for series in [
+            "kss_batcher_submitted_total",
+            "kss_batcher_queue_depth_max",
+            "kss_batcher_shed_total",
+            "kss_batcher_coalesce_rows_count",
+            "kss_service_dropped_reply_total",
+            "kss_publish_lag_seconds_count",
+            "kss_publish_swap_seconds_count",
+        ] {
+            assert!(text.contains(series), "missing series {series} in:\n{text}");
+        }
+        // nonzero where the smoke guarantees traffic
+        assert!(!text.contains("kss_batcher_submitted_total 0\n"), "no submits recorded");
+        assert!(!text.contains("kss_publish_lag_seconds_count 0\n"), "no publish lag recorded");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! publish lands between batches, never inside one. Request `seq` draws
 //! from `row_rng(service_seed, seq)` regardless of how it was batched.
 
+use crate::obs::{Counter, MetricsRegistry};
 use crate::sampler::kernel::tree::TreeView;
 use crate::sampler::kernel::FeatureMap;
 use crate::sampler::{row_rng, Sample};
@@ -125,6 +126,18 @@ impl<M: FeatureMap + Clone> ShardSet<M> {
         self.update_and_publish(&classes, &rows)
     }
 
+    /// Register every publish-path and sampler metric this set owns into
+    /// `reg`. Per-shard cells bind under the same canonical names; the
+    /// registry snapshot aggregates them into one series per name
+    /// (counters sum, histograms merge), so a dashboard sees fleet totals
+    /// without a per-shard label explosion.
+    pub fn register_metrics(&self, reg: &MetricsRegistry) {
+        for p in &self.publishers {
+            p.obs().register_into(reg);
+            p.shadow().obs().register_into(reg);
+        }
+    }
+
     /// Publish-path counters summed over all shards.
     pub fn stats(&self) -> PublishStats {
         let mut total = PublishStats::default();
@@ -152,6 +165,12 @@ pub trait ShardPublisher: Send {
     /// Publish-path counters summed over all shards.
     fn publish_stats(&self) -> PublishStats;
 
+    /// Bind every publish-path and sampler metric behind this publisher
+    /// into `reg` — the kernel-erased face of
+    /// [`ShardSet::register_metrics`], so the trainer can export serve
+    /// telemetry without naming the concrete kernel family.
+    fn register_metrics(&self, reg: &MetricsRegistry);
+
     /// Number of shards behind this publisher.
     fn shard_count(&self) -> usize;
 
@@ -169,6 +188,10 @@ impl<M: FeatureMap + Clone + 'static> ShardPublisher for ShardSet<M> {
 
     fn publish_stats(&self) -> PublishStats {
         self.stats()
+    }
+
+    fn register_metrics(&self, reg: &MetricsRegistry) {
+        ShardSet::register_metrics(self, reg)
     }
 
     fn shard_count(&self) -> usize {
@@ -212,6 +235,34 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Service-level telemetry cells shared between the façade and the worker
+/// pool. A reply whose receiver is gone (client timed out or hung up) is
+/// not a worker error — the worker keeps running — but it *is* work served
+/// for nothing, so it must land in a counter rather than vanish into a
+/// `let _ =`.
+#[derive(Clone, Default)]
+pub struct ServiceObs {
+    dropped_replies: Arc<Counter>,
+}
+
+impl ServiceObs {
+    /// Bind this service's cells into `reg` under their canonical names.
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_counter(
+            "kss_service_dropped_reply_total",
+            "replies",
+            "serve",
+            "responses computed but dropped because the client receiver was gone",
+            self.dropped_replies.clone(),
+        );
+    }
+
+    /// Replies computed and then dropped (receiver hung up) so far.
+    pub fn dropped_replies_total(&self) -> u64 {
+        self.dropped_replies.get()
+    }
+}
+
 /// Concurrent sampling service over a shard set's snapshot stores.
 pub struct SamplingService<M: FeatureMap + 'static> {
     stores: Vec<Arc<SnapshotStore<TreeSnapshot<M>>>>,
@@ -225,6 +276,7 @@ pub struct SamplingService<M: FeatureMap + 'static> {
     /// Per-request sample-count cap (see [`ServiceConfig::max_m`]).
     max_m: usize,
     request_timeout: std::time::Duration,
+    obs: ServiceObs,
 }
 
 impl<M: FeatureMap + 'static> SamplingService<M> {
@@ -238,14 +290,16 @@ impl<M: FeatureMap + 'static> SamplingService<M> {
         let d = stores[0].load().1.tree.embed_dim();
         let batcher = MicroBatcher::new(cfg.batcher);
         let offsets = Arc::new(offsets);
+        let obs = ServiceObs::default();
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
                 let batcher = batcher.clone();
                 let stores = stores.clone();
                 let offsets = offsets.clone();
+                let obs = obs.clone();
                 std::thread::Builder::new()
                     .name(format!("kss-serve-{w}"))
-                    .spawn(move || worker_loop(&batcher, &stores, &offsets, cfg.seed))
+                    .spawn(move || worker_loop(&batcher, &stores, &offsets, cfg.seed, &obs))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -258,7 +312,20 @@ impl<M: FeatureMap + 'static> SamplingService<M> {
             d,
             max_m: cfg.max_m.max(1),
             request_timeout: cfg.request_timeout,
+            obs,
         }
+    }
+
+    /// Service-level telemetry cells (shared with the worker pool).
+    pub fn obs(&self) -> &ServiceObs {
+        &self.obs
+    }
+
+    /// Register every metric this service owns — its own cells plus the
+    /// micro-batcher's — into `reg`. One call wires the whole request path.
+    pub fn register_metrics(&self, reg: &MetricsRegistry) {
+        self.obs.register_into(reg);
+        self.batcher.obs().register_into(reg);
     }
 
     /// Enqueue a sampling request; returns its sequence number and the
@@ -345,6 +412,7 @@ fn worker_loop<M: FeatureMap>(
     stores: &[Arc<SnapshotStore<TreeSnapshot<M>>>],
     offsets: &[u32],
     seed: u64,
+    obs: &ServiceObs,
 ) {
     let mut readers: Vec<SnapshotReader<TreeSnapshot<M>>> =
         stores.iter().map(|s| SnapshotReader::new(s.clone())).collect();
@@ -372,13 +440,17 @@ fn worker_loop<M: FeatureMap>(
             let mut rng = row_rng(seed, req.seq as usize);
             let mut sample = Sample::with_capacity(req.m);
             draw_from_shards(&trees, offsets, &req.h, req.m, &mut state, &mut rng, &mut sample);
-            // a dropped receiver (client gave up) is not a worker error
-            let _ = req.tx.send(SampleResponse {
+            // a dropped receiver (client gave up) is not a worker error,
+            // but the wasted work must be visible: count it
+            let reply = SampleResponse {
                 sample,
                 generation,
                 queued: picked.duration_since(req.enqueued),
                 batch_rows,
-            });
+            };
+            if req.tx.send(reply).is_err() {
+                obs.dropped_replies.inc();
+            }
         }
     }
 }
@@ -486,6 +558,31 @@ mod tests {
         // the pool is still healthy afterwards
         let resp = service.sample_blocking(vec![0.1, -0.2, 0.3], 4).unwrap();
         assert_eq!(resp.sample.classes.len(), 4);
+        service.shutdown();
+    }
+
+    #[test]
+    fn dropped_receivers_are_counted_not_ignored() {
+        let (set, _) = shard_set(20, 3, 2, 9);
+        let service = SamplingService::start(set.stores(), set.offsets().to_vec(), quick_cfg(1));
+        // submit and immediately hang up: the worker still computes the
+        // reply, and the failed send must land in the counter
+        {
+            let (_seq, rx) = service.submit(vec![0.0; 3], 4).unwrap();
+            drop(rx);
+        }
+        // with one worker and a FIFO queue, this blocking reply can only
+        // arrive after the hung-up request's send already failed
+        let resp = service.sample_blocking(vec![0.1, 0.2, 0.3], 4).unwrap();
+        assert_eq!(resp.sample.classes.len(), 4);
+        assert_eq!(service.obs().dropped_replies_total(), 1);
+        // the same cell is visible through the registry under its
+        // canonical name, alongside the batcher's request-path series
+        let reg = MetricsRegistry::new();
+        service.register_metrics(&reg);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("kss_service_dropped_reply_total"), Some(1));
+        assert_eq!(snap.counter("kss_batcher_submitted_total"), Some(2));
         service.shutdown();
     }
 

@@ -30,6 +30,7 @@
 //! flat `clone()` of the shadow (a memcpy of the arena — still no φ
 //! recomputation). [`PublishStats`] counts which path ran.
 
+use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::sampler::kernel::tree::KernelTreeSampler;
 use crate::sampler::kernel::FeatureMap;
 use std::collections::VecDeque;
@@ -160,6 +161,85 @@ pub struct PublishReport {
     pub reclaimed: bool,
 }
 
+/// Shared telemetry cells for one publisher. Sharded serve sets register
+/// every shard's cells under the same names, so exports see fleet-wide
+/// series (counters sum, histograms merge — see
+/// [`MetricsRegistry::snapshot`]).
+#[derive(Clone, Default)]
+pub struct PublishObs {
+    /// Publish→visible lag per publish: build (replay or clone) + swap.
+    lag: Arc<Histogram>,
+    /// Swap-lock hold time alone — the only window a refreshing reader
+    /// can contend with.
+    swap: Arc<Histogram>,
+    /// Publishes that fast-forwarded a reclaimed arena by replay.
+    replayed: Arc<Counter>,
+    /// Publishes that fell back to a flat clone of the shadow.
+    cloned: Arc<Counter>,
+    /// Retired-queue overflows: a pinned old generation forced the
+    /// publisher to drop its oldest reclaim handle (sustained growth
+    /// means a stuck reader is degrading publishes toward clones).
+    pinned_stalls: Arc<Counter>,
+}
+
+impl PublishObs {
+    /// Bind every cell to `reg` under the stable `kss_publish_*` names.
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_histogram(
+            "kss_publish_lag_seconds",
+            "seconds",
+            "serve",
+            "publish-to-visible lag (build + swap) per generation",
+            Arc::clone(&self.lag),
+        );
+        reg.register_histogram(
+            "kss_publish_swap_seconds",
+            "seconds",
+            "serve",
+            "swap-lock hold time per publish",
+            Arc::clone(&self.swap),
+        );
+        reg.register_counter(
+            "kss_publish_replayed_total",
+            "publishes",
+            "serve",
+            "publishes served by replaying a reclaimed arena",
+            Arc::clone(&self.replayed),
+        );
+        reg.register_counter(
+            "kss_publish_cloned_total",
+            "publishes",
+            "serve",
+            "publishes that fell back to cloning the shadow arena",
+            Arc::clone(&self.cloned),
+        );
+        reg.register_counter(
+            "kss_publish_pinned_stall_total",
+            "events",
+            "serve",
+            "reclaim handles dropped because readers pinned old generations",
+            Arc::clone(&self.pinned_stalls),
+        );
+    }
+
+    /// Publishes recorded so far (= lag-histogram count).
+    pub fn publishes(&self) -> u64 {
+        self.lag.count()
+    }
+
+    pub fn replayed_total(&self) -> u64 {
+        self.replayed.get()
+    }
+
+    pub fn cloned_total(&self) -> u64 {
+        self.cloned.get()
+    }
+
+    pub fn pinned_stall_total(&self) -> u64 {
+        self.pinned_stalls.get()
+    }
+}
+
 /// One logged update batch (the replay unit).
 struct UpdateBatch {
     /// Generation this batch produced when applied to the shadow.
@@ -186,6 +266,8 @@ pub struct TreePublisher<M: FeatureMap + Clone> {
     /// what a reclaimed arena may need to fast-forward.
     log: VecDeque<UpdateBatch>,
     pub stats: PublishStats,
+    /// Telemetry cells (see [`PublishObs`]).
+    obs: PublishObs,
 }
 
 impl<M: FeatureMap + Clone> TreePublisher<M> {
@@ -202,12 +284,19 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
             retired,
             log: VecDeque::new(),
             stats: PublishStats::default(),
+            obs: PublishObs::default(),
         }
     }
 
     /// The publish point readers subscribe to.
     pub fn store(&self) -> Arc<SnapshotStore<TreeSnapshot<M>>> {
         self.store.clone()
+    }
+
+    /// Telemetry cells (register into a registry via
+    /// [`PublishObs::register_into`]).
+    pub fn obs(&self) -> &PublishObs {
+        &self.obs
     }
 
     /// The writer's working tree (read access, e.g. for seeding checks).
@@ -294,12 +383,21 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
         // reclaim opportunity).
         while self.retired.len() > MAX_RETIRED {
             self.retired.pop_front();
+            self.obs.pinned_stalls.inc();
         }
         // The log only needs batches newer than the oldest retired
         // generation (the furthest-behind arena we could ever reclaim).
         let min_gen = self.retired.front().map(|s| s.generation).unwrap_or(self.shadow_gen);
         while self.log.front().is_some_and(|b| b.gen <= min_gen) {
             self.log.pop_front();
+        }
+
+        self.obs.lag.record(build_s + swap_s);
+        self.obs.swap.record(swap_s);
+        if was_reclaimed {
+            self.obs.replayed.inc();
+        } else {
+            self.obs.cloned.inc();
         }
 
         PublishReport { generation, build_s, swap_s, reclaimed: was_reclaimed }
@@ -411,6 +509,13 @@ mod tests {
         let stats = publisher.stats;
         assert_eq!(stats.publishes, 12);
         assert!(stats.reclaimed > 0, "reclaim path never ran: {stats:?}");
+        // telemetry mirrors the publish-path accounting: every publish
+        // recorded a lag sample and chose exactly one build path
+        let obs = publisher.obs();
+        assert_eq!(obs.publishes(), 12);
+        assert_eq!(obs.replayed_total(), stats.reclaimed);
+        assert_eq!(obs.cloned_total(), stats.copied);
+        assert_eq!(obs.replayed_total() + obs.cloned_total(), 12);
         // every published snapshot — reclaimed-and-replayed or cloned —
         // must match the straight-line reference exactly
         let (g, snap) = publisher.store().load();

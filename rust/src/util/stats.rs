@@ -1,7 +1,9 @@
 //! Online statistics and timing utilities shared by the trainer, the metric
 //! sinks and the bench harness.
 
+use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::util::json::Value;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Welford online mean/variance accumulator.
@@ -238,49 +240,147 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
 /// thread (depth-2 sampling/publishing) — reported for visibility but
 /// excluded from [`PhaseTimes::total`], since counting it would double-book
 /// the wall clock.
-#[derive(Clone, Debug, Default)]
+///
+/// Since the telemetry PR this is a thin adapter over [`crate::obs`]
+/// cells rather than its own `Vec<(String, Duration)>` accumulator: each
+/// phase owns an exact nanosecond [`Counter`] (`kss_phase_<name>_*_total`)
+/// plus a per-call seconds [`Histogram`] (`kss_phase_<name>[_bg]_seconds`),
+/// all registered in a [`MetricsRegistry`] shared with the rest of the
+/// trainer's telemetry. The report / JSON output is **byte-stable** with
+/// the pre-adapter implementation (pinned by `phase_times_output_pin`):
+/// totals read back through `Duration::from_nanos`, reproducing the old
+/// exact Duration-sum arithmetic.
+#[derive(Debug)]
 pub struct PhaseTimes {
-    pub phases: Vec<(String, Duration)>,
-    pub overlapped: Vec<(String, Duration)>,
+    book: Vec<PhaseCell>,
+    hidden: Vec<PhaseCell>,
+    registry: Arc<MetricsRegistry>,
+}
+
+/// One phase's storage: the obs cells, shared with the registry.
+#[derive(Debug)]
+struct PhaseCell {
+    name: String,
+    /// Exact Σ of per-add durations in nanoseconds (integer, associative —
+    /// the report arithmetic matches the old `Duration` sums bit-for-bit).
+    nanos: Arc<Counter>,
+    /// Per-add seconds distribution (approximate, for p50/p95 readout).
+    dist: Arc<Histogram>,
+}
+
+impl PhaseCell {
+    fn secs(&self) -> f64 {
+        Duration::from_nanos(self.nanos.get()).as_secs_f64()
+    }
+}
+
+impl Default for PhaseTimes {
+    fn default() -> Self {
+        Self::with_registry(Arc::new(MetricsRegistry::new()))
+    }
+}
+
+impl Clone for PhaseTimes {
+    /// Deep copy (fresh cells + fresh registry carrying the current
+    /// values), preserving the value semantics of the pre-adapter struct.
+    fn clone(&self) -> Self {
+        let mut out = PhaseTimes::default();
+        for c in &self.book {
+            out.add(&c.name, c.secs());
+        }
+        for c in &self.hidden {
+            out.add_overlapped(&c.name, c.secs());
+        }
+        out
+    }
 }
 
 impl PhaseTimes {
+    /// Build over a caller-owned registry so phase cells export alongside
+    /// the owner's other telemetry (the trainer shares one registry across
+    /// phases, sampler internals and the pipeline driver).
+    pub fn with_registry(registry: Arc<MetricsRegistry>) -> Self {
+        PhaseTimes { book: Vec::new(), hidden: Vec::new(), registry }
+    }
+
+    /// The registry the phase cells are registered in.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
     pub fn add(&mut self, name: &str, secs: f64) {
-        Self::accumulate(&mut self.phases, name, secs);
+        let i = Self::cell(&mut self.book, &self.registry, name, false);
+        Self::record(&self.book, i, secs);
     }
 
     /// Record work that ran concurrently with an accounted phase (hidden
     /// wall time — see the struct docs).
     pub fn add_overlapped(&mut self, name: &str, secs: f64) {
-        Self::accumulate(&mut self.overlapped, name, secs);
+        let i = Self::cell(&mut self.hidden, &self.registry, name, true);
+        Self::record(&self.hidden, i, secs);
     }
 
-    fn accumulate(book: &mut Vec<(String, Duration)>, name: &str, secs: f64) {
+    /// Find-or-mint the cell for `name` (insertion order preserved — the
+    /// reports list phases in first-seen order, as before).
+    fn cell(book: &mut Vec<PhaseCell>, registry: &MetricsRegistry, name: &str, bg: bool) -> usize {
+        if let Some(i) = book.iter().position(|c| c.name == name) {
+            return i;
+        }
+        let slug: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let suffix = if bg { "_bg" } else { "" };
+        let nanos = registry.counter(
+            &format!("kss_phase_{slug}{suffix}_nanos_total"),
+            "nanoseconds",
+            "trainer",
+            if bg {
+                "hidden (overlapped) wall time accumulated in this phase"
+            } else {
+                "accounted critical-path wall time accumulated in this phase"
+            },
+        );
+        let dist = registry.histogram(
+            &format!("kss_phase_{slug}{suffix}_seconds"),
+            "seconds",
+            "trainer",
+            "per-call phase duration",
+        );
+        book.push(PhaseCell { name: name.to_string(), nanos, dist });
+        book.len() - 1
+    }
+
+    fn record(book: &[PhaseCell], i: usize, secs: f64) {
         let d = Duration::from_secs_f64(secs.max(0.0));
-        if let Some((_, tot)) = book.iter_mut().find(|(n, _)| n == name) {
-            *tot += d;
-        } else {
-            book.push((name.to_string(), d));
+        if let Some(c) = book.get(i) {
+            c.nanos.add(d.as_nanos() as u64);
+            c.dist.record(d.as_secs_f64());
         }
     }
 
     /// Critical-path seconds (overlapped work excluded).
     pub fn total(&self) -> f64 {
-        self.phases.iter().map(|(_, d)| d.as_secs_f64()).sum()
+        self.book.iter().map(|c| c.secs()).sum()
     }
 
     pub fn report(&self) -> String {
         let total = self.total().max(1e-12);
         let mut s = String::new();
-        for (name, d) in &self.phases {
-            let secs = d.as_secs_f64();
-            s.push_str(&format!("  {:<14} {:>9.3}s  ({:>5.1}%)\n", name, secs, 100.0 * secs / total));
+        for c in &self.book {
+            let secs = c.secs();
+            s.push_str(&format!(
+                "  {:<14} {:>9.3}s  ({:>5.1}%)\n",
+                c.name,
+                secs,
+                100.0 * secs / total
+            ));
         }
-        for (name, d) in &self.overlapped {
-            let secs = d.as_secs_f64();
+        for c in &self.hidden {
+            let secs = c.secs();
             s.push_str(&format!(
                 "  {:<14} {:>9.3}s  (hidden behind other phases; not in total)\n",
-                format!("{name} (bg)"),
+                format!("{} (bg)", c.name),
                 secs
             ));
         }
@@ -312,12 +412,12 @@ impl PhaseTimes {
             (
                 "phases",
                 Value::Array(
-                    self.phases
+                    self.book
                         .iter()
-                        .map(|(name, d)| {
-                            let secs = d.as_secs_f64();
+                        .map(|c| {
+                            let secs = c.secs();
                             Value::object(vec![
-                                ("name", Value::str(name)),
+                                ("name", Value::str(&c.name)),
                                 ("secs", Value::num(secs)),
                                 ("share", Value::num(secs / denom)),
                             ])
@@ -328,12 +428,12 @@ impl PhaseTimes {
             (
                 "overlapped",
                 Value::Array(
-                    self.overlapped
+                    self.hidden
                         .iter()
-                        .map(|(name, d)| {
+                        .map(|c| {
                             Value::object(vec![
-                                ("name", Value::str(name)),
-                                ("secs", Value::num(d.as_secs_f64())),
+                                ("name", Value::str(&c.name)),
+                                ("secs", Value::num(c.secs())),
                             ])
                         })
                         .collect(),
@@ -428,6 +528,61 @@ mod tests {
         assert_eq!(over.len(), 1);
         assert!((over[0].get("secs").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
         assert!((j.get("steps_per_s").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    /// Byte-stability pin for the obs-adapter re-implementation: the
+    /// exact strings the pre-adapter `Vec<(String, Duration)>` code
+    /// produced for this input, captured verbatim. A formatting or
+    /// arithmetic drift in the adapter fails here, not in a downstream
+    /// log diff.
+    #[test]
+    fn phase_times_output_pin() {
+        let mut p = PhaseTimes::default();
+        p.add("encode", 0.125);
+        p.add("step", 0.5);
+        p.add("encode", 0.375);
+        p.add_overlapped("publish", 0.25);
+        assert_eq!(
+            p.report(),
+            "  encode             0.500s  ( 50.0%)\n\
+             \x20 step               0.500s  ( 50.0%)\n\
+             \x20 publish (bg)       0.250s  (hidden behind other phases; not in total)\n"
+        );
+        assert_eq!(
+            p.report_with_throughput(4),
+            "  encode             0.500s  ( 50.0%)\n\
+             \x20 step               0.500s  ( 50.0%)\n\
+             \x20 publish (bg)       0.250s  (hidden behind other phases; not in total)\n\
+             \x20 total              1.000s  (4 steps, 4.0 steps/s)\n"
+        );
+        assert_eq!(
+            p.to_json(4).to_string_compact(),
+            "{\"phases\":[{\"name\":\"encode\",\"secs\":0.5,\"share\":0.5},\
+             {\"name\":\"step\",\"secs\":0.5,\"share\":0.5}],\
+             \"overlapped\":[{\"name\":\"publish\",\"secs\":0.25}],\
+             \"total_s\":1,\"steps\":4,\"steps_per_s\":4}"
+        );
+    }
+
+    /// The adapter's storage IS the obs registry: every phase shows up as
+    /// an exact nanosecond counter and a per-call histogram, so trainer
+    /// phase reports and telemetry exports can never disagree.
+    #[test]
+    fn phase_times_cells_registered() {
+        let mut p = PhaseTimes::default();
+        p.add("sample", 0.25);
+        p.add("sample", 0.25);
+        p.add_overlapped("publish", 0.125);
+        let snap = p.registry().snapshot();
+        assert_eq!(snap.counter("kss_phase_sample_nanos_total"), Some(500_000_000));
+        assert_eq!(snap.hist("kss_phase_sample_seconds").unwrap().count(), 2);
+        assert_eq!(snap.hist("kss_phase_sample_seconds").unwrap().p50(), 0.25);
+        assert_eq!(snap.counter("kss_phase_publish_bg_nanos_total"), Some(125_000_000));
+        // clone is a deep copy: mutating the clone leaves the original alone
+        let mut q = p.clone();
+        q.add("sample", 1.0);
+        assert!((p.total() - 0.5).abs() < 1e-12);
+        assert!((q.total() - 1.5).abs() < 1e-12);
     }
 
     #[test]

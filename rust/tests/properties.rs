@@ -276,3 +276,70 @@ fn prop_uniform_correction_recovers_partition_function() {
         assert!((est - z_true).abs() < 0.15 * z_true, "est {est} vs {z_true}");
     });
 }
+
+#[test]
+fn prop_histogram_quantile_bounded_and_merge_exact() {
+    // 6. the obs histogram is a faithful summary: quantile readout within
+    //    half the widest sub-bucket (6.25%) of the exact order statistic,
+    //    and snapshot merge identical to interleaved recording
+    use kss::obs::Histogram;
+    check("histogram summary fidelity", 20, |g: &mut Gen| {
+        let n = g.usize_in(50, 800);
+        let mut rng = Rng::new(g.case_seed ^ 0x0B5);
+        let mut vals: Vec<f64> = (0..n).map(|_| 2f64.powf(rng.f64() * 40.0 - 26.0)).collect();
+        let whole = Histogram::new();
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 { &a } else { &b }.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let s = whole.snapshot();
+        assert_eq!(merged.buckets(), s.buckets(), "merge != interleaved");
+        assert_eq!(merged.count(), s.count());
+        assert_eq!(merged.min(), s.min());
+        assert_eq!(merged.max(), s.max());
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for &q in &[0.1, 0.5, 0.95, 0.99] {
+            let rank = ((q * n as f64).ceil() as usize).max(1);
+            let exact = vals[rank - 1];
+            let got = s.quantile(q);
+            assert!(
+                (got - exact).abs() / exact <= 0.0625,
+                "q {q}: {got} vs exact {exact}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_monitor_estimators_match_exact_stats() {
+    // 7. the streaming monitors agree with util::stats ground truth:
+    //    uniform-proposal TV is exact, and ESS/m = 1 iff o = ln(m q)
+    use kss::obs::{ess_fraction, tv_from_pairs};
+    use kss::util::stats::tv_distance;
+    check("monitor estimators vs exact stats", 20, |g: &mut Gen| {
+        let n = g.usize_in(4, 96);
+        let mut rng = Rng::new(g.case_seed ^ 0xE55);
+        let o: Vec<f64> = (0..n).map(|_| rng.f64() * 6.0 - 3.0).collect();
+        let max_o = o.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = o.iter().map(|&x| (x - max_o).exp()).collect();
+        let z: f64 = e.iter().sum();
+        let p: Vec<f64> = e.iter().map(|&x| x / z).collect();
+        let uniform = vec![1.0 / n as f64; n];
+        let pairs: Vec<(f64, f64)> = o.iter().map(|&oi| (oi, 1.0 / n as f64)).collect();
+        let got = tv_from_pairs(&pairs).unwrap();
+        let exact = tv_distance(&p, &uniform);
+        assert!((got - exact).abs() < 1e-10, "TV {got} vs exact {exact}");
+        // matched proposal: o_i = ln(m q_i) gives uniform eq. (2) weights
+        let scored: Vec<(f64, f64)> =
+            p.iter().map(|&pi| ((n as f64 * pi).ln(), pi)).collect();
+        let f = ess_fraction(&scored).unwrap();
+        assert!((f - 1.0).abs() < 1e-10, "matched-proposal ESS fraction {f}");
+        // and q == p makes the TV estimate vanish
+        let exact_pairs: Vec<(f64, f64)> =
+            o.iter().zip(&p).map(|(&oi, &pi)| (oi, pi)).collect();
+        assert!(tv_from_pairs(&exact_pairs).unwrap() < 1e-10);
+    });
+}
