@@ -1,0 +1,235 @@
+//! Streaming-vocabulary acceptance bench: what does class churn cost?
+//!
+//! Measures, on a [`StreamingKernelSampler`] (quadratic kernel):
+//!
+//! * **insert / retire throughput** — the memtable/tombstone fast path,
+//!   with compaction left on its default policy so the folds it triggers
+//!   are charged to the ops that caused them (the production amortization);
+//! * **draw latency vs memtable fill** — the two-tier router's overhead as
+//!   the mutable tier grows (compaction disabled so the fill level holds);
+//! * **compaction vs per-op rebuild at 1% churn** — the LSM claim: absorb
+//!   `n/100` interleaved insert/retire ops through the memtable and fold
+//!   once, vs rebuilding the kernel tree after every op (the only way a
+//!   snapshot-only sampler could stay exact). Acceptance: ≥5x cheaper.
+//!
+//! No artifacts needed (pure L3). `cargo bench --bench vocab_churn`.
+
+use kss::bench_harness::{print_table, scale, write_json, BenchRow, Scale};
+use kss::sampler::kernel::QuadraticMap;
+use kss::sampler::{Sample, SampleInput, Sampler};
+use kss::util::rng::Rng;
+use kss::util::stats::Samples;
+use kss::vocab::{CompactionPolicy, StreamingKernelSampler};
+use std::time::Instant;
+
+fn seeded_sampler(n: usize, d: usize, rng: &mut Rng) -> StreamingKernelSampler<QuadraticMap> {
+    let mut s = StreamingKernelSampler::new(QuadraticMap::new(d, 100.0), n, None);
+    let mut emb = vec![0.0f32; n * d];
+    rng.fill_normal(&mut emb, 0.3);
+    s.reset_embeddings(&emb, n, d);
+    s
+}
+
+/// Time `ops` inserts (and optionally interleaved retires) under the
+/// default compaction policy, so the amortized fold cost is included.
+fn churn_throughput(n: usize, d: usize, ops: usize, retire: bool) -> (f64, usize) {
+    let mut rng = Rng::new(0xC0DE);
+    let mut sampler = seeded_sampler(n, d, &mut rng);
+    let mut row = vec![0.0f32; d];
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    let before = sampler.obs().compactions();
+    let t0 = Instant::now();
+    for i in 0..ops {
+        if retire && i % 2 == 1 {
+            let idx = rng.below(live.len() as u64) as usize;
+            let id = live.swap_remove(idx);
+            assert!(sampler.retire_class(id), "retire of live id {id} refused");
+        } else {
+            rng.fill_normal(&mut row, 0.3);
+            live.push(sampler.insert_class(&row));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, (sampler.obs().compactions() - before) as usize)
+}
+
+/// Per-draw latency with the memtable pinned at `fill` entries
+/// (compaction disabled so the fill level cannot collapse mid-run).
+fn draw_latency_at_fill(n: usize, d: usize, m: usize, fill: usize, draws: usize) -> Samples {
+    let mut rng = Rng::new(0xF111 ^ fill as u64);
+    let mut sampler =
+        seeded_sampler(n, d, &mut rng).with_policy(CompactionPolicy::manual());
+    let mut row = vec![0.0f32; d];
+    for _ in 0..fill {
+        rng.fill_normal(&mut row, 0.3);
+        sampler.insert_class(&row);
+    }
+    assert_eq!(sampler.memtable_len(), fill, "manual policy must hold the fill level");
+    let mut h = vec![0.0f32; d];
+    let mut out = Sample::with_capacity(m);
+    let mut lat = Samples::new();
+    for _ in 0..draws {
+        rng.fill_normal(&mut h, 1.0);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let t0 = Instant::now();
+        out.clear();
+        sampler.sample(&input, m, &mut rng, &mut out).expect("draw failed");
+        lat.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    lat
+}
+
+/// The LSM comparison at ~1% churn: streaming (memtable absorbs every op,
+/// one fold at the end) vs rebuilding the tree after every op.
+struct LsmResult {
+    churn_ops: usize,
+    streaming_s: f64,
+    compact_s: f64,
+    rebuild_per_op_s: f64,
+    speedup: f64,
+}
+
+fn lsm_vs_rebuild(n: usize, d: usize) -> LsmResult {
+    let churn_ops = (n / 100).max(8);
+    let mut rng = Rng::new(0x15A4);
+    let mut sampler =
+        seeded_sampler(n, d, &mut rng).with_policy(CompactionPolicy::manual());
+    let mut row = vec![0.0f32; d];
+    let mut live: Vec<u32> = (0..n as u32).collect();
+    let t0 = Instant::now();
+    for i in 0..churn_ops {
+        if i % 2 == 1 {
+            let idx = rng.below(live.len() as u64) as usize;
+            let id = live.swap_remove(idx);
+            assert!(sampler.retire_class(id));
+        } else {
+            rng.fill_normal(&mut row, 0.3);
+            live.push(sampler.insert_class(&row));
+        }
+    }
+    let t_compact = Instant::now();
+    sampler.compact();
+    let compact_s = t_compact.elapsed().as_secs_f64();
+    let streaming_s = t0.elapsed().as_secs_f64();
+
+    // Rebuild baseline: a from-scratch tree over the live set, which is
+    // what each churn op would cost without the memtable. Median of 3.
+    let (ids, rows) = sampler.live_classes();
+    let mut builds = Samples::new();
+    for _ in 0..3 {
+        let t = Instant::now();
+        let mut fresh =
+            StreamingKernelSampler::new(QuadraticMap::new(d, 100.0), ids.len(), None);
+        fresh.reset_embeddings(&rows, ids.len(), d);
+        std::hint::black_box(&fresh);
+        builds.push(t.elapsed().as_secs_f64());
+    }
+    let rebuild_per_op_s = builds.p50();
+    LsmResult {
+        churn_ops,
+        streaming_s,
+        compact_s,
+        rebuild_per_op_s,
+        speedup: rebuild_per_op_s * churn_ops as f64 / streaming_s,
+    }
+}
+
+fn main() {
+    let (n, d, m, ops, draws) = match scale() {
+        Scale::Quick => (20_000usize, 16usize, 8usize, 4_000usize, 2_000usize),
+        Scale::Full => (100_000, 32, 16, 20_000, 10_000),
+    };
+    println!("vocab churn bench: {n} classes × d={d}, m={m}");
+
+    let mut churn_rows: Vec<BenchRow> = Vec::new();
+    let (wall, folds) = churn_throughput(n, d, ops, false);
+    println!("insert-only: {ops} ops in {wall:.3}s ({folds} compactions amortized in)");
+    churn_rows.push(BenchRow {
+        name: format!("insert x{ops} (default policy)"),
+        mean_s: wall / ops as f64,
+        p50_s: wall / ops as f64,
+        p95_s: wall / ops as f64,
+        iters: ops,
+        items_per_iter: Some(1.0),
+    });
+    let (wall, folds) = churn_throughput(n, d, ops, true);
+    println!("insert+retire: {ops} ops in {wall:.3}s ({folds} compactions amortized in)");
+    churn_rows.push(BenchRow {
+        name: format!("insert/retire x{ops} (default policy)"),
+        mean_s: wall / ops as f64,
+        p50_s: wall / ops as f64,
+        p95_s: wall / ops as f64,
+        iters: ops,
+        items_per_iter: Some(1.0),
+    });
+
+    let mut draw_rows: Vec<BenchRow> = Vec::new();
+    for &fill in &[0usize, 64, 256, 1024] {
+        let lat = draw_latency_at_fill(n, d, m, fill, draws);
+        draw_rows.push(BenchRow {
+            name: format!("draw m={m} (memtable fill={fill})"),
+            mean_s: lat.mean(),
+            p50_s: lat.p50(),
+            p95_s: lat.p95(),
+            iters: draws,
+            items_per_iter: Some(m as f64),
+        });
+    }
+
+    let lsm = lsm_vs_rebuild(n, d);
+    let lsm_rows = vec![
+        BenchRow {
+            name: format!("streaming: {} churn ops + 1 fold", lsm.churn_ops),
+            mean_s: lsm.streaming_s,
+            p50_s: lsm.streaming_s,
+            p95_s: lsm.streaming_s,
+            iters: 1,
+            items_per_iter: Some(lsm.churn_ops as f64),
+        },
+        BenchRow {
+            name: "  of which: the single compaction".to_string(),
+            mean_s: lsm.compact_s,
+            p50_s: lsm.compact_s,
+            p95_s: lsm.compact_s,
+            iters: 1,
+            items_per_iter: None,
+        },
+        BenchRow {
+            name: format!("rebuild-per-op: {} x tree build", lsm.churn_ops),
+            mean_s: lsm.rebuild_per_op_s * lsm.churn_ops as f64,
+            p50_s: lsm.rebuild_per_op_s * lsm.churn_ops as f64,
+            p95_s: lsm.rebuild_per_op_s * lsm.churn_ops as f64,
+            iters: 1,
+            items_per_iter: Some(lsm.churn_ops as f64),
+        },
+    ];
+
+    print_table("churn op throughput (amortized, default compaction policy)", &churn_rows);
+    print_table("draw latency vs memtable fill", &draw_rows);
+    print_table("1% churn: LSM streaming vs rebuild-per-op", &lsm_rows);
+
+    println!(
+        "\nLSM speedup at 1% churn: {:.1}x (streaming {:.4}s vs {:.4}s rebuilding per op; \
+         one tree build = {:.4}s)",
+        lsm.speedup,
+        lsm.streaming_s,
+        lsm.rebuild_per_op_s * lsm.churn_ops as f64,
+        lsm.rebuild_per_op_s
+    );
+    assert!(
+        lsm.speedup >= 5.0,
+        "LSM amortization regressed: only {:.1}x cheaper than rebuild-per-op (need >= 5x)",
+        lsm.speedup
+    );
+    println!("(acceptance: >= 5x — passed)");
+
+    write_json(
+        "vocab",
+        &[
+            ("churn throughput", &churn_rows),
+            ("draw latency vs fill", &draw_rows),
+            ("lsm vs rebuild", &lsm_rows),
+        ],
+    );
+}

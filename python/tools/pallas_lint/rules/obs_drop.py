@@ -44,8 +44,10 @@ class ObsVisibleDrops(Rule):
     )
 
     def applies(self, relpath: str) -> bool:
-        return relpath.startswith("rust/src/serve/") or relpath.startswith(
-            "rust/src/coordinator/"
+        return (
+            relpath.startswith("rust/src/serve/")
+            or relpath.startswith("rust/src/coordinator/")
+            or relpath.startswith("rust/src/vocab/")
         )
 
     def _counted(self, sf: SourceFile, line: int) -> bool:

@@ -31,6 +31,8 @@ WORKER_FILES = {
     "rust/src/serve/reader_sampler.rs": ("sample", "sample_batch", "prob"),
     "rust/src/serve/shard.rs": ("draw_from_shards",),
     "rust/src/coordinator/pipeline.rs": ("spawn",),
+    "rust/src/vocab/streaming.rs": ("draw_from_tiers", "prob_from_tiers"),
+    "rust/src/vocab/publisher.rs": ("sample", "prob", "refresh_snapshots"),
 }
 
 _PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}

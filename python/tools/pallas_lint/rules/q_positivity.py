@@ -41,8 +41,10 @@ class QPositivity(Rule):
     )
 
     def applies(self, relpath: str) -> bool:
-        return relpath.startswith("rust/src/sampler/") or relpath.startswith(
-            "rust/src/serve/"
+        return (
+            relpath.startswith("rust/src/sampler/")
+            or relpath.startswith("rust/src/serve/")
+            or relpath.startswith("rust/src/vocab/")
         )
 
     def _divisor_chain(self, sf: SourceFile, idx: int) -> str:

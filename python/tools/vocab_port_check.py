@@ -1,0 +1,662 @@
+#!/usr/bin/env python3
+"""Line-for-line Python port of the streaming-vocabulary subsystem
+(vocab/memtable.rs + vocab/streaming.rs + vocab/publisher.rs +
+serve/snapshot.rs's compaction barrier), validated against the same
+properties the Rust tests pin.
+
+No rust toolchain exists in the build container (see
+.claude/skills/verify/SKILL.md), so — as in PRs 1-7 — the algorithmic core
+of the change is ported faithfully (same data layout, same guards, same
+arithmetic order where it matters) and property-checked here. The kernel
+tree is imported from serve_port_check.py (the line-for-line port of
+tree.rs); this file adds the vocab-specific pieces:
+
+  1. memtable: explicit slot <-> global-id mapping survives insert /
+     swap-remove / update churn over a holey id space; the flat-CDF draw
+     returns member ids whose weight is the kernel score, bitwise
+  2. tier router q algebra: at EVERY point of an interleaved insert /
+     retire / update / compact schedule, the composite
+     q = (M_tier/SumM) * q_tier of each draw matches the closed-form
+     K(h,w_c)/SumM over the live union to <= 1e-12 relative, and prob()
+     agrees on every live class
+  3. tombstone masking: retired classes are never drawn (mass exclusion +
+     rejection), their prob is None, and the composite partition total
+     equals the sum of live kernel masses
+  4. replay-log compaction: the publisher's Compact barrier record folds
+     the memtable into an arena BITWISE equal to a from-scratch rebuild
+     over the live set; pre-barrier pinned arenas stay untouched,
+     pre-barrier free arenas are discarded (never replayed across the
+     barrier), and post-barrier update replay stays exact
+
+Run: python3 python/tools/vocab_port_check.py
+"""
+import math
+import os
+import random
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from serve_port_check import (  # noqa: E402
+    QuadraticMap,
+    Tree,
+    exact_dist,
+    sanitize_mass,
+    step_down_to_positive,
+)
+
+TIER_ARENA, TIER_MEM = 0, 1
+REJECT_CAP = 64
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+
+
+def fill_cum(weights):
+    """Port of ops::fill_cum_into — prefix sums, returns the total."""
+    acc, cum = 0.0, []
+    for w in weights:
+        assert not (w < 0.0), "negative weight in CDF"
+        acc += w
+        cum.append(acc)
+    return cum, acc
+
+
+def sample_cum(cum, total, rng):
+    """Port of util::rng::sample_cum (partition_point + last-positive)."""
+    assert total > 0.0 and math.isfinite(total)
+    u = rng.random() * total
+    idx = sum(1 for c in cum if c <= u)
+    if idx < len(cum):
+        return idx
+    for i in reversed(range(len(cum))):
+        lo = 0.0 if i == 0 else cum[i - 1]
+        if cum[i] - lo > 0.0:
+            return i
+    raise AssertionError("CDF invariant: total mass > 0")
+
+
+def clamp_q(q):
+    return min(max(q, F64_MIN_POSITIVE), 1.7976931348623157e308)
+
+
+class Memtable:
+    """Port of vocab/memtable.rs Memtable."""
+
+    def __init__(self, d):
+        self.d = d
+        self.ids = []  # slot -> global id
+        self.rows = []  # slot-major flat f32 rows
+        self.index = {}  # global id -> slot
+
+    def __len__(self):
+        return len(self.ids)
+
+    def contains(self, gid):
+        return gid in self.index
+
+    def row(self, slot):
+        return self.rows[slot * self.d:(slot + 1) * self.d]
+
+    def insert(self, gid, row):
+        assert len(row) == self.d and not self.contains(gid)
+        self.index[gid] = len(self.ids)
+        self.ids.append(gid)
+        self.rows.extend(np.float32(v) for v in row)
+
+    def remove(self, gid):
+        if gid not in self.index:
+            return False
+        slot = self.index.pop(gid)
+        last = len(self.ids) - 1
+        if slot != last:
+            self.ids[slot] = self.ids[last]
+            self.rows[slot * self.d:(slot + 1) * self.d] = self.rows[last * self.d:]
+            self.index[self.ids[slot]] = slot
+        self.ids.pop()
+        del self.rows[last * self.d:]
+        return True
+
+    def update_row(self, gid, row):
+        if gid not in self.index:
+            return False
+        slot = self.index[gid]
+        self.rows[slot * self.d:(slot + 1) * self.d] = [np.float32(v) for v in row]
+        return True
+
+    def clear(self):
+        self.ids, self.rows, self.index = [], [], {}
+
+    def weights(self, fmap, h):
+        return [fmap.kernel(h, self.row(s)) for s in range(len(self.ids))]
+
+    def draw_prepared(self, cum, total, rng):
+        slot = sample_cum(cum, total, rng)
+        return slot, self.ids[slot]
+
+
+class TombstoneSet:
+    """Port of vocab/memtable.rs TombstoneSet (sorted slots + frozen rows)."""
+
+    def __init__(self, d):
+        self.d = d
+        self.slots = []
+        self.rows = []
+
+    def __len__(self):
+        return len(self.slots)
+
+    def contains(self, slot):
+        import bisect
+        i = bisect.bisect_left(self.slots, slot)
+        return i < len(self.slots) and self.slots[i] == slot
+
+    def insert(self, slot, row):
+        import bisect
+        pos = bisect.bisect_left(self.slots, slot)
+        if pos < len(self.slots) and self.slots[pos] == slot:
+            return False
+        self.slots.insert(pos, slot)
+        self.rows[pos * self.d:pos * self.d] = [np.float32(v) for v in row]
+        return True
+
+    def clear(self):
+        self.slots, self.rows = [], []
+
+    def mass(self, fmap, h):
+        if not self.slots:
+            return 0.0
+        ks = [
+            sanitize_mass(fmap.kernel(h, self.rows[i * self.d:(i + 1) * self.d]))
+            for i in range(len(self.slots))
+        ]
+        _, total = fill_cum(ks)
+        return total
+
+
+def draw_from_tiers(tree, arena_ids, memtable, tombs, h, m, rng):
+    """Port of vocab/streaming.rs draw_from_tiers. Returns [(gid, q)]."""
+    fmap = tree.map
+    arena_n = len(arena_ids)
+    arena_live_n = arena_n - len(tombs)
+    live_n = arena_live_n + len(memtable)
+    assert live_n > 0, "streaming sampler has no live classes"
+
+    phi = fmap.phi(h)
+    arena_raw = tree.partition(phi)
+    tomb_mass = tombs.mass(fmap, h)
+    mem_w = memtable.weights(fmap, h)
+    mem_cum, mem_mass = fill_cum(mem_w)
+    masses = [
+        0.0 if arena_live_n == 0 else sanitize_mass(arena_raw - tomb_mass),
+        0.0 if not len(memtable) else sanitize_mass(mem_mass),
+    ]
+    cum, total = fill_cum(masses)
+
+    tree_scratch = None
+    out = []
+    for _ in range(m):
+        if total > 0.0 and math.isfinite(total):
+            u = rng.random() * total
+            idx = min(sum(1 for c in cum if c <= u), 1)
+            idx = step_down_to_positive(cum, idx)
+            tier, p_tier, clean = idx, masses[idx] / total, True
+        elif arena_live_n > 0 and len(memtable) > 0:
+            tier, p_tier, clean = rng.randrange(2), 0.5, False
+        elif arena_live_n > 0:
+            tier, p_tier, clean = TIER_ARENA, 1.0, False
+        else:
+            tier, p_tier, clean = TIER_MEM, 1.0, False
+
+        if tier == TIER_MEM:
+            if mem_mass > 0.0 and math.isfinite(mem_mass):
+                slot, gid = memtable.draw_prepared(mem_cum, mem_mass, rng)
+                if clean:
+                    q = clamp_q(mem_w[slot] / total)
+                else:
+                    lo = 0.0 if slot == 0 else mem_cum[slot - 1]
+                    q = clamp_q(p_tier * ((mem_cum[slot] - lo) / mem_mass))
+            else:
+                slot = rng.randrange(len(memtable))
+                gid = memtable.ids[slot]
+                q = clamp_q(p_tier / len(memtable))
+            out.append((gid, q))
+            continue
+
+        if tree_scratch is None:
+            tree_scratch = tree.begin_example_prepared(phi, arena_raw)
+        chosen = None
+        for _ in range(REJECT_CAP):
+            slot, q_tree = tree.draw(h, tree_scratch, rng)
+            if not tombs.contains(slot):
+                chosen = (slot, q_tree)
+                break
+        if chosen is not None:
+            slot, q_tree = chosen
+            if clean:
+                k = sanitize_mass(fmap.kernel(h, tree.emb[slot]))
+                q = clamp_q(k / total)
+            else:
+                q = clamp_q(p_tier * q_tree)
+        else:
+            pick = rng.randrange(arena_live_n)
+            seen, slot = 0, 0
+            for cand in range(arena_n):
+                if tombs.contains(cand):
+                    continue
+                if seen == pick:
+                    slot = cand
+                    break
+                seen += 1
+            q = clamp_q(p_tier / arena_live_n)
+        out.append((arena_ids[slot], q))
+    return out
+
+
+def prob_from_tiers(tree, arena_index, memtable, tombs, h, gid):
+    """Port of vocab/streaming.rs prob_from_tiers."""
+    fmap = tree.map
+    if memtable.contains(gid):
+        k = fmap.kernel(h, memtable.row(memtable.index[gid]))
+    elif gid in arena_index:
+        slot = arena_index[gid]
+        if tombs.contains(slot):
+            return None
+        k = fmap.kernel(h, tree.emb[slot])
+    else:
+        return None
+    phi = fmap.phi(h)
+    arena_raw = tree.partition(phi)
+    tomb_mass = tombs.mass(fmap, h)
+    _, mem_mass = fill_cum(memtable.weights(fmap, h))
+    arena_live_n = len(arena_index) - len(tombs)
+    m_arena = 0.0 if arena_live_n == 0 else sanitize_mass(arena_raw - tomb_mass)
+    m_mem = 0.0 if not len(memtable) else sanitize_mass(mem_mass)
+    total = m_arena + m_mem
+    if not (total > 0.0 and math.isfinite(total)):
+        return None
+    return k / total
+
+
+class StreamingSampler:
+    """Port of vocab/streaming.rs StreamingKernelSampler (manual policy)."""
+
+    def __init__(self, fmap, n, leaf):
+        self.fmap, self.leaf = fmap, leaf
+        self.tree = Tree(fmap, n, leaf)
+        self.arena_ids = list(range(n))
+        self.arena_index = {i: i for i in range(n)}
+        self.memtable = Memtable(fmap.d)
+        self.tombs = TombstoneSet(fmap.d)
+        self.next_id = n
+
+    def reset(self, emb):
+        self.tree.reset(emb)
+
+    def live_len(self):
+        return len(self.arena_ids) - len(self.tombs) + len(self.memtable)
+
+    def is_live(self, gid):
+        if self.memtable.contains(gid):
+            return True
+        slot = self.arena_index.get(gid)
+        return slot is not None and not self.tombs.contains(slot)
+
+    def insert_class(self, row):
+        gid = self.next_id
+        assert not self.is_live(gid)
+        self.memtable.insert(gid, row)
+        self.next_id = max(self.next_id, gid + 1)
+        return gid
+
+    def retire_class(self, gid):
+        if self.live_len() <= 1:
+            return False
+        if self.memtable.remove(gid):
+            return True
+        slot = self.arena_index.get(gid)
+        if slot is None or self.tombs.contains(slot):
+            return False
+        self.tombs.insert(slot, self.tree.emb[slot].copy())
+        return True
+
+    def update_many(self, gids, rows):
+        arena, dropped = [], 0
+        for gid, row in zip(gids, rows):
+            if self.memtable.update_row(gid, row):
+                continue
+            slot = self.arena_index.get(gid)
+            if slot is not None and not self.tombs.contains(slot):
+                arena.append((slot, row))
+            else:
+                dropped += 1
+        if arena:
+            arena.sort(key=lambda t: t[0])
+            self.tree.update_many([s for s, _ in arena], [r for _, r in arena])
+        return dropped
+
+    def live_classes(self):
+        """Canonical compaction order: arena slots ascending minus
+        tombstones, then memtable slots."""
+        ids, rows = [], []
+        for slot in range(len(self.arena_ids)):
+            if self.tombs.contains(slot):
+                continue
+            ids.append(self.arena_ids[slot])
+            rows.append(self.tree.emb[slot].copy())
+        for slot in range(len(self.memtable)):
+            ids.append(self.memtable.ids[slot])
+            rows.append(np.array(self.memtable.row(slot), dtype=np.float32))
+        return ids, rows
+
+    def compact(self):
+        ids, rows = self.live_classes()
+        tree = Tree(self.fmap, len(ids), self.leaf)
+        tree.reset(np.array(rows, dtype=np.float32))
+        self.tree = tree
+        self.arena_ids = ids
+        self.arena_index = {gid: slot for slot, gid in enumerate(ids)}
+        self.memtable.clear()
+        self.tombs.clear()
+
+    def sample(self, h, m, rng):
+        return draw_from_tiers(
+            self.tree, self.arena_ids, self.memtable, self.tombs, h, m, rng
+        )
+
+    def prob(self, h, gid):
+        return prob_from_tiers(
+            self.tree, self.arena_index, self.memtable, self.tombs, h, gid
+        )
+
+
+class VocabPublisher:
+    """Port of the arena replay log with the Compact barrier
+    (serve/snapshot.rs TreePublisher: Update/Compact records, stale-arena
+    discard, reclaim + fast-forward replay) driving the composite fold of
+    vocab/publisher.rs compact()."""
+
+    MAX_RETIRED = 6
+
+    def __init__(self, tree):
+        self.shadow = tree
+        self.gen = 0
+        snap = {"gen": 0, "tree": tree.clone(), "pins": 0}
+        self.current = snap
+        self.retired = [snap]
+        self.log = []  # ('update', gen, classes, rows) | ('compact', gen)
+        self.last_compact_gen = 0
+        self.stats = {
+            "publishes": 0, "reclaimed": 0, "copied": 0,
+            "replayed": 0, "compactions": 0, "discarded_stale": 0,
+        }
+
+    def _discard_stale_retired(self):
+        if self.last_compact_gen == 0:
+            return
+        keep = [s for s in self.retired if s["gen"] >= self.last_compact_gen]
+        self.stats["discarded_stale"] += len(self.retired) - len(keep)
+        self.retired = keep
+
+    def _publish_next(self, snap):
+        self.retired.append(snap)
+        self.current = snap
+        self.stats["publishes"] += 1
+        while len(self.retired) > self.MAX_RETIRED:
+            self.retired.pop(0)
+        min_gen = self.retired[0]["gen"] if self.retired else self.gen
+        self.log = [r for r in self.log if r[1] > min_gen]
+        return snap
+
+    def update_and_publish(self, classes, rows):
+        self.shadow.update_many(classes, rows)
+        self.gen += 1
+        self.log.append(("update", self.gen, list(classes), [list(r) for r in rows]))
+        self._discard_stale_retired()
+        reclaimed = None
+        i = 0
+        while i < len(self.retired):
+            cand = self.retired[i]
+            if cand is self.current or cand["pins"] > 0:
+                i += 1
+                continue
+            reclaimed = self.retired.pop(i)
+        if reclaimed is not None:
+            for rec in self.log:
+                if rec[0] == "update" and rec[1] > reclaimed["gen"]:
+                    reclaimed["tree"].update_many(rec[2], rec[3])
+                    self.stats["replayed"] += 1
+                elif rec[0] == "compact":
+                    assert rec[1] <= reclaimed["gen"], (
+                        "replay crossed a compaction barrier"
+                    )
+            reclaimed["gen"] = self.gen
+            self.stats["reclaimed"] += 1
+            nxt = reclaimed
+        else:
+            self.stats["copied"] += 1
+            nxt = {"gen": self.gen, "tree": self.shadow.clone(), "pins": 0}
+        return self._publish_next(nxt)
+
+    def compact_and_publish(self, tree):
+        self.shadow = tree
+        self.gen += 1
+        self.last_compact_gen = self.gen
+        self.log.append(("compact", self.gen))
+        self._discard_stale_retired()
+        self.stats["compactions"] += 1
+        nxt = {"gen": self.gen, "tree": self.shadow.clone(), "pins": 0}
+        return self._publish_next(nxt)
+
+
+# --- checks -------------------------------------------------------------
+def check_memtable(trials=30):
+    rng = random.Random(1)
+    fmap = QuadraticMap(3, 50.0)
+    for case in range(trials):
+        mt = Memtable(3)
+        npr = np.random.default_rng(case)
+        live = {}
+        next_id = 1000 * (case + 1)  # deliberately holey, non-dense ids
+        for _ in range(60):
+            op = rng.random()
+            if op < 0.5 or not live:
+                row = npr.normal(0, 0.8, 3).astype(np.float32)
+                mt.insert(next_id, row)
+                live[next_id] = row
+                next_id += rng.randint(1, 97)
+            elif op < 0.75:
+                gid = rng.choice(list(live))
+                assert mt.remove(gid)
+                assert not mt.remove(gid), "double remove"
+                del live[gid]
+            else:
+                gid = rng.choice(list(live))
+                row = npr.normal(0, 0.8, 3).astype(np.float32)
+                assert mt.update_row(gid, row)
+                live[gid] = row
+            # the slot <-> id mapping is exactly inverse after every op
+            assert len(mt) == len(live)
+            for gid, row in live.items():
+                slot = mt.index[gid]
+                assert mt.ids[slot] == gid
+                assert np.array_equal(np.float32(mt.row(slot)), row)
+        if not live:
+            continue
+        h = npr.normal(0, 1, 3).astype(np.float32)
+        w = mt.weights(fmap, h)
+        cum, total = fill_cum(w)
+        for _ in range(50):
+            slot, gid = mt.draw_prepared(cum, total, rng)
+            assert gid in live, f"alien id {gid}"
+            # the slot's weight is the kernel recomputed from its row, bitwise
+            assert w[slot] == fmap.kernel(h, mt.row(slot))
+    print("  memtable slot<->id mapping + flat-CDF draw over holey ids: OK")
+
+
+def live_union_dist(s, h):
+    """The reference: exact kernel distribution over the live class set,
+    built from scratch (the q every draw must report to <= 1e-12 rel)."""
+    ids, rows = s.live_classes()
+    probs = exact_dist(s.fmap, h, np.array(rows, dtype=np.float32))
+    return {gid: p for gid, p in zip(ids, probs)}
+
+
+def check_tier_algebra(trials=8):
+    rng = random.Random(2)
+    for case in range(trials):
+        n0 = rng.randint(8, 20)
+        d = rng.randint(2, 4)
+        fmap = QuadraticMap(d, rng.uniform(20.0, 150.0))
+        npr = np.random.default_rng(100 + case)
+        s = StreamingSampler(fmap, n0, 4)
+        s.reset(npr.normal(0, 0.6, (n0, d)).astype(np.float32))
+        retired = []
+        for step in range(30):
+            kind = step % 8
+            if kind in (0, 3, 6):
+                s.insert_class(npr.normal(0, 0.6, d).astype(np.float32))
+            elif kind in (1, 5):
+                if s.live_len() > 3:
+                    ids, _ = s.live_classes()
+                    gid = rng.choice(ids)
+                    assert s.retire_class(gid)
+                    retired.append(gid)
+            elif kind == 7:
+                s.compact()
+                assert len(s.memtable) == 0 and len(s.tombs) == 0
+            else:
+                ids, _ = s.live_classes()
+                picks = sorted(rng.sample(ids, min(3, len(ids))))
+                rows = npr.normal(0, 0.6, (len(picks), d)).astype(np.float32)
+                assert s.update_many(picks, rows) == 0
+            h = npr.normal(0, 1, d).astype(np.float32)
+            want = live_union_dist(s, h)
+            for gid, q in s.sample(h, 8, rng):
+                assert s.is_live(gid), f"step {step}: drew non-live class {gid}"
+                assert gid not in retired or s.is_live(gid)
+                ref = want[gid]
+                assert abs(q - ref) <= 1e-12 * max(abs(q), abs(ref)), (
+                    case, step, gid, q, ref,
+                )
+            for gid, ref in want.items():
+                got = s.prob(h, gid)
+                assert abs(got - ref) <= 1e-12 * max(abs(got), abs(ref))
+            for gid in retired[:3]:
+                if not s.is_live(gid):
+                    assert s.prob(h, gid) is None
+    print("  tier router q == from-scratch union tree (<=1e-12 rel), all steps: OK")
+
+
+def check_tombstone_masking():
+    rng = random.Random(3)
+    n, d = 32, 3
+    fmap = QuadraticMap(d, 100.0)
+    npr = np.random.default_rng(7)
+    s = StreamingSampler(fmap, n, 4)
+    s.reset(npr.normal(0, 0.7, (n, d)).astype(np.float32))
+    dead = list(range(0, 30, 2))[:15]
+    for gid in dead:
+        assert s.retire_class(gid)
+    assert len(s.tombs) == 15
+    h = npr.normal(0, 1, d).astype(np.float32)
+    # mass exclusion: the composite total equals the sum of live kernels
+    phi = fmap.phi(h)
+    composite = s.tree.partition(phi) - s.tombs.mass(fmap, h)
+    live_sum = sum(
+        fmap.kernel(h, s.tree.emb[slot])
+        for slot in range(n)
+        if not s.tombs.contains(slot)
+    )
+    assert abs(composite - live_sum) <= 1e-9 * live_sum, (composite, live_sum)
+    # rejection: tombstoned classes never appear, q stays positive finite,
+    # and the empirical conditional distribution matches the live union
+    counts = {}
+    draws = 40_000
+    want = live_union_dist(s, h)
+    for _ in range(draws // 25):
+        for gid, q in s.sample(h, 25, rng):
+            assert gid not in dead, f"drew tombstoned class {gid}"
+            assert q > 0.0 and math.isfinite(q)
+            counts[gid] = counts.get(gid, 0) + 1
+    stat = sum(
+        (counts.get(g, 0) - p * draws) ** 2 / (p * draws)
+        for g, p in want.items()
+        if p * draws >= 1.0
+    )
+    df = len(want) - 1
+    assert stat < df + 5 * math.sqrt(2 * df), (stat, df)
+    # updates to tombstoned and unknown ids are dropped, countably
+    assert s.update_many([0, 1], [np.zeros(d, np.float32)] * 2) == 1
+    assert s.update_many([99999], [np.zeros(d, np.float32)]) == 1
+    print(f"  tombstone masking (mass exclusion + rejection, chi2 {stat:.1f}, df {df}): OK")
+
+
+def check_compaction_replay(trials=10):
+    rng = random.Random(4)
+    for case in range(trials):
+        n0 = rng.randint(8, 16)
+        d = rng.randint(2, 3)
+        fmap = QuadraticMap(d, 100.0)
+        npr = np.random.default_rng(500 + case)
+        emb = npr.normal(0, 0.5, (n0, d)).astype(np.float32)
+        base = Tree(fmap, n0, 4)
+        base.reset(emb)
+        # composite writer: streaming state + arena replay-log publisher
+        s = StreamingSampler(fmap, n0, 4)
+        s.reset(emb)
+        pub = VocabPublisher(base)
+        pinned = pub.current
+        pinned["pins"] += 1
+        pinned_z = pinned["tree"].z.copy()
+        for step in range(18):
+            kind = step % 6
+            if kind in (0, 3):
+                s.insert_class(npr.normal(0, 0.5, d).astype(np.float32))
+            elif kind == 1:
+                ids, _ = s.live_classes()
+                s.retire_class(rng.choice(ids))
+            elif kind == 4:
+                # the vocab/publisher.rs compact(): gather the live set,
+                # build a fresh tree, push it through the barrier
+                s.compact()
+                _, rows = s.live_classes()
+                tree = Tree(fmap, len(rows), 4)
+                tree.reset(np.array(rows, dtype=np.float32))
+                snap = pub.compact_and_publish(tree)
+                # bitwise equal to a from-scratch rebuild over the live set
+                rebuild = Tree(fmap, len(rows), 4)
+                rebuild.reset(np.array(rows, dtype=np.float32))
+                assert np.array_equal(snap["tree"].z, rebuild.z), (case, step)
+                assert np.array_equal(snap["tree"].emb, rebuild.emb)
+                # pre-barrier arenas left the reclaim queue
+                assert all(r["gen"] >= pub.last_compact_gen for r in pub.retired)
+            else:
+                ids, _ = s.live_classes()
+                # arena-resident live classes route through the publisher
+                arena = sorted(
+                    s.arena_index[g] for g in ids
+                    if g in s.arena_index and not s.tombs.contains(s.arena_index[g])
+                )[:3]
+                if arena:
+                    rows = npr.normal(0, 0.5, (len(arena), d)).astype(np.float32)
+                    s.tree.update_many(arena, rows)
+                    snap = pub.update_and_publish(arena, rows)
+                    # replay/reclaim == the straight-line shadow, bitwise
+                    assert np.array_equal(snap["tree"].z, pub.shadow.z), (case, step)
+                    assert np.array_equal(snap["tree"].emb, pub.shadow.emb)
+            # the streaming arena and the published arena never diverge
+            assert np.array_equal(pub.current["tree"].z, s.tree.z), (case, step)
+        assert pub.stats["compactions"] >= 3, pub.stats
+        assert pub.stats["discarded_stale"] >= 1, pub.stats
+        # the pinned pre-barrier generation was never mutated
+        assert np.array_equal(pinned["tree"].z, pinned_z), "pinned generation mutated"
+    print("  replay-log compaction: barrier fold == from-scratch rebuild (bitwise): OK")
+
+
+if __name__ == "__main__":
+    print("streaming-vocabulary port checks:")
+    check_memtable()
+    check_tier_algebra()
+    check_tombstone_masking()
+    check_compaction_replay()
+    print("all streaming-vocabulary port checks passed")

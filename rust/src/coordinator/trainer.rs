@@ -104,6 +104,12 @@ fn snapshot_backed_parts(
     let shards = match name {
         "quadratic" | "rff" => 1,
         "quadratic-sharded" | "rff-sharded" => 4,
+        // the streaming samplers own their vocabulary (memtable +
+        // tombstones + compactor) and must receive churn-aware
+        // update_many through the legacy mutable path at pipeline depth 1
+        // — a fixed-shard snapshot split cannot represent a class set
+        // that changes between steps
+        "quadratic-streaming" | "rff-streaming" => return None,
         _ => return None,
     };
     fn parts<M: FeatureMap + Clone + 'static>(

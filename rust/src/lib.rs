@@ -47,6 +47,10 @@
 //!   spans wired through the pipeline/serve/sampler hot layers, online
 //!   sampler-quality monitors (streaming TV-to-exact, eq. (2) ESS), and
 //!   the JSONL + Prometheus-text export paths.
+//! * [`vocab`] — streaming vocabulary: LSM-style two-tier sampler
+//!   (memtable + arena + tombstones behind a mass router) for online class
+//!   insertion/retirement with exact composite q, plus the compactor that
+//!   folds the memtable into a fresh arena generation.
 //! * [`hsm`] — hierarchical softmax baseline (related-work comparison).
 //! * [`bench_harness`] — timing/stats harness used by `benches/` (criterion
 //!   is unavailable offline); emits machine-readable `BENCH_*.json` next to
@@ -66,6 +70,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod serve;
 pub mod util;
+pub mod vocab;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -107,6 +107,16 @@ fn serve_specs() -> Vec<OptSpec> {
             help: "write Prometheus exposition here on exit",
             default: Some("".into()),
         },
+        OptSpec {
+            name: "scenario",
+            help: "load (sharded index) | churn (streaming vocabulary)",
+            default: Some("load".into()),
+        },
+        OptSpec { name: "insert-every", help: "churn: insert 1 class every k rounds (0=off)", default: Some("1".into()) },
+        OptSpec { name: "retire-every", help: "churn: retire 1 class every k rounds (0=off)", default: Some("2".into()) },
+        OptSpec { name: "update-batch", help: "churn: classes re-embedded per round", default: Some("16".into()) },
+        OptSpec { name: "memtable-cap", help: "churn: fold memtable at this size", default: Some("256".into()) },
+        OptSpec { name: "tombstone-frac", help: "churn: fold when tombstones exceed this arena fraction", default: Some("0.25".into()) },
     ]
 }
 
@@ -150,6 +160,11 @@ fn run(argv: Vec<String>) -> Result<()> {
 }
 
 fn serve_cmd(args: &Args) -> Result<()> {
+    match args.get_string_or("scenario", "load").as_str() {
+        "load" => {}
+        "churn" => return churn_cmd(args),
+        other => anyhow::bail!("unknown --scenario '{other}' (known: load, churn)"),
+    }
     let cfg = LoadGenConfig {
         n_classes: args.get_usize("classes", 10_000)?,
         d: args.get_usize("d", 16)?,
@@ -223,6 +238,89 @@ fn serve_cmd(args: &Args) -> Result<()> {
     anyhow::ensure!(
         report.completed > 0,
         "no requests completed — the serving stack is wedged"
+    );
+    anyhow::ensure!(
+        report.deadline_miss_rate <= miss_threshold,
+        "deadline-miss rate {:.3}% exceeds threshold {:.3}%",
+        report.deadline_miss_rate * 100.0,
+        miss_threshold * 100.0
+    );
+    Ok(())
+}
+
+/// `kss serve --scenario churn`: the streaming-vocabulary closed loop —
+/// readers sample composite snapshots (every draw asserted q-positive and
+/// live in its own generation; violations panic inside the run) while the
+/// writer inserts/retires/re-embeds classes. Exits non-zero when the
+/// deadline-miss rate exceeds `--miss-threshold`.
+fn churn_cmd(args: &Args) -> Result<()> {
+    let cfg = kss::serve::ChurnConfig {
+        n_classes: args.get_usize("classes", 10_000)?,
+        d: args.get_usize("d", 16)?,
+        kernel: kss::serve::ServeKernel::parse(&args.get_string_or("kernel", "quadratic"))?,
+        alpha: args.get_f64("alpha", 100.0)?,
+        rff_dim: args.get_usize("rff-dim", 0)?,
+        clients: args.get_usize("clients", 4)?,
+        draws: args.get_usize("requests", 1_000)?,
+        m: args.get_usize("m", 8)?,
+        insert_every: args.get_usize("insert-every", 1)?,
+        retire_every: args.get_usize("retire-every", 2)?,
+        update_batch: args.get_usize("update-batch", 16)?,
+        policy: kss::vocab::CompactionPolicy {
+            memtable_cap: args.get_usize("memtable-cap", 256)?,
+            max_tombstone_frac: args.get_f64("tombstone-frac", 0.25)?,
+        },
+        deadline: Duration::from_millis(args.get_u64("deadline-ms", 20)?),
+        seed: args.get_u64("seed", 42)?,
+        metrics_path: {
+            let p = args.get_string_or("metrics-path", "");
+            if p.is_empty() { None } else { Some(PathBuf::from(p)) }
+        },
+    };
+    let miss_threshold = args.get_f64("miss-threshold", 0.05)?;
+    info!(
+        "serve churn test: {} classes × d={} ({:?} kernel), {} clients × {} draws, \
+         insert every {}, retire every {}, memtable cap {}",
+        cfg.n_classes,
+        cfg.d,
+        cfg.kernel,
+        cfg.clients,
+        cfg.draws,
+        cfg.insert_every,
+        cfg.retire_every,
+        cfg.policy.memtable_cap
+    );
+    let report = kss::serve::run_churn_test(&cfg);
+    println!("serve churn test ({:.2}s wall):", report.wall_s);
+    println!("  draws            {:>10}  ({:.0} req/s)", report.draws, report.throughput_rps);
+    println!(
+        "  latency          p50 {:.3} ms  p95 {:.3} ms  max {:.3} ms",
+        report.latency_p50_s * 1e3,
+        report.latency_p95_s * 1e3,
+        report.latency_max_s * 1e3
+    );
+    println!(
+        "  deadline misses  {:>9.3}%  (budget {:.1} ms, threshold {:.1}%)",
+        report.deadline_miss_rate * 100.0,
+        cfg.deadline.as_secs_f64() * 1e3,
+        miss_threshold * 100.0
+    );
+    println!(
+        "  churn            {} inserted, {} retired, {} compactions, {} live at exit",
+        report.inserts, report.retires, report.compactions, report.live_classes
+    );
+    println!(
+        "  tier routing     arena {} / memtable {} negatives",
+        report.tier_arena, report.tier_memtable
+    );
+    match &cfg.metrics_path {
+        Some(p) => println!("  metrics          written to {}", p.display()),
+        None => println!("--- metrics exposition ---\n{}", report.metrics_text),
+    }
+    anyhow::ensure!(report.draws > 0, "no draws completed — the churn loop is wedged");
+    anyhow::ensure!(
+        report.inserts > 0 || cfg.insert_every == 0,
+        "writer never inserted a class"
     );
     anyhow::ensure!(
         report.deadline_miss_rate <= miss_threshold,

@@ -15,6 +15,16 @@
 //! overflow-proof at any logit scale. The CDF fill is
 //! [`crate::ops::fill_cum`]: weights are cast to f32 per element but the
 //! prefix sums accumulate in f64 — the long sum is never f32.
+//!
+//! # Dense-index contract
+//!
+//! Like [`crate::util::rng::Cdf`], everything here is **slot-addressed**:
+//! the logits row position `j` *is* the class id, dense `0..C`. A holey id
+//! space (streaming vocabulary after retirement) must not reach this
+//! sampler directly — a global id used as a row index aliases into another
+//! class's logit and reports a plausible but wrong q. Holey catalogs go
+//! through `crate::vocab` (tree tiers) or [`crate::util::rng::IdCdf`]
+//! (flat), both of which carry the id→slot map explicitly.
 
 use super::KernelKind;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};

@@ -355,6 +355,14 @@ pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
     SamplerInfo { name: "rff", summary: "positive random features ≈ exp kernel, D = 4d" },
     SamplerInfo { name: "rff-sharded", summary: "rff tree split into S router-merged shards" },
     SamplerInfo { name: "rff-flat", summary: "exact exp-kernel (softmax) flat oracle" },
+    SamplerInfo {
+        name: "quadratic-streaming",
+        summary: "quadratic tree + memtable/tombstones (online class churn)",
+    },
+    SamplerInfo {
+        name: "rff-streaming",
+        summary: "rff tree + memtable/tombstones (online class churn)",
+    },
 ];
 
 /// Comma-separated registry names (error messages, CLI help).
@@ -432,6 +440,20 @@ pub fn build_sampler(
             None,
         )),
         "rff-flat" => Box::new(FlatKernelSampler::new(KernelKind::Exp)),
+        // the streaming-vocabulary samplers (crate::vocab): a dense
+        // 0..n_classes catalog at build time, with insert_class /
+        // retire_class available through the concrete type for churn
+        // drivers; leaf_size None = the tree's default policy
+        "quadratic-streaming" => Box::new(crate::vocab::StreamingKernelSampler::new(
+            QuadraticMap::new(d, alpha as f64),
+            n_classes,
+            None,
+        )),
+        "rff-streaming" => Box::new(crate::vocab::StreamingKernelSampler::new(
+            PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
+            n_classes,
+            None,
+        )),
         other => anyhow::bail!("unknown sampler '{other}' (known: {})", sampler_names()),
     };
     if let Some(w) = w {

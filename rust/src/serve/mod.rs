@@ -51,10 +51,13 @@ pub use snapshot::{
 pub use topk::{merge_shard_topk, topk_over_snapshots, Hit, TopKConfig};
 
 use crate::obs::MetricsRegistry;
+use crate::sampler::kernel::tree::KernelTreeSampler;
 use crate::sampler::kernel::{FeatureMap, QuadraticMap};
 use crate::sampler::rff::{PositiveRffMap, RffConfig};
+use crate::sampler::{Sample, SampleInput, Sampler};
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
+use crate::vocab::{CompactionPolicy, VocabPublisher, VocabSnapshotSampler};
 use std::time::{Duration, Instant};
 
 /// Which kernel family the serve stack hosts. The whole serving layer
@@ -333,6 +336,269 @@ pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
     report
 }
 
+/// Parameters of the `--scenario churn` closed loop: reader threads sample
+/// from composite streaming-vocabulary snapshots while a writer inserts,
+/// retires and re-embeds classes at a configurable cadence
+/// (`crate::vocab`). The readers assert eq. (2) q-positivity and
+/// generation-coherent liveness on **every** draw — the run panics on a
+/// violation, which is the CI smoke gate.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    /// Initial catalog size (classes) and embedding dim.
+    pub n_classes: usize,
+    pub d: usize,
+    /// Kernel family the arena is built on.
+    pub kernel: ServeKernel,
+    /// Kernel α (quadratic only).
+    pub alpha: f64,
+    /// RFF feature dimension D (0 = registry default `4·d`; rff only).
+    pub rff_dim: usize,
+    /// Reader threads; each issues `draws` sequential sampling requests.
+    pub clients: usize,
+    pub draws: usize,
+    /// Negatives per request.
+    pub m: usize,
+    /// One class inserted every `insert_every` writer rounds (0 disables).
+    pub insert_every: usize,
+    /// One live class retired every `retire_every` writer rounds (0
+    /// disables).
+    pub retire_every: usize,
+    /// Live classes re-embedded per writer round (trainer-style churn;
+    /// 0 disables).
+    pub update_batch: usize,
+    /// When the publisher folds the memtable into the arena.
+    pub policy: CompactionPolicy,
+    /// Per-draw latency budget readers measure miss-rate against.
+    pub deadline: Duration,
+    pub seed: u64,
+    /// Where to write the Prometheus exposition on exit (`--metrics-path`).
+    pub metrics_path: Option<std::path::PathBuf>,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            n_classes: 2_000,
+            d: 8,
+            kernel: ServeKernel::Quadratic,
+            alpha: 100.0,
+            rff_dim: 0,
+            clients: 3,
+            draws: 400,
+            m: 8,
+            insert_every: 1,
+            retire_every: 2,
+            update_batch: 16,
+            policy: CompactionPolicy::default(),
+            deadline: Duration::from_millis(20),
+            seed: 42,
+            metrics_path: None,
+        }
+    }
+}
+
+/// What the churn scenario observed.
+#[derive(Clone, Debug)]
+pub struct ChurnReport {
+    /// Sampling requests completed (every one passed the q/liveness
+    /// assertions — violations panic the run).
+    pub draws: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_max_s: f64,
+    /// Fraction of draws over the deadline.
+    pub deadline_miss_rate: f64,
+    /// Classes inserted / retired while the load ran.
+    pub inserts: u64,
+    pub retires: u64,
+    /// Memtable→arena folds (policy-driven plus the end-of-run drain).
+    pub compactions: u64,
+    /// Live classes after the final drain fold.
+    pub live_classes: usize,
+    /// Draw routing split across the tiers.
+    pub tier_arena: u64,
+    pub tier_memtable: u64,
+    /// Prometheus exposition at exit (vocab + publish series) — what
+    /// `--metrics-path` writes to disk.
+    pub metrics_text: String,
+}
+
+/// Drive the streaming vocabulary under live traffic (the `--scenario
+/// churn` entry point). Dispatches on [`ChurnConfig::kernel`] into the
+/// kernel-generic loop.
+pub fn run_churn_test(cfg: &ChurnConfig) -> ChurnReport {
+    match cfg.kernel {
+        ServeKernel::Quadratic => {
+            run_churn_test_with(QuadraticMap::new(cfg.d, cfg.alpha), cfg)
+        }
+        ServeKernel::Rff => {
+            let mut rff = RffConfig::new(cfg.d, cfg.seed ^ 0x2FF_5EED);
+            if cfg.rff_dim > 0 {
+                rff = rff.with_dim(cfg.rff_dim);
+            }
+            run_churn_test_with(PositiveRffMap::new(rff), cfg)
+        }
+    }
+}
+
+/// The kernel-generic closed loop behind [`run_churn_test`].
+pub fn run_churn_test_with<M: FeatureMap + Clone + 'static>(
+    map: M,
+    cfg: &ChurnConfig,
+) -> ChurnReport {
+    let sampler_name = format!("{}-streaming", map.name());
+    let mut rng = Rng::new(cfg.seed);
+    let mut emb = vec![0.0f32; cfg.n_classes * cfg.d];
+    rng.fill_normal(&mut emb, 0.3);
+    let mut tree = KernelTreeSampler::new(map, cfg.n_classes, None);
+    tree.reset_embeddings(&emb, cfg.n_classes, cfg.d);
+    let mut pubr = VocabPublisher::new(tree, None).with_policy(cfg.policy);
+    // one registry over the stack: vocab tiers + the arena publish path
+    let registry = MetricsRegistry::new();
+    pubr.obs().register_into(&registry);
+    pubr.tree_publisher().obs().register_into(&registry);
+    let store = pubr.store();
+    let obs = pubr.obs().clone();
+
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let mut latencies = Samples::new();
+    let mut completed = 0u64;
+    let mut misses = 0u64;
+    let mut inserts = 0u64;
+    let mut retires = 0u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..cfg.clients as u64 {
+            let store = store.clone();
+            let obs = obs.clone();
+            let name = sampler_name.clone();
+            let (d, m, draws, deadline, seed) =
+                (cfg.d, cfg.m, cfg.draws, cfg.deadline, cfg.seed);
+            handles.push(scope.spawn(move || {
+                let sampler = VocabSnapshotSampler::new(store, name, obs);
+                let mut crng = Rng::new(seed ^ (0xC11E + client));
+                let mut lats = Vec::with_capacity(draws);
+                let mut missed = 0u64;
+                let mut out = Sample::default();
+                for _ in 0..draws {
+                    let h: Vec<f32> = (0..d).map(|_| crng.normal_f32(0.0, 1.0)).collect();
+                    let input = SampleInput { h: Some(&h), ..Default::default() };
+                    sampler.refresh_snapshots();
+                    let t = Instant::now();
+                    sampler.sample(&input, m, &mut crng, &mut out).expect("churn draw failed");
+                    let lat = t.elapsed();
+                    // the scenario's correctness gate, per draw: strictly
+                    // positive finite q, and the drawn class must be live in
+                    // the generation it was drawn from — prob() runs against
+                    // the same pinned snapshot and declines tombstoned or
+                    // unknown ids, so Some(..) is exactly the liveness check
+                    for (&c, &q) in out.classes.iter().zip(&out.q) {
+                        assert!(q > 0.0 && q.is_finite(), "class {c} drew q {q}");
+                        assert!(
+                            sampler.prob(&input, c).is_some(),
+                            "drew class {c} not live in its own generation"
+                        );
+                    }
+                    lats.push(lat.as_secs_f64());
+                    if lat > deadline {
+                        missed += 1;
+                    }
+                }
+                (lats, missed)
+            }));
+        }
+        // the writer churns the catalog until every reader finishes
+        let writer = {
+            let stop = &stop;
+            let pubr = &mut pubr;
+            let (n0, d) = (cfg.n_classes, cfg.d);
+            let (insert_every, retire_every, update_batch) =
+                (cfg.insert_every, cfg.retire_every, cfg.update_batch);
+            let seed = cfg.seed;
+            scope.spawn(move || {
+                let mut wrng = Rng::new(seed ^ 0xC4C4);
+                // the writer's own view of the live id set (retire picks)
+                let mut live: Vec<u32> = (0..n0 as u32).collect();
+                let mut row = vec![0.0f32; d];
+                let mut round = 0usize;
+                let (mut ins, mut ret) = (0u64, 0u64);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    round += 1;
+                    if insert_every > 0 && round % insert_every == 0 {
+                        wrng.fill_normal(&mut row, 0.3);
+                        let (id, _) = pubr.insert_class(&row);
+                        live.push(id);
+                        ins += 1;
+                    }
+                    if retire_every > 0 && round % retire_every == 0 && live.len() > 2 {
+                        let pick = wrng.below(live.len() as u64) as usize;
+                        if pubr.retire_class(live[pick]) {
+                            live.swap_remove(pick);
+                            ret += 1;
+                        }
+                    }
+                    if update_batch > 0 && !live.is_empty() {
+                        let k = update_batch.min(live.len());
+                        let mut ids: Vec<usize> = (0..k)
+                            .map(|_| live[wrng.below(live.len() as u64) as usize] as usize)
+                            .collect();
+                        ids.sort_unstable();
+                        ids.dedup();
+                        let mut flat = vec![0.0f32; ids.len() * d];
+                        wrng.fill_normal(&mut flat, 0.3);
+                        pubr.update_many(&ids, &flat);
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                (ins, ret)
+            })
+        };
+        for handle in handles {
+            let (lats, missed) = handle.join().expect("churn reader panicked");
+            completed += lats.len() as u64;
+            for l in lats {
+                latencies.push(l);
+            }
+            misses += missed;
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let (ins, ret) = writer.join().expect("churn writer panicked");
+        inserts = ins;
+        retires = ret;
+    });
+    // end-of-run drain fold: flush the memtable and tombstones so the
+    // reported catalog (and the exported compaction series) reflect a
+    // clean arena — and so short runs still exercise the barrier path
+    pubr.compact();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics_text = registry.snapshot().render_prometheus();
+    if let Some(path) = &cfg.metrics_path {
+        if let Err(e) = std::fs::write(path, &metrics_text) {
+            eprintln!("warning: could not write metrics exposition to {}: {e}", path.display());
+        }
+    }
+    let lat = latencies.percentiles(&[50.0, 95.0, 100.0]);
+    ChurnReport {
+        draws: completed,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        latency_p50_s: lat[0],
+        latency_p95_s: lat[1],
+        latency_max_s: lat[2],
+        deadline_miss_rate: if completed == 0 { 1.0 } else { misses as f64 / completed as f64 },
+        inserts,
+        retires,
+        compactions: obs.compactions(),
+        live_classes: pubr.live_len(),
+        tier_arena: obs.tier_arena_total(),
+        tier_memtable: obs.tier_memtable_total(),
+        metrics_text,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +679,84 @@ mod tests {
         let report = run_load_test(&cfg);
         assert!(report.completed > 0 && report.topk_calls > 0, "{report:?}");
         assert!(report.publishes > 0, "writer never published: {report:?}");
+    }
+
+    #[test]
+    fn churn_smoke() {
+        // the streaming vocabulary under live traffic: readers assert
+        // q-positivity and liveness per draw (violations panic), the
+        // writer churns classes, and the exit exposition carries every
+        // vocab series by canonical name
+        let cfg = ChurnConfig {
+            n_classes: 300,
+            d: 4,
+            clients: 3,
+            draws: 120,
+            m: 6,
+            insert_every: 1,
+            retire_every: 2,
+            update_batch: 8,
+            policy: CompactionPolicy { memtable_cap: 16, max_tombstone_frac: 0.25 },
+            deadline: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let report = run_churn_test(&cfg);
+        assert_eq!(report.draws, (cfg.clients * cfg.draws) as u64);
+        assert!(report.inserts > 0, "writer never inserted: {report:?}");
+        assert!(report.retires > 0, "writer never retired: {report:?}");
+        assert!(report.compactions > 0, "no fold ran (drain guarantees one): {report:?}");
+        assert!(report.tier_arena > 0, "no draw routed to the arena tier");
+        assert!(report.deadline_miss_rate < 1.0);
+        assert_eq!(
+            report.tier_arena + report.tier_memtable,
+            report.draws * cfg.m as u64,
+            "tier routing must account for every negative"
+        );
+        // the drained catalog balances: initial + inserts − retires
+        assert_eq!(
+            report.live_classes as u64,
+            cfg.n_classes as u64 + report.inserts - report.retires,
+        );
+        let text = &report.metrics_text;
+        for series in [
+            "kss_vocab_memtable_size",
+            "kss_vocab_tombstones",
+            "kss_vocab_compaction_seconds_count",
+            "kss_vocab_compaction_lag_ops_count",
+            "kss_vocab_tier_arena_total",
+            "kss_vocab_tier_memtable_total",
+            "kss_vocab_insert_total",
+            "kss_vocab_retire_total",
+            "kss_publish_compact_total",
+        ] {
+            assert!(text.contains(series), "missing series {series} in:\n{text}");
+        }
+        assert!(!text.contains("kss_vocab_insert_total 0\n"), "no inserts recorded");
+        assert!(!text.contains("kss_vocab_tier_arena_total 0\n"), "no arena draws recorded");
+        assert!(
+            !text.contains("kss_vocab_compaction_seconds_count 0\n"),
+            "no compactions recorded"
+        );
+    }
+
+    #[test]
+    fn churn_smoke_rff_kernel() {
+        // the same loop over the random-feature kernel — tier masses and
+        // tombstone exclusion are kernel-generic
+        let cfg = ChurnConfig {
+            n_classes: 200,
+            d: 4,
+            kernel: ServeKernel::Rff,
+            clients: 2,
+            draws: 60,
+            m: 4,
+            policy: CompactionPolicy { memtable_cap: 12, max_tombstone_frac: 0.25 },
+            deadline: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let report = run_churn_test(&cfg);
+        assert_eq!(report.draws, (cfg.clients * cfg.draws) as u64);
+        assert!(report.inserts > 0 && report.compactions > 0, "{report:?}");
     }
 
     #[test]

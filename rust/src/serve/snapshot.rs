@@ -145,6 +145,12 @@ pub struct PublishStats {
     pub copied: u64,
     /// Update batches replayed onto reclaimed arenas.
     pub replayed_batches: u64,
+    /// Compaction publishes: the shadow was wholesale replaced by a
+    /// rebuilt tree (streaming-vocab memtable fold, see `crate::vocab`).
+    pub compactions: u64,
+    /// Retired arena handles discarded because they predate the latest
+    /// compaction barrier and can never be fast-forwarded again.
+    pub discarded_stale: u64,
 }
 
 /// Timing report of one publish.
@@ -180,6 +186,10 @@ pub struct PublishObs {
     /// publisher to drop its oldest reclaim handle (sustained growth
     /// means a stuck reader is degrading publishes toward clones).
     pinned_stalls: Arc<Counter>,
+    /// Compaction publishes (replay-log barrier records).
+    compactions: Arc<Counter>,
+    /// Retired handles discarded at a compaction barrier.
+    stale_arenas: Arc<Counter>,
 }
 
 impl PublishObs {
@@ -220,6 +230,20 @@ impl PublishObs {
             "reclaim handles dropped because readers pinned old generations",
             Arc::clone(&self.pinned_stalls),
         );
+        reg.register_counter(
+            "kss_publish_compact_total",
+            "publishes",
+            "serve",
+            "compaction publishes (shadow replaced by a rebuilt tree)",
+            Arc::clone(&self.compactions),
+        );
+        reg.register_counter(
+            "kss_publish_stale_arena_total",
+            "events",
+            "serve",
+            "retired arenas discarded at a compaction barrier",
+            Arc::clone(&self.stale_arenas),
+        );
     }
 
     /// Publishes recorded so far (= lag-histogram count).
@@ -238,14 +262,39 @@ impl PublishObs {
     pub fn pinned_stall_total(&self) -> u64 {
         self.pinned_stalls.get()
     }
+
+    pub fn compact_total(&self) -> u64 {
+        self.compactions.get()
+    }
+
+    pub fn stale_arena_total(&self) -> u64 {
+        self.stale_arenas.get()
+    }
 }
 
-/// One logged update batch (the replay unit).
-struct UpdateBatch {
-    /// Generation this batch produced when applied to the shadow.
-    gen: u64,
-    classes: Vec<usize>,
-    rows: Vec<f32>,
+/// One replay-log record. `Update` is the fast-forward unit; `Compact` is
+/// a **barrier**: the shadow was wholesale replaced by a rebuilt tree (a
+/// streaming-vocab memtable fold — possibly a different class count and
+/// arena shape), so no arena published before the barrier can ever be
+/// fast-forwarded across it. Barrier handling happens at reclaim time
+/// (pre-barrier handles are discarded), so the replay loop only ever sees
+/// `Compact` records at or below the reclaimed generation.
+enum LogRecord {
+    Update {
+        /// Generation this batch produced when applied to the shadow.
+        gen: u64,
+        classes: Vec<usize>,
+        rows: Vec<f32>,
+    },
+    Compact { gen: u64 },
+}
+
+impl LogRecord {
+    fn gen(&self) -> u64 {
+        match self {
+            LogRecord::Update { gen, .. } | LogRecord::Compact { gen } => *gen,
+        }
+    }
 }
 
 /// Retired generations the publisher still holds a handle to. Bounded: if
@@ -262,9 +311,12 @@ pub struct TreePublisher<M: FeatureMap + Clone> {
     shadow_gen: u64,
     /// Published generations awaiting reclamation (oldest first).
     retired: VecDeque<Arc<TreeSnapshot<M>>>,
-    /// Update batches newer than the oldest retired generation — exactly
+    /// Replay records newer than the oldest retired generation — exactly
     /// what a reclaimed arena may need to fast-forward.
-    log: VecDeque<UpdateBatch>,
+    log: VecDeque<LogRecord>,
+    /// Generation of the most recent compaction publish (0 = never).
+    /// Retired arenas older than this are permanently non-reclaimable.
+    last_compact_gen: u64,
     pub stats: PublishStats,
     /// Telemetry cells (see [`PublishObs`]).
     obs: PublishObs,
@@ -283,6 +335,7 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
             shadow_gen: 0,
             retired,
             log: VecDeque::new(),
+            last_compact_gen: 0,
             stats: PublishStats::default(),
             obs: PublishObs::default(),
         }
@@ -312,11 +365,12 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
         let t_build = Instant::now();
         self.shadow.update_many(classes, rows);
         self.shadow_gen += 1;
-        self.log.push_back(UpdateBatch {
+        self.log.push_back(LogRecord::Update {
             gen: self.shadow_gen,
             classes: classes.to_vec(),
             rows: rows.to_vec(),
         });
+        self.discard_stale_retired();
 
         // Reclaim before the swap: the store still points at the previous
         // generation, whose Arc count is ≥ 2 (store + retired), so the live
@@ -350,13 +404,27 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
         let was_reclaimed = reclaimed.is_some();
         let next = match reclaimed {
             Some(mut snap) => {
-                // fast-forward: replay every logged batch newer than the
+                // fast-forward: replay every logged record newer than the
                 // reclaimed generation (the log is trimmed below to always
-                // cover the oldest retired generation)
-                for batch in self.log.iter() {
-                    if batch.gen > snap.generation {
-                        snap.tree.update_many(&batch.classes, &batch.rows);
-                        self.stats.replayed_batches += 1;
+                // cover the oldest retired generation). Compact records
+                // cannot appear past the reclaimed generation — pre-barrier
+                // handles were discarded above — so replay only ever
+                // applies plain update batches.
+                for rec in self.log.iter() {
+                    match rec {
+                        LogRecord::Update { gen, classes, rows } if *gen > snap.generation => {
+                            snap.tree.update_many(classes, rows);
+                            self.stats.replayed_batches += 1;
+                        }
+                        LogRecord::Compact { gen } => {
+                            debug_assert!(
+                                *gen <= snap.generation,
+                                "replay crossed a compaction barrier (arena gen {}, barrier {})",
+                                snap.generation,
+                                gen
+                            );
+                        }
+                        _ => {}
                     }
                 }
                 snap.generation = self.shadow_gen;
@@ -370,6 +438,68 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
         };
         let build_s = t_build.elapsed().as_secs_f64();
 
+        let (generation, swap_s) = self.publish_next(next);
+        self.obs.lag.record(build_s + swap_s);
+        self.obs.swap.record(swap_s);
+        if was_reclaimed {
+            self.obs.replayed.inc();
+        } else {
+            self.obs.cloned.inc();
+        }
+
+        PublishReport { generation, build_s, swap_s, reclaimed: was_reclaimed }
+    }
+
+    /// Replace the shadow wholesale with `tree` — a from-scratch rebuild
+    /// over a possibly different class set (the streaming-vocab compactor
+    /// folding its memtable into the arena, `crate::vocab`) — and publish
+    /// it as the next generation. A `Compact` barrier record enters the
+    /// replay log: arenas retired before the barrier have an incompatible
+    /// shape and are discarded from the reclaim queue on this and every
+    /// later publish (readers pinning them keep them alive — the publisher
+    /// only forfeits the reclaim opportunity). The published snapshot is a
+    /// clone of the new shadow: a fresh topology has no reclaimable arena
+    /// yet by definition.
+    pub fn compact_and_publish(&mut self, tree: KernelTreeSampler<M>) -> PublishReport {
+        let t_build = Instant::now();
+        self.shadow = tree;
+        self.shadow_gen += 1;
+        self.last_compact_gen = self.shadow_gen;
+        self.log.push_back(LogRecord::Compact { gen: self.shadow_gen });
+        self.discard_stale_retired();
+        self.stats.compactions += 1;
+        let next = TreeSnapshot { generation: self.shadow_gen, tree: self.shadow.clone() };
+        let build_s = t_build.elapsed().as_secs_f64();
+
+        let (generation, swap_s) = self.publish_next(next);
+        self.obs.lag.record(build_s + swap_s);
+        self.obs.swap.record(swap_s);
+        self.obs.compactions.inc();
+
+        PublishReport { generation, build_s, swap_s, reclaimed: false }
+    }
+
+    /// Drop retired handles that predate the latest compaction barrier:
+    /// their arena shape can never be fast-forwarded across it, so keeping
+    /// them only pins replay-log records forever. Readers holding those
+    /// generations keep them alive through their own `Arc`s.
+    fn discard_stale_retired(&mut self) {
+        let barrier = self.last_compact_gen;
+        if barrier == 0 {
+            return;
+        }
+        let before = self.retired.len();
+        self.retired.retain(|s| s.generation >= barrier);
+        let dropped = (before - self.retired.len()) as u64;
+        if dropped > 0 {
+            self.stats.discarded_stale += dropped;
+            self.obs.stale_arenas.add(dropped);
+        }
+    }
+
+    /// Shared publish tail: swap the snapshot in, bound the retired queue,
+    /// trim the replay log to what the oldest retired arena still needs.
+    fn publish_next(&mut self, next: TreeSnapshot<M>) -> (u64, f64) {
         let arc = Arc::new(next);
         self.retired.push_back(arc.clone());
         let t_swap = Instant::now();
@@ -385,22 +515,13 @@ impl<M: FeatureMap + Clone> TreePublisher<M> {
             self.retired.pop_front();
             self.obs.pinned_stalls.inc();
         }
-        // The log only needs batches newer than the oldest retired
+        // The log only needs records newer than the oldest retired
         // generation (the furthest-behind arena we could ever reclaim).
         let min_gen = self.retired.front().map(|s| s.generation).unwrap_or(self.shadow_gen);
-        while self.log.front().is_some_and(|b| b.gen <= min_gen) {
+        while self.log.front().is_some_and(|b| b.gen() <= min_gen) {
             self.log.pop_front();
         }
-
-        self.obs.lag.record(build_s + swap_s);
-        self.obs.swap.record(swap_s);
-        if was_reclaimed {
-            self.obs.replayed.inc();
-        } else {
-            self.obs.cloned.inc();
-        }
-
-        PublishReport { generation, build_s, swap_s, reclaimed: was_reclaimed }
+        (generation, swap_s)
     }
 }
 
@@ -582,6 +703,80 @@ mod tests {
             assert_eq!(a, b, "class {c}");
         }
         assert!(head.tree.max_drift() < 1e-9);
+    }
+
+    #[test]
+    fn compaction_barrier_discards_stale_arenas_and_replay_resumes() {
+        let (t, _) = tree(32, 3, 21);
+        let (n2, d) = (40usize, 3usize);
+        let mut publisher = TreePublisher::new(t);
+        let mut reader = SnapshotReader::new(publisher.store());
+        let mut rng = Rng::new(23);
+        // a few pre-compaction generations; the reader releases them so
+        // the retired queue holds free (reclaimable) pre-barrier arenas
+        for _ in 0..3 {
+            let mut rows = vec![0.0f32; 2 * d];
+            rng.fill_normal(&mut rows, 0.6);
+            publisher.update_and_publish(&[1, 30], &rows);
+            reader.current();
+        }
+        // hold generation 3 across the compaction to prove barrier safety
+        let pinned = reader.current().clone();
+        let before = draws(&pinned, &[0.5, -0.2, 0.9], 31);
+
+        // compact: replace the shadow with a *differently shaped* tree
+        let mut emb2 = vec![0.0f32; n2 * d];
+        rng.fill_normal(&mut emb2, 0.5);
+        let mut rebuilt = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n2, Some(4));
+        rebuilt.reset_embeddings(&emb2, n2, d);
+        let mut reference = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n2, Some(4));
+        reference.reset_embeddings(&emb2, n2, d);
+        let report = publisher.compact_and_publish(rebuilt);
+        assert_eq!(report.generation, 4);
+        assert!(!report.reclaimed);
+        assert_eq!(publisher.stats.compactions, 1);
+        assert!(
+            publisher.stats.discarded_stale >= 1,
+            "pre-barrier arenas must be discarded: {:?}",
+            publisher.stats
+        );
+        assert_eq!(publisher.obs().compact_total(), 1);
+        assert_eq!(publisher.obs().stale_arena_total(), publisher.stats.discarded_stale);
+
+        // post-barrier publishes must reclaim + replay again, and the head
+        // must track a straight-line reference over the new class set
+        let reclaimed_before = publisher.stats.reclaimed;
+        for step in 0..8 {
+            let classes = {
+                let mut c = vec![step % n2, (7 + 3 * step) % n2];
+                c.sort_unstable();
+                c.dedup();
+                c
+            };
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 0.7);
+            reference.update_many(&classes, &rows);
+            publisher.update_and_publish(&classes, &rows);
+            reader.current();
+        }
+        assert!(
+            publisher.stats.reclaimed > reclaimed_before,
+            "reclaim never resumed after the barrier: {:?}",
+            publisher.stats
+        );
+        let (g, head) = publisher.store().load();
+        assert_eq!(g, 12);
+        assert_eq!(head.tree.num_classes(), n2);
+        let h = vec![0.3f32, 0.8, -0.5];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        for c in [0u32, 17, 39] {
+            let a = head.tree.prob(&input, c).unwrap();
+            let b = reference.prob(&input, c).unwrap();
+            assert_eq!(a, b, "class {c}");
+        }
+        // the pinned pre-compaction generation is untouched, bit for bit
+        let after = draws(&pinned, &[0.5, -0.2, 0.9], 31);
+        assert_eq!(before, after, "pinned pre-barrier generation changed");
     }
 
     #[test]

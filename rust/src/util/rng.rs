@@ -226,6 +226,18 @@ pub fn last_positive_cum_index(cum: &[f64]) -> usize {
 /// Cumulative distribution over class weights, for O(log n) repeated draws
 /// from the same (per-example) distribution. Built once per example by the
 /// exact-softmax and flat-kernel samplers, then binary-searched `m` times.
+///
+/// # Dense-index contract
+///
+/// `Cdf` is **slot-addressed**: `weights[j]` belongs to index `j`, and
+/// `sample`/`prob` speak that same index space. Callers whose classes are
+/// identified by global ids with holes (a streaming vocabulary after
+/// retirement, a sharded local range) must keep their own id→slot map and
+/// translate at the boundary — passing a global id where a slot is
+/// expected does not error, it *silently aliases into another class's
+/// mass* and reports a wrong q (`prob` panics only when the id happens to
+/// fall past the end). Use [`IdCdf`] when the id space is not dense
+/// `0..C`; it carries the mapping explicitly and declines unknown ids.
 pub struct Cdf {
     /// Inclusive prefix sums of the weights, `cum[i] = Σ_{j<=i} w_j`.
     cum: Vec<f64>,
@@ -267,6 +279,81 @@ impl Cdf {
     #[cfg(test)]
     fn last_positive_index(&self) -> usize {
         last_positive_cum_index(&self.cum)
+    }
+}
+
+/// [`Cdf`] over an explicit, possibly holey global-id set.
+///
+/// Slot-addressed CDFs ([`Cdf`] above) assume ids are dense `0..C`; once a
+/// vocabulary churns (retired ids leave holes, inserts mint ids past the
+/// original range) that assumption fails *silently* — a global id used as
+/// a slot reads another class's cumulative mass and comes back with a
+/// plausible but wrong q. `IdCdf` carries the id→slot mapping inside the
+/// structure: `sample` returns `(id, q)` pairs in id space, `prob_of`
+/// declines unknown ids with `None`, and construction rejects duplicate
+/// ids (which would split one class's mass across two slots). The
+/// streaming-vocabulary memtable is the canonical producer of such holey
+/// id sets (see `crate::vocab::memtable`).
+pub struct IdCdf {
+    /// Slot → global id, parallel to the weights the CDF was built from.
+    ids: Vec<u32>,
+    /// Global id → slot (the explicit inverse; no dense assumption).
+    slot_of: std::collections::HashMap<u32, u32>,
+    cum: Vec<f64>,
+    total: f64,
+}
+
+impl IdCdf {
+    /// Build from parallel `(ids, weights)`. Returns `None` when the
+    /// lengths differ, an id repeats, or the total mass is not positive
+    /// and finite — the same clean-decline contract as [`Cdf::new`].
+    pub fn new(ids: &[u32], weights: &[f32]) -> Option<IdCdf> {
+        if ids.len() != weights.len() {
+            return None;
+        }
+        let mut cum = Vec::new();
+        let acc = fill_cum(weights, &mut cum);
+        if !(acc > 0.0) || !acc.is_finite() {
+            return None;
+        }
+        let mut slot_of = std::collections::HashMap::with_capacity(ids.len());
+        for (slot, &id) in ids.iter().enumerate() {
+            if slot_of.insert(id, slot as u32).is_some() {
+                return None;
+            }
+        }
+        Some(IdCdf { ids: ids.to_vec(), slot_of, cum, total: acc })
+    }
+
+    /// Total unnormalized mass.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Draw one `(global id, q)` pair (strictly positive weight, see
+    /// [`sample_cum`]).
+    pub fn sample(&self, rng: &mut Rng) -> (u32, f64) {
+        let slot = sample_cum(&self.cum, self.total, rng);
+        let lo = if slot == 0 { 0.0 } else { self.cum[slot - 1] };
+        (self.ids[slot], (self.cum[slot] - lo) / self.total)
+    }
+
+    /// Probability of a *global id*; `None` for ids outside the set — the
+    /// error mode dense CDFs cannot express.
+    pub fn prob_of(&self, id: u32) -> Option<f64> {
+        let &slot = self.slot_of.get(&id)?;
+        let slot = slot as usize;
+        let lo = if slot == 0 { 0.0 } else { self.cum[slot - 1] };
+        Some((self.cum[slot] - lo) / self.total)
     }
 }
 
@@ -526,6 +613,45 @@ mod tests {
         // and the all-positive case still reaches the true last index
         let cdf = Cdf::new(&[1.0f32, 1.0]).unwrap();
         assert_eq!(cdf.last_positive_index(), 1);
+    }
+
+    #[test]
+    fn id_cdf_holey_id_space_does_not_alias() {
+        // regression for the dense-id assumption: with global ids
+        // {5, 17, 900}, feeding an id into the slot-addressed Cdf reads
+        // another class's mass (id 5 would alias into slot 5 — out of
+        // range here, but a *wrong class* in a bigger table). IdCdf keeps
+        // the map explicit: draws come back in id space with the right q.
+        let ids = [5u32, 17, 900];
+        let w = [1.0f32, 3.0, 6.0];
+        let cdf = IdCdf::new(&ids, &w).unwrap();
+        assert_eq!(cdf.len(), 3);
+        let total: f32 = w.iter().sum();
+        for (slot, &id) in ids.iter().enumerate() {
+            let got = cdf.prob_of(id).unwrap();
+            assert!((got - (w[slot] / total) as f64).abs() < 1e-12, "id {id}");
+        }
+        // unknown / retired ids decline cleanly instead of mis-addressing
+        assert_eq!(cdf.prob_of(0), None);
+        assert_eq!(cdf.prob_of(6), None);
+        assert_eq!(cdf.prob_of(u32::MAX), None);
+        let mut r = Rng::new(31);
+        let mut mass = std::collections::HashMap::new();
+        for _ in 0..60_000 {
+            let (id, q) = cdf.sample(&mut r);
+            assert!(ids.contains(&id), "drew id {id} outside the set");
+            assert_eq!(q, cdf.prob_of(id).unwrap());
+            *mass.entry(id).or_insert(0usize) += 1;
+        }
+        for (slot, &id) in ids.iter().enumerate() {
+            let c = mass[&id] as f64;
+            let expect = 60_000.0 * (w[slot] / total) as f64;
+            assert!((c - expect).abs() < 6.0 * expect.sqrt(), "id {id}: {c} vs {expect}");
+        }
+        // malformed inputs decline at construction
+        assert!(IdCdf::new(&[1, 1], &[1.0, 2.0]).is_none(), "duplicate ids split mass");
+        assert!(IdCdf::new(&[1, 2], &[1.0]).is_none(), "length mismatch");
+        assert!(IdCdf::new(&[1], &[0.0]).is_none(), "zero total mass");
     }
 
     #[test]

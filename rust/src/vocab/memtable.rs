@@ -1,0 +1,326 @@
+//! The mutable tier of the streaming vocabulary: a small flat sampler
+//! over recently inserted classes, plus the tombstone set that masks
+//! retired arena classes.
+//!
+//! # Memtable
+//!
+//! [`Memtable`] is the LSM "memtable" of the vocab subsystem: classes
+//! inserted since the last compaction live here as plain embedding rows
+//! with an **explicit slot ↔ id mapping** — slot `j` (the dense internal
+//! index the CDF is built over) carries global class id `ids[j]`, and
+//! `index` maps ids back to slots. Nothing in the draw path ever assumes
+//! global ids are dense `0..C`; the id space may have holes from retired
+//! classes and fresh inserts (the aliasing hazard [`crate::util::rng::Cdf`]
+//! documents — see [`crate::util::rng::IdCdf`] for the standalone
+//! primitive).
+//!
+//! Per example the tier's weights are the kernel scores `K(h, w_j)`
+//! recomputed from the current rows ("mass-refreshed on update": an
+//! embedding update is immediately reflected in the next draw — there is
+//! no cached mass to invalidate). The draw itself is the flat-CDF
+//! procedure every oracle sampler uses: prefix sums via
+//! [`crate::ops::fill_cum_into`], one uniform, one `partition_point`.
+//!
+//! # Tombstones
+//!
+//! [`TombstoneSet`] records retired **arena slots** (sorted, binary
+//! searched on the draw path) together with a frozen copy of each
+//! retired row. The quadratic kernel is `αo²+1 ≥ 1`, so a retired class
+//! can never be silenced through its embedding — instead its kernel mass
+//! is *subtracted* from the arena tier's partition total (the frozen rows
+//! make that subtraction exact: updates to tombstoned classes are dropped
+//! by the streaming layer, so the frozen copy always equals the row the
+//! arena still holds) and draws that land on a tombstoned slot are
+//! rejected and redrawn (see `draw_from_tiers` in
+//! [`crate::vocab::streaming`]).
+
+use crate::ops;
+use crate::sampler::kernel::FeatureMap;
+use crate::util::rng::{sample_cum, Rng};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// The mutable memtable tier: recently inserted classes as flat rows with
+/// an explicit slot ↔ global-id mapping (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Memtable {
+    d: usize,
+    /// slot → global class id (the draw path returns `ids[slot]`).
+    ids: Vec<u32>,
+    /// Embedding rows, slot-major (`len() × d`).
+    rows: Vec<f32>,
+    /// global class id → slot (kept exactly inverse to `ids`).
+    index: HashMap<u32, usize>,
+}
+
+impl Memtable {
+    pub fn new(d: usize) -> Memtable {
+        Memtable { d, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// slot → global id map (slot order is the CDF order).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The flat slot-major row panel (for compaction gathers).
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    pub fn slot_of(&self, id: u32) -> Option<usize> {
+        self.index.get(&id).copied()
+    }
+
+    pub fn id_at(&self, slot: usize) -> u32 {
+        self.ids[slot]
+    }
+
+    pub fn row(&self, slot: usize) -> &[f32] {
+        &self.rows[slot * self.d..(slot + 1) * self.d]
+    }
+
+    /// Insert a new class. Errors on a duplicate id or a wrong-sized row —
+    /// the streaming layer checks liveness across *both* tiers first.
+    pub fn insert(&mut self, id: u32, row: &[f32]) -> Result<()> {
+        anyhow::ensure!(row.len() == self.d, "row has {} floats, d = {}", row.len(), self.d);
+        anyhow::ensure!(!self.contains(id), "class {id} already in the memtable");
+        self.index.insert(id, self.ids.len());
+        self.ids.push(id);
+        self.rows.extend_from_slice(row);
+        Ok(())
+    }
+
+    /// Remove a class (swap-remove: the last slot moves into the hole, the
+    /// id map is patched — deterministic as a function of the op sequence).
+    pub fn remove(&mut self, id: u32) -> bool {
+        let Some(slot) = self.index.remove(&id) else {
+            return false;
+        };
+        let last = self.ids.len() - 1;
+        if slot != last {
+            self.ids[slot] = self.ids[last];
+            let (a, b) = self.rows.split_at_mut(last * self.d);
+            a[slot * self.d..(slot + 1) * self.d].copy_from_slice(&b[..self.d]);
+            self.index.insert(self.ids[slot], slot);
+        }
+        self.ids.pop();
+        self.rows.truncate(last * self.d);
+        true
+    }
+
+    /// Replace a class's row; the next draw sees the new mass immediately.
+    pub fn update_row(&mut self, id: u32, row: &[f32]) -> bool {
+        debug_assert_eq!(row.len(), self.d);
+        let Some(&slot) = self.index.get(&id) else {
+            return false;
+        };
+        self.rows[slot * self.d..(slot + 1) * self.d].copy_from_slice(row);
+        true
+    }
+
+    /// Drop every entry (compaction folded them into the arena).
+    pub fn clear(&mut self) {
+        self.ids.clear();
+        self.rows.clear();
+        self.index.clear();
+    }
+
+    /// Per-example kernel weights `K(h, w_j)` per slot, into `out`
+    /// (resized). Same numerators a kernel tree's leaf pass computes, so
+    /// the composite q algebra matches a single tree over the union.
+    pub fn weights_into<M: FeatureMap>(&self, map: &M, h: &[f32], out: &mut Vec<f64>) {
+        out.resize(self.len(), 0.0);
+        if !self.is_empty() {
+            map.kernel_many(h, &self.rows, out);
+        }
+    }
+
+    /// Draw one slot from prepared per-example cumulative weights (the
+    /// flat-CDF draw; `cum`/`total` come from [`Memtable::weights_into`] +
+    /// [`crate::ops::fill_cum_into`]). Returns `(slot, global id)`.
+    pub fn draw_prepared(&self, cum: &[f64], total: f64, rng: &mut Rng) -> (usize, u32) {
+        debug_assert_eq!(cum.len(), self.len());
+        debug_assert!(total > 0.0 && total.is_finite());
+        let slot = sample_cum(cum, total, rng);
+        (slot, self.ids[slot])
+    }
+}
+
+/// Retired arena classes: sorted slots + frozen rows (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct TombstoneSet {
+    d: usize,
+    /// Retired arena slots, sorted ascending (draw path binary-searches).
+    slots: Vec<u32>,
+    /// Frozen embedding rows, same order as `slots` (`len() × d`).
+    rows: Vec<f32>,
+}
+
+impl TombstoneSet {
+    pub fn new(d: usize) -> TombstoneSet {
+        TombstoneSet { d, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slots(&self) -> &[u32] {
+        &self.slots
+    }
+
+    /// The frozen row panel (the mass the arena tier must exclude).
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    pub fn contains(&self, slot: u32) -> bool {
+        self.slots.binary_search(&slot).is_ok()
+    }
+
+    /// Tombstone an arena slot, freezing its current row. Returns false if
+    /// already tombstoned.
+    pub fn insert(&mut self, slot: u32, row: &[f32]) -> bool {
+        debug_assert_eq!(row.len(), self.d);
+        let pos = match self.slots.binary_search(&slot) {
+            Ok(_) => return false,
+            Err(pos) => pos,
+        };
+        self.slots.insert(pos, slot);
+        // keep rows in slot order so the panel mirrors `slots`
+        let at = pos * self.d;
+        self.rows.splice(at..at, row.iter().copied());
+        true
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.rows.clear();
+    }
+
+    /// Total kernel mass of the tombstoned rows for query `h` — the mass
+    /// the arena tier subtracts from its partition total. `k_buf`/`cum_buf`
+    /// are caller scratch (resized); the prefix-sum total keeps the
+    /// reduction in the ops layer.
+    pub fn mass<M: FeatureMap>(
+        &self,
+        map: &M,
+        h: &[f32],
+        k_buf: &mut Vec<f64>,
+        cum_buf: &mut Vec<f64>,
+    ) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        k_buf.resize(self.len(), 0.0);
+        cum_buf.resize(self.len(), 0.0);
+        map.kernel_many(h, &self.rows, k_buf);
+        ops::fill_cum_into(k_buf, cum_buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+
+    #[test]
+    fn memtable_slot_id_mapping_survives_churn() {
+        let d = 2;
+        let mut mt = Memtable::new(d);
+        // deliberately holey, non-dense, out-of-order global ids
+        for (id, v) in [(90u32, 1.0f32), (3, 2.0), (17, 3.0), (1000, 4.0)] {
+            mt.insert(id, &[v, -v]).unwrap();
+        }
+        assert!(mt.insert(17, &[0.0, 0.0]).is_err(), "duplicate id must error");
+        assert_eq!(mt.len(), 4);
+        assert!(mt.remove(3));
+        assert!(!mt.remove(3), "double remove");
+        assert_eq!(mt.len(), 3);
+        // swap-remove moved 1000 into slot 1; the id map must follow
+        for &id in &[90u32, 17, 1000] {
+            let slot = mt.slot_of(id).unwrap();
+            assert_eq!(mt.id_at(slot), id);
+        }
+        assert_eq!(mt.slot_of(3), None);
+        // row contents track their id, not their slot
+        let slot = mt.slot_of(1000).unwrap();
+        assert_eq!(mt.row(slot), &[4.0, -4.0]);
+        assert!(mt.update_row(1000, &[5.0, 5.0]));
+        assert_eq!(mt.row(slot), &[5.0, 5.0]);
+        assert!(!mt.update_row(3, &[9.0, 9.0]), "retired id must not alias");
+    }
+
+    #[test]
+    fn memtable_draw_returns_global_ids_with_exact_q() {
+        let d = 3;
+        let map = QuadraticMap::new(d, 50.0);
+        let mut mt = Memtable::new(d);
+        let mut rng = Rng::new(7);
+        let ids = [5u32, 900, 42, 77, 12345];
+        for &id in &ids {
+            let mut row = vec![0.0f32; d];
+            rng.fill_normal(&mut row, 0.8);
+            mt.insert(id, &row).unwrap();
+        }
+        let h = [0.4f32, -1.1, 0.6];
+        let mut w = Vec::new();
+        mt.weights_into(&map, &h, &mut w);
+        let mut cum = vec![0.0; w.len()];
+        let total = ops::fill_cum_into(&w, &mut cum);
+        assert!(total > 0.0);
+        // empirical: every drawn id is a real member, and each slot's
+        // weight matches the kernel recomputed from its row
+        for _ in 0..2000 {
+            let (slot, id) = mt.draw_prepared(&cum, total, &mut rng);
+            assert!(ids.contains(&id), "alien id {id}");
+            assert_eq!(mt.id_at(slot), id);
+            let k = map.kernel(&h, mt.row(slot));
+            assert_eq!(k, w[slot], "weight must be the kernel, bitwise");
+        }
+    }
+
+    #[test]
+    fn tombstone_mass_matches_frozen_rows() {
+        let d = 2;
+        let map = QuadraticMap::new(d, 100.0);
+        let mut ts = TombstoneSet::new(d);
+        assert_eq!(ts.mass(&map, &[1.0, 1.0], &mut Vec::new(), &mut Vec::new()), 0.0);
+        ts.insert(7, &[0.5, -0.5]);
+        ts.insert(2, &[1.5, 0.25]);
+        ts.insert(11, &[-0.75, 2.0]);
+        assert!(!ts.insert(7, &[9.0, 9.0]), "re-tombstone is a no-op");
+        assert_eq!(ts.slots(), &[2, 7, 11], "slots stay sorted");
+        assert!(ts.contains(7) && !ts.contains(8));
+        let h = [0.3f32, 0.9];
+        let mut k = Vec::new();
+        let mut cum = Vec::new();
+        let got = ts.mass(&map, &h, &mut k, &mut cum);
+        let want: f64 = [[1.5f32, 0.25], [0.5, -0.5], [-0.75, 2.0]]
+            .iter()
+            .map(|r| map.kernel(&h, r))
+            .sum();
+        assert!((got - want).abs() <= 1e-12 * want, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,234 @@
+//! Streaming vocabulary: LSM-style online class insertion and retirement
+//! under live traffic.
+//!
+//! The kernel-tree arena ([`crate::sampler::kernel::tree`]) is fixed-C at
+//! build time, but real catalogs churn. This subsystem makes the class
+//! set dynamic without an O(C) rebuild per change, while every drawn
+//! sample still carries an exact eq. (2) proposal probability q:
+//!
+//! ```text
+//!                       ┌────────────────────────────┐
+//!        draw tier ∝ M  │  mass router (2-tier CDF)  │
+//!                       └──────┬──────────────┬──────┘
+//!                 M_arena−M_tomb│             │M_mem
+//!                ┌─────────────▼──┐   ┌───────▼────────┐
+//!                │  arena tier    │   │ memtable tier  │
+//!                │ immutable tree │   │ flat CDF over  │
+//!                │ snapshot, with │   │ recent inserts │
+//!                │ tombstone mask │   │ (mutable)      │
+//!                └────────────────┘   └────────────────┘
+//! ```
+//!
+//! * **Inserts** land in the [`memtable::Memtable`] — a small flat-CDF
+//!   sampler whose per-example weights are kernel scores recomputed from
+//!   the current rows, so an update is visible to the very next draw.
+//! * **Retirements** of arena classes enter a [`memtable::TombstoneSet`]:
+//!   the quadratic kernel `αo²+1 ≥ 1` means a class can never be silenced
+//!   through its embedding, so tombstoned mass is *subtracted* from the
+//!   arena tier's partition total and draws landing on a tombstoned slot
+//!   are rejected and redrawn (memtable-resident classes just leave the
+//!   memtable).
+//! * The **tier router** draws a tier proportional to its aggregated
+//!   kernel mass and multiplies probabilities — the same algebra as the
+//!   shard router in [`crate::serve::shard`], so the composite
+//!   `q = (M_tier/ΣM)·q_tier = K(h,w)/ΣM` equals a single tree over the
+//!   live union (property-tested to ≤ 1e-12 relative).
+//! * A **compactor** periodically folds the memtable into the arena and
+//!   drops tombstones: it gathers the live rows, builds a fresh dense
+//!   tree (bitwise-equal to a from-scratch rebuild by construction) and,
+//!   on the serve path, hands it to
+//!   [`crate::serve::snapshot::TreePublisher::compact_and_publish`] — the
+//!   replay log grows a `Compact` barrier record and pre-barrier arenas
+//!   leave the reclaim queue.
+//!
+//! [`streaming::StreamingKernelSampler`] is the self-contained trainer
+//! sampler (registry names `quadratic-streaming` / `rff-streaming`);
+//! [`publisher::VocabPublisher`] / [`publisher::VocabSnapshotSampler`]
+//! split the same machinery into a serve-style writer and wait-free
+//! snapshot readers.
+
+pub mod memtable;
+pub mod publisher;
+pub mod streaming;
+
+pub use memtable::{Memtable, TombstoneSet};
+pub use publisher::{VocabPublisher, VocabSnapshot, VocabSnapshotSampler};
+pub use streaming::StreamingKernelSampler;
+
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
+use std::sync::Arc;
+
+/// When the streaming layer folds the memtable into the arena.
+///
+/// Both bounds matter for correctness margins, not just cost: the
+/// tombstone fraction caps (a) the expected rejection count per arena
+/// draw at `1/(1-frac)` and (b) the cancellation error of the
+/// mass-exclusion subtraction `M_arena − M_tomb` (the relative error
+/// grows like `ε·M_arena/M_live`, so keeping tombstoned mass a bounded
+/// fraction keeps the composite q within the 1e-12 envelope the property
+/// tests pin).
+#[derive(Clone, Copy, Debug)]
+pub struct CompactionPolicy {
+    /// Fold once the memtable holds this many classes.
+    pub memtable_cap: usize,
+    /// Fold once tombstones exceed this fraction of the arena.
+    pub max_tombstone_frac: f64,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> CompactionPolicy {
+        CompactionPolicy { memtable_cap: 256, max_tombstone_frac: 0.25 }
+    }
+}
+
+impl CompactionPolicy {
+    /// Policy that never auto-compacts (tests drive explicit schedules).
+    pub fn manual() -> CompactionPolicy {
+        CompactionPolicy { memtable_cap: usize::MAX, max_tombstone_frac: f64::INFINITY }
+    }
+
+    pub fn should_compact(&self, arena_n: usize, tombstones: usize, memtable: usize) -> bool {
+        memtable >= self.memtable_cap
+            || (tombstones as f64) > self.max_tombstone_frac * arena_n.max(1) as f64
+    }
+}
+
+/// Shared telemetry cells for one streaming vocabulary (trainer-side
+/// sampler or serve-side publisher). Registered under stable
+/// `kss_vocab_*` names; same-name registration aggregates across
+/// instances (counters sum, gauges max, histograms merge).
+#[derive(Clone, Default)]
+pub struct VocabObs {
+    /// Classes currently in the memtable tier.
+    pub(crate) memtable_size: Arc<Gauge>,
+    /// Arena classes currently tombstoned.
+    pub(crate) tombstones: Arc<Gauge>,
+    /// Wall seconds per compaction (gather + rebuild + swap).
+    pub(crate) compaction_seconds: Arc<Histogram>,
+    /// Mutating ops (insert/retire/update batches) folded per compaction —
+    /// the "lag" between folds.
+    pub(crate) compaction_lag_ops: Arc<Histogram>,
+    /// Draws routed to the arena tier.
+    pub(crate) tier_arena: Arc<Counter>,
+    /// Draws routed to the memtable tier.
+    pub(crate) tier_memtable: Arc<Counter>,
+    /// Arena draws rejected because they landed on a tombstoned slot.
+    pub(crate) tombstone_rejects: Arc<Counter>,
+    /// Arena draws that exhausted the rejection budget and fell back to a
+    /// uniform live-slot scan (signals a violated compaction policy).
+    pub(crate) reject_overflows: Arc<Counter>,
+    /// Embedding updates dropped because the class is tombstoned or the
+    /// id is unknown — the churn-aware `update_many` makes the drop
+    /// countable.
+    pub(crate) dropped_updates: Arc<Counter>,
+    /// Classes inserted / retired over the lifetime.
+    pub(crate) inserts: Arc<Counter>,
+    pub(crate) retires: Arc<Counter>,
+}
+
+impl VocabObs {
+    /// Bind every cell to `reg` under the stable `kss_vocab_*` names.
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_gauge(
+            "kss_vocab_memtable_size",
+            "classes",
+            "vocab",
+            "classes currently in the memtable tier",
+            Arc::clone(&self.memtable_size),
+        );
+        reg.register_gauge(
+            "kss_vocab_tombstones",
+            "classes",
+            "vocab",
+            "arena classes currently tombstoned",
+            Arc::clone(&self.tombstones),
+        );
+        reg.register_histogram(
+            "kss_vocab_compaction_seconds",
+            "seconds",
+            "vocab",
+            "wall seconds per memtable→arena compaction",
+            Arc::clone(&self.compaction_seconds),
+        );
+        reg.register_histogram(
+            "kss_vocab_compaction_lag_ops",
+            "ops",
+            "vocab",
+            "mutating ops folded per compaction (lag between folds)",
+            Arc::clone(&self.compaction_lag_ops),
+        );
+        reg.register_counter(
+            "kss_vocab_tier_arena_total",
+            "draws",
+            "vocab",
+            "draws routed to the arena tier",
+            Arc::clone(&self.tier_arena),
+        );
+        reg.register_counter(
+            "kss_vocab_tier_memtable_total",
+            "draws",
+            "vocab",
+            "draws routed to the memtable tier",
+            Arc::clone(&self.tier_memtable),
+        );
+        reg.register_counter(
+            "kss_vocab_tombstone_reject_total",
+            "draws",
+            "vocab",
+            "arena draws rejected on a tombstoned slot and redrawn",
+            Arc::clone(&self.tombstone_rejects),
+        );
+        reg.register_counter(
+            "kss_vocab_reject_overflow_total",
+            "draws",
+            "vocab",
+            "arena draws that exhausted the rejection budget",
+            Arc::clone(&self.reject_overflows),
+        );
+        reg.register_counter(
+            "kss_vocab_dropped_update_total",
+            "updates",
+            "vocab",
+            "embedding updates dropped (tombstoned or unknown class id)",
+            Arc::clone(&self.dropped_updates),
+        );
+        reg.register_counter(
+            "kss_vocab_insert_total",
+            "classes",
+            "vocab",
+            "classes inserted over the lifetime",
+            Arc::clone(&self.inserts),
+        );
+        reg.register_counter(
+            "kss_vocab_retire_total",
+            "classes",
+            "vocab",
+            "classes retired over the lifetime",
+            Arc::clone(&self.retires),
+        );
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compaction_seconds.count()
+    }
+
+    pub fn tier_arena_total(&self) -> u64 {
+        self.tier_arena.get()
+    }
+
+    pub fn tier_memtable_total(&self) -> u64 {
+        self.tier_memtable.get()
+    }
+
+    pub fn dropped_update_total(&self) -> u64 {
+        self.dropped_updates.get()
+    }
+
+    pub fn insert_total(&self) -> u64 {
+        self.inserts.get()
+    }
+
+    pub fn retire_total(&self) -> u64 {
+        self.retires.get()
+    }
+}

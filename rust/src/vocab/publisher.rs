@@ -1,0 +1,651 @@
+//! Serve-side streaming vocabulary: the writer/reader split of
+//! [`crate::vocab::streaming::StreamingKernelSampler`].
+//!
+//! [`VocabPublisher`] owns the mutable state (memtable, tombstones, the
+//! arena's [`crate::serve::snapshot::TreePublisher`]) and, after **every**
+//! mutation, publishes one immutable [`VocabSnapshot`] binding the tiers
+//! together — a reader can never observe a memtable from one generation
+//! next to an arena from another. [`VocabSnapshotSampler`] is the wait-free
+//! read face: it pins a composite generation, draws through the same
+//! [`crate::vocab::streaming::draw_from_tiers`] body the trainer sampler
+//! runs (bit-identical streams, property-tested below), and advances only
+//! in [`Sampler::refresh_snapshots`] — the serve layer's determinism
+//! contract, inherited wholesale from
+//! [`crate::serve::reader_sampler::SnapshotSampler`].
+//!
+//! Compaction goes through
+//! [`crate::serve::snapshot::TreePublisher::compact_and_publish`]: the
+//! replay log takes a `Compact` barrier record, pre-barrier arenas leave
+//! the reclaim queue, and the next composite snapshot carries the rebuilt
+//! arena with an empty memtable and no tombstones.
+
+use crate::sampler::kernel::tree::KernelTreeSampler;
+use crate::sampler::kernel::FeatureMap;
+use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::serve::snapshot::{
+    PublishReport, SnapshotReader, SnapshotStore, TreePublisher, TreeSnapshot,
+};
+use crate::util::rng::Rng;
+use crate::util::threadpool::Pool;
+use crate::vocab::memtable::{Memtable, TombstoneSet};
+use crate::vocab::streaming::{draw_from_tiers, prob_from_tiers, TierScratch};
+use crate::vocab::{CompactionPolicy, VocabObs};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// One immutable composite generation: the arena tree snapshot plus the
+/// memtable/tombstone state it was published with. Readers draw from all
+/// tiers of one `VocabSnapshot` — never mixing generations.
+pub struct VocabSnapshot<M: FeatureMap> {
+    /// Composite generation (0 = initial publish); advances on every
+    /// mutation, not in lockstep with the arena tree's own generation.
+    pub generation: u64,
+    /// The arena tier: a frozen tree generation from the inner
+    /// [`TreePublisher`].
+    pub tree: Arc<TreeSnapshot<M>>,
+    /// Arena slot → global class id.
+    pub arena_ids: Arc<Vec<u32>>,
+    /// Global class id → arena slot (tombstoned slots stay mapped).
+    pub arena_index: Arc<HashMap<u32, u32>>,
+    /// The memtable tier, frozen at publish time.
+    pub memtable: Arc<Memtable>,
+    /// Tombstoned arena slots with their frozen rows.
+    pub tombstones: Arc<TombstoneSet>,
+}
+
+/// Writer side of the serve-path streaming vocabulary (see module docs).
+pub struct VocabPublisher<M: FeatureMap + Clone> {
+    inner: TreePublisher<M>,
+    tree_store: Arc<SnapshotStore<TreeSnapshot<M>>>,
+    store: Arc<SnapshotStore<VocabSnapshot<M>>>,
+    arena_ids: Arc<Vec<u32>>,
+    arena_index: Arc<HashMap<u32, u32>>,
+    memtable: Memtable,
+    tombs: TombstoneSet,
+    next_id: u32,
+    policy: CompactionPolicy,
+    leaf_size: Option<usize>,
+    composite_gen: u64,
+    ops_since_compact: u64,
+    obs: VocabObs,
+}
+
+impl<M: FeatureMap + Clone> VocabPublisher<M> {
+    /// Wrap a seeded arena tree (dense global ids `0..n`) and publish the
+    /// composite generation 0.
+    pub fn new(tree: KernelTreeSampler<M>, leaf_size: Option<usize>) -> VocabPublisher<M> {
+        let n = tree.num_classes();
+        let d = tree.embed_dim();
+        let inner = TreePublisher::new(tree);
+        let tree_store = inner.store();
+        let (_, tree_snap) = tree_store.load();
+        let arena_ids: Arc<Vec<u32>> = Arc::new((0..n as u32).collect());
+        let arena_index: Arc<HashMap<u32, u32>> =
+            Arc::new((0..n as u32).map(|i| (i, i)).collect());
+        let store = Arc::new(SnapshotStore::new(VocabSnapshot {
+            generation: 0,
+            tree: tree_snap,
+            arena_ids: arena_ids.clone(),
+            arena_index: arena_index.clone(),
+            memtable: Arc::new(Memtable::new(d)),
+            tombstones: Arc::new(TombstoneSet::new(d)),
+        }));
+        VocabPublisher {
+            inner,
+            tree_store,
+            store,
+            arena_ids,
+            arena_index,
+            memtable: Memtable::new(d),
+            tombs: TombstoneSet::new(d),
+            next_id: n as u32,
+            policy: CompactionPolicy::default(),
+            leaf_size,
+            composite_gen: 0,
+            ops_since_compact: 0,
+            obs: VocabObs::default(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: CompactionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The composite publish point readers subscribe to.
+    pub fn store(&self) -> Arc<SnapshotStore<VocabSnapshot<M>>> {
+        self.store.clone()
+    }
+
+    /// Telemetry cells (shared with every [`VocabSnapshotSampler`] built
+    /// via [`VocabPublisher::reader`]).
+    pub fn obs(&self) -> &VocabObs {
+        &self.obs
+    }
+
+    /// The inner arena publisher's telemetry/stat surface.
+    pub fn tree_publisher(&self) -> &TreePublisher<M> {
+        &self.inner
+    }
+
+    /// A read-only sampler pinned to the current composite generation.
+    pub fn reader(&self, name: impl Into<String>) -> VocabSnapshotSampler<M> {
+        VocabSnapshotSampler::new(self.store(), name.into(), self.obs.clone())
+    }
+
+    fn d(&self) -> usize {
+        self.memtable.d()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.arena_ids.len() - self.tombs.len() + self.memtable.len()
+    }
+
+    pub fn memtable_len(&self) -> usize {
+        self.memtable.len()
+    }
+
+    pub fn tombstone_len(&self) -> usize {
+        self.tombs.len()
+    }
+
+    pub fn is_live(&self, id: u32) -> bool {
+        self.memtable.contains(id)
+            || self.arena_index.get(&id).is_some_and(|&slot| !self.tombs.contains(slot))
+    }
+
+    /// Bind the composite tiers at the current generation and swap them in.
+    /// Called after every mutation — the one place composite snapshots are
+    /// minted, so tier mixing is structurally impossible.
+    fn republish(&mut self) -> u64 {
+        let (_, tree_snap) = self.tree_store.load();
+        self.composite_gen += 1;
+        let snap = VocabSnapshot {
+            generation: self.composite_gen,
+            tree: tree_snap,
+            arena_ids: self.arena_ids.clone(),
+            arena_index: self.arena_index.clone(),
+            memtable: Arc::new(self.memtable.clone()),
+            tombstones: Arc::new(self.tombs.clone()),
+        };
+        let g = self.store.publish(Arc::new(snap));
+        debug_assert_eq!(g, self.composite_gen);
+        self.obs.memtable_size.set(self.memtable.len() as f64);
+        self.obs.tombstones.set(self.tombs.len() as f64);
+        g
+    }
+
+    /// Insert a new class with a fresh id; returns (id, composite gen).
+    pub fn insert_class(&mut self, row: &[f32]) -> (u32, u64) {
+        let id = self.next_id;
+        let g = self.insert_class_with_id(id, row).expect("fresh id cannot be live");
+        (id, g)
+    }
+
+    /// Insert under a caller-chosen id (errors if live; a tombstoned id may
+    /// be re-inserted — the arena copy stays masked until compaction).
+    pub fn insert_class_with_id(&mut self, id: u32, row: &[f32]) -> Result<u64> {
+        anyhow::ensure!(!self.is_live(id), "class {id} is already live");
+        self.memtable.insert(id, row)?;
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.obs.inserts.inc();
+        self.ops_since_compact += 1;
+        let g = self.republish();
+        self.maybe_compact();
+        Ok(g)
+    }
+
+    /// Retire a live class (memtable residents leave the memtable, arena
+    /// classes are tombstoned). Returns false for non-live ids and refuses
+    /// to retire the last live class.
+    pub fn retire_class(&mut self, id: u32) -> bool {
+        if self.live_len() <= 1 {
+            return false;
+        }
+        if self.memtable.remove(id) {
+            self.obs.retires.inc();
+            self.ops_since_compact += 1;
+            self.republish();
+            return true;
+        }
+        let Some(&slot) = self.arena_index.get(&id) else {
+            return false;
+        };
+        if self.tombs.contains(slot) {
+            return false;
+        }
+        let row = self.inner.shadow().emb_row(slot as usize).to_vec();
+        self.tombs.insert(slot, &row);
+        self.obs.retires.inc();
+        self.ops_since_compact += 1;
+        self.republish();
+        self.maybe_compact();
+        true
+    }
+
+    /// Churn-aware batched update over *global* ids: memtable rows patch in
+    /// place, tombstoned/unknown ids are dropped (counted), the rest goes
+    /// through the arena publisher as one slot-sorted
+    /// `update_and_publish`. Returns the publish report when the arena was
+    /// touched.
+    pub fn update_many(&mut self, classes: &[usize], rows: &[f32]) -> Option<PublishReport> {
+        if classes.is_empty() {
+            return None;
+        }
+        let d = rows.len() / classes.len();
+        debug_assert_eq!(d, self.d());
+        let mut arena: Vec<(u32, usize)> = Vec::new();
+        for (i, &gid) in classes.iter().enumerate() {
+            let gid = gid as u32;
+            let row = &rows[i * d..(i + 1) * d];
+            if self.memtable.update_row(gid, row) {
+                continue;
+            }
+            match self.arena_index.get(&gid) {
+                Some(&slot) if !self.tombs.contains(slot) => arena.push((slot, i)),
+                _ => self.obs.dropped_updates.inc(),
+            }
+        }
+        self.ops_since_compact += 1;
+        let report = if arena.is_empty() {
+            None
+        } else {
+            arena.sort_unstable_by_key(|&(slot, _)| slot);
+            let mut slots = Vec::with_capacity(arena.len());
+            let mut flat = Vec::with_capacity(arena.len() * d);
+            for &(slot, i) in &arena {
+                slots.push(slot as usize);
+                flat.extend_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            Some(self.inner.update_and_publish(&slots, &flat))
+        };
+        self.republish();
+        report
+    }
+
+    /// The live class set in canonical compaction order (arena slots
+    /// ascending, tombstones skipped, then memtable slots) — the layout
+    /// [`VocabPublisher::compact`] rebuilds from.
+    pub fn live_classes(&self) -> (Vec<u32>, Vec<f32>) {
+        let d = self.d();
+        let shadow = self.inner.shadow();
+        let n = self.arena_ids.len();
+        let live = self.live_len();
+        let mut ids = Vec::with_capacity(live);
+        let mut rows = Vec::with_capacity(live * d);
+        for slot in 0..n {
+            if self.tombs.contains(slot as u32) {
+                continue;
+            }
+            ids.push(self.arena_ids[slot]);
+            rows.extend_from_slice(shadow.emb_row(slot));
+        }
+        ids.extend_from_slice(self.memtable.ids());
+        rows.extend_from_slice(self.memtable.rows());
+        (ids, rows)
+    }
+
+    /// Fold the memtable into the arena and drop tombstones through the
+    /// replay-log barrier (`compact_and_publish`), then publish the clean
+    /// composite generation. The rebuilt arena is bitwise-equal to a
+    /// from-scratch tree over the live set by construction.
+    pub fn compact(&mut self) -> PublishReport {
+        let t = std::time::Instant::now();
+        let (ids, rows) = self.live_classes();
+        let d = self.d();
+        let n = ids.len();
+        let map = self.inner.shadow().feature_map().clone();
+        let mut tree = KernelTreeSampler::new(map, n, self.leaf_size);
+        tree.reset_embeddings(&rows, n, d);
+        let report = self.inner.compact_and_publish(tree);
+        self.arena_index =
+            Arc::new(ids.iter().enumerate().map(|(slot, &gid)| (gid, slot as u32)).collect());
+        self.arena_ids = Arc::new(ids);
+        self.memtable.clear();
+        self.tombs.clear();
+        self.obs.compaction_seconds.record(t.elapsed().as_secs_f64());
+        self.obs.compaction_lag_ops.record(self.ops_since_compact as f64);
+        self.ops_since_compact = 0;
+        self.republish();
+        report
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.policy.should_compact(
+            self.arena_ids.len(),
+            self.tombs.len(),
+            self.memtable.len(),
+        ) {
+            self.compact();
+        }
+    }
+}
+
+/// The pinned composite generation, refreshed only in
+/// [`Sampler::refresh_snapshots`].
+struct PinnedVocab<M: FeatureMap> {
+    reader: SnapshotReader<VocabSnapshot<M>>,
+    snap: Arc<VocabSnapshot<M>>,
+}
+
+/// Read-only [`Sampler`] over composite streaming-vocabulary generations
+/// (the `SnapshotSampler` protocol — pinned `Arc` cloned out of a short
+/// lock, wait-free draws, poison recovered not propagated).
+pub struct VocabSnapshotSampler<M: FeatureMap + Clone> {
+    name: String,
+    d: usize,
+    pinned: Mutex<PinnedVocab<M>>,
+    scratch_pool: Pool<TierScratch>,
+    obs: VocabObs,
+}
+
+impl<M: FeatureMap + Clone> VocabSnapshotSampler<M> {
+    pub fn new(
+        store: Arc<SnapshotStore<VocabSnapshot<M>>>,
+        name: String,
+        obs: VocabObs,
+    ) -> VocabSnapshotSampler<M> {
+        let reader = SnapshotReader::new(store);
+        let snap = reader.pinned().clone();
+        let d = snap.tree.tree.embed_dim();
+        VocabSnapshotSampler {
+            name,
+            d,
+            pinned: Mutex::new(PinnedVocab { reader, snap }),
+            scratch_pool: Pool::new(),
+            obs,
+        }
+    }
+
+    fn pin(&self) -> Result<Arc<VocabSnapshot<M>>> {
+        let guard = self
+            .pinned
+            .lock()
+            .map_err(|_| anyhow::anyhow!("vocab snapshot sampler lock poisoned"))?;
+        Ok(guard.snap.clone())
+    }
+}
+
+impl<M: FeatureMap + Clone> Sampler for VocabSnapshotSampler<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        out.clear();
+        let h = input
+            .h
+            .ok_or_else(|| anyhow::anyhow!("sampler '{}' needs the query embedding h", self.name))?;
+        anyhow::ensure!(h.len() == self.d, "h len {} != d {}", h.len(), self.d);
+        let snap = self.pin()?;
+        let mut s = self.scratch_pool.take(TierScratch::default);
+        let res = draw_from_tiers(
+            &snap.tree.tree,
+            &snap.arena_ids,
+            &snap.memtable,
+            &snap.tombstones,
+            h,
+            m,
+            &mut s,
+            rng,
+            &self.obs,
+            out,
+        );
+        self.scratch_pool.put(s);
+        res
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let h = input.h?;
+        let snap = self.pin().ok()?;
+        prob_from_tiers(
+            &snap.tree.tree,
+            &snap.arena_index,
+            &snap.memtable,
+            &snap.tombstones,
+            h,
+            class,
+        )
+    }
+
+    /// Read-only: the vocabulary lives in the publisher.
+    fn update(&mut self, _class: usize, _w_new: &[f32]) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; route updates through the publisher"
+        );
+    }
+
+    fn update_many(&mut self, _classes: &[usize], _rows: &[f32]) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; route updates through the publisher"
+        );
+    }
+
+    fn reset_embeddings(&mut self, _w: &[f32], _n: usize, _d: usize) {
+        debug_assert!(
+            false,
+            "snapshot-backed sampler is read-only; seed the publisher's tree instead"
+        );
+    }
+
+    fn snapshot_backed(&self) -> bool {
+        true
+    }
+
+    /// Advance to the freshest composite generation — the only place the
+    /// pinned snapshot changes. Poison is recovered: refresh overwrites the
+    /// whole pinned state.
+    fn refresh_snapshots(&self) {
+        let mut guard = self.pinned.lock().unwrap_or_else(PoisonError::into_inner);
+        let PinnedVocab { reader, snap } = &mut *guard;
+        *snap = reader.current().clone();
+    }
+
+    fn pinned_generation(&self) -> Option<u64> {
+        let guard = self.pinned.lock().unwrap_or_else(PoisonError::into_inner);
+        Some(guard.snap.generation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::vocab::StreamingKernelSampler;
+
+    const ALPHA: f64 = 100.0;
+
+    fn seeded_tree(n: usize, d: usize, seed: u64) -> (KernelTreeSampler<QuadraticMap>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut t = KernelTreeSampler::new(QuadraticMap::new(d, ALPHA), n, Some(4));
+        t.reset_embeddings(&emb, n, d);
+        (t, emb)
+    }
+
+    fn draw(s: &dyn Sampler, h: &[f32], m: usize, seed: u64) -> (Vec<u32>, Vec<f64>) {
+        let input = SampleInput { h: Some(h), ..Default::default() };
+        let mut out = Sample::default();
+        s.sample(&input, m, &mut Rng::new(seed), &mut out).unwrap();
+        (out.classes, out.q)
+    }
+
+    #[test]
+    fn publisher_reader_matches_owning_streaming_sampler_bitwise() {
+        // same op sequence through both faces of the subsystem → identical
+        // (class, q) streams bit for bit: the reader runs the exact same
+        // draw_from_tiers body over the exact same tier state
+        let (n, d) = (24usize, 3usize);
+        let (tree, emb) = seeded_tree(n, d, 91);
+        let mut pubr =
+            VocabPublisher::new(tree, Some(4)).with_policy(CompactionPolicy::manual());
+        let mut own = StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), n, Some(4))
+            .with_policy(CompactionPolicy::manual());
+        own.reset_embeddings(&emb, n, d);
+        let reader = pubr.reader("quadratic-streaming");
+        assert_eq!(reader.name(), "quadratic-streaming");
+        assert!(reader.snapshot_backed());
+
+        let mut rng = Rng::new(17);
+        let h = vec![0.4f32, -0.7, 0.2];
+        for step in 0..24u64 {
+            match step % 6 {
+                0 | 3 => {
+                    let mut row = vec![0.0f32; d];
+                    rng.fill_normal(&mut row, 0.5);
+                    let (id, _) = pubr.insert_class(&row);
+                    assert_eq!(own.insert_class(&row), id);
+                }
+                1 => {
+                    // retire a live arena class deterministically
+                    let gid = (step as u32 * 5) % n as u32;
+                    assert_eq!(pubr.retire_class(gid), own.retire_class(gid));
+                }
+                4 => {
+                    pubr.compact();
+                    own.compact();
+                }
+                _ => {
+                    let gid = (step as usize * 7) % n;
+                    let mut row = vec![0.0f32; d];
+                    rng.fill_normal(&mut row, 0.5);
+                    pubr.update_many(&[gid], &row);
+                    own.update_many(&[gid], &row);
+                }
+            }
+            assert_eq!(pubr.live_len(), own.live_len(), "step {step}");
+            reader.refresh_snapshots();
+            let a = draw(&reader, &h, 12, 0xBEEF ^ step);
+            let b = draw(&own, &h, 12, 0xBEEF ^ step);
+            assert_eq!(a.0, b.0, "step {step}: classes diverged");
+            assert_eq!(a.1, b.1, "step {step}: q diverged");
+            for &gid in a.0.iter().take(4) {
+                let input = SampleInput { h: Some(&h), ..Default::default() };
+                assert_eq!(reader.prob(&input, gid), own.prob(&input, gid), "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn composite_generation_is_pinned_until_refresh() {
+        let (n, d) = (16usize, 2usize);
+        let (tree, _) = seeded_tree(n, d, 92);
+        let mut pubr =
+            VocabPublisher::new(tree, Some(4)).with_policy(CompactionPolicy::manual());
+        let reader = pubr.reader("quadratic-streaming");
+        assert_eq!(reader.pinned_generation(), Some(0));
+        let h = vec![0.6f32, -0.3];
+        let before = draw(&reader, &h, 16, 7);
+        // tier-coherent mutations land; the pinned composite must not move
+        let mut rng = Rng::new(5);
+        let mut row = vec![0.0f32; d];
+        rng.fill_normal(&mut row, 0.5);
+        pubr.insert_class(&row);
+        pubr.retire_class(3);
+        assert_eq!(reader.pinned_generation(), Some(0), "pinned set moved without refresh");
+        assert_eq!(draw(&reader, &h, 16, 7), before, "draws changed under a pinned generation");
+        reader.refresh_snapshots();
+        assert_eq!(reader.pinned_generation(), Some(2));
+        // the refreshed snapshot sees both tiers at once: the insert is
+        // drawable, the tombstone is not
+        let inserted = n as u32;
+        let (classes, _) = draw(&reader, &h, 400, 8);
+        assert!(classes.contains(&inserted), "inserted class never drawn");
+        assert!(!classes.contains(&3), "tombstoned class drawn");
+    }
+
+    #[test]
+    fn compaction_publishes_through_the_replay_log_barrier() {
+        let (n, d) = (20usize, 2usize);
+        let (tree, _) = seeded_tree(n, d, 93);
+        let mut pubr =
+            VocabPublisher::new(tree, Some(4)).with_policy(CompactionPolicy::manual());
+        // hold a pre-compaction composite pinned (its arena must survive)
+        let pinned = pubr.reader("quadratic-streaming");
+        let h = vec![0.2f32, 0.9];
+        let before = draw(&pinned, &h, 10, 3);
+        let mut rng = Rng::new(9);
+        let mut row = vec![0.0f32; d];
+        for _ in 0..3 {
+            rng.fill_normal(&mut row, 0.5);
+            pubr.insert_class(&row);
+        }
+        pubr.retire_class(7);
+        let report = pubr.compact();
+        assert!(!report.reclaimed, "fresh topology cannot reclaim an arena");
+        assert_eq!(pubr.tree_publisher().stats.compactions, 1);
+        assert_eq!(pubr.memtable_len(), 0);
+        assert_eq!(pubr.tombstone_len(), 0);
+        assert_eq!(pubr.live_len(), n - 1 + 3);
+        assert_eq!(pubr.obs().compactions(), 1);
+        // the pinned reader still draws generation-0 bits
+        assert_eq!(draw(&pinned, &h, 10, 3), before, "pinned pre-barrier draws changed");
+        // a fresh reader sees the folded catalog: memtable ids moved into
+        // the arena, the tombstoned id is gone
+        pinned.refresh_snapshots();
+        let (classes, q) = draw(&pinned, &h, 600, 4);
+        assert!(classes.iter().all(|&c| c != 7), "retired class survived compaction");
+        assert!(classes.iter().any(|&c| c >= n as u32), "folded memtable class never drawn");
+        assert!(q.iter().all(|&x| x > 0.0 && x.is_finite()));
+        // post-compaction updates flow through the arena publisher again
+        rng.fill_normal(&mut row, 0.5);
+        let rep = pubr.update_many(&[2], &row).expect("arena update must publish");
+        assert!(rep.generation > report.generation);
+    }
+
+    #[test]
+    fn concurrent_readers_survive_churn_and_compactions() {
+        let (n, d) = (32usize, 3usize);
+        let (tree, _) = seeded_tree(n, d, 94);
+        let mut pubr = VocabPublisher::new(tree, Some(4))
+            .with_policy(CompactionPolicy { memtable_cap: 8, max_tombstone_frac: 0.25 });
+        let store = pubr.store();
+        let obs = pubr.obs().clone();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for t in 0..3u64 {
+                let store = store.clone();
+                let obs = obs.clone();
+                let stop = &stop;
+                scope.spawn(move || {
+                    let s = VocabSnapshotSampler::new(store, "quadratic-streaming".into(), obs);
+                    let h = vec![0.5f32, -0.2, 0.8];
+                    let input = SampleInput { h: Some(&h), ..Default::default() };
+                    let mut out = Sample::default();
+                    let mut rng = Rng::new(0xD00D + t);
+                    let mut draws = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) || draws < 50 {
+                        s.refresh_snapshots();
+                        s.sample(&input, 8, &mut rng, &mut out).unwrap();
+                        for (&c, &q) in out.classes.iter().zip(&out.q) {
+                            assert!(q > 0.0 && q.is_finite(), "class {c} q {q}");
+                        }
+                        draws += 1;
+                    }
+                });
+            }
+            let mut rng = Rng::new(77);
+            let mut row = vec![0.0f32; d];
+            for i in 0..120u32 {
+                rng.fill_normal(&mut row, 0.5);
+                let (id, _) = pubr.insert_class(&row);
+                if i % 3 == 0 {
+                    pubr.retire_class(id / 2);
+                }
+                rng.fill_normal(&mut row, 0.5);
+                pubr.update_many(&[(i as usize) % pubr.live_len().max(1)], &row);
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert!(pubr.obs().compactions() > 0, "policy never compacted under churn");
+        assert!(pubr.tree_publisher().stats.compactions > 0);
+    }
+}

@@ -1,0 +1,823 @@
+//! The two-tier streaming sampler: tier router + owning trainer sampler.
+//!
+//! # Tier router algebra
+//!
+//! [`draw_from_tiers`] is the shard-router algebra of
+//! [`crate::serve::shard`] specialized to two heterogeneous tiers:
+//!
+//! ```text
+//!   M_arena = ⟨φ(h), z(root)⟩ − Σ_tombstoned K(h, w_t)   (mass exclusion)
+//!   M_mem   = Σ_memtable K(h, w_j)
+//!   P(tier) = M_tier / (M_arena + M_mem)
+//!   q(c)    = P(tier) · q_tier(c) = K(h, w_c) / ΣM
+//! ```
+//!
+//! which is exactly the distribution of a single kernel tree over the
+//! live union — the per-class numerator is the same kernel score, and the
+//! denominator differs only in floating-point association of the same
+//! positive terms (≤ 1e-12 relative at practical sizes; the compaction
+//! policy bounds the cancellation of the mass-exclusion subtraction, see
+//! [`crate::vocab::CompactionPolicy`]). On the clean path the code
+//! reports the cancelled form `K/ΣM` directly.
+//!
+//! Tombstoned slots are handled by **rejection**: a tombstoned class's
+//! kernel mass is already excluded from `M_arena`, so redrawing until a
+//! live slot lands samples exactly the conditional distribution over live
+//! arena classes. The redraw budget is bounded; exhausting it falls back
+//! to a uniform live-slot scan (counted — it signals a violated
+//! compaction policy) so the draw path stays panic-free with q > 0.
+//!
+//! Degenerate masses (all tiers sanitized to zero) fall back to a uniform
+//! choice among populated tiers, reporting the product of probabilities
+//! actually used — the same stance as the shard router and the in-tree
+//! zero-mass guards.
+
+use crate::ops;
+use crate::sampler::kernel::tree::{sanitize_mass, step_down_to_positive, KernelTreeSampler};
+use crate::sampler::kernel::FeatureMap;
+use crate::sampler::{Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::Rng;
+use crate::util::threadpool::Pool;
+use crate::vocab::memtable::{Memtable, TombstoneSet};
+use crate::vocab::{CompactionPolicy, VocabObs};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub(crate) const TIER_ARENA: usize = 0;
+pub(crate) const TIER_MEM: usize = 1;
+
+/// Bounded redraw attempts in the arena tier before the uniform live-slot
+/// fallback. The compaction policy caps tombstone mass at ~1/4 of the
+/// arena, so the expected attempt count is ≤ 4/3 and the budget is
+/// exhausted with probability ≤ (1/4)^64.
+const REJECT_CAP: usize = 64;
+
+/// Vocab-level draw scratch (the arena tree pools its own
+/// [`crate::sampler::kernel::tree::DrawScratch`] internally — those
+/// buffers are shape-bound to one tree and must not outlive a
+/// compaction).
+#[derive(Default)]
+pub(crate) struct TierScratch {
+    phi_h: Vec<f64>,
+    tomb_k: Vec<f64>,
+    tomb_cum: Vec<f64>,
+    mem_w: Vec<f64>,
+    mem_cum: Vec<f64>,
+    masses: [f64; 2],
+    cum: [f64; 2],
+}
+
+/// Draw `m` negatives from the two-tier composite into `out` (global
+/// ids). See the module docs for the q algebra; panics are structurally
+/// unreachable (every division is guarded, every fallback reports the
+/// probability it actually used).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn draw_from_tiers<M: FeatureMap>(
+    tree: &KernelTreeSampler<M>,
+    arena_ids: &[u32],
+    memtable: &Memtable,
+    tombs: &TombstoneSet,
+    h: &[f32],
+    m: usize,
+    s: &mut TierScratch,
+    rng: &mut Rng,
+    obs: &VocabObs,
+    out: &mut Sample,
+) -> Result<()> {
+    let map = tree.feature_map();
+    let arena_n = arena_ids.len();
+    let arena_live_n = arena_n - tombs.len();
+    let live_n = arena_live_n + memtable.len();
+    anyhow::ensure!(live_n > 0, "streaming sampler has no live classes");
+
+    // per-example tier masses (the router CDF)
+    s.phi_h.resize(map.dim(), 0.0);
+    map.phi(h, &mut s.phi_h);
+    let arena_raw = tree.partition(&s.phi_h);
+    let tomb_mass = tombs.mass(map, h, &mut s.tomb_k, &mut s.tomb_cum);
+    memtable.weights_into(map, h, &mut s.mem_w);
+    s.mem_cum.resize(memtable.len(), 0.0);
+    let mem_mass = ops::fill_cum_into(&s.mem_w, &mut s.mem_cum);
+    // a fully tombstoned arena must not keep fp residue of the
+    // subtraction as drawable mass — there is no live slot to land on
+    s.masses[TIER_ARENA] =
+        if arena_live_n == 0 { 0.0 } else { sanitize_mass(arena_raw - tomb_mass) };
+    s.masses[TIER_MEM] = if memtable.is_empty() { 0.0 } else { sanitize_mass(mem_mass) };
+    let total = ops::fill_cum_into(&s.masses, &mut s.cum);
+
+    // the arena descent scratch is pooled by the tree itself and primed
+    // lazily — m memtable-tier draws never pay the arena setup
+    let mut tree_scratch = None;
+
+    for _ in 0..m {
+        // tier choice — the shard-router CDF over 2 tiers
+        let (tier, p_tier, clean) = if total > 0.0 && total.is_finite() {
+            let u = rng.f64() * total;
+            let idx = s.cum.partition_point(|&c| c <= u).min(1);
+            let idx = step_down_to_positive(&s.cum, idx);
+            (idx, s.masses[idx] / total, true)
+        } else if arena_live_n > 0 && !memtable.is_empty() {
+            // every tier's mass degenerated: uniform over populated tiers
+            (rng.below(2) as usize, 0.5, false)
+        } else if arena_live_n > 0 {
+            (TIER_ARENA, 1.0, false)
+        } else {
+            (TIER_MEM, 1.0, false)
+        };
+
+        if tier == TIER_MEM {
+            let (id, q) = if mem_mass > 0.0 && mem_mass.is_finite() {
+                let (slot, id) = memtable.draw_prepared(&s.mem_cum, mem_mass, rng);
+                let q = if clean {
+                    // (M_mem/ΣM)·(k/M_mem) = k/ΣM — the union-tree form
+                    (s.mem_w[slot] / total).clamp(f64::MIN_POSITIVE, f64::MAX)
+                } else {
+                    let lo = if slot == 0 { 0.0 } else { s.mem_cum[slot - 1] };
+                    (p_tier * ((s.mem_cum[slot] - lo) / mem_mass))
+                        .clamp(f64::MIN_POSITIVE, f64::MAX)
+                };
+                (id, q)
+            } else {
+                // degenerate memtable mass: uniform over its slots
+                let slot = rng.below(memtable.len() as u64) as usize;
+                let q = (p_tier / memtable.len() as f64).clamp(f64::MIN_POSITIVE, f64::MAX);
+                (memtable.id_at(slot), q)
+            };
+            out.push(id, q);
+            obs.tier_memtable.inc();
+            continue;
+        }
+
+        // arena tier: tombstone mass is excluded from the router mass, so
+        // rejecting tombstoned landings samples the live conditional
+        let ts = tree_scratch.get_or_insert_with(|| {
+            let mut sc = tree.take_scratch();
+            tree.begin_example_prepared(&s.phi_h, arena_raw, &mut sc);
+            sc
+        });
+        let mut chosen = None;
+        for _ in 0..REJECT_CAP {
+            let (slot, q_tree) = tree.draw(h, ts, rng);
+            if !tombs.contains(slot) {
+                chosen = Some((slot, q_tree));
+                break;
+            }
+            obs.tombstone_rejects.inc();
+        }
+        let (slot, q) = match chosen {
+            Some((slot, q_tree)) => {
+                let q = if clean {
+                    // (M_arena/ΣM)·(k/M_arena) = k/ΣM — the union-tree form
+                    let k = sanitize_mass(map.kernel(h, tree.emb_row(slot as usize)));
+                    (k / total).clamp(f64::MIN_POSITIVE, f64::MAX)
+                } else {
+                    (p_tier * q_tree).clamp(f64::MIN_POSITIVE, f64::MAX)
+                };
+                (slot, q)
+            }
+            None => {
+                // budget exhausted (tombstone mass ≫ live mass — a
+                // violated compaction policy): uniform over live slots,
+                // counted so operators can see the policy failure
+                obs.reject_overflows.inc();
+                let pick = rng.below(arena_live_n as u64) as usize;
+                let mut slot = 0u32;
+                let mut seen = 0usize;
+                for cand in 0..arena_n as u32 {
+                    if tombs.contains(cand) {
+                        continue;
+                    }
+                    if seen == pick {
+                        slot = cand;
+                        break;
+                    }
+                    seen += 1;
+                }
+                let q = (p_tier / arena_live_n as f64).clamp(f64::MIN_POSITIVE, f64::MAX);
+                (slot, q)
+            }
+        };
+        out.push(arena_ids[slot as usize], q);
+        obs.tier_arena.inc();
+    }
+    if let Some(ts) = tree_scratch {
+        tree.put_scratch(ts);
+    }
+    Ok(())
+}
+
+/// Composite probability of one live class (`None` for tombstoned or
+/// unknown ids, and on fully degenerate mass — the same stance as the
+/// shard sampler's `prob`).
+pub(crate) fn prob_from_tiers<M: FeatureMap>(
+    tree: &KernelTreeSampler<M>,
+    arena_index: &HashMap<u32, u32>,
+    memtable: &Memtable,
+    tombs: &TombstoneSet,
+    h: &[f32],
+    class: u32,
+) -> Option<f64> {
+    let map = tree.feature_map();
+    let k = if let Some(slot) = memtable.slot_of(class) {
+        map.kernel(h, memtable.row(slot))
+    } else {
+        let &slot = arena_index.get(&class)?;
+        if tombs.contains(slot) {
+            return None;
+        }
+        map.kernel(h, tree.emb_row(slot as usize))
+    };
+    let phi_h = tree.phi_query(h);
+    let arena_raw = tree.partition(&phi_h);
+    let tomb_mass = tombs.mass(map, h, &mut Vec::new(), &mut Vec::new());
+    let mut mem_w = Vec::new();
+    memtable.weights_into(map, h, &mut mem_w);
+    let mut mem_cum = vec![0.0; mem_w.len()];
+    let mem_mass = ops::fill_cum_into(&mem_w, &mut mem_cum);
+    let arena_live_n = arena_index.len() - tombs.len();
+    let m_arena = if arena_live_n == 0 { 0.0 } else { sanitize_mass(arena_raw - tomb_mass) };
+    let m_mem = if memtable.is_empty() { 0.0 } else { sanitize_mass(mem_mass) };
+    let total = m_arena + m_mem;
+    if !(total > 0.0 && total.is_finite()) {
+        return None;
+    }
+    Some(k / total)
+}
+
+/// The owning streaming sampler (registry names `quadratic-streaming`,
+/// `rff-streaming`): a kernel-tree arena over **slots** with an explicit
+/// slot → global-id map, a memtable for inserts, a tombstone set for
+/// retirements, and a self-driving compactor. Draws report *global* class
+/// ids — after churn the id space has holes, which is the point.
+pub struct StreamingKernelSampler<M: FeatureMap + Clone> {
+    name: String,
+    tree: KernelTreeSampler<M>,
+    /// arena slot → global class id.
+    arena_ids: Vec<u32>,
+    /// global class id → arena slot (tombstoned slots stay mapped; draws
+    /// mask them, compaction evicts them).
+    arena_index: HashMap<u32, u32>,
+    memtable: Memtable,
+    tombs: TombstoneSet,
+    next_id: u32,
+    policy: CompactionPolicy,
+    leaf_size: Option<usize>,
+    ops_since_compact: u64,
+    scratch: Pool<TierScratch>,
+    obs: VocabObs,
+}
+
+impl<M: FeatureMap + Clone> StreamingKernelSampler<M> {
+    /// Start with a dense arena over global ids `0..n_classes` (all-zero
+    /// embeddings until [`Sampler::reset_embeddings`]).
+    pub fn new(map: M, n_classes: usize, leaf_size: Option<usize>) -> Self {
+        let d = map.d();
+        let name = format!("{}-streaming", map.name());
+        let tree = KernelTreeSampler::new(map, n_classes, leaf_size);
+        StreamingKernelSampler {
+            name,
+            tree,
+            arena_ids: (0..n_classes as u32).collect(),
+            arena_index: (0..n_classes as u32).map(|i| (i, i)).collect(),
+            memtable: Memtable::new(d),
+            tombs: TombstoneSet::new(d),
+            next_id: n_classes as u32,
+            policy: CompactionPolicy::default(),
+            leaf_size,
+            ops_since_compact: 0,
+            scratch: Pool::new(),
+            obs: VocabObs::default(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: CompactionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Telemetry cells (register via [`VocabObs::register_into`]).
+    pub fn obs(&self) -> &VocabObs {
+        &self.obs
+    }
+
+    fn d(&self) -> usize {
+        self.memtable.d()
+    }
+
+    /// Live classes: arena minus tombstones plus memtable.
+    pub fn live_len(&self) -> usize {
+        self.arena_ids.len() - self.tombs.len() + self.memtable.len()
+    }
+
+    pub fn memtable_len(&self) -> usize {
+        self.memtable.len()
+    }
+
+    pub fn tombstone_len(&self) -> usize {
+        self.tombs.len()
+    }
+
+    pub fn is_live(&self, id: u32) -> bool {
+        self.memtable.contains(id)
+            || self.arena_index.get(&id).is_some_and(|&slot| !self.tombs.contains(slot))
+    }
+
+    /// Insert a new class with a fresh id; returns the id.
+    pub fn insert_class(&mut self, row: &[f32]) -> u32 {
+        let id = self.next_id;
+        self.insert_class_with_id(id, row).expect("fresh id cannot be live");
+        id
+    }
+
+    /// Insert under a caller-chosen id (errors if that id is live — a
+    /// *tombstoned* id may be re-inserted; the arena copy stays masked
+    /// until compaction evicts it).
+    pub fn insert_class_with_id(&mut self, id: u32, row: &[f32]) -> Result<()> {
+        anyhow::ensure!(!self.is_live(id), "class {id} is already live");
+        self.memtable.insert(id, row)?;
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.obs.inserts.inc();
+        self.obs.memtable_size.set(self.memtable.len() as f64);
+        self.ops_since_compact += 1;
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Retire a live class. Memtable residents simply leave the memtable;
+    /// arena classes are tombstoned (mass excluded, draws rejected) until
+    /// the next compaction. Returns false for non-live ids, and refuses to
+    /// retire the last live class (an empty vocabulary cannot sample).
+    pub fn retire_class(&mut self, id: u32) -> bool {
+        if self.live_len() <= 1 {
+            return false;
+        }
+        if self.memtable.remove(id) {
+            self.obs.retires.inc();
+            self.obs.memtable_size.set(self.memtable.len() as f64);
+            self.ops_since_compact += 1;
+            return true;
+        }
+        let Some(&slot) = self.arena_index.get(&id) else {
+            return false;
+        };
+        if self.tombs.contains(slot) {
+            return false;
+        }
+        let row = self.tree.emb_row(slot as usize).to_vec();
+        self.tombs.insert(slot, &row);
+        self.obs.retires.inc();
+        self.obs.tombstones.set(self.tombs.len() as f64);
+        self.ops_since_compact += 1;
+        self.maybe_compact();
+        true
+    }
+
+    /// The live class set in canonical compaction order: arena slots
+    /// ascending (tombstones skipped), then memtable slots. This is
+    /// exactly the layout [`StreamingKernelSampler::compact`] rebuilds
+    /// the arena from — the bitwise-equal-to-rebuild property tests pin
+    /// that.
+    pub fn live_classes(&self) -> (Vec<u32>, Vec<f32>) {
+        let d = self.d();
+        let n = self.arena_ids.len();
+        let live = self.live_len();
+        let mut ids = Vec::with_capacity(live);
+        let mut rows = Vec::with_capacity(live * d);
+        for slot in 0..n {
+            if self.tombs.contains(slot as u32) {
+                continue;
+            }
+            ids.push(self.arena_ids[slot]);
+            rows.extend_from_slice(self.tree.emb_row(slot));
+        }
+        ids.extend_from_slice(self.memtable.ids());
+        rows.extend_from_slice(self.memtable.rows());
+        (ids, rows)
+    }
+
+    /// Fold the memtable into the arena and drop tombstones: gather the
+    /// live rows in canonical order and build a fresh dense tree — by
+    /// construction bitwise-equal to a from-scratch rebuild over the live
+    /// set. O(C) work, paid once per policy trigger instead of per op.
+    pub fn compact(&mut self) {
+        let t = Instant::now();
+        let (ids, rows) = self.live_classes();
+        let d = self.d();
+        let n = ids.len();
+        let map = self.tree.feature_map().clone();
+        let mut tree = KernelTreeSampler::new(map, n, self.leaf_size);
+        tree.reset_embeddings(&rows, n, d);
+        self.tree = tree;
+        self.arena_index =
+            ids.iter().enumerate().map(|(slot, &gid)| (gid, slot as u32)).collect();
+        self.arena_ids = ids;
+        self.memtable.clear();
+        self.tombs.clear();
+        self.obs.compaction_seconds.record(t.elapsed().as_secs_f64());
+        self.obs.compaction_lag_ops.record(self.ops_since_compact as f64);
+        self.ops_since_compact = 0;
+        self.obs.memtable_size.set(0.0);
+        self.obs.tombstones.set(0.0);
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.policy.should_compact(
+            self.arena_ids.len(),
+            self.tombs.len(),
+            self.memtable.len(),
+        ) {
+            self.compact();
+        }
+    }
+
+    /// Churn-aware batched update: memtable rows are patched in place
+    /// (their mass refreshes on the next draw), tombstoned and unknown
+    /// ids are dropped (counted — the frozen tombstone rows must keep
+    /// matching the arena), and the rest becomes one aggregated
+    /// kernel-tree sweep over arena slots.
+    fn update_many_routed(&mut self, classes: &[usize], rows: &[f32]) {
+        if classes.is_empty() {
+            return;
+        }
+        let d = rows.len() / classes.len();
+        debug_assert_eq!(d, self.d());
+        let mut arena: Vec<(u32, usize)> = Vec::new();
+        for (i, &gid) in classes.iter().enumerate() {
+            let gid = gid as u32;
+            let row = &rows[i * d..(i + 1) * d];
+            if self.memtable.update_row(gid, row) {
+                continue;
+            }
+            match self.arena_index.get(&gid) {
+                Some(&slot) if !self.tombs.contains(slot) => arena.push((slot, i)),
+                _ => self.obs.dropped_updates.inc(),
+            }
+        }
+        if !arena.is_empty() {
+            // global ids arrive sorted, but slot order is a permutation of
+            // id order after compaction — re-sort for the tree contract
+            arena.sort_unstable_by_key(|&(slot, _)| slot);
+            let mut slots = Vec::with_capacity(arena.len());
+            let mut flat = Vec::with_capacity(arena.len() * d);
+            for &(slot, i) in &arena {
+                slots.push(slot as usize);
+                flat.extend_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            self.tree.update_many(&slots, &flat);
+        }
+        self.ops_since_compact += 1;
+    }
+}
+
+impl<M: FeatureMap + Clone> Sampler for StreamingKernelSampler<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        out.clear();
+        let h = input
+            .h
+            .ok_or_else(|| anyhow::anyhow!("sampler '{}' needs the query embedding h", self.name))?;
+        let mut s = self.scratch.take(TierScratch::default);
+        let res = draw_from_tiers(
+            &self.tree,
+            &self.arena_ids,
+            &self.memtable,
+            &self.tombs,
+            h,
+            m,
+            &mut s,
+            rng,
+            &self.obs,
+            out,
+        );
+        self.scratch.put(s);
+        res
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let h = input.h?;
+        prob_from_tiers(&self.tree, &self.arena_index, &self.memtable, &self.tombs, h, class)
+    }
+
+    fn update(&mut self, class: usize, w_new: &[f32]) {
+        self.update_many_routed(&[class], w_new);
+    }
+
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        self.update_many_routed(classes, rows);
+    }
+
+    /// Reset to a dense live set over global ids `0..n` (fresh stream:
+    /// memtable and tombstones are dropped, the id counter restarts at
+    /// `n`).
+    fn reset_embeddings(&mut self, w: &[f32], n: usize, d: usize) {
+        debug_assert_eq!(d, self.d());
+        let map = self.tree.feature_map().clone();
+        let mut tree = KernelTreeSampler::new(map, n, self.leaf_size);
+        tree.reset_embeddings(w, n, d);
+        self.tree = tree;
+        self.arena_ids = (0..n as u32).collect();
+        self.arena_index = (0..n as u32).map(|i| (i, i)).collect();
+        self.memtable.clear();
+        self.tombs.clear();
+        self.next_id = n as u32;
+        self.ops_since_compact = 0;
+        self.obs.memtable_size.set(0.0);
+        self.obs.tombstones.set(0.0);
+    }
+
+    fn owns_kernel_tree(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::sampler::rff::{PositiveRffMap, RffConfig, RFF_BUILD_SEED};
+    use crate::util::testing::check;
+
+    const ALPHA: f64 = 100.0;
+
+    /// Test-side mirror of the live class set: (global id, row) pairs in
+    /// insertion order, with a from-scratch single-tree builder — the
+    /// ISSUE's reference distribution.
+    struct Mirror {
+        d: usize,
+        live: Vec<(u32, Vec<f32>)>,
+    }
+
+    impl Mirror {
+        fn slot_of(&self, gid: u32) -> Option<usize> {
+            self.live.iter().position(|&(g, _)| g == gid)
+        }
+
+        fn build(&self) -> KernelTreeSampler<QuadraticMap> {
+            let n = self.live.len();
+            let mut rows = Vec::with_capacity(n * self.d);
+            for (_, r) in &self.live {
+                rows.extend_from_slice(r);
+            }
+            let mut t = KernelTreeSampler::new(QuadraticMap::new(self.d, ALPHA), n, Some(4));
+            t.reset_embeddings(&rows, n, self.d);
+            t
+        }
+    }
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(a.abs())
+    }
+
+    #[test]
+    fn streaming_q_matches_from_scratch_tree_through_interleaved_schedule() {
+        // the ISSUE acceptance property: at EVERY point of an interleaved
+        // insert/retire/update/compact schedule, the composite q of each
+        // draw matches a from-scratch single tree over the live class set
+        // to ≤ 1e-12 relative, and tombstoned classes are never drawn
+        check("vocab.streaming_matches_single_tree", 8, |g| {
+            let n0 = g.usize_in(8, 20);
+            let d = g.usize_in(2, 4);
+            let seed = g.case_seed;
+            let mut rng = Rng::new(seed);
+            let mut emb = vec![0.0f32; n0 * d];
+            rng.fill_normal(&mut emb, 0.6);
+
+            let mut s = StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), n0, Some(4))
+                .with_policy(CompactionPolicy::manual());
+            s.reset_embeddings(&emb, n0, d);
+            let mut mirror = Mirror {
+                d,
+                live: (0..n0)
+                    .map(|i| (i as u32, emb[i * d..(i + 1) * d].to_vec()))
+                    .collect(),
+            };
+
+            let mut retired: Vec<u32> = Vec::new();
+            for step in 0..40 {
+                // one mutation per step, interleaved kinds
+                match step % 8 {
+                    0 | 3 | 6 => {
+                        let mut row = vec![0.0f32; d];
+                        rng.fill_normal(&mut row, 0.6);
+                        let id = s.insert_class(&row);
+                        mirror.live.push((id, row));
+                    }
+                    1 | 5 => {
+                        if mirror.live.len() > 3 {
+                            let pick = rng.below(mirror.live.len() as u64) as usize;
+                            let gid = mirror.live[pick].0;
+                            assert!(s.retire_class(gid), "retire live id {gid}");
+                            mirror.live.remove(pick);
+                            retired.push(gid);
+                        }
+                    }
+                    7 => {
+                        s.compact();
+                        assert_eq!(s.memtable_len(), 0);
+                        assert_eq!(s.tombstone_len(), 0);
+                    }
+                    _ => {
+                        // batched update of a few live classes (sorted ids)
+                        let k = 1 + rng.below(3) as usize;
+                        let mut picks: Vec<usize> = (0..mirror.live.len()).collect();
+                        rng.shuffle(&mut picks);
+                        picks.truncate(k.min(mirror.live.len()));
+                        let mut gids: Vec<u32> =
+                            picks.iter().map(|&p| mirror.live[p].0).collect();
+                        gids.sort_unstable();
+                        let mut flat = vec![0.0f32; gids.len() * d];
+                        rng.fill_normal(&mut flat, 0.6);
+                        for (i, &gid) in gids.iter().enumerate() {
+                            let slot = mirror.slot_of(gid).unwrap();
+                            mirror.live[slot].1.copy_from_slice(&flat[i * d..(i + 1) * d]);
+                        }
+                        let classes: Vec<usize> = gids.iter().map(|&g| g as usize).collect();
+                        s.update_many(&classes, &flat);
+                    }
+                }
+                assert_eq!(s.live_len(), mirror.live.len(), "step {step}");
+
+                // the reference: a from-scratch single tree over the live set
+                let reference = mirror.build();
+                let mut h = vec![0.0f32; d];
+                rng.fill_normal(&mut h, 1.0);
+                let input = SampleInput { h: Some(&h), ..Default::default() };
+                let mut out = Sample::default();
+                let mut draw_rng = Rng::new(seed ^ (step as u64) << 32);
+                s.sample(&input, 8, &mut draw_rng, &mut out).unwrap();
+                for (&gid, &q) in out.classes.iter().zip(&out.q) {
+                    assert!(
+                        !retired.contains(&gid) || s.is_live(gid),
+                        "step {step}: drew retired class {gid}"
+                    );
+                    let slot = mirror
+                        .slot_of(gid)
+                        .unwrap_or_else(|| panic!("step {step}: drew non-live class {gid}"));
+                    let want = reference.prob(&input, slot as u32).unwrap();
+                    assert!(
+                        rel_close(q, want, 1e-12),
+                        "step {step} class {gid}: q {q} vs single-tree {want}"
+                    );
+                }
+                // prob agrees with the reference on every live class
+                for (slot, &(gid, _)) in mirror.live.iter().enumerate() {
+                    let got = s.prob(&input, gid).unwrap();
+                    let want = reference.prob(&input, slot as u32).unwrap();
+                    assert!(
+                        rel_close(got, want, 1e-12),
+                        "step {step} class {gid}: prob {got} vs {want}"
+                    );
+                }
+                // and declines tombstoned ids
+                for &gid in retired.iter().take(3) {
+                    if !s.is_live(gid) {
+                        assert_eq!(s.prob(&input, gid), None, "step {step}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tombstoned_classes_are_never_drawn_under_heavy_retirement() {
+        let (n, d) = (32usize, 3usize);
+        let mut rng = Rng::new(44);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.7);
+        let mut s = StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), n, Some(4))
+            .with_policy(CompactionPolicy::manual());
+        s.reset_embeddings(&emb, n, d);
+        // retire just under half the arena, no compaction
+        let mut dead = Vec::new();
+        for id in (0..n as u32).step_by(2).take(15) {
+            assert!(s.retire_class(id));
+            dead.push(id);
+        }
+        assert_eq!(s.tombstone_len(), 15);
+        let h = vec![0.3f32, -0.8, 0.5];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        for round in 0..200 {
+            s.sample(&input, 25, &mut Rng::new(round), &mut out).unwrap();
+            for (&c, &q) in out.classes.iter().zip(&out.q) {
+                assert!(!dead.contains(&c), "drew tombstoned class {c}");
+                assert!(q > 0.0 && q.is_finite());
+            }
+        }
+        assert!(s.obs().tier_arena_total() > 0);
+        // tombstoned ids report no probability and drop updates countably
+        assert_eq!(s.prob(&input, 0), None);
+        let dropped_before = s.obs().dropped_update_total();
+        s.update_many(&[0, 1], &vec![0.1f32; 2 * d]);
+        assert_eq!(s.obs().dropped_update_total(), dropped_before + 1);
+    }
+
+    #[test]
+    fn compaction_is_bitwise_equal_to_a_from_scratch_rebuild() {
+        let (n, d) = (24usize, 3usize);
+        let mut rng = Rng::new(55);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let mut s = StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), n, Some(4))
+            .with_policy(CompactionPolicy::manual());
+        s.reset_embeddings(&emb, n, d);
+        // churn: retire 6, insert 9, update a few
+        for id in [2u32, 5, 11, 17, 20, 23] {
+            assert!(s.retire_class(id));
+        }
+        for _ in 0..9 {
+            let mut row = vec![0.0f32; d];
+            rng.fill_normal(&mut row, 0.5);
+            s.insert_class(&row);
+        }
+        let mut rows = vec![0.0f32; 2 * d];
+        rng.fill_normal(&mut rows, 0.5);
+        s.update_many(&[1, 25], &rows);
+
+        // the canonical gather the compactor will rebuild from
+        let (ids, flat) = s.live_classes();
+        s.compact();
+
+        // a from-scratch streaming sampler over the same (dense) layout:
+        // identical arena bits ⇒ identical draws and q, bit for bit
+        let mut fresh = StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), ids.len(), Some(4))
+            .with_policy(CompactionPolicy::manual());
+        fresh.reset_embeddings(&flat, ids.len(), d);
+        let h = vec![0.9f32, -0.2, 0.4];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let (mut a, mut b) = (Sample::default(), Sample::default());
+        for seed in 0..20u64 {
+            s.sample(&input, 16, &mut Rng::new(seed), &mut a).unwrap();
+            fresh.sample(&input, 16, &mut Rng::new(seed), &mut b).unwrap();
+            let mapped: Vec<u32> = b.classes.iter().map(|&c| ids[c as usize]).collect();
+            assert_eq!(a.classes, mapped, "slot→id mapping drifted");
+            assert_eq!(a.q, b.q, "q must be bitwise equal to the rebuild");
+        }
+        for (slot, &gid) in ids.iter().enumerate() {
+            assert_eq!(s.prob(&input, gid), fresh.prob(&input, slot as u32));
+        }
+    }
+
+    #[test]
+    fn policy_auto_compacts_on_cap_and_tombstone_fraction() {
+        let (n, d) = (16usize, 2usize);
+        let mut rng = Rng::new(66);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.5);
+        let policy = CompactionPolicy { memtable_cap: 4, max_tombstone_frac: 0.25 };
+        let mut s =
+            StreamingKernelSampler::new(QuadraticMap::new(d, ALPHA), n, Some(4)).with_policy(policy);
+        s.reset_embeddings(&emb, n, d);
+        for _ in 0..4 {
+            let mut row = vec![0.0f32; d];
+            rng.fill_normal(&mut row, 0.5);
+            s.insert_class(&row);
+        }
+        assert_eq!(s.obs().compactions(), 1, "memtable cap must trigger a fold");
+        assert_eq!(s.memtable_len(), 0);
+        assert_eq!(s.live_len(), 20);
+        // tombstone fraction: 20 arena classes, retiring 6 crosses 25%
+        for id in 0..6u32 {
+            s.retire_class(id);
+        }
+        assert_eq!(s.obs().compactions(), 2, "tombstone fraction must trigger a fold");
+        assert_eq!(s.tombstone_len(), 0);
+        assert_eq!(s.live_len(), 14);
+    }
+
+    #[test]
+    fn rff_streaming_draws_live_classes_with_positive_q() {
+        let (n, d) = (20usize, 4usize);
+        let mut rng = Rng::new(77);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 0.4);
+        let map = PositiveRffMap::new(RffConfig::new(d, RFF_BUILD_SEED));
+        let mut s = StreamingKernelSampler::new(map, n, Some(4))
+            .with_policy(CompactionPolicy::manual());
+        s.reset_embeddings(&emb, n, d);
+        assert_eq!(s.name(), "rff-streaming");
+        s.retire_class(3);
+        let mut row = vec![0.0f32; d];
+        rng.fill_normal(&mut row, 0.4);
+        let id = s.insert_class(&row);
+        assert_eq!(id, 20);
+        let h = vec![0.2f32, -0.5, 0.8, 0.1];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        s.sample(&input, 64, &mut rng, &mut out).unwrap();
+        assert!(out.classes.contains(&id) || !out.classes.contains(&3));
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            assert_ne!(c, 3, "tombstoned class drawn");
+            assert!(s.is_live(c));
+            assert!(q > 0.0 && q.is_finite());
+        }
+    }
+}
