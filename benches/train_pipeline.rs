@@ -19,8 +19,9 @@
 use kss::bench_harness::{print_speedup, print_table, scale, write_json_value, BenchRow, Scale};
 use kss::coordinator::pipeline::{PipelineDriver, SampleTask, SharedPublisher, StepScratch};
 use kss::ops;
-use kss::sampler::kernel::QuadraticMap;
-use kss::sampler::Sampler;
+use kss::sampler::{
+    BatchSampleInput, KernelTreeSampler, QuadraticMap, Sample, Sampler, TwoPassKernelSampler,
+};
 use kss::serve::ShardSet;
 use kss::util::json::Value;
 use kss::util::rng::Rng;
@@ -151,6 +152,127 @@ fn run_depth(depth: usize, dims: &Dims) -> RunStats {
     stats
 }
 
+/// Raw sampler-stage throughput: batches of `sample_batch` per second.
+fn sampler_batches_per_s(
+    s: &dyn Sampler,
+    hs: &[f32],
+    rows: usize,
+    d: usize,
+    n_classes: usize,
+    m: usize,
+    threads: usize,
+    batches: usize,
+) -> f64 {
+    let inputs =
+        BatchSampleInput { n: rows, d, n_classes, h: Some(hs), threads, ..Default::default() };
+    let mut out: Vec<Sample> = (0..rows).map(|_| Sample::with_capacity(m)).collect();
+    s.sample_batch(&inputs, m, 0xFACE, &mut out).expect("warmup batch failed");
+    let t0 = Instant::now();
+    for step in 0..batches {
+        s.sample_batch(&inputs, m, 0x100 + step as u64, &mut out).expect("bench batch failed");
+    }
+    batches as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+/// The two-pass satellite sweep: per-row tree descent vs the batch-shared
+/// pool engine over m ∈ {50, 100, 500} × α ∈ {2, 4, 8}, on the sampling
+/// stage alone (the tentpole's target cost). Emits the "two_pass" section
+/// of BENCH_train.json: steps/s + pool-hit-rate per point, the per-row
+/// baseline per m, and the acceptance flag (two-pass beats per-row
+/// descent at every m ≥ 100 for at least one α).
+fn two_pass_sweep(dims: &Dims) -> Value {
+    let (n_classes, d, rows, threads) = (dims.n_classes, dims.d, dims.rows, dims.threads);
+    let ms = [50usize, 100, 500];
+    let alphas = [2.0f64, 4.0, 8.0];
+    let batches = match scale() {
+        Scale::Quick => 12usize,
+        Scale::Full => 40,
+    };
+    let mut rng = Rng::new(0x2FA5);
+    let mut emb = vec![0.0f32; n_classes * d];
+    rng.fill_normal(&mut emb, 0.4);
+    let mut hs = vec![0.0f32; rows * d];
+    rng.fill_normal(&mut hs, 1.0);
+
+    let mut per_row = KernelTreeSampler::new(QuadraticMap::new(d, 100.0), n_classes, None);
+    Sampler::reset_embeddings(&mut per_row, &emb, n_classes, d);
+    per_row.set_obs_enabled(false);
+
+    println!(
+        "\ntwo-pass sweep: {n_classes} classes × d={d}, batch {rows}, {batches} batches/point"
+    );
+    println!(
+        "{:<22} {:>12} {:>12} {:>10}",
+        "sampler", "batches/s", "negatives/s", "hit rate"
+    );
+    let mut baseline = Vec::new();
+    let mut points = Vec::new();
+    let mut beats_at_m_ge_100 = true;
+    for &m in &ms {
+        let base = sampler_batches_per_s(&per_row, &hs, rows, d, n_classes, m, threads, batches);
+        println!(
+            "{:<22} {:>12.1} {:>12.0} {:>10}",
+            format!("per-row m={m}"),
+            base,
+            base * (rows * m) as f64,
+            "-"
+        );
+        baseline.push(Value::object(vec![
+            ("m", Value::num(m as f64)),
+            ("steps_per_s", Value::num(base)),
+        ]));
+        let mut best = 0.0f64;
+        for &alpha in &alphas {
+            let mut two = TwoPassKernelSampler::new(
+                QuadraticMap::new(d, 100.0),
+                n_classes,
+                None,
+                alpha,
+            );
+            Sampler::reset_embeddings(&mut two, &emb, n_classes, d);
+            let sps = sampler_batches_per_s(&two, &hs, rows, d, n_classes, m, threads, batches);
+            let obs = two.obs();
+            let draws = (obs.hit_total() + obs.miss_total()).max(1);
+            let hit_rate = obs.hit_total() as f64 / draws as f64;
+            println!(
+                "{:<22} {:>12.1} {:>12.0} {:>9.1}%",
+                format!("two-pass m={m} α={alpha}"),
+                sps,
+                sps * (rows * m) as f64,
+                100.0 * hit_rate
+            );
+            best = best.max(sps);
+            points.push(Value::object(vec![
+                ("m", Value::num(m as f64)),
+                ("pool_factor", Value::num(alpha)),
+                ("steps_per_s", Value::num(sps)),
+                ("speedup_vs_per_row", Value::num(sps / base.max(1e-12))),
+                ("pool_hit_rate", Value::num(hit_rate)),
+                ("pool_size", Value::num(obs.pool_size())),
+                ("pool_unique", Value::num(obs.pool_unique())),
+                ("fallback_rows", Value::num(obs.fallback_total() as f64)),
+            ]));
+        }
+        if m >= 100 && best <= base {
+            beats_at_m_ge_100 = false;
+        }
+        if m >= 100 {
+            println!(
+                "  (acceptance m={m}: best two-pass {:.1} vs per-row {:.1} batches/s — {})",
+                best,
+                base,
+                if best > base { "beats" } else { "MISSES" }
+            );
+        }
+    }
+    Value::object(vec![
+        ("batches_per_point", Value::num(batches as f64)),
+        ("per_row_baseline", Value::Array(baseline)),
+        ("points", Value::Array(points)),
+        ("beats_per_row_at_m_ge_100", Value::Bool(beats_at_m_ge_100)),
+    ])
+}
+
 fn main() {
     let dims = match scale() {
         Scale::Quick => Dims {
@@ -244,6 +366,7 @@ fn main() {
         ("depth2", depth_json(&pipe)),
         ("speedup_pipelined_vs_sequential", Value::num(seq.wall_s / pipe.wall_s.max(1e-12))),
         ("sample_wall_hidden_fraction", Value::num(hidden_frac)),
+        ("two_pass", two_pass_sweep(&dims)),
     ]);
     write_json_value("train", &doc);
 }

@@ -11,7 +11,11 @@ quantity with none of the guard patterns in sight:
 * the result is clamped: `.max(f64::MIN_POSITIVE)` on the same statement;
 * the divisor was checked: `<divisor> > 0.0` / `is_finite` in the
   enclosing few lines (branch guards like `if total > 0.0 && ...`);
-* the quotient is validated right after: `q > 0.0 && q.is_finite()`.
+* the quotient is validated right after: `q > 0.0 && q.is_finite()`;
+* the divisor was minted by a checked pool-mass constructor:
+  `let Some(<divisor>) = positive_pool_mass(...) else { ... }` — the
+  two-pass sampler's guard idiom (kernel/two_pass.rs), which proves
+  positivity and finiteness for every division in the scope below.
 
 Diagnostic-only divisions (closed-form oracles in tests) are excluded by
 the test-span filter; surviving cold-path sites carry waivers.
@@ -28,6 +32,10 @@ _MASS_NAME = re.compile(r"(?:^|_)(mass|masses|total|totals|partition|denom)(?:$|
 
 _GUARD_BEFORE = 8  # lines of look-behind for a divisor positivity check
 _GUARD_AFTER = 6  # lines of look-ahead for a quotient validation
+# look-behind for a `let Some(x) = positive_pool_mass(..)` minting — the
+# let-else proves the name for its whole scope, so the window is wider
+# than the plain positivity guards
+_GUARD_POOL_BEFORE = 28
 
 
 class QPositivity(Rule):
@@ -122,6 +130,17 @@ class QPositivity(Rule):
                     rf"\b{re.escape(q)}\s*\.\s*is_finite", ahead
                 ):
                     continue
+            # guard 4: divisor minted by the checked pool-mass constructor
+            #   let Some(pool_mass) = positive_pool_mass(total) else { .. }
+            # (two_pass.rs idiom) — Some only for finite, strictly
+            # positive totals, so every division below it is safe
+            pooled = sf.window(line, before=_GUARD_POOL_BEFORE)
+            if re.search(
+                rf"let\s+Some\s*\(\s*(?:mut\s+)?{re.escape(last)}\s*\)\s*=\s*"
+                rf"(?:\w+(?:::|\.))*\w*positive_\w*mass\s*\(",
+                pooled,
+            ):
+                continue
             findings.append(
                 Finding(
                     rule=self.id,

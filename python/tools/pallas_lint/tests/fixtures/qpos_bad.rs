@@ -12,3 +12,10 @@ pub struct Node {
 pub fn branch_ratio(child: &Node, parent_mass: f64) -> f64 {
     child.mass / parent_mass
 }
+
+/// A plain rebind is NOT the guard-4 mint: the name never went through
+/// `positive_pool_mass`, so the division must still be flagged.
+pub fn pooled_unguarded(w: f64, cum_total: f64) -> f64 {
+    let pool_mass = cum_total;
+    w / pool_mass
+}

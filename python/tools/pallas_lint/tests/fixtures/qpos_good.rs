@@ -25,6 +25,29 @@ pub fn validated(k: f64, total: f64) -> f64 {
     }
 }
 
+/// Guard 4: the divisor was minted by the checked pool-mass constructor
+/// (the two-pass sampler idiom, kernel/two_pass.rs): `Some` only for
+/// finite, strictly positive totals.
+fn positive_pool_mass(total: f64) -> Option<f64> {
+    if total > 0.0 && total.is_finite() {
+        Some(total)
+    } else {
+        None
+    }
+}
+
+pub fn pooled(w: f64, cum_total: f64) -> f64 {
+    let Some(pool_mass) = positive_pool_mass(cum_total) else {
+        // degenerate pool: the caller redraws through the per-row descent
+        return f64::MIN_POSITIVE;
+    };
+    // a few lines of pass-2 resampling between the mint and the division,
+    // as in the real engine (the rule's look-behind spans the scope)
+    let u = 0.5 * pool_mass;
+    let _ = u;
+    w / pool_mass
+}
+
 /// Divisors that are not mass-like are out of scope for this rule.
 pub fn plain_average(sum: f64, len: f64) -> f64 {
     sum / len

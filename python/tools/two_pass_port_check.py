@@ -1,0 +1,300 @@
+#!/usr/bin/env python3
+"""Python port of the two-pass batch-shared sampling engine
+(rust/src/sampler/kernel/two_pass.rs), run against the same property
+checks as the Rust tests.
+
+The build container has no rust toolchain (see .claude/skills/verify/
+SKILL.md), so the algorithmic core of the PR is ported faithfully — same
+pool sizing, same run-table dedup, same SIR reweighting and guard order —
+and validated here:
+
+  1. pool sizing: P = ceil(B*m/alpha) clamped to [m, B*m]
+  2. composed q is exact for the realized pool: every reported q equals
+     n_c * K(h,c) / qbar(c) / S and sums to 1 over the pool support
+  3. chi-square goodness of fit of resampled draws against the composed
+     conditional distribution
+  4. SIR marginal: averaged over fresh pools, the composed distribution
+     approaches the exact per-row kernel distribution (TV), and beats the
+     un-reweighted variant (which squares the kernel — the flaw the
+     qbar division exists to prevent)
+  5. q-corrected partition estimator stays near the truth (eq. (2)
+     gradient-bias proxy), parity with per-row tree descent
+  6. degenerate pool (zero kernel): counted fallback redraw through the
+     per-row descent, q still strictly positive
+
+The tree, feature maps and guard helpers are imported from
+serve_port_check.py (the ported PR-1/PR-4 serve layer).
+
+Run: python3 python/tools/two_pass_port_check.py
+"""
+import math
+import os
+import random
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from serve_port_check import (  # noqa: E402
+    QuadraticMap,
+    Tree,
+    ZeroMap,
+    exact_dist,
+    sanitize_mass,
+    step_down_to_positive,
+)
+
+F64_MIN_POSITIVE = 5e-324
+
+
+def positive_pool_mass(total):
+    """Port of two_pass::positive_pool_mass — the QPOS guard idiom."""
+    if total > 0.0 and math.isfinite(total):
+        return total
+    return None
+
+
+def pool_size(n_rows, m, pool_factor):
+    """Port of TwoPassCore::pool_size: P = ceil(B*m/alpha), in [m, B*m]."""
+    target = math.ceil((n_rows * m) / pool_factor)
+    return min(max(target, max(m, 1)), max(n_rows * m, 1))
+
+
+def build_pool(tree, hs, p, rng):
+    """Port of TwoPassCore::build_pool.
+
+    hs: (rows, d) f32 queries. Returns the run table
+    (run_class, run_count, run_qbar) built from P coarse descents off the
+    batch-mean query; qbar is the tree's exact guarded coarse q per slot.
+    """
+    hacc = hs.astype(np.float64).sum(axis=0)
+    hbar = (hacc / len(hs)).astype(np.float32)
+    scratch = tree.begin_example(hbar)
+    slots = sorted(tree.draw(hbar, scratch, rng) for _ in range(p))
+    run_class, run_count, run_qbar = [], [], []
+    for cls, qbar in slots:
+        if run_class and run_class[-1] == cls:
+            run_count[-1] += 1
+        else:
+            run_class.append(cls)
+            run_count.append(1)
+            run_qbar.append(qbar)
+    return run_class, run_count, run_qbar
+
+
+def row_cdf(tree, pool, h, reweight=True):
+    """Pass-2 composed weights for one row: w(c) = n_c * K(h,c) / qbar(c)
+    as inclusive prefix sums (reweight=False drops the SIR division — the
+    kernel-squared control in check 4)."""
+    run_class, run_count, run_qbar = pool
+    cum, acc = [], 0.0
+    for cls, n_c, qbar in zip(run_class, run_count, run_qbar):
+        k = sanitize_mass(tree.map.kernel(h, tree.emb[cls]))
+        ratio = k / max(qbar, F64_MIN_POSITIVE) if reweight else k
+        acc += n_c * sanitize_mass(ratio)
+        cum.append(acc)
+    return cum
+
+
+def sample_row(tree, pool, h, m, rng):
+    """Port of TwoPassCore::sample_row: resample m negatives from the
+    composed CDF, or fall back to m per-row tree descents when the pool
+    mass degenerates. Returns (draws, fell_back)."""
+    run_class = pool[0]
+    cum = row_cdf(tree, pool, h)
+    mass = positive_pool_mass(cum[-1]) if cum else None
+    if mass is None:
+        scratch = tree.begin_example(h)
+        return [tree.draw(h, scratch, rng) for _ in range(m)], True
+    out = []
+    for _ in range(m):
+        u = rng.random() * mass
+        j = min(sum(1 for c in cum if c <= u), len(cum) - 1)
+        j = step_down_to_positive(cum, j)
+        w = cum[0] if j == 0 else cum[j] - cum[j - 1]
+        out.append((run_class[j], w / mass))
+    return out, False
+
+
+def make_case(seed, n, d, rows, alpha=100.0):
+    rng = random.Random(seed)
+    emb = np.random.default_rng(seed).normal(0, 0.5, (n, d)).astype(np.float32)
+    tree = Tree(QuadraticMap(d, alpha), n, 4)
+    tree.reset(emb)
+    hs = np.random.default_rng(seed + 999).normal(0, 1, (rows, d)).astype(np.float32)
+    return rng, tree, emb, hs
+
+
+def check_pool_sizing():
+    assert pool_size(48, 100, 4.0) == math.ceil(4800 / 4.0)
+    assert pool_size(2, 100, 8.0) == 100  # clamped up to m
+    assert pool_size(48, 100, 0.5) == 4800  # alpha < 1 still capped at B*m
+    assert pool_size(1, 8, 4.0) == 8
+    assert pool_size(4, 0, 4.0) == 1  # degenerate floor
+    assert pool_size(48, 100, 1.0) == 4800  # never above B*m
+    print("  pool sizing P = ceil(B*m/alpha) in [m, B*m]: OK")
+
+
+def check_composed_q_exact(trials=10):
+    for case in range(trials):
+        rng, tree, emb, hs = make_case(100 + case, n=60, d=3, rows=10)
+        m = 16
+        p = pool_size(len(hs), m, 4.0)
+        pool = build_pool(tree, hs, p, rng)
+        for h in hs:
+            draws, fell_back = sample_row(tree, pool, h, m, rng)
+            if fell_back:
+                continue
+            cum = row_cdf(tree, pool, h)
+            total = cum[-1]
+            # q over the pool support is a probability distribution
+            qs = [(cum[0] if j == 0 else cum[j] - cum[j - 1]) / total for j in range(len(cum))]
+            assert abs(sum(qs) - 1.0) < 1e-9
+            for cls, q in draws:
+                j = pool[0].index(cls)
+                assert q == qs[j], (case, cls, q, qs[j])
+                assert q > 0.0 and math.isfinite(q)
+    print("  composed q == n_c*K/qbar / S, sums to 1 over pool support: OK")
+
+
+def check_chi_square_conditional():
+    rng, tree, emb, hs = make_case(7, n=50, d=3, rows=8)
+    p = pool_size(len(hs), 32, 2.0)
+    pool = build_pool(tree, hs, p, rng)
+    h = hs[0]
+    cum = row_cdf(tree, pool, h)
+    total = cum[-1]
+    probs = [(cum[0] if j == 0 else cum[j] - cum[j - 1]) / total for j in range(len(cum))]
+    counts = [0] * len(pool[0])
+    draws = 60_000
+    for _ in range(draws // 50):
+        out, fell_back = sample_row(tree, pool, h, 50, rng)
+        assert not fell_back
+        for cls, _ in out:
+            counts[pool[0].index(cls)] += 1
+    stat = sum(
+        (counts[j] - probs[j] * draws) ** 2 / (probs[j] * draws)
+        for j in range(len(probs))
+        if probs[j] * draws >= 1.0
+    )
+    dof = sum(1 for pj in probs if pj * draws >= 1.0) - 1
+    bound = dof + 6 * math.sqrt(2 * dof)
+    assert stat < bound, (stat, dof, bound)
+    print(f"  chi-square GOF on the composed conditional (chi2 {stat:.1f}, dof {dof}): OK")
+
+
+def tv(a, b):
+    return 0.5 * sum(abs(x - y) for x, y in zip(a, b))
+
+
+def check_sir_marginal():
+    # shared query: the exact per-row target is one closed-form vector.
+    # Fresh pool per step; the SIR-reweighted marginal must approach it,
+    # and must beat the un-reweighted control (kernel-squared flaw).
+    n, d, rows, m = 40, 3, 16, 32
+    rng, tree, emb, _ = make_case(31, n=n, d=d, rows=rows)
+    h = np.random.default_rng(32).normal(0, 1, d).astype(np.float32)
+    hs = np.tile(h, (rows, 1))
+    expected = exact_dist(tree.map, h, emb)
+    ksq = [w * w for w in (tree.map.kernel(h, e) for e in emb)]
+    ksq = [x / sum(ksq) for x in ksq]
+
+    def run(reweight):
+        counts, total = [0] * n, 0
+        for _ in range(60):
+            pool = build_pool(tree, hs, pool_size(rows, m, 2.0), rng)
+            for hr in hs:
+                cum = row_cdf(tree, pool, hr, reweight=reweight)
+                mass = positive_pool_mass(cum[-1])
+                assert mass is not None
+                for _ in range(m):
+                    u = rng.random() * mass
+                    j = min(sum(1 for c in cum if c <= u), len(cum) - 1)
+                    j = step_down_to_positive(cum, j)
+                    counts[pool[0][j]] += 1
+                    total += 1
+        return [c / total for c in counts]
+
+    emp_sir = run(True)
+    emp_raw = run(False)
+    tv_sir = tv(emp_sir, expected)
+    tv_raw = tv(emp_raw, expected)
+    tv_raw_vs_ksq = tv(emp_raw, ksq)
+    assert tv_sir < 0.05, tv_sir
+    # the control lands on the kernel-SQUARED distribution, not the target
+    assert tv_raw > 2 * tv_sir, (tv_raw, tv_sir)
+    assert tv_raw_vs_ksq < tv_raw, (tv_raw_vs_ksq, tv_raw)
+    print(
+        f"  SIR marginal -> kernel dist (TV {tv_sir:.3f}); un-reweighted control "
+        f"-> kernel^2 (TV {tv_raw:.3f} vs target, {tv_raw_vs_ksq:.3f} vs K^2): OK"
+    )
+
+
+def check_partition_estimator():
+    # eq. (2) proxy: E[exp(o_c)/q_c] over draws ~ q estimates the softmax
+    # partition restricted support -> generous bands; parity with the
+    # per-row tree descent
+    n, d, rows, m = 40, 3, 24, 32
+    rng, tree, emb, _ = make_case(57, n=n, d=d, rows=rows)
+    h = np.random.default_rng(58).normal(0, 1, d).astype(np.float32)
+    hs = np.tile(h, (rows, 1))
+    logits = [float(np.dot(h.astype(np.float64), e.astype(np.float64))) for e in emb]
+    truth = sum(math.exp(o) for o in logits)
+
+    est_two, n_two = 0.0, 0
+    for _ in range(50):
+        pool = build_pool(tree, hs, pool_size(rows, m, 2.0), rng)
+        for hr in hs:
+            for cls, q in sample_row(tree, pool, hr, m, rng)[0]:
+                est_two += math.exp(logits[cls]) / q
+                n_two += 1
+    est_tree, n_tree = 0.0, 0
+    scratch = tree.begin_example(h)
+    for _ in range(50 * rows * m):
+        cls, q = tree.draw(h, scratch, rng)
+        est_tree += math.exp(logits[cls]) / q
+        n_tree += 1
+    rel_two = abs(est_two / n_two - truth) / truth
+    rel_tree = abs(est_tree / n_tree - truth) / truth
+    assert rel_tree < 0.10, rel_tree
+    assert rel_two < 0.12, rel_two
+    print(
+        f"  partition estimator bias: tree {rel_tree:.3f}, two-pass {rel_two:.3f} "
+        f"(truth {truth:.1f}): OK"
+    )
+
+
+def check_degenerate_fallback():
+    n, d, rows, m = 24, 3, 6, 8
+    rng = random.Random(83)
+    tree = Tree(ZeroMap(d), n, 4)
+    hs = np.random.default_rng(84).normal(0, 1, (rows, d)).astype(np.float32)
+    pool = build_pool(tree, hs, pool_size(rows, m, 4.0), rng)
+    fallbacks = 0
+    for h in hs:
+        draws, fell_back = sample_row(tree, pool, h, m, rng)
+        assert fell_back
+        fallbacks += 1
+        assert len(draws) == m
+        for cls, q in draws:
+            assert 0 <= cls < n
+            assert q > 0.0 and math.isfinite(q), q
+    assert fallbacks == rows
+    # the guard itself
+    assert positive_pool_mass(0.0) is None
+    assert positive_pool_mass(-1.0) is None
+    assert positive_pool_mass(float("inf")) is None
+    assert positive_pool_mass(float("nan")) is None
+    assert positive_pool_mass(2.5) == 2.5
+    print("  degenerate pool -> counted per-row fallback, q > 0 always: OK")
+
+
+if __name__ == "__main__":
+    print("two-pass sampling port checks:")
+    check_pool_sizing()
+    check_composed_q_exact()
+    check_chi_square_conditional()
+    check_sir_marginal()
+    check_partition_estimator()
+    check_degenerate_fallback()
+    print("all two-pass port checks passed")

@@ -50,6 +50,11 @@ pub struct TrainConfig {
     /// sampler — kept as the bitwise-equivalence reference for tests, not
     /// exposed on the CLI.
     pub unified_tree: bool,
+    /// Pool divisor α of the two-pass samplers (`*-2pass`): the shared
+    /// candidate pool holds P = ⌈B·m/α⌉ slots. Larger α = smaller pool =
+    /// cheaper pass 1 but coarser coverage. Ignored by every other
+    /// sampler kind.
+    pub pool_factor: f64,
 }
 
 impl Default for TrainConfig {
@@ -69,6 +74,7 @@ impl Default for TrainConfig {
             seed: 42,
             pipeline_depth: 1,
             unified_tree: true,
+            pool_factor: 4.0,
         }
     }
 }
@@ -110,6 +116,7 @@ impl TrainConfig {
             ("seed", Value::num(self.seed as f64)),
             ("pipeline_depth", Value::num(self.pipeline_depth as f64)),
             ("unified_tree", Value::Bool(self.unified_tree)),
+            ("pool_factor", Value::num(self.pool_factor)),
         ])
     }
 

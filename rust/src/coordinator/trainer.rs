@@ -36,7 +36,7 @@ use crate::data::{Batch, BatchPrefetcher, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
 use crate::sampler::kernel::FeatureMap;
 use crate::sampler::rff::{self, PositiveRffMap, RffConfig};
-use crate::sampler::{build_sampler, QuadraticMap, Sampler};
+use crate::sampler::{build_sampler, QuadraticMap, Sampler, TwoPassObs};
 use crate::serve::{ShardPublisher, ShardSet, SnapshotStore, TreeSnapshot};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
@@ -100,10 +100,15 @@ fn snapshot_backed_parts(
     name: &str,
     spec: &ModelSpec,
     w: &[f32],
-) -> Option<(Arc<dyn Sampler>, SharedPublisher)> {
-    let shards = match name {
-        "quadratic" | "rff" => 1,
-        "quadratic-sharded" | "rff-sharded" => 4,
+    pool_factor: f64,
+) -> Option<(Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>)> {
+    let (shards, two_pass) = match name {
+        "quadratic" | "rff" => (1, false),
+        "quadratic-sharded" | "rff-sharded" => (4, false),
+        // batch-shared two-pass pool over the single-shard publish point
+        // (crate::sampler::kernel::two_pass): same one-tree contract, the
+        // adapter just routes draws through the shared-pool engine
+        "quadratic-2pass" | "rff-2pass" => (1, true),
         // the streaming samplers own their vocabulary (memtable +
         // tombstones + compactor) and must receive churn-aware
         // update_many through the legacy mutable path at pipeline depth 1
@@ -117,16 +122,26 @@ fn snapshot_backed_parts(
         n: usize,
         shards: usize,
         w: &[f32],
-    ) -> (Arc<dyn Sampler>, SharedPublisher) {
+        two_pass: Option<f64>,
+    ) -> (Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>) {
         let set = ShardSet::new(map, n, shards, None, Some(w));
-        let sampler: Arc<dyn Sampler> = Arc::new(set.snapshot_sampler());
-        (sampler, Arc::new(Mutex::new(Box::new(set))))
+        let base = set.snapshot_sampler();
+        let (sampler, obs): (Arc<dyn Sampler>, Option<TwoPassObs>) = match two_pass {
+            Some(alpha) => {
+                let s = base.with_two_pass(alpha);
+                let obs = s.two_pass_obs().cloned();
+                (Arc::new(s), obs)
+            }
+            None => (Arc::new(base), None),
+        };
+        (sampler, Arc::new(Mutex::new(Box::new(set))), obs)
     }
+    let two_pass = two_pass.then_some(pool_factor);
     Some(if name.starts_with("quadratic") {
-        parts(QuadraticMap::new(spec.d, spec.alpha as f64), spec.n_classes, shards, w)
+        parts(QuadraticMap::new(spec.d, spec.alpha as f64), spec.n_classes, shards, w, two_pass)
     } else {
         let map = PositiveRffMap::new(RffConfig::new(spec.d, rff::RFF_BUILD_SEED));
-        parts(map, spec.n_classes, shards, w)
+        parts(map, spec.n_classes, shards, w, two_pass)
     })
 }
 
@@ -137,15 +152,16 @@ impl<'e> Trainer<'e> {
         let dataset: Arc<dyn Dataset> = Arc::from(build_dataset(&spec, &cfg)?);
         let store = ParamStore::init(&spec.params, splitmix64(&mut (cfg.seed ^ 0x1417)))?;
         let unified = if cfg.sampler != "full" && cfg.unified_tree {
-            snapshot_backed_parts(&cfg.sampler, &spec, store.out_w().as_f32()?)
+            snapshot_backed_parts(&cfg.sampler, &spec, store.out_w().as_f32()?, cfg.pool_factor)
         } else {
             None
         };
-        let (sampler, publisher): (Option<Arc<dyn Sampler>>, Option<SharedPublisher>) =
+        type SamplerParts = (Option<Arc<dyn Sampler>>, Option<SharedPublisher>, Option<TwoPassObs>);
+        let (sampler, publisher, pool_obs): SamplerParts =
             if cfg.sampler == "full" {
-                (None, None)
-            } else if let Some((s, p)) = unified {
-                (Some(s), Some(p))
+                (None, None, None)
+            } else if let Some((s, p, o)) = unified {
+                (Some(s), Some(p), o)
             } else {
                 let stats = dataset.stats();
                 let boxed = build_sampler(
@@ -157,7 +173,7 @@ impl<'e> Trainer<'e> {
                     Some(&stats),
                     Some(store.out_w().as_f32()?),
                 )?;
-                (Some(Arc::from(boxed)), None)
+                (Some(Arc::from(boxed)), None, None)
             };
         let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
         let rng = Rng::new(cfg.seed ^ 0x7141_1e5);
@@ -172,6 +188,10 @@ impl<'e> Trainer<'e> {
         let phases = PhaseTimes::default();
         if let Some(p) = &publisher {
             p.lock().expect("publisher poisoned").register_metrics(phases.registry());
+        }
+        if let Some(obs) = &pool_obs {
+            // two-pass engines carry their own kss_sampler_pool_* cells
+            obs.register_into(phases.registry());
         }
         let overlap_safe = sampler.as_ref().is_some_and(|s| s.snapshot_backed() || !s.needs().h);
         let depth = if cfg.pipeline_depth > 1 && !overlap_safe {
@@ -811,6 +831,35 @@ mod tests {
         assert!(a_loss < uni_loss, "stale quadratic {a_loss} should beat uniform {uni_loss}");
         // depth-2 is a different (stale-q) trajectory, not a broken one
         assert!((a_loss - d1_loss).abs() < 0.5, "depth-2 diverged wildly: {a_loss} vs {d1_loss}");
+    }
+
+    #[test]
+    fn two_pass_sampler_learns_and_reports_pool_telemetry() {
+        // the batch-shared two-pass mode through the full unified-tree
+        // trainer: snapshot-backed (so depth-2 overlap is allowed), still
+        // learns on the tiny task, and its kss_sampler_pool_* cells land
+        // in the run registry
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg("quadratic-2pass", 8);
+        cfg.pipeline_depth = 2;
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        assert_eq!(t.pipeline_depth(), 2, "two-pass is snapshot-backed: overlap must be allowed");
+        let mut sink = MetricsSink::memory("2pass");
+        let res = t.train(&mut sink).unwrap();
+        assert!(
+            res.final_loss < res.curve[0].loss - 0.05,
+            "two-pass failed to learn: {:?}",
+            res.curve
+        );
+        let snap = t.phases.registry().snapshot();
+        let hits = snap.counter("kss_sampler_pool_hit_total").unwrap_or(0);
+        let misses = snap.counter("kss_sampler_pool_miss_total").unwrap_or(0);
+        assert!(hits + misses > 0, "pool counters never moved");
+        assert!(snap.gauge("kss_sampler_pool_size").unwrap_or(0.0) >= 8.0);
+        assert!(
+            snap.hist("kss_sampler_pool_rescore_seconds").map(|h| h.count()).unwrap_or(0) > 0,
+            "rescore latency histogram never recorded"
+        );
     }
 
     #[test]

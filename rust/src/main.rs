@@ -56,6 +56,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "eval-batches", help: "eval batch cap (0 = all)", default: Some("20".into()) },
         OptSpec { name: "threads", help: "sampling threads (0 = auto)", default: Some("0".into()) },
         OptSpec { name: "pipeline-depth", help: "1 = sequential, 2 = overlap sample with step", default: Some("1".into()) },
+        OptSpec { name: "sample-mode", help: "per-row | two-pass (batch-shared pool; kernel-tree samplers only)", default: Some("per-row".into()) },
+        OptSpec { name: "pool-factor", help: "two-pass pool divisor α (P = B·m/α)", default: Some("4".into()) },
         OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
         OptSpec { name: "out", help: "metrics output directory", default: Some("runs".into()) },
         OptSpec { name: "full", help: "include full-softmax reference (experiment)", default: Some("true".into()) },
@@ -63,9 +65,27 @@ fn specs() -> Vec<OptSpec> {
 }
 
 fn parse_config(args: &Args) -> Result<TrainConfig> {
+    // --sample-mode two-pass rewrites the base kernel-tree sampler names
+    // to their registered *-2pass forms (one registry name per drawing
+    // engine, so run ids / logs / metrics stay self-describing)
+    let sampler = {
+        let name = args.get_string_or("sampler", "quadratic");
+        match args.get_string_or("sample-mode", "per-row").as_str() {
+            "per-row" => name,
+            "two-pass" => match name.as_str() {
+                "quadratic" | "rff" => format!("{name}-2pass"),
+                already if already.ends_with("-2pass") => name,
+                other => anyhow::bail!(
+                    "--sample-mode two-pass needs an unsharded kernel-tree sampler \
+                     (quadratic or rff), got '{other}'"
+                ),
+            },
+            other => anyhow::bail!("unknown --sample-mode '{other}' (known: per-row, two-pass)"),
+        }
+    };
     Ok(TrainConfig {
         model: args.get_string_or("model", "tiny"),
-        sampler: args.get_string_or("sampler", "quadratic"),
+        sampler,
         m: args.get_usize_list("m", &[8])?[0],
         lr: args.get_f64("lr", 0.0)? as f32,
         epochs: args.get_usize("epochs", 1)?,
@@ -77,6 +97,7 @@ fn parse_config(args: &Args) -> Result<TrainConfig> {
         threads: args.get_usize("threads", 0)?,
         seed: args.get_u64("seed", 42)?,
         pipeline_depth: args.get_usize("pipeline-depth", 1)?,
+        pool_factor: args.get_f64("pool-factor", 4.0)?,
         ..Default::default()
     })
 }

@@ -14,6 +14,9 @@
 //!   intractable feature maps (quartic: D = d⁴; exact exp: D = ∞).
 //! * [`tree`] — the paper's divide-and-conquer sampler (§3.2): O(D log n)
 //!   draws and updates via per-subset summaries `z(C)`.
+//! * [`two_pass`] — TAPAS-style batch-shared sampling: one coarse pool
+//!   from the batch-mean query, then per-row exact rescoring/resampling
+//!   restricted to the pool (amortizes the descents across the batch).
 //!
 //! The random-feature approximation of the *exponential* kernel
 //! (`crate::sampler::rff`) plugs into the same [`FeatureMap`] machinery
@@ -22,6 +25,7 @@
 pub mod flat;
 pub mod multi;
 pub mod tree;
+pub mod two_pass;
 
 use crate::ops;
 

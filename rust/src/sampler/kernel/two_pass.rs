@@ -1,0 +1,1075 @@
+//! Two-pass batch-shared sampling (TAPAS-style): amortize one candidate
+//! pool across the whole batch.
+//!
+//! Per-row tree descent pays O(D log n) *per draw*; at m ≥ 100 negatives
+//! per row the sampling stage dominates a training step even with the
+//! depth-2 pipeline hiding part of it. The two-pass mode replaces the
+//! per-row descents with:
+//!
+//! ```text
+//! pass 1 (once per batch, calling thread):
+//!     h̄ = mean of the batch's query rows
+//!     pool = P iid tree descents from h̄          P ≈ B·m/α   (α = pool
+//!     record each slot's exact coarse q̄(c)                     factor)
+//!     sort slots → duplicates adjacent → runs (class, count, q̄)
+//!     gather the unique-class embeddings into one contiguous panel
+//!
+//! pass 2 (per row, fanned out):
+//!     one kernel_many sweep over the pool panel      K(h_i, c) per run
+//!     run weight  w_i(c) = n_c · K(h_i, c) / q̄(c)    (importance
+//!     resample m negatives from the CDF of w_i        reweighting)
+//!     q_i(c) = w_i(c) / S_i,   S_i = Σ_runs w_i
+//! ```
+//!
+//! # The composed proposal q
+//!
+//! Pool slots are iid draws from the coarse distribution `q̄(c) ∝ K(h̄, c)`
+//! (the tree reports each slot's exact q̄ — eq. (8) closed form, guarded,
+//! strictly positive). Given the realized pool, a row's draw picks run
+//! `c` with probability exactly
+//!
+//! ```text
+//! q_i(c) = n_c · K(h_i, c) / q̄(c)  /  S_i          (composed q)
+//! ```
+//!
+//! This q is **exact for the realized two-stage procedure** — the pool is
+//! part of the step's sampling randomness, and conditional on it the draw
+//! distribution is known in closed form, so the eq. (2) corrections
+//! `ln(m·q)` are computed from the true probability of every draw (and
+//! `q > 0` always: a row whose pool mass degenerates redraws through the
+//! full per-row tree descent, see below). Dividing by q̄ is the classic
+//! sampling-importance-resampling reweighting: marginalized over pools the
+//! composed distribution approaches the per-row kernel distribution
+//! `K(h_i, ·)/Σ_c K(h_i, c)` as P grows (without it, coarse inclusion ×
+//! kernel rescore would *square* the kernel). The residual pool-inclusion
+//! bias — classes the pool happened to miss carry no mass this step — is
+//! the TAPAS trade and vanishes with pool size; the tests below pin the
+//! marginal TV against per-row descent and the partition-estimator bias.
+//!
+//! # Degenerate pools
+//!
+//! `S_i` can underflow to zero (or blow up non-finite) when every pooled
+//! class scores ≈ 0 against row i. The guard is the checked constructor
+//! [`positive_pool_mass`]: rows whose pool mass fails it redraw all m
+//! negatives through the per-row tree descent (exact full-support q,
+//! strictly positive by the tree's own guards) and are counted in
+//! `kss_sampler_pool_fallback_total`.
+//!
+//! # Batch-API exception
+//!
+//! Two-pass is deliberately **batch-coupled**: the pool is shared by the
+//! rows of one `sample_batch` call, so per-row [`Sampler::sample`] calls
+//! are *not* bit-identical to batched rows (each `sample` call is its own
+//! B = 1 batch). Thread-count invariance still holds: the pool is drawn
+//! from `Rng::new(step_seed ^ POOL_SALT)` on the calling thread before the
+//! fan-out, and each row resamples from its own [`row_rng`] stream. See
+//! the "Batch API contract" note in `sampler/mod.rs`.
+//!
+//! # Scratch pooling
+//!
+//! Pass-1 state ([`PoolScratch`]) and per-worker pass-2 state
+//! ([`RowScratch`]) round-trip through [`Pool`] freelists with
+//! cap-and-reuse ([`cap_and_clear`]): buffers are reused across steps and
+//! shrunk when a past oversized pool left ≥ 4× the needed capacity behind,
+//! so steady-state batches allocate nothing and a pool-size spike cannot
+//! pin memory forever.
+
+use super::tree::{step_down_to_positive, DrawScratch, KernelTreeSampler, TreeObs, TreeView};
+use super::FeatureMap;
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{par_chunks_mut, Pool};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Default pool divisor α: pool size P = ⌈B·m/α⌉ (clamped to ≥ m).
+pub const DEFAULT_POOL_FACTOR: f64 = 4.0;
+
+/// Salt for the pass-1 pool RNG stream: the pool must consume a stream
+/// disjoint from every [`row_rng`] stream so pass 2 replays row streams
+/// bit-identically regardless of pool size.
+const POOL_SALT: u64 = 0xB00C_5EED_7A9A_5001;
+
+/// The checked pool-mass constructor — the QPOS guard idiom for two-pass
+/// divisions: `let Some(pool_mass) = positive_pool_mass(total) else { … }`
+/// proves every later `w / pool_mass` is finite and strictly positive
+/// (eq. (2) q-positivity). pallas-lint recognizes this binding shape.
+#[inline]
+pub(crate) fn positive_pool_mass(total: f64) -> Option<f64> {
+    if total > 0.0 && total.is_finite() {
+        Some(total)
+    } else {
+        None
+    }
+}
+
+/// Clear a reusable buffer and bound its capacity: a buffer that once held
+/// a much larger pool (capacity > 4× what the next batch needs) is shrunk
+/// back, the same cap-and-reuse discipline as the pipeline's `StepScratch`
+/// freelist — steady-state steps allocate nothing, and varying pool sizes
+/// cannot ratchet memory up monotonically.
+fn cap_and_clear<T>(v: &mut Vec<T>, need: usize) {
+    v.clear();
+    if v.capacity() > 4 * need.max(1) {
+        v.shrink_to(need);
+    }
+}
+
+/// Shared telemetry cells for one two-pass engine (same accumulate-in-
+/// scratch, flush-on-put discipline as [`TreeObs`]; the draw loop never
+/// touches an atomic).
+#[derive(Clone)]
+pub struct TwoPassObs {
+    /// Master switch (mirrors [`TreeObs::enabled`]).
+    pub enabled: bool,
+    pool_size: Arc<Gauge>,
+    pool_unique: Arc<Gauge>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    fallback_rows: Arc<Counter>,
+    rescore: Arc<Histogram>,
+}
+
+impl Default for TwoPassObs {
+    fn default() -> Self {
+        TwoPassObs {
+            enabled: true,
+            pool_size: Arc::new(Gauge::new()),
+            pool_unique: Arc::new(Gauge::new()),
+            hits: Arc::new(Counter::new()),
+            misses: Arc::new(Counter::new()),
+            fallback_rows: Arc::new(Counter::new()),
+            rescore: Arc::new(Histogram::new()),
+        }
+    }
+}
+
+impl TwoPassObs {
+    /// Bind every cell to `reg` under the stable `kss_sampler_pool_*`
+    /// names (see the README metric catalog).
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_gauge(
+            "kss_sampler_pool_size",
+            "slots",
+            "sampler",
+            "shared candidate-pool slots drawn for the last two-pass batch",
+            Arc::clone(&self.pool_size),
+        );
+        reg.register_gauge(
+            "kss_sampler_pool_unique",
+            "classes",
+            "sampler",
+            "unique classes in the last two-pass candidate pool",
+            Arc::clone(&self.pool_unique),
+        );
+        reg.register_counter(
+            "kss_sampler_pool_hit_total",
+            "draws",
+            "sampler",
+            "negatives resampled from the shared candidate pool",
+            Arc::clone(&self.hits),
+        );
+        reg.register_counter(
+            "kss_sampler_pool_miss_total",
+            "draws",
+            "sampler",
+            "negatives a degenerate pool mass pushed to per-row descent",
+            Arc::clone(&self.misses),
+        );
+        reg.register_counter(
+            "kss_sampler_pool_fallback_total",
+            "rows",
+            "sampler",
+            "rows whose pool mass degenerated (counted full redraw)",
+            Arc::clone(&self.fallback_rows),
+        );
+        reg.register_histogram(
+            "kss_sampler_pool_rescore_seconds",
+            "seconds",
+            "sampler",
+            "per-worker wall time of the pass-2 kernel_many pool rescore",
+            Arc::clone(&self.rescore),
+        );
+    }
+
+    /// Pool slots drawn for the most recent batch.
+    pub fn pool_size(&self) -> f64 {
+        self.pool_size.get()
+    }
+
+    /// Unique classes in the most recent pool.
+    pub fn pool_unique(&self) -> f64 {
+        self.pool_unique.get()
+    }
+
+    /// Negatives served from the shared pool.
+    pub fn hit_total(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Negatives that fell back to per-row descent.
+    pub fn miss_total(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Rows that triggered the degenerate-pool fallback.
+    pub fn fallback_total(&self) -> u64 {
+        self.fallback_rows.get()
+    }
+
+    /// Pass-2 rescore-sweep latency histogram (one record per worker
+    /// scratch checkout).
+    pub fn rescore_count(&self) -> u64 {
+        self.rescore.count()
+    }
+}
+
+/// Pass-1 state, pooled per engine: the batch-mean query, the drawn pool
+/// slots, the sorted run table (unique class, multiplicity, coarse q̄) and
+/// the contiguous unique-class embedding panel pass 2 sweeps.
+struct PoolScratch {
+    /// Tree memo scratch for the P coarse descents.
+    draw: DrawScratch,
+    /// f64 accumulator for the batch-mean query (one pass over rows).
+    hacc: Vec<f64>,
+    /// h̄ materialized for `begin_example` / `draw`.
+    hbar: Vec<f32>,
+    /// The P drawn slots as (class, coarse q̄) — q̄ is deterministic per
+    /// class (the tree's guarded closed form), so dedup keeps the first.
+    slots: Vec<(u32, f64)>,
+    /// Run table: unique classes ascending …
+    run_class: Vec<u32>,
+    /// … multiplicity n_c of each …
+    run_count: Vec<u32>,
+    /// … and its coarse draw probability q̄(c).
+    run_qbar: Vec<f64>,
+    /// Contiguous runs × d embedding panel (one kernel_many sweep/row).
+    panel: Vec<f32>,
+}
+
+impl PoolScratch {
+    fn new<M: FeatureMap>(tree: &TreeView<'_, M>) -> PoolScratch {
+        PoolScratch {
+            draw: tree.new_scratch(),
+            hacc: Vec::new(),
+            hbar: Vec::new(),
+            slots: Vec::new(),
+            run_class: Vec::new(),
+            run_count: Vec::new(),
+            run_qbar: Vec::new(),
+            panel: Vec::new(),
+        }
+    }
+}
+
+/// Per-worker pass-2 state, pooled per engine: kernel scores and the
+/// per-row CDF over the run table, a tree scratch for fallback rows, and
+/// the telemetry locals drained on put.
+struct RowScratch {
+    draw: DrawScratch,
+    /// kernel_many output, one slot per run.
+    k: Vec<f64>,
+    /// Inclusive prefix sums of the run weights (the resample CDF).
+    cum: Vec<f64>,
+    obs_on: bool,
+    obs_hits: u64,
+    obs_misses: u64,
+    obs_fallback_rows: u64,
+    obs_rescore_s: f64,
+}
+
+impl RowScratch {
+    fn new<M: FeatureMap>(tree: &TreeView<'_, M>) -> RowScratch {
+        RowScratch {
+            draw: tree.new_scratch(),
+            k: Vec::new(),
+            cum: Vec::new(),
+            obs_on: false,
+            obs_hits: 0,
+            obs_misses: 0,
+            obs_fallback_rows: 0,
+            obs_rescore_s: 0.0,
+        }
+    }
+
+    /// Size the per-run buffers for this batch's run table (cap-and-reuse:
+    /// an oversized leftover shrinks instead of pinning memory).
+    fn prepare(&mut self, runs: usize) {
+        cap_and_clear(&mut self.k, runs);
+        cap_and_clear(&mut self.cum, runs);
+        self.k.resize(runs, 0.0);
+        self.cum.resize(runs, 0.0);
+    }
+}
+
+/// The two-pass sampling engine: everything that is shared between the
+/// owning [`TwoPassKernelSampler`] and the snapshot-backed trainer path
+/// (`crate::serve::SnapshotSampler` in two-pass mode). Works over any
+/// [`TreeView`], so live trees and pinned snapshot generations use the
+/// same code byte for byte.
+pub struct TwoPassCore {
+    pool_factor: f64,
+    pool_scratch: Pool<PoolScratch>,
+    row_scratch: Pool<RowScratch>,
+    obs: TwoPassObs,
+}
+
+impl TwoPassCore {
+    /// `pool_factor` is the α of P = ⌈B·m/α⌉ (clamped to ≥ 1).
+    pub fn new(pool_factor: f64) -> TwoPassCore {
+        let pool_factor = if pool_factor.is_finite() && pool_factor >= 1.0 {
+            pool_factor
+        } else {
+            DEFAULT_POOL_FACTOR
+        };
+        TwoPassCore {
+            pool_factor,
+            pool_scratch: Pool::new(),
+            row_scratch: Pool::new(),
+            obs: TwoPassObs::default(),
+        }
+    }
+
+    /// The configured pool divisor α.
+    pub fn pool_factor(&self) -> f64 {
+        self.pool_factor
+    }
+
+    /// Telemetry cells (register via [`TwoPassObs::register_into`]).
+    pub fn obs(&self) -> &TwoPassObs {
+        &self.obs
+    }
+
+    /// Toggle telemetry accounting on the engine's own counters.
+    pub fn set_obs_enabled(&mut self, on: bool) {
+        self.obs.enabled = on;
+    }
+
+    /// Pool size for a batch: P = ⌈B·m/α⌉, never below m (a pool smaller
+    /// than one row's draw count would resample with pathological
+    /// duplication) and never above B·m (α < 1 is clamped at build).
+    fn pool_size(&self, n_rows: usize, m: usize) -> usize {
+        let target = ((n_rows * m) as f64 / self.pool_factor).ceil() as usize;
+        target.clamp(m.max(1), (n_rows * m).max(1))
+    }
+
+    /// Pass 1: draw the shared pool from the batch-mean query and build
+    /// the sorted run table + contiguous embedding panel. Runs on the
+    /// calling thread, before any fan-out, from the dedicated pool RNG
+    /// stream — so pass 2's row streams are untouched by pool size.
+    fn build_pool<M: FeatureMap>(
+        &self,
+        tree: &TreeView<'_, M>,
+        h_all: &[f32],
+        n_rows: usize,
+        p: usize,
+        pool: &mut PoolScratch,
+        rng: &mut Rng,
+    ) {
+        let d = tree.embed_dim();
+        // batch-mean query, accumulated in f64 (row order independent of
+        // the fan-out: this is a serial pass)
+        cap_and_clear(&mut pool.hacc, d);
+        pool.hacc.resize(d, 0.0);
+        for row in h_all.chunks_exact(d) {
+            for (acc, &x) in pool.hacc.iter_mut().zip(row) {
+                *acc += x as f64;
+            }
+        }
+        cap_and_clear(&mut pool.hbar, d);
+        let inv_n = 1.0 / n_rows as f64;
+        pool.hbar.extend(pool.hacc.iter().map(|&s| (s * inv_n) as f32));
+
+        // P coarse descents from h̄; each slot records the tree's exact,
+        // guarded q̄ (strictly positive — the pass-2 reweighting divides
+        // by it)
+        tree.begin_example(&pool.hbar, &mut pool.draw);
+        cap_and_clear(&mut pool.slots, p);
+        for _ in 0..p {
+            let (class, qbar) = tree.draw(&pool.hbar, &mut pool.draw, rng);
+            pool.slots.push((class, qbar));
+        }
+
+        // sort → duplicates adjacent → run table (q̄ is a deterministic
+        // function of the class under a fixed scratch generation, so any
+        // duplicate's q̄ equals the first)
+        pool.slots.sort_unstable_by_key(|&(class, _)| class);
+        cap_and_clear(&mut pool.run_class, p);
+        cap_and_clear(&mut pool.run_count, p);
+        cap_and_clear(&mut pool.run_qbar, p);
+        for &(class, qbar) in pool.slots.iter() {
+            if pool.run_class.last() == Some(&class) {
+                *pool.run_count.last_mut().expect("non-empty runs") += 1;
+            } else {
+                pool.run_class.push(class);
+                pool.run_count.push(1);
+                pool.run_qbar.push(qbar);
+            }
+        }
+
+        // gather the unique-class embeddings into one contiguous panel —
+        // pass 2's kernel_many sweep streams this like a tree leaf
+        let runs = pool.run_class.len();
+        cap_and_clear(&mut pool.panel, runs * d);
+        for &class in pool.run_class.iter() {
+            pool.panel.extend_from_slice(tree.emb_row(class as usize));
+        }
+    }
+
+    /// Pass 2 for one row: rescore the pool panel, resample m negatives
+    /// from the composed CDF, or redraw the whole row through the per-row
+    /// tree descent when the pool mass degenerates.
+    fn sample_row<M: FeatureMap>(
+        &self,
+        tree: &TreeView<'_, M>,
+        pool: &PoolScratch,
+        h: &[f32],
+        m: usize,
+        rng: &mut Rng,
+        slot: &mut Sample,
+        rs: &mut RowScratch,
+    ) {
+        slot.clear();
+        let runs = pool.run_class.len();
+        let t0 = rs.obs_on.then(Instant::now);
+        let ks = &mut rs.k[..runs];
+        tree.feature_map().kernel_many(h, &pool.panel, ks);
+        // composed second-stage weights w(c) = n_c · K(h, c) / q̄(c): the
+        // q̄ division is the SIR reweighting that keeps the marginal near
+        // the per-row kernel distribution (module docs); sanitize_mass
+        // coerces NaN/negative to 0 and +inf to f64::MAX so one bad score
+        // degrades to the counted fallback instead of poisoning the CDF
+        let cum = &mut rs.cum[..runs];
+        for j in 0..runs {
+            let ratio = super::tree::sanitize_mass(ks[j]) / pool.run_qbar[j].max(f64::MIN_POSITIVE);
+            ks[j] = pool.run_count[j] as f64 * super::tree::sanitize_mass(ratio);
+        }
+        let acc = crate::ops::fill_cum_into(ks, cum);
+        if let Some(t0) = t0 {
+            rs.obs_rescore_s += t0.elapsed().as_secs_f64();
+        }
+        let Some(pool_mass) = positive_pool_mass(acc) else {
+            // degenerate pool for this row: every pooled class scored ≈ 0
+            // (or the reweighting blew up). Redraw the whole row through
+            // the per-row descent — exact full-support q, strictly
+            // positive by the tree's own guards — and count it.
+            if rs.obs_on {
+                rs.obs_fallback_rows += 1;
+                rs.obs_misses += m as u64;
+            }
+            tree.begin_example(h, &mut rs.draw);
+            for _ in 0..m {
+                let (class, q) = tree.draw(h, &mut rs.draw, rng);
+                slot.push(class, q);
+            }
+            return;
+        };
+        for _ in 0..m {
+            let u = rng.f64() * pool_mass;
+            let j = cum.partition_point(|&c| c <= u).min(runs - 1);
+            let j = step_down_to_positive(cum, j);
+            let w = if j == 0 { cum[0] } else { cum[j] - cum[j - 1] };
+            // composed q (module docs): exact conditional-on-pool draw
+            // probability; pool_mass came from positive_pool_mass, and the
+            // selected CDF increment is strictly positive, so q ∈ (0, 1]
+            let q = w / pool_mass;
+            slot.push(pool.run_class[j], q);
+        }
+        if rs.obs_on {
+            rs.obs_hits += m as u64;
+        }
+    }
+
+    /// Return a worker scratch to the freelist, draining its telemetry
+    /// locals in one blocked flush (the pass-2 loop never touches an
+    /// atomic — same discipline as the tree's scratch flush).
+    fn put_row_scratch(&self, mut rs: RowScratch) {
+        if rs.obs_on {
+            if rs.obs_hits > 0 {
+                self.obs.hits.add(rs.obs_hits);
+                rs.obs_hits = 0;
+            }
+            if rs.obs_misses > 0 {
+                self.obs.misses.add(rs.obs_misses);
+                rs.obs_misses = 0;
+            }
+            if rs.obs_fallback_rows > 0 {
+                self.obs.fallback_rows.add(rs.obs_fallback_rows);
+                rs.obs_fallback_rows = 0;
+            }
+            if rs.obs_rescore_s > 0.0 {
+                self.obs.rescore.record(rs.obs_rescore_s);
+                rs.obs_rescore_s = 0.0;
+            }
+        }
+        self.row_scratch.put(rs);
+    }
+
+    /// The batched two-pass engine over any tree view (see module docs).
+    pub(crate) fn sample_batch_view<M: FeatureMap>(
+        &self,
+        tree: TreeView<'_, M>,
+        name: &str,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(name, Needs { h: true, ..Needs::default() })?;
+        let d = tree.embed_dim();
+        anyhow::ensure!(inputs.d == d, "batch h dim {} != sampler d {}", inputs.d, d);
+        if inputs.n == 0 || m == 0 {
+            for slot in out.iter_mut() {
+                slot.clear();
+            }
+            return Ok(());
+        }
+        let h_all = inputs.h.expect("validated: two-pass needs h");
+
+        // pass 1 — calling thread, dedicated RNG stream
+        let p = self.pool_size(inputs.n, m);
+        let mut pool = self.pool_scratch.take(|| PoolScratch::new(&tree));
+        let mut pool_rng = Rng::new(step_seed ^ POOL_SALT);
+        self.build_pool(&tree, h_all, inputs.n, p, &mut pool, &mut pool_rng);
+        let runs = pool.run_class.len();
+        if self.obs.enabled {
+            self.obs.pool_size.set(p as f64);
+            self.obs.pool_unique.set(runs as f64);
+        }
+
+        // pass 2 — per-row resample, fanned out; the pool is read-only
+        let pool_ref = &pool;
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut rs = self.row_scratch.take(|| RowScratch::new(&tree));
+            rs.obs_on = self.obs.enabled;
+            rs.prepare(runs);
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = &h_all[i * d..(i + 1) * d];
+                let mut rng = row_rng(step_seed, i);
+                self.sample_row(&tree, pool_ref, h, m, &mut rng, slot, &mut rs);
+            }
+            self.put_row_scratch(rs);
+        });
+        self.pool_scratch.put(pool);
+        Ok(())
+    }
+
+    /// Per-example two-pass draw: a B = 1 batch whose pool and resample
+    /// both consume the caller's RNG stream (the documented batch-API
+    /// exception — two-pass `sample` is not the row stream of
+    /// `sample_batch`).
+    pub(crate) fn sample_view<M: FeatureMap>(
+        &self,
+        tree: TreeView<'_, M>,
+        input: &SampleInput,
+        m: usize,
+        rng: &mut Rng,
+        out: &mut Sample,
+    ) -> Result<()> {
+        let h = input.h.ok_or_else(|| anyhow::anyhow!("two-pass sampler needs h"))?;
+        let d = tree.embed_dim();
+        anyhow::ensure!(h.len() == d, "h len {} != d {}", h.len(), d);
+        if m == 0 {
+            out.clear();
+            return Ok(());
+        }
+        let p = self.pool_size(1, m);
+        let mut pool = self.pool_scratch.take(|| PoolScratch::new(&tree));
+        self.build_pool(&tree, h, 1, p, &mut pool, rng);
+        let runs = pool.run_class.len();
+        if self.obs.enabled {
+            self.obs.pool_size.set(p as f64);
+            self.obs.pool_unique.set(runs as f64);
+        }
+        let mut rs = self.row_scratch.take(|| RowScratch::new(&tree));
+        rs.obs_on = self.obs.enabled;
+        rs.prepare(runs);
+        self.sample_row(&tree, &pool, h, m, rng, out, &mut rs);
+        self.put_row_scratch(rs);
+        self.pool_scratch.put(pool);
+        Ok(())
+    }
+}
+
+/// The owning two-pass sampler: a [`KernelTreeSampler`] (maintained through
+/// the normal Fig. 1(b) update paths) plus a [`TwoPassCore`] that batches
+/// its draws. Registered as `"quadratic-2pass"` / `"rff-2pass"`; the
+/// snapshot-backed trainer path instead runs the same core over pinned
+/// generations (`crate::serve::SnapshotSampler::with_two_pass`).
+pub struct TwoPassKernelSampler<M: FeatureMap> {
+    inner: KernelTreeSampler<M>,
+    name: String,
+    core: TwoPassCore,
+}
+
+impl<M: FeatureMap> TwoPassKernelSampler<M> {
+    /// Build over `map` with the tree's default leaf policy (`leaf_size =
+    /// None`) and the given pool divisor α.
+    pub fn new(
+        map: M,
+        n_classes: usize,
+        leaf_size: Option<usize>,
+        pool_factor: f64,
+    ) -> TwoPassKernelSampler<M> {
+        let name = format!("{}-2pass", map.name());
+        TwoPassKernelSampler {
+            inner: KernelTreeSampler::new(map, n_classes, leaf_size),
+            name,
+            core: TwoPassCore::new(pool_factor),
+        }
+    }
+
+    /// The configured pool divisor α.
+    pub fn pool_factor(&self) -> f64 {
+        self.core.pool_factor()
+    }
+
+    /// Two-pass telemetry cells (`kss_sampler_pool_*`).
+    pub fn obs(&self) -> &TwoPassObs {
+        self.core.obs()
+    }
+
+    /// The hosted tree's telemetry cells (`kss_sampler_*` descent series —
+    /// pool descents and fallback redraws report here too).
+    pub fn tree_obs(&self) -> &TreeObs {
+        self.inner.obs()
+    }
+
+    /// Toggle telemetry on both the engine and the hosted tree.
+    pub fn set_obs_enabled(&mut self, on: bool) {
+        self.core.set_obs_enabled(on);
+        self.inner.set_obs_enabled(on);
+    }
+
+    /// The hosted tree (tests and benches compare against its per-row
+    /// engine directly).
+    pub fn inner(&self) -> &KernelTreeSampler<M> {
+        &self.inner
+    }
+}
+
+impl<M: FeatureMap> Sampler for TwoPassKernelSampler<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        self.core.sample_view(self.inner.view(), input, m, rng, out)
+    }
+
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        self.core.sample_batch_view(self.inner.view(), &self.name, inputs, m, step_seed, out)
+    }
+
+    /// Closed-form per-class probability — the infinite-pool limit of the
+    /// composed marginal (the TV tests bound the finite-pool gap).
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        input.h.map(|h| self.inner.class_prob(h, class))
+    }
+
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        KernelTreeSampler::update_many(&mut self.inner, classes, rows);
+    }
+
+    fn update(&mut self, class: usize, w_new: &[f32]) {
+        Sampler::update(&mut self.inner, class, w_new);
+    }
+
+    fn reset_embeddings(&mut self, w: &[f32], n: usize, d: usize) {
+        Sampler::reset_embeddings(&mut self.inner, w, n, d);
+    }
+
+    /// The hosted tree is a real kernel tree maintained through
+    /// [`Sampler::update_many`] (the trainer's single-sweep accounting).
+    fn owns_kernel_tree(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::kernel::QuadraticMap;
+    use crate::util::stats::{chi_square_stat, tv_from_counts};
+
+    fn random_emb(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n * d];
+        rng.fill_normal(&mut v, 0.6);
+        v
+    }
+
+    fn batch(
+        s: &dyn Sampler,
+        hs: &[f32],
+        rows: usize,
+        d: usize,
+        n: usize,
+        m: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Vec<Sample> {
+        let inputs = BatchSampleInput {
+            n: rows,
+            d,
+            n_classes: n,
+            h: Some(hs),
+            threads,
+            ..Default::default()
+        };
+        let mut out: Vec<Sample> = (0..rows).map(|_| Sample::default()).collect();
+        s.sample_batch(&inputs, m, seed, &mut out).unwrap();
+        out
+    }
+
+    /// Exact closed-form kernel distribution of one query over all classes.
+    fn exact_dist(map: &QuadraticMap, emb: &[f32], n: usize, d: usize, h: &[f32]) -> Vec<f64> {
+        let ks: Vec<f64> = (0..n).map(|c| map.kernel(h, &emb[c * d..(c + 1) * d])).collect();
+        let total: f64 = ks.iter().sum();
+        ks.iter().map(|&k| k / total).collect()
+    }
+
+    #[test]
+    fn composed_q_is_exact_for_the_realized_pool() {
+        // reconstruct pass 1 independently (same salt, same stream), then
+        // check every reported q equals n_c·K/q̄ / S bit-for-bit and that
+        // q sums to 1 over the pool support
+        let (n, d, rows, m, seed) = (96usize, 4usize, 12usize, 24usize, 0xC0FE_u64);
+        let mut rng = Rng::new(5);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 4.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let out = batch(&s, &hs, rows, d, n, m, seed, 3);
+
+        // independent pass-1 replay over the same tree
+        let tree = s.inner().view();
+        let mut pool = PoolScratch::new(&tree);
+        let p = s.core.pool_size(rows, m);
+        let mut pool_rng = Rng::new(seed ^ POOL_SALT);
+        s.core.build_pool(&tree, &hs, rows, p, &mut pool, &mut pool_rng);
+        let runs = pool.run_class.len();
+        assert!(runs > 1, "degenerate test setup: pool collapsed to {runs} runs");
+
+        let map = s.inner().feature_map().clone();
+        for (i, row) in out.iter().enumerate() {
+            // recompute the row's composed weights exactly as pass 2 does
+            let h = &hs[i * d..(i + 1) * d];
+            let mut ks = vec![0.0f64; runs];
+            map.kernel_many(h, &pool.panel, &mut ks);
+            let mut cum = vec![0.0f64; runs];
+            let mut acc = 0.0f64;
+            for j in 0..runs {
+                let ratio = super::super::tree::sanitize_mass(ks[j])
+                    / pool.run_qbar[j].max(f64::MIN_POSITIVE);
+                acc += pool.run_count[j] as f64 * super::super::tree::sanitize_mass(ratio);
+                cum[j] = acc;
+            }
+            let total = acc;
+            assert!(total > 0.0 && total.is_finite(), "row {i} pool mass degenerate");
+            // q over the pool support is a probability distribution
+            let sum_q: f64 = (0..runs)
+                .map(|j| (if j == 0 { cum[0] } else { cum[j] - cum[j - 1] }) / total)
+                .sum();
+            assert!((sum_q - 1.0).abs() < 1e-9, "row {i}: Σq = {sum_q}");
+            for (k, (&class, &q)) in row.classes.iter().zip(&row.q).enumerate() {
+                let j = pool.run_class.binary_search(&class).unwrap_or_else(|_| {
+                    panic!("row {i} draw {k}: class {class} not in the pool")
+                });
+                let w = if j == 0 { cum[0] } else { cum[j] - cum[j - 1] };
+                let want = w / total;
+                assert_eq!(q.to_bits(), want.to_bits(), "row {i} draw {k}: q {q} != {want}");
+                assert!(q > 0.0 && q.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn two_pass_batch_is_thread_count_invariant() {
+        let (n, d, rows, m) = (64usize, 3usize, 10usize, 16usize);
+        let mut rng = Rng::new(9);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 3.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let run = |threads: usize| {
+            batch(&s, &hs, rows, d, n, m, 0xAB, threads)
+                .into_iter()
+                .map(|r| (r.classes, r.q))
+                .collect::<Vec<_>>()
+        };
+        let serial = run(0);
+        for threads in [1usize, 2, 5] {
+            assert_eq!(run(threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn marginal_tv_and_partition_bias_parity_with_per_row_descent() {
+        // all rows share one query, so the exact per-row distribution is a
+        // single closed-form vector; the two-pass marginal (over fresh
+        // pools each step) must land close to it, and the q-corrected
+        // partition estimator (the eq. (2) gradient-bias proxy) must stay
+        // near the truth for BOTH samplers
+        let (n, d, rows, m) = (48usize, 3usize, 32usize, 32usize);
+        let mut rng = Rng::new(17);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut two = TwoPassKernelSampler::new(map.clone(), n, None, 2.0);
+        Sampler::reset_embeddings(&mut two, &emb, n, d);
+        let mut tree = KernelTreeSampler::new(map.clone(), n, None);
+        Sampler::reset_embeddings(&mut tree, &emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let hs: Vec<f32> = (0..rows).flat_map(|_| h.iter().copied()).collect();
+        let expected = exact_dist(&map, &emb, n, d, &h);
+        // exact softmax-numerator partition Σ exp(o) for the bias proxy
+        let logits: Vec<f64> =
+            (0..n).map(|c| crate::ops::dot_f32(&h, &emb[c * d..(c + 1) * d])).collect();
+        let true_part: f64 = logits.iter().map(|&o| o.exp()).sum();
+
+        let mut run = |s: &dyn Sampler| {
+            let mut counts = vec![0usize; n];
+            let (mut est_sum, mut est_n) = (0.0f64, 0usize);
+            for step in 0..40u64 {
+                for row in batch(s, &hs, rows, d, n, m, 0x7000 + step, 2) {
+                    for (&c, &q) in row.classes.iter().zip(&row.q) {
+                        counts[c as usize] += 1;
+                        est_sum += logits[c as usize].exp() / q;
+                        est_n += 1;
+                    }
+                }
+            }
+            (tv_from_counts(&counts, est_n, &expected), est_sum / est_n as f64)
+        };
+        let (tv_two, part_two) = run(&two);
+        let (tv_tree, part_tree) = run(&tree);
+        assert!(tv_tree < 0.05, "per-row descent TV {tv_tree} (baseline broken?)");
+        assert!(tv_two < 0.08, "two-pass marginal TV {tv_two} too far from exact");
+        assert!((tv_two - tv_tree).abs() < 0.06, "TV parity: {tv_two} vs {tv_tree}");
+        let rel = |est: f64| (est - true_part).abs() / true_part;
+        assert!(rel(part_tree) < 0.10, "tree partition bias {} ({part_tree} vs {true_part})", rel(part_tree));
+        assert!(rel(part_two) < 0.12, "two-pass partition bias {} ({part_two} vs {true_part})", rel(part_two));
+    }
+
+    #[test]
+    fn chi_square_gof_on_the_composed_proposal() {
+        // one fixed pool (one step_seed), many rows with the same query:
+        // every draw comes from the same conditional distribution
+        // n_c·K/q̄ / S, so the counts must pass a χ² goodness-of-fit test
+        // against the composed probabilities
+        let (n, d, rows, m, seed) = (80usize, 3usize, 400usize, 8usize, 0xD1CE_u64);
+        let mut rng = Rng::new(23);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 4.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let hs: Vec<f32> = (0..rows).flat_map(|_| h.iter().copied()).collect();
+        let out = batch(&s, &hs, rows, d, n, m, seed, 2);
+
+        // composed probabilities from an independent pass-1 replay
+        let tree = s.inner().view();
+        let mut pool = PoolScratch::new(&tree);
+        let p = s.core.pool_size(rows, m);
+        let mut pool_rng = Rng::new(seed ^ POOL_SALT);
+        s.core.build_pool(&tree, &hs, rows, p, &mut pool, &mut pool_rng);
+        let runs = pool.run_class.len();
+        let map = s.inner().feature_map();
+        let mut ks = vec![0.0f64; runs];
+        map.kernel_many(&h, &pool.panel, &mut ks);
+        let ws: Vec<f64> = (0..runs)
+            .map(|j| pool.run_count[j] as f64 * ks[j] / pool.run_qbar[j].max(f64::MIN_POSITIVE))
+            .collect();
+        let total_w: f64 = ws.iter().sum();
+        let probs: Vec<f64> = ws.iter().map(|&w| w / total_w).collect();
+
+        let mut counts = vec![0u64; runs];
+        let mut total = 0u64;
+        for row in &out {
+            for &c in &row.classes {
+                let j = pool.run_class.binary_search(&c).expect("draw outside pool");
+                counts[j] += 1;
+                total += 1;
+            }
+        }
+        let stat = chi_square_stat(&counts, &probs, total as f64);
+        let dof = (runs - 1) as f64;
+        // mean dof, variance 2·dof: a 6σ bound is astronomically unlikely
+        // to trip on a correct sampler, and catches systematic q errors
+        let bound = dof + 6.0 * (2.0 * dof).sqrt();
+        assert!(stat < bound, "χ² = {stat} over dof = {dof} (bound {bound})");
+    }
+
+    /// Kernel that is identically zero — no class can be scored, so every
+    /// per-row pool mass degenerates and the fallback path must carry the
+    /// whole batch with strictly positive q.
+    #[derive(Clone)]
+    struct ZeroMap {
+        d: usize,
+    }
+
+    impl FeatureMap for ZeroMap {
+        fn d(&self) -> usize {
+            self.d
+        }
+
+        fn dim(&self) -> usize {
+            self.d
+        }
+
+        fn name(&self) -> &'static str {
+            "zero"
+        }
+
+        fn phi(&self, _a: &[f32], out: &mut [f64]) {
+            out.fill(0.0);
+        }
+
+        fn kernel(&self, _a: &[f32], _b: &[f32]) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn degenerate_pool_falls_back_with_positive_q() {
+        let (n, d, rows, m) = (32usize, 3usize, 6usize, 8usize);
+        let mut rng = Rng::new(41);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(ZeroMap { d }, n, None, 4.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let out = batch(&s, &hs, rows, d, n, m, 0xFA11, 2);
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(row.classes.len(), m, "row {i}");
+            for (&c, &q) in row.classes.iter().zip(&row.q) {
+                assert!((c as usize) < n, "row {i} class {c} out of range");
+                assert!(q > 0.0 && q.is_finite(), "row {i}: fallback q = {q}");
+            }
+        }
+        // every row redrew through the counted fallback; nothing was
+        // served from the pool
+        assert_eq!(s.obs().fallback_total(), rows as u64);
+        assert_eq!(s.obs().miss_total(), (rows * m) as u64);
+        assert_eq!(s.obs().hit_total(), 0);
+    }
+
+    #[test]
+    fn pool_hit_telemetry_accounts_every_draw() {
+        let (n, d, rows, m) = (64usize, 3usize, 8usize, 12usize);
+        let mut rng = Rng::new(47);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 4.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let _ = batch(&s, &hs, rows, d, n, m, 0x0B5, 2);
+        let obs = s.obs();
+        assert_eq!(obs.hit_total() + obs.miss_total(), (rows * m) as u64);
+        assert!(obs.pool_size() >= m as f64);
+        assert!(obs.pool_unique() >= 1.0);
+        assert!(obs.rescore_count() >= 1, "rescore sweep latency not recorded");
+    }
+
+    #[test]
+    fn scratch_freelists_reuse_and_cap_capacity() {
+        // satellite: pool buffers must round-trip through the freelist
+        // (pointer reuse) and a large pool must not pin capacity after
+        // smaller batches (cap-and-reuse, no monotone Vec growth)
+        let (n, d) = (64usize, 3usize);
+        let mut rng = Rng::new(53);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 2.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let step = |s: &TwoPassKernelSampler<QuadraticMap>, rows: usize, m: usize, seed: u64| {
+            let mut hs = vec![0.0f32; rows * d];
+            Rng::new(seed).fill_normal(&mut hs, 1.0);
+            let _ = batch(s, &hs, rows, d, n, m, seed, 0);
+        };
+        // big batch warms the buffers up
+        step(&s, 64, 64, 1);
+        let big_p = s.core.pool_size(64, 64);
+        {
+            let pool = s.core.pool_scratch.take(|| unreachable!("freelist must be warm"));
+            assert!(pool.slots.capacity() >= big_p, "pool buffers were not kept");
+            s.core.pool_scratch.put(pool);
+        }
+        // many small batches: capacity must come back down (≤ 4× need)
+        for seed in 2..12u64 {
+            step(&s, 2, 4, seed);
+        }
+        let small_p = s.core.pool_size(2, 4);
+        let pool = s.core.pool_scratch.take(|| unreachable!("freelist must be warm"));
+        assert!(
+            pool.slots.capacity() <= 4 * small_p.max(1),
+            "pool slots capacity {} not capped (need {})",
+            pool.slots.capacity(),
+            small_p
+        );
+        assert!(
+            pool.panel.capacity() <= 4 * (small_p * d).max(1),
+            "panel capacity {} not capped",
+            pool.panel.capacity()
+        );
+        s.core.pool_scratch.put(pool);
+        let rs = s.core.row_scratch.take(|| unreachable!("row freelist must be warm"));
+        assert!(rs.k.capacity() <= 4 * small_p.max(1), "row k capacity not capped");
+        s.core.row_scratch.put(rs);
+    }
+
+    #[test]
+    fn cap_and_clear_bounds_capacity() {
+        let mut v: Vec<u64> = Vec::with_capacity(1000);
+        v.extend(0..1000);
+        cap_and_clear(&mut v, 10);
+        assert!(v.is_empty());
+        assert!(v.capacity() <= 1000);
+        assert!(v.capacity() >= 10, "shrink_to must keep the needed capacity");
+        cap_and_clear(&mut v, 10);
+        assert!(v.capacity() <= 40, "capacity {} not capped to 4× need", v.capacity());
+        // growing again is fine
+        v.extend(0..500);
+        assert_eq!(v.len(), 500);
+    }
+
+    #[test]
+    fn sample_is_a_b1_batch_with_positive_q() {
+        let (n, d, m) = (48usize, 3usize, 16usize);
+        let mut rng = Rng::new(61);
+        let emb = random_emb(&mut rng, n, d);
+        let mut s = TwoPassKernelSampler::new(QuadraticMap::new(d, 100.0), n, None, 4.0);
+        Sampler::reset_embeddings(&mut s, &emb, n, d);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        let mut draw_rng = Rng::new(71);
+        s.sample(&input, m, &mut draw_rng, &mut out).unwrap();
+        assert_eq!(out.classes.len(), m);
+        assert!(out.q.iter().all(|&q| q > 0.0 && q.is_finite()));
+        // deterministic in the caller's stream
+        let mut again = Sample::default();
+        let mut draw_rng = Rng::new(71);
+        s.sample(&input, m, &mut draw_rng, &mut again).unwrap();
+        assert_eq!(out.classes, again.classes);
+        assert_eq!(out.q, again.q);
+    }
+}

@@ -19,6 +19,7 @@
 //! | rff shard      | yes          | yes        | O(D log n) + S   | native (router+pool)|
 //! | rff flat (exp) | yes          | yes        | O(n) (oracle)    | native (pooled CDF) |
 //! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   | default fan-out     |
+//! | 2pass tree     | yes          | yes        | O(P/B·D log n) amortized | native (shared pool) |
 //!
 //! The canonical name list (with one-line summaries for the CLI and the
 //! unknown-name error) is [`SAMPLER_REGISTRY`] — one table, so new kernels
@@ -40,6 +41,16 @@
 //! overrides it with a batched descent engine that reuses one arena scratch
 //! pool per worker instead of allocating per example.
 //!
+//! **One documented exception**: the two-pass samplers
+//! (`kernel::two_pass`, names `*-2pass`) are deliberately
+//! *batch-coupled* — pass 1 draws one candidate pool shared by all rows
+//! of the call, so a per-example [`Sampler::sample`] loop (each call its
+//! own B = 1 batch with its own pool) is **not** bit-identical to
+//! `sample_batch`. Stream determinism still holds where it matters:
+//! `sample_batch` is a pure function of `(inputs, m, step_seed)` for any
+//! thread count — the pool consumes a dedicated salted stream on the
+//! calling thread and row `i` still resamples from [`row_rng`].
+//!
 //! Invariant (eq. 2): no sampler may ever report `q ≤ 0` — the trainer
 //! feeds `ln(m·q)` to the training kernel, and a zero would poison the
 //! logits with `-inf`. [`Sample::push`] debug-asserts this at the source.
@@ -58,6 +69,7 @@ use anyhow::Result;
 pub use bigram::BigramSampler;
 pub use kernel::flat::FlatKernelSampler;
 pub use kernel::tree::{KernelTreeSampler, TreeObs};
+pub use kernel::two_pass::{TwoPassKernelSampler, TwoPassObs, DEFAULT_POOL_FACTOR};
 pub use kernel::{KernelKind, QuadraticMap};
 pub use rff::{PositiveRffMap, RffConfig};
 pub use softmax_exact::SoftmaxSampler;
@@ -363,6 +375,14 @@ pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
         name: "rff-streaming",
         summary: "rff tree + memtable/tombstones (online class churn)",
     },
+    SamplerInfo {
+        name: "quadratic-2pass",
+        summary: "quadratic tree, batch-shared two-pass pool (TAPAS-style)",
+    },
+    SamplerInfo {
+        name: "rff-2pass",
+        summary: "rff tree, batch-shared two-pass pool (TAPAS-style)",
+    },
 ];
 
 /// Comma-separated registry names (error messages, CLI help).
@@ -453,6 +473,23 @@ pub fn build_sampler(
             PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
             n_classes,
             None,
+        )),
+        // two-pass batch-shared pool over the owning trees (the trainer's
+        // snapshot-backed path instead applies SnapshotSampler::
+        // with_two_pass over the published generations); the default pool
+        // divisor α here matches TrainConfig::default — callers that tune
+        // α construct TwoPassKernelSampler directly
+        "quadratic-2pass" => Box::new(kernel::two_pass::TwoPassKernelSampler::new(
+            QuadraticMap::new(d, alpha as f64),
+            n_classes,
+            None,
+            kernel::two_pass::DEFAULT_POOL_FACTOR,
+        )),
+        "rff-2pass" => Box::new(kernel::two_pass::TwoPassKernelSampler::new(
+            PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
+            n_classes,
+            None,
+            kernel::two_pass::DEFAULT_POOL_FACTOR,
         )),
         other => anyhow::bail!("unknown sampler '{other}' (known: {})", sampler_names()),
     };

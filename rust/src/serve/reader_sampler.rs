@@ -32,6 +32,7 @@
 //!   [`draw_from_shards`] body the serve workers run.
 
 use crate::sampler::kernel::tree::{sanitize_mass, TreeView};
+use crate::sampler::kernel::two_pass::{TwoPassCore, TwoPassObs};
 use crate::sampler::kernel::FeatureMap;
 use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
 use crate::serve::shard::{draw_from_shards, scratch_for, shard_of_class, ShardScratch};
@@ -63,6 +64,11 @@ pub struct SnapshotSampler<M: FeatureMap + Clone> {
     /// Router scratch freelist (multi-shard draws only) — the same pooling
     /// discipline as [`crate::serve::ShardedKernelSampler`].
     scratch_pool: Pool<ShardScratch>,
+    /// Batch-shared two-pass engine (single-shard only): when set, draws
+    /// route through [`TwoPassCore`] over the pinned generation's tree
+    /// view instead of per-row descents. See
+    /// `crate::sampler::kernel::two_pass` for the composed-q contract.
+    two_pass: Option<TwoPassCore>,
 }
 
 impl<M: FeatureMap + Clone> SnapshotSampler<M> {
@@ -88,7 +94,33 @@ impl<M: FeatureMap + Clone> SnapshotSampler<M> {
             name,
             pinned: Mutex::new(Pinned { readers, snaps }),
             scratch_pool: Pool::new(),
+            two_pass: None,
         }
+    }
+
+    /// Switch this adapter into batch-shared two-pass mode (pool divisor
+    /// `pool_factor` = the α of P = ⌈B·m/α⌉) and report the matching
+    /// `*-2pass` registry name. Single-shard publish points only: the pool
+    /// descent needs one tree over the full class range (the router merge
+    /// would break the composed-q algebra).
+    pub fn with_two_pass(mut self, pool_factor: f64) -> SnapshotSampler<M> {
+        assert_eq!(
+            self.offsets.len(),
+            2,
+            "two-pass mode needs a single-shard publish point (got {} shards)",
+            self.offsets.len() - 1
+        );
+        if !self.name.ends_with("-2pass") {
+            self.name = format!("{}-2pass", self.name);
+        }
+        self.two_pass = Some(TwoPassCore::new(pool_factor));
+        self
+    }
+
+    /// Two-pass telemetry cells (`kss_sampler_pool_*`), when in two-pass
+    /// mode.
+    pub fn two_pass_obs(&self) -> Option<&TwoPassObs> {
+        self.two_pass.as_ref().map(|core| core.obs())
     }
 
     /// Generation of every pinned shard snapshot (test/debug surface).
@@ -123,6 +155,12 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
 
     fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
         let snaps = self.pin()?;
+        if let (Some(core), Some(snap)) = (&self.two_pass, snaps.first()) {
+            // B = 1 two-pass batch over the pinned generation (the
+            // documented batch-coupled exception in sampler/mod.rs);
+            // with_two_pass asserts a single shard, so first() is it
+            return core.sample_view(snap.tree.view(), input, m, rng, out);
+        }
         if snaps.len() == 1 {
             // single tree: the snapshot's own engine (bit-identical stream
             // to the legacy private KernelTreeSampler)
@@ -149,6 +187,10 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
         out: &mut [Sample],
     ) -> Result<()> {
         let snaps = self.pin()?;
+        if let (Some(core), Some(snap)) = (&self.two_pass, snaps.first()) {
+            // single shard by with_two_pass's assert, see sample() above
+            return core.sample_batch_view(snap.tree.view(), &self.name, inputs, m, step_seed, out);
+        }
         if snaps.len() == 1 {
             return snaps[0].tree.sample_batch(inputs, m, step_seed, out);
         }
@@ -347,6 +389,48 @@ mod tests {
             let b = reader.prob(&input, c).unwrap();
             assert!((a - b).abs() < 1e-12, "class {c}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn two_pass_streams_match_owning_two_pass_sampler() {
+        // the snapshot adapter in two-pass mode and the owning
+        // TwoPassKernelSampler run the same TwoPassCore over equal tree
+        // arenas — (class, q) streams must be bit-identical, across
+        // publishes
+        use crate::sampler::kernel::two_pass::TwoPassKernelSampler;
+        let (n, d, rows, m) = (48usize, 3usize, 9usize, 12usize);
+        let mut rng = Rng::new(71);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut live = TwoPassKernelSampler::new(map.clone(), n, None, 3.0);
+        Sampler::reset_embeddings(&mut live, &emb, n, d);
+        let mut set = ShardSet::new(map, n, 1, None, Some(&emb));
+        let reader =
+            SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic".into())
+                .with_two_pass(3.0);
+        assert_eq!(reader.name(), "quadratic-2pass");
+        for step in 0..5u64 {
+            let mut hs = vec![0.0f32; rows * d];
+            rng.fill_normal(&mut hs, 1.0);
+            reader.refresh_snapshots();
+            let a = batch_draws(&live, &hs, rows, d, n, m, 0xB0 + step, 3);
+            let b = batch_draws(&reader, &hs, rows, d, n, m, 0xB0 + step, 2);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.classes, y.classes, "step {step} row {i}");
+                assert_eq!(x.q, y.q, "step {step} row {i}");
+            }
+            let classes = vec![(step as usize * 7) % n, (step as usize * 13 + 1) % n];
+            let mut classes = classes;
+            classes.sort_unstable();
+            classes.dedup();
+            let mut new_rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut new_rows, 0.6);
+            Sampler::update_many(&mut live, &classes, &new_rows);
+            set.update_and_publish(&classes, &new_rows);
+        }
+        // telemetry flows through the adapter's engine
+        let obs = reader.two_pass_obs().expect("two-pass mode has obs");
+        assert!(obs.hit_total() + obs.miss_total() > 0);
     }
 
     #[test]
