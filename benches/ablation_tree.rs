@@ -8,14 +8,24 @@
 //!   class, but correlated; we measure both the speed and the estimator
 //!   quality (partition-function estimate variance).
 //!
+//! * **inverted multi-index frontier**: the midx sampler's bias/cost
+//!   frontier against the tree, rff and two-pass engines at
+//!   C ∈ {1e5, 1e6} (quick; full adds 1e7) — closed-form TV plus exact
+//!   per-draw kernel-eval accounting, merged as a `midx` section into
+//!   `BENCH_bias.json` with the C ≥ 1e6 acceptance flag.
+//!
 //! No artifacts needed. `cargo bench --bench ablation_tree`.
 
-use kss::bench_harness::{print_speedup, print_table, scale, Bencher, BenchRow, Scale};
+use kss::bench_harness::{print_speedup, print_table, scale, write_json_value, Bencher, BenchRow, Scale};
 use kss::sampler::kernel::multi::PartialLeafSampler;
+use kss::sampler::kernel::FeatureMap;
 use kss::sampler::{
-    row_rng, BatchSampleInput, KernelTreeSampler, QuadraticMap, Sample, SampleInput, Sampler,
+    row_rng, BatchSampleInput, KernelTreeSampler, MidxKernelSampler, PositiveRffMap,
+    QuadraticMap, RffConfig, Sample, SampleInput, Sampler,
 };
+use kss::util::json::Value;
 use kss::util::rng::Rng;
+use kss::util::stats::tv_from_scores;
 use kss::util::threadpool::default_threads;
 
 fn main() {
@@ -167,4 +177,339 @@ fn main() {
         &[row_batched.clone(), row_per_ex.clone()],
     );
     print_speedup("batched vs per-example", &row_per_ex, &row_batched);
+
+    midx_frontier();
+}
+
+/// One engine's point on the midx bias/cost frontier at a catalog size C.
+struct FrontierPoint {
+    engine: &'static str,
+    kernel: &'static str,
+    n_classes: usize,
+    feature_dim: usize,
+    /// Kernel-eval work per returned draw, in scalar multiply-accumulates:
+    /// a φ-aggregate touch (tree node, coarse cluster) costs `dim` MACs, a
+    /// flat class kernel eval (leaf / refine) costs `d` — the unit that
+    /// makes a d²+1-wide quadratic node touch and a d-wide leaf eval
+    /// commensurable. Measured from real draws for tree/midx, closed-form
+    /// for two-pass.
+    macs_per_draw: f64,
+    /// Closed-form TV(kernel proposal, exact softmax) over the queries —
+    /// engines on the same kernel serve the identical exact distribution,
+    /// so TV separates kernel *families* while the MAC column separates
+    /// *engines*.
+    avg_tv: f64,
+    build_s: f64,
+    /// Measured per-draw wall time (0 = analytic row, not timed).
+    draw_s: f64,
+}
+
+/// Frontier panel geometry. Real production vocabularies are clustered —
+/// that is the entire premise of coarse quantization — so the frontier
+/// draws class embeddings from a FR_COMPONENTS-component mixture (unit
+/// directions scaled to FR_CENTER_NORM, within-component std FR_SIGMA)
+/// and queries near component centers. On an isotropic Gaussian panel no
+/// coarse quantizer can beat a balanced tree: every cluster gets opened
+/// and the refine degenerates to a full scan.
+const FR_D: usize = 32;
+const FR_COMPONENTS: usize = 32;
+const FR_CENTER_NORM: f32 = 3.0;
+const FR_SIGMA: f32 = 0.15;
+const FR_EXAMPLES: usize = 4;
+const FR_ALPHA: f64 = 100.0;
+const FR_BUILD_SEED: u64 = 0x1DA8_5EED;
+
+/// Mixture panel + FR_EXAMPLES queries, each near a component center.
+fn mixture_panel(c: usize, rng: &mut Rng) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let d = FR_D;
+    let mut centers = vec![0.0f32; FR_COMPONENTS * d];
+    rng.fill_normal(&mut centers, 1.0);
+    for g in 0..FR_COMPONENTS {
+        let row = &mut centers[g * d..(g + 1) * d];
+        let norm = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        for x in row.iter_mut() {
+            *x *= FR_CENTER_NORM / norm.max(1e-6);
+        }
+    }
+    let mut emb = vec![0.0f32; c * d];
+    rng.fill_normal(&mut emb, FR_SIGMA);
+    for class in 0..c {
+        let center = &centers[(class % FR_COMPONENTS) * d..(class % FR_COMPONENTS) * d + d];
+        for (slot, &cx) in emb[class * d..(class + 1) * d].iter_mut().zip(center) {
+            *slot += cx;
+        }
+    }
+    let mut hs = Vec::with_capacity(FR_EXAMPLES);
+    for e in 0..FR_EXAMPLES {
+        let center = &centers[(e % FR_COMPONENTS) * d..(e % FR_COMPONENTS) * d + d];
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut h, 0.1);
+        for (slot, &cx) in h.iter_mut().zip(center) {
+            *slot += cx;
+        }
+        hs.push(h);
+    }
+    (emb, hs)
+}
+
+/// Closed-form TV between the kernel proposal and the exact softmax
+/// target, averaged over the queries. Exact (no Monte-Carlo noise), and
+/// by construction identical for every engine serving the same kernel.
+fn frontier_tv<M: FeatureMap>(map: &M, emb: &[f32], c: usize, hs: &[Vec<f32>]) -> f64 {
+    let mut logits = vec![0.0f64; c];
+    let mut target = vec![0.0f64; c];
+    let mut ks = vec![0.0f64; c];
+    let mut acc = 0.0;
+    for h in hs {
+        kss::ops::dot_many_f32(h, emb, &mut logits);
+        let (_, z) = kss::ops::max_shift_exp(&logits, &mut target);
+        for t in target.iter_mut() {
+            *t /= z;
+        }
+        map.kernel_many(h, emb, &mut ks);
+        acc += tv_from_scores(&ks, &target);
+    }
+    acc / hs.len() as f64
+}
+
+/// Build a kernel tree, draw `m` per query, account MACs per draw the way
+/// the descent actually spends them: φ(h) once per example, two node
+/// aggregate dots per level per draw, one flat leaf scan per draw.
+fn frontier_tree<M: FeatureMap + Clone>(
+    map: M,
+    emb: &[f32],
+    c: usize,
+    leaf: usize,
+    m: usize,
+    hs: &[Vec<f32>],
+) -> (f64, f64, f64, usize) {
+    let dim = map.dim() as f64;
+    let t0 = std::time::Instant::now();
+    let mut tree = KernelTreeSampler::new(map, c, Some(leaf));
+    tree.reset_embeddings(emb, c, FR_D);
+    let build_s = t0.elapsed().as_secs_f64();
+    let depth = tree.depth();
+    let mut out = Sample::default();
+    let mut rng = Rng::new(0xF407);
+    let mut macs = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for h in hs {
+        let input = SampleInput { h: Some(h), ..Default::default() };
+        tree.sample(&input, m, &mut rng, &mut out).unwrap();
+        macs += dim;
+        for &class in &out.classes {
+            macs += 2.0 * depth as f64 * dim + tree.leaf_range_of(class).len() as f64 * FR_D as f64;
+        }
+    }
+    let draws = (hs.len() * m) as f64;
+    let draw_s = t0.elapsed().as_secs_f64() / draws;
+    (macs / draws, build_s, draw_s, depth)
+}
+
+/// Build a midx sampler, draw `m` per query, account MACs: φ(h) plus the
+/// K-cluster coarse CDF once per example, then one flat cluster scan per
+/// *distinct* drawn cluster (the refine memo — the engine's whole edge).
+fn frontier_midx<M: FeatureMap + Clone>(
+    map: M,
+    emb: &[f32],
+    c: usize,
+    lloyd_iters: usize,
+    m: usize,
+    hs: &[Vec<f32>],
+) -> (f64, f64, f64, usize) {
+    let dim = map.dim() as f64;
+    let t0 = std::time::Instant::now();
+    let mut midx = MidxKernelSampler::with_config(map, c, None, lloyd_iters, FR_BUILD_SEED);
+    Sampler::reset_embeddings(&mut midx, emb, c, FR_D);
+    let build_s = t0.elapsed().as_secs_f64();
+    let k = midx.clusters();
+    let mut cluster_len = vec![0u64; k];
+    for class in 0..c {
+        cluster_len[midx.index().cluster_of(class)] += 1;
+    }
+    let mut out = Sample::default();
+    let mut rng = Rng::new(0xF407);
+    let mut macs = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for h in hs {
+        let input = SampleInput { h: Some(h), ..Default::default() };
+        midx.sample(&input, m, &mut rng, &mut out).unwrap();
+        macs += dim + k as f64 * dim;
+        let mut seen = vec![false; k];
+        for &class in &out.classes {
+            let kc = midx.index().cluster_of(class as usize);
+            if !seen[kc] {
+                seen[kc] = true;
+                macs += cluster_len[kc] as f64 * FR_D as f64;
+            }
+        }
+    }
+    let draws = (hs.len() * m) as f64;
+    let draw_s = t0.elapsed().as_secs_f64() / draws;
+    (macs / draws, build_s, draw_s, k)
+}
+
+/// Inverted multi-index frontier: midx vs tree vs rff vs two-pass at
+/// C ∈ {1e5, 1e6} (quick; full adds 1e7). Engines are built, measured
+/// and dropped one at a time so peak memory stays one-engine-deep.
+fn midx_frontier() {
+    let sizes: &[usize] = match scale() {
+        Scale::Quick => &[100_000, 1_000_000],
+        Scale::Full => &[100_000, 1_000_000, 10_000_000],
+    };
+    println!("\n==== inverted multi-index frontier (d = {FR_D}, mixture G = {FR_COMPONENTS}) ====");
+    let mut points: Vec<FrontierPoint> = Vec::new();
+    for &c in sizes {
+        // leaf grows with C to keep the tree's z-stat arena in memory
+        // (quadratic dim = d²+1 = 1025: leaf 64 at 1e7 would be 2.5 GB);
+        // m grows with C like production negative-sample counts do, and
+        // the 1e7 k-means settles for the seeding assignment alone (one
+        // Lloyd pass over 1e7×K=3163 is ~1e12 MACs of build time).
+        let (leaf, m, lloyd_iters) = match c {
+            100_000 => (64usize, 512usize, 1usize),
+            1_000_000 => (128, 512, 1),
+            _ => (256, 8192, 0),
+        };
+        let mut rng = Rng::new(0x1D11 ^ c as u64);
+        let (emb, hs) = mixture_panel(c, &mut rng);
+        let quad = QuadraticMap::new(FR_D, FR_ALPHA);
+        let rff = PositiveRffMap::new(RffConfig::new(FR_D, 0x2FF));
+        let quad_dim = quad.dim();
+        let rff_dim = rff.dim();
+        let quad_tv = frontier_tv(&quad, &emb, c, &hs);
+        let rff_tv = frontier_tv(&rff, &emb, c, &hs);
+
+        let (t_macs, t_build, t_draw, depth) = frontier_tree(quad.clone(), &emb, c, leaf, m, &hs);
+        points.push(FrontierPoint {
+            engine: "tree",
+            kernel: "quadratic",
+            n_classes: c,
+            feature_dim: quad_dim,
+            macs_per_draw: t_macs,
+            avg_tv: quad_tv,
+            build_s: t_build,
+            draw_s: t_draw,
+        });
+        let (x_macs, x_build, x_draw, k) = frontier_midx(quad.clone(), &emb, c, lloyd_iters, m, &hs);
+        points.push(FrontierPoint {
+            engine: "midx",
+            kernel: "quadratic",
+            n_classes: c,
+            feature_dim: quad_dim,
+            macs_per_draw: x_macs,
+            avg_tv: quad_tv,
+            build_s: x_build,
+            draw_s: x_draw,
+        });
+        let (rt_macs, rt_build, rt_draw, _) = frontier_tree(rff.clone(), &emb, c, leaf, m, &hs);
+        points.push(FrontierPoint {
+            engine: "tree",
+            kernel: "rff",
+            n_classes: c,
+            feature_dim: rff_dim,
+            macs_per_draw: rt_macs,
+            avg_tv: rff_tv,
+            build_s: rt_build,
+            draw_s: rt_draw,
+        });
+        let (rx_macs, rx_build, rx_draw, _) = frontier_midx(rff.clone(), &emb, c, lloyd_iters, m, &hs);
+        points.push(FrontierPoint {
+            engine: "midx",
+            kernel: "rff",
+            n_classes: c,
+            feature_dim: rff_dim,
+            macs_per_draw: rx_macs,
+            avg_tv: rff_tv,
+            build_s: rx_build,
+            draw_s: rx_draw,
+        });
+        // two-pass closed form at batch B: P = ⌈B·m/pool_factor⌉ pooled
+        // descents plus a P-candidate d-dim rescore per row, amortized
+        // over B·m draws (see two_pass.rs; pool_factor 4 is the default)
+        let (b, pool_factor) = (32.0f64, 4.0f64);
+        let pool = (b * m as f64 / pool_factor).ceil();
+        let tp_macs = (quad_dim as f64
+            + pool * (2.0 * depth as f64 * quad_dim as f64 + leaf as f64 * FR_D as f64)
+            + b * pool * FR_D as f64)
+            / (b * m as f64);
+        points.push(FrontierPoint {
+            engine: "two-pass",
+            kernel: "quadratic",
+            n_classes: c,
+            feature_dim: quad_dim,
+            macs_per_draw: tp_macs,
+            avg_tv: quad_tv,
+            build_s: 0.0,
+            draw_s: 0.0,
+        });
+        println!(
+            "C={c:>9} K={k:>5} m={m:>5} leaf={leaf:>4}  MACs/draw: tree {t_macs:>9.0}  \
+             midx {x_macs:>9.0}  2pass {tp_macs:>9.0}  rff-tree {rt_macs:>9.0}  \
+             rff-midx {rx_macs:>9.0}  TV quad {quad_tv:.4} rff {rff_tv:.4}"
+        );
+    }
+
+    // acceptance: at every measured C ≥ 1e6 the midx engine must spend
+    // less kernel-eval work per draw than the tree at equal-or-lower TV
+    // (equal by construction — same kernel ⇒ identical exact proposal)
+    let accepted = sizes.iter().filter(|&&c| c >= 1_000_000).all(|&c| {
+        let find = |engine: &str| {
+            points
+                .iter()
+                .find(|p| p.engine == engine && p.kernel == "quadratic" && p.n_classes == c)
+                .expect("frontier point recorded")
+        };
+        let (t, x) = (find("tree"), find("midx"));
+        x.macs_per_draw < t.macs_per_draw && x.avg_tv <= t.avg_tv + 1e-12
+    });
+    println!("acceptance (midx beats tree on kernel-eval MACs/draw at C ≥ 1e6): {accepted}");
+
+    // merge the frontier into BENCH_bias.json (ablation_rff_dim writes the
+    // base document; CI orders this bench after it)
+    let midx_doc = Value::object(vec![
+        (
+            "scale",
+            Value::str(match scale() {
+                Scale::Quick => "quick",
+                Scale::Full => "full",
+            }),
+        ),
+        ("d", Value::num(FR_D as f64)),
+        ("mixture_components", Value::num(FR_COMPONENTS as f64)),
+        ("acceptance_midx_beats_tree_at_1e6", Value::Bool(accepted)),
+        (
+            "frontier",
+            Value::Array(
+                points
+                    .iter()
+                    .map(|p| {
+                        Value::object(vec![
+                            ("engine", Value::str(p.engine)),
+                            ("kernel", Value::str(p.kernel)),
+                            ("n_classes", Value::num(p.n_classes as f64)),
+                            ("feature_dim", Value::num(p.feature_dim as f64)),
+                            ("kernel_eval_macs_per_draw", Value::num(p.macs_per_draw)),
+                            ("avg_tv_vs_softmax", Value::num(p.avg_tv)),
+                            ("build_seconds", Value::num(p.build_s)),
+                            ("draw_seconds", Value::num(p.draw_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let dir = std::env::var("KSS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_bias.json");
+    let merged =
+        match std::fs::read_to_string(&path).ok().and_then(|t| kss::util::json::parse(&t).ok()) {
+            Some(Value::Object(pairs)) => {
+                let mut pairs: Vec<(String, Value)> =
+                    pairs.into_iter().filter(|(key, _)| key != "midx").collect();
+                pairs.push(("midx".to_string(), midx_doc));
+                Value::Object(pairs)
+            }
+            // no base document yet (bench ran standalone): self-contained
+            _ => Value::object(vec![("bench", Value::str("bias")), ("midx", midx_doc)]),
+        };
+    write_json_value("bias", &merged);
 }

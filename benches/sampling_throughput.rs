@@ -8,14 +8,18 @@
 //!   is affordable at all;
 //! * per-class update cost (root-to-leaf z maintenance, Fig. 1(b));
 //! * scaling in n at fixed d: tree time should grow ~log n while flat grows
-//!   linearly.
+//!   linearly;
+//! * the inverted multi-index (`midx`) engine alongside the tree at every
+//!   catalog size — its per-example cost is one O(K) coarse CDF plus
+//!   memoized cluster refines, so its throughput profile complements the
+//!   bias/MAC frontier in `benches/ablation_tree.rs`.
 //!
 //! No artifacts needed (pure L3). `cargo bench --bench sampling_throughput`.
 
 use kss::bench_harness::{print_speedup, print_table, scale, write_json, Bencher, BenchRow, Scale};
 use kss::sampler::{
-    row_rng, BatchSampleInput, FlatKernelSampler, KernelKind, KernelTreeSampler, QuadraticMap,
-    Sample, SampleInput, Sampler, SoftmaxSampler,
+    row_rng, BatchSampleInput, FlatKernelSampler, KernelKind, KernelTreeSampler,
+    MidxKernelSampler, QuadraticMap, Sample, SampleInput, Sampler, SoftmaxSampler,
 };
 use kss::util::rng::Rng;
 use kss::util::threadpool::default_threads;
@@ -57,11 +61,20 @@ fn main() {
         let mut out = Sample::default();
         let input_h = SampleInput { h: Some(&h), ..Default::default() };
 
+        let mut midx = MidxKernelSampler::new(QuadraticMap::new(d, 100.0), n, None);
+        Sampler::reset_embeddings(&mut midx, &w, n, d);
+
         let mut r = Rng::new(1);
         draw_rows.push(bencher.run_with_items(
             &format!("tree    n={n:>6} (m={m} draws/example)"),
             Some(m as f64),
             || tree.sample(&input_h, m, &mut r, &mut out).unwrap(),
+        ));
+        let mut r = Rng::new(1);
+        draw_rows.push(bencher.run_with_items(
+            &format!("midx    n={n:>6} (K={} coarse + refine)", midx.clusters()),
+            Some(m as f64),
+            || midx.sample(&input_h, m, &mut r, &mut out).unwrap(),
         ));
         let mut r = Rng::new(1);
         let mut scratch = vec![0.0f32; n];
@@ -142,6 +155,19 @@ fn main() {
                 tree.update(class, &w_new);
             },
         ));
+        // midx update: two φ evals + one aggregate patch (O(dim), no
+        // root-to-leaf path) — the drift-tracked incremental maintenance
+        let mut r = Rng::new(2);
+        let mut w_new = vec![0.0f32; d];
+        update_rows.push(bencher.run_with_items(
+            &format!("midx update n={n:>6} (1 class)"),
+            Some(1.0),
+            || {
+                r.fill_normal(&mut w_new, 0.3);
+                let class = r.range(0, n);
+                midx.update(class, &w_new);
+            },
+        ));
         println!(
             "tree n={n}: {} nodes, depth {}, leaf_size {} (D = {})",
             tree.node_count(),
@@ -209,11 +235,12 @@ fn main() {
     // scaling check: tree grows ~log n (plus touched leaves), exact grows
     // linearly; the crossover sits near n ≈ D·log n — the >= 100k-class
     // regime the paper's YouTube100k experiment lives in.
+    // draw_rows groups are [tree, midx, flat, softmax] per catalog size
     let k = ns.len();
     let t_first = draw_rows[0].mean_s;
-    let t_last = draw_rows[3 * (k - 1)].mean_s;
-    let f_first = draw_rows[1].mean_s;
-    let f_last = draw_rows[3 * (k - 1) + 1].mean_s;
+    let t_last = draw_rows[4 * (k - 1)].mean_s;
+    let f_first = draw_rows[2].mean_s;
+    let f_last = draw_rows[4 * (k - 1) + 2].mean_s;
     let factor = (ns[k - 1] / ns[0]) as f64;
     println!(
         "\nscaling {}k -> {}k classes: tree ×{:.2}, flat+logits ×{:.2} (linear would be ×{:.0})",

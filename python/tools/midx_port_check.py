@@ -1,0 +1,596 @@
+"""Inverted multi-index (midx) sampler port checks — no rust toolchain.
+
+Line-for-line Python port of rust/src/sampler/kernel/midx.rs (the two-level
+coarse-quantized kernel sampler) validated by the same properties the rust
+unit tests assert:
+
+  1. seeded k-means build: deterministic for a fixed seed, with-replacement
+     subsample of min(n, 32·K) rows, k-means++ D²-weighting through the
+     fill_cum/step_down_to_positive CDF machinery, warm restart copies
+     centroids without re-seeding, and the all-degenerate (zero-spread)
+     geometry falls back to contiguous even blocks assign[c] = (c·k)/n
+  2. coarse-mass CDF exactness: the per-cluster φ-aggregate masses
+     M_k = <phi(h), Z_k> equal the direct per-member kernel sums
+  3. composed-q algebra: q = (M_k/ΣM)·(K(h,c)/S_k) collapses to the flat
+     kernel distribution K(h,c)/ΣK within 1e-12 relative, for prob_of and
+     for every drawn (class, q) pair, across an interleaved
+     update/reassign schedule (eq. (2) correction exactness)
+  4. zero-mass fallbacks: degenerate coarse total -> uniform over all
+     classes; positive aggregate with underflowed exact refine -> uniform
+     member under the realized coarse step; a genuinely zero-mass cluster
+     is unreachable (prob_of = 0) and never drawn — q strictly positive
+     in every reachable case
+  5. incremental aggregate maintenance: Z_k += phi(w_new) - phi(w_old)
+     stays within float drift of a from-scratch rebuild across a long
+     interleaved update schedule, and a sweep squashes the drift exactly
+  6. chi-square goodness of fit of draws against the composed proposal
+
+The RNG core (xoshiro256** + splitmix64) is imported from
+rff_port_check.py, the feature maps and CDF guards from
+serve_port_check.py / vocab_port_check.py, and the q-positivity guard
+from two_pass_port_check.py — the same layering the rust module uses.
+
+Run: python3 python/tools/midx_port_check.py
+"""
+import math
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from rff_port_check import MASK, RustRng  # noqa: E402
+from serve_port_check import (  # noqa: E402
+    QuadraticMap,
+    ZeroMap,
+    exact_dist,
+    sanitize_mass,
+    step_down_to_positive,
+)
+from two_pass_port_check import positive_pool_mass  # noqa: E402
+from vocab_port_check import fill_cum, sample_cum  # noqa: E402
+
+# rust f64::MIN_POSITIVE (smallest positive normal), the q clamp floor
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+
+MIDX_BUILD_SEED = 0x1DA8_5EED_91B7_4C21
+SEED_SAMPLE_PER_CLUSTER = 32
+DEFAULT_LLOYD_ITERS = 2
+
+
+def rng_below(rng, n):
+    """Port of util::rng::Rng::below — Lemire's unbiased bounded draw."""
+    assert n > 0, "below(0) is undefined"
+    x = rng.next_u64()
+    m = x * n
+    lo = m & MASK
+    if lo < n:
+        t = ((1 << 64) - n) % n  # n.wrapping_neg() % n
+        while lo < t:
+            x = rng.next_u64()
+            m = x * n
+            lo = m & MASK
+    return m >> 64
+
+
+class _CdfRng:
+    """Adapt RustRng to the .random() protocol sample_cum expects, so the
+    CDF draw consumes the exact rng.f64() stream the rust draw path does."""
+
+    def __init__(self, rng):
+        self.rng = rng
+
+    def random(self):
+        return self.rng.f64()
+
+
+def dot_f32(a, b):
+    """Port of ops scalar dot_f32: sequential f64 accumulation."""
+    return sum(float(x) * float(y) for x, y in zip(a, b))
+
+
+def default_clusters(n):
+    """Port of midx::default_clusters — K = ceil(sqrt(n)), clamped [1, n]."""
+    n = max(n, 1)
+    return min(max(int(math.ceil(math.sqrt(float(n)))), 1), n)
+
+
+class MidxScratch:
+    def __init__(self, k):
+        self.phi_h = None
+        self.masses = [0.0] * k
+        self.coarse_cum = [0.0] * k
+        self.coarse_total = 0.0
+        self.wcum = [None] * k  # per-cluster inclusive CDF segments
+        self.inner_total = [0.0] * k
+        self.stamp = [0] * k
+        self.epoch = 0
+        self.o_coarse = 0
+        self.o_refine = 0
+        self.o_zero = 0
+
+
+class MidxIndex:
+    """Port of midx::MidxIndex: the two-level index (assignment, blocked
+    member panel, per-cluster phi-aggregates, centroids)."""
+
+    def __init__(self, fmap, emb, n, d, clusters=None, lloyd_iters=DEFAULT_LLOYD_ITERS,
+                 seed=0, warm=None):
+        assert n > 0 and d > 0
+        self.n, self.d = n, d
+        self.fmap = fmap
+        self.dim = fmap.dim()
+        k = min(max(clusters, 1), n) if clusters is not None else default_clusters(n)
+        self.k = k
+        self.assign = [0] * n
+        self.panel_lo = [0] * (k + 1)
+        self.member = [0] * n
+        self.slot_of = [0] * n
+        self.packed = np.zeros((n, d), dtype=np.float32)
+        self.zstats = np.zeros((k, self.dim), dtype=np.float64)
+        self.centroids = np.zeros((k, d), dtype=np.float32)
+        if warm is not None and warm.d == d and warm.k == k:
+            self.centroids[:] = warm.centroids
+            seeded = True
+        else:
+            seeded = self.seed_centroids(emb, seed)
+        if seeded:
+            for _ in range(lloyd_iters):
+                self.assign_all(emb)
+                self.recompute_centroids(emb)
+            self.assign_all(emb)
+        else:
+            for c in range(n):
+                self.assign[c] = (c * k) // n
+            self.recompute_centroids(emb)
+        self.finalize(emb)
+
+    def seed_centroids(self, emb, seed):
+        n, d, k = self.n, self.d, self.k
+        rng = RustRng((seed ^ MIDX_BUILD_SEED) & MASK)
+        cap = max(SEED_SAMPLE_PER_CLUSTER * k, 1)
+        if n <= cap:
+            sample = list(range(n))
+        else:
+            sample = [rng_below(rng, n) for _ in range(cap)]
+        s = len(sample)
+        norm2 = [dot_f32(emb[c], emb[c]) for c in sample]
+        first = sample[rng_below(rng, s)]
+        self.centroids[0] = emb[first]
+        first_n2 = dot_f32(emb[first], emb[first])
+        best2 = [
+            sanitize_mass(norm2[j] - 2.0 * dot_f32(emb[c], emb[first]) + first_n2)
+            for j, c in enumerate(sample)
+        ]
+        cdf_rng = _CdfRng(rng)
+        for nxt in range(1, k):
+            cum, total = fill_cum(best2)
+            spread = positive_pool_mass(total)
+            if spread is None:
+                return nxt > 1
+            pick = sample[step_down_to_positive(cum, sample_cum(cum, spread, cdf_rng))]
+            mu = emb[pick]
+            mu_n2 = dot_f32(mu, mu)
+            self.centroids[nxt] = mu
+            for j, c in enumerate(sample):
+                d2 = sanitize_mass(norm2[j] - 2.0 * dot_f32(emb[c], mu) + mu_n2)
+                best2[j] = min(best2[j], d2)
+        return True
+
+    def assign_all(self, emb):
+        n, k = self.n, self.k
+        half_norm = [0.5 * dot_f32(self.centroids[j], self.centroids[j]) for j in range(k)]
+        for c in range(n):
+            best, best_s = 0, dot_f32(emb[c], self.centroids[0]) - half_norm[0]
+            for j in range(1, k):
+                score = dot_f32(emb[c], self.centroids[j]) - half_norm[j]
+                if score > best_s:  # strict: ties keep the lowest cluster id
+                    best_s, best = score, j
+            self.assign[c] = best
+
+    def recompute_centroids(self, emb):
+        n, d, k = self.n, self.d, self.k
+        sums = np.zeros((k, d), dtype=np.float64)
+        counts = [0] * k
+        for c in range(n):
+            kc = self.assign[c]
+            counts[kc] += 1
+            sums[kc] += emb[c].astype(np.float64)
+        for j in range(k):
+            if counts[j] == 0:
+                continue  # empty clusters keep their previous centroid
+            self.centroids[j] = (sums[j] / counts[j]).astype(np.float32)
+
+    def finalize(self, emb):
+        n, k = self.n, self.k
+        counts = [0] * k
+        for a in self.assign:
+            counts[a] += 1
+        self.panel_lo[0] = 0
+        for j in range(k):
+            self.panel_lo[j + 1] = self.panel_lo[j] + counts[j]
+        cursor = list(self.panel_lo[:k])
+        for c in range(n):  # ascending class id within each cluster
+            kc = self.assign[c]
+            slot = cursor[kc]
+            self.member[slot] = c
+            self.slot_of[c] = slot
+            cursor[kc] += 1
+        for slot in range(n):
+            self.packed[slot] = emb[self.member[slot]]
+        self.zstats[:] = 0.0
+        for slot in range(n):  # canonical aggregation order: slot order
+            kc = self.assign[self.member[slot]]
+            self.zstats[kc] += self.fmap.phi(self.packed[slot])
+        return self
+
+    def sweep(self, emb):
+        self.recompute_centroids(emb)
+        self.assign_all(emb)
+        self.finalize(emb)
+
+    def apply_update(self, class_, w_new, emb):
+        kc = self.assign[class_]
+        old = emb[class_]
+        phi_old = self.fmap.phi(old)
+        phi_new = self.fmap.phi(w_new)
+        drift2 = sanitize_mass(
+            dot_f32(old, old) - 2.0 * dot_f32(old, w_new) + dot_f32(w_new, w_new)
+        )
+        self.zstats[kc] += phi_new
+        self.zstats[kc] -= phi_old
+        emb[class_] = w_new
+        self.packed[self.slot_of[class_]] = w_new
+        return math.sqrt(drift2)
+
+    def new_scratch(self):
+        return MidxScratch(self.k)
+
+    def begin_example(self, h, s):
+        s.epoch = (s.epoch + 1) & 0xFFFF_FFFF
+        if s.epoch == 0:
+            s.stamp = [0] * self.k
+            s.epoch = 1
+        s.phi_h = self.fmap.phi(h)
+        for j in range(self.k):
+            s.masses[j] = sanitize_mass(dot_f32(s.phi_h, self.zstats[j]))
+        s.coarse_cum, s.coarse_total = fill_cum(s.masses)
+
+    def refine(self, h, kc, s):
+        lo, hi = self.panel_lo[kc], self.panel_lo[kc + 1]
+        kv = [sanitize_mass(self.fmap.kernel(h, self.packed[slot])) for slot in range(lo, hi)]
+        s.wcum[kc], s.inner_total[kc] = fill_cum(kv)
+        s.stamp[kc] = s.epoch
+        s.o_refine += 1
+
+    def draw(self, h, s, rng):
+        coarse_mass = positive_pool_mass(s.coarse_total)
+        if coarse_mass is None:
+            s.o_zero += 1
+            slot = rng_below(rng, self.n)
+            return self.member[slot], max(1.0 / self.n, F64_MIN_POSITIVE)
+        s.o_coarse += 1
+        cdf_rng = _CdfRng(rng)
+        kc = step_down_to_positive(s.coarse_cum, sample_cum(s.coarse_cum, coarse_mass, cdf_rng))
+        inc = s.coarse_cum[kc] - (0.0 if kc == 0 else s.coarse_cum[kc - 1])
+        p_coarse = inc / coarse_mass
+        if s.stamp[kc] != s.epoch:
+            self.refine(h, kc, s)
+        lo, hi = self.panel_lo[kc], self.panel_lo[kc + 1]
+        assert hi > lo, "selected cluster has positive mass but no members"
+        cluster_mass = positive_pool_mass(s.inner_total[kc])
+        if cluster_mass is None:
+            s.o_zero += 1
+            slot = lo + rng_below(rng, hi - lo)
+            return self.member[slot], max(p_coarse / (hi - lo), F64_MIN_POSITIVE)
+        seg = s.wcum[kc]
+        j = step_down_to_positive(seg, sample_cum(seg, cluster_mass, cdf_rng))
+        w = seg[j] - (0.0 if j == 0 else seg[j - 1])
+        q = max(p_coarse * (w / cluster_mass), F64_MIN_POSITIVE)
+        return self.member[lo + j], q
+
+    def prob_of(self, h, class_, s):
+        kc = self.assign[class_]
+        coarse_mass = positive_pool_mass(s.coarse_total)
+        if coarse_mass is None:
+            return max(1.0 / self.n, F64_MIN_POSITIVE)
+        inc = s.coarse_cum[kc] - (0.0 if kc == 0 else s.coarse_cum[kc - 1])
+        if inc <= 0.0:
+            return 0.0  # zero-aggregate cluster: unreachable via the coarse CDF
+        p_coarse = inc / coarse_mass
+        if s.stamp[kc] != s.epoch:
+            self.refine(h, kc, s)
+        lo, hi = self.panel_lo[kc], self.panel_lo[kc + 1]
+        cluster_mass = positive_pool_mass(s.inner_total[kc])
+        if cluster_mass is None:
+            return max(p_coarse / (hi - lo), F64_MIN_POSITIVE)
+        j = self.slot_of[class_] - lo
+        seg = s.wcum[kc]
+        w = seg[j] - (0.0 if j == 0 else seg[j - 1])
+        if w <= 0.0:
+            return 0.0
+        return max(p_coarse * (w / cluster_mass), F64_MIN_POSITIVE)
+
+
+# --- case builders --------------------------------------------------------
+
+
+def make_emb(rng, n, d, std=0.3):
+    return np.array(
+        [[float(rng.normal_f32(0.0, std)) for _ in range(d)] for _ in range(n)],
+        dtype=np.float32,
+    )
+
+
+def make_h(rng, d):
+    return np.array([float(rng.normal_f32(0.0, 1.0)) for _ in range(d)], dtype=np.float32)
+
+
+class DotMap:
+    """phi(a) = a (so K(a, b) = <a, b> can be negative and sanitize to 0):
+    exercises the unreachable zero-aggregate-cluster branch honestly."""
+
+    def __init__(self, d):
+        self.d, self.alpha = d, 0.0
+
+    def dim(self):
+        return self.d
+
+    def phi(self, a):
+        return np.array([float(x) for x in a], dtype=np.float64)
+
+    def kernel(self, a, b):
+        return dot_f32(a, b)
+
+
+class CountMap:
+    """phi(a) = [1] but kernel = 0: positive coarse aggregates whose exact
+    refine underflows — the inner uniform-member fallback path."""
+
+    def __init__(self, d):
+        self.d, self.alpha = d, 0.0
+
+    def dim(self):
+        return 1
+
+    def phi(self, a):
+        return np.ones(1, dtype=np.float64)
+
+    def kernel(self, a, b):
+        return 0.0
+
+
+# --- 1: seeded k-means build ----------------------------------------------
+
+
+def check_kmeans_build():
+    d = 6
+    rng = RustRng(31)
+    emb = make_emb(rng, 200, d)
+    a = MidxIndex(QuadraticMap(d, 100.0), emb.copy(), 200, d, seed=7)
+    b = MidxIndex(QuadraticMap(d, 100.0), emb.copy(), 200, d, seed=7)
+    assert np.array_equal(a.centroids, b.centroids)
+    assert a.assign == b.assign and a.member == b.member
+    c = MidxIndex(QuadraticMap(d, 100.0), emb.copy(), 200, d, seed=8)
+    assert not np.array_equal(a.centroids, c.centroids), "seed must steer seeding"
+    assert a.k == default_clusters(200) == 15
+    # layout invariants: blocked members, ascending within cluster, exact cover
+    assert a.panel_lo[0] == 0 and a.panel_lo[-1] == 200
+    assert sorted(a.member) == list(range(200))
+    for j in range(a.k):
+        seg = a.member[a.panel_lo[j]:a.panel_lo[j + 1]]
+        assert seg == sorted(seg)
+        assert all(a.assign[cls] == j for cls in seg)
+    for cls in range(200):
+        assert a.member[a.slot_of[cls]] == cls
+    # warm restart: centroids copied verbatim, no re-seeding
+    w = MidxIndex(QuadraticMap(d, 100.0), emb.copy(), 200, d, lloyd_iters=0,
+                  seed=999, warm=a)
+    assert np.array_equal(w.centroids, a.centroids)
+    # with-replacement subsample cap: n > 32·K path still balanced
+    big = make_emb(RustRng(32), 600, d)
+    big_idx = MidxIndex(QuadraticMap(d, 100.0), big.copy(), 600, d, clusters=4, seed=1)
+    assert big_idx.panel_lo[-1] == 600 and 600 > SEED_SAMPLE_PER_CLUSTER * 4
+    # degenerate geometry (all-zero table): contiguous even blocks
+    zero = np.zeros((50, d), dtype=np.float32)
+    z = MidxIndex(QuadraticMap(d, 100.0), zero.copy(), 50, d, clusters=4, seed=3)
+    assert z.assign == [(cidx * 4) // 50 for cidx in range(50)]
+    # k-means++ D² weighting: two far blobs, K=2 -> one blob per cluster
+    blob = np.zeros((40, 3), dtype=np.float32)
+    blob[:20, 0], blob[20:, 1] = 10.0, -10.0
+    blob += make_emb(RustRng(33), 40, 3, std=0.05)
+    two = MidxIndex(QuadraticMap(3, 100.0), blob.copy(), 40, 3, clusters=2, seed=5)
+    left = {two.assign[i] for i in range(20)}
+    right = {two.assign[i] for i in range(20, 40)}
+    assert len(left) == 1 and len(right) == 1 and left != right
+    print("  seeded k-means build: deterministic, blocked layout, warm restart, "
+          "even-block degenerate fallback, D² separation: OK")
+
+
+# --- 2: coarse-mass CDF exactness -----------------------------------------
+
+
+def check_coarse_aggregates():
+    d = 4
+    rng = RustRng(41)
+    fmap = QuadraticMap(d, 100.0)
+    emb = make_emb(rng, 120, d)
+    idx = MidxIndex(fmap, emb.copy(), 120, d, seed=2)
+    s = idx.new_scratch()
+    for _ in range(4):
+        h = make_h(rng, d)
+        idx.begin_example(h, s)
+        for j in range(idx.k):
+            lo, hi = idx.panel_lo[j], idx.panel_lo[j + 1]
+            direct = sum(fmap.kernel(h, idx.packed[slot]) for slot in range(lo, hi))
+            rel = abs(s.masses[j] - direct) / max(direct, 1.0)
+            assert rel <= 1e-12, (j, s.masses[j], direct)
+        assert abs(s.coarse_total - sum(s.masses)) <= 1e-9 * s.coarse_total
+    print("  coarse aggregates M_k = <phi(h), Z_k> match direct kernel sums "
+          "(rel <= 1e-12): OK")
+
+
+# --- 3: composed-q algebra across updates/sweeps --------------------------
+
+
+def check_composed_q_exact():
+    d, n = 4, 64
+    rng = RustRng(51)
+    fmap = QuadraticMap(d, 100.0)
+    emb = make_emb(rng, n, d)
+    idx = MidxIndex(fmap, emb, n, d, seed=11)
+    s = idx.new_scratch()
+    worst = 0.0
+    for round_ in range(6):
+        h = make_h(rng, d)
+        idx.begin_example(h, s)
+        flat = exact_dist(fmap, h, emb)
+        for cls in range(n):
+            q = idx.prob_of(h, cls, s)
+            rel = abs(q - flat[cls]) / flat[cls]
+            worst = max(worst, rel)
+            assert rel <= 1e-12, (round_, cls, q, flat[cls])
+        for _ in range(32):  # drawn q must equal prob_of bit-for-bit
+            cls, q = idx.draw(h, s, rng)
+            assert q == idx.prob_of(h, cls, s), (cls, q)
+        # interleave: perturb a few classes, sweep every other round
+        for _ in range(5):
+            cls = rng_below(rng, n)
+            w_new = make_h(rng, d) * np.float32(0.3)
+            idx.apply_update(cls, w_new.astype(np.float32), emb)
+        if round_ % 2 == 1:
+            idx.sweep(emb)
+    print(f"  composed q == flat K(h,c)/ΣK across update/sweep schedule "
+          f"(worst rel {worst:.2e} <= 1e-12): OK")
+
+
+# --- 4: zero-mass fallbacks -----------------------------------------------
+
+
+def check_zero_mass_fallbacks():
+    d, n = 3, 30
+    rng = RustRng(61)
+    emb = make_emb(rng, n, d)
+    h = make_h(rng, d)
+
+    # total coarse degenerate (ZeroMap): uniform over all classes, exact q
+    zi = MidxIndex(ZeroMap(d), emb.copy(), n, d, clusters=4, seed=1)
+    s = zi.new_scratch()
+    zi.begin_example(h, s)
+    assert s.coarse_total == 0.0
+    seen = set()
+    for _ in range(600):
+        cls, q = zi.draw(h, s, rng)
+        assert q == max(1.0 / n, F64_MIN_POSITIVE)
+        seen.add(cls)
+    assert seen == set(range(n)), "uniform fallback must cover every class"
+    assert s.o_zero == 600 and s.o_coarse == 0
+    assert all(zi.prob_of(h, cls, s) == 1.0 / n for cls in range(n))
+
+    # positive aggregate, underflowed refine (CountMap): uniform member
+    ci = MidxIndex(CountMap(d), emb.copy(), n, d, clusters=4, seed=1)
+    s = ci.new_scratch()
+    ci.begin_example(h, s)
+    assert positive_pool_mass(s.coarse_total) is not None
+    for _ in range(200):
+        cls, q = ci.draw(h, s, rng)
+        kc = ci.assign[cls]
+        length = ci.panel_lo[kc + 1] - ci.panel_lo[kc]
+        inc = s.coarse_cum[kc] - (0.0 if kc == 0 else s.coarse_cum[kc - 1])
+        assert q == max(inc / s.coarse_total / length, F64_MIN_POSITIVE)
+        assert q == ci.prob_of(h, cls, s)
+    assert s.o_zero == 200
+
+    # genuinely zero-mass cluster (DotMap, opposing blobs): unreachable
+    blob = np.zeros((20, d), dtype=np.float32)
+    blob[:10, 0], blob[10:, 0] = 2.0, -2.0
+    blob += make_emb(RustRng(62), 20, d, std=0.05)
+    di = MidxIndex(DotMap(d), blob.copy(), 20, d, clusters=2, seed=4)
+    hp = np.array([1.0, 0.0, 0.0], dtype=np.float32)
+    s = di.new_scratch()
+    di.begin_example(hp, s)
+    dead = [j for j in range(di.k) if s.masses[j] == 0.0]
+    assert len(dead) == 1, "one blob must aggregate to non-positive mass"
+    for cls in range(20):
+        p = di.prob_of(hp, cls, s)
+        if di.assign[cls] == dead[0]:
+            assert p == 0.0
+        else:
+            assert p > 0.0
+    for _ in range(400):
+        cls, q = di.draw(hp, s, rng)
+        assert di.assign[cls] != dead[0] and q > 0.0
+    print("  zero-mass fallbacks: uniform-over-n, uniform-member, dead cluster "
+          "unreachable, q > 0 on every reachable path: OK")
+
+
+# --- 5: incremental aggregates vs rebuild ---------------------------------
+
+
+def check_aggregate_matches_rebuild():
+    d, n = 5, 80
+    rng = RustRng(71)
+    fmap = QuadraticMap(d, 100.0)
+    emb = make_emb(rng, n, d)
+    idx = MidxIndex(fmap, emb, n, d, seed=9)
+    for step in range(120):
+        cls = rng_below(rng, n)
+        w_new = (make_h(rng, d) * np.float32(0.3)).astype(np.float32)
+        w_old = emb[cls].copy()
+        drift = idx.apply_update(cls, w_new, emb)
+        assert abs(drift**2 - float(np.sum(
+            (w_old.astype(np.float64) - w_new.astype(np.float64)) ** 2))) <= 1e-6
+    rebuilt = np.zeros_like(idx.zstats)
+    for slot in range(n):
+        rebuilt[idx.assign[idx.member[slot]]] += fmap.phi(idx.packed[slot])
+    scale = np.abs(rebuilt).max()
+    assert np.abs(idx.zstats - rebuilt).max() <= 1e-9 * scale, "incremental drift"
+    idx.sweep(emb)  # the compaction analogy: sweep rebuilds from scratch
+    resweep = np.zeros_like(idx.zstats)
+    for slot in range(n):
+        resweep[idx.assign[idx.member[slot]]] += fmap.phi(idx.packed[slot])
+    assert np.array_equal(idx.zstats, resweep), "sweep must equal exact rebuild"
+    print("  incremental Z_k += phi(new) - phi(old) matches rebuild "
+          "(<= 1e-9 rel), sweep squashes drift exactly: OK")
+
+
+# --- 6: chi-square GOF of draws vs the composed proposal ------------------
+
+
+def check_chi_square_draws():
+    d, n = 3, 40
+    rng = RustRng(81)
+    fmap = QuadraticMap(d, 100.0)
+    emb = make_emb(rng, n, d)
+    idx = MidxIndex(fmap, emb, n, d, seed=13)
+    h = make_h(rng, d)
+    s = idx.new_scratch()
+    idx.begin_example(h, s)
+    probs = [idx.prob_of(h, cls, s) for cls in range(n)]
+    assert abs(sum(probs) - 1.0) <= 1e-12
+    draws = 60_000
+    counts = [0] * n
+    for _ in range(draws):
+        cls, _ = idx.draw(h, s, rng)
+        counts[cls] += 1
+    stat = sum(
+        (counts[j] - probs[j] * draws) ** 2 / (probs[j] * draws)
+        for j in range(n)
+        if probs[j] * draws >= 1.0
+    )
+    dof = sum(1 for pj in probs if pj * draws >= 1.0) - 1
+    bound = dof + 6 * math.sqrt(2 * dof)
+    assert stat < bound, (stat, dof, bound)
+    print(f"  chi-square GOF on the composed proposal (chi2 {stat:.1f}, "
+          f"dof {dof}): OK")
+
+
+if __name__ == "__main__":
+    print("midx (inverted multi-index) port checks:")
+    check_kmeans_build()
+    check_coarse_aggregates()
+    check_composed_q_exact()
+    check_zero_mass_fallbacks()
+    check_aggregate_matches_rebuild()
+    check_chi_square_draws()
+    print("all midx port checks passed")

@@ -19,3 +19,10 @@ pub fn pooled_unguarded(w: f64, cum_total: f64) -> f64 {
     let pool_mass = cum_total;
     w / pool_mass
 }
+
+/// The midx refine denominator without the mint: a raw prefix-sum total
+/// can underflow to zero, so the within-cluster division must be flagged.
+pub fn refine_unguarded(w: f64, wcum: &[f64]) -> f64 {
+    let cluster_mass = wcum[wcum.len() - 1];
+    w / cluster_mass
+}

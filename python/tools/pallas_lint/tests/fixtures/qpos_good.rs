@@ -48,6 +48,20 @@ pub fn pooled(w: f64, cum_total: f64) -> f64 {
     w / pool_mass
 }
 
+/// The midx two-level idiom (kernel/midx.rs): both denominators of the
+/// composed q — the coarse total and the within-cluster refine total —
+/// are minted by the checked constructor before their divisions.
+pub fn composed_q(inc: f64, w: f64, coarse_total: f64, inner_total: f64) -> f64 {
+    let Some(coarse_mass) = positive_pool_mass(coarse_total) else {
+        return f64::MIN_POSITIVE;
+    };
+    let p_coarse = inc / coarse_mass;
+    let Some(cluster_mass) = positive_pool_mass(inner_total) else {
+        return p_coarse.max(f64::MIN_POSITIVE);
+    };
+    (p_coarse * (w / cluster_mass)).max(f64::MIN_POSITIVE)
+}
+
 /// Divisors that are not mass-like are out of scope for this rule.
 pub fn plain_average(sum: f64, len: f64) -> f64 {
     sum / len

@@ -78,10 +78,12 @@ def test_acc_rule():
 def test_qpos_rule():
     rule = QPositivity()
     bad = rule.check(sf("rust/src/sampler/qpos_bad.rs", "qpos_bad.rs"))
-    assert len(bad) == 3, bad
+    assert len(bad) == 4, bad
     assert all(f.rule == "QPOS" for f in bad)
     # the un-minted pool_mass rebind is caught despite the guard-4 name
     assert any("pool_mass" in f.message for f in bad), [f.message for f in bad]
+    # ... and so is the un-minted midx refine denominator
+    assert any("cluster_mass" in f.message for f in bad), [f.message for f in bad]
     good = rule.check(sf("rust/src/sampler/qpos_good.rs", "qpos_good.rs"))
     assert good == [], good
     # the rule scopes to sampler/ + serve/ only

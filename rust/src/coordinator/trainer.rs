@@ -36,7 +36,7 @@ use crate::data::{Batch, BatchPrefetcher, Dataset};
 use crate::runtime::{Engine, ModelSpec, ParamStore, Tensor};
 use crate::sampler::kernel::FeatureMap;
 use crate::sampler::rff::{self, PositiveRffMap, RffConfig};
-use crate::sampler::{build_sampler, QuadraticMap, Sampler, TwoPassObs};
+use crate::sampler::{build_sampler, MidxObs, QuadraticMap, Sampler, TwoPassObs};
 use crate::serve::{ShardPublisher, ShardSet, SnapshotStore, TreeSnapshot};
 use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::{PhaseTimes, Stopwatch};
@@ -101,14 +101,26 @@ fn snapshot_backed_parts(
     spec: &ModelSpec,
     w: &[f32],
     pool_factor: f64,
-) -> Option<(Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>)> {
-    let (shards, two_pass) = match name {
-        "quadratic" | "rff" => (1, false),
-        "quadratic-sharded" | "rff-sharded" => (4, false),
+) -> Option<(Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>, Option<MidxObs>)> {
+    /// How the snapshot adapter routes draws over the published tree.
+    enum SnapMode {
+        Plain,
+        TwoPass,
+        Midx,
+    }
+    let (shards, mode) = match name {
+        "quadratic" | "rff" => (1, SnapMode::Plain),
+        "quadratic-sharded" | "rff-sharded" => (4, SnapMode::Plain),
         // batch-shared two-pass pool over the single-shard publish point
         // (crate::sampler::kernel::two_pass): same one-tree contract, the
         // adapter just routes draws through the shared-pool engine
-        "quadratic-2pass" | "rff-2pass" => (1, true),
+        "quadratic-2pass" | "rff-2pass" => (1, SnapMode::TwoPass),
+        // inverted multi-index over the single-shard publish point
+        // (crate::sampler::kernel::midx): same one-tree contract; the
+        // adapter rebuilds its k-means coarse index behind each published
+        // generation (warm-restarted — that rebuild is the re-assignment
+        // sweep)
+        "quadratic-midx" | "rff-midx" => (1, SnapMode::Midx),
         // the streaming samplers own their vocabulary (memtable +
         // tombstones + compactor) and must receive churn-aware
         // update_many through the legacy mutable path at pipeline depth 1
@@ -122,26 +134,31 @@ fn snapshot_backed_parts(
         n: usize,
         shards: usize,
         w: &[f32],
-        two_pass: Option<f64>,
-    ) -> (Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>) {
+        mode: SnapMode,
+        pool_factor: f64,
+    ) -> (Arc<dyn Sampler>, SharedPublisher, Option<TwoPassObs>, Option<MidxObs>) {
         let set = ShardSet::new(map, n, shards, None, Some(w));
         let base = set.snapshot_sampler();
-        let (sampler, obs): (Arc<dyn Sampler>, Option<TwoPassObs>) = match two_pass {
-            Some(alpha) => {
-                let s = base.with_two_pass(alpha);
+        let (sampler, pool_obs, midx_obs): (Arc<dyn Sampler>, _, _) = match mode {
+            SnapMode::TwoPass => {
+                let s = base.with_two_pass(pool_factor);
                 let obs = s.two_pass_obs().cloned();
-                (Arc::new(s), obs)
+                (Arc::new(s), obs, None)
             }
-            None => (Arc::new(base), None),
+            SnapMode::Midx => {
+                let s = base.with_midx(None);
+                let obs = s.midx_obs().cloned();
+                (Arc::new(s), None, obs)
+            }
+            SnapMode::Plain => (Arc::new(base), None, None),
         };
-        (sampler, Arc::new(Mutex::new(Box::new(set))), obs)
+        (sampler, Arc::new(Mutex::new(Box::new(set))), pool_obs, midx_obs)
     }
-    let two_pass = two_pass.then_some(pool_factor);
     Some(if name.starts_with("quadratic") {
-        parts(QuadraticMap::new(spec.d, spec.alpha as f64), spec.n_classes, shards, w, two_pass)
+        parts(QuadraticMap::new(spec.d, spec.alpha as f64), spec.n_classes, shards, w, mode, pool_factor)
     } else {
         let map = PositiveRffMap::new(RffConfig::new(spec.d, rff::RFF_BUILD_SEED));
-        parts(map, spec.n_classes, shards, w, two_pass)
+        parts(map, spec.n_classes, shards, w, mode, pool_factor)
     })
 }
 
@@ -156,12 +173,18 @@ impl<'e> Trainer<'e> {
         } else {
             None
         };
-        type SamplerParts = (Option<Arc<dyn Sampler>>, Option<SharedPublisher>, Option<TwoPassObs>);
-        let (sampler, publisher, pool_obs): SamplerParts =
+        #[allow(clippy::type_complexity)]
+        type SamplerParts = (
+            Option<Arc<dyn Sampler>>,
+            Option<SharedPublisher>,
+            Option<TwoPassObs>,
+            Option<MidxObs>,
+        );
+        let (sampler, publisher, pool_obs, midx_obs): SamplerParts =
             if cfg.sampler == "full" {
-                (None, None, None)
-            } else if let Some((s, p, o)) = unified {
-                (Some(s), Some(p), o)
+                (None, None, None, None)
+            } else if let Some((s, p, o, mo)) = unified {
+                (Some(s), Some(p), o, mo)
             } else {
                 let stats = dataset.stats();
                 let boxed = build_sampler(
@@ -173,7 +196,7 @@ impl<'e> Trainer<'e> {
                     Some(&stats),
                     Some(store.out_w().as_f32()?),
                 )?;
-                (Some(Arc::from(boxed)), None, None)
+                (Some(Arc::from(boxed)), None, None, None)
             };
         let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
         let rng = Rng::new(cfg.seed ^ 0x7141_1e5);
@@ -191,6 +214,10 @@ impl<'e> Trainer<'e> {
         }
         if let Some(obs) = &pool_obs {
             // two-pass engines carry their own kss_sampler_pool_* cells
+            obs.register_into(phases.registry());
+        }
+        if let Some(obs) = &midx_obs {
+            // midx engines carry their own kss_sampler_midx_* cells
             obs.register_into(phases.registry());
         }
         let overlap_safe = sampler.as_ref().is_some_and(|s| s.snapshot_backed() || !s.needs().h);
@@ -860,6 +887,38 @@ mod tests {
             snap.hist("kss_sampler_pool_rescore_seconds").map(|h| h.count()).unwrap_or(0) > 0,
             "rescore latency histogram never recorded"
         );
+    }
+
+    #[test]
+    fn midx_sampler_learns_and_reports_index_telemetry() {
+        // the inverted-multi-index mode through the full unified-tree
+        // trainer: snapshot-backed (so depth-2 overlap is allowed), still
+        // learns on the tiny task, and its kss_sampler_midx_* cells land
+        // in the run registry
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg("quadratic-midx", 8);
+        cfg.pipeline_depth = 2;
+        let mut t = Trainer::new(&engine, cfg).unwrap();
+        assert_eq!(t.pipeline_depth(), 2, "midx is snapshot-backed: overlap must be allowed");
+        let mut sink = MetricsSink::memory("midx");
+        let res = t.train(&mut sink).unwrap();
+        assert!(
+            res.final_loss < res.curve[0].loss - 0.05,
+            "midx failed to learn: {:?}",
+            res.curve
+        );
+        let snap = t.phases.registry().snapshot();
+        let coarse = snap.counter("kss_sampler_midx_coarse_draw_total").unwrap_or(0);
+        assert!(coarse > 0, "coarse-draw counter never moved");
+        assert!(
+            snap.counter("kss_sampler_midx_refine_total").unwrap_or(0) > 0,
+            "refine counter never moved"
+        );
+        assert!(
+            snap.counter("kss_sampler_midx_reassign_total").unwrap_or(0) > 0,
+            "no warm index rebuild despite per-step publishes"
+        );
+        assert!(snap.gauge("kss_sampler_midx_clusters").unwrap_or(0.0) >= 1.0);
     }
 
     #[test]

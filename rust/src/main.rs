@@ -56,7 +56,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "eval-batches", help: "eval batch cap (0 = all)", default: Some("20".into()) },
         OptSpec { name: "threads", help: "sampling threads (0 = auto)", default: Some("0".into()) },
         OptSpec { name: "pipeline-depth", help: "1 = sequential, 2 = overlap sample with step", default: Some("1".into()) },
-        OptSpec { name: "sample-mode", help: "per-row | two-pass (batch-shared pool; kernel-tree samplers only)", default: Some("per-row".into()) },
+        OptSpec { name: "sample-mode", help: "per-row | two-pass (batch-shared pool) | midx (inverted multi-index; kernel-tree samplers only)", default: Some("per-row".into()) },
         OptSpec { name: "pool-factor", help: "two-pass pool divisor α (P = B·m/α)", default: Some("4".into()) },
         OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
         OptSpec { name: "out", help: "metrics output directory", default: Some("runs".into()) },
@@ -80,7 +80,17 @@ fn parse_config(args: &Args) -> Result<TrainConfig> {
                      (quadratic or rff), got '{other}'"
                 ),
             },
-            other => anyhow::bail!("unknown --sample-mode '{other}' (known: per-row, two-pass)"),
+            "midx" => match name.as_str() {
+                "quadratic" | "rff" => format!("{name}-midx"),
+                already if already.ends_with("-midx") => name,
+                other => anyhow::bail!(
+                    "--sample-mode midx needs an unsharded kernel-tree sampler \
+                     (quadratic or rff), got '{other}'"
+                ),
+            },
+            other => {
+                anyhow::bail!("unknown --sample-mode '{other}' (known: per-row, two-pass, midx)")
+            }
         }
     };
     Ok(TrainConfig {
@@ -120,6 +130,7 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "max-wait-us", help: "batch deadline (us)", default: Some("2000".into()) },
         OptSpec { name: "queue-cap", help: "bounded queue capacity", default: Some("4096".into()) },
         OptSpec { name: "updates", help: "classes per publish (0=off)", default: Some("32".into()) },
+        OptSpec { name: "midx-clusters", help: "route draws through the inverted multi-index with K clusters (0=off; needs --shards 1)", default: Some("0".into()) },
         OptSpec { name: "deadline-ms", help: "end-to-end budget (ms)", default: Some("20".into()) },
         OptSpec { name: "miss-threshold", help: "max miss rate", default: Some("0.05".into()) },
         OptSpec { name: "seed", help: "master seed", default: Some("42".into()) },
@@ -213,7 +224,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
             let p = args.get_string_or("metrics-path", "");
             if p.is_empty() { None } else { Some(PathBuf::from(p)) }
         },
+        midx_clusters: args.get_usize("midx-clusters", 0)?,
     };
+    anyhow::ensure!(
+        cfg.midx_clusters == 0 || cfg.shards == 1,
+        "--midx-clusters needs --shards 1 (the coarse CDF spans the whole class range)"
+    );
     let miss_threshold = args.get_f64("miss-threshold", 0.05)?;
     info!(
         "serve load test: {} classes × d={} ({:?} kernel) in {} shards, \

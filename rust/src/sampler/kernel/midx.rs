@@ -1,0 +1,1372 @@
+//! Inverted multi-index (midx) sampling: two-level coarse-quantized
+//! kernel sampling for 10M-class vocabularies.
+//!
+//! The kernel tree's descent is O(log n) per draw, but every node touch
+//! is a kernel-dimension dot product — at production vocabularies the
+//! ~log₂(C) descent constant dominates. The midx sampler replaces the
+//! tree with a **two-level inverted index** (the IMI construction of
+//! *Adaptive Sampled Softmax with Inverted Multi-Index*, PAPERS.md):
+//!
+//! ```text
+//! build (once per embedding generation):
+//!     k-means over the class embeddings        K ≈ √C clusters
+//!     cluster-blocked member panel             like the HSM head layout
+//!     Z_k = Σ_{c ∈ k} φ(w_c)                   per-cluster aggregate
+//!
+//! per example (once, shared by its m draws):
+//!     φ(h);  M_k = ⟨φ(h), Z_k⟩  for all k      ONE kernel-dim op per
+//!     coarse CDF over sanitize(M_k)            cluster — K ops total,
+//!                                              vs O(D log C) per draw
+//! per draw:
+//!     cluster  k  ~  M_k / ΣM                  coarse CDF
+//!     class    c  ~  K(h,c) / S_k              exact within-cluster
+//!                                              refine (memoized per
+//!                                              example, f32 panel →
+//!                                              f64 exact kernels)
+//!     report   q = (M_k/ΣM) · (K(h,c)/S_k)     composed proposal
+//! ```
+//!
+//! # The composed proposal q
+//!
+//! `S_k = Σ_{c∈k} sanitize(K(h,c))` is the *refined* cluster mass — the
+//! exact f64 kernel sweep the within-cluster CDF is built from — while
+//! `M_k = ⟨φ(h), Z_k⟩` is the aggregate the coarse CDF uses. The two are
+//! equal in exact arithmetic (`⟨φ(h), Σφ(w_c)⟩ = Σ K(h,c)`, eq. 8
+//! linearity), so the composed q collapses to the flat eq. (8)
+//! distribution `K(h,c)/ΣM` and the eq. (2) corrections `ln(m·q)` are
+//! unchanged — the property test below pins the relative gap to ≤ 1e-12.
+//! As with the two-pass sampler, the *reported* q is the probability of
+//! the realized two-stage procedure — `(M_k/ΣM)·(K(h,c)/S_k)` — so the
+//! χ² goodness-of-fit holds exactly even at f64 rounding.
+//!
+//! # Degenerate masses
+//!
+//! Every division is guarded by the [`positive_pool_mass`] checked
+//! constructor (the QPOS guard idiom):
+//!
+//! * total coarse mass degenerate → uniform over all classes,
+//!   q = 1/n (counted in `kss_sampler_midx_zero_cluster_total`);
+//! * a selected cluster's refined mass degenerate (its aggregate said
+//!   positive, its exact kernels underflowed) → uniform member,
+//!   q = p_coarse/len (also counted).
+//!
+//! A zero-aggregate cluster is never *selected*: its coarse CDF increment
+//! is exactly zero and [`step_down_to_positive`] skips it.
+//!
+//! # Updates and re-assignment
+//!
+//! [`MidxIndex::apply_update`] maintains `Z_k += φ(w_new) − φ(w_old)`
+//! incrementally (f64 aggregates, same discipline as the tree's z
+//! statistics) and accumulates the centroid drift `Σ‖Δw‖₂`. Cluster
+//! membership is *not* chased per update — after `reassign_every`
+//! updated rows the sampler runs one Lloyd re-assignment sweep
+//! ([`MidxIndex::sweep`]: recompute centroids from the current
+//! assignment, re-assign every class, rebuild panels and aggregates from
+//! scratch), the same periodic-compaction policy as the vocab tier. On
+//! the serve side the sweep happens behind the publisher: a new tree
+//! generation warm-restarts the index from the previous centroids
+//! (counted in `kss_sampler_midx_reassign_total`).
+//!
+//! # Determinism
+//!
+//! The k-means build (k-means++ seeding over the repo [`Rng`], Lloyd
+//! iterations on the `ops` panel primitives) is sequential and seeded —
+//! bit-identical across runs and thread counts. Draws are strictly
+//! per-row ([`row_rng`] streams), so unlike two-pass the midx sampler is
+//! **not** batch-coupled: `sample_batch` is bit-identical to a per-row
+//! [`Sampler::sample`] loop at any fan-out.
+
+use super::tree::{sanitize_mass, step_down_to_positive};
+use super::two_pass::positive_pool_mass;
+use super::FeatureMap;
+use crate::obs::{Counter, Gauge, MetricsRegistry};
+use crate::ops;
+use crate::sampler::{row_rng, BatchSampleInput, Needs, Sample, SampleInput, Sampler};
+use crate::util::rng::{sample_cum, Rng};
+use crate::util::threadpool::{par_chunks_mut, Pool};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// Build-time RNG salt for the k-means++ seeding stream: disjoint from
+/// every [`row_rng`] stream and from the two-pass pool salt.
+pub const MIDX_BUILD_SEED: u64 = 0x1DA8_5EED_91B7_4C21;
+
+/// Lloyd iterations after k-means++ seeding (each: assign + recompute).
+pub const DEFAULT_LLOYD_ITERS: usize = 2;
+
+/// k-means++ seeding subsample: candidates scored per cluster. Seeding
+/// over all n rows is O(K·n·d) — at n = 1e7, K ≈ 3163 that alone dwarfs
+/// the Lloyd sweeps — so seeds are chosen from a deterministic
+/// with-replacement subsample of `min(n, 32·K)` rows.
+const SEED_SAMPLE_PER_CLUSTER: usize = 32;
+
+/// Default K for `n` classes: ⌈√n⌉ (the IMI balance point — coarse scan
+/// and expected within-cluster refine both ~√n kernel evals).
+pub fn default_clusters(n: usize) -> usize {
+    ((n.max(1) as f64).sqrt().ceil() as usize).clamp(1, n.max(1))
+}
+
+/// The two-level index: cluster assignment, cluster-blocked member
+/// panel, per-cluster φ-aggregates, and the k-means centroids. Immutable
+/// on the draw path (draws go through a [`MidxScratch`]); the owning
+/// sampler mutates it through [`MidxIndex::apply_update`] /
+/// [`MidxIndex::sweep`], the serve core rebuilds it per generation.
+pub struct MidxIndex {
+    n: usize,
+    d: usize,
+    /// Feature dimension D of the kernel map (aggregate row width).
+    dim: usize,
+    k: usize,
+    /// class → cluster.
+    assign: Vec<u32>,
+    /// Cluster-blocked offsets into `member`/`packed`: cluster `k` owns
+    /// slots `panel_lo[k]..panel_lo[k+1]` (len k+1, like the HSM head).
+    panel_lo: Vec<u32>,
+    /// Class ids grouped by cluster, ascending id within each cluster —
+    /// the canonical aggregation order (port check mirrors it).
+    member: Vec<u32>,
+    /// class → slot in `member`/`packed`.
+    slot_of: Vec<u32>,
+    /// Cluster-blocked (n × d) member-embedding panel: cluster `k`'s
+    /// rows are contiguous, so the within-cluster refine is one
+    /// `kernel_many` sweep — no strided row gathers.
+    packed: Vec<f32>,
+    /// Per-cluster aggregates `Z_k = Σ_{c∈k} φ(w_c)`, (k × D) row-major
+    /// f64 — maintained incrementally like the tree's z statistics.
+    zstats: Vec<f64>,
+    /// k-means centroids, (k × d) row-major f32.
+    centroids: Vec<f32>,
+}
+
+impl MidxIndex {
+    /// Seeded, thread-count-invariant k-means build. `warm` restarts
+    /// from a previous index's centroids (assignment sweeps only, no
+    /// re-seeding) — the behind-the-publisher path; `None` runs
+    /// k-means++ seeding first. All-degenerate geometry (e.g. the
+    /// all-zero table at startup) falls back to contiguous even blocks,
+    /// the same shape as the tree's leaves.
+    pub fn build<M: FeatureMap>(
+        map: &M,
+        emb: &[f32],
+        n: usize,
+        d: usize,
+        clusters: Option<usize>,
+        lloyd_iters: usize,
+        seed: u64,
+        warm: Option<&MidxIndex>,
+    ) -> MidxIndex {
+        assert!(n > 0 && d > 0, "midx needs n > 0, d > 0");
+        debug_assert_eq!(emb.len(), n * d);
+        let k = clusters.map(|c| c.clamp(1, n)).unwrap_or_else(|| default_clusters(n));
+        let mut idx = MidxIndex {
+            n,
+            d,
+            dim: map.dim(),
+            k,
+            assign: vec![0u32; n],
+            panel_lo: vec![0u32; k + 1],
+            member: vec![0u32; n],
+            slot_of: vec![0u32; n],
+            packed: vec![0.0f32; n * d],
+            zstats: vec![0.0f64; k * map.dim()],
+            centroids: vec![0.0f32; k * d],
+        };
+        let seeded = match warm {
+            Some(prev) if prev.d == d && prev.k == k => {
+                idx.centroids.copy_from_slice(&prev.centroids);
+                true
+            }
+            _ => idx.seed_centroids(emb, seed),
+        };
+        if seeded {
+            // Lloyd: assign under the current centroids, then recompute
+            // them; end on an assignment against the final centroids.
+            for _ in 0..lloyd_iters {
+                idx.assign_all(emb);
+                idx.recompute_centroids(emb);
+            }
+            idx.assign_all(emb);
+        } else {
+            // Degenerate geometry: contiguous even blocks.
+            for c in 0..n {
+                idx.assign[c] = ((c as u64 * k as u64) / n as u64) as u32;
+            }
+            idx.recompute_centroids(emb);
+        }
+        idx.finalize(map, emb);
+        idx
+    }
+
+    /// k-means++ over a deterministic subsample. Returns false when the
+    /// sampled geometry is fully degenerate (zero total spread).
+    fn seed_centroids(&mut self, emb: &[f32], seed: u64) -> bool {
+        let (n, d, k) = (self.n, self.d, self.k);
+        let mut rng = Rng::new(seed ^ MIDX_BUILD_SEED);
+        let cap = (SEED_SAMPLE_PER_CLUSTER * k).max(1);
+        // With-replacement subsample (duplicates are harmless to seeding:
+        // a duplicate of a chosen seed has distance 0 and zero weight).
+        let sample: Vec<u32> = if n <= cap {
+            (0..n as u32).collect()
+        } else {
+            (0..cap).map(|_| rng.below(n as u64) as u32).collect()
+        };
+        let s = sample.len();
+        let row = |c: u32| &emb[c as usize * d..(c as usize + 1) * d];
+        let norm2: Vec<f64> = sample.iter().map(|&c| ops::dot_f32(row(c), row(c))).collect();
+        // First seed uniform; the rest D²-weighted against the nearest
+        // chosen seed.
+        let first = sample[rng.below(s as u64) as usize];
+        self.centroids[..d].copy_from_slice(row(first));
+        let first_n2 = ops::dot_f32(row(first), row(first));
+        let mut best2 = vec![0.0f64; s];
+        let mut cum = vec![0.0f64; s];
+        for (j, &c) in sample.iter().enumerate() {
+            best2[j] =
+                sanitize_mass(norm2[j] - 2.0 * ops::dot_f32(row(c), row(first)) + first_n2);
+        }
+        for next in 1..k {
+            let total = ops::fill_cum_into(&best2, &mut cum);
+            let Some(spread) = positive_pool_mass(total) else {
+                // All remaining candidates coincide with chosen seeds
+                // (or the table is all-zero): no usable spread.
+                return next > 1;
+            };
+            let pick = sample[step_down_to_positive(&cum, sample_cum(&cum, spread, &mut rng))];
+            let mu = &emb[pick as usize * d..(pick as usize + 1) * d];
+            let mu_n2 = ops::dot_f32(mu, mu);
+            self.centroids[next * d..(next + 1) * d].copy_from_slice(mu);
+            for (j, &c) in sample.iter().enumerate() {
+                let d2 = sanitize_mass(norm2[j] - 2.0 * ops::dot_f32(row(c), mu) + mu_n2);
+                best2[j] = best2[j].min(d2);
+            }
+        }
+        true
+    }
+
+    /// Assign every class to its nearest centroid: one
+    /// [`ops::dot_many_f32`] sweep per class over the centroid panel,
+    /// argmax of `μᵀw − ½‖μ‖²` (ties → lowest cluster id, so the result
+    /// is deterministic).
+    fn assign_all(&mut self, emb: &[f32]) {
+        let (n, d, k) = (self.n, self.d, self.k);
+        let half_norm: Vec<f64> = (0..k)
+            .map(|j| 0.5 * ops::dot_f32(&self.centroids[j * d..(j + 1) * d],
+                &self.centroids[j * d..(j + 1) * d]))
+            .collect();
+        let mut scores = vec![0.0f64; k];
+        for c in 0..n {
+            ops::dot_many_f32(&emb[c * d..(c + 1) * d], &self.centroids, &mut scores);
+            let mut best = 0usize;
+            let mut best_s = scores[0] - half_norm[0];
+            for (j, &sc) in scores.iter().enumerate().skip(1) {
+                let s = sc - half_norm[j];
+                if s > best_s {
+                    best_s = s;
+                    best = j;
+                }
+            }
+            self.assign[c] = best as u32;
+        }
+    }
+
+    /// Recompute centroids as member means (f64 accumulation through
+    /// [`ops::add_assign`]); empty clusters keep their previous centroid.
+    fn recompute_centroids(&mut self, emb: &[f32]) {
+        let (n, d, k) = (self.n, self.d, self.k);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        let mut row64 = vec![0.0f64; d];
+        for c in 0..n {
+            let kc = self.assign[c] as usize;
+            counts[kc] += 1;
+            for (slot, &x) in row64.iter_mut().zip(&emb[c * d..(c + 1) * d]) {
+                *slot = x as f64;
+            }
+            ops::add_assign(&mut sums[kc * d..(kc + 1) * d], &row64);
+        }
+        for j in 0..k {
+            let cnt = counts[j];
+            if cnt == 0 {
+                continue;
+            }
+            for (slot, &a) in self.centroids[j * d..(j + 1) * d]
+                .iter_mut()
+                .zip(&sums[j * d..(j + 1) * d])
+            {
+                *slot = (a / cnt as f64) as f32;
+            }
+        }
+    }
+
+    /// Rebuild the cluster-blocked layout and the φ-aggregates from the
+    /// current assignment. Members are laid out in ascending class id
+    /// within each cluster — the canonical aggregation order every
+    /// incremental path and the port check reproduce.
+    fn finalize<M: FeatureMap>(&mut self, map: &M, emb: &[f32]) {
+        let (n, d, k, dim) = (self.n, self.d, self.k, self.dim);
+        let mut counts = vec![0u32; k];
+        for &a in &self.assign {
+            counts[a as usize] += 1;
+        }
+        self.panel_lo[0] = 0;
+        for j in 0..k {
+            self.panel_lo[j + 1] = self.panel_lo[j] + counts[j];
+        }
+        let mut cursor: Vec<u32> = self.panel_lo[..k].to_vec();
+        for c in 0..n as u32 {
+            let kc = self.assign[c as usize] as usize;
+            let slot = cursor[kc];
+            self.member[slot as usize] = c;
+            self.slot_of[c as usize] = slot;
+            cursor[kc] += 1;
+        }
+        for slot in 0..n {
+            let c = self.member[slot] as usize;
+            self.packed[slot * d..(slot + 1) * d].copy_from_slice(&emb[c * d..(c + 1) * d]);
+        }
+        self.zstats.fill(0.0);
+        let mut phi = vec![0.0f64; dim];
+        for slot in 0..n {
+            let kc = self.assign[self.member[slot] as usize] as usize;
+            map.phi(&self.packed[slot * d..(slot + 1) * d], &mut phi);
+            ops::add_assign(&mut self.zstats[kc * dim..(kc + 1) * dim], &phi);
+        }
+    }
+
+    /// One Lloyd re-assignment sweep over the current embeddings:
+    /// centroids from the live assignment, re-assign, rebuild layout and
+    /// aggregates from scratch (so incremental float drift in `zstats`
+    /// is also squashed — the compaction analogy is exact).
+    pub fn sweep<M: FeatureMap>(&mut self, map: &M, emb: &[f32]) {
+        self.recompute_centroids(emb);
+        self.assign_all(emb);
+        self.finalize(map, emb);
+    }
+
+    /// Incremental single-class update: `Z_k += φ(w_new) − φ(w_old)`,
+    /// mirror rows rewritten in place (membership unchanged — the
+    /// periodic [`MidxIndex::sweep`] re-clusters). Returns `‖Δw‖₂`, the
+    /// caller's drift contribution. `phi_old`/`phi_new` are caller
+    /// scratch (len D); `emb` is the caller's class-major mirror.
+    pub fn apply_update<M: FeatureMap>(
+        &mut self,
+        map: &M,
+        class: usize,
+        w_new: &[f32],
+        emb: &mut [f32],
+        phi_old: &mut [f64],
+        phi_new: &mut [f64],
+    ) -> f64 {
+        let d = self.d;
+        debug_assert!(class < self.n && w_new.len() == d);
+        let kc = self.assign[class] as usize;
+        let dim = self.dim;
+        let old = &emb[class * d..(class + 1) * d];
+        map.phi(old, phi_old);
+        map.phi(w_new, phi_new);
+        let drift2 = sanitize_mass(
+            ops::dot_f32(old, old) - 2.0 * ops::dot_f32(old, w_new)
+                + ops::dot_f32(w_new, w_new),
+        );
+        let z = &mut self.zstats[kc * dim..(kc + 1) * dim];
+        ops::add_assign(z, phi_new);
+        ops::sub_assign(z, phi_old);
+        emb[class * d..(class + 1) * d].copy_from_slice(w_new);
+        let slot = self.slot_of[class] as usize;
+        self.packed[slot * d..(slot + 1) * d].copy_from_slice(w_new);
+        drift2.sqrt()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.n
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.k
+    }
+
+    /// Cluster of `class` (tests and the port check).
+    pub fn cluster_of(&self, class: usize) -> usize {
+        self.assign[class] as usize
+    }
+
+    /// Per-cluster aggregate row `Z_k` (tests and the port check).
+    pub fn zstat_row(&self, k: usize) -> &[f64] {
+        &self.zstats[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Largest cluster cardinality (sizes the refine scratch).
+    fn max_cluster_len(&self) -> usize {
+        (0..self.k)
+            .map(|j| (self.panel_lo[j + 1] - self.panel_lo[j]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Scratch sized for this index.
+    pub fn new_scratch(&self) -> MidxScratch {
+        MidxScratch {
+            phi_h: vec![0.0; self.dim],
+            masses: vec![0.0; self.k],
+            coarse_cum: vec![0.0; self.k],
+            coarse_total: 0.0,
+            kvals: vec![0.0; self.max_cluster_len()],
+            wcum: vec![0.0; self.n],
+            inner_total: vec![0.0; self.k],
+            stamp: vec![0u32; self.k],
+            epoch: 0,
+            o_coarse: 0,
+            o_refine: 0,
+            o_zero: 0,
+        }
+    }
+
+    /// Resize a pooled scratch that last served a different generation's
+    /// index (serve path: k/n can change across publishes).
+    fn fit_scratch(&self, s: &mut MidxScratch) {
+        if s.phi_h.len() != self.dim
+            || s.masses.len() != self.k
+            || s.wcum.len() != self.n
+            || s.kvals.len() != self.max_cluster_len()
+        {
+            *s = self.new_scratch();
+        }
+    }
+
+    /// Prime `s` for one example's draws: φ(h), the per-cluster
+    /// aggregate masses (one [`ops::dot_many`] over the `Z` panel — the
+    /// "one kernel-dim op per cluster" that replaces the tree descent),
+    /// and the coarse CDF. The m draws of the example share the scratch,
+    /// so each cluster's exact refine runs at most once per example.
+    pub fn begin_example<M: FeatureMap>(&self, map: &M, h: &[f32], s: &mut MidxScratch) {
+        self.fit_scratch(s);
+        s.epoch = s.epoch.wrapping_add(1);
+        if s.epoch == 0 {
+            s.stamp.fill(0);
+            s.epoch = 1;
+        }
+        map.phi(h, &mut s.phi_h);
+        ops::dot_many(&s.phi_h, &self.zstats, &mut s.masses);
+        for m in s.masses.iter_mut() {
+            *m = sanitize_mass(*m);
+        }
+        s.coarse_total = ops::fill_cum_into(&s.masses, &mut s.coarse_cum);
+    }
+
+    /// Exact within-cluster refine: one `kernel_many` sweep over the
+    /// cluster's contiguous packed panel (f32 rows → f64 kernels), then
+    /// the inclusive prefix-sum CDF into the class-slot arena.
+    fn refine<M: FeatureMap>(&self, map: &M, h: &[f32], kc: usize, s: &mut MidxScratch) {
+        let (lo, hi) = (self.panel_lo[kc] as usize, self.panel_lo[kc + 1] as usize);
+        let kv = &mut s.kvals[..hi - lo];
+        map.kernel_many(h, &self.packed[lo * self.d..hi * self.d], kv);
+        for v in kv.iter_mut() {
+            *v = sanitize_mass(*v);
+        }
+        s.inner_total[kc] = ops::fill_cum_into(kv, &mut s.wcum[lo..hi]);
+        s.stamp[kc] = s.epoch;
+        s.o_refine += 1;
+    }
+
+    /// One draw given a scratch primed by [`Self::begin_example`].
+    /// Returns (class, q); q is strictly positive in every case.
+    pub fn draw<M: FeatureMap>(
+        &self,
+        map: &M,
+        h: &[f32],
+        s: &mut MidxScratch,
+        rng: &mut Rng,
+    ) -> (u32, f64) {
+        let Some(coarse_mass) = positive_pool_mass(s.coarse_total) else {
+            // Total aggregate mass degenerate: uniform over all classes
+            // (member slots cover each class exactly once), exact q.
+            s.o_zero += 1;
+            let slot = rng.below(self.n as u64) as usize;
+            return (self.member[slot], (1.0 / self.n as f64).max(f64::MIN_POSITIVE));
+        };
+        s.o_coarse += 1;
+        let kc = step_down_to_positive(&s.coarse_cum, sample_cum(&s.coarse_cum, coarse_mass, rng));
+        let inc = s.coarse_cum[kc] - if kc == 0 { 0.0 } else { s.coarse_cum[kc - 1] };
+        let p_coarse = inc / coarse_mass;
+        if s.stamp[kc] != s.epoch {
+            self.refine(map, h, kc, s);
+        }
+        let (lo, hi) = (self.panel_lo[kc] as usize, self.panel_lo[kc + 1] as usize);
+        debug_assert!(hi > lo, "selected cluster has positive mass but no members");
+        let Some(cluster_mass) = positive_pool_mass(s.inner_total[kc]) else {
+            // Aggregate said positive but the exact kernels underflowed:
+            // uniform member under the realized coarse step.
+            s.o_zero += 1;
+            let slot = lo + rng.below((hi - lo) as u64) as usize;
+            let len = (hi - lo) as f64;
+            return (self.member[slot], (p_coarse / len).max(f64::MIN_POSITIVE));
+        };
+        let seg = &s.wcum[lo..hi];
+        let j = step_down_to_positive(seg, sample_cum(seg, cluster_mass, rng));
+        let w = seg[j] - if j == 0 { 0.0 } else { seg[j - 1] };
+        let q = (p_coarse * (w / cluster_mass)).max(f64::MIN_POSITIVE);
+        (self.member[lo + j], q)
+    }
+
+    /// Composed probability of `class` for the example primed in `s` —
+    /// the same guarded algebra as [`Self::draw`], so `prob` agrees with
+    /// reported draw q exactly.
+    pub fn prob_of<M: FeatureMap>(
+        &self,
+        map: &M,
+        h: &[f32],
+        class: u32,
+        s: &mut MidxScratch,
+    ) -> f64 {
+        let kc = self.assign[class as usize] as usize;
+        let Some(coarse_mass) = positive_pool_mass(s.coarse_total) else {
+            return (1.0 / self.n as f64).max(f64::MIN_POSITIVE);
+        };
+        let inc = s.coarse_cum[kc] - if kc == 0 { 0.0 } else { s.coarse_cum[kc - 1] };
+        if inc <= 0.0 {
+            // Zero-aggregate cluster: unreachable through the coarse CDF.
+            return 0.0;
+        }
+        let p_coarse = inc / coarse_mass;
+        if s.stamp[kc] != s.epoch {
+            self.refine(map, h, kc, s);
+        }
+        let (lo, hi) = (self.panel_lo[kc] as usize, self.panel_lo[kc + 1] as usize);
+        let Some(cluster_mass) = positive_pool_mass(s.inner_total[kc]) else {
+            let len = (hi - lo) as f64;
+            return (p_coarse / len).max(f64::MIN_POSITIVE);
+        };
+        let slot = self.slot_of[class as usize] as usize;
+        let j = slot - lo;
+        let seg = &s.wcum[lo..hi];
+        let w = seg[j] - if j == 0 { 0.0 } else { seg[j - 1] };
+        if w <= 0.0 {
+            return 0.0;
+        }
+        (p_coarse * (w / cluster_mass)).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Per-worker draw scratch: φ(h), the coarse CDF, and the per-cluster
+/// refine arena (epoch-stamped so each cluster refines at most once per
+/// example, exactly the tree's leaf-CDF memo discipline). Telemetry
+/// accumulates in the `o_*` locals and flushes on pool put — the draw
+/// loop never touches an atomic.
+pub struct MidxScratch {
+    phi_h: Vec<f64>,
+    masses: Vec<f64>,
+    coarse_cum: Vec<f64>,
+    coarse_total: f64,
+    kvals: Vec<f64>,
+    /// Class-slot CDF arena: cluster `k` owns `wcum[lo..hi]` — flat, no
+    /// hashing (same shape as the tree's leaf arena).
+    wcum: Vec<f64>,
+    inner_total: Vec<f64>,
+    stamp: Vec<u32>,
+    epoch: u32,
+    o_coarse: u64,
+    o_refine: u64,
+    o_zero: u64,
+}
+
+/// Shared telemetry cells for one midx engine (accumulate-in-scratch,
+/// flush-on-put — see [`MidxObs::flush_scratch`]).
+#[derive(Clone)]
+pub struct MidxObs {
+    /// Master switch (mirrors `TreeObs::enabled`).
+    pub enabled: bool,
+    clusters: Arc<Gauge>,
+    coarse: Arc<Counter>,
+    refine: Arc<Counter>,
+    reassign: Arc<Counter>,
+    zero_cluster: Arc<Counter>,
+    drift: Arc<Gauge>,
+}
+
+impl Default for MidxObs {
+    fn default() -> Self {
+        MidxObs {
+            enabled: true,
+            clusters: Arc::new(Gauge::new()),
+            coarse: Arc::new(Counter::new()),
+            refine: Arc::new(Counter::new()),
+            reassign: Arc::new(Counter::new()),
+            zero_cluster: Arc::new(Counter::new()),
+            drift: Arc::new(Gauge::new()),
+        }
+    }
+}
+
+impl MidxObs {
+    /// Bind every cell to `reg` under the stable `kss_sampler_midx_*`
+    /// names (see the README metric catalog).
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_gauge(
+            "kss_sampler_midx_clusters",
+            "clusters",
+            "sampler",
+            "k-means clusters in the live inverted multi-index",
+            Arc::clone(&self.clusters),
+        );
+        reg.register_counter(
+            "kss_sampler_midx_coarse_draw_total",
+            "draws",
+            "sampler",
+            "cluster-level coarse CDF draws",
+            Arc::clone(&self.coarse),
+        );
+        reg.register_counter(
+            "kss_sampler_midx_refine_total",
+            "sweeps",
+            "sampler",
+            "within-cluster exact kernel refine sweeps (≤ one per cluster per example)",
+            Arc::clone(&self.refine),
+        );
+        reg.register_counter(
+            "kss_sampler_midx_reassign_total",
+            "sweeps",
+            "sampler",
+            "Lloyd re-assignment sweeps (periodic, or behind a publish)",
+            Arc::clone(&self.reassign),
+        );
+        reg.register_counter(
+            "kss_sampler_midx_zero_cluster_total",
+            "draws",
+            "sampler",
+            "draws routed through a degenerate-mass uniform fallback",
+            Arc::clone(&self.zero_cluster),
+        );
+        reg.register_gauge(
+            "kss_sampler_midx_drift",
+            "l2",
+            "sampler",
+            "accumulated centroid drift Σ‖Δw‖₂ since the last re-assignment sweep",
+            Arc::clone(&self.drift),
+        );
+    }
+
+    /// Flush a scratch's accumulated counts into the shared cells (and
+    /// zero the locals either way, so a disabled engine stays clean).
+    fn flush_scratch(&self, s: &mut MidxScratch) {
+        if self.enabled {
+            self.coarse.add(s.o_coarse);
+            self.refine.add(s.o_refine);
+            self.zero_cluster.add(s.o_zero);
+        }
+        s.o_coarse = 0;
+        s.o_refine = 0;
+        s.o_zero = 0;
+    }
+
+    pub fn clusters(&self) -> f64 {
+        self.clusters.get()
+    }
+
+    pub fn coarse_draw_total(&self) -> u64 {
+        self.coarse.get()
+    }
+
+    pub fn refine_total(&self) -> u64 {
+        self.refine.get()
+    }
+
+    pub fn reassign_total(&self) -> u64 {
+        self.reassign.get()
+    }
+
+    pub fn zero_cluster_total(&self) -> u64 {
+        self.zero_cluster.get()
+    }
+
+    pub fn drift(&self) -> f64 {
+        self.drift.get()
+    }
+}
+
+/// The owning trainer-side sampler: class-major embedding mirror +
+/// [`MidxIndex`] + periodic re-assignment policy.
+pub struct MidxKernelSampler<M: FeatureMap> {
+    map: M,
+    name: String,
+    n: usize,
+    d: usize,
+    emb: Vec<f32>,
+    index: MidxIndex,
+    obs: MidxObs,
+    scratch: Pool<MidxScratch>,
+    phi_a: Vec<f64>,
+    phi_b: Vec<f64>,
+    updates_since_sweep: usize,
+    /// Updated rows between Lloyd re-assignment sweeps (default: half
+    /// the vocabulary — membership can survive many small steps, and a
+    /// sweep is one full assignment pass, so amortize it like the vocab
+    /// tier amortizes compaction).
+    reassign_every: usize,
+    drift: f64,
+    lloyd_iters: usize,
+    seed: u64,
+}
+
+impl<M: FeatureMap> MidxKernelSampler<M> {
+    /// `clusters = None` → K = ⌈√n⌉.
+    pub fn new(map: M, n: usize, clusters: Option<usize>) -> MidxKernelSampler<M> {
+        Self::with_config(map, n, clusters, DEFAULT_LLOYD_ITERS, MIDX_BUILD_SEED)
+    }
+
+    pub fn with_config(
+        map: M,
+        n: usize,
+        clusters: Option<usize>,
+        lloyd_iters: usize,
+        seed: u64,
+    ) -> MidxKernelSampler<M> {
+        assert!(n > 0, "midx sampler needs at least one class");
+        let d = map.d();
+        let dim = map.dim();
+        let emb = vec![0.0f32; n * d];
+        let index = MidxIndex::build(&map, &emb, n, d, clusters, lloyd_iters, seed, None);
+        let obs = MidxObs::default();
+        obs.clusters.set(index.k as f64);
+        let name = format!("{}-midx", map.name());
+        MidxKernelSampler {
+            map,
+            name,
+            n,
+            d,
+            emb,
+            index,
+            obs,
+            scratch: Pool::new(),
+            phi_a: vec![0.0; dim],
+            phi_b: vec![0.0; dim],
+            updates_since_sweep: 0,
+            reassign_every: (n / 2).max(1),
+            drift: 0.0,
+            lloyd_iters,
+            seed,
+        }
+    }
+
+    pub fn obs(&self) -> &MidxObs {
+        &self.obs
+    }
+
+    pub fn feature_map(&self) -> &M {
+        &self.map
+    }
+
+    pub fn set_obs_enabled(&mut self, enabled: bool) {
+        self.obs.enabled = enabled;
+    }
+
+    pub fn index(&self) -> &MidxIndex {
+        &self.index
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.index.k
+    }
+
+    /// Override the re-assignment period (tests; 1 = sweep every step).
+    pub fn set_reassign_every(&mut self, every: usize) {
+        self.reassign_every = every.max(1);
+    }
+
+    /// Run the Lloyd re-assignment sweep now (also resets the drift).
+    pub fn force_sweep(&mut self) {
+        self.index.sweep(&self.map, &self.emb);
+        self.updates_since_sweep = 0;
+        self.drift = 0.0;
+        if self.obs.enabled {
+            self.obs.reassign.inc();
+            self.obs.drift.set(0.0);
+            self.obs.clusters.set(self.index.k as f64);
+        }
+    }
+
+    fn after_updates(&mut self) {
+        if self.updates_since_sweep >= self.reassign_every {
+            self.force_sweep();
+        } else if self.obs.enabled {
+            self.obs.drift.set(self.drift);
+        }
+    }
+}
+
+impl<M: FeatureMap> Sampler for MidxKernelSampler<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn needs(&self) -> Needs {
+        Needs { h: true, ..Needs::default() }
+    }
+
+    fn sample(&self, input: &SampleInput, m: usize, rng: &mut Rng, out: &mut Sample) -> Result<()> {
+        let h = input
+            .h
+            .ok_or_else(|| anyhow::anyhow!("sampler '{}' needs h", self.name))?;
+        anyhow::ensure!(h.len() == self.d, "h has dim {}, sampler has d={}", h.len(), self.d);
+        let mut s = self.scratch.take(|| self.index.new_scratch());
+        self.index.begin_example(&self.map, h, &mut s);
+        out.clear();
+        for _ in 0..m {
+            let (class, q) = self.index.draw(&self.map, h, &mut s, rng);
+            out.push(class, q);
+        }
+        self.obs.flush_scratch(&mut s);
+        self.scratch.put(s);
+        Ok(())
+    }
+
+    fn sample_batch(
+        &self,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate(self.name(), self.needs())?;
+        // Per-row streams (midx is NOT batch-coupled); one pooled scratch
+        // per worker amortizes the refine arena across its rows.
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut s = self.scratch.take(|| self.index.new_scratch());
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = inputs.row(i).h.expect("validated");
+                let mut rng = row_rng(step_seed, i);
+                self.index.begin_example(&self.map, h, &mut s);
+                slot.clear();
+                for _ in 0..m {
+                    let (class, q) = self.index.draw(&self.map, h, &mut s, &mut rng);
+                    slot.push(class, q);
+                }
+            }
+            self.obs.flush_scratch(&mut s);
+            self.scratch.put(s);
+        });
+        Ok(())
+    }
+
+    fn prob(&self, input: &SampleInput, class: u32) -> Option<f64> {
+        let h = input.h?;
+        if class as usize >= self.n {
+            return None;
+        }
+        let mut s = self.scratch.take(|| self.index.new_scratch());
+        self.index.begin_example(&self.map, h, &mut s);
+        let p = self.index.prob_of(&self.map, h, class, &mut s);
+        self.obs.flush_scratch(&mut s);
+        self.scratch.put(s);
+        Some(p)
+    }
+
+    fn update(&mut self, class: usize, w_new: &[f32]) {
+        self.drift += self.index.apply_update(
+            &self.map,
+            class,
+            w_new,
+            &mut self.emb,
+            &mut self.phi_a,
+            &mut self.phi_b,
+        );
+        self.updates_since_sweep += 1;
+        self.after_updates();
+    }
+
+    fn update_many(&mut self, classes: &[usize], rows: &[f32]) {
+        if classes.is_empty() {
+            return;
+        }
+        let d = rows.len() / classes.len();
+        debug_assert_eq!(d, self.d);
+        for (i, &class) in classes.iter().enumerate() {
+            self.drift += self.index.apply_update(
+                &self.map,
+                class,
+                &rows[i * d..(i + 1) * d],
+                &mut self.emb,
+                &mut self.phi_a,
+                &mut self.phi_b,
+            );
+            self.updates_since_sweep += 1;
+        }
+        // At most one re-assignment sweep per batched update (the same
+        // single-sweep shape as the tree's bottom-up aggregation).
+        self.after_updates();
+    }
+
+    fn reset_embeddings(&mut self, w: &[f32], n: usize, d: usize) {
+        assert_eq!(n, self.n, "midx sampler built for {} classes, reset with {n}", self.n);
+        assert_eq!(d, self.d, "midx sampler built for d={}, reset with d={d}", self.d);
+        self.emb.copy_from_slice(w);
+        self.index = MidxIndex::build(
+            &self.map,
+            &self.emb,
+            n,
+            d,
+            Some(self.index.k),
+            self.lloyd_iters,
+            self.seed,
+            None,
+        );
+        self.updates_since_sweep = 0;
+        self.drift = 0.0;
+        if self.obs.enabled {
+            self.obs.clusters.set(self.index.k as f64);
+            self.obs.drift.set(0.0);
+        }
+    }
+}
+
+/// Serve-side midx engine for `SnapshotSampler`: rebuilds the index
+/// behind each published tree generation (warm-restarting from the
+/// previous centroids — that rebuild *is* the re-assignment sweep, so it
+/// counts in `kss_sampler_midx_reassign_total`) and serves reads from an
+/// `Arc` that workers clone out of one short critical section.
+pub struct MidxCore {
+    clusters: Option<usize>,
+    lloyd_iters: usize,
+    seed: u64,
+    cache: Mutex<Option<(u64, Arc<MidxIndex>)>>,
+    obs: MidxObs,
+    scratch: Pool<MidxScratch>,
+}
+
+impl MidxCore {
+    pub fn new(clusters: Option<usize>) -> MidxCore {
+        MidxCore {
+            clusters,
+            lloyd_iters: DEFAULT_LLOYD_ITERS,
+            seed: MIDX_BUILD_SEED,
+            cache: Mutex::new(None),
+            obs: MidxObs::default(),
+            scratch: Pool::new(),
+        }
+    }
+
+    pub fn obs(&self) -> &MidxObs {
+        &self.obs
+    }
+
+    pub fn set_obs_enabled(&mut self, enabled: bool) {
+        self.obs.enabled = enabled;
+    }
+
+    /// The index for `generation`, rebuilding on a generation change.
+    /// The build runs under the cache lock: one rebuild per publish,
+    /// and a blocked reader is strictly better than n concurrent
+    /// identical k-means builds. No other lock is taken while held.
+    fn index_for<M: FeatureMap>(
+        &self,
+        view: &super::tree::TreeView<'_, M>,
+        generation: u64,
+    ) -> Arc<MidxIndex> {
+        // A poisoned cache means another worker panicked mid-build; the
+        // slot it took stays `None`, so recovering the lock is safe — the
+        // next line simply rebuilds. Workers must stay panic-free.
+        let mut guard = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some((g, idx)) = guard.as_ref() {
+            if *g == generation {
+                return Arc::clone(idx);
+            }
+        }
+        let warm = guard.take().map(|(_, idx)| idx);
+        let idx = Arc::new(MidxIndex::build(
+            view.feature_map(),
+            view.emb_panel(),
+            view.num_classes(),
+            view.embed_dim(),
+            self.clusters,
+            self.lloyd_iters,
+            self.seed,
+            warm.as_deref(),
+        ));
+        if self.obs.enabled {
+            if warm.is_some() {
+                self.obs.reassign.inc();
+            }
+            self.obs.clusters.set(idx.k as f64);
+        }
+        *guard = Some((generation, Arc::clone(&idx)));
+        idx
+    }
+
+    /// One example's m draws against the index for `generation`.
+    pub fn sample_view<M: FeatureMap>(
+        &self,
+        view: &super::tree::TreeView<'_, M>,
+        generation: u64,
+        h: &[f32],
+        m: usize,
+        rng: &mut Rng,
+        out: &mut Sample,
+    ) -> Result<()> {
+        let idx = self.index_for(view, generation);
+        let mut s = self.scratch.take(|| idx.new_scratch());
+        idx.begin_example(view.feature_map(), h, &mut s);
+        out.clear();
+        for _ in 0..m {
+            let (class, q) = idx.draw(view.feature_map(), h, &mut s, rng);
+            out.push(class, q);
+        }
+        self.obs.flush_scratch(&mut s);
+        self.scratch.put(s);
+        Ok(())
+    }
+
+    /// Batch fan-out with per-row [`row_rng`] streams (bit-identical to
+    /// a [`Self::sample_view`] loop at any thread count).
+    pub fn sample_batch_view<M: FeatureMap>(
+        &self,
+        view: &super::tree::TreeView<'_, M>,
+        generation: u64,
+        inputs: &BatchSampleInput,
+        m: usize,
+        step_seed: u64,
+        out: &mut [Sample],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == inputs.n,
+            "out has {} slots, batch has {} rows",
+            out.len(),
+            inputs.n
+        );
+        inputs.validate("midx", Needs { h: true, ..Needs::default() })?;
+        let idx = self.index_for(view, generation);
+        let map = view.feature_map();
+        par_chunks_mut(out, inputs.threads, |base, chunk| {
+            let mut s = self.scratch.take(|| idx.new_scratch());
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let h = inputs.row(i).h.expect("validated");
+                let mut rng = row_rng(step_seed, i);
+                idx.begin_example(map, h, &mut s);
+                slot.clear();
+                for _ in 0..m {
+                    let (class, q) = idx.draw(map, h, &mut s, &mut rng);
+                    slot.push(class, q);
+                }
+            }
+            self.obs.flush_scratch(&mut s);
+            self.scratch.put(s);
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::QuadraticMap;
+    use super::*;
+
+    fn fill_emb(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 1.0);
+        emb
+    }
+
+    /// Flat eq. (8) distribution — the correctness oracle.
+    fn exact_dist(map: &QuadraticMap, emb: &[f32], n: usize, d: usize, h: &[f32]) -> Vec<f64> {
+        let mut ks = vec![0.0f64; n];
+        map.kernel_many(h, emb, &mut ks);
+        let total: f64 = ks.iter().map(|&k| sanitize_mass(k)).sum();
+        ks.iter().map(|&k| sanitize_mass(k) / total).collect()
+    }
+
+    fn sampler_with_emb(
+        n: usize,
+        d: usize,
+        clusters: Option<usize>,
+        seed: u64,
+    ) -> (MidxKernelSampler<QuadraticMap>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let emb = fill_emb(&mut rng, n, d);
+        let mut s = MidxKernelSampler::new(QuadraticMap::new(d, 1.0), n, clusters);
+        s.reset_embeddings(&emb, n, d);
+        (s, emb)
+    }
+
+    #[test]
+    fn composed_q_matches_flat_eq8_within_1e12() {
+        // The tentpole exactness property: across an interleaved
+        // update/re-assign schedule, every reported composed q equals
+        // the flat eq. (8) q to ≤ 1e-12 relative error.
+        let (n, d, m) = (240, 4, 16);
+        let (mut sampler, mut emb) = sampler_with_emb(n, d, Some(15), 7);
+        let mut rng = Rng::new(99);
+        sampler.set_reassign_every(usize::MAX); // manual sweeps below
+        for step in 0..12 {
+            // Update a strided subset of rows.
+            let classes: Vec<usize> = (0..n).filter(|c| c % 7 == step % 7).collect();
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 1.0);
+            for (i, &c) in classes.iter().enumerate() {
+                emb[c * d..(c + 1) * d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            sampler.update_many(&classes, &rows);
+            if step % 5 == 4 {
+                sampler.force_sweep();
+            }
+            let mut h = vec![0.0f32; d];
+            rng.fill_normal(&mut h, 1.0);
+            let exact = exact_dist(sampler.feature_map(), &emb, n, d, &h);
+            let input = SampleInput { h: Some(&h), ..Default::default() };
+            let mut out = Sample::default();
+            sampler.sample(&input, m, &mut rng, &mut out).unwrap();
+            for (&class, &q) in out.classes.iter().zip(&out.q) {
+                let flat = exact[class as usize];
+                let rel = (q - flat).abs() / flat;
+                assert!(
+                    rel <= 1e-12,
+                    "step {step}: class {class} composed q {q} vs flat {flat} (rel {rel:e})"
+                );
+                // prob() agrees with the reported draw q.
+                let p = sampler.prob(&input, class).unwrap();
+                let rel_p = (p - q).abs() / q;
+                assert!(rel_p <= 1e-12, "prob {p} vs drawn q {q} (rel {rel_p:e})");
+            }
+        }
+        assert!(sampler.obs().reassign_total() >= 2);
+    }
+
+    #[test]
+    fn chi_square_gof_on_composed_proposal() {
+        let (n, d) = (60, 3);
+        let (sampler, _emb) = sampler_with_emb(n, d, Some(8), 11);
+        let mut rng = Rng::new(5);
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut h, 1.0);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let expected: Vec<f64> = (0..n as u32)
+            .map(|c| sampler.prob(&input, c).unwrap())
+            .collect();
+        let total_p: f64 = expected.iter().sum();
+        assert!((total_p - 1.0).abs() < 1e-9, "probs sum to {total_p}");
+        let draws = 200_000usize;
+        let mut counts = vec![0u64; n];
+        let mut out = Sample::default();
+        for _ in 0..draws / 50 {
+            sampler.sample(&input, 50, &mut rng, &mut out).unwrap();
+            for &c in &out.classes {
+                counts[c as usize] += 1;
+            }
+        }
+        let mut stat = 0.0f64;
+        for c in 0..n {
+            let e = expected[c] * draws as f64;
+            if e > 0.0 {
+                let diff = counts[c] as f64 - e;
+                stat += diff * diff / e;
+            }
+        }
+        let dof = (n - 1) as f64;
+        let bound = dof + 6.0 * (2.0 * dof).sqrt();
+        assert!(stat < bound, "χ² = {stat:.1} over bound {bound:.1}");
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_per_row_loop_at_any_thread_count() {
+        let (n, d, rows, m) = (120, 4, 33, 7);
+        let (sampler, _emb) = sampler_with_emb(n, d, None, 21);
+        let mut rng = Rng::new(3);
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        let step_seed = 0xFEED_u64;
+        // Reference: per-row sample() over row_rng streams.
+        let mut want: Vec<Sample> = vec![Sample::default(); rows];
+        for i in 0..rows {
+            let input = SampleInput { h: Some(&hs[i * d..(i + 1) * d]), ..Default::default() };
+            let mut r = row_rng(step_seed, i);
+            sampler.sample(&input, m, &mut r, &mut want[i]).unwrap();
+        }
+        for threads in [0usize, 1, 4] {
+            let inputs = BatchSampleInput {
+                n: rows,
+                d,
+                n_classes: n,
+                h: Some(&hs),
+                threads,
+                ..Default::default()
+            };
+            let mut got: Vec<Sample> = vec![Sample::default(); rows];
+            sampler.sample_batch(&inputs, m, step_seed, &mut got).unwrap();
+            for i in 0..rows {
+                assert_eq!(got[i].classes, want[i].classes, "threads={threads} row {i}");
+                assert_eq!(got[i].q, want[i].q, "threads={threads} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tv_to_exact_matches_tree_at_matched_m() {
+        use super::super::tree::KernelTreeSampler;
+        let (n, d) = (200, 4);
+        let mut rng = Rng::new(31);
+        let emb = fill_emb(&mut rng, n, d);
+        let mut midx = MidxKernelSampler::new(QuadraticMap::new(d, 1.0), n, None);
+        midx.reset_embeddings(&emb, n, d);
+        let mut tree = KernelTreeSampler::new(QuadraticMap::new(d, 1.0), n, None);
+        tree.reset_embeddings(&emb, n, d);
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut h, 1.0);
+        let map = QuadraticMap::new(d, 1.0);
+        let exact = exact_dist(&map, &emb, n, d, &h);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let draws = 120_000usize;
+        let tv = |s: &dyn Sampler| {
+            let mut counts = vec![0u64; n];
+            let mut out = Sample::default();
+            let mut r = Rng::new(777);
+            for _ in 0..draws / 40 {
+                s.sample(&input, 40, &mut r, &mut out).unwrap();
+                for &c in &out.classes {
+                    counts[c as usize] += 1;
+                }
+            }
+            0.5 * counts
+                .iter()
+                .zip(&exact)
+                .map(|(&c, &p)| (c as f64 / draws as f64 - p).abs())
+                .sum::<f64>()
+        };
+        let tv_midx = tv(&midx);
+        let tv_tree = tv(&tree);
+        // Both proposals are the exact eq. (8) distribution; their
+        // empirical TV differs only by sampling noise at matched m.
+        assert!(tv_midx < 0.02, "midx TV {tv_midx}");
+        assert!(tv_tree < 0.02, "tree TV {tv_tree}");
+        assert!((tv_midx - tv_tree).abs() < 0.01, "midx {tv_midx} vs tree {tv_tree}");
+    }
+
+    #[test]
+    fn incremental_aggregates_match_rebuild() {
+        let (n, d) = (150, 4);
+        let (mut sampler, mut emb) = sampler_with_emb(n, d, Some(12), 13);
+        sampler.set_reassign_every(usize::MAX);
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let classes: Vec<usize> = (0..n).filter(|_| rng.bool(0.3)).collect();
+            if classes.is_empty() {
+                continue;
+            }
+            let mut rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut rows, 1.0);
+            for (i, &c) in classes.iter().enumerate() {
+                emb[c * d..(c + 1) * d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            sampler.update_many(&classes, &rows);
+        }
+        // Rebuild the aggregates from scratch over the same membership
+        // and compare: incremental ± φ must not drift.
+        let map = QuadraticMap::new(d, 1.0);
+        let idx = sampler.index();
+        let mut phi = vec![0.0f64; map.dim()];
+        for k in 0..idx.clusters() {
+            let mut want = vec![0.0f64; map.dim()];
+            for c in 0..n {
+                if idx.cluster_of(c) == k {
+                    map.phi(&emb[c * d..(c + 1) * d], &mut phi);
+                    ops::add_assign(&mut want, &phi);
+                }
+            }
+            for (a, b) in idx.zstat_row(k).iter().zip(&want) {
+                let scale = b.abs().max(1.0);
+                assert!(
+                    (a - b).abs() / scale <= 1e-9,
+                    "cluster {k}: incremental {a} vs rebuilt {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_build_is_deterministic() {
+        let (n, d) = (300, 4);
+        let mut rng = Rng::new(17);
+        let emb = fill_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 1.0);
+        let a = MidxIndex::build(&map, &emb, n, d, None, 2, 42, None);
+        let b = MidxIndex::build(&map, &emb, n, d, None, 2, 42, None);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.member, b.member);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    /// A kernel that is identically zero: drives every mass degenerate.
+    struct ZeroMap {
+        d: usize,
+    }
+
+    impl FeatureMap for ZeroMap {
+        fn d(&self) -> usize {
+            self.d
+        }
+
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn name(&self) -> &'static str {
+            "zero"
+        }
+
+        fn phi(&self, _a: &[f32], out: &mut [f64]) {
+            out.fill(0.0);
+        }
+
+        fn kernel(&self, _a: &[f32], _b: &[f32]) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn zero_mass_falls_back_to_uniform_with_positive_q() {
+        let (n, d, m) = (64, 3, 32);
+        let mut sampler = MidxKernelSampler::new(ZeroMap { d }, n, Some(8));
+        let mut rng = Rng::new(2);
+        let mut emb = vec![0.0f32; n * d];
+        rng.fill_normal(&mut emb, 1.0);
+        sampler.reset_embeddings(&emb, n, d);
+        let h = vec![1.0f32; d];
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        sampler.sample(&input, m, &mut rng, &mut out).unwrap();
+        assert_eq!(out.classes.len(), m);
+        for (&c, &q) in out.classes.iter().zip(&out.q) {
+            assert!((c as usize) < n);
+            assert!(q > 0.0 && q.is_finite());
+            assert!((q - 1.0 / n as f64).abs() < 1e-15);
+        }
+        assert_eq!(sampler.obs().zero_cluster_total(), m as u64);
+        assert_eq!(sampler.obs().coarse_draw_total(), 0);
+    }
+
+    #[test]
+    fn telemetry_counts_refines_and_coarse_draws() {
+        let (n, d, m) = (120, 4, 24);
+        let (sampler, _emb) = sampler_with_emb(n, d, Some(10), 23);
+        let mut rng = Rng::new(4);
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut h, 1.0);
+        let input = SampleInput { h: Some(&h), ..Default::default() };
+        let mut out = Sample::default();
+        sampler.sample(&input, m, &mut rng, &mut out).unwrap();
+        let obs = sampler.obs();
+        assert_eq!(obs.coarse_draw_total(), m as u64);
+        // The refine memo caps the sweeps at min(m, K) per example.
+        assert!(obs.refine_total() >= 1 && obs.refine_total() <= (10u64).min(m as u64));
+        assert_eq!(obs.clusters(), 10.0);
+    }
+}
+

@@ -17,12 +17,17 @@
 //! * [`two_pass`] — TAPAS-style batch-shared sampling: one coarse pool
 //!   from the batch-mean query, then per-row exact rescoring/resampling
 //!   restricted to the pool (amortizes the descents across the batch).
+//! * [`midx`] — inverted multi-index: k-means clusters with per-cluster
+//!   φ-aggregates, one kernel-dim op per *cluster* (K ≈ √n of them)
+//!   instead of per tree level, exact within-cluster refine — the
+//!   10M-class scaling path.
 //!
 //! The random-feature approximation of the *exponential* kernel
 //! (`crate::sampler::rff`) plugs into the same [`FeatureMap`] machinery
 //! with a tunable D; [`KernelKind::Exp`] is its closed-form flat oracle.
 
 pub mod flat;
+pub mod midx;
 pub mod multi;
 pub mod tree;
 pub mod two_pass;

@@ -440,6 +440,32 @@ impl<M: FeatureMap> KernelTreeSampler<M> {
         &self.emb[class * self.d..(class + 1) * self.d]
     }
 
+    /// The full class-major (n × d) embedding mirror. The serve-side
+    /// midx engine rebuilds its inverted index from the published tree's
+    /// panel, and the bias ablation scores whole generations against it.
+    #[inline]
+    pub fn emb_panel(&self) -> &[f32] {
+        &self.emb
+    }
+
+    /// The leaf class range `[lo, hi)` containing `class`: descend the
+    /// breadth-first arena from the root by the split midpoints. Used by
+    /// the bench layer to account the tree's exact per-draw kernel-eval
+    /// cost (path nodes × 2 + leaf span) without duplicating the split
+    /// rule.
+    pub fn leaf_range_of(&self, class: u32) -> std::ops::Range<u32> {
+        debug_assert!((class as usize) < self.n);
+        let mut idx = 0u32;
+        loop {
+            let m = self.meta[idx as usize];
+            if m.is_leaf() {
+                return m.lo..m.hi;
+            }
+            let mid = self.meta[m.left as usize].hi;
+            idx = if class < mid { m.left } else { m.left + 1 };
+        }
+    }
+
     /// Node i's z(C) slice in the arena.
     #[inline]
     fn z_of(&self, idx: u32) -> &[f64] {
@@ -1142,6 +1168,14 @@ impl<'a, M: FeatureMap> TreeView<'a, M> {
 
     pub fn emb_row(&self, class: usize) -> &'a [f32] {
         self.tree.emb_row(class)
+    }
+
+    pub fn emb_panel(&self) -> &'a [f32] {
+        self.tree.emb_panel()
+    }
+
+    pub fn leaf_range_of(&self, class: u32) -> std::ops::Range<u32> {
+        self.tree.leaf_range_of(class)
     }
 
     pub fn new_scratch(&self) -> DrawScratch {

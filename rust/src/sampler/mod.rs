@@ -20,6 +20,7 @@
 //! | rff flat (exp) | yes          | yes        | O(n) (oracle)    | native (pooled CDF) |
 //! | softmax exact  | yes          | yes        | O(n) (Thm 2.1)   | default fan-out     |
 //! | 2pass tree     | yes          | yes        | O(P/B·D log n) amortized | native (shared pool) |
+//! | midx (quad/rff)| yes          | yes        | O(D·√n)/example + O(√n) refine | native (arena+pool) |
 //!
 //! The canonical name list (with one-line summaries for the CLI and the
 //! unknown-name error) is [`SAMPLER_REGISTRY`] — one table, so new kernels
@@ -68,6 +69,7 @@ use anyhow::Result;
 
 pub use bigram::BigramSampler;
 pub use kernel::flat::FlatKernelSampler;
+pub use kernel::midx::{MidxCore, MidxIndex, MidxKernelSampler, MidxObs};
 pub use kernel::tree::{KernelTreeSampler, TreeObs};
 pub use kernel::two_pass::{TwoPassKernelSampler, TwoPassObs, DEFAULT_POOL_FACTOR};
 pub use kernel::{KernelKind, QuadraticMap};
@@ -79,11 +81,10 @@ pub use unigram::UnigramSampler;
 /// The deterministic per-row RNG stream of the batch API: row `i` of a step
 /// seeded with `step_seed` always samples from this stream, whether drawn
 /// through [`Sampler::sample_batch`] or a per-example [`Sampler::sample`]
-/// loop, and regardless of the fan-out thread count.
-#[inline]
-pub fn row_rng(step_seed: u64, row: usize) -> Rng {
-    Rng::new(step_seed ^ (row as u64).wrapping_mul(0x9E3779B97F4A7C15))
-}
+/// loop, and regardless of the fan-out thread count. The stream definition
+/// lives in [`crate::util::rng`] (so `AliasTable::sample_many` can share
+/// it); this re-export is the sampler-layer name every sampler uses.
+pub use crate::util::rng::row_rng;
 
 /// Batch-level inputs for [`Sampler::sample_batch`]: the whole step's
 /// model-dependent tensors in flat row-major form, plus the fan-out width.
@@ -383,6 +384,14 @@ pub const SAMPLER_REGISTRY: &[SamplerInfo] = &[
         name: "rff-2pass",
         summary: "rff tree, batch-shared two-pass pool (TAPAS-style)",
     },
+    SamplerInfo {
+        name: "quadratic-midx",
+        summary: "quadratic inverted multi-index (k-means two-level, K ≈ √n)",
+    },
+    SamplerInfo {
+        name: "rff-midx",
+        summary: "rff inverted multi-index (k-means two-level, K ≈ √n)",
+    },
 ];
 
 /// Comma-separated registry names (error messages, CLI help).
@@ -490,6 +499,22 @@ pub fn build_sampler(
             n_classes,
             None,
             kernel::two_pass::DEFAULT_POOL_FACTOR,
+        )),
+        // inverted multi-index (kernel::midx): K = ⌈√n⌉ k-means clusters
+        // with per-cluster φ-aggregates; coarse cluster CDF is one
+        // kernel-dim op per cluster, within-cluster refine is exact.
+        // K and the build seed are pinned by the same reproducibility
+        // rule as the shard count above; callers that tune them construct
+        // MidxKernelSampler::with_config directly
+        "quadratic-midx" => Box::new(kernel::midx::MidxKernelSampler::new(
+            QuadraticMap::new(d, alpha as f64),
+            n_classes,
+            None,
+        )),
+        "rff-midx" => Box::new(kernel::midx::MidxKernelSampler::new(
+            PositiveRffMap::new(RffConfig::new(d, rff::RFF_BUILD_SEED)),
+            n_classes,
+            None,
         )),
         other => anyhow::bail!("unknown sampler '{other}' (known: {})", sampler_names()),
     };

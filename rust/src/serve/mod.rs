@@ -114,6 +114,10 @@ pub struct LoadGenConfig {
     /// (`--metrics-path`; `None` keeps it in [`LoadReport::metrics_text`]
     /// only).
     pub metrics_path: Option<std::path::PathBuf>,
+    /// Route worker draws through the inverted multi-index with this many
+    /// clusters (`--midx-clusters`; 0 = per-row tree descents; requires
+    /// `shards = 1`).
+    pub midx_clusters: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -135,6 +139,7 @@ impl Default for LoadGenConfig {
             deadline: Duration::from_millis(20),
             seed: 42,
             metrics_path: None,
+            midx_clusters: 0,
         }
     }
 }
@@ -204,6 +209,7 @@ pub fn run_load_test_with<M: FeatureMap + Clone + 'static>(
         topk: cfg.topk,
         max_m: cfg.m.max(4096),
         request_timeout: Duration::from_secs(30),
+        midx_clusters: cfg.midx_clusters,
     };
     let service = SamplingService::start(set.stores(), set.offsets().to_vec(), service_cfg);
     // one registry over the whole stack: request path (batcher + service),
@@ -651,6 +657,49 @@ mod tests {
         // nonzero where the smoke guarantees traffic
         assert!(!text.contains("kss_batcher_submitted_total 0\n"), "no submits recorded");
         assert!(!text.contains("kss_publish_lag_seconds_count 0\n"), "no publish lag recorded");
+    }
+
+    #[test]
+    fn load_test_smoke_midx() {
+        // the closed loop with worker draws routed through the inverted
+        // multi-index (single shard): requests flow, the writer's
+        // publishes force warm index rebuilds, and the kss_sampler_midx_*
+        // series land in the exit exposition
+        let cfg = LoadGenConfig {
+            n_classes: 400,
+            d: 4,
+            shards: 1,
+            workers: 2,
+            clients: 3,
+            requests: 60,
+            m: 4,
+            updates_per_publish: 8,
+            deadline: Duration::from_secs(5),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 512,
+            },
+            midx_clusters: 20,
+            ..Default::default()
+        };
+        let report = run_load_test(&cfg);
+        assert!(report.completed > 0 && report.topk_calls > 0, "{report:?}");
+        assert!(report.publishes > 0, "writer never published: {report:?}");
+        let text = &report.metrics_text;
+        for series in [
+            "kss_sampler_midx_clusters",
+            "kss_sampler_midx_coarse_draw_total",
+            "kss_sampler_midx_refine_total",
+            "kss_sampler_midx_reassign_total",
+        ] {
+            assert!(text.contains(series), "missing series {series} in:\n{text}");
+        }
+        assert!(text.contains("kss_sampler_midx_clusters 20\n"), "cluster gauge wrong:\n{text}");
+        assert!(
+            !text.contains("kss_sampler_midx_coarse_draw_total 0\n"),
+            "no coarse draws recorded"
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //!   [`crate::serve::ShardedKernelSampler`], reusing the same
 //!   [`draw_from_shards`] body the serve workers run.
 
+use crate::sampler::kernel::midx::{MidxCore, MidxObs};
 use crate::sampler::kernel::tree::{sanitize_mass, TreeView};
 use crate::sampler::kernel::two_pass::{TwoPassCore, TwoPassObs};
 use crate::sampler::kernel::FeatureMap;
@@ -69,6 +70,12 @@ pub struct SnapshotSampler<M: FeatureMap + Clone> {
     /// view instead of per-row descents. See
     /// `crate::sampler::kernel::two_pass` for the composed-q contract.
     two_pass: Option<TwoPassCore>,
+    /// Inverted multi-index engine (single-shard only): when set, draws
+    /// route through [`MidxCore`], which rebuilds its k-means index
+    /// behind each published generation (warm-restarted — the
+    /// re-assignment sweep lives behind the publisher, like compaction).
+    /// See `crate::sampler::kernel::midx` for the composed-q contract.
+    midx: Option<MidxCore>,
 }
 
 impl<M: FeatureMap + Clone> SnapshotSampler<M> {
@@ -95,6 +102,7 @@ impl<M: FeatureMap + Clone> SnapshotSampler<M> {
             pinned: Mutex::new(Pinned { readers, snaps }),
             scratch_pool: Pool::new(),
             two_pass: None,
+            midx: None,
         }
     }
 
@@ -121,6 +129,30 @@ impl<M: FeatureMap + Clone> SnapshotSampler<M> {
     /// mode.
     pub fn two_pass_obs(&self) -> Option<&TwoPassObs> {
         self.two_pass.as_ref().map(|core| core.obs())
+    }
+
+    /// Switch this adapter into inverted-multi-index mode (`clusters =
+    /// None` → K = ⌈√n⌉) and report the matching `*-midx` registry name.
+    /// Single-shard publish points only: the coarse CDF needs one index
+    /// over the full class range. Mutually exclusive with two-pass mode.
+    pub fn with_midx(mut self, clusters: Option<usize>) -> SnapshotSampler<M> {
+        assert_eq!(
+            self.offsets.len(),
+            2,
+            "midx mode needs a single-shard publish point (got {} shards)",
+            self.offsets.len() - 1
+        );
+        assert!(self.two_pass.is_none(), "midx and two-pass modes are mutually exclusive");
+        if !self.name.ends_with("-midx") {
+            self.name = format!("{}-midx", self.name);
+        }
+        self.midx = Some(MidxCore::new(clusters));
+        self
+    }
+
+    /// Midx telemetry cells (`kss_sampler_midx_*`), when in midx mode.
+    pub fn midx_obs(&self) -> Option<&MidxObs> {
+        self.midx.as_ref().map(|core| core.obs())
     }
 
     /// Generation of every pinned shard snapshot (test/debug surface).
@@ -161,6 +193,13 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
             // with_two_pass asserts a single shard, so first() is it
             return core.sample_view(snap.tree.view(), input, m, rng, out);
         }
+        if let (Some(core), Some(snap)) = (&self.midx, snaps.first()) {
+            // with_midx asserts a single shard, so first() is the whole
+            // class range; the core caches its index per generation
+            let h = input.h.ok_or_else(|| anyhow::anyhow!("midx sampler needs h"))?;
+            anyhow::ensure!(h.len() == self.d, "h len {} != d {}", h.len(), self.d);
+            return core.sample_view(&snap.tree.view(), snap.generation, h, m, rng, out);
+        }
         if snaps.len() == 1 {
             // single tree: the snapshot's own engine (bit-identical stream
             // to the legacy private KernelTreeSampler)
@@ -190,6 +229,10 @@ impl<M: FeatureMap + Clone> Sampler for SnapshotSampler<M> {
         if let (Some(core), Some(snap)) = (&self.two_pass, snaps.first()) {
             // single shard by with_two_pass's assert, see sample() above
             return core.sample_batch_view(snap.tree.view(), &self.name, inputs, m, step_seed, out);
+        }
+        if let (Some(core), Some(snap)) = (&self.midx, snaps.first()) {
+            // single shard by with_midx's assert, see sample() above
+            return core.sample_batch_view(&snap.tree.view(), snap.generation, inputs, m, step_seed, out);
         }
         if snaps.len() == 1 {
             return snaps[0].tree.sample_batch(inputs, m, step_seed, out);
@@ -431,6 +474,71 @@ mod tests {
         // telemetry flows through the adapter's engine
         let obs = reader.two_pass_obs().expect("two-pass mode has obs");
         assert!(obs.hit_total() + obs.miss_total() > 0);
+    }
+
+    #[test]
+    fn midx_streams_match_owning_midx_sampler_at_first_generation() {
+        // cold-built from the same embedding panel with the pinned build
+        // seed, the adapter's MidxCore and the owning MidxKernelSampler
+        // hold identical indices — (class, q) streams are bit-identical.
+        // After a publish the adapter warm-restarts its k-means (which may
+        // re-assign members the owning sampler only sweeps periodically),
+        // so later generations are held to the eq. (2) contract instead:
+        // every drawn q must agree with the flat closed form.
+        use crate::sampler::kernel::midx::MidxKernelSampler;
+        let (n, d, rows, m) = (48usize, 3usize, 9usize, 12usize);
+        let mut rng = Rng::new(81);
+        let emb = random_emb(&mut rng, n, d);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut live = MidxKernelSampler::new(map.clone(), n, None);
+        Sampler::reset_embeddings(&mut live, &emb, n, d);
+        let mut set = ShardSet::new(map, n, 1, None, Some(&emb));
+        let reader =
+            SnapshotSampler::new(set.stores(), set.offsets().to_vec(), "quadratic".into())
+                .with_midx(None);
+        assert_eq!(reader.name(), "quadratic-midx");
+        reader.refresh_snapshots();
+        let mut hs = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut hs, 1.0);
+        for threads in [0usize, 1, 3] {
+            let a = batch_draws(&live, &hs, rows, d, n, m, 0xC0, threads);
+            let b = batch_draws(&reader, &hs, rows, d, n, m, 0xC0, threads);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.classes, y.classes, "threads {threads} row {i}");
+                assert_eq!(x.q, y.q, "threads {threads} row {i}");
+            }
+        }
+        // publish a couple of generations; the adapter must keep serving
+        // composed q that matches the flat eq. (8) distribution
+        for step in 0..3u64 {
+            let classes = {
+                let mut c = vec![(step as usize * 7) % n, (step as usize * 13 + 1) % n];
+                c.sort_unstable();
+                c.dedup();
+                c
+            };
+            let mut new_rows = vec![0.0f32; classes.len() * d];
+            rng.fill_normal(&mut new_rows, 0.6);
+            set.update_and_publish(&classes, &new_rows);
+            reader.refresh_snapshots();
+            let input = SampleInput { h: Some(&hs[..d]), ..Default::default() };
+            let mut out = Sample::default();
+            let mut draw_rng = Rng::new(0xD0 + step);
+            reader.sample(&input, m, &mut draw_rng, &mut out).unwrap();
+            for (&c, &q) in out.classes.iter().zip(&out.q) {
+                assert!(q > 0.0, "step {step}: q must be positive");
+                let flat = reader.prob(&input, c).expect("in-range class");
+                let rel = (q - flat).abs() / flat.max(1e-300);
+                assert!(rel <= 1e-9, "step {step} class {c}: composed q {q} vs flat {flat}");
+            }
+        }
+        // telemetry flows through the adapter's engine: coarse draws
+        // happened, and each post-publish rebuild warm-restarted
+        let obs = reader.midx_obs().expect("midx mode has obs");
+        assert!(obs.coarse_draw_total() > 0);
+        assert!(obs.refine_total() > 0);
+        assert_eq!(obs.reassign_total(), 3, "one warm rebuild per consumed publish");
+        assert!(obs.clusters() >= 1.0);
     }
 
     #[test]

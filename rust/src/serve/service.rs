@@ -20,6 +20,7 @@
 //! from `row_rng(service_seed, seq)` regardless of how it was batched.
 
 use crate::obs::{Counter, MetricsRegistry};
+use crate::sampler::kernel::midx::{MidxCore, MidxObs};
 use crate::sampler::kernel::tree::TreeView;
 use crate::sampler::kernel::FeatureMap;
 use crate::sampler::{row_rng, Sample};
@@ -220,6 +221,11 @@ pub struct ServiceConfig {
     /// wedges no client forever. Generous by default — it is a backstop,
     /// not the latency SLA (that is the batcher deadline + load budget).
     pub request_timeout: std::time::Duration,
+    /// Route worker draws through the inverted multi-index
+    /// ([`MidxCore`], K clusters) instead of per-row tree descents.
+    /// 0 = off; requires a single-shard publish point (the coarse CDF
+    /// needs one index over the full class range).
+    pub midx_clusters: usize,
 }
 
 impl Default for ServiceConfig {
@@ -231,6 +237,7 @@ impl Default for ServiceConfig {
             topk: TopKConfig::default(),
             max_m: 4096,
             request_timeout: std::time::Duration::from_secs(30),
+            midx_clusters: 0,
         }
     }
 }
@@ -277,6 +284,9 @@ pub struct SamplingService<M: FeatureMap + 'static> {
     max_m: usize,
     request_timeout: std::time::Duration,
     obs: ServiceObs,
+    /// Shared inverted multi-index engine (see [`ServiceConfig::midx_clusters`]);
+    /// one index build per published generation, shared by every worker.
+    midx: Option<Arc<MidxCore>>,
 }
 
 impl<M: FeatureMap + 'static> SamplingService<M> {
@@ -291,15 +301,27 @@ impl<M: FeatureMap + 'static> SamplingService<M> {
         let batcher = MicroBatcher::new(cfg.batcher);
         let offsets = Arc::new(offsets);
         let obs = ServiceObs::default();
+        let midx = (cfg.midx_clusters > 0).then(|| {
+            assert_eq!(
+                stores.len(),
+                1,
+                "midx serving needs a single-shard publish point (got {} shards)",
+                stores.len()
+            );
+            Arc::new(MidxCore::new(Some(cfg.midx_clusters)))
+        });
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
                 let batcher = batcher.clone();
                 let stores = stores.clone();
                 let offsets = offsets.clone();
                 let obs = obs.clone();
+                let midx = midx.clone();
                 std::thread::Builder::new()
                     .name(format!("kss-serve-{w}"))
-                    .spawn(move || worker_loop(&batcher, &stores, &offsets, cfg.seed, &obs))
+                    .spawn(move || {
+                        worker_loop(&batcher, &stores, &offsets, cfg.seed, &obs, midx.as_deref())
+                    })
                     .expect("spawn serve worker")
             })
             .collect();
@@ -313,7 +335,13 @@ impl<M: FeatureMap + 'static> SamplingService<M> {
             max_m: cfg.max_m.max(1),
             request_timeout: cfg.request_timeout,
             obs,
+            midx,
         }
+    }
+
+    /// Midx telemetry cells (`kss_sampler_midx_*`), when in midx mode.
+    pub fn midx_obs(&self) -> Option<&MidxObs> {
+        self.midx.as_deref().map(|core| core.obs())
     }
 
     /// Service-level telemetry cells (shared with the worker pool).
@@ -326,6 +354,9 @@ impl<M: FeatureMap + 'static> SamplingService<M> {
     pub fn register_metrics(&self, reg: &MetricsRegistry) {
         self.obs.register_into(reg);
         self.batcher.obs().register_into(reg);
+        if let Some(core) = &self.midx {
+            core.obs().register_into(reg);
+        }
     }
 
     /// Enqueue a sampling request; returns its sequence number and the
@@ -413,6 +444,7 @@ fn worker_loop<M: FeatureMap>(
     offsets: &[u32],
     seed: u64,
     obs: &ServiceObs,
+    midx: Option<&MidxCore>,
 ) {
     let mut readers: Vec<SnapshotReader<TreeSnapshot<M>>> =
         stores.iter().map(|s| SnapshotReader::new(s.clone())).collect();
@@ -439,7 +471,20 @@ fn worker_loop<M: FeatureMap>(
         for req in batch {
             let mut rng = row_rng(seed, req.seq as usize);
             let mut sample = Sample::with_capacity(req.m);
-            draw_from_shards(&trees, offsets, &req.h, req.m, &mut state, &mut rng, &mut sample);
+            // midx needs exactly one shard (SamplingService::start
+            // asserts it); sample_view is infallible in that shape
+            // (index_for recovers a poisoned cache by rebuilding), so
+            // any residual Err falls back to the tree descent — workers
+            // never panic
+            let midx_drawn = match (midx, trees.split_first()) {
+                (Some(core), Some((view, []))) => core
+                    .sample_view(view, generation, &req.h, req.m, &mut rng, &mut sample)
+                    .is_ok(),
+                _ => false,
+            };
+            if !midx_drawn {
+                draw_from_shards(&trees, offsets, &req.h, req.m, &mut state, &mut rng, &mut sample);
+            }
             // a dropped receiver (client gave up) is not a worker error,
             // but the wasted work must be visible: count it
             let reply = SampleResponse {
@@ -488,6 +533,7 @@ mod tests {
             topk: TopKConfig { k: 5, beam_width: 64 },
             max_m: 64,
             request_timeout: Duration::from_secs(30),
+            midx_clusters: 0,
         }
     }
 
@@ -536,6 +582,54 @@ mod tests {
             })
             .unwrap();
         assert_eq!(hits[0].class as usize, best, "wide beam must find the argmax");
+        service.shutdown();
+    }
+
+    #[test]
+    fn midx_mode_serves_composed_q_matching_the_flat_oracle() {
+        // single-shard service in midx mode: every (class, q) must agree
+        // with the flat eq. (8) oracle (composed q — coarse × refine —
+        // collapses to the flat form by linearity), and the index
+        // telemetry must flow through the service registry
+        let (n, d) = (60, 3);
+        let (mut set, mut emb) = shard_set(n, d, 1, 7);
+        let mut cfg = quick_cfg(2);
+        cfg.midx_clusters = 6;
+        let service = SamplingService::start(set.stores(), set.offsets().to_vec(), cfg);
+        let reg = MetricsRegistry::new();
+        service.register_metrics(&reg);
+        let map = QuadraticMap::new(d, 100.0);
+        let mut crng = Rng::new(77);
+        for round in 0..3 {
+            for _ in 0..20 {
+                let h: Vec<f32> = (0..d).map(|_| crng.normal_f32(0.0, 1.0)).collect();
+                let resp = service.sample_blocking(h.clone(), 6).unwrap();
+                assert_eq!(resp.sample.classes.len(), 6);
+                let weights: Vec<f64> =
+                    (0..n).map(|j| map.kernel(&h, &emb[j * d..(j + 1) * d])).collect();
+                let z: f64 = weights.iter().sum();
+                for (&c, &q) in resp.sample.classes.iter().zip(&resp.sample.q) {
+                    assert!((c as usize) < n);
+                    let want = weights[c as usize] / z;
+                    assert!((q - want).abs() < 1e-9, "round {round}: q {q} vs {want}");
+                }
+            }
+            // publish a fresh generation: the shared core must rebuild
+            // (warm) and keep serving exact q against the new panel
+            let classes = [round, 20 + round, 40 + round];
+            let mut rows = vec![0.0f32; classes.len() * d];
+            crng.fill_normal(&mut rows, 0.4);
+            for (i, &c) in classes.iter().enumerate() {
+                emb[c * d..(c + 1) * d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            set.update_and_publish(&classes, &rows);
+        }
+        let obs = service.midx_obs().expect("midx mode has obs");
+        assert!(obs.coarse_draw_total() > 0);
+        assert_eq!(obs.reassign_total(), 2, "one warm rebuild per consumed publish");
+        let snap = reg.snapshot();
+        assert_eq!(snap.gauge("kss_sampler_midx_clusters"), Some(6.0));
+        assert!(snap.counter("kss_sampler_midx_refine_total").unwrap_or(0) > 0);
         service.shutdown();
     }
 

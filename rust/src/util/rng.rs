@@ -182,6 +182,18 @@ impl Rng {
     }
 }
 
+/// The deterministic per-row RNG stream of the batch sampling API: row `i`
+/// of a step seeded with `step_seed` always samples from this stream,
+/// whether drawn through a sampler's `sample_batch`, a per-example
+/// `sample` loop, or [`AliasTable::sample_many`] — and regardless of the
+/// fan-out thread count. Canonical home of the stream definition (the
+/// sampler layer re-exports it); the golden-ratio multiplier decorrelates
+/// adjacent row seeds through [`splitmix64`]-style dispersion.
+#[inline]
+pub fn row_rng(step_seed: u64, row: usize) -> Rng {
+    Rng::new(step_seed ^ (row as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
 /// The CDF prefix-sum fill lives in the ops layer ([`crate::ops::fill_cum`]
 /// — strictly sequential by the accumulation-order contract); re-exported
 /// here because it is half of the CDF-draw pair with [`sample_cum`]. The
@@ -369,17 +381,32 @@ pub struct AliasTable {
 }
 
 impl AliasTable {
-    /// Build from unnormalized non-negative weights. Returns `None` if the
-    /// total mass is not positive and finite.
+    /// Build from unnormalized non-negative weights. Returns `None` on any
+    /// degenerate input (see [`AliasTable::try_new`] for the reasons).
     pub fn new(weights: &[f64]) -> Option<AliasTable> {
+        AliasTable::try_new(weights).ok()
+    }
+
+    /// Build from unnormalized non-negative weights, with the degenerate
+    /// cases reported as errors instead of a silently broken table (a
+    /// negative or NaN weight used to flow straight into the normalized
+    /// `p` and poison `prob_of` q-corrections): empty input, any
+    /// non-finite or negative weight, and a total mass that is not
+    /// positive and finite are all rejected.
+    pub fn try_new(weights: &[f64]) -> anyhow::Result<AliasTable> {
         let n = weights.len();
-        if n == 0 {
-            return None;
+        anyhow::ensure!(n > 0, "alias table needs at least one weight");
+        for (i, &w) in weights.iter().enumerate() {
+            anyhow::ensure!(
+                w.is_finite() && w >= 0.0,
+                "alias weight {i} is {w} (must be finite and ≥ 0)"
+            );
         }
         let total: f64 = weights.iter().sum();
-        if !(total > 0.0) || !total.is_finite() {
-            return None;
-        }
+        anyhow::ensure!(
+            total > 0.0 && total.is_finite(),
+            "alias total mass is {total} (must be positive and finite)"
+        );
         let p: Vec<f64> = weights.iter().map(|w| w / total).collect();
         let mut prob = vec![0.0f64; n];
         let mut alias = vec![0u32; n];
@@ -407,7 +434,7 @@ impl AliasTable {
         for &l in large.iter().chain(small.iter()) {
             prob[l as usize] = 1.0;
         }
-        Some(AliasTable { prob, alias, p })
+        Ok(AliasTable { prob, alias, p })
     }
 
     /// Number of classes.
@@ -436,6 +463,21 @@ impl AliasTable {
             i
         } else {
             self.alias[i] as usize
+        }
+    }
+
+    /// Row-major batch fill: `rows × m` draws into `out` (cleared first),
+    /// row `i` drawn from the batch API's deterministic [`row_rng`]
+    /// stream — bit-identical to a per-row [`AliasTable::sample`] loop
+    /// over those streams, for any caller-side fan-out.
+    pub fn sample_many(&self, step_seed: u64, rows: usize, m: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(rows * m);
+        for i in 0..rows {
+            let mut rng = row_rng(step_seed, i);
+            for _ in 0..m {
+                out.push(self.sample(&mut rng) as u32);
+            }
         }
     }
 }
@@ -691,6 +733,45 @@ mod tests {
         assert!(AliasTable::new(&[]).is_none());
         assert!(AliasTable::new(&[0.0, 0.0]).is_none());
         assert!(AliasTable::new(&[f64::INFINITY]).is_none());
+    }
+
+    #[test]
+    fn alias_try_new_reports_each_degenerate_case() {
+        // The guard regression: these used to either return a bare None
+        // (losing the reason) or — for negative/NaN weights — build a
+        // silently broken table whose prob_of fed q < 0 downstream.
+        let empty = AliasTable::try_new(&[]).unwrap_err().to_string();
+        assert!(empty.contains("at least one weight"), "{empty}");
+        let neg = AliasTable::try_new(&[1.0, -2.0]).unwrap_err().to_string();
+        assert!(neg.contains("weight 1"), "{neg}");
+        let nan = AliasTable::try_new(&[f64::NAN, 1.0]).unwrap_err().to_string();
+        assert!(nan.contains("weight 0"), "{nan}");
+        let zero = AliasTable::try_new(&[0.0, 0.0]).unwrap_err().to_string();
+        assert!(zero.contains("total mass"), "{zero}");
+        let inf = AliasTable::try_new(&[f64::MAX, f64::MAX]).unwrap_err().to_string();
+        assert!(inf.contains("total mass"), "{inf}");
+        assert!(AliasTable::new(&[1.0, -2.0]).is_none());
+        assert!(AliasTable::try_new(&[3.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn alias_sample_many_equals_per_row_streams() {
+        let t = AliasTable::new(&[10.0, 1.0, 5.0, 4.0, 0.5]).unwrap();
+        let (step_seed, rows, m) = (0xABCD_u64, 13, 17);
+        let mut got = Vec::new();
+        t.sample_many(step_seed, rows, m, &mut got);
+        assert_eq!(got.len(), rows * m);
+        let mut want = Vec::with_capacity(rows * m);
+        for i in 0..rows {
+            let mut rng = row_rng(step_seed, i);
+            for _ in 0..m {
+                want.push(t.sample(&mut rng) as u32);
+            }
+        }
+        assert_eq!(got, want);
+        // A second fill reuses the buffer and clears the previous draws.
+        t.sample_many(step_seed ^ 1, 2, 3, &mut got);
+        assert_eq!(got.len(), 6);
     }
 
     #[test]
